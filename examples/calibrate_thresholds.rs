@@ -1,0 +1,72 @@
+//! Fig 4b threshold calibration across the loss-constraint profiles,
+//! with an `--nq-shift` ablation knob on the OSE's N/Q compression.
+//!
+//! The N/Q shift controls how much of the high-order 1-bit-MAC dynamic
+//! range survives into the saliency score S: too coarse a shift maps
+//! most DMACs to 0 and the OSE loses its ability to separate salient
+//! from non-salient pixels (DESIGN.md §3).
+//!
+//! ```bash
+//! cargo run --release --example calibrate_thresholds -- \
+//!     [--nq-shift N] [--calib-images N] [--profile name]
+//! ```
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::figures::{calibrate_osa, FigCtx};
+use osa_hcim::osa::{loss_profile, PROFILES};
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    osa_hcim::util::logging::init();
+    let cfg = SystemConfig::default();
+    let calib_n: usize = arg("--calib-images").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let eval_n: usize = arg("--images").and_then(|s| s.parse().ok()).unwrap_or(96);
+    let only: Option<String> = arg("--profile");
+    // override AFTER load: spec.json validation pins the default value,
+    // the ablation intentionally departs from it
+    let mut ctx = FigCtx::load(cfg)?;
+    if let Some(shift) = arg("--nq-shift").and_then(|s| s.parse::<i32>().ok()) {
+        ctx.cfg.spec.nq_shift = shift;
+        println!("[ablation] NQ shift override: {shift}");
+    }
+
+    let dcim = ctx.eval_mode(CimMode::Dcim, 0, &[], eval_n)?;
+    println!(
+        "DCIM baseline: acc {:.2}%  ce {:.4}  {:.2} TOPS/W\n",
+        dcim.acc * 100.0,
+        dcim.ce,
+        dcim.tops_w
+    );
+
+    for profile in PROFILES {
+        if let Some(ref p) = only {
+            if p != profile {
+                continue;
+            }
+        }
+        let constraints = loss_profile(profile).unwrap();
+        let t0 = std::time::Instant::now();
+        let cal = calibrate_osa(&ctx, &constraints, calib_n)?;
+        let ev = ctx.eval_mode(CimMode::Osa, ctx.cfg.fixed_b, &cal.thresholds, eval_n)?;
+        println!(
+            "profile {:<8} thresholds {:?}  ({} evals, {:.0}s)",
+            profile,
+            cal.thresholds,
+            cal.evals,
+            t0.elapsed().as_secs_f64()
+        );
+        println!(
+            "  -> test acc {:.2}% (drop {:.2}%)  {:.2} TOPS/W  ({:.2}x vs DCIM)  B-hist {:?}",
+            ev.acc * 100.0,
+            (dcim.acc - ev.acc) * 100.0,
+            ev.tops_w,
+            dcim.energy_nj_per_img / ev.energy_nj_per_img,
+            &ev.b_hist[5..11]
+        );
+    }
+    Ok(())
+}

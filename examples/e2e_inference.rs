@@ -1,0 +1,131 @@
+//! End-to-end driver proving all three layers compose (EXPERIMENTS.md §E2E):
+//!
+//! 1. validates `artifacts/` (spec parity, dataset, weights, goldens);
+//! 2. runs the **PJRT float golden** (L2 JAX model, AOT-lowered, loaded by
+//!    the L3 Rust runtime) over the test set;
+//! 3. cross-checks the **native DCIM** path bit-for-bit against the
+//!    Python-quantized golden logits;
+//! 4. cross-checks the **PJRT hybrid tile** (L1 Pallas kernel, lowered to
+//!    HLO) against the native cycle-level simulator on identical noise;
+//! 5. serves the test set through the threaded coordinator in OSA mode
+//!    and reports the headline numbers: accuracy vs DCIM, TOPS/W ratio,
+//!    latency percentiles.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::coordinator::Server;
+use osa_hcim::figures::FigCtx;
+use osa_hcim::nn::{accuracy, Executor};
+use osa_hcim::runtime::{PjrtGemm, Runtime};
+use osa_hcim::sched::{GemmEngine, MacroGemm};
+use osa_hcim::spec::TILE_M;
+use osa_hcim::util::prng::SplitMix64;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    osa_hcim::util::logging::init();
+    let cfg = SystemConfig::default();
+    println!("=== OSA-HCIM end-to-end driver ===\n");
+
+    // ---- 1. artifacts -----------------------------------------------------
+    cfg.spec.validate_against_artifacts(&cfg.artifacts_dir)?;
+    let ctx = FigCtx::load(cfg.clone())?;
+    println!(
+        "[1] artifacts OK: {} train / {} test images, {} conv layers, float acc {:.2}%",
+        ctx.ds.train_n(),
+        ctx.ds.test_n(),
+        ctx.graph.convs.len(),
+        ctx.golden.float_acc * 100.0
+    );
+
+    // ---- 2. PJRT float golden over the full test set ----------------------
+    let rt = Runtime::load(&cfg.artifacts_dir, true)?;
+    let n_all = ctx.ds.test_n();
+    let t0 = std::time::Instant::now();
+    let float_logits = rt.model_forward_all(&ctx.ds.test_x, n_all, ctx.golden.classes)?;
+    let float_acc = accuracy(&float_logits, &ctx.ds.test_y, ctx.golden.classes);
+    println!(
+        "[2] PJRT float model: acc {:.2}% over {n_all} images ({:.2}s, platform {})",
+        float_acc * 100.0,
+        t0.elapsed().as_secs_f64(),
+        rt.platform()
+    );
+
+    // ---- 3. native DCIM vs python golden ----------------------------------
+    let n_golden = ctx.golden.golden_n;
+    let (imgs, labels) = ctx.ds.test_batch(0, n_golden);
+    let mut exec = Executor::new(&ctx.graph, MacroGemm::with_mode(CimMode::Dcim));
+    let (logits, _) = exec.forward(imgs, labels.len())?;
+    let mut max_rel = 0.0f32;
+    for (a, b) in logits.iter().zip(&ctx.golden.dcim_logits) {
+        max_rel = max_rel.max((a - b).abs() / b.abs().max(1.0));
+    }
+    anyhow::ensure!(max_rel < 1.5e-2, "native DCIM diverged: {max_rel}");
+    println!("[3] native DCIM == python golden (max rel err {max_rel:.2e} on {n_golden} images)");
+
+    // ---- 4. PJRT hybrid tile vs native simulator, identical noise ---------
+    let sp = cfg.spec;
+    let mut rng = SplitMix64::new(42);
+    let a: Vec<i32> = (0..TILE_M * sp.cols).map(|_| rng.next_range_i32(0, 256)).collect();
+    let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| rng.next_range_i32(-128, 128)).collect();
+    let b: Vec<i32> = (0..TILE_M).map(|_| rng.next_range_i32(0, 12)).collect();
+    let noise = rng.normals_f32(TILE_M * sp.hmus * sp.w_bits, sp.sigma_code);
+    let pjrt_out = rt.hybrid_tile(&a, &w, &b, &noise)?;
+    let unit = osa_hcim::macrosim::MacroUnit::new(&w, sp)?;
+    let mut mism = 0usize;
+    for s in 0..TILE_M {
+        let packed = unit.pack_acts(&a[s * sp.cols..(s + 1) * sp.cols]);
+        let nslice = &noise[s * sp.hmus * sp.w_bits..(s + 1) * sp.hmus * sp.w_bits];
+        let native = unit.compute_hybrid(&packed, b[s], nslice);
+        if native != pjrt_out[s * sp.hmus..(s + 1) * sp.hmus] {
+            mism += 1;
+        }
+    }
+    anyhow::ensure!(mism == 0, "{mism}/{TILE_M} rows mismatch between PJRT and native");
+    println!("[4] PJRT hybrid tile (Pallas L1) == native simulator, bit-exact on {TILE_M} rows");
+
+    // sanity: the PjrtGemm engine drives a whole GEMM through the artifact
+    let mut pjrt_gemm = PjrtGemm::new(&rt, CimMode::Hcim, cfg.thresholds.clone())?;
+    let r = pjrt_gemm.gemm(&a[..4 * sp.cols], 4, sp.cols, &w, sp.hmus, 0)?;
+    println!("    PjrtGemm engine OK ({} macro ops accounted)", r.account.macro_ops);
+
+    // ---- 5. serve the test set through the coordinator (OSA) --------------
+    // DCIM reference efficiency for the ratio (before moving the graph)
+    let dcim = ctx.eval_mode(CimMode::Dcim, 0, &[], 64)?;
+    let serve_n = 256.min(n_all);
+    let graph = Arc::new(ctx.graph);
+    let server = Server::start(&cfg, graph.clone())?;
+    let mut pending = Vec::with_capacity(serve_n);
+    for i in 0..serve_n {
+        let (img, _) = ctx.ds.test_batch(i, 1);
+        pending.push((i, server.submit(img.to_vec())?));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        if rx.recv()?.pred as i32 == ctx.ds.test_y[i] {
+            correct += 1;
+        }
+    }
+    let metrics = server.shutdown();
+    let osa_acc = correct as f64 / serve_n as f64;
+
+    let osa_tw = metrics.tops_per_watt(&cfg.spec);
+    println!(
+        "[5] coordinator served {serve_n} requests in OSA mode:\n\
+         \n    headline: OSA-HCIM acc {:.2}% (drop {:.2}% vs DCIM {:.2}%)\n\
+         \n    OSA  {:.2} TOPS/W vs DCIM {:.2} TOPS/W -> {:.2}x efficiency (paper: 1.95x)\n\
+         \n    {}",
+        osa_acc * 100.0,
+        (dcim.acc - osa_acc) * 100.0,
+        dcim.acc * 100.0,
+        osa_tw,
+        dcim.tops_w,
+        osa_tw / dcim.tops_w,
+        metrics.report(&cfg.spec)
+    );
+    println!("\n=== end-to-end complete: all layers compose ===");
+    Ok(())
+}

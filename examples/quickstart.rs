@@ -1,0 +1,34 @@
+//! Quickstart: load the AOT artifacts, run a few SynthCIFAR images
+//! through OSA-HCIM, and print accuracy + modeled efficiency.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::figures::FigCtx;
+
+fn main() -> anyhow::Result<()> {
+    osa_hcim::util::logging::init();
+    let cfg = SystemConfig::default();
+    let ctx = FigCtx::load(cfg)?;
+
+    println!("OSA-HCIM quickstart — {} test images available\n", ctx.ds.test_n());
+    for (mode, fixed_b) in [
+        (CimMode::Dcim, 0),
+        (CimMode::Hcim, 8),
+        (CimMode::Osa, 8),
+    ] {
+        let ev = ctx.eval_mode(mode, fixed_b, &ctx.cfg.thresholds, 32)?;
+        println!(
+            "{:<5}  acc {:>6.2}%  {:>5.2} TOPS/W  {:>8.1} nJ/image",
+            mode.name(),
+            ev.acc * 100.0,
+            ev.tops_w,
+            ev.energy_nj_per_img
+        );
+    }
+    println!("\n(the OSA row uses the default thresholds; run the");
+    println!(" calibrate_thresholds example to fit them to a loss profile)");
+    Ok(())
+}

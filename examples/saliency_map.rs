@@ -1,0 +1,34 @@
+//! Fig 8a demo: render the per-pixel B_D/A maps the OSE assigns across
+//! hidden layers for one test image — the object should get precise
+//! (digital-heavy) boundaries, the background coarse (analog/discard).
+//!
+//! ```bash
+//! cargo run --release --example saliency_map -- [image_idx]
+//! ```
+
+use osa_hcim::config::SystemConfig;
+use osa_hcim::figures::{self, FigCtx};
+
+fn main() -> anyhow::Result<()> {
+    osa_hcim::util::logging::init();
+    let idx: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let ctx = FigCtx::load(SystemConfig::default())?;
+
+    // render the input image itself as ASCII luminance for comparison
+    let (img, label) = ctx.ds.test_batch(idx, 1);
+    println!("input image {idx} (label {}):", label[0]);
+    let ramp = [' ', '.', ':', '=', '+', '*', '#', '@'];
+    for y in 0..32 {
+        print!("    |");
+        for x in 0..32 {
+            let o = (y * 32 + x) * 3;
+            let lum = (img[o] as u32 + img[o + 1] as u32 + img[o + 2] as u32) / 3;
+            print!("{}", ramp[(lum as usize * ramp.len()) / 256]);
+        }
+        println!("|");
+    }
+    println!();
+    let text = figures::fig8a(&ctx, idx, &["stem", "b2.conv1", "b4.conv1"])?;
+    println!("{text}");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Serving demo: drive the threaded coordinator (router + dynamic
+//! batcher + worker pool) with a bursty open-loop workload and report
+//! latency percentiles, batching behaviour, throughput and modeled
+//! macro efficiency.
+//!
+//! ```bash
+//! cargo run --release --example serve_requests -- \
+//!     [--requests N] [--workers N] [--max-batch N] [--rps N]
+//! ```
+
+use osa_hcim::config::SystemConfig;
+use osa_hcim::coordinator::Server;
+use osa_hcim::figures::FigCtx;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    osa_hcim::util::logging::init();
+    let mut cfg = SystemConfig::default();
+    cfg.workers = arg("--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+    cfg.max_batch = arg("--max-batch").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let n: usize = arg("--requests").and_then(|s| s.parse().ok()).unwrap_or(512);
+    let rps: f64 = arg("--rps").and_then(|s| s.parse().ok()).unwrap_or(400.0);
+
+    let ctx = FigCtx::load(cfg.clone())?;
+    let n = n.min(ctx.ds.test_n());
+    let graph = Arc::new(ctx.graph);
+    let server = Server::start(&cfg, graph)?;
+    println!(
+        "serving {n} requests at ~{rps:.0} req/s (workers={}, max_batch={}, mode={})",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.mode.name()
+    );
+
+    // open-loop arrival: deterministic jittered inter-arrival times
+    let mut rng = osa_hcim::util::prng::SplitMix64::new(7);
+    let mut pending = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let (img, _) = ctx.ds.test_batch(i, 1);
+        pending.push((i, server.submit(img.to_vec())?));
+        let jitter = 0.5 + rng.next_f64(); // 0.5..1.5x the base gap
+        std::thread::sleep(Duration::from_secs_f64(jitter / rps));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        let resp = rx.recv()?;
+        if resp.pred as i32 == ctx.ds.test_y[i] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    println!("\nresults:");
+    println!("  accuracy      {:.2}%", correct as f64 / n as f64 * 100.0);
+    println!("  wall time     {:.2}s ({:.1} req/s effective)", wall.as_secs_f64(),
+             n as f64 / wall.as_secs_f64());
+    println!("  p50 latency   {:.1} ms", metrics.p50_latency_us() / 1e3);
+    println!("  p95 latency   {:.1} ms", metrics.p95_latency_us() / 1e3);
+    println!("  mean batch    {:.1}", metrics.mean_batch());
+    println!("  batches       {}", metrics.batches);
+    println!("  macro model   {:.2} TOPS/W", metrics.tops_per_watt(&cfg.spec));
+    Ok(())
+}

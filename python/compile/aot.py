@@ -1,0 +1,187 @@
+"""AOT artifact builder — the single build-time Python entrypoint.
+
+``make artifacts`` runs ``python -m compile.aot --out-dir ../artifacts``:
+
+1. generates SynthCIFAR            -> dataset.rten
+2. trains ResNet-mini (cached)     -> weights_float.rten (+ history)
+3. folds BN + quantizes            -> weights.rten, graph.json
+4. evaluates goldens               -> golden.rten (float + DCIM logits)
+5. lowers HLO text artifacts       -> model.hlo.txt, se_tile.hlo.txt,
+                                      hybrid_tile.hlo.txt, acim_tile.hlo.txt
+6. dumps the normative spec        -> spec.json (+ PRNG golden vectors)
+
+HLO is exported as *text*, never ``.serialize()``: jax >= 0.5 emits protos
+with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+published ``xla`` crate binds) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Python never runs at inference time — the Rust binary is self-contained
+once this script has produced ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model as M, prng, quantize, rten, train
+from .kernels import hybrid_mac, ref, spec as S
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the folded model bakes its weights into the
+    # HLO; the default printer elides them as `constant({...})`, which the
+    # rust-side text parser could not reload.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_tile_artifacts(out_dir: str) -> None:
+    sp = S.DEFAULT_SPEC
+    m = S.TILE_M
+    a_spec = jax.ShapeDtypeStruct((m, sp.cols), jnp.int32)
+    w_spec = jax.ShapeDtypeStruct((sp.hmus, sp.cols), jnp.int32)
+    b_spec = jax.ShapeDtypeStruct((m,), jnp.int32)
+    n_spec = jax.ShapeDtypeStruct((m, sp.hmus, sp.w_bits), jnp.float32)
+    n_slices = (sp.a_bits + sp.analog_band - 1) // sp.analog_band
+    an_spec = jax.ShapeDtypeStruct((m, sp.hmus, sp.w_bits, n_slices), jnp.float32)
+
+    lowered = jax.jit(lambda a, w: (hybrid_mac.se_tile(a, w),)).lower(a_spec, w_spec)
+    with open(os.path.join(out_dir, "se_tile.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(
+        lambda a, w, b, n: (hybrid_mac.hybrid_tile(a, w, b, n),)
+    ).lower(a_spec, w_spec, b_spec, n_spec)
+    with open(os.path.join(out_dir, "hybrid_tile.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(lambda a, w, n: (ref.acim_mac_ref(a, w, n),)).lower(
+        a_spec, w_spec, an_spec
+    )
+    with open(os.path.join(out_dir, "acim_tile.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_model_hlo(out_dir: str, convs, fc_w, fc_b, batch: int = 128) -> None:
+    x_spec = jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32)
+    fn = lambda x: (M.folded_forward(convs, fc_w, fc_b, x),)
+    lowered = jax.jit(fn).lower(x_spec)
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def float_tensors(params, state) -> dict:
+    """Raw float params for weights_float.rten (training cache)."""
+    flat, treedef = jax.tree_util.tree_flatten((params, state))
+    out = {f"leaf{i}": np.asarray(x) for i, x in enumerate(flat)}
+    out["_count"] = np.asarray([len(flat)], np.int32)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=18)
+    ap.add_argument("--train-n", type=int, default=4096)
+    ap.add_argument("--test-n", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=2024)
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--golden-n", type=int, default=64,
+                    help="test images for the bit-exact rust golden")
+    args = ap.parse_args(argv)
+
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    # 1. dataset ----------------------------------------------------------
+    ds_path = os.path.join(out, "dataset.rten")
+    if not os.path.exists(ds_path):
+        print("[aot] generating SynthCIFAR ...", flush=True)
+        data = dataset.build(args.train_n, args.test_n, args.seed)
+        rten.write(ds_path, data)
+    else:
+        data = rten.read(ds_path)
+        print("[aot] dataset.rten cached", flush=True)
+
+    # 2. train (cached via pickle of the param pytree) ---------------------
+    ckpt = os.path.join(out, "train_ckpt.pkl")
+    if args.retrain or not os.path.exists(ckpt):
+        print("[aot] training ResNet-mini ...", flush=True)
+        params, state, history = train.train(data, epochs=args.epochs)
+        with open(ckpt, "wb") as f:
+            pickle.dump({"params": params, "state": state, "history": history}, f)
+    else:
+        with open(ckpt, "rb") as f:
+            saved = pickle.load(f)
+        params, state, history = saved["params"], saved["state"], saved["history"]
+        print("[aot] train_ckpt.pkl cached", flush=True)
+    float_acc = history[-1]["test_acc"]
+    print(f"[aot] float test accuracy: {float_acc:.4f} "
+          f"({M.count_params(params)} params)", flush=True)
+
+    # 3. fold + quantize ----------------------------------------------------
+    convs = M.fold_bn(params, state)
+    fc_w = np.asarray(params["fc"]["w"])
+    fc_b = np.asarray(params["fc"]["b"])
+    qgraph = quantize.quantize(params, state, data["train_x"][:256])
+    rten.write(os.path.join(out, "weights.rten"), quantize.qgraph_tensors(qgraph))
+    with open(os.path.join(out, "graph.json"), "w") as f:
+        f.write(quantize.graph_json(qgraph))
+
+    # 4. goldens ------------------------------------------------------------
+    print("[aot] computing goldens ...", flush=True)
+    xs = jnp.asarray(data["test_x"], jnp.float32) / 255.0
+    float_logits = []
+    for s in range(0, xs.shape[0], 256):
+        float_logits.append(np.asarray(M.folded_forward(convs, fc_w, fc_b, xs[s:s + 256])))
+    float_logits = np.concatenate(float_logits)
+
+    gemm = M.MacroGemm("dcim")
+    dcim_logits, _ = M.quant_forward(qgraph, xs[:args.golden_n], gemm)
+    rten.write(os.path.join(out, "golden.rten"), {
+        "float_logits": float_logits.astype(np.float32),
+        "dcim_logits": np.asarray(dcim_logits, np.float32),
+        "labels": data["test_y"],
+        "golden_n": np.asarray([args.golden_n], np.int32),
+        "float_acc": np.asarray([float_acc], np.float32),
+    })
+
+    # 5. HLO artifacts --------------------------------------------------------
+    print("[aot] lowering HLO artifacts ...", flush=True)
+    export_model_hlo(out, convs, fc_w, fc_b)
+    export_tile_artifacts(out)
+
+    # 6. spec.json ------------------------------------------------------------
+    spec_doc = S.as_dict()
+    spec_doc["prng_golden"] = prng.golden_vectors()
+    spec_doc["dataset"] = {
+        "train_n": int(data["train_x"].shape[0]),
+        "test_n": int(data["test_x"].shape[0]),
+        "num_classes": dataset.NUM_CLASSES,
+        "class_names": list(dataset.CLASS_NAMES),
+        "float_test_acc": float(float_acc),
+    }
+    with open(os.path.join(out, "spec.json"), "w") as f:
+        json.dump(spec_doc, f, indent=1)
+
+    print(f"[aot] done in {time.time()-t0:.0f}s -> {out}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,135 @@
+"""SynthCIFAR — synthetic 32x32x3 10-class dataset (CIFAR substitute).
+
+The offline build has no CIFAR100 and no pretrained ResNet (DESIGN.md §1),
+so we generate a dataset with exactly the property the paper's motivation
+(Fig 1) relies on: every image is a *salient object* (class-determining
+shape with distinctive texture) on a *non-salient background* (smooth
+textured field irrelevant to the label).  Saliency-aware precision maps
+(Fig 8a) should therefore light up on the object and stay coarse on the
+background, and accuracy-vs-efficiency tradeoffs (Fig 9) reproduce in
+shape.
+
+Classes: 0 circle, 1 square, 2 triangle, 3 cross, 4 ring, 5 hbar,
+6 vbar, 7 diamond, 8 checker, 9 corner-L.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG = 32
+CLASS_NAMES = (
+    "circle", "square", "triangle", "cross", "ring",
+    "hbar", "vbar", "diamond", "checker", "corner_l",
+)
+
+
+def _background(rng: np.random.Generator) -> np.ndarray:
+    """Smooth low-frequency color field + speckle, like grass/sky texture."""
+    base = rng.uniform(0.15, 0.55, (4, 4, 3))
+    # bilinear upsample 4x4 -> 32x32
+    xs = np.linspace(0, 3, IMG)
+    x0 = np.clip(xs.astype(int), 0, 2)
+    fx = xs - x0
+    up = (
+        base[x0][:, x0] * (1 - fx)[:, None, None] * (1 - fx)[None, :, None]
+        + base[x0 + 1][:, x0] * fx[:, None, None] * (1 - fx)[None, :, None]
+        + base[x0][:, x0 + 1] * (1 - fx)[:, None, None] * fx[None, :, None]
+        + base[x0 + 1][:, x0 + 1] * fx[:, None, None] * fx[None, :, None]
+    )
+    up += rng.normal(0, 0.03, up.shape)
+    return up
+
+
+def _object_mask(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """Boolean [32,32] mask of the class shape at random position/scale."""
+    cy = rng.uniform(10, 22)
+    cx = rng.uniform(10, 22)
+    r = rng.uniform(5.0, 9.0)
+    yy, xx = np.mgrid[0:IMG, 0:IMG]
+    dy, dx = yy - cy, xx - cx
+    rad = np.hypot(dy, dx)
+    if cls == 0:  # circle
+        return rad <= r
+    if cls == 1:  # square
+        return (np.abs(dy) <= r * 0.8) & (np.abs(dx) <= r * 0.8)
+    if cls == 2:  # triangle (upward)
+        return (dy >= -r) & (dy <= r * 0.6) & (np.abs(dx) <= (dy + r) * 0.6)
+    if cls == 3:  # cross
+        w = r * 0.35
+        return ((np.abs(dx) <= w) & (np.abs(dy) <= r)) | (
+            (np.abs(dy) <= w) & (np.abs(dx) <= r)
+        )
+    if cls == 4:  # ring
+        return (rad <= r) & (rad >= r * 0.55)
+    if cls == 5:  # hbar
+        return (np.abs(dy) <= r * 0.3) & (np.abs(dx) <= r)
+    if cls == 6:  # vbar
+        return (np.abs(dx) <= r * 0.3) & (np.abs(dy) <= r)
+    if cls == 7:  # diamond
+        return (np.abs(dy) + np.abs(dx)) <= r
+    if cls == 8:  # checker patch
+        inside = (np.abs(dy) <= r * 0.8) & (np.abs(dx) <= r * 0.8)
+        return inside & (((yy // 3) + (xx // 3)) % 2 == 0)
+    if cls == 9:  # corner L
+        w = r * 0.4
+        return ((np.abs(dx + r * 0.4) <= w) & (dy >= -r) & (dy <= r)) | (
+            (np.abs(dy - r + w) <= w) & (dx >= -r * 0.4) & (dx <= r)
+        )
+    raise ValueError(cls)
+
+
+def _blob_mask(rng: np.random.Generator) -> np.ndarray:
+    """Soft irregular blob — label-free background structure."""
+    cy, cx = rng.uniform(4, 28, 2)
+    yy, xx = np.mgrid[0:IMG, 0:IMG]
+    dy, dx = yy - cy, xx - cx
+    # anisotropic ellipse with wavy radius (never matches a class shape)
+    ang = np.arctan2(dy, dx)
+    r0 = rng.uniform(2.5, 5.0)
+    wob = 1.0 + 0.4 * np.sin(ang * rng.integers(5, 9) + rng.uniform(0, 6.28))
+    sx, sy = rng.uniform(0.6, 1.8, 2)
+    rad = np.hypot(dy / sy, dx / sx)
+    return rad <= r0 * wob
+
+
+def make_image(cls: int, rng: np.random.Generator) -> np.ndarray:
+    img = _background(rng)
+    # distractor texture in muted background-like colors: structure that
+    # carries NO label information (soft blobs, not class shapes — the
+    # paper's premise is that background pixels are truly non-salient;
+    # class-shaped distractors would make background fidelity matter)
+    for _ in range(rng.integers(1, 3)):
+        dmask = _blob_mask(rng)
+        dcol = rng.uniform(0.15, 0.45, 3)
+        img = np.where(dmask[:, :, None], dcol[None, None, :], img)
+    mask = _object_mask(cls, rng)
+    color = rng.uniform(0.55, 0.95, 3)
+    # dim one random channel so colors vary but stay bright vs background
+    color[rng.integers(0, 3)] *= rng.uniform(0.2, 0.6)
+    tex = rng.normal(0, 0.06, (IMG, IMG, 1))
+    obj = np.clip(color[None, None, :] + tex, 0, 1)
+    img = np.where(mask[:, :, None], obj, img)
+    img += rng.normal(0, 0.04, img.shape)
+    return (np.clip(img, 0, 1) * 255).astype(np.uint8)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n images, balanced classes, deterministic for a given seed."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n) % NUM_CLASSES
+    rng.shuffle(labels)
+    imgs = np.stack([make_image(int(c), rng) for c in labels])
+    return imgs, labels.astype(np.int32)
+
+
+def build(train_n: int = 4096, test_n: int = 1024, seed: int = 2024):
+    train_x, train_y = generate(train_n, seed)
+    test_x, test_y = generate(test_n, seed + 1)
+    return {
+        "train_x": train_x,
+        "train_y": train_y,
+        "test_x": test_x,
+        "test_y": test_y,
+    }

@@ -1,0 +1,71 @@
+"""Bit-plane decomposition helpers (jnp, int32 domain).
+
+The macro decomposes a multi-bit MAC into 1-bit MACs (paper Eq. 1):
+
+    MAC(A, W) = sum_{i,j} s_i * 2^(i+j) * MAC(A[j], W[i])
+
+with s_i = -1 for the weight sign plane (two's complement MSB) and +1
+otherwise.  Everything here operates on int32 tensors holding uint8
+activations (0..255) and int8 weights (-128..127).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import spec as S
+
+
+def act_planes(a_q: jnp.ndarray, a_bits: int = S.A_BITS) -> list[jnp.ndarray]:
+    """Unsigned activation bit planes, LSB first: list of 0/1 int32 arrays."""
+    a = a_q.astype(jnp.int32)
+    return [(a >> j) & 1 for j in range(a_bits)]
+
+
+def weight_planes(w_q: jnp.ndarray, w_bits: int = S.W_BITS) -> list[jnp.ndarray]:
+    """Two's-complement weight bit planes, LSB first (MSB is the sign plane).
+
+    Planes are the raw bits of the two's complement encoding, so
+    ``w == -2^(w_bits-1)*p[w_bits-1] + sum_{i<w_bits-1} 2^i * p[i]``.
+    """
+    w = w_q.astype(jnp.int32) & ((1 << w_bits) - 1)
+    return [(w >> i) & 1 for i in range(w_bits)]
+
+
+def plane_sign(i: int, w_bits: int = S.W_BITS) -> int:
+    """Sign s_i of weight plane i under two's complement."""
+    return -1 if i == w_bits - 1 else 1
+
+
+def recompose_weights(planes: list[jnp.ndarray], w_bits: int = S.W_BITS) -> jnp.ndarray:
+    """Inverse of :func:`weight_planes` (used by tests)."""
+    acc = jnp.zeros_like(planes[0])
+    for i, p in enumerate(planes):
+        acc = acc + plane_sign(i, w_bits) * (p << i)
+    return acc
+
+
+def recompose_acts(planes: list[jnp.ndarray]) -> jnp.ndarray:
+    """Inverse of :func:`act_planes` (used by tests)."""
+    acc = jnp.zeros_like(planes[0])
+    for j, p in enumerate(planes):
+        acc = acc + (p << j)
+    return acc
+
+
+def order_partials(a_q: jnp.ndarray, w_q: jnp.ndarray, sp: S.MacroSpec = S.DEFAULT_SPEC) -> jnp.ndarray:
+    """All 1-bit MAC partial sums D[i, j, m, h].
+
+    a_q: [M, C] activations, w_q: [H, C] weights ->
+    D[i, j] = a_plane_j @ w_plane_i^T, each in [0, C].
+    """
+    ap = act_planes(a_q, sp.a_bits)
+    wp = weight_planes(w_q, sp.w_bits)
+    rows = []
+    for i in range(sp.w_bits):
+        row = [
+            jnp.matmul(ap[j], wp[i].T, preferred_element_type=jnp.int32)
+            for j in range(sp.a_bits)
+        ]
+        rows.append(jnp.stack(row))
+    return jnp.stack(rows)  # [w_bits, a_bits, M, H]

@@ -1,0 +1,168 @@
+"""Pallas implementation of the OSA-HCIM hybrid macro op (L1 hot-spot).
+
+Two kernels, mirroring the macro's two operating modes:
+
+* ``se_tile``      — Saliency-Evaluation mode: the s=2 highest-order 1-bit
+                     MACs are computed digitally, N/Q-compressed and summed
+                     into a per-sample saliency contribution S.
+* ``hybrid_tile``  — Computing mode: given the per-sample boundary B_D/A,
+                     compute digital orders exactly, analog orders through
+                     the DAC-slice/charge-share/3-bit-SAR model, and drop
+                     the rest.
+
+Both are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom calls, and interpret mode lowers to plain HLO the Rust
+runtime executes directly (see /opt/xla-example/README.md).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the macro's spatial
+144-column x 8-HMU array becomes a tiled reduction.  The grid walks the
+sample axis in PALLAS_BLOCK_M blocks; each grid step keeps the full
+(8 x 144) weight bit-planes resident in VMEM (they are tiny and reused by
+all 64 (i,j) bit-plane products — the analogue of weights staying in the
+SRAM array) while activation bit-planes stream per block (the analogue of
+the GBL/GBLB input drive).  On a real TPU each D[i,j] product is an
+int8-friendly [block_m,144] @ [144,8] matmul that maps onto the MXU, and
+the boundary masks are VPU elementwise selects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import spec as S
+from .bitplane import plane_sign
+
+
+def _act_planes_block(a, a_bits):
+    return [(a >> j) & 1 for j in range(a_bits)]
+
+
+def _weight_planes_block(w, w_bits):
+    wm = w & ((1 << w_bits) - 1)
+    return [(wm >> i) & 1 for i in range(w_bits)]
+
+
+def _partial(ap_j, wp_i):
+    """D[i,j] for one block: [bm, C] @ [C, H] -> [bm, H], int32."""
+    return jax.lax.dot_general(
+        ap_j,
+        wp_i.T,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _se_kernel(a_ref, w_ref, s_ref, *, sp: S.MacroSpec):
+    a = a_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    ap = _act_planes_block(a, sp.a_bits)
+    wp = _weight_planes_block(w, sp.w_bits)
+    s = jnp.zeros((a.shape[0],), dtype=jnp.int32)
+    for i in range(sp.w_bits):
+        for j in range(sp.a_bits):
+            if i + j >= sp.se_k_min:
+                d = _partial(ap[j], wp[i])
+                s = s + jnp.sum(jnp.minimum(d >> sp.nq_shift, sp.nq_max), axis=1)
+    s_ref[...] = s
+
+
+def _hybrid_kernel(a_ref, w_ref, b_ref, n_ref, o_ref, *, sp: S.MacroSpec):
+    a = a_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)[:, None]  # [bm, 1]
+    noise = n_ref[...]  # [bm, H, w_bits] f32
+    ap = _act_planes_block(a, sp.a_bits)
+    wp = _weight_planes_block(w, sp.w_bits)
+
+    # Reused 1-bit MAC partial sums (the hardware computes SE-mode orders
+    # once and reuses them in computing mode; numerically identical).
+    d = [[_partial(ap[j], wp[i]) for j in range(sp.a_bits)] for i in range(sp.w_bits)]
+
+    acc = jnp.zeros((a.shape[0], w.shape[0]), dtype=jnp.int32)
+
+    # Digital domain: bit-serial DAT accumulation of orders k >= B.
+    for i in range(sp.w_bits):
+        for j in range(sp.a_bits):
+            term = jnp.where((i + j) >= b, d[i][j], 0)
+            acc = acc + plane_sign(i, sp.w_bits) * (term << (i + j))
+
+    # Analog domain: one DAC slice + ADC conversion per weight plane.
+    levels = jnp.float32(sp.adc_levels)
+    for i in range(sp.w_bits):
+        j_lo = jnp.maximum(0, b[:, 0] - sp.analog_band - i)  # [bm]
+        j_hi = jnp.minimum(sp.a_bits - 1, b[:, 0] - 1 - i)
+        exists = j_hi >= j_lo
+        amac = jnp.zeros_like(acc)
+        for j in range(sp.a_bits):
+            in_grp = (j >= j_lo) & (j <= j_hi)
+            shift = jnp.clip(j - j_lo, 0, sp.analog_band - 1)
+            amac = amac + jnp.where(in_grp[:, None], d[i][j] << shift[:, None], 0)
+        nbits = jnp.clip(j_hi - j_lo + 1, 1, sp.analog_band)[:, None]
+        span = (jnp.int32(1) << nbits) - 1
+        fs = jnp.float32(sp.cols) * span.astype(jnp.float32) * jnp.float32(sp.adc_fs_frac)
+        scale = levels / fs
+        v = amac.astype(jnp.float32) * scale
+        # mid-tread unbiased quantizer — must mirror ref.adc_transfer
+        code = jnp.clip(jnp.floor(v + jnp.float32(0.5) + noise[:, :, i]), 0.0, levels - 1.0)
+        rec = jnp.floor(code * (fs / levels) + jnp.float32(0.5))
+        rec = rec.astype(jnp.int32)
+        shift_out = jnp.clip(i + j_lo, 0, sp.k_max)[:, None]
+        contrib = jnp.where(exists[:, None], rec << shift_out, 0)
+        acc = acc + plane_sign(i, sp.w_bits) * contrib
+
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def se_tile(a_q, w_q, *, block_m: int = S.PALLAS_BLOCK_M):
+    """Saliency-evaluation pass over one K-tile. [M,C],[H,C] -> S[M] i32."""
+    sp = S.DEFAULT_SPEC
+    m, c = a_q.shape
+    h = w_q.shape[0]
+    assert m % block_m == 0, (m, block_m)
+    return pl.pallas_call(
+        functools.partial(_se_kernel, sp=sp),
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, c), lambda g: (g, 0)),
+            pl.BlockSpec((h, c), lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=True,
+    )(a_q.astype(jnp.int32), w_q.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def hybrid_tile(a_q, w_q, b_da, noise, *, block_m: int = S.PALLAS_BLOCK_M):
+    """Computing-mode hybrid MAC over one K-tile.
+
+    [M,C],[H,C],[M],[M,H,w_bits] -> [M,H] i32.
+    """
+    sp = S.DEFAULT_SPEC
+    m, c = a_q.shape
+    h = w_q.shape[0]
+    assert m % block_m == 0, (m, block_m)
+    assert noise.shape == (m, h, sp.w_bits), noise.shape
+    return pl.pallas_call(
+        functools.partial(_hybrid_kernel, sp=sp),
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, c), lambda g: (g, 0)),
+            pl.BlockSpec((h, c), lambda g: (0, 0)),
+            pl.BlockSpec((block_m,), lambda g: (g,)),
+            pl.BlockSpec((block_m, h, sp.w_bits), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, h), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.int32),
+        interpret=True,
+    )(
+        a_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        b_da.astype(jnp.int32),
+        noise.astype(jnp.float32),
+    )

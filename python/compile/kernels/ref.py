@@ -1,0 +1,202 @@
+"""Pure-jnp oracle for the OSA-HCIM macro datapath.
+
+This is the normative functional model: the Pallas kernel
+(:mod:`hybrid_mac`), the AOT artifacts, and the Rust native simulator
+(``rust/src/macrosim``) must all agree with it bit-exactly given the same
+explicit noise buffer (DESIGN.md §3).  Every arithmetic step that involves
+floating point (the ADC transfer function) is written as an exact sequence
+of f32 ops that the Rust side mirrors literally.
+
+Conventions
+-----------
+* ``a_q``  [M, C] int32 holding uint8 activations (0..2^a_bits-1)
+* ``w_q``  [H, C] int32 holding int8 two's-complement weights
+* ``b_da`` [M]    int32 per-sample digital/analog boundary B_D/A
+* ``noise``[M, H, w_bits] f32 input-referred ADC noise, code units
+* return  [M, H] int32 hybrid MAC result
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import spec as S
+from .bitplane import order_partials, plane_sign
+
+
+def exact_mac(a_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """Loss-free integer MAC — the DCIM ground truth. [M,C]x[H,C] -> [M,H]."""
+    return jnp.matmul(
+        a_q.astype(jnp.int32), w_q.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+
+
+def nq(d: jnp.ndarray, sp: S.MacroSpec = S.DEFAULT_SPEC) -> jnp.ndarray:
+    """Normalization-and-Quantization unit: 3-bit compression of a DMAC."""
+    return jnp.minimum(d >> sp.nq_shift, sp.nq_max)
+
+
+def adc_transfer(
+    amac: jnp.ndarray, nbits: jnp.ndarray, noise: jnp.ndarray, sp: S.MacroSpec = S.DEFAULT_SPEC
+) -> jnp.ndarray:
+    """3-bit SAR ADC: charge-share voltage -> code -> integer reconstruction.
+
+    ``amac``  int32 >= 0 (sum over columns of w_bit * analog slice value)
+    ``nbits`` int32 in [1, ANALOG_BAND]: DAC precision of the slice
+    ``noise`` f32 input-referred noise in code units
+
+    Mirrored exactly by ``rust/src/analog/adc.rs`` — keep the op order.
+    """
+    levels = jnp.float32(sp.adc_levels)
+    span = (jnp.int32(1) << nbits) - 1  # 2^nbits - 1
+    fs = jnp.float32(sp.cols) * span.astype(jnp.float32) * jnp.float32(sp.adc_fs_frac)
+    scale = levels / fs
+    v = amac.astype(jnp.float32) * scale
+    # mid-tread (unbiased) quantizer: code = round(v), rec = code * step.
+    # A mid-riser reconstruction would add +step/2 to every conversion,
+    # which (scaled by 2^(i+j_lo), accumulated over 8 groups) shifts every
+    # MAC and collapses the quantized network (~50% acc at B=8).
+    code = jnp.clip(jnp.floor(v + jnp.float32(0.5) + noise), 0.0, levels - 1.0)
+    rec = jnp.floor(code * (fs / levels) + jnp.float32(0.5))
+    return rec.astype(jnp.int32)
+
+
+def analog_group_bounds(i: int, b_da: jnp.ndarray, sp: S.MacroSpec = S.DEFAULT_SPEC):
+    """Per-sample analog activation-plane range for weight plane ``i``.
+
+    Orders ``B-band <= k < B`` with ``k = i + j`` give
+    ``j in [max(0, B-band-i), min(a_bits-1, B-1-i)]``; the group exists
+    when that range is non-empty.
+    """
+    j_lo = jnp.maximum(0, b_da - sp.analog_band - i)
+    j_hi = jnp.minimum(sp.a_bits - 1, b_da - 1 - i)
+    exists = j_hi >= j_lo
+    return j_lo, j_hi, exists
+
+
+def hybrid_mac_ref(
+    a_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    b_da: jnp.ndarray,
+    noise: jnp.ndarray,
+    sp: S.MacroSpec = S.DEFAULT_SPEC,
+) -> jnp.ndarray:
+    """OSA-HCIM computing-mode MAC with a per-sample boundary ``b_da``.
+
+    digital: orders k >= B (exact, bit-serial DCIM);
+    analog:  orders B-band <= k < B (per weight plane, DAC slice + ADC);
+    discard: orders k < B-band.
+    """
+    d = order_partials(a_q, w_q, sp)  # [w, a, M, H]
+    b = b_da.astype(jnp.int32)[:, None]  # [M, 1]
+    acc = jnp.zeros((a_q.shape[0], w_q.shape[0]), dtype=jnp.int32)
+
+    # --- digital domain -------------------------------------------------
+    for i in range(sp.w_bits):
+        for j in range(sp.a_bits):
+            dig = (i + j) >= b  # [M, 1]
+            term = jnp.where(dig, d[i, j], 0)
+            acc = acc + plane_sign(i, sp.w_bits) * (term << (i + j))
+
+    # --- analog domain --------------------------------------------------
+    for i in range(sp.w_bits):
+        j_lo, j_hi, exists = analog_group_bounds(i, b[:, 0], sp)  # [M]
+        amac = jnp.zeros_like(acc)
+        for j in range(sp.a_bits):
+            in_grp = (j >= j_lo) & (j <= j_hi)  # [M]
+            shift = jnp.clip(j - j_lo, 0, sp.analog_band - 1)
+            amac = amac + jnp.where(in_grp[:, None], d[i, j] << shift[:, None], 0)
+        nbits = jnp.clip(j_hi - j_lo + 1, 1, sp.analog_band)
+        rec = adc_transfer(amac, nbits[:, None], noise[:, :, i], sp)
+        shift_out = jnp.clip(i + j_lo, 0, sp.k_max)
+        contrib = jnp.where(exists[:, None], rec << shift_out[:, None], 0)
+        acc = acc + plane_sign(i, sp.w_bits) * contrib
+
+    return acc
+
+
+def saliency_ref(
+    a_q: jnp.ndarray, w_q: jnp.ndarray, sp: S.MacroSpec = S.DEFAULT_SPEC
+) -> jnp.ndarray:
+    """Saliency-evaluation mode: S[m] from the s highest-order 1-bit MACs.
+
+    The DMACs of orders k >= SE_K_MIN are N/Q-compressed to 3 bits and
+    summed across the 8 HMU channels (the OSE then accumulates across
+    K-tiles, i.e. "cycles", outside this function).
+    """
+    d = order_partials(a_q, w_q, sp)
+    s = jnp.zeros((a_q.shape[0],), dtype=jnp.int32)
+    for i in range(sp.w_bits):
+        for j in range(sp.a_bits):
+            if i + j >= sp.se_k_min:
+                s = s + jnp.sum(nq(d[i, j], sp), axis=1)
+    return s
+
+
+def select_boundary(
+    s: jnp.ndarray,
+    thresholds: jnp.ndarray,
+    candidates: jnp.ndarray,
+) -> jnp.ndarray:
+    """OSE boundary select: B = candidates[#{T_i <= S}].
+
+    ``thresholds`` ascending [b-1]; ``candidates`` coarse-to-fine [b]
+    (e.g. [10,9,8,7,6,5]): low saliency -> candidates[0] (most analog),
+    high saliency -> candidates[-1] (most digital).
+    """
+    idx = jnp.sum(s[:, None] >= thresholds[None, :].astype(jnp.int32), axis=1)
+    return candidates.astype(jnp.int32)[idx]
+
+
+def acim_mac_ref(
+    a_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    noise: jnp.ndarray,
+    sp: S.MacroSpec = S.DEFAULT_SPEC,
+) -> jnp.ndarray:
+    """Full-analog baseline (conventional ACIM).
+
+    Every weight plane is multiplied against bit-parallel activation
+    slices of ANALOG_BAND bits (two 4-bit slices for 8-bit activations),
+    each slice going through its own charge-share + 3-bit ADC conversion.
+    ``noise``: [M, H, w_bits, n_slices] f32.
+    """
+    d = order_partials(a_q, w_q, sp)
+    n_slices = (sp.a_bits + sp.analog_band - 1) // sp.analog_band
+    acc = jnp.zeros((a_q.shape[0], w_q.shape[0]), dtype=jnp.int32)
+    for i in range(sp.w_bits):
+        for sl in range(n_slices):
+            j_lo = sl * sp.analog_band
+            j_hi = min(j_lo + sp.analog_band - 1, sp.a_bits - 1)
+            amac = jnp.zeros_like(acc)
+            for j in range(j_lo, j_hi + 1):
+                amac = amac + (d[i, j] << (j - j_lo))
+            nbits = jnp.int32(j_hi - j_lo + 1)
+            rec = adc_transfer(amac, nbits, noise[:, :, i, sl], sp)
+            acc = acc + plane_sign(i, sp.w_bits) * (rec << (i + j_lo))
+    return acc
+
+
+def hybrid_mac_counts(b: int, sp: S.MacroSpec = S.DEFAULT_SPEC) -> dict:
+    """Static workload allocation for one boundary value (Fig 5a).
+
+    Returns the number of 1-bit MAC (i,j) pairs computed digitally /
+    in analog / discarded, and the number of ADC conversions (analog
+    groups, one per weight plane with a non-empty slice).
+    """
+    dig = ana = disc = 0
+    groups = 0
+    for i in range(sp.w_bits):
+        lo = max(0, b - sp.analog_band - i)
+        hi = min(sp.a_bits - 1, b - 1 - i)
+        if hi >= lo:
+            groups += 1
+        for j in range(sp.a_bits):
+            k = i + j
+            if k >= b:
+                dig += 1
+            elif k >= b - sp.analog_band:
+                ana += 1
+            else:
+                disc += 1
+    return {"digital": dig, "analog": ana, "discard": disc, "adc_groups": groups}

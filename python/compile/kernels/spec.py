@@ -1,0 +1,117 @@
+"""Normative numeric specification for the OSA-HCIM reproduction.
+
+Every constant here is mirrored by ``rust/src/spec.rs``; ``aot.py`` embeds
+this module's values (plus PRNG golden vectors) into ``artifacts/spec.json``
+and the Rust side validates its own constants against that file at startup
+and in tests.  See DESIGN.md §3 for the semantics of each knob.
+
+The macro modeled is the paper's 64b x 144b split-port 6T SRAM array:
+8 Hybrid MAC Units (HMUs), each owning 144 Hybrid CIM Arrays (HCIMA) that
+store one 8-bit weight apiece, a digital adder tree (DAT), an N/Q unit and
+a 3-bit SAR ADC.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------- geometry
+COLS = 144  #: columns per HMU == dot-product (K-tile) length
+HMUS = 8  #: HMUs per macro == output channels produced per macro op
+ROWS = 64  #: SRAM rows = HMUS * W_BITS (one 8-bit weight per HCIMA)
+
+# ------------------------------------------------------------- bit layout
+W_BITS = 8  #: weight bit-planes (int8 two's complement; plane 7 is -2^7)
+A_BITS = 8  #: activation bit-planes (uint8, post-ReLU)
+K_MAX = W_BITS + A_BITS - 2  #: highest output order k = i + j
+
+# --------------------------------------------------------------- OSA knobs
+ANALOG_BAND = 4  #: orders B-4 <= k < B go to ACIM (DAC supports 1..4 bits)
+SE_ORDERS = 2  #: saliency is evaluated from the s=2 highest orders
+SE_K_MIN = K_MAX - SE_ORDERS + 1  #: k in {13, 14} for 8b x 8b
+NQ_SHIFT = 1  #: N/Q unit: NQ(d) = min(NQ_MAX, d >> NQ_SHIFT)
+NQ_MAX = 7  #: 3-bit N/Q ceiling
+B_CANDIDATES = (10, 9, 8, 7, 6, 5)  #: Fig 5b operating points, coarse->fine
+B_DCIM = 0  #: boundary value that makes every order digital (DCIM baseline)
+
+# --------------------------------------------------------------- ADC model
+ADC_BITS = 3  #: SAR ADC resolution (paper: low precision is the point)
+ADC_LEVELS = 1 << ADC_BITS
+ADC_FS_FRAC = 0.25  #: charge-share rail sized for typical 25% bit density
+SIGMA_CODE = 0.3  #: default input-referred noise, in ADC code units
+
+# -------------------------------------------------------------- tile shapes
+TILE_M = 256  #: samples per AOT hybrid/se tile artifact
+PALLAS_BLOCK_M = 64  #: pallas grid block along the sample axis
+
+SPEC_VERSION = 5
+
+
+def normalize_saliency(s_raw, k_real: int, cols: int = COLS):
+    """Normalize accumulated raw saliency by the layer's true K depth.
+
+    The OSE compares S against *global* pre-trained thresholds; layers
+    have different K (im2col depth), so the N/Q unit's normalization
+    stage rescales by ``cols / k_real`` (a per-layer constant the
+    controller programs).  Integer floor division -- mirrored by
+    ``rust spec::normalize_saliency``.
+    """
+    import numpy as np
+
+    return (np.asarray(s_raw, np.int64) * cols) // max(k_real, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroSpec:
+    """Bundled spec so code can carry/override knobs (tests use this)."""
+
+    cols: int = COLS
+    hmus: int = HMUS
+    w_bits: int = W_BITS
+    a_bits: int = A_BITS
+    analog_band: int = ANALOG_BAND
+    se_orders: int = SE_ORDERS
+    nq_shift: int = NQ_SHIFT
+    nq_max: int = NQ_MAX
+    adc_bits: int = ADC_BITS
+    adc_fs_frac: float = ADC_FS_FRAC
+    sigma_code: float = SIGMA_CODE
+
+    @property
+    def k_max(self) -> int:
+        return self.w_bits + self.a_bits - 2
+
+    @property
+    def se_k_min(self) -> int:
+        return self.k_max - self.se_orders + 1
+
+    @property
+    def adc_levels(self) -> int:
+        return 1 << self.adc_bits
+
+
+DEFAULT_SPEC = MacroSpec()
+
+
+def as_dict() -> dict:
+    """Spec constants serialized into artifacts/spec.json."""
+    return {
+        "version": SPEC_VERSION,
+        "cols": COLS,
+        "hmus": HMUS,
+        "rows": ROWS,
+        "w_bits": W_BITS,
+        "a_bits": A_BITS,
+        "k_max": K_MAX,
+        "analog_band": ANALOG_BAND,
+        "se_orders": SE_ORDERS,
+        "se_k_min": SE_K_MIN,
+        "nq_shift": NQ_SHIFT,
+        "nq_max": NQ_MAX,
+        "b_candidates": list(B_CANDIDATES),
+        "b_dcim": B_DCIM,
+        "adc_bits": ADC_BITS,
+        "adc_fs_frac": ADC_FS_FRAC,
+        "sigma_code": SIGMA_CODE,
+        "tile_m": TILE_M,
+    }

@@ -1,0 +1,407 @@
+"""L2: ResNet-mini in JAX — float training graph + quantized CIM graph.
+
+Three forward paths, all sharing one parameter set:
+
+1. ``forward`` (train/eval) — float, with BatchNorm; used by ``train.py``
+   and, with BN folded, as the accuracy golden (AOT-exported to
+   ``artifacts/model.hlo.txt``).
+2. ``quant_forward(..., MacroGemm("dcim"))`` — integer exact (loss-free
+   DCIM baseline).  Bit-exact with ``rust/src/nn`` in DCIM mode.
+3. ``quant_forward(..., MacroGemm("osa"|"hcim"|"acim"))`` — the CIM
+   datapath: im2col GEMMs tiled onto 64x144 macros through the L1 kernel
+   oracle (:mod:`kernels.ref`; the Pallas kernels lower the same math
+   into the AOT tile artifacts executed by Rust).
+
+Architecture (ResNet20-style for 32x32, ~272k params):
+    stem conv3x3(3->16) — 3 stages x 2 basic blocks (16/32/64, stride 2
+    between stages, 1x1 projection shortcuts) — GAP — FC(64->10).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import spec as S
+from .prng import SplitMix64, layer_noise_seed
+
+NUM_CLASSES = 10
+STAGES = (16, 32, 64)
+BLOCKS_PER_STAGE = 2
+BN_EPS = 1e-5
+BN_MOM = 0.9
+ACT_QMAX = 255  # uint8 activations
+W_QMAX = 127  # int8 weights
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+# --------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = np.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _bn_init(c):
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def _bn_state(c):
+    return {
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def init_params(seed: int = 0):
+    """Returns (params, bn_state) pytrees."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 64))
+    params = {"stem": {"w": _conv_init(next(keys), 3, 3, 3, STAGES[0]), "bn": _bn_init(STAGES[0])}}
+    state = {"stem": _bn_state(STAGES[0])}
+    blocks = []
+    bstate = []
+    cin = STAGES[0]
+    for si, cout in enumerate(STAGES):
+        for bi in range(BLOCKS_PER_STAGE):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {
+                "conv1": {"w": _conv_init(next(keys), 3, 3, cin, cout), "bn": _bn_init(cout)},
+                "conv2": {"w": _conv_init(next(keys), 3, 3, cout, cout), "bn": _bn_init(cout)},
+            }
+            st = {"conv1": _bn_state(cout), "conv2": _bn_state(cout)}
+            if stride != 1 or cin != cout:
+                blk["shortcut"] = {"w": _conv_init(next(keys), 1, 1, cin, cout), "bn": _bn_init(cout)}
+                st["shortcut"] = _bn_state(cout)
+            blocks.append(blk)
+            bstate.append(st)
+            cin = cout
+    params["blocks"] = blocks
+    state["blocks"] = bstate
+    params["fc"] = {
+        "w": jax.random.normal(next(keys), (STAGES[-1], NUM_CLASSES), jnp.float32)
+        * np.sqrt(1.0 / STAGES[-1]),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    return params, state
+
+
+def block_strides():
+    out = []
+    for si in range(len(STAGES)):
+        for bi in range(BLOCKS_PER_STAGE):
+            out.append(2 if (si > 0 and bi == 0) else 1)
+    return out
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------
+# float forward (training / golden)
+# --------------------------------------------------------------------------
+
+def _conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _bn_apply(x, bn, mean, var):
+    inv = bn["gamma"] * jax.lax.rsqrt(var + BN_EPS)
+    return x * inv + (bn["beta"] - mean * inv)
+
+
+def _bn_train(x, bn, st):
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    y = _bn_apply(x, bn, mean, var)
+    new_st = {
+        "mean": BN_MOM * st["mean"] + (1 - BN_MOM) * mean,
+        "var": BN_MOM * st["var"] + (1 - BN_MOM) * var,
+    }
+    return y, new_st
+
+
+def forward(params, state, x, train: bool):
+    """x: [N,32,32,3] float in [0,1]. Returns (logits, new_state)."""
+    new_state = {"stem": dict(state["stem"]), "blocks": []}
+
+    def bn(t, p, st):
+        if train:
+            return _bn_train(t, p, st)
+        return _bn_apply(t, p, st["mean"], st["var"]), st
+
+    h = _conv2d(x, params["stem"]["w"])
+    h, new_state["stem"] = bn(h, params["stem"]["bn"], state["stem"])
+    h = jax.nn.relu(h)
+    strides = block_strides()
+    for blk, st, stride in zip(params["blocks"], state["blocks"], strides):
+        nst = {}
+        t = _conv2d(h, blk["conv1"]["w"], stride)
+        t, nst["conv1"] = bn(t, blk["conv1"]["bn"], st["conv1"])
+        t = jax.nn.relu(t)
+        t = _conv2d(t, blk["conv2"]["w"])
+        t, nst["conv2"] = bn(t, blk["conv2"]["bn"], st["conv2"])
+        if "shortcut" in blk:
+            sc = _conv2d(h, blk["shortcut"]["w"], stride)
+            sc, nst["shortcut"] = bn(sc, blk["shortcut"]["bn"], st["shortcut"])
+        else:
+            sc = h
+        h = jax.nn.relu(t + sc)
+        new_state["blocks"].append(nst)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, new_state
+
+
+def forward_eval(params, state, x):
+    return forward(params, state, x, train=False)[0]
+
+
+# --------------------------------------------------------------------------
+# BN folding -> inference conv list
+# --------------------------------------------------------------------------
+
+def fold_bn(params, state):
+    """Folds BN into conv weights/biases.
+
+    Returns an ordered list of (name, w[kh,kw,cin,cout] float, bias, stride)
+    — the inference graph shared with Rust via graph.json + weights.rten.
+    """
+
+    def fold(conv, st):
+        w, bn = conv["w"], conv["bn"]
+        inv = np.asarray(bn["gamma"]) / np.sqrt(np.asarray(st["var"]) + BN_EPS)
+        wf = np.asarray(w) * inv[None, None, None, :]
+        bf = np.asarray(bn["beta"]) - np.asarray(st["mean"]) * inv
+        return wf, bf
+
+    convs = []
+    wf, bf = fold(params["stem"], state["stem"])
+    convs.append(("stem", wf, bf, 1))
+    strides = block_strides()
+    for li, (blk, st, stride) in enumerate(zip(params["blocks"], state["blocks"], strides)):
+        w1, b1 = fold(blk["conv1"], st["conv1"])
+        convs.append((f"b{li}.conv1", w1, b1, stride))
+        w2, b2 = fold(blk["conv2"], st["conv2"])
+        convs.append((f"b{li}.conv2", w2, b2, 1))
+        if "shortcut" in blk:
+            ws, bs = fold(blk["shortcut"], st["shortcut"])
+            convs.append((f"b{li}.shortcut", ws, bs, stride))
+    return convs
+
+
+def folded_forward(convs, fc_w, fc_b, x):
+    """Float forward through the folded graph — must match forward_eval."""
+    by_name = {name: (w, b, s) for name, w, b, s in convs}
+
+    def conv(name, t):
+        w, b, s = by_name[name]
+        return _conv2d(t, jnp.asarray(w), s) + jnp.asarray(b)
+
+    h = jax.nn.relu(conv("stem", x))
+    n_blocks = len(STAGES) * BLOCKS_PER_STAGE
+    for li in range(n_blocks):
+        t = jax.nn.relu(conv(f"b{li}.conv1", h))
+        t = conv(f"b{li}.conv2", t)
+        sc = conv(f"b{li}.shortcut", h) if f"b{li}.shortcut" in by_name else h
+        h = jax.nn.relu(t + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ jnp.asarray(fc_w) + jnp.asarray(fc_b)
+
+
+# --------------------------------------------------------------------------
+# quantized CIM forward (oracle for rust/src/nn + sched)
+# --------------------------------------------------------------------------
+
+def quant_round(x):
+    """round-half-up, matching Rust's `(x + 0.5).floor()`."""
+    return jnp.floor(x + 0.5)
+
+
+def act_quantize(x, scale):
+    """uint8 activation quantization; clamp at 0 doubles as ReLU."""
+    return jnp.clip(quant_round(x / scale), 0, ACT_QMAX).astype(jnp.int32)
+
+
+def im2col(x, kh, kw, stride, pad):
+    """[N,H,W,C] -> patches [N, Ho, Wo, kh*kw*C] (zero padded).
+
+    Patch layout is (dy, dx, c) fastest-to-slowest = c fastest — the same
+    layout rust/src/sched/im2col.rs produces and weights.rten stores.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, dy, dx, 0),
+                    (0 + n, dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1).reshape(n, ho, wo, kh * kw * c)
+
+
+def pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+class MacroGemm:
+    """Tiled integer GEMM through the macro datapath (oracle for sched/).
+
+    A_q [M, K] uint8-as-i32, W_q [N, K] int8-as-i32 -> [M, N] i32.
+    K tiled by COLS (144), N tiled by HMUS (8); per-(sample, N-tile)
+    saliency accumulated over K-tiles selects B_D/A (OSA); or a fixed
+    boundary (HCIM); or B=0 all-digital (DCIM); or full-analog (ACIM).
+    """
+
+    def __init__(self, mode: str, thresholds=None, fixed_b: int = 8,
+                 noise_seed: int = 0, sp: S.MacroSpec = S.DEFAULT_SPEC):
+        assert mode in ("dcim", "hcim", "osa", "acim")
+        self.mode = mode
+        self.sp = sp
+        self.fixed_b = fixed_b
+        self.thresholds = None if thresholds is None else np.asarray(thresholds, np.int32)
+        self.noise_seed = noise_seed
+        self.stats = {"macro_ops": 0, "b_hist": np.zeros(16, np.int64)}
+        self.last_bda = None
+
+    def _noise(self, shape, stream: SplitMix64):
+        if self.sp.sigma_code == 0.0:
+            return jnp.zeros(shape, jnp.float32)
+        n = int(np.prod(shape))
+        vals = np.asarray(stream.normals(n), np.float64) * self.sp.sigma_code
+        return jnp.asarray(vals.astype(np.float32).reshape(shape))
+
+    def __call__(self, a_q, w_q, layer_idx: int):
+        sp = self.sp
+        m, k = a_q.shape
+        n = w_q.shape[0]
+        a_p = pad_to(a_q, 1, sp.cols)
+        w_p = pad_to(pad_to(w_q, 1, sp.cols), 0, sp.hmus)
+        kt = a_p.shape[1] // sp.cols
+        nt = w_p.shape[0] // sp.hmus
+        stream = SplitMix64(layer_noise_seed(self.noise_seed, layer_idx))
+
+        if self.mode == "dcim":
+            self.stats["macro_ops"] += m * kt * nt
+            self.stats["b_hist"][0] += m * kt * nt
+            self.last_bda = np.zeros((m, nt), np.int32)
+            return ref.exact_mac(a_p, w_p)[:, :n]
+
+        bda_all = np.zeros((m, nt), np.int32)
+        out = jnp.zeros((m, w_p.shape[0]), jnp.int32)
+        for ni in range(nt):
+            w_rows = w_p[ni * sp.hmus:(ni + 1) * sp.hmus]
+            if self.mode == "osa":
+                s_acc = jnp.zeros((m,), jnp.int32)
+                for ki in range(kt):
+                    a_t = a_p[:, ki * sp.cols:(ki + 1) * sp.cols]
+                    w_t = w_rows[:, ki * sp.cols:(ki + 1) * sp.cols]
+                    s_acc = s_acc + ref.saliency_ref(a_t, w_t, sp)
+                # N/Q normalization by the layer's true (unpadded) K
+                s_norm = jnp.asarray(
+                    S.normalize_saliency(np.asarray(s_acc), k, sp.cols), jnp.int32
+                )
+                b_da = ref.select_boundary(
+                    s_norm, jnp.asarray(self.thresholds), jnp.asarray(S.B_CANDIDATES)
+                )
+            elif self.mode == "hcim":
+                b_da = jnp.full((m,), self.fixed_b, jnp.int32)
+            else:  # acim
+                b_da = None
+
+            acc = jnp.zeros((m, sp.hmus), jnp.int32)
+            for ki in range(kt):
+                a_t = a_p[:, ki * sp.cols:(ki + 1) * sp.cols]
+                w_t = w_rows[:, ki * sp.cols:(ki + 1) * sp.cols]
+                if self.mode == "acim":
+                    n_slices = (sp.a_bits + sp.analog_band - 1) // sp.analog_band
+                    noise = self._noise((m, sp.hmus, sp.w_bits, n_slices), stream)
+                    acc = acc + ref.acim_mac_ref(a_t, w_t, noise, sp)
+                else:
+                    noise = self._noise((m, sp.hmus, sp.w_bits), stream)
+                    acc = acc + ref.hybrid_mac_ref(a_t, w_t, b_da, noise, sp)
+            out = out.at[:, ni * sp.hmus:(ni + 1) * sp.hmus].set(acc)
+            self.stats["macro_ops"] += m * kt
+            if b_da is not None:
+                bda_np = np.asarray(b_da)
+                bda_all[:, ni] = bda_np
+                self.stats["b_hist"] += np.bincount(bda_np, minlength=16)[:16] * kt
+        self.last_bda = bda_all
+        return out[:, :n]
+
+
+def quant_forward(qgraph, x, gemm: MacroGemm, collect_bda: bool = False):
+    """Quantized inference through the graph produced by quantize.py.
+
+    x float NHWC in [0,1].  Returns (logits [N,10] float, bda_maps) where
+    bda_maps is a list of (layer_name, [N,Ho,Wo] most-precise-B map) when
+    ``collect_bda`` and the gemm runs OSA mode.
+    """
+    h = x
+    bda_maps = []
+    n_blocks = len(STAGES) * BLOCKS_PER_STAGE
+    by_name = {c["name"]: c for c in qgraph["convs"]}
+
+    def qconv(name, xf, layer_idx):
+        c = by_name[name]
+        a_scale, w_scale = c["act_scale"], c["w_scale"]
+        kh, kw, stride = c["kh"], c["kw"], c["stride"]
+        pad = (kh - 1) // 2
+        a_q = act_quantize(xf, a_scale)
+        patches = im2col(a_q, kh, kw, stride, pad)
+        nb, ho, wo, kdim = patches.shape
+        a_mat = patches.reshape(nb * ho * wo, kdim)
+        acc = gemm(a_mat, jnp.asarray(c["w_q"], jnp.int32), layer_idx)
+        if collect_bda and gemm.mode == "osa" and gemm.last_bda is not None:
+            # min over N-tiles = the most precise boundary chosen at this
+            # output position (Fig 8a visualization convention)
+            bmap = gemm.last_bda.min(axis=1).reshape(nb, ho, wo)
+            bda_maps.append((name, bmap))
+        acc = acc + jnp.asarray(c["bias_q"], jnp.int32)[None, :]
+        outf = acc.astype(jnp.float32) * jnp.float32(a_scale * w_scale)
+        return outf.reshape(nb, ho, wo, -1)
+
+    li = 0
+    h = qconv("stem", h, li); li += 1
+    h = jax.nn.relu(h)
+    for bi in range(n_blocks):
+        t = jax.nn.relu(qconv(f"b{bi}.conv1", h, li)); li += 1
+        t = qconv(f"b{bi}.conv2", t, li); li += 1
+        if f"b{bi}.shortcut" in by_name:
+            sc = qconv(f"b{bi}.shortcut", h, li); li += 1
+        else:
+            sc = h
+        h = jax.nn.relu(t + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    fc = qgraph["fc"]
+    h_q = act_quantize(h, fc["act_scale"])
+    logits = (
+        (jnp.matmul(h_q, jnp.asarray(fc["w_q"], jnp.int32).T,
+                    preferred_element_type=jnp.int32)
+         + jnp.asarray(fc["bias_q"], jnp.int32)[None, :]).astype(jnp.float32)
+        * jnp.float32(fc["act_scale"] * fc["w_scale"])
+    )
+    return logits, bda_maps

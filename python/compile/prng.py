@@ -1,0 +1,84 @@
+"""SplitMix64 PRNG + Box-Muller normals, bit-identical to rust/src/util/prng.rs.
+
+The hot path never samples noise inside a kernel: the caller (Rust L3, or
+the Python model for build-time evaluation) draws noise buffers from this
+generator and passes them in as explicit inputs, so the native Rust
+simulator and the PJRT artifact can be compared bit-exactly on the same
+buffer.  Cross-language parity of the *generator itself* is asserted
+against golden vectors embedded in artifacts/spec.json (f64 values may
+differ across libm implementations by ~1 ulp in ln/cos, so the parity test
+uses a 1e-12 relative tolerance; integer u64 output is exact).
+"""
+
+from __future__ import annotations
+
+import math
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+class SplitMix64:
+    """Sebastiano Vigna's splitmix64; the sole seeding primitive."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GOLDEN) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 random bits."""
+        return (self.next_u64() >> 11) * (2.0 ** -53)
+
+    def next_normal(self) -> float:
+        """One standard normal via Box-Muller (cosine branch only).
+
+        Consumes exactly two u64s per call so the stream position is
+        easy to reason about on both sides of the FFI boundary.
+        """
+        u1 = self.next_f64()
+        u2 = self.next_f64()
+        if u1 <= 0.0:
+            u1 = 2.0 ** -53
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def normals(self, n: int) -> list[float]:
+        """n standard normals, using BOTH Box-Muller branches per pair of
+        u64 draws — bit-identical with rust ``SplitMix64::normals_f32``."""
+        out: list[float] = []
+        while len(out) < n:
+            u1 = self.next_f64()
+            u2 = self.next_f64()
+            if u1 <= 0.0:
+                u1 = 2.0 ** -53
+            r = math.sqrt(-2.0 * math.log(u1))
+            t = 2.0 * math.pi * u2
+            out.append(r * math.cos(t))
+            if len(out) < n:
+                out.append(r * math.sin(t))
+        return out
+
+
+def layer_noise_seed(base_seed: int, layer_idx: int) -> int:
+    """Convention shared with Rust: per-layer noise stream seed."""
+    return (base_seed ^ ((layer_idx + 1) * GOLDEN)) & MASK64
+
+
+def golden_vectors(seed: int = 0xC1A0_05A1_1CE5_2024, n: int = 64) -> dict:
+    """Golden parity vectors embedded in spec.json and checked by Rust.
+
+    u64 values are hex strings — JSON numbers are f64 and would lose the
+    top bits of a 64-bit integer in any standards-compliant parser.
+    """
+    g_u = SplitMix64(seed)
+    g_n = SplitMix64(seed)
+    return {
+        "seed_hex": f"{seed:016x}",
+        "u64_hex": [f"{g_u.next_u64():016x}" for _ in range(n)],
+        "normal": g_n.normals(n),
+    }

@@ -1,0 +1,162 @@
+"""Post-training quantization of the folded ResNet-mini (DESIGN.md §3).
+
+* weights: per-layer symmetric int8, scale = max|w| / 127
+* activations: per-layer uint8; scale calibrated so that the 99.9th
+  percentile of the layer's float input maps to 255 (ReLU makes inputs
+  non-negative; the input image is already [0,1])
+* bias: int32 in the accumulator domain, bias_q = round(b / (s_a * s_w))
+
+The quantized graph (``qgraph``) is the single source of truth consumed by
+``model.quant_forward`` (Python oracle), ``aot.py`` (artifact export) and,
+via weights.rten + graph.json, by ``rust/src/nn``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def _collect_conv_inputs(convs, fc_w, fc_b, x):
+    """Run the folded float graph, recording every conv/fc input tensor."""
+    by_name = {name: (w, b, s) for name, w, b, s in convs}
+    records = {}
+
+    def conv(name, t):
+        records[name] = np.asarray(t)
+        w, b, s = by_name[name]
+        return M._conv2d(t, jnp.asarray(w), s) + jnp.asarray(b)
+
+    h = jax.nn.relu(conv("stem", x))
+    n_blocks = len(M.STAGES) * M.BLOCKS_PER_STAGE
+    for li in range(n_blocks):
+        t = jax.nn.relu(conv(f"b{li}.conv1", h))
+        t = conv(f"b{li}.conv2", t)
+        sc = conv(f"b{li}.shortcut", h) if f"b{li}.shortcut" in by_name else h
+        h = jax.nn.relu(t + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    records["fc"] = np.asarray(h)
+    return records
+
+
+def _act_scale(t: np.ndarray, pct: float = 99.9) -> float:
+    hi = float(np.percentile(t, pct))
+    return max(hi, 1e-6) / M.ACT_QMAX
+
+
+def quantize(params, state, calib_x: np.ndarray) -> dict:
+    """Build the quantized graph from trained params + calibration images.
+
+    calib_x: uint8 [N,32,32,3]; ~256 images suffice.
+    """
+    convs = M.fold_bn(params, state)
+    fc_w = np.asarray(params["fc"]["w"]).T  # [10, 64]
+    fc_b = np.asarray(params["fc"]["b"])
+    x = jnp.asarray(calib_x, jnp.float32) / 255.0
+    records = _collect_conv_inputs(convs, fc_w.T, fc_b, x)
+
+    qconvs = []
+    for name, w, b, stride in convs:
+        kh, kw, cin, cout = w.shape
+        a_scale = _act_scale(records[name])
+        w_scale = max(float(np.abs(w).max()), 1e-8) / M.W_QMAX
+        # im2col layout [cout, kh*kw*cin] with (dy, dx, c) order, c fastest —
+        # matches model.im2col / rust sched::im2col.
+        w_mat = w.transpose(3, 0, 1, 2).reshape(cout, kh * kw * cin)
+        w_q = np.clip(np.floor(w_mat / w_scale + 0.5), -127, 127).astype(np.int8)
+        bias_q = np.floor(b / (a_scale * w_scale) + 0.5).astype(np.int32)
+        qconvs.append({
+            "name": name, "kh": kh, "kw": kw, "cin": cin, "cout": cout,
+            "stride": stride, "act_scale": a_scale, "w_scale": w_scale,
+            "w_q": w_q.astype(np.int32), "bias_q": bias_q,
+        })
+
+    fc_scale = _act_scale(records["fc"])
+    fc_wscale = max(float(np.abs(fc_w).max()), 1e-8) / M.W_QMAX
+    fc_wq = np.clip(np.floor(fc_w / fc_wscale + 0.5), -127, 127).astype(np.int8)
+    fc_bq = np.floor(fc_b / (fc_scale * fc_wscale) + 0.5).astype(np.int32)
+    return {
+        "convs": qconvs,
+        "fc": {
+            "name": "fc", "act_scale": fc_scale, "w_scale": fc_wscale,
+            "w_q": fc_wq.astype(np.int32), "bias_q": fc_bq,
+        },
+    }
+
+
+def qgraph_tensors(qgraph) -> dict:
+    """Flatten the qgraph into named tensors for weights.rten."""
+    out = {}
+    for c in qgraph["convs"]:
+        out[f"{c['name']}.w_q"] = c["w_q"].astype(np.int8)
+        out[f"{c['name']}.bias_q"] = c["bias_q"]
+        out[f"{c['name']}.scales"] = np.asarray(
+            [c["act_scale"], c["w_scale"]], np.float32
+        )
+    fc = qgraph["fc"]
+    out["fc.w_q"] = fc["w_q"].astype(np.int8)
+    out["fc.bias_q"] = fc["bias_q"]
+    out["fc.scales"] = np.asarray([fc["act_scale"], fc["w_scale"]], np.float32)
+    return out
+
+
+def graph_json(qgraph) -> str:
+    """Topology description consumed by rust/src/nn/graph.rs."""
+    n_blocks = len(M.STAGES) * M.BLOCKS_PER_STAGE
+    convs = {c["name"]: c for c in qgraph["convs"]}
+    ops = [{"op": "qconv", "name": "stem", "relu": True}]
+    for bi in range(n_blocks):
+        ops.append({"op": "qconv", "name": f"b{bi}.conv1", "relu": True})
+        ops.append({"op": "qconv", "name": f"b{bi}.conv2", "relu": False})
+        if f"b{bi}.shortcut" in convs:
+            ops.append({"op": "qconv_shortcut", "name": f"b{bi}.shortcut", "relu": False})
+        ops.append({"op": "residual_relu"})
+    ops.append({"op": "gap"})
+    ops.append({"op": "qfc", "name": "fc"})
+    meta = {
+        "arch": "resnet-mini",
+        "stages": list(M.STAGES),
+        "blocks_per_stage": M.BLOCKS_PER_STAGE,
+        "num_classes": M.NUM_CLASSES,
+        "ops": ops,
+        "convs": [
+            {k: c[k] for k in ("name", "kh", "kw", "cin", "cout", "stride",
+                               "act_scale", "w_scale")}
+            for c in qgraph["convs"]
+        ],
+        "fc": {"act_scale": qgraph["fc"]["act_scale"],
+               "w_scale": qgraph["fc"]["w_scale"],
+               "cin": int(qgraph["fc"]["w_q"].shape[1]),
+               "cout": int(qgraph["fc"]["w_q"].shape[0])},
+    }
+    return json.dumps(meta, indent=1)
+
+
+def load_qgraph(tensors: dict, graph: dict) -> dict:
+    """Rebuild a qgraph from weights.rten tensors + graph.json (tests)."""
+    qconvs = []
+    for c in graph["convs"]:
+        name = c["name"]
+        qconvs.append({
+            **c,
+            "act_scale": float(tensors[f"{name}.scales"][0]),
+            "w_scale": float(tensors[f"{name}.scales"][1]),
+            "w_q": tensors[f"{name}.w_q"].astype(np.int32),
+            "bias_q": tensors[f"{name}.bias_q"],
+        })
+    fc = graph["fc"]
+    return {
+        "convs": qconvs,
+        "fc": {
+            "name": "fc",
+            "act_scale": float(tensors["fc.scales"][0]),
+            "w_scale": float(tensors["fc.scales"][1]),
+            "w_q": tensors["fc.w_q"].astype(np.int32),
+            "bias_q": tensors["fc.bias_q"],
+        },
+    }

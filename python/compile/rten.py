@@ -1,0 +1,77 @@
+"""`.rten` tensor container — the Rust<->Python data interchange format.
+
+Little-endian layout (DESIGN.md §7):
+
+    magic   b"RTEN"
+    u32     version (1)
+    u32     ntensors
+    per tensor:
+        u32     name length, then utf-8 name bytes
+        u8      dtype: 0=f32, 1=i32, 2=i8, 3=u8, 4=i64
+        u32     ndim, then u32 * ndim dims (row-major)
+        raw     data bytes
+
+Kept deliberately trivial so the Rust reader (rust/src/io/rten.rs) needs no
+external dependencies; numpy `.npy`/`.npz` would have dragged zip + a
+header DSL across the boundary.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"RTEN"
+VERSION = 1
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.int8): 2,
+    np.dtype(np.uint8): 3,
+    np.dtype(np.int64): 4,
+}
+_RDTYPES = {v: k for k, v in _DTYPES.items()}
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            # NB: ascontiguousarray promotes 0-d to 1-d; preserve scalars.
+            arr = np.asarray(arr)
+            if arr.ndim > 0:
+                arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, n = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(n):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (dt,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = _RDTYPES[dt]
+            count = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(count * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+    return out

@@ -1,0 +1,118 @@
+"""Build-time training of ResNet-mini on SynthCIFAR (float, CPU JAX).
+
+Runs once from ``aot.py`` (skipped when artifacts/weights.rten exists).
+A hand-rolled Adam is used — optax is not in the offline image.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1 ** t)
+    vhat_scale = 1.0 / (1.0 - b2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def augment(key, x):
+    """Random horizontal flip + up-to-3px shift (pad & crop)."""
+    n = x.shape[0]
+    kf, ks = jax.random.split(key)
+    flip = jax.random.bernoulli(kf, 0.5, (n,))
+    x = jnp.where(flip[:, None, None, None], x[:, :, ::-1, :], x)
+    shifts = jax.random.randint(ks, (n, 2), -3, 4)
+    xp = jnp.pad(x, ((0, 0), (3, 3), (3, 3), (0, 0)))
+
+    def crop(img, dy, dx):
+        return jax.lax.dynamic_slice(img, (dy + 3, dx + 3, 0), (32, 32, 3))
+
+    return jax.vmap(crop)(xp, shifts[:, 0], shifts[:, 1])
+
+
+def train(
+    data: dict,
+    epochs: int = 18,
+    batch: int = 128,
+    lr: float = 2e-3,
+    seed: int = 0,
+    verbose: bool = True,
+):
+    """Returns (params, bn_state, history)."""
+    params, state = M.init_params(seed)
+    opt = adam_init(params)
+    x_all = jnp.asarray(data["train_x"], jnp.float32) / 255.0
+    y_all = jnp.asarray(data["train_y"], jnp.int32)
+    n = x_all.shape[0]
+    steps = n // batch
+
+    @jax.jit
+    def step(params, state, opt, key, xb, yb, lr_now):
+        xb = augment(key, xb)
+
+        def loss_fn(p):
+            logits, new_state = M.forward(p, state, xb, train=True)
+            return cross_entropy(logits, yb), new_state
+
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, grads, opt, lr_now)
+        return params, new_state, opt, loss
+
+    @jax.jit
+    def eval_batch(params, state, xb):
+        return jnp.argmax(M.forward_eval(params, state, xb), axis=1)
+
+    def accuracy(params, state, x, y, bs=256):
+        correct = 0
+        for s in range(0, len(x), bs):
+            pred = eval_batch(params, state, jnp.asarray(x[s:s + bs], jnp.float32) / 255.0)
+            correct += int(jnp.sum(pred == jnp.asarray(y[s:s + bs])))
+        return correct / len(x)
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed + 1)
+    history = []
+    t0 = time.time()
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        lr_now = lr * 0.5 * (1 + np.cos(np.pi * ep / epochs))
+        losses = []
+        for s in range(steps):
+            idx = perm[s * batch:(s + 1) * batch]
+            key, sub = jax.random.split(key)
+            params, state, opt, loss = step(
+                params, state, opt, sub, x_all[idx], y_all[idx], lr_now
+            )
+            losses.append(float(loss))
+        test_acc = accuracy(params, state, data["test_x"], data["test_y"])
+        history.append({"epoch": ep, "loss": float(np.mean(losses)), "test_acc": test_acc})
+        if verbose:
+            print(
+                f"[train] epoch {ep:2d} loss {np.mean(losses):.4f} "
+                f"test_acc {test_acc:.4f} lr {lr_now:.2e} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+    return params, state, history

@@ -1,0 +1,98 @@
+"""Artifact integrity — runs only after `make artifacts` has produced them.
+
+These close the L1/L2 loop: the HLO text artifacts the Rust runtime loads
+must (a) exist, (b) parse as HLO text with the expected entry signature,
+and (c) the spec.json constants must equal kernels/spec.py.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import rten
+from compile.kernels import spec as S
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "spec.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _read(name):
+    with open(os.path.join(ART, name)) as f:
+        return f.read()
+
+
+def test_spec_json_matches_module():
+    doc = json.loads(_read("spec.json"))
+    expect = S.as_dict()
+    for k, v in expect.items():
+        assert doc[k] == v, f"spec.json[{k}] = {doc[k]} != {v}"
+
+
+def test_prng_golden_vectors_present():
+    doc = json.loads(_read("spec.json"))
+    gv = doc["prng_golden"]
+    from compile.prng import SplitMix64
+    g = SplitMix64(int(gv["seed_hex"], 16))
+    assert [f"{g.next_u64():016x}" for _ in range(len(gv["u64_hex"]))] == gv["u64_hex"]
+
+
+def test_hlo_artifacts_exist_and_look_like_hlo():
+    for name, inputs in [
+        ("model.hlo.txt", 1),
+        ("se_tile.hlo.txt", 2),
+        ("hybrid_tile.hlo.txt", 4),
+        ("acim_tile.hlo.txt", 3),
+    ]:
+        text = _read(name)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_dataset_rten():
+    d = rten.read(os.path.join(ART, "dataset.rten"))
+    assert d["train_x"].dtype == np.uint8
+    assert d["train_x"].shape[1:] == (32, 32, 3)
+    assert d["test_x"].shape[0] == d["test_y"].shape[0]
+
+
+def test_weights_rten_and_graph():
+    w = rten.read(os.path.join(ART, "weights.rten"))
+    g = json.loads(_read("graph.json"))
+    for c in g["convs"]:
+        assert f"{c['name']}.w_q" in w
+        assert w[f"{c['name']}.w_q"].shape == (c["cout"], c["kh"] * c["kw"] * c["cin"])
+    assert "fc.w_q" in w
+
+
+def test_golden_logits_sane():
+    g = rten.read(os.path.join(ART, "golden.rten"))
+    n = int(g["golden_n"][0])
+    assert g["float_logits"].shape[1] == 10
+    assert g["dcim_logits"].shape == (n, 10)
+    labels = g["labels"]
+    acc = (g["float_logits"].argmax(1) == labels).mean()
+    assert acc == pytest.approx(float(g["float_acc"][0]), abs=1e-3)
+    assert acc > 0.6, f"float model underfit: acc={acc}"
+    # quantized DCIM should agree with float predictions on most images
+    agree = (g["dcim_logits"].argmax(1) == g["float_logits"][:n].argmax(1)).mean()
+    assert agree > 0.8, f"quantization broke the model: agree={agree}"
+
+
+def test_quant_forward_matches_golden_dcim():
+    """Recompute a few DCIM logits from weights.rten — pipeline closure."""
+    import jax.numpy as jnp
+    from compile import model as M, quantize
+    g = rten.read(os.path.join(ART, "golden.rten"))
+    d = rten.read(os.path.join(ART, "dataset.rten"))
+    w = rten.read(os.path.join(ART, "weights.rten"))
+    graph = json.loads(_read("graph.json"))
+    qgraph = quantize.load_qgraph(w, graph)
+    x = jnp.asarray(d["test_x"][:8], jnp.float32) / 255.0
+    logits, _ = M.quant_forward(qgraph, x, M.MacroGemm("dcim"))
+    np.testing.assert_allclose(np.asarray(logits), g["dcim_logits"][:8], rtol=1e-5)

@@ -1,0 +1,76 @@
+"""Bit-plane decomposition invariants (Eq. 1 of the paper)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitplane as bp
+from compile.kernels import ref, spec as S
+
+
+def rand_aw(rng, m=16, c=S.COLS, h=S.HMUS):
+    a = rng.integers(0, 256, (m, c), dtype=np.int32)
+    w = rng.integers(-128, 128, (h, c), dtype=np.int32)
+    return a, w
+
+
+def test_weight_plane_recompose_roundtrip():
+    w = np.arange(-128, 128, dtype=np.int32).reshape(16, 16)
+    planes = bp.weight_planes(jnp.asarray(w))
+    back = bp.recompose_weights(planes)
+    np.testing.assert_array_equal(np.asarray(back), w)
+
+
+def test_act_plane_recompose_roundtrip():
+    a = np.arange(0, 256, dtype=np.int32).reshape(16, 16)
+    planes = bp.act_planes(jnp.asarray(a))
+    back = bp.recompose_acts(planes)
+    np.testing.assert_array_equal(np.asarray(back), a)
+
+
+def test_planes_are_binary():
+    rng = np.random.default_rng(0)
+    a, w = rand_aw(rng)
+    for p in bp.act_planes(jnp.asarray(a)) + bp.weight_planes(jnp.asarray(w)):
+        arr = np.asarray(p)
+        assert set(np.unique(arr)).issubset({0, 1})
+
+
+def test_plane_sign():
+    assert bp.plane_sign(7) == -1
+    assert all(bp.plane_sign(i) == 1 for i in range(7))
+    assert bp.plane_sign(3, w_bits=4) == -1
+
+
+def test_eq1_decomposition_equals_exact_mac():
+    """sum_{i,j} s_i 2^(i+j) D[i,j] == integer dot product (paper Eq. 1)."""
+    rng = np.random.default_rng(1)
+    a, w = rand_aw(rng)
+    d = bp.order_partials(jnp.asarray(a), jnp.asarray(w))
+    acc = np.zeros((a.shape[0], w.shape[0]), np.int64)
+    for i in range(S.W_BITS):
+        for j in range(S.A_BITS):
+            acc += bp.plane_sign(i) * (np.asarray(d[i, j], np.int64) << (i + j))
+    np.testing.assert_array_equal(acc, np.asarray(ref.exact_mac(a, w), np.int64))
+
+
+def test_partial_range():
+    rng = np.random.default_rng(2)
+    a, w = rand_aw(rng)
+    d = np.asarray(bp.order_partials(jnp.asarray(a), jnp.asarray(w)))
+    assert d.min() >= 0 and d.max() <= S.COLS
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 8), st.integers(1, 8))
+def test_eq1_small_shapes_hypothesis(seed, m, c):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (m, c), dtype=np.int32)
+    w = rng.integers(-128, 128, (4, c), dtype=np.int32)
+    d = bp.order_partials(jnp.asarray(a), jnp.asarray(w))
+    acc = np.zeros((m, 4), np.int64)
+    for i in range(S.W_BITS):
+        for j in range(S.A_BITS):
+            acc += bp.plane_sign(i) * (np.asarray(d[i, j], np.int64) << (i + j))
+    np.testing.assert_array_equal(acc, np.asarray(ref.exact_mac(a, w), np.int64))

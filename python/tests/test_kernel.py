@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal: the AOT tile artifacts the Rust
+runtime executes are lowered from exactly these Pallas kernels, so
+pallas == ref (bit-exact) + rust-native == artifact (bit-exact, tested on
+the Rust side) closes the loop.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hybrid_mac as hm
+from compile.kernels import ref, spec as S
+
+
+def gen(seed, m=128, sigma=0.3, bmax=16):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, (m, S.COLS), dtype=np.int32)
+    w = rng.integers(-128, 128, (S.HMUS, S.COLS), dtype=np.int32)
+    b = rng.integers(0, bmax, (m,), dtype=np.int32)
+    noise = rng.normal(0, sigma, (m, S.HMUS, S.W_BITS)).astype(np.float32)
+    return a, w, b, noise
+
+
+def test_hybrid_pallas_matches_ref_bitexact():
+    a, w, b, noise = gen(0)
+    r = np.asarray(ref.hybrid_mac_ref(a, w, b, noise))
+    p = np.asarray(hm.hybrid_tile(a, w, b, noise))
+    np.testing.assert_array_equal(r, p)
+
+
+def test_se_pallas_matches_ref_bitexact():
+    a, w, _, _ = gen(1)
+    np.testing.assert_array_equal(
+        np.asarray(ref.saliency_ref(a, w)), np.asarray(hm.se_tile(a, w))
+    )
+
+
+def test_hybrid_b0_is_exact_dcim():
+    """B_D/A = 0 puts every order in the digital domain -> loss-free."""
+    a, w, _, noise = gen(2)
+    b = np.zeros(a.shape[0], np.int32)
+    out = np.asarray(ref.hybrid_mac_ref(a, w, b, noise))
+    np.testing.assert_array_equal(out, np.asarray(ref.exact_mac(a, w)))
+
+
+def test_hybrid_zero_noise_deterministic():
+    a, w, b, _ = gen(3)
+    z = np.zeros((a.shape[0], S.HMUS, S.W_BITS), np.float32)
+    o1 = np.asarray(ref.hybrid_mac_ref(a, w, b, z))
+    o2 = np.asarray(hm.hybrid_tile(a, w, b, z))
+    np.testing.assert_array_equal(o1, o2)
+
+
+def test_snr_monotonically_degrades_with_b():
+    """Fig 5b: pushing the boundary up trades SNR for efficiency."""
+    a, w, _, noise = gen(4, m=512)
+    ex = np.asarray(ref.exact_mac(a, w), np.float64)
+    prev = np.inf
+    for bb in (0, 5, 6, 7, 8, 9, 10):
+        out = np.asarray(
+            ref.hybrid_mac_ref(a, w, np.full(a.shape[0], bb, np.int32), noise),
+            np.float64,
+        )
+        err = ((out - ex) ** 2).mean()
+        snr = np.inf if err == 0 else 10 * np.log10((ex ** 2).mean() / err)
+        assert snr <= prev + 1e-9, f"SNR not monotone at B={bb}"
+        prev = snr
+    assert prev < 20, "B=10 should be clearly lossy"
+
+
+def test_saliency_tracks_magnitude():
+    """Large-|MAC| inputs must evaluate as more salient (the OSA premise)."""
+    rng = np.random.default_rng(5)
+    hi = rng.integers(160, 256, (64, S.COLS), dtype=np.int32)
+    lo = rng.integers(0, 24, (64, S.COLS), dtype=np.int32)
+    w = rng.integers(-128, 128, (S.HMUS, S.COLS), dtype=np.int32)
+    s_hi = np.asarray(ref.saliency_ref(hi, w)).mean()
+    s_lo = np.asarray(ref.saliency_ref(lo, w)).mean()
+    assert s_hi > 4 * s_lo
+
+
+def test_select_boundary_edges():
+    t = jnp.asarray([10, 20, 30, 40, 50])
+    cand = jnp.asarray(S.B_CANDIDATES)
+    s = jnp.asarray([0, 9, 10, 25, 50, 1000])
+    out = np.asarray(ref.select_boundary(s, t, cand))
+    np.testing.assert_array_equal(out, [10, 10, 9, 8, 5, 5])
+
+
+def test_acim_noisier_than_hybrid():
+    a, w, _, _ = gen(6, m=256)
+    rng = np.random.default_rng(7)
+    ex = np.asarray(ref.exact_mac(a, w), np.float64)
+    n_h = rng.normal(0, 0.3, (256, S.HMUS, S.W_BITS)).astype(np.float32)
+    n_a = rng.normal(0, 0.3, (256, S.HMUS, S.W_BITS, 2)).astype(np.float32)
+    hyb = np.asarray(ref.hybrid_mac_ref(a, w, np.full(256, 8, np.int32), n_h), np.float64)
+    aci = np.asarray(ref.acim_mac_ref(a, w, n_a), np.float64)
+    assert ((aci - ex) ** 2).mean() > ((hyb - ex) ** 2).mean()
+
+
+def test_adc_transfer_clamps():
+    amac = jnp.asarray([[0], [100000]], jnp.int32)
+    nbits = jnp.asarray([[4], [4]], jnp.int32)
+    noise = jnp.zeros((2, 1), jnp.float32)
+    out = np.asarray(ref.adc_transfer(amac, nbits, noise))
+    fs = S.COLS * 15 * S.ADC_FS_FRAC
+    assert out[0, 0] == 0  # mid-tread: zero input -> zero (no bias)
+    assert out[1, 0] == int(np.floor(7.0 / 8 * fs + 0.5))  # saturated at code 7
+
+
+def test_adc_transfer_unbiased_on_uniform_input():
+    """Mid-tread requirement: E[rec - amac] ≈ 0 over the linear range."""
+    rng = np.random.default_rng(0)
+    amac = rng.integers(0, int(S.COLS * 15 * S.ADC_FS_FRAC), (4096, 1)).astype(np.int32)
+    nbits = jnp.full((4096, 1), 4, jnp.int32)
+    noise = jnp.zeros((4096, 1), jnp.float32)
+    rec = np.asarray(ref.adc_transfer(jnp.asarray(amac), nbits, noise))
+    bias = (rec - amac).mean()
+    step = S.COLS * 15 * S.ADC_FS_FRAC / 8
+    assert abs(bias) < step * 0.15, f"ADC biased by {bias}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 2**32 - 1),
+    st.sampled_from([64, 128, 256]),
+    st.floats(0.0, 1.0),
+)
+def test_hybrid_pallas_vs_ref_hypothesis(seed, m, sigma):
+    """Hypothesis sweep of shapes/noise levels: pallas == ref always."""
+    a, w, b, noise = gen(seed, m=m, sigma=sigma)
+    r = np.asarray(ref.hybrid_mac_ref(a, w, b, noise))
+    p = np.asarray(hm.hybrid_tile(a, w, b, noise))
+    np.testing.assert_array_equal(r, p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([64, 192]))
+def test_se_pallas_vs_ref_hypothesis(seed, m):
+    a, w, _, _ = gen(seed, m=m)
+    np.testing.assert_array_equal(
+        np.asarray(ref.saliency_ref(a, w)), np.asarray(hm.se_tile(a, w))
+    )
+
+
+def test_hybrid_counts_partition():
+    """Fig 5a: digital+analog+discard == 64 for every boundary."""
+    for b in range(0, 16):
+        c = ref.hybrid_mac_counts(b)
+        assert c["digital"] + c["analog"] + c["discard"] == 64
+        assert 0 <= c["adc_groups"] <= 8
+    assert ref.hybrid_mac_counts(0) == {
+        "digital": 64, "analog": 0, "discard": 0, "adc_groups": 0
+    }

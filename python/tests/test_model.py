@@ -1,0 +1,143 @@
+"""L2 model: shapes, BN folding, quantized forward, MacroGemm modes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import dataset, model as M, quantize
+from compile.kernels import spec as S
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    """Untrained net + tiny data — enough for structural/numeric checks."""
+    data = dataset.build(train_n=64, test_n=16, seed=11)
+    params, state = M.init_params(seed=3)
+    qgraph = quantize.quantize(params, state, data["train_x"][:32])
+    x = jnp.asarray(data["test_x"][:8], jnp.float32) / 255.0
+    return data, params, state, qgraph, x
+
+
+def test_param_count_resnet_mini():
+    params, _ = M.init_params()
+    n = M.count_params(params)
+    assert 150_000 < n < 400_000, n
+
+
+def test_forward_shapes(tiny_setup):
+    _, params, state, _, x = tiny_setup
+    logits, new_state = M.forward(params, state, x, train=True)
+    assert logits.shape == (8, M.NUM_CLASSES)
+    logits_e = M.forward_eval(params, state, x)
+    assert logits_e.shape == (8, M.NUM_CLASSES)
+
+
+def test_bn_fold_matches_eval(tiny_setup):
+    _, params, state, _, x = tiny_setup
+    convs = M.fold_bn(params, state)
+    l1 = M.forward_eval(params, state, x)
+    l2 = M.folded_forward(convs, np.asarray(params["fc"]["w"]),
+                          np.asarray(params["fc"]["b"]), x)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)
+
+
+def test_im2col_matches_conv(tiny_setup):
+    _, params, state, _, x = tiny_setup
+    w = np.asarray(params["stem"]["w"])  # [3,3,3,16]
+    direct = M._conv2d(x, jnp.asarray(w), 1)
+    patches = M.im2col(x, 3, 3, 1, 1)
+    w_mat = w.transpose(3, 0, 1, 2).reshape(16, -1)
+    via = jnp.einsum("nhwk,ck->nhwc", patches, jnp.asarray(w_mat))
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(via), atol=1e-4)
+
+
+def test_im2col_stride2():
+    x = jnp.arange(2 * 8 * 8 * 4, dtype=jnp.float32).reshape(2, 8, 8, 4)
+    p = M.im2col(x, 3, 3, 2, 1)
+    assert p.shape == (2, 4, 4, 36)
+
+
+def test_act_quantize_clamps_and_relu():
+    x = jnp.asarray([-1.0, 0.0, 0.5, 300.0])
+    q = np.asarray(M.act_quantize(x, 1.0))
+    np.testing.assert_array_equal(q, [0, 0, 1, 255])
+
+
+def test_quant_round_half_up():
+    x = jnp.asarray([-1.5, -0.5, 0.5, 1.5, 2.49])
+    np.testing.assert_array_equal(np.asarray(M.quant_round(x)), [-1, 0, 1, 2, 2])
+
+
+def test_dcim_forward_runs(tiny_setup):
+    _, _, _, qgraph, x = tiny_setup
+    gemm = M.MacroGemm("dcim")
+    logits, _ = M.quant_forward(qgraph, x, gemm)
+    assert logits.shape == (8, M.NUM_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert gemm.stats["macro_ops"] > 0
+
+
+def test_hcim_close_to_dcim_at_b5(tiny_setup):
+    """B=5 keeps high orders digital: logits should track DCIM closely."""
+    _, _, _, qgraph, x = tiny_setup
+    l_d, _ = M.quant_forward(qgraph, x, M.MacroGemm("dcim"))
+    l_h, _ = M.quant_forward(qgraph, x, M.MacroGemm("hcim", fixed_b=5))
+    d, h = np.asarray(l_d), np.asarray(l_h)
+    denom = np.abs(d).mean() + 1e-9
+    assert np.abs(d - h).mean() / denom < 0.35
+
+
+def test_hcim_error_grows_with_b(tiny_setup):
+    _, _, _, qgraph, x = tiny_setup
+    l_d = np.asarray(M.quant_forward(qgraph, x, M.MacroGemm("dcim"))[0])
+    errs = []
+    for b in (5, 8, 10):
+        l_h = np.asarray(M.quant_forward(qgraph, x, M.MacroGemm("hcim", fixed_b=b))[0])
+        errs.append(np.abs(l_d - l_h).mean())
+    assert errs[0] < errs[-1]
+
+
+def test_osa_forward_and_bda_maps(tiny_setup):
+    _, _, _, qgraph, x = tiny_setup
+    thresholds = [40, 80, 160, 320, 640]
+    gemm = M.MacroGemm("osa", thresholds=thresholds)
+    logits, maps = M.quant_forward(qgraph, x, gemm, collect_bda=True)
+    assert logits.shape == (8, M.NUM_CLASSES)
+    assert len(maps) == len(qgraph["convs"])
+    name, m0 = maps[0]
+    assert name == "stem" and m0.shape == (8, 32, 32)
+    assert set(np.unique(m0)).issubset(set(S.B_CANDIDATES))
+    assert gemm.stats["b_hist"].sum() > 0
+
+
+def test_acim_forward_runs(tiny_setup):
+    _, _, _, qgraph, x = tiny_setup
+    logits, _ = M.quant_forward(qgraph, x, M.MacroGemm("acim"))
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_macrogemm_pads_arbitrary_k():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, (16, 200), dtype=np.int32)  # K=200 -> 2 tiles
+    w = rng.integers(-128, 128, (12, 200), dtype=np.int32)  # N=12 -> 2 tiles
+    out = M.MacroGemm("dcim")(jnp.asarray(a), jnp.asarray(w), 0)
+    expect = a.astype(np.int64) @ w.T.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(out, np.int64), expect)
+
+
+def test_macrogemm_hcim_zero_noise_matches_tiled_ref():
+    from compile.kernels import ref
+    sp0 = S.MacroSpec(sigma_code=0.0)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 256, (8, S.COLS * 2), dtype=np.int32)
+    w = rng.integers(-128, 128, (S.HMUS, S.COLS * 2), dtype=np.int32)
+    gemm = M.MacroGemm("hcim", fixed_b=8, sp=sp0)
+    out = np.asarray(gemm(jnp.asarray(a), jnp.asarray(w), 0))
+    z = np.zeros((8, S.HMUS, S.W_BITS), np.float32)
+    b = np.full(8, 8, np.int32)
+    expect = np.zeros((8, S.HMUS), np.int32)
+    for ki in range(2):
+        expect += np.asarray(ref.hybrid_mac_ref(
+            a[:, ki * S.COLS:(ki + 1) * S.COLS],
+            w[:, ki * S.COLS:(ki + 1) * S.COLS], b, z, sp0))
+    np.testing.assert_array_equal(out, expect)

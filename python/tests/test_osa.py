@@ -1,0 +1,78 @@
+"""OSA scheme invariants: saliency normalization, boundary selection,
+and the saliency/magnitude correlation that the whole paper rests on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, spec as S
+
+
+def test_normalize_saliency_identity_at_full_k():
+    s = np.asarray([0, 10, 100], np.int64)
+    out = S.normalize_saliency(s, S.COLS)
+    np.testing.assert_array_equal(out, s)
+
+
+def test_normalize_saliency_scales_small_k():
+    # stem layer: K=27 -> scale by 144/27
+    out = S.normalize_saliency(np.asarray([27]), 27)
+    assert out[0] == 144
+    # multi-tile layer: K=576 -> scale by 1/4
+    out = S.normalize_saliency(np.asarray([400]), 576)
+    assert out[0] == 100
+
+
+def test_normalize_saliency_zero_k_safe():
+    assert S.normalize_saliency(np.asarray([5]), 0)[0] == 5 * S.COLS  # max(k,1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 2000))
+def test_normalize_monotone_in_s(s, k):
+    a = int(S.normalize_saliency(np.asarray([s]), k)[0])
+    b = int(S.normalize_saliency(np.asarray([s + 1]), k)[0])
+    assert b >= a
+
+
+def test_boundary_count_matches_candidates():
+    t = jnp.asarray([1, 2, 3, 4, 5])
+    cand = jnp.asarray(S.B_CANDIDATES)
+    s = jnp.arange(0, 8)
+    out = np.asarray(ref.select_boundary(s, t, cand))
+    # s=0 -> coarsest; s>=5 -> finest
+    assert out[0] == S.B_CANDIDATES[0]
+    assert out[-1] == S.B_CANDIDATES[-1]
+    assert all(b in S.B_CANDIDATES for b in out)
+
+
+def test_saliency_separates_object_from_background():
+    """End-to-end premise: a bright-object tile must out-score a muted
+    background tile through the SE-mode pipeline."""
+    rng = np.random.default_rng(3)
+    w = rng.integers(-128, 128, (S.HMUS, S.COLS), dtype=np.int32)
+    obj = rng.integers(150, 256, (8, S.COLS), dtype=np.int32)
+    bg = rng.integers(20, 120, (8, S.COLS), dtype=np.int32)
+    s_obj = np.asarray(ref.saliency_ref(obj, w)).mean()
+    s_bg = np.asarray(ref.saliency_ref(bg, w)).mean()
+    assert s_obj > 2 * s_bg, (s_obj, s_bg)
+
+
+def test_se_orders_cover_only_top_s():
+    """SE mode uses exactly the s=2 highest orders (k in {13, 14})."""
+    pairs = sorted(
+        (i, j)
+        for i in range(S.W_BITS)
+        for j in range(S.A_BITS)
+        if i + j >= S.SE_K_MIN
+    )
+    assert pairs == [(6, 7), (7, 6), (7, 7)]
+
+
+def test_saliency_zero_for_low_activations():
+    """Activations without high-order bits produce S == 0."""
+    rng = np.random.default_rng(4)
+    w = rng.integers(-128, 128, (S.HMUS, S.COLS), dtype=np.int32)
+    a = rng.integers(0, 32, (4, S.COLS), dtype=np.int32)  # bits 0-4 only
+    np.testing.assert_array_equal(np.asarray(ref.saliency_ref(a, w)), 0)

@@ -1,0 +1,80 @@
+"""Quantizer: scales, layouts, graph.json schema, rten round-trip."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import dataset, model as M, quantize, rten
+
+
+@pytest.fixture(scope="module")
+def qsetup():
+    data = dataset.build(train_n=64, test_n=8, seed=21)
+    params, state = M.init_params(seed=5)
+    qgraph = quantize.quantize(params, state, data["train_x"][:32])
+    return params, state, qgraph
+
+
+def test_weight_range_int8(qsetup):
+    _, _, qgraph = qsetup
+    for c in qgraph["convs"]:
+        assert c["w_q"].min() >= -127 and c["w_q"].max() <= 127
+    assert np.abs(qgraph["fc"]["w_q"]).max() <= 127
+
+
+def test_scales_positive(qsetup):
+    _, _, qgraph = qsetup
+    for c in qgraph["convs"]:
+        assert c["act_scale"] > 0 and c["w_scale"] > 0
+
+
+def test_weight_dequant_close(qsetup):
+    params, state, qgraph = qsetup
+    convs = M.fold_bn(params, state)
+    by_name = {n: w for n, w, _, _ in convs}
+    for c in qgraph["convs"]:
+        w = by_name[c["name"]]
+        w_mat = w.transpose(3, 0, 1, 2).reshape(c["cout"], -1)
+        deq = c["w_q"].astype(np.float32) * c["w_scale"]
+        assert np.abs(deq - w_mat).max() <= c["w_scale"] * 0.5 + 1e-7
+
+
+def test_conv_count_matches_arch(qsetup):
+    _, _, qgraph = qsetup
+    # stem + 6 blocks x 2 convs + 2 projection shortcuts = 15
+    assert len(qgraph["convs"]) == 15
+
+
+def test_graph_json_schema(qsetup):
+    _, _, qgraph = qsetup
+    g = json.loads(quantize.graph_json(qgraph))
+    assert g["arch"] == "resnet-mini"
+    assert g["num_classes"] == 10
+    ops = [o["op"] for o in g["ops"]]
+    assert ops[0] == "qconv" and ops[-2:] == ["gap", "qfc"]
+    assert ops.count("residual_relu") == 6
+    assert len(g["convs"]) == 15
+
+
+def test_rten_roundtrip_and_reload(qsetup, tmp_path):
+    _, _, qgraph = qsetup
+    p = str(tmp_path / "w.rten")
+    rten.write(p, quantize.qgraph_tensors(qgraph))
+    tensors = rten.read(p)
+    g = json.loads(quantize.graph_json(qgraph))
+    qg2 = quantize.load_qgraph(tensors, g)
+    for c1, c2 in zip(qgraph["convs"], qg2["convs"]):
+        np.testing.assert_array_equal(c1["w_q"], c2["w_q"])
+        np.testing.assert_array_equal(c1["bias_q"], c2["bias_q"])
+        # scales are stored f32 in the container
+        assert abs(c1["act_scale"] - c2["act_scale"]) < 1e-6 * c1["act_scale"]
+
+
+def test_bias_q_in_accumulator_domain(qsetup):
+    params, state, qgraph = qsetup
+    convs = M.fold_bn(params, state)
+    by_name = {n: b for n, _, b, _ in convs}
+    c = qgraph["convs"][0]
+    expect = np.floor(by_name[c["name"]] / (c["act_scale"] * c["w_scale"]) + 0.5)
+    np.testing.assert_array_equal(c["bias_q"], expect.astype(np.int32))

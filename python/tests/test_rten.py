@@ -1,0 +1,50 @@
+"""`.rten` container round-trips (the Rust reader is tested in io/rten.rs)."""
+
+import numpy as np
+import pytest
+
+from compile import rten
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    p = str(tmp_path / "t.rten")
+    tensors = {
+        "f": np.linspace(-1, 1, 24, dtype=np.float32).reshape(2, 3, 4),
+        "i": np.arange(-5, 7, dtype=np.int32).reshape(3, 4),
+        "b": np.arange(-8, 8, dtype=np.int8).reshape(4, 4),
+        "u": np.arange(0, 16, dtype=np.uint8).reshape(2, 8),
+        "l": np.asarray([2**40, -3], dtype=np.int64),
+    }
+    rten.write(p, tensors)
+    back = rten.read(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_scalar_and_empty_dims(tmp_path):
+    p = str(tmp_path / "s.rten")
+    rten.write(p, {"s": np.float32(3.5).reshape(()), "v": np.zeros((0,), np.int32)})
+    back = rten.read(p)
+    assert back["s"].shape == ()
+    assert float(back["s"]) == 3.5
+    assert back["v"].shape == (0,)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.rten"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="bad magic"):
+        rten.read(str(p))
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        rten.write(str(tmp_path / "x.rten"), {"c": np.zeros(2, np.complex64)})
+
+
+def test_name_unicode(tmp_path):
+    p = str(tmp_path / "u.rten")
+    rten.write(p, {"层.w_q": np.ones((2, 2), np.int8)})
+    assert "层.w_q" in rten.read(p)

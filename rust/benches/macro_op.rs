@@ -1,0 +1,53 @@
+//! Macro-op microbenchmarks (cargo bench --bench macro_op).
+//!
+//! Covers the native hot path at every operating point of Fig 5a/5b:
+//! exact (DCIM), hybrid per boundary, ACIM, saliency evaluation, bit
+//! packing and noise generation.  Rows feed EXPERIMENTS.md §Perf.
+
+use osa_hcim::benchkit::Bench;
+use osa_hcim::macrosim::MacroUnit;
+use osa_hcim::spec::MacroSpec;
+use osa_hcim::util::prng::SplitMix64;
+use std::time::Duration;
+
+fn main() {
+    let sp = MacroSpec::default();
+    let mut rng = SplitMix64::new(1);
+    let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| rng.next_range_i32(-128, 128)).collect();
+    let unit = MacroUnit::new(&w, sp).unwrap();
+    let a: Vec<i32> = (0..sp.cols).map(|_| rng.next_range_i32(0, 256)).collect();
+    let packed = unit.pack_acts(&a);
+    let noise: Vec<f32> = rng.normals_f32(sp.hmus * sp.w_bits, sp.sigma_code);
+    let macs = (sp.hmus * sp.cols) as f64;
+
+    println!("# macro_op — single 64x144 macro operation (8 HMUs x 144 cols)");
+    Bench::new("pack_acts").target(Duration::from_secs(1)).items(macs).run(|| unit.pack_acts(&a));
+    Bench::new("exact(DCIM ground truth)")
+        .target(Duration::from_secs(1))
+        .items(macs)
+        .run(|| unit.exact(&a));
+    Bench::new("saliency_eval(SE mode)")
+        .target(Duration::from_secs(1))
+        .items(macs)
+        .run(|| unit.saliency(&packed));
+    for b in [0, 5, 6, 7, 8, 9, 10] {
+        Bench::new(&format!("compute_hybrid(B={b})"))
+            .target(Duration::from_secs(1))
+            .items(macs)
+            .run(|| unit.compute_hybrid(&packed, b, &noise));
+    }
+    let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
+    let acim_noise: Vec<f32> = {
+        let mut g = SplitMix64::new(2);
+        g.normals_f32(sp.hmus * sp.w_bits * n_slices, sp.sigma_code)
+    };
+    Bench::new("compute_acim(full analog)")
+        .target(Duration::from_secs(1))
+        .items(macs)
+        .run(|| unit.compute_acim(&packed, &acim_noise));
+    let mut g = SplitMix64::new(3);
+    Bench::new("noise_gen(64 normals)")
+        .target(Duration::from_secs(1))
+        .items(64.0)
+        .run(|| g.normals_f32(64, 0.3));
+}

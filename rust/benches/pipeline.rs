@@ -1,0 +1,73 @@
+//! End-to-end pipeline benchmarks (cargo bench --bench pipeline).
+//!
+//! One row per paper experiment surface: the tiled GEMM per mode
+//! (Fig 5 workloads), full-network single-image inference per mode
+//! (Fig 9 workloads) and the coordinator serve loop (throughput /
+//! latency claims).  Requires `make artifacts`.
+
+use osa_hcim::benchkit::Bench;
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::coordinator::Server;
+use osa_hcim::nn::data::Dataset;
+use osa_hcim::nn::{Executor, QGraph};
+use osa_hcim::sched::{GemmEngine, MacroGemm};
+use osa_hcim::util::prng::SplitMix64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    osa_hcim::util::logging::init();
+    let cfg = SystemConfig::default();
+    if cfg.spec.validate_against_artifacts(&cfg.artifacts_dir).is_err() {
+        eprintln!("pipeline bench needs artifacts — run `make artifacts` first");
+        return;
+    }
+    let ds = Dataset::load(&cfg.artifacts_dir).unwrap();
+    let graph = QGraph::load(&cfg.artifacts_dir).unwrap();
+
+    // --- tiled GEMM per mode (stage-2 layer shape: K=288, N=32) ---------
+    let (m, k, n) = (256usize, 288usize, 32usize);
+    let mut rng = SplitMix64::new(5);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.next_range_i32(0, 256)).collect();
+    let w: Vec<i32> = (0..n * k).map(|_| rng.next_range_i32(-128, 128)).collect();
+    println!("# pipeline — tiled GEMM [{m}x{k}] x [{n}x{k}] through the macro datapath");
+    for mode in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa, CimMode::Acim] {
+        let mut gemm = MacroGemm::with_mode(mode);
+        Bench::new(&format!("gemm/{}", mode.name()))
+            .target(Duration::from_secs(3))
+            .items((m * n * k) as f64)
+            .run(|| gemm.gemm(&a, m, k, &w, n, 0).unwrap());
+    }
+
+    // --- full-network inference per mode --------------------------------
+    println!("\n# pipeline — ResNet-mini single-image inference (32x32x3)");
+    let (img, _) = ds.test_batch(0, 1);
+    for mode in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa] {
+        let gemm = MacroGemm::with_mode(mode);
+        Bench::new(&format!("infer/{}", mode.name()))
+            .target(Duration::from_secs(5))
+            .max_iters(200)
+            .items(1.0)
+            .run(|| {
+                let mut exec = Executor::new(&graph, gemm.clone());
+                exec.forward(img, 1).unwrap()
+            });
+    }
+
+    // --- coordinator serve loop ------------------------------------------
+    println!("\n# pipeline — coordinator round trip (submit -> batch -> respond)");
+    let graph = Arc::new(graph);
+    let server = Server::start(&cfg, graph).unwrap();
+    let (img, _) = ds.test_batch(0, 1);
+    let img = img.to_vec();
+    Bench::new("serve/round_trip")
+        .target(Duration::from_secs(5))
+        .max_iters(500)
+        .items(1.0)
+        .run(|| {
+            let rx = server.submit(img.clone()).unwrap();
+            rx.recv().unwrap()
+        });
+    let metrics = server.shutdown();
+    println!("{}", metrics.report(&cfg.spec));
+}

@@ -1,0 +1,169 @@
+//! Analog-domain models: variable-precision DAC slice, charge-sharing
+//! accumulation, and the 3-bit SAR ADC transfer function.
+//!
+//! [`adc_transfer`] mirrors `kernels/ref.py::adc_transfer` **operation by
+//! operation in f32** so the native simulator and the PJRT artifact agree
+//! bit-exactly on the same noise buffer (DESIGN.md §3).
+
+use crate::spec::MacroSpec;
+
+/// Full scale of the charge-share rail for an `nbits`-wide DAC slice.
+#[inline]
+pub fn full_scale(nbits: i32, sp: &MacroSpec) -> f32 {
+    let span = ((1i32 << nbits) - 1) as f32;
+    sp.cols as f32 * span * sp.adc_fs_frac
+}
+
+/// 3-bit SAR ADC: charge-share voltage -> code -> integer reconstruction.
+///
+/// * `amac`  — non-negative analog accumulation (sum over columns of
+///   `w_bit * slice_value`)
+/// * `nbits` — DAC precision of the slice (1..=ANALOG_BAND)
+/// * `noise` — input-referred noise in code units (explicit, from the
+///   shared PRNG; never sampled here)
+#[inline]
+pub fn adc_transfer(amac: i32, nbits: i32, noise: f32, sp: &MacroSpec) -> i32 {
+    let levels = sp.adc_levels() as f32;
+    let fs = full_scale(nbits, sp);
+    let scale = levels / fs;
+    let v = amac as f32 * scale;
+    // mid-tread (unbiased) quantizer: code = round(v), rec = code * step.
+    // A midpoint (mid-riser) reconstruction would add a systematic
+    // +step/2 offset to every conversion — amplified by 2^(i+j_lo) and
+    // accumulated over 8 groups that wrecks the BN-folded biases of the
+    // network (measured: ResNet-mini drops to ~50% at B=8).
+    let code = (v + 0.5f32 + noise).floor().clamp(0.0, levels - 1.0);
+    (code * (fs / levels) + 0.5f32).floor() as i32
+}
+
+/// The DAC slice value of an activation: bits [j_lo, j_hi] as an integer
+/// (what the switch-matrix DAC drives onto the GBL).
+#[inline]
+pub fn dac_slice(a: i32, j_lo: i32, j_hi: i32) -> i32 {
+    debug_assert!(j_lo <= j_hi);
+    (a >> j_lo) & ((1 << (j_hi - j_lo + 1)) - 1)
+}
+
+/// Analog activation-plane range for weight plane `i` at boundary `b`
+/// (`None` when the group is empty).  Orders `b-band <= k < b`.
+#[inline]
+pub fn analog_group_bounds(i: i32, b: i32, sp: &MacroSpec) -> Option<(i32, i32)> {
+    let j_lo = (b - sp.analog_band - i).max(0);
+    let j_hi = (b - 1 - i).min(sp.a_bits as i32 - 1);
+    (j_hi >= j_lo).then_some((j_lo, j_hi))
+}
+
+/// Ideal (noise-free, infinite-precision) analog accumulation of a slice
+/// — used by SNR analyses to separate quantization from thermal noise.
+pub fn ideal_amac(a: &[i32], w_plane_bits: impl Fn(usize) -> i32, j_lo: i32, j_hi: i32) -> i32 {
+    a.iter()
+        .enumerate()
+        .map(|(c, &av)| w_plane_bits(c) * dac_slice(av, j_lo, j_hi))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::check;
+
+    fn sp() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    #[test]
+    fn full_scale_value() {
+        // 144 * 15 * 0.25 = 540 for a 4-bit slice
+        assert_eq!(full_scale(4, &sp()), 540.0);
+        assert_eq!(full_scale(1, &sp()), 36.0);
+    }
+
+    #[test]
+    fn adc_zero_input_is_zero() {
+        // mid-tread: no systematic offset at zero input
+        assert_eq!(adc_transfer(0, 4, 0.0, &sp()), 0);
+        assert_eq!(adc_transfer(0, 1, 0.0, &sp()), 0);
+    }
+
+    #[test]
+    fn adc_saturates() {
+        let hi = adc_transfer(1_000_000, 4, 0.0, &sp());
+        let fs = full_scale(4, &sp());
+        assert_eq!(hi, ((7.0f32 / 8.0) * fs + 0.5).floor() as i32);
+        // negative noise cannot push below code 0
+        let lo = adc_transfer(0, 4, -100.0, &sp());
+        assert_eq!(lo, 0);
+    }
+
+    #[test]
+    fn adc_unbiased_over_linear_range() {
+        let s = sp();
+        let fs = full_scale(4, &s) as i32;
+        let mut bias = 0.0f64;
+        let mut count = 0usize;
+        for amac in 0..fs {
+            bias += (adc_transfer(amac, 4, 0.0, &s) - amac) as f64;
+            count += 1;
+        }
+        let step = full_scale(4, &s) as f64 / 8.0;
+        assert!((bias / count as f64).abs() < step * 0.15, "bias {}", bias / count as f64);
+    }
+
+    #[test]
+    fn adc_monotone_in_input() {
+        let s = sp();
+        let mut prev = i32::MIN;
+        for amac in (0..=2160).step_by(20) {
+            let r = adc_transfer(amac, 4, 0.0, &s);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn adc_noise_shifts_codes() {
+        let s = sp();
+        let mid = 270; // half of 4-bit FS
+        let base = adc_transfer(mid, 4, 0.0, &s);
+        let up = adc_transfer(mid, 4, 1.0, &s);
+        assert!(up > base);
+    }
+
+    #[test]
+    fn dac_slice_extraction() {
+        assert_eq!(dac_slice(0b1011_0110, 2, 5), 0b1101);
+        assert_eq!(dac_slice(255, 4, 7), 15);
+        assert_eq!(dac_slice(255, 0, 0), 1);
+    }
+
+    #[test]
+    fn group_bounds_match_python_semantics() {
+        let s = sp();
+        // B=8, i=0 -> j in [4, 7]
+        assert_eq!(analog_group_bounds(0, 8, &s), Some((4, 7)));
+        // B=8, i=7 -> j in [0, 0]
+        assert_eq!(analog_group_bounds(7, 8, &s), Some((0, 0)));
+        // B=0 -> no analog anywhere
+        for i in 0..8 {
+            assert_eq!(analog_group_bounds(i, 0, &s), None);
+        }
+        // B=5, i=7 -> j_hi = -3 < 0: empty
+        assert_eq!(analog_group_bounds(7, 5, &s), None);
+    }
+
+    #[test]
+    fn group_width_at_most_band() {
+        let s = sp();
+        check("analog group width <= band", 200, |g| {
+            let i = g.i32_in(0, 8);
+            let b = g.i32_in(0, 16);
+            if let Some((lo, hi)) = analog_group_bounds(i, b, &s) {
+                assert!(hi - lo + 1 <= s.analog_band);
+                assert!(lo >= 0 && hi < s.a_bits as i32);
+                // all orders in the group are inside [b-band, b)
+                assert!(i + lo >= b - s.analog_band);
+                assert!(i + hi < b);
+            }
+        });
+    }
+}

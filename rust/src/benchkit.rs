@@ -1,0 +1,165 @@
+//! Benchmark harness substrate (criterion is not in the offline mirror).
+//!
+//! Warms up, runs timed iterations until a target time or iteration cap,
+//! reports mean / p50 / p95 / stddev, and can emit the rows in a stable
+//! machine-greppable format used by `rust/benches/*` and EXPERIMENTS.md.
+
+use crate::util::{mean, percentile, stddev};
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchStats {
+    /// items/second (if a denominator was registered).
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>8.2} Mitems/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} Kitems/s", t / 1e3),
+            Some(t) => format!("  {t:>8.2} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "bench {:<40} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  sd {:>10}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.stddev_ns),
+            tp
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Builder-style bench runner.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    target: Duration,
+    max_iters: usize,
+    items_per_iter: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            target: Duration::from_secs(2),
+            max_iters: 1_000_000,
+            items_per_iter: None,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn target(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Register a throughput denominator (e.g. MACs per iteration).
+    pub fn items(mut self, n: f64) -> Self {
+        self.items_per_iter = Some(n);
+        self
+    }
+
+    /// Run the closure repeatedly and collect statistics.  The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchStats {
+        // warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // timed
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.target && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = BenchStats {
+            name: self.name,
+            iters: samples_ns.len(),
+            mean_ns: mean(&samples_ns),
+            p50_ns: percentile(&samples_ns, 50.0),
+            p95_ns: percentile(&samples_ns, 95.0),
+            stddev_ns: stddev(&samples_ns),
+            items_per_iter: self.items_per_iter,
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let stats = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .target(Duration::from_millis(20))
+            .items(1.0)
+            .run(|| 1 + 1);
+        assert!(stats.iters > 10);
+        assert!(stats.mean_ns >= 0.0);
+        assert!(stats.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn format_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e3).ends_with("us"));
+        assert!(fmt_ns(5.0e6).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let stats = Bench::new("capped")
+            .warmup(Duration::from_millis(1))
+            .target(Duration::from_secs(10))
+            .max_iters(5)
+            .run(|| ());
+        assert_eq!(stats.iters, 5);
+    }
+}

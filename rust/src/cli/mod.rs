@@ -1,0 +1,250 @@
+//! Argument-parsing substrate (clap is not in the offline mirror).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with generated `--help` text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Opt {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, takes_value: false, default: None }
+    }
+
+    pub fn value(name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        Self { name, help, takes_value: true, default }
+    }
+}
+
+/// Parsed argument bag.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_i32(&self, name: &str, default: i32) -> Result<i32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+/// One subcommand: name, blurb, options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+/// Top-level parser over a set of subcommands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    /// Parse argv (without the binary name). Returns (subcommand, args)
+    /// or prints help and returns None.
+    pub fn parse(&self, argv: &[String]) -> Result<Option<(String, Args)>> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            println!("{}", self.help());
+            return Ok(None);
+        }
+        let sub = &argv[0];
+        let cmd = match self.commands.iter().find(|c| c.name == sub) {
+            Some(c) => c,
+            None => bail!("unknown subcommand '{sub}' (try --help)"),
+        };
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            println!("{}", self.command_help(cmd));
+            return Ok(None);
+        }
+        let args = parse_args(&argv[1..], &cmd.opts)?;
+        Ok(Some((sub.clone(), args)))
+    }
+
+    pub fn help(&self) -> String {
+        let mut out = format!("{}\n\nUSAGE: {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.about, self.bin);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun a command with --help for its options.");
+        out
+    }
+
+    fn command_help(&self, cmd: &Command) -> String {
+        let mut out = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let head = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            out.push_str(&format!("  {:<22} {}{}\n", head, o.help, def));
+        }
+        out
+    }
+}
+
+/// Parse a flat option list against a declaration set.
+pub fn parse_args(argv: &[String], opts: &[Opt]) -> Result<Args> {
+    let mut args = Args::default();
+    for o in opts {
+        if let Some(d) = o.default {
+            args.values.insert(o.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let decl = opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name}"))?;
+            if decl.takes_value {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                            .clone()
+                    }
+                };
+                args.values.insert(name.to_string(), value);
+            } else {
+                if inline.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+                args.flags.push(name.to_string());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decls() -> Vec<Opt> {
+        vec![
+            Opt::flag("verbose", "more output"),
+            Opt::value("batch", "batch size", Some("64")),
+            Opt::value("mode", "run mode", None),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse_args(&sv(&[]), &decls()).unwrap();
+        assert_eq!(a.get("batch"), Some("64"));
+        let a = parse_args(&sv(&["--batch", "128"]), &decls()).unwrap();
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 128);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = parse_args(&sv(&["--batch=32", "--verbose", "pos1"]), &decls()).unwrap();
+        assert_eq!(a.get("batch"), Some("32"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse_args(&sv(&["--nope"]), &decls()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse_args(&sv(&["--mode"]), &decls()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse_args(&sv(&["--verbose=1"]), &decls()).is_err());
+    }
+
+    #[test]
+    fn subcommand_dispatch() {
+        let cli = Cli {
+            bin: "osa-hcim",
+            about: "test",
+            commands: vec![Command { name: "run", about: "run it", opts: decls() }],
+        };
+        let parsed = cli.parse(&sv(&["run", "--batch", "16"])).unwrap().unwrap();
+        assert_eq!(parsed.0, "run");
+        assert_eq!(parsed.1.get("batch"), Some("16"));
+        assert!(cli.parse(&sv(&["bogus"])).is_err());
+        assert!(cli.parse(&sv(&["--help"])).unwrap().is_none());
+    }
+
+    #[test]
+    fn numeric_parsers() {
+        let a = parse_args(&sv(&["--batch", "7"]), &decls()).unwrap();
+        assert_eq!(a.get_i32("batch", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("batch", 0.0).unwrap(), 7.0);
+        assert_eq!(a.get_u64("missing-but-defaulted", 9).unwrap(), 9);
+    }
+}

@@ -1,0 +1,339 @@
+//! Typed configuration for the whole stack + a TOML-subset parser
+//! (serde/toml are not in the offline mirror).
+//!
+//! The accepted grammar covers what `configs/*.toml` uses: `[section]`
+//! headers, `key = value` with string/int/float/bool/array-of-number
+//! values, and `#` comments.
+
+use crate::spec::MacroSpec;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Flat parsed TOML: `section.key -> raw value`.
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<f64>),
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            values.insert(full, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(TomlValue::Float(x)) => Ok(*x),
+            Some(TomlValue::Int(x)) => Ok(*x as f64),
+            Some(other) => bail!("{key}: expected number, found {other:?}"),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(TomlValue::Int(x)) if *x >= 0 => Ok(*x as usize),
+            Some(other) => bail!("{key}: expected non-negative int, found {other:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(TomlValue::Bool(b)) => Ok(*b),
+            Some(other) => bail!("{key}: expected bool, found {other:?}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.values.get(key) {
+            None => Ok(default.to_string()),
+            Some(TomlValue::Str(s)) => Ok(s.clone()),
+            Some(other) => bail!("{key}: expected string, found {other:?}"),
+        }
+    }
+
+    pub fn get_array_i32(&self, key: &str) -> Result<Option<Vec<i32>>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Array(v)) => Ok(Some(v.iter().map(|x| *x as i32).collect())),
+            Some(other) => bail!("{key}: expected array, found {other:?}"),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue> {
+    if let Some(body) = text.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string");
+        };
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = text.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            bail!("line {lineno}: unterminated array");
+        };
+        let mut out = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(part.parse::<f64>().with_context(|| format!("line {lineno}: bad number {part}"))?);
+        }
+        return Ok(TomlValue::Array(out));
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value {text:?}")
+}
+
+/// Operating mode of the CIM datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CimMode {
+    /// All orders digital — loss-free baseline.
+    Dcim,
+    /// Fixed hybrid boundary for every MAC (prior-work fixed HCIM).
+    Hcim,
+    /// On-the-fly saliency-aware boundary (this paper).
+    Osa,
+    /// Full analog baseline.
+    Acim,
+    /// Precision Gating (Zhang et al., paper ref [13]): dual-precision,
+    /// all-digital — compute high-order activation bits first, add the
+    /// low-order pass only when the partial output magnitude exceeds a
+    /// learned delta.
+    Pg,
+    /// DRQ (Song et al., paper ref [14]): dual-precision by input-region
+    /// mean — regions with low mean activation run at 4-bit precision.
+    Drq,
+}
+
+impl CimMode {
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(match text {
+            "dcim" => CimMode::Dcim,
+            "hcim" => CimMode::Hcim,
+            "osa" => CimMode::Osa,
+            "acim" => CimMode::Acim,
+            "pg" => CimMode::Pg,
+            "drq" => CimMode::Drq,
+            other => bail!("unknown mode {other:?} (dcim|hcim|osa|acim|pg|drq)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CimMode::Dcim => "dcim",
+            CimMode::Hcim => "hcim",
+            CimMode::Osa => "osa",
+            CimMode::Acim => "acim",
+            CimMode::Pg => "pg",
+            CimMode::Drq => "drq",
+        }
+    }
+}
+
+/// Full-stack runtime configuration.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub artifacts_dir: PathBuf,
+    pub spec: MacroSpec,
+    pub mode: CimMode,
+    /// Fixed boundary for HCIM mode.
+    pub fixed_b: i32,
+    /// OSE thresholds (ascending); calibrated via `osa::calibrate`.
+    pub thresholds: Vec<i32>,
+    /// Base seed for per-layer ADC noise streams.
+    pub noise_seed: u64,
+    /// Batcher: max requests per batch.
+    pub max_batch: usize,
+    /// Batcher: max microseconds to wait filling a batch.
+    pub batch_timeout_us: u64,
+    /// Worker threads in the coordinator.
+    pub workers: usize,
+    /// Use the PJRT artifact path for tile math (vs native simulator).
+    pub use_pjrt: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: crate::spec::default_artifacts_dir(),
+            spec: MacroSpec::default(),
+            mode: CimMode::Osa,
+            fixed_b: 8,
+            thresholds: vec![0, 0, 32, 94, 1024],
+            noise_seed: 0xC1A0_2024,
+            max_batch: 64,
+            batch_timeout_us: 2_000,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            use_pjrt: false,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load from a TOML file, falling back to defaults for missing keys.
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&Toml::parse(&text)?)
+    }
+
+    pub fn from_toml(t: &Toml) -> Result<Self> {
+        let mut cfg = Self::default();
+        cfg.artifacts_dir = PathBuf::from(
+            t.get_str("system.artifacts_dir", &cfg.artifacts_dir.to_string_lossy())?,
+        );
+        cfg.mode = CimMode::parse(&t.get_str("cim.mode", cfg.mode.name())?)?;
+        cfg.fixed_b = t.get_f64("cim.fixed_b", cfg.fixed_b as f64)? as i32;
+        if let Some(th) = t.get_array_i32("cim.thresholds")? {
+            cfg.thresholds = th;
+        }
+        cfg.spec.sigma_code = t.get_f64("cim.sigma_code", cfg.spec.sigma_code)?;
+        cfg.spec.adc_fs_frac = t.get_f64("cim.adc_fs_frac", cfg.spec.adc_fs_frac as f64)? as f32;
+        cfg.noise_seed = t.get_f64("cim.noise_seed", cfg.noise_seed as f64)? as u64;
+        cfg.max_batch = t.get_usize("coordinator.max_batch", cfg.max_batch)?;
+        cfg.batch_timeout_us =
+            t.get_usize("coordinator.batch_timeout_us", cfg.batch_timeout_us as usize)? as u64;
+        cfg.workers = t.get_usize("coordinator.workers", cfg.workers)?;
+        cfg.use_pjrt = t.get_bool("coordinator.use_pjrt", cfg.use_pjrt)?;
+        if cfg.thresholds.len() + 1 != crate::spec::B_CANDIDATES.len() {
+            bail!(
+                "need {} thresholds for {} candidates, got {}",
+                crate::spec::B_CANDIDATES.len() - 1,
+                crate::spec::B_CANDIDATES.len(),
+                cfg.thresholds.len()
+            );
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample config
+[system]
+artifacts_dir = "artifacts"   # comment after value
+
+[cim]
+mode = "hcim"
+fixed_b = 7
+thresholds = [10, 20, 30, 40, 50]
+sigma_code = 0.0
+
+[coordinator]
+max_batch = 32
+use_pjrt = true
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let cfg = SystemConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.mode, CimMode::Hcim);
+        assert_eq!(cfg.fixed_b, 7);
+        assert_eq!(cfg.thresholds, vec![10, 20, 30, 40, 50]);
+        assert_eq!(cfg.spec.sigma_code, 0.0);
+        assert_eq!(cfg.max_batch, 32);
+        assert!(cfg.use_pjrt);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.mode, CimMode::Osa);
+        assert_eq!(cfg.thresholds.len(), 5);
+    }
+
+    #[test]
+    fn value_types() {
+        let t = Toml::parse("x = 3\ny = 2.5\nz = \"s\"\nw = true\nv = [1, 2]").unwrap();
+        assert_eq!(t.get("x"), Some(&TomlValue::Int(3)));
+        assert_eq!(t.get("y"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(t.get("z"), Some(&TomlValue::Str("s".into())));
+        assert_eq!(t.get("w"), Some(&TomlValue::Bool(true)));
+        assert_eq!(t.get("v"), Some(&TomlValue::Array(vec![1.0, 2.0])));
+    }
+
+    #[test]
+    fn bad_threshold_count_rejected() {
+        let t = Toml::parse("[cim]\nthresholds = [1, 2]").unwrap();
+        assert!(SystemConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = Toml::parse("s = \"a#b\" # real comment").unwrap();
+        assert_eq!(t.get("s"), Some(&TomlValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa, CimMode::Acim] {
+            assert_eq!(CimMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(CimMode::parse("bogus").is_err());
+    }
+}

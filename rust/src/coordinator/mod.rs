@@ -1,0 +1,311 @@
+//! L3 coordinator: request queue, dynamic batcher, worker pool and
+//! metrics — the serving front of the CIM accelerator (vLLM-router
+//! shaped, built on std threads + channels; tokio is not in the offline
+//! mirror).
+//!
+//! Flow: clients [`Server::submit`] single images; the batcher thread
+//! coalesces them (up to `max_batch`, bounded by `batch_timeout_us`) and
+//! round-robins batches across workers; each worker owns a
+//! [`nn::Executor`] over its own engine clone and answers through the
+//! per-request response channel.  Energy/boundary metrics from every
+//! forward are folded into the shared [`Metrics`].
+
+use crate::config::SystemConfig;
+use crate::energy::EnergyAccount;
+use crate::nn::{Executor, QGraph};
+use crate::sched::MacroGemm;
+use crate::spec::MacroSpec;
+use crate::util::percentile;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    /// 32x32x3 uint8 image.
+    pub image: Vec<u8>,
+    pub submitted: Instant,
+    respond: Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub latency: Duration,
+    /// Size of the batch this request rode in (batching observability).
+    pub batch_size: usize,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub latencies_us: Vec<f64>,
+    pub batch_sizes: Vec<f64>,
+    pub account: EnergyAccount,
+    pub b_hist: [u64; 16],
+    pub started: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn p50_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 50.0)
+    }
+
+    pub fn p95_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 95.0)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        crate::util::mean(&self.batch_sizes)
+    }
+
+    /// Requests per second of wall-clock serving time.
+    pub fn throughput_rps(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(s), Some(f)) if f > s => self.requests as f64 / (f - s).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Modeled macro TOPS/W over everything served so far.
+    pub fn tops_per_watt(&self, sp: &MacroSpec) -> f64 {
+        self.account.tops_per_watt(sp)
+    }
+
+    pub fn report(&self, sp: &MacroSpec) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} p50={:.1}ms p95={:.1}ms \
+             throughput={:.1} req/s macro_tops_per_watt={:.2}",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.p50_latency_us() / 1e3,
+            self.p95_latency_us() / 1e3,
+            self.throughput_rps(),
+            self.tops_per_watt(sp),
+        )
+    }
+}
+
+enum Job {
+    One(Request),
+    Shutdown,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    tx: Sender<Job>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Spin up the batcher + worker pool for the given config.
+    /// Workers run the *native* engine (each owns a clone); the PJRT
+    /// engine path is exercised through `examples/e2e_inference` where a
+    /// single runtime drives the batch loop directly.
+    pub fn start(cfg: &SystemConfig, graph: Arc<QGraph>) -> Result<Self> {
+        let gemm = MacroGemm::new(
+            cfg.mode,
+            cfg.spec,
+            cfg.fixed_b,
+            cfg.thresholds.clone(),
+            cfg.noise_seed,
+        )?;
+        let metrics = Arc::new(Mutex::new(Metrics { started: Some(Instant::now()), ..Default::default() }));
+        let (tx, rx) = channel::<Job>();
+        let workers_n = cfg.workers.max(1);
+
+        // per-worker channels, round-robin dispatch
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for wid in 0..workers_n {
+            let (wtx, wrx) = channel::<Vec<Request>>();
+            worker_txs.push(wtx);
+            let graph = graph.clone();
+            let gemm = gemm.clone();
+            let metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("cim-worker-{wid}"))
+                    .spawn(move || worker_loop(wrx, graph, gemm, metrics))
+                    .context("spawning worker")?,
+            );
+        }
+
+        let max_batch = cfg.max_batch.max(1);
+        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let batcher = std::thread::Builder::new()
+            .name("cim-batcher".into())
+            .spawn(move || batcher_loop(rx, worker_txs, max_batch, timeout))
+            .context("spawning batcher")?;
+
+        Ok(Self {
+            tx,
+            batcher: Some(batcher),
+            workers,
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Submit one image; returns the channel the response arrives on.
+    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<Response>> {
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Job::One(Request { id, image, submitted: Instant::now(), respond: rtx }))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Snapshot the metrics.
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.finished = Some(Instant::now());
+        m
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.finished = Some(Instant::now());
+        m
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Job>,
+    worker_txs: Vec<Sender<Vec<Request>>>,
+    max_batch: usize,
+    timeout: Duration,
+) {
+    let mut next_worker = 0usize;
+    'outer: loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(Job::One(r)) => r,
+            Ok(Job::Shutdown) | Err(_) => break 'outer,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + timeout;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Job::One(r)) => batch.push(r),
+                Ok(Job::Shutdown) => {
+                    if !batch.is_empty() {
+                        let _ = worker_txs[next_worker].send(batch);
+                    }
+                    break 'outer;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+            }
+        }
+        let _ = worker_txs[next_worker].send(batch);
+        next_worker = (next_worker + 1) % worker_txs.len();
+    }
+    drop(worker_txs); // closes worker channels -> workers exit
+}
+
+fn worker_loop(
+    rx: Receiver<Vec<Request>>,
+    graph: Arc<QGraph>,
+    gemm: MacroGemm,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    while let Ok(batch) = rx.recv() {
+        let n = batch.len();
+        let img_bytes = batch[0].image.len();
+        let mut images = Vec::with_capacity(n * img_bytes);
+        for r in &batch {
+            images.extend_from_slice(&r.image);
+        }
+        let mut exec = Executor::new(&graph, gemm.clone());
+        match exec.forward(&images, n) {
+            Ok((logits, stats)) => {
+                let classes = graph.num_classes;
+                let done = Instant::now();
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.requests += n as u64;
+                    m.batches += 1;
+                    m.batch_sizes.push(n as f64);
+                    m.account.merge(&stats.account);
+                    for (i, v) in stats.b_hist.iter().enumerate() {
+                        m.b_hist[i] += v;
+                    }
+                    for r in &batch {
+                        m.latencies_us.push((done - r.submitted).as_micros() as f64);
+                    }
+                    m.finished = Some(done);
+                }
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap_or(0);
+                    let _ = r.respond.send(Response {
+                        id: r.id,
+                        pred,
+                        logits: row,
+                        latency: done - r.submitted,
+                        batch_size: n,
+                    });
+                }
+            }
+            Err(e) => {
+                log::error!("worker forward failed: {e:#}");
+                // drop the batch; submitters see a closed channel
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_math() {
+        let mut m = Metrics::default();
+        m.latencies_us = vec![100.0, 200.0, 300.0, 400.0, 1000.0];
+        m.batch_sizes = vec![2.0, 3.0];
+        m.requests = 5;
+        m.started = Some(Instant::now() - Duration::from_secs(1));
+        m.finished = Some(Instant::now());
+        assert_eq!(m.p50_latency_us(), 300.0);
+        assert!(m.p95_latency_us() >= 400.0);
+        assert!((m.mean_batch() - 2.5).abs() < 1e-9);
+        assert!(m.throughput_rps() > 4.0 && m.throughput_rps() < 6.0);
+        let report = m.report(&MacroSpec::default());
+        assert!(report.contains("requests=5"));
+    }
+
+    // Live server tests need artifacts (the QGraph); they live in
+    // rust/tests/coordinator_serve.rs.
+}

@@ -1,0 +1,349 @@
+//! Energy / area / latency model (DESIGN.md §4).
+//!
+//! Per-component constants are calibrated so the model reproduces the
+//! paper's reported *ratios* on the 65 nm / 0.6 V operating point:
+//!
+//! * DCIM baseline efficiency ≈ 2.97 TOPS/W (= 5.79 / 1.95, Fig 9)
+//! * HCIM (fixed B=8) = 1.56x DCIM (§VI)
+//! * OSA-HCIM up to 1.95x DCIM, 5.33–5.79 TOPS/W (§VI, Table I)
+//! * ADC ≈ 17 % of power, 6 % of area; OSE ≈ 1 % / 1 % (Fig 7)
+//!
+//! The `calibration` test in this module asserts the anchors; the
+//! `fig7`/`fig9` harnesses print the full breakdowns.
+
+use crate::macrosim::OpCounts;
+use crate::spec::MacroSpec;
+
+/// Analog-domain clock (SAR ADC cadence); the DAT runs at 2x this.
+pub const CLK_ANALOG_HZ: f64 = 100.0e6;
+
+/// Per-component energy constants, femtojoules (65 nm, 0.6 V).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyParams {
+    /// Digital 1-bit MAC per column per HMU (cell read + D_MULT + DAT
+    /// share).
+    pub e_dat_bitmac_fj: f64,
+    /// One 3-bit SAR conversion (per HMU per analog group).
+    pub e_adc_conv_fj: f64,
+    /// DAC drive + charge share per column per analog group (GBL is
+    /// shared by the 8 HMUs, so this is *not* per HMU).
+    pub e_dac_col_fj: f64,
+    /// N/Q compression per HMU per SE pair.
+    pub e_nq_fj: f64,
+    /// OSE accumulate + threshold compare per macro op (amortized over
+    /// the 8 HMUs — the paper's "compressed DMAC bandwidth").
+    pub e_ose_op_fj: f64,
+    /// Controller + IO per macro op.
+    pub e_ctrl_op_fj: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        Self {
+            e_dat_bitmac_fj: 10.5,
+            e_adc_conv_fj: 1_320.0,
+            e_dac_col_fj: 55.0,
+            e_nq_fj: 45.0,
+            e_ose_op_fj: 3_600.0,
+            e_ctrl_op_fj: 2_000.0,
+        }
+    }
+}
+
+/// Energy of one macro op split by component, femtojoules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub digital_fj: f64,
+    pub adc_fj: f64,
+    pub dac_fj: f64,
+    pub nq_fj: f64,
+    pub ose_fj: f64,
+    pub ctrl_fj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_fj(&self) -> f64 {
+        self.digital_fj + self.adc_fj + self.dac_fj + self.nq_fj + self.ose_fj + self.ctrl_fj
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.digital_fj += other.digital_fj;
+        self.adc_fj += other.adc_fj;
+        self.dac_fj += other.dac_fj;
+        self.nq_fj += other.nq_fj;
+        self.ose_fj += other.ose_fj;
+        self.ctrl_fj += other.ctrl_fj;
+    }
+
+    /// Fractions per component (sums to 1 when total > 0).
+    pub fn fractions(&self) -> [(&'static str, f64); 6] {
+        let t = self.total_fj().max(1e-12);
+        [
+            ("DAT+array (digital)", self.digital_fj / t),
+            ("SAR ADC", self.adc_fj / t),
+            ("DAC+AIN (analog drive)", self.dac_fj / t),
+            ("N/Q", self.nq_fj / t),
+            ("OSE", self.ose_fj / t),
+            ("Ctrl+IO", self.ctrl_fj / t),
+        ]
+    }
+}
+
+impl EnergyParams {
+    /// Energy of one macro op with the given workload counts.
+    /// `with_se` adds the SE-mode N/Q + OSE overhead (OSA mode).
+    pub fn op_energy(&self, c: &OpCounts, with_se: bool, sp: &MacroSpec) -> EnergyBreakdown {
+        let pair = self.e_dat_bitmac_fj * sp.cols as f64 * sp.hmus as f64;
+        let mut b = EnergyBreakdown {
+            // SE pairs are digital pairs; when with_se they are already
+            // included in digital_pairs (reused in computing mode).
+            digital_fj: c.digital_pairs as f64 * pair,
+            adc_fj: c.adc_groups as f64 * sp.hmus as f64 * self.e_adc_conv_fj,
+            dac_fj: c.adc_groups as f64 * sp.cols as f64 * self.e_dac_col_fj,
+            ctrl_fj: self.e_ctrl_op_fj,
+            ..Default::default()
+        };
+        if with_se {
+            b.nq_fj = c.se_pairs as f64 * sp.hmus as f64 * self.e_nq_fj;
+            b.ose_fj = self.e_ose_op_fj;
+        }
+        b
+    }
+
+    /// Ops per macro op under the paper's normalization
+    /// (1 8b x 8b MAC = 2 OPs; a macro op performs hmus*cols MACs).
+    pub fn ops_per_macro_op(&self, sp: &MacroSpec) -> f64 {
+        2.0 * sp.hmus as f64 * sp.cols as f64
+    }
+
+    /// TOPS/W for a uniform stream of ops with the given breakdown.
+    pub fn tops_per_watt(&self, per_op: &EnergyBreakdown, sp: &MacroSpec) -> f64 {
+        let joules = per_op.total_fj() * 1e-15;
+        self.ops_per_macro_op(sp) / joules / 1e12
+    }
+}
+
+/// Streaming accumulator used by the scheduler / coordinator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyAccount {
+    pub breakdown: EnergyBreakdown,
+    pub macro_ops: u64,
+    pub cycles: u64,
+}
+
+impl EnergyAccount {
+    pub fn record(&mut self, b: &EnergyBreakdown, counts: &OpCounts) {
+        self.breakdown.add(b);
+        self.macro_ops += 1;
+        self.cycles += counts.total_cycles() as u64;
+    }
+
+    pub fn merge(&mut self, other: &EnergyAccount) {
+        self.breakdown.add(&other.breakdown);
+        self.macro_ops += other.macro_ops;
+        self.cycles += other.cycles;
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.breakdown.total_fj() * 1e-15
+    }
+
+    pub fn tops_per_watt(&self, sp: &MacroSpec) -> f64 {
+        if self.macro_ops == 0 {
+            return 0.0;
+        }
+        let ops = 2.0 * sp.hmus as f64 * sp.cols as f64 * self.macro_ops as f64;
+        ops / self.total_energy_j() / 1e12
+    }
+
+    /// Wall-clock seconds of macro time at the analog clock.
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / CLK_ANALOG_HZ
+    }
+
+    /// Average power in watts over the modeled execution.
+    pub fn watts(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.total_energy_j() / self.seconds()
+    }
+}
+
+/// Component areas, square micrometres (65 nm, modeled — Fig 6/7).
+#[derive(Debug, Clone, Copy)]
+pub struct AreaParams {
+    pub array_um2: f64,
+    pub dat_um2: f64,
+    pub adc_um2: f64,
+    pub dac_um2: f64,
+    pub nq_um2: f64,
+    pub ose_um2: f64,
+    pub ctrl_um2: f64,
+}
+
+impl Default for AreaParams {
+    fn default() -> Self {
+        // 9216 split-port 6T cells (~2.0 um^2 each at 65nm) + periphery,
+        // proportioned to reproduce Fig 7's area shares
+        // (ADC 6 %, OSE 1 %).
+        Self {
+            array_um2: 18_400.0,
+            dat_um2: 19_900.0,
+            adc_um2: 3_150.0,
+            dac_um2: 4_700.0,
+            nq_um2: 1_050.0,
+            ose_um2: 520.0,
+            ctrl_um2: 4_780.0,
+        }
+    }
+}
+
+impl AreaParams {
+    pub fn total_um2(&self) -> f64 {
+        self.array_um2 + self.dat_um2 + self.adc_um2 + self.dac_um2 + self.nq_um2
+            + self.ose_um2 + self.ctrl_um2
+    }
+
+    pub fn fractions(&self) -> [(&'static str, f64); 7] {
+        let t = self.total_um2();
+        [
+            ("SRAM array", self.array_um2 / t),
+            ("DAT", self.dat_um2 / t),
+            ("SAR ADC", self.adc_um2 / t),
+            ("DAC+AIN", self.dac_um2 / t),
+            ("N/Q", self.nq_um2 / t),
+            ("OSE", self.ose_um2 / t),
+            ("Ctrl+IO", self.ctrl_um2 / t),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::macrosim::counts_for_boundary;
+
+    fn sp() -> MacroSpec {
+        MacroSpec::default()
+    }
+
+    #[test]
+    fn calibration_dcim_baseline() {
+        // DCIM ≈ 2.97 TOPS/W (Fig 9 anchor: 5.79 / 1.95)
+        let p = EnergyParams::default();
+        let c = counts_for_boundary(0, false, &sp());
+        let e = p.op_energy(&c, false, &sp());
+        let tw = p.tops_per_watt(&e, &sp());
+        assert!(
+            (tw - 2.97).abs() / 2.97 < 0.10,
+            "DCIM {tw:.3} TOPS/W, expected ≈2.97"
+        );
+    }
+
+    #[test]
+    fn calibration_hcim_ratio() {
+        // HCIM (fixed B=8, no OSE) = 1.56x DCIM (§VI)
+        let p = EnergyParams::default();
+        let d = p.op_energy(&counts_for_boundary(0, false, &sp()), false, &sp());
+        let h = p.op_energy(&counts_for_boundary(8, false, &sp()), false, &sp());
+        let ratio = d.total_fj() / h.total_fj();
+        assert!(
+            (ratio - 1.56).abs() < 0.12,
+            "HCIM ratio {ratio:.3}, expected ≈1.56"
+        );
+    }
+
+    #[test]
+    fn calibration_osa_reachable() {
+        // An OSA mix dominated by B in {9, 10} must exceed 1.9x DCIM.
+        let p = EnergyParams::default();
+        let s = sp();
+        let d = p.op_energy(&counts_for_boundary(0, false, &s), false, &s).total_fj();
+        // Deep-layer-like mix (paper Fig 8b: low precision dominates with
+        // depth); the Fig 9 harness derives the real mix from the OSE.
+        let mix = [(5, 0.02), (6, 0.03), (7, 0.05), (8, 0.10), (9, 0.20), (10, 0.60)];
+        let mut e = 0.0;
+        for (b, w) in mix {
+            let c = counts_for_boundary(b, true, &s);
+            e += w * p.op_energy(&c, true, &s).total_fj();
+        }
+        let ratio = d / e;
+        assert!(ratio > 1.90, "OSA mix ratio {ratio:.3}, expected > 1.90");
+        assert!(ratio < 2.4, "OSA mix ratio {ratio:.3} implausibly high");
+    }
+
+    #[test]
+    fn calibration_adc_power_share() {
+        // ADC ≈ 17 % of power at a typical hybrid operating point (Fig 7).
+        let p = EnergyParams::default();
+        let s = sp();
+        let e = p.op_energy(&counts_for_boundary(8, true, &s), true, &s);
+        let frac = e.adc_fj / e.total_fj();
+        assert!(
+            (frac - 0.17).abs() < 0.05,
+            "ADC power share {frac:.3}, expected ≈0.17"
+        );
+    }
+
+    #[test]
+    fn calibration_ose_overhead_small() {
+        // OSE ≈ 1 % power (Fig 7): "minimal overhead".
+        let p = EnergyParams::default();
+        let s = sp();
+        let e = p.op_energy(&counts_for_boundary(8, true, &s), true, &s);
+        let frac = e.ose_fj / e.total_fj();
+        assert!(frac < 0.02, "OSE power share {frac:.3}, expected ≈0.01");
+        let a = AreaParams::default();
+        let afrac = a.ose_um2 / a.total_um2();
+        assert!(afrac < 0.02, "OSE area share {afrac:.3}");
+    }
+
+    #[test]
+    fn calibration_adc_area_share() {
+        let a = AreaParams::default();
+        let frac = a.adc_um2 / a.total_um2();
+        assert!((frac - 0.06).abs() < 0.02, "ADC area share {frac:.3}");
+    }
+
+    #[test]
+    fn energy_monotone_in_boundary() {
+        let p = EnergyParams::default();
+        let s = sp();
+        let mut prev = f64::INFINITY;
+        for b in [5, 6, 7, 8, 9, 10] {
+            let e = p.op_energy(&counts_for_boundary(b, true, &s), true, &s).total_fj();
+            assert!(e < prev, "energy not decreasing at B={b}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn account_accumulates() {
+        let p = EnergyParams::default();
+        let s = sp();
+        let c = counts_for_boundary(8, true, &s);
+        let e = p.op_energy(&c, true, &s);
+        let mut acc = EnergyAccount::default();
+        acc.record(&e, &c);
+        acc.record(&e, &c);
+        assert_eq!(acc.macro_ops, 2);
+        assert!((acc.breakdown.total_fj() - 2.0 * e.total_fj()).abs() < 1e-6);
+        assert!(acc.tops_per_watt(&s) > 0.0);
+        assert!(acc.watts() > 0.0);
+        let mut acc2 = EnergyAccount::default();
+        acc2.merge(&acc);
+        assert_eq!(acc2.macro_ops, 2);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let p = EnergyParams::default();
+        let s = sp();
+        let e = p.op_energy(&counts_for_boundary(8, true, &s), true, &s);
+        let sum: f64 = e.fractions().iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let asum: f64 = AreaParams::default().fractions().iter().map(|(_, f)| f).sum();
+        assert!((asum - 1.0).abs() < 1e-9);
+    }
+}

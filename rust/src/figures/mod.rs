@@ -1,0 +1,516 @@
+//! Harnesses that regenerate every table and figure of the paper's
+//! evaluation section (§VI) — one function per artifact, each printing
+//! the same rows/series the paper reports (DESIGN.md §9).
+//!
+//! Invoked from the CLI: `osa-hcim fig 5a|5b|6|7|8a|8b|9` and
+//! `osa-hcim table1`.
+
+use crate::config::{CimMode, SystemConfig};
+use crate::energy::{AreaParams, EnergyParams, CLK_ANALOG_HZ};
+use crate::macrosim::{counts_for_boundary, MacroUnit};
+use crate::nn::data::{Dataset, Golden};
+use crate::nn::{accuracy, cross_entropy, Executor, QGraph};
+use crate::sched::MacroGemm;
+use crate::spec::{MacroSpec, B_CANDIDATES};
+use crate::util::prng::SplitMix64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Shared experiment context (artifacts loaded once).
+pub struct FigCtx {
+    pub cfg: SystemConfig,
+    pub ds: Dataset,
+    pub graph: QGraph,
+    pub golden: Golden,
+}
+
+impl FigCtx {
+    pub fn load(cfg: SystemConfig) -> Result<Self> {
+        let dir = cfg.artifacts_dir.clone();
+        cfg.spec
+            .validate_against_artifacts(&dir)
+            .context("spec.json mismatch — run `make artifacts`")?;
+        Ok(Self {
+            ds: Dataset::load(&dir)?,
+            graph: QGraph::load(&dir)?,
+            golden: Golden::load(&dir)?,
+            cfg,
+        })
+    }
+
+    fn gemm(&self, mode: CimMode) -> MacroGemm {
+        MacroGemm::new(
+            mode,
+            self.cfg.spec,
+            self.cfg.fixed_b,
+            self.cfg.thresholds.clone(),
+            self.cfg.noise_seed,
+        )
+        .expect("config thresholds validated at load")
+    }
+
+    /// Run `n` test images through a mode.
+    pub fn eval_mode(
+        &self,
+        mode: CimMode,
+        fixed_b: i32,
+        thresholds: &[i32],
+        n: usize,
+    ) -> Result<ModeEval> {
+        let mut gemm = self.gemm(mode);
+        gemm.fixed_b = fixed_b;
+        if mode == CimMode::Osa && !thresholds.is_empty() {
+            gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(thresholds.to_vec())?;
+        }
+        let mut exec = Executor::new(&self.graph, gemm);
+        let (images, labels) = self.ds.test_batch(0, n);
+        let (logits, stats) = exec.forward(images, labels.len())?;
+        Ok(ModeEval {
+            acc: accuracy(&logits, labels, self.graph.num_classes),
+            ce: cross_entropy(&logits, labels, self.graph.num_classes),
+            tops_w: stats.account.tops_per_watt(&self.cfg.spec),
+            b_hist: stats.b_hist,
+            energy_nj_per_img: stats.account.total_energy_j() * 1e9 / labels.len() as f64,
+            macro_ops: stats.account.macro_ops,
+        })
+    }
+}
+
+/// Result of one operating-point evaluation.
+#[derive(Debug, Clone)]
+pub struct ModeEval {
+    pub acc: f64,
+    pub ce: f64,
+    pub tops_w: f64,
+    pub b_hist: [u64; 16],
+    pub energy_nj_per_img: f64,
+    pub macro_ops: u64,
+}
+
+// ---------------------------------------------------------------- Fig 5a
+
+/// Workload allocation for DCIM/ACIM per boundary (8b x 8b MAC).
+pub fn fig5a() -> String {
+    let sp = MacroSpec::default();
+    let mut out = String::from(
+        "Fig 5a — 1-bit MAC workload allocation vs B_D/A (8b x 8b MAC, 64 1-bit MACs)\n\
+         B_D/A  digital  analog  discard  ADC-groups\n",
+    );
+    for b in [5, 6, 7, 8, 9, 10] {
+        let c = counts_for_boundary(b, false, &sp);
+        out.push_str(&format!(
+            "{b:>5}  {:>7}  {:>6}  {:>7}  {:>10}\n",
+            c.digital_pairs, c.analog_pairs, c.discard_pairs, c.adc_groups
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------- Fig 5b
+
+/// SNR / energy-efficiency / execution-speed tradeoff per boundary.
+pub fn fig5b(samples: usize, seed: u64) -> Result<String> {
+    let sp = MacroSpec::default();
+    let ep = EnergyParams::default();
+    let mut rng = SplitMix64::new(seed);
+    let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| rng.next_range_i32(-128, 128)).collect();
+    let unit = MacroUnit::new(&w, sp)?;
+    let acts: Vec<Vec<i32>> = (0..samples)
+        .map(|_| (0..sp.cols).map(|_| rng.next_range_i32(0, 256)).collect())
+        .collect();
+    let exact: Vec<Vec<i32>> = acts.iter().map(|a| unit.exact(a)).collect();
+    let mut out = String::from(
+        "Fig 5b — SNR / energy efficiency / execution speed vs B_D/A (8b x 8b MAC)\n\
+         B_D/A  SNR(dB)  TOPS/W  speedup(vs DCIM)  cycles\n",
+    );
+    let dcim_counts = counts_for_boundary(0, false, &sp);
+    let dcim_cycles = dcim_counts.compute_cycles as f64;
+    for b in [5, 6, 7, 8, 9, 10] {
+        let mut sig = 0.0f64;
+        let mut err = 0.0f64;
+        let mut noise_g = SplitMix64::new(seed ^ 0xABCD);
+        for (a, ex) in acts.iter().zip(&exact) {
+            let p = unit.pack_acts(a);
+            let noise = noise_g.normals_f32(sp.hmus * sp.w_bits, sp.sigma_code);
+            let got = unit.compute_hybrid(&p, b, &noise);
+            for (g, e) in got.iter().zip(ex) {
+                sig += (*e as f64) * (*e as f64);
+                err += ((g - e) as f64) * ((g - e) as f64);
+            }
+        }
+        let snr = 10.0 * (sig / err.max(1e-12)).log10();
+        let c = counts_for_boundary(b, true, &sp);
+        let e = ep.op_energy(&c, true, &sp);
+        let tw = ep.tops_per_watt(&e, &sp);
+        let speedup = dcim_cycles / c.total_cycles() as f64;
+        out.push_str(&format!(
+            "{b:>5}  {snr:>7.1}  {tw:>6.2}  {speedup:>16.2}  {:>6}\n",
+            c.total_cycles()
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- Fig 6
+
+/// Macro layout summary (the paper's Fig 6 table, with modeled area).
+pub fn fig6() -> String {
+    let sp = MacroSpec::default();
+    let a = AreaParams::default();
+    let mut out = String::from("Fig 6 — OSA-HCIM macro summary (modeled, 65 nm)\n");
+    out.push_str("  Technology           65 nm CMOS (behavioral model)\n");
+    out.push_str("  Supply               0.6 - 1.2 V (energy calibrated @0.6 V)\n");
+    out.push_str(&format!(
+        "  Array size           {} x {} (split-port 6T)\n",
+        crate::spec::ROWS,
+        sp.cols
+    ));
+    out.push_str(&format!(
+        "  HMUs                 {} (144 HCIMA each, DAT + N/Q + 3b SAR ADC)\n",
+        sp.hmus
+    ));
+    out.push_str(&format!(
+        "  Input precision      4/8 b (DAC slices 1-{} b)\n",
+        sp.analog_band
+    ));
+    out.push_str("  Weight precision     4/8 b (two's complement)\n");
+    out.push_str(&format!("  B_D/A candidates     {B_CANDIDATES:?}\n"));
+    out.push_str(&format!("  Analog clock         {} MHz (DAT at 2x)\n", CLK_ANALOG_HZ / 1e6));
+    out.push_str(&format!("  Modeled area         {:.3} mm^2\n", a.total_um2() / 1e6));
+    out
+}
+
+// ---------------------------------------------------------------- Fig 7
+
+/// Power & area breakdowns at the OSA operating mix of a real workload.
+pub fn fig7(ctx: &FigCtx, images: usize) -> Result<String> {
+    let mut gemm = ctx.gemm(CimMode::Osa);
+    gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(ctx.cfg.thresholds.clone())?;
+    let mut exec = Executor::new(&ctx.graph, gemm);
+    let (imgs, labels) = ctx.ds.test_batch(0, images);
+    let (_, stats) = exec.forward(imgs, labels.len())?;
+    let mut out = String::from("Fig 7 — power & area breakdown of OSA-HCIM\n");
+    out.push_str(&format!(
+        "(workload: {} SynthCIFAR images through ResNet-mini, OSA mode, {} macro ops)\n\n",
+        labels.len(),
+        stats.account.macro_ops
+    ));
+    out.push_str("  power:\n");
+    for (name, frac) in stats.account.breakdown.fractions() {
+        out.push_str(&format!("    {name:<24} {:>5.1}%\n", frac * 100.0));
+    }
+    out.push_str("  area:\n");
+    for (name, frac) in AreaParams::default().fractions() {
+        out.push_str(&format!("    {name:<24} {:>5.1}%\n", frac * 100.0));
+    }
+    out.push_str("\n  paper anchors: OSE ≈1% power/1% area, ADC ≈17% power/6% area\n");
+    out.push_str(&format!(
+        "  modeled OSA efficiency on this workload: {:.2} TOPS/W\n",
+        stats.account.tops_per_watt(&ctx.cfg.spec)
+    ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- Fig 8
+
+/// Glyph for one boundary value (finer B -> darker glyph).
+fn b_glyph(b: i32) -> char {
+    match b {
+        5 => '@',
+        6 => '#',
+        7 => '+',
+        8 => '-',
+        9 => '.',
+        10 => ' ',
+        _ => '?',
+    }
+}
+
+/// Per-pixel B_D/A maps of selected hidden layers for one image.
+pub fn fig8a(ctx: &FigCtx, image_idx: usize, layers: &[&str]) -> Result<String> {
+    let mut gemm = ctx.gemm(CimMode::Osa);
+    gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(ctx.cfg.thresholds.clone())?;
+    let mut exec = Executor::new(&ctx.graph, gemm);
+    exec.collect_bda = true;
+    let (imgs, labels) = ctx.ds.test_batch(image_idx, 1);
+    let (_, stats) = exec.forward(imgs, 1)?;
+    let class_names = [
+        "circle", "square", "triangle", "cross", "ring", "hbar", "vbar", "diamond", "checker",
+        "corner_l",
+    ];
+    let mut out = format!(
+        "Fig 8a — per-pixel B_D/A maps (test image {image_idx}, label={})\n\
+         glyphs: @=5 (most digital) #=6 +=7 -=8 .=9 ' '=10 (most analog)\n\n",
+        class_names.get(labels[0] as usize).unwrap_or(&"?")
+    );
+    for (name, ho, wo, nt, bda) in &stats.bda_maps {
+        if !layers.is_empty() && !layers.contains(&name.as_str()) {
+            continue;
+        }
+        out.push_str(&format!("  layer {name} ({ho}x{wo}):\n"));
+        for y in 0..*ho {
+            out.push_str("    |");
+            for x in 0..*wo {
+                // most precise boundary across N-tiles at this pixel
+                let row = (y * wo + x) * nt;
+                let b = (0..*nt).map(|t| bda[row + t]).min().unwrap_or(10);
+                out.push(b_glyph(b));
+            }
+            out.push_str("|\n");
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Proportion of each B_D/A across conv layers of the network.
+pub fn fig8b(ctx: &FigCtx, images: usize) -> Result<String> {
+    let mut gemm = ctx.gemm(CimMode::Osa);
+    gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(ctx.cfg.thresholds.clone())?;
+    let mut exec = Executor::new(&ctx.graph, gemm);
+    exec.collect_bda = true;
+    let (imgs, labels) = ctx.ds.test_batch(0, images);
+    let (_, stats) = exec.forward(imgs, labels.len())?;
+    let mut out = format!(
+        "Fig 8b — B_D/A usage per conv layer ({} images, OSA mode)\n  {:<18}",
+        labels.len(),
+        "layer"
+    );
+    for b in B_CANDIDATES {
+        out.push_str(&format!("  B={b:<3}"));
+    }
+    out.push('\n');
+    // aggregate maps across the batch per layer name, preserving order
+    let mut seen: Vec<(String, [u64; 16])> = Vec::new();
+    for (name, _, _, nt, bda) in &stats.bda_maps {
+        let entry = match seen.iter_mut().find(|(n, _)| n == name) {
+            Some((_, h)) => h,
+            None => {
+                seen.push((name.clone(), [0u64; 16]));
+                &mut seen.last_mut().unwrap().1
+            }
+        };
+        for chunk in bda.chunks(*nt) {
+            for &b in chunk {
+                if (0..16).contains(&b) {
+                    entry[b as usize] += 1;
+                }
+            }
+        }
+    }
+    for (name, hist) in &seen {
+        let total: u64 = hist.iter().sum::<u64>().max(1);
+        out.push_str(&format!("  {name:<18}"));
+        for b in B_CANDIDATES {
+            out.push_str(&format!(" {:>5.1}%", hist[b as usize] as f64 / total as f64 * 100.0));
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- Fig 9
+
+/// One Fig 9 operating point.
+#[derive(Debug, Clone)]
+pub struct Fig9Point {
+    pub label: String,
+    pub acc: f64,
+    pub tops_w: f64,
+    pub energy_ratio_vs_dcim: f64,
+    pub thresholds: Vec<i32>,
+}
+
+/// Accuracy vs energy-efficiency Pareto: DCIM, HCIM (fixed), ACIM and
+/// OSA-HCIM under the loss-constraint profiles.
+pub fn fig9(ctx: &FigCtx, images: usize, calib_images: usize) -> Result<(String, Vec<Fig9Point>)> {
+    let mut points = Vec::new();
+    let dcim = ctx.eval_mode(CimMode::Dcim, 0, &[], images)?;
+    points.push(Fig9Point {
+        label: "DCIM".into(),
+        acc: dcim.acc,
+        tops_w: dcim.tops_w,
+        energy_ratio_vs_dcim: 1.0,
+        thresholds: vec![],
+    });
+    for b in [6, 8] {
+        let h = ctx.eval_mode(CimMode::Hcim, b, &[], images)?;
+        points.push(Fig9Point {
+            label: format!("HCIM (B={b})"),
+            acc: h.acc,
+            tops_w: h.tops_w,
+            energy_ratio_vs_dcim: dcim.energy_nj_per_img / h.energy_nj_per_img,
+            thresholds: vec![],
+        });
+    }
+    let acim = ctx.eval_mode(CimMode::Acim, 0, &[], images)?;
+    points.push(Fig9Point {
+        label: "ACIM".into(),
+        acc: acim.acc,
+        tops_w: acim.tops_w,
+        energy_ratio_vs_dcim: dcim.energy_nj_per_img / acim.energy_nj_per_img,
+        thresholds: vec![],
+    });
+    // prior-work dual-precision baselines (paper §II-A: PG [13], DRQ [14])
+    for mode in [CimMode::Pg, CimMode::Drq] {
+        let ev = ctx.eval_mode(mode, 0, &[], images)?;
+        points.push(Fig9Point {
+            label: mode.name().to_uppercase(),
+            acc: ev.acc,
+            tops_w: ev.tops_w,
+            energy_ratio_vs_dcim: dcim.energy_nj_per_img / ev.energy_nj_per_img,
+            thresholds: vec![],
+        });
+    }
+
+    // OSA under each loss-constraint profile (thresholds from Fig 4b).
+    for profile in crate::osa::PROFILES {
+        let constraints = crate::osa::loss_profile(profile).unwrap();
+        let cal = calibrate_osa(ctx, &constraints, calib_images)?;
+        let ev = ctx.eval_mode(CimMode::Osa, ctx.cfg.fixed_b, &cal.thresholds, images)?;
+        points.push(Fig9Point {
+            label: format!("OSA-HCIM ({profile})"),
+            acc: ev.acc,
+            tops_w: ev.tops_w,
+            energy_ratio_vs_dcim: dcim.energy_nj_per_img / ev.energy_nj_per_img,
+            thresholds: cal.thresholds.clone(),
+        });
+    }
+
+    let mut out = format!(
+        "Fig 9 — accuracy vs energy efficiency ({images} test images; thresholds \
+         calibrated on {calib_images} train images)\n\
+         point                  acc(%)  TOPS/W  energy-ratio-vs-DCIM  thresholds\n"
+    );
+    for p in &points {
+        out.push_str(&format!(
+            "  {:<21} {:>6.2}  {:>6.2}  {:>20.2}  {:?}\n",
+            p.label,
+            p.acc * 100.0,
+            p.tops_w,
+            p.energy_ratio_vs_dcim,
+            p.thresholds
+        ));
+    }
+    Ok((out, points))
+}
+
+/// Calibrate OSA thresholds (Fig 4b) on the train split.
+pub fn calibrate_osa(
+    ctx: &FigCtx,
+    constraints: &[f64],
+    calib_images: usize,
+) -> Result<crate::osa::CalibrationResult> {
+    let (imgs, labels) = ctx.ds.train_batch(0, calib_images);
+    let labels = labels.to_vec();
+    let n = labels.len();
+    // baseline loss: DCIM
+    let mut dcim_exec = Executor::new(&ctx.graph, ctx.gemm(CimMode::Dcim));
+    let (logits, _) = dcim_exec.forward(imgs, n)?;
+    let baseline = cross_entropy(&logits, &labels, ctx.graph.num_classes);
+    // saliency upper bound after K-normalization: the small-K stem layer
+    // can scale a full-range raw S up to ~nq_max*3*hmus * (cols/27) ≈ 900
+    let s_max = 1024;
+    let graph = &ctx.graph;
+    let cfg = &ctx.cfg;
+    let mut loss_fn = |ts: &[i32]| -> f64 {
+        let gemm =
+            match MacroGemm::new(CimMode::Osa, cfg.spec, cfg.fixed_b, ts.to_vec(), cfg.noise_seed)
+            {
+                Ok(g) => g,
+                Err(e) => {
+                    log::error!("bad thresholds {ts:?}: {e:#}");
+                    return f64::INFINITY;
+                }
+            };
+        let mut exec = Executor::new(graph, gemm);
+        match exec.forward(imgs, n) {
+            Ok((logits, _)) => cross_entropy(&logits, &labels, graph.num_classes),
+            Err(e) => {
+                log::error!("calibration eval failed: {e:#}");
+                f64::INFINITY
+            }
+        }
+    };
+    crate::osa::calibrate_thresholds(&mut loss_fn, baseline, constraints, s_max, 6)
+}
+
+// ---------------------------------------------------------------- Table I
+
+/// The comparison table's "This Work" column (plus context rows).
+pub fn table1(ctx: &FigCtx, images: usize, calib_images: usize) -> Result<String> {
+    let (_, points) = fig9(ctx, images, calib_images)?;
+    let dcim = &points[0];
+    let osa: Vec<&Fig9Point> = points.iter().filter(|p| p.label.starts_with("OSA-HCIM")).collect();
+    let acc_lo = osa.iter().map(|p| p.acc).fold(f64::INFINITY, f64::min);
+    let acc_hi = osa.iter().map(|p| p.acc).fold(0.0, f64::max);
+    let tw_lo = osa.iter().map(|p| p.tops_w).fold(f64::INFINITY, f64::min);
+    let tw_hi = osa.iter().map(|p| p.tops_w).fold(0.0, f64::max);
+    let ratio_hi = osa.iter().map(|p| p.energy_ratio_vs_dcim).fold(0.0, f64::max);
+    let mut out = String::from("Table I — \"This Work\" column (SynthCIFAR substitute workload)\n");
+    out.push_str("  Tech               65 nm (behavioral model)\n");
+    out.push_str("  CIM type           Dynamic Hybrid\n");
+    out.push_str("  Input precision    4/8b   Weight precision 4/8b\n");
+    out.push_str("  Array size         64x144\n");
+    out.push_str(&format!(
+        "  Accuracy           {:.1}~{:.1}% (drop {:.1}~{:.1}% vs DCIM {:.1}%)\n",
+        acc_lo * 100.0,
+        acc_hi * 100.0,
+        (dcim.acc - acc_hi) * 100.0,
+        (dcim.acc - acc_lo) * 100.0,
+        dcim.acc * 100.0
+    ));
+    out.push_str(&format!(
+        "  Energy eff.        {tw_lo:.2}~{tw_hi:.2} TOPS/W (DCIM {:.2})\n",
+        dcim.tops_w
+    ));
+    out.push_str(&format!("  Max gain vs DCIM   {ratio_hi:.2}x (paper: 1.95x)\n"));
+    out.push_str("  Saliency-aware     Yes (first CIM with dynamic D/A boundary)\n");
+    Ok(out)
+}
+
+/// Write a figure's text to `results/<name>.txt` as well as stdout.
+pub fn emit(name: &str, text: &str, results_dir: &Path) -> Result<()> {
+    println!("{text}");
+    std::fs::create_dir_all(results_dir)?;
+    let path = results_dir.join(format!("{name}.txt"));
+    std::fs::write(&path, text)?;
+    log::info!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5a_rows() {
+        let t = fig5a();
+        assert!(t.contains("B_D/A"));
+        // B=8 anchor from the decomposition: 28 digital / 26 analog / 10
+        assert!(t.contains("28"), "{t}");
+        assert!(t.lines().count() == 8, "{t}");
+    }
+
+    #[test]
+    fn fig5b_produces_rows() {
+        let t = fig5b(32, 7).unwrap();
+        assert!(t.lines().count() >= 8, "{t}");
+        assert!(t.contains("TOPS/W"));
+    }
+
+    #[test]
+    fn fig6_summary() {
+        let t = fig6();
+        assert!(t.contains("64 x 144"));
+        assert!(t.contains("mm^2"));
+    }
+
+    #[test]
+    fn glyphs_cover_candidates() {
+        for b in B_CANDIDATES {
+            assert_ne!(b_glyph(b), '?');
+        }
+        assert_eq!(b_glyph(3), '?');
+    }
+}

@@ -1,0 +1,5 @@
+//! I/O substrates: the `.rten` tensor container and a minimal JSON
+//! parser/writer (built in-repo; serde is not in the offline mirror).
+
+pub mod json;
+pub mod rten;

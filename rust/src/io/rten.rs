@@ -1,0 +1,311 @@
+//! `.rten` tensor container reader/writer — mirror of
+//! `python/compile/rten.py` (DESIGN.md §7).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"RTEN";
+const VERSION: u32 = 1;
+
+/// Element type tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    I8 = 2,
+    U8 = 3,
+    I64 = 4,
+}
+
+impl DType {
+    fn from_u8(x: u8) -> Result<Self> {
+        Ok(match x {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::I8,
+            3 => DType::U8,
+            4 => DType::I64,
+            other => bail!("unknown dtype tag {other}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+}
+
+/// Typed tensor storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    I64(Vec<i64>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I8(v) => v.len(),
+            Data::U8(v) => v.len(),
+            Data::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::I8(_) => DType::I8,
+            Data::U8(_) => DType::U8,
+            Data::I64(_) => DType::I64,
+        }
+    }
+}
+
+/// A named, shaped tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        Self { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        Self { shape, data: Data::I32(data) }
+    }
+
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> Self {
+        Self { shape, data: Data::I8(data) }
+    }
+
+    pub fn u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        Self { shape, data: Data::U8(data) }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, found {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, found {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Data::I8(v) => Ok(v),
+            other => bail!("expected i8 tensor, found {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            Data::U8(v) => Ok(v),
+            other => bail!("expected u8 tensor, found {:?}", other.dtype()),
+        }
+    }
+}
+
+/// An ordered collection of named tensors.
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+/// Read a container from disk.
+pub fn read(path: &Path) -> Result<TensorMap> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Read a container from a byte slice.
+pub fn read_bytes(bytes: &[u8]) -> Result<TensorMap> {
+    let mut cur = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}");
+    }
+    let version = read_u32(&mut cur)?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let count = read_u32(&mut cur)? as usize;
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut cur)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        cur.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes)?;
+        let mut tag = [0u8; 1];
+        cur.read_exact(&mut tag)?;
+        let dtype = DType::from_u8(tag[0])?;
+        let ndim = read_u32(&mut cur)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut cur)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut raw = vec![0u8; numel * dtype.size()];
+        cur.read_exact(&mut raw)?;
+        let data = match dtype {
+            DType::F32 => Data::F32(
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I32 => Data::I32(
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I8 => Data::I8(raw.iter().map(|&b| b as i8).collect()),
+            DType::U8 => Data::U8(raw),
+            DType::I64 => Data::I64(
+                raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write a container to disk (used by tests and result dumps).
+pub fn write(path: &Path, tensors: &TensorMap) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        if t.numel() != t.data.len() {
+            bail!("{name}: shape/data mismatch");
+        }
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&[t.data.dtype() as u8])?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Data::I8(v) => {
+                let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+                f.write_all(&bytes)?;
+            }
+            Data::U8(v) => f.write_all(v)?,
+            Data::I64(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(cur: &mut std::io::Cursor<&[u8]>) -> Result<u32> {
+    let mut b = [0u8; 4];
+    cur.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(map: &TensorMap) -> TensorMap {
+        let dir = std::env::temp_dir().join(format!("rten_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.rten");
+        write(&path, map).unwrap();
+        let back = read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        back
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut m = TensorMap::new();
+        m.insert("f".into(), Tensor::f32(vec![2, 3], vec![0.5, -1.0, 2.0, 3.5, 4.0, -0.25]));
+        m.insert("i".into(), Tensor::i32(vec![4], vec![-5, 0, 7, i32::MAX]));
+        m.insert("b".into(), Tensor::i8(vec![3], vec![-128, 0, 127]));
+        m.insert("u".into(), Tensor::u8(vec![3], vec![0, 128, 255]));
+        m.insert(
+            "l".into(),
+            Tensor { shape: vec![2], data: Data::I64(vec![1 << 40, -3]) },
+        );
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let mut m = TensorMap::new();
+        m.insert("s".into(), Tensor::f32(vec![], vec![3.5]));
+        let back = roundtrip(&m);
+        assert_eq!(back["s"].shape, Vec::<usize>::new());
+        assert_eq!(back["s"].as_f32().unwrap(), &[3.5]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(read_bytes(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut m = TensorMap::new();
+        m.insert("x".into(), Tensor::i32(vec![8], (0..8).collect()));
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rten_trunc_{}.rten", std::process::id()));
+        write(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        assert!(read_bytes(&bytes).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_data_mismatch_rejected() {
+        let mut m = TensorMap::new();
+        m.insert("x".into(), Tensor { shape: vec![3], data: Data::I32(vec![1, 2]) });
+        let path = std::env::temp_dir().join(format!("rten_bad_{}.rten", std::process::id()));
+        assert!(write(&path, &m).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let t = Tensor::i32(vec![2], vec![1, 2]);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! # osa-hcim — full-system reproduction of OSA-HCIM (arXiv cs.AR 2023)
+//!
+//! *On-the-fly Saliency-Aware Hybrid SRAM CIM with Dynamic Precision
+//! Configuration* (Chen, Ando, Fujiki, Takamaeda-Yamazaki, Yoshioka).
+//!
+//! This crate is the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas stack (see `DESIGN.md`):
+//!
+//! * [`macrosim`] — cycle-level behavioral model of the 64b x 144b hybrid
+//!   SRAM macro (8 HMUs x 144 HCIMAs, DAT, N/Q, 3-bit SAR ADC, OSE);
+//! * [`osa`] — the On-the-fly Saliency-Aware precision configuration
+//!   scheme and its threshold-calibration algorithm (paper Fig. 4b);
+//! * [`sched`] — im2col tiling of DNN layers onto macros plus the
+//!   digital/analog workload allocation of paper Fig. 5a;
+//! * [`nn`] — the quantized integer CNN engine (ResNet-mini) driven
+//!   through the macro datapath;
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas tile
+//!   artifacts (`artifacts/*.hlo.txt`); Python never runs at inference;
+//! * [`coordinator`] — threaded request router / batcher / server loop;
+//! * [`energy`] — per-component energy/area/latency model calibrated to
+//!   the paper's reported breakdowns, producing TOPS/W;
+//! * substrates built in-repo because the offline crate mirror only
+//!   carries the `xla` closure: [`cli`] (argument parsing), [`config`]
+//!   (TOML-subset), [`io::json`] (JSON), [`ptest`] (property testing),
+//!   [`benchkit`] (benchmark harness), [`util::prng`] (SplitMix64 shared
+//!   bit-exactly with Python).
+
+pub mod analog;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod figures;
+pub mod io;
+pub mod macrosim;
+pub mod nn;
+pub mod osa;
+pub mod ptest;
+pub mod quant;
+pub mod runtime;
+pub mod sched;
+pub mod spec;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,502 @@
+//! Cycle-level behavioral model of the 64b x 144b OSA-HCIM macro.
+//!
+//! One [`MacroUnit`] holds the weights of 8 HMUs (one 8-bit weight per
+//! HCIMA column) and executes the two operating modes of the paper:
+//!
+//! * **Saliency-Evaluation mode** ([`MacroUnit::saliency`]): the s=2
+//!   highest-order 1-bit MACs are computed by the DAT, N/Q-compressed to
+//!   3 bits and summed across HMU channels — the per-K-tile contribution
+//!   the OSE accumulates "across cycles".
+//! * **Computing mode** ([`MacroUnit::compute_hybrid`]): orders
+//!   `k >= B_D/A` exactly via the split-port digital path, orders
+//!   `B-4 <= k < B` through the DAC-slice / charge-share / 3-bit SAR ADC
+//!   analog path, lower orders discarded.
+//!
+//! Numerics are bit-exact with `kernels/ref.py` (same f32 ADC transfer,
+//! same integer paths) given the same noise buffer; cross-checked against
+//! the PJRT artifacts in `rust/tests/artifact_parity.rs`.
+//!
+//! The cycle model (DESIGN.md §4): the DAT retires one 1-bit MAC per
+//! digital clock across all 144 columns; the digital clock runs at 2x the
+//! analog clock ("DAT has twice lower latency than the ADC").  The SAR
+//! ADC needs 3 analog cycles per conversion and is pipelined II=1 across
+//! the per-weight-plane groups.  Digital and analog pipelines run
+//! concurrently (split-port readout), so computing-mode latency is their
+//! max.
+
+pub mod ose;
+
+use crate::analog::{adc_transfer, analog_group_bounds};
+use crate::quant::{plane_sign, PackedBits};
+use crate::spec::MacroSpec;
+use anyhow::{ensure, Result};
+
+/// Workload/latency accounting of one macro op (all 8 HMUs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// 1-bit MAC (i,j) pairs retired digitally (includes reused SE pairs).
+    pub digital_pairs: u32,
+    /// 1-bit MAC (i,j) pairs covered by analog slices.
+    pub analog_pairs: u32,
+    /// 1-bit MAC (i,j) pairs discarded.
+    pub discard_pairs: u32,
+    /// Analog slice groups (ADC conversions *per HMU*).
+    pub adc_groups: u32,
+    /// SE-mode pairs computed up front (always digital, reused later).
+    pub se_pairs: u32,
+    /// Computing-mode latency, analog-clock cycles.
+    pub compute_cycles: u32,
+    /// SE-mode latency, analog-clock cycles (0 for non-OSA modes).
+    pub se_cycles: u32,
+}
+
+impl OpCounts {
+    pub fn total_cycles(&self) -> u32 {
+        self.compute_cycles + self.se_cycles
+    }
+}
+
+/// Number of (i,j) pairs with i+j = k for the given bit widths.
+fn pairs_at_order(k: i32, sp: &MacroSpec) -> u32 {
+    let w = sp.w_bits as i32;
+    let a = sp.a_bits as i32;
+    if k < 0 || k > w + a - 2 {
+        return 0;
+    }
+    let lo = (k - (a - 1)).max(0);
+    let hi = k.min(w - 1);
+    (hi - lo + 1).max(0) as u32
+}
+
+/// Static workload allocation for a boundary (paper Fig. 5a), including
+/// the cycle model.  `with_se` adds the saliency-evaluation overhead
+/// (OSA mode only).
+pub fn counts_for_boundary(b: i32, with_se: bool, sp: &MacroSpec) -> OpCounts {
+    let mut c = OpCounts::default();
+    let k_max = sp.k_max();
+    for k in 0..=k_max {
+        let n = pairs_at_order(k, sp);
+        if k >= b {
+            c.digital_pairs += n;
+        } else if k >= b - sp.analog_band {
+            c.analog_pairs += n;
+        } else {
+            c.discard_pairs += n;
+        }
+    }
+    for i in 0..sp.w_bits as i32 {
+        if analog_group_bounds(i, b, sp).is_some() {
+            c.adc_groups += 1;
+        }
+    }
+    if with_se {
+        for k in sp.se_k_min()..=k_max {
+            c.se_pairs += pairs_at_order(k, sp);
+        }
+        // SE pairs run at the 2x digital clock, +1 cycle for the OSE
+        // threshold compare.
+        c.se_cycles = c.se_pairs.div_ceil(2) + 1;
+    }
+    // digital pairs already computed during SE mode are reused
+    let dig_remaining = c.digital_pairs - if with_se { c.se_pairs.min(c.digital_pairs) } else { 0 };
+    let dig_cycles = dig_remaining.div_ceil(2);
+    let ana_cycles = if c.adc_groups > 0 { c.adc_groups + 2 } else { 0 };
+    c.compute_cycles = dig_cycles.max(ana_cycles);
+    c
+}
+
+/// The macro: 8 HMUs x 144 HCIMA columns with loaded weights.
+#[derive(Debug, Clone)]
+pub struct MacroUnit {
+    sp: MacroSpec,
+    /// Raw weights per HMU row, length `hmus * cols` (row-major).
+    weights: Vec<i32>,
+    /// Packed weight bit planes per HMU.
+    packed: Vec<PackedBits>,
+}
+
+impl MacroUnit {
+    /// Load weights: `w_q` is `[hmus, cols]` row-major int8-as-i32.
+    pub fn new(w_q: &[i32], sp: MacroSpec) -> Result<Self> {
+        ensure!(
+            w_q.len() == sp.hmus * sp.cols,
+            "weights must be hmus*cols = {}, got {}",
+            sp.hmus * sp.cols,
+            w_q.len()
+        );
+        ensure!(
+            w_q.iter().all(|&w| (-128..=127).contains(&w)),
+            "weights out of int8 range"
+        );
+        let packed = (0..sp.hmus)
+            .map(|h| PackedBits::pack(&w_q[h * sp.cols..(h + 1) * sp.cols], sp.w_bits, true))
+            .collect();
+        Ok(Self { sp, weights: w_q.to_vec(), packed })
+    }
+
+    pub fn spec(&self) -> &MacroSpec {
+        &self.sp
+    }
+
+    /// Pack one activation vector (length `cols`) for reuse across modes.
+    pub fn pack_acts(&self, a: &[i32]) -> PackedBits {
+        debug_assert_eq!(a.len(), self.sp.cols);
+        PackedBits::pack(a, self.sp.a_bits, false)
+    }
+
+    /// Loss-free integer MAC per HMU (conventional RW + digital compute —
+    /// the DCIM ground truth).
+    pub fn exact(&self, a: &[i32]) -> Vec<i32> {
+        (0..self.sp.hmus)
+            .map(|h| {
+                let w = &self.weights[h * self.sp.cols..(h + 1) * self.sp.cols];
+                a.iter().zip(w).map(|(&x, &y)| x * y).sum()
+            })
+            .collect()
+    }
+
+    /// Saliency-Evaluation mode: S contribution of this K-tile
+    /// (3-bit N/Q per high-order DMAC, summed over HMU channels).
+    pub fn saliency(&self, a_packed: &PackedBits) -> i32 {
+        let sp = &self.sp;
+        let mut s = 0i32;
+        for h in 0..sp.hmus {
+            for i in 0..sp.w_bits {
+                let j_start = (sp.se_k_min() - i as i32).max(0) as usize;
+                for j in j_start..sp.a_bits {
+                    if a_packed.plane_empty(j) {
+                        continue;
+                    }
+                    let d = self.packed[h].and_popcount(i, a_packed, j);
+                    s += (d >> sp.nq_shift).min(sp.nq_max);
+                }
+            }
+        }
+        s
+    }
+
+    /// Computing mode with boundary `b`.  `noise` is `[hmus, w_bits]`
+    /// row-major, code units (ignored for planes without an analog group).
+    pub fn compute_hybrid(&self, a_packed: &PackedBits, b: i32, noise: &[f32]) -> Vec<i32> {
+        let sp = &self.sp;
+        debug_assert_eq!(noise.len(), sp.hmus * sp.w_bits);
+        let mut out = vec![0i32; sp.hmus];
+        for h in 0..sp.hmus {
+            let wp = &self.packed[h];
+            let mut acc = 0i32;
+            for i in 0..sp.w_bits {
+                let sign = plane_sign(i, sp.w_bits);
+                // digital domain: orders k >= b (loop starts at the
+                // boundary; empty activation planes contribute nothing)
+                let j_start = (b - i as i32).max(0) as usize;
+                for j in j_start..sp.a_bits {
+                    if a_packed.plane_empty(j) {
+                        continue;
+                    }
+                    let d = wp.and_popcount(i, a_packed, j);
+                    acc += sign * (d << (i + j));
+                }
+                // analog domain: one DAC slice + ADC conversion per plane
+                if let Some((j_lo, j_hi)) = analog_group_bounds(i as i32, b, sp) {
+                    let mut amac = 0i32;
+                    for j in j_lo..=j_hi {
+                        if a_packed.plane_empty(j as usize) {
+                            continue;
+                        }
+                        let d = wp.and_popcount(i, a_packed, j as usize);
+                        amac += d << (j - j_lo);
+                    }
+                    let nbits = j_hi - j_lo + 1;
+                    let rec = adc_transfer(amac, nbits, noise[h * sp.w_bits + i], sp);
+                    acc += sign * (rec << (i as i32 + j_lo));
+                }
+            }
+            out[h] = acc;
+        }
+        out
+    }
+
+    /// Full-analog baseline (conventional ACIM): every weight plane times
+    /// bit-parallel activation slices of ANALOG_BAND bits.
+    /// `noise` is `[hmus, w_bits, n_slices]` row-major.
+    pub fn compute_acim(&self, a_packed: &PackedBits, noise: &[f32]) -> Vec<i32> {
+        let sp = &self.sp;
+        let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
+        debug_assert_eq!(noise.len(), sp.hmus * sp.w_bits * n_slices);
+        let mut out = vec![0i32; sp.hmus];
+        for h in 0..sp.hmus {
+            let wp = &self.packed[h];
+            let mut acc = 0i32;
+            for i in 0..sp.w_bits {
+                let sign = plane_sign(i, sp.w_bits);
+                for sl in 0..n_slices {
+                    let j_lo = (sl * sp.analog_band as usize) as i32;
+                    let j_hi = (j_lo + sp.analog_band - 1).min(sp.a_bits as i32 - 1);
+                    let mut amac = 0i32;
+                    for j in j_lo..=j_hi {
+                        if a_packed.plane_empty(j as usize) {
+                            continue;
+                        }
+                        let d = wp.and_popcount(i, a_packed, j as usize);
+                        amac += d << (j - j_lo);
+                    }
+                    let nbits = j_hi - j_lo + 1;
+                    let idx = (h * sp.w_bits + i) * n_slices + sl;
+                    let rec = adc_transfer(amac, nbits, noise[idx], sp);
+                    acc += sign * (rec << (i as i32 + j_lo));
+                }
+            }
+            out[h] = acc;
+        }
+        out
+    }
+
+    /// Workload counts for running this macro at boundary `b`.
+    pub fn counts(&self, b: i32, with_se: bool) -> OpCounts {
+        counts_for_boundary(b, with_se, &self.sp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::check;
+    use crate::util::prng::SplitMix64;
+
+    fn unit(seed: u64) -> (MacroUnit, SplitMix64) {
+        let sp = MacroSpec::default();
+        let mut g = SplitMix64::new(seed);
+        let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| g.next_range_i32(-128, 128)).collect();
+        (MacroUnit::new(&w, sp).unwrap(), g)
+    }
+
+    fn acts(g: &mut SplitMix64, n: usize) -> Vec<i32> {
+        (0..n).map(|_| g.next_range_i32(0, 256)).collect()
+    }
+
+    #[test]
+    fn b0_is_exact() {
+        let (u, mut g) = unit(1);
+        let sp = *u.spec();
+        for _ in 0..10 {
+            let a = acts(&mut g, sp.cols);
+            let p = u.pack_acts(&a);
+            let noise = vec![0.5f32; sp.hmus * sp.w_bits];
+            assert_eq!(u.compute_hybrid(&p, 0, &noise), u.exact(&a));
+        }
+    }
+
+    #[test]
+    fn error_grows_with_boundary() {
+        let (u, mut g) = unit(2);
+        let sp = *u.spec();
+        let mut prev = 0.0f64;
+        let samples: Vec<Vec<i32>> = (0..64).map(|_| acts(&mut g, sp.cols)).collect();
+        let mut noise_g = SplitMix64::new(99);
+        for b in [0, 5, 7, 9, 10] {
+            let mut mse = 0.0;
+            for a in &samples {
+                let p = u.pack_acts(a);
+                let noise = noise_g.normals_f32(sp.hmus * sp.w_bits, 0.3);
+                let exact = u.exact(a);
+                let hyb = u.compute_hybrid(&p, b, &noise);
+                for (e, h) in exact.iter().zip(&hyb) {
+                    mse += ((e - h) as f64).powi(2);
+                }
+            }
+            assert!(mse >= prev, "MSE not monotone at B={b}: {mse} < {prev}");
+            prev = mse;
+        }
+        assert!(prev > 0.0);
+    }
+
+    #[test]
+    fn saliency_zero_for_zero_acts() {
+        let (u, _) = unit(3);
+        let p = u.pack_acts(&vec![0; u.spec().cols]);
+        assert_eq!(u.saliency(&p), 0);
+    }
+
+    #[test]
+    fn saliency_monotone_in_magnitude() {
+        let (u, _) = unit(4);
+        let sp = *u.spec();
+        let lo = u.saliency(&u.pack_acts(&vec![3; sp.cols]));
+        let hi = u.saliency(&u.pack_acts(&vec![255; sp.cols]));
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn counts_partition_complete() {
+        let sp = MacroSpec::default();
+        for b in 0..16 {
+            let c = counts_for_boundary(b, false, &sp);
+            assert_eq!(
+                c.digital_pairs + c.analog_pairs + c.discard_pairs,
+                64,
+                "B={b}"
+            );
+        }
+        // paper Fig 5a anchors
+        let c8 = counts_for_boundary(8, false, &sp);
+        assert_eq!((c8.digital_pairs, c8.analog_pairs, c8.discard_pairs), (28, 26, 10));
+        assert_eq!(c8.adc_groups, 8);
+        let c0 = counts_for_boundary(0, false, &sp);
+        assert_eq!(c0.digital_pairs, 64);
+        assert_eq!(c0.adc_groups, 0);
+    }
+
+    #[test]
+    fn cycle_model_speeds_up_with_b() {
+        let sp = MacroSpec::default();
+        let mut prev = u32::MAX;
+        for b in [5, 6, 7, 8, 9, 10] {
+            let c = counts_for_boundary(b, true, &sp);
+            assert!(
+                c.total_cycles() <= prev,
+                "cycles not monotone at B={b}: {} > {prev}",
+                c.total_cycles()
+            );
+            prev = c.total_cycles();
+        }
+        // DCIM (no SE): 64 pairs at 2x clock
+        assert_eq!(counts_for_boundary(0, false, &sp).compute_cycles, 32);
+    }
+
+    #[test]
+    fn acim_runs_and_is_noisy() {
+        let (u, mut g) = unit(5);
+        let sp = *u.spec();
+        let a = acts(&mut g, sp.cols);
+        let p = u.pack_acts(&a);
+        let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
+        let noise = vec![0.0f32; sp.hmus * sp.w_bits * n_slices];
+        let out = u.compute_acim(&p, &noise);
+        let exact = u.exact(&a);
+        assert_ne!(out, exact, "3-bit ADC must lose information");
+        // but should correlate strongly
+        let corr: f64 = out
+            .iter()
+            .zip(&exact)
+            .map(|(&o, &e)| (o as f64) * (e as f64))
+            .sum::<f64>();
+        assert!(corr > 0.0);
+    }
+
+    #[test]
+    fn weight_validation() {
+        let sp = MacroSpec::default();
+        assert!(MacroUnit::new(&[0; 10], sp).is_err());
+        let mut w = vec![0i32; sp.hmus * sp.cols];
+        w[0] = 200;
+        assert!(MacroUnit::new(&w, sp).is_err());
+    }
+
+    #[test]
+    fn hybrid_matches_manual_order_sum_property() {
+        // property: with zero noise and b <= 0 the hybrid equals exact for
+        // arbitrary col counts packed into the fixed geometry via padding
+        let sp = MacroSpec::default();
+        check("hybrid b<=0 exact", 20, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let w: Vec<i32> =
+                (0..sp.hmus * sp.cols).map(|_| rng.next_range_i32(-128, 128)).collect();
+            let u = MacroUnit::new(&w, sp).unwrap();
+            let a: Vec<i32> = (0..sp.cols).map(|_| rng.next_range_i32(0, 256)).collect();
+            let p = u.pack_acts(&a);
+            let noise = vec![0.0f32; sp.hmus * sp.w_bits];
+            assert_eq!(u.compute_hybrid(&p, 0, &noise), u.exact(&a));
+        });
+    }
+
+    #[test]
+    fn pairs_at_order_counts() {
+        let sp = MacroSpec::default();
+        assert_eq!(pairs_at_order(0, &sp), 1);
+        assert_eq!(pairs_at_order(7, &sp), 8);
+        assert_eq!(pairs_at_order(14, &sp), 1);
+        assert_eq!(pairs_at_order(15, &sp), 0);
+        let total: u32 = (0..=14).map(|k| pairs_at_order(k, &sp)).sum();
+        assert_eq!(total, 64);
+    }
+}
+
+#[cfg(test)]
+mod tests_4bit {
+    //! The paper's Table I lists 4/8b input and weight precision; the
+    //! datapath is fully parameterized, so exercise the 4b x 4b mode
+    //! (each HCIMA then stores two 4-bit weights — same cell count).
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn spec4() -> MacroSpec {
+        MacroSpec { w_bits: 4, a_bits: 4, ..MacroSpec::default() }
+    }
+
+    #[test]
+    fn four_bit_b0_is_exact() {
+        let sp = spec4();
+        let mut g = SplitMix64::new(40);
+        let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| g.next_range_i32(-8, 8)).collect();
+        let u = MacroUnit::new(&w, sp).unwrap();
+        for _ in 0..5 {
+            let a: Vec<i32> = (0..sp.cols).map(|_| g.next_range_i32(0, 16)).collect();
+            let p = PackedBits::pack(&a, sp.a_bits, false);
+            let noise = vec![0.0f32; sp.hmus * sp.w_bits];
+            assert_eq!(u.compute_hybrid(&p, 0, &noise), u.exact(&a));
+        }
+    }
+
+    #[test]
+    fn four_bit_counts_partition() {
+        let sp = spec4();
+        // 4x4 -> 16 1-bit MACs, k_max = 6
+        for b in 0..8 {
+            let c = counts_for_boundary(b, false, &sp);
+            assert_eq!(c.digital_pairs + c.analog_pairs + c.discard_pairs, 16, "B={b}");
+        }
+        // B=4: digital k>=4 (pairs (1,3),(2,2),(3,1),(2,3),(3,2),(3,3),(3,... )
+        let c4 = counts_for_boundary(4, false, &sp);
+        assert_eq!(c4.digital_pairs, 6); // k=4:3, k=5:2, k=6:1
+        assert_eq!(c4.discard_pairs, 0); // band covers k in [0,4)
+    }
+
+    #[test]
+    fn four_bit_se_orders() {
+        let sp = spec4();
+        assert_eq!(sp.k_max(), 6);
+        assert_eq!(sp.se_k_min(), 5);
+        let mut g = SplitMix64::new(41);
+        let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| g.next_range_i32(-8, 8)).collect();
+        let u = MacroUnit::new(&w, sp).unwrap();
+        let hi = u.saliency(&PackedBits::pack(&vec![15; sp.cols], sp.a_bits, false));
+        let lo = u.saliency(&PackedBits::pack(&vec![1; sp.cols], sp.a_bits, false));
+        assert!(hi > lo);
+        assert_eq!(lo, 0, "activation bit 0 has no order >= 5 with 4b weights");
+    }
+
+    #[test]
+    fn four_bit_error_monotone_in_boundary() {
+        let sp = spec4();
+        let mut g = SplitMix64::new(42);
+        let w: Vec<i32> = (0..sp.hmus * sp.cols).map(|_| g.next_range_i32(-8, 8)).collect();
+        let u = MacroUnit::new(&w, sp).unwrap();
+        let samples: Vec<Vec<i32>> =
+            (0..32).map(|_| (0..sp.cols).map(|_| g.next_range_i32(0, 16)).collect()).collect();
+        let mut prev = 0.0;
+        for b in [0, 3, 5, 7] {
+            let mut mse = 0.0;
+            let mut ng = SplitMix64::new(43);
+            for a in &samples {
+                let p = PackedBits::pack(a, sp.a_bits, false);
+                let noise = ng.normals_f32(sp.hmus * sp.w_bits, sp.sigma_code);
+                let exact = u.exact(a);
+                for (e, h) in exact.iter().zip(u.compute_hybrid(&p, b, &noise)) {
+                    mse += ((e - h) as f64).powi(2);
+                }
+            }
+            assert!(mse >= prev, "B={b}: {mse} < {prev}");
+            prev = mse;
+        }
+    }
+}

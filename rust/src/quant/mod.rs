@@ -1,0 +1,224 @@
+//! Fixed-point quantization + bit-plane decomposition (paper Eq. 1).
+//!
+//! The macro decomposes a multi-bit MAC into 1-bit MACs:
+//! `MAC(A, W) = sum_{i,j} s_i * 2^(i+j) * D[i][j]` with
+//! `D[i][j] = sum_c w_bit[i][c] * a_bit[j][c]`, `s_i = -1` for the
+//! two's-complement sign plane and `+1` otherwise.
+//!
+//! The hot path packs bit planes into u64 words so each 1-bit MAC over
+//! 144 columns is 3 AND+POPCNT operations ([`PackedBits`]) — this is the
+//! optimized equivalent of the 144-column adder tree.
+
+use crate::spec::MacroSpec;
+
+/// Sign of weight plane `i` under two's complement.
+#[inline]
+pub fn plane_sign(i: usize, w_bits: usize) -> i32 {
+    if i == w_bits - 1 {
+        -1
+    } else {
+        1
+    }
+}
+
+/// Bit `j` of a uint activation.
+#[inline]
+pub fn act_bit(a: i32, j: usize) -> i32 {
+    (a >> j) & 1
+}
+
+/// Bit `i` of the two's-complement encoding of an int weight.
+#[inline]
+pub fn weight_bit(w: i32, i: usize, w_bits: usize) -> i32 {
+    ((w & ((1 << w_bits) - 1)) >> i) & 1
+}
+
+/// Quantize a float to i32 with round-half-up (`floor(x/s + 0.5)`),
+/// clamped to `[lo, hi]` — matches `model.quant_round` exactly.
+#[inline]
+pub fn quantize_clamped(x: f32, scale: f32, lo: i32, hi: i32) -> i32 {
+    let q = (x / scale + 0.5).floor() as i32;
+    q.clamp(lo, hi)
+}
+
+/// uint8 activation quantization (clamp at 0 doubles as ReLU).
+#[inline]
+pub fn quantize_act(x: f32, scale: f32) -> i32 {
+    quantize_clamped(x, scale, 0, 255)
+}
+
+/// One row's bit planes packed into u64 words (LSB-first bit order
+/// within a word; column c lives in word c/64, bit c%64).
+#[derive(Debug, Clone)]
+pub struct PackedBits {
+    /// planes[p * words + w]
+    words: Vec<u64>,
+    /// bit p set when plane p has at least one 1 (sparsity fast path:
+    /// high activation planes are often all-zero, letting the hybrid
+    /// datapath skip those 1-bit MACs entirely)
+    nonzero: u16,
+    pub n_planes: usize,
+    pub n_words: usize,
+    pub n_cols: usize,
+}
+
+impl PackedBits {
+    /// Pack the bit planes of one integer vector.
+    /// `signed_bits` selects two's-complement masking for weights.
+    pub fn pack(values: &[i32], n_planes: usize, signed_bits: bool) -> Self {
+        let n_cols = values.len();
+        let n_words = n_cols.div_ceil(64);
+        let mut words = vec![0u64; n_planes * n_words];
+        let mask = (1i64 << n_planes) - 1;
+        for (c, &v) in values.iter().enumerate() {
+            let bits = if signed_bits { (v as i64) & mask } else { v as i64 };
+            debug_assert!(
+                signed_bits || (0..=mask).contains(&bits),
+                "activation {v} out of range for {n_planes} planes"
+            );
+            let (wi, bi) = (c / 64, c % 64);
+            for p in 0..n_planes {
+                if (bits >> p) & 1 == 1 {
+                    words[p * n_words + wi] |= 1u64 << bi;
+                }
+            }
+        }
+        let mut nonzero = 0u16;
+        for p in 0..n_planes {
+            if words[p * n_words..(p + 1) * n_words].iter().any(|&w| w != 0) {
+                nonzero |= 1 << p;
+            }
+        }
+        Self { words, nonzero, n_planes, n_words, n_cols }
+    }
+
+    /// True when plane `p` has no set bits (its 1-bit MACs are all 0).
+    #[inline]
+    pub fn plane_empty(&self, p: usize) -> bool {
+        self.nonzero & (1 << p) == 0
+    }
+
+    /// The packed words of plane `p`.
+    #[inline]
+    pub fn plane(&self, p: usize) -> &[u64] {
+        &self.words[p * self.n_words..(p + 1) * self.n_words]
+    }
+
+    /// 1-bit MAC: popcount(self.plane(p) & other.plane(q)).
+    #[inline]
+    pub fn and_popcount(&self, p: usize, other: &PackedBits, q: usize) -> i32 {
+        debug_assert_eq!(self.n_words, other.n_words);
+        let a = self.plane(p);
+        let b = other.plane(q);
+        let mut acc = 0u32;
+        for w in 0..self.n_words {
+            acc += (a[w] & b[w]).count_ones();
+        }
+        acc as i32
+    }
+}
+
+/// All order partial sums `D[i][j]` for one (activation row, weight row)
+/// pair — the naive reference the packed path is tested against.
+pub fn order_partials_naive(a: &[i32], w: &[i32], sp: &MacroSpec) -> Vec<Vec<i32>> {
+    assert_eq!(a.len(), w.len());
+    let mut d = vec![vec![0i32; sp.a_bits]; sp.w_bits];
+    for i in 0..sp.w_bits {
+        for j in 0..sp.a_bits {
+            let mut acc = 0;
+            for c in 0..a.len() {
+                acc += weight_bit(w[c], i, sp.w_bits) * act_bit(a[c], j);
+            }
+            d[i][j] = acc;
+        }
+    }
+    d
+}
+
+/// Exact integer dot product (the DCIM ground truth).
+pub fn exact_dot(a: &[i32], w: &[i32]) -> i32 {
+    a.iter().zip(w).map(|(&x, &y)| x * y).sum()
+}
+
+/// Recompose Eq. 1 from partials (test helper).
+pub fn recompose(d: &[Vec<i32>], sp: &MacroSpec) -> i64 {
+    let mut acc: i64 = 0;
+    for i in 0..sp.w_bits {
+        for j in 0..sp.a_bits {
+            acc += plane_sign(i, sp.w_bits) as i64 * ((d[i][j] as i64) << (i + j));
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::check;
+
+    #[test]
+    fn bits_extract() {
+        assert_eq!(act_bit(0b1010, 1), 1);
+        assert_eq!(act_bit(0b1010, 0), 0);
+        // -1 in 8-bit two's complement is 0xFF
+        for i in 0..8 {
+            assert_eq!(weight_bit(-1, i, 8), 1);
+        }
+        assert_eq!(weight_bit(-128, 7, 8), 1);
+        assert_eq!(weight_bit(-128, 6, 8), 0);
+    }
+
+    #[test]
+    fn quantize_rounding() {
+        assert_eq!(quantize_clamped(2.5, 1.0, 0, 255), 3); // half-up
+        assert_eq!(quantize_clamped(-0.4, 1.0, 0, 255), 0);
+        assert_eq!(quantize_clamped(300.0, 1.0, 0, 255), 255);
+        assert_eq!(quantize_act(-5.0, 1.0), 0);
+    }
+
+    #[test]
+    fn eq1_recomposition_matches_exact_dot() {
+        let sp = MacroSpec::default();
+        check("eq1 recomposition", 100, |g| {
+            let n = g.usize_in(1, 200);
+            let a = g.acts(n);
+            let w = g.weights(n);
+            let sp = sp;
+            let d = order_partials_naive(&a, &w, &sp);
+            assert_eq!(recompose(&d, &sp), exact_dot(&a, &w) as i64);
+        });
+    }
+
+    #[test]
+    fn packed_matches_naive() {
+        let sp = MacroSpec::default();
+        check("packed popcount == naive", 100, |g| {
+            let n = g.usize_in(1, 200);
+            let a = g.acts(n);
+            let w = g.weights(n);
+            let pa = PackedBits::pack(&a, sp.a_bits, false);
+            let pw = PackedBits::pack(&w, sp.w_bits, true);
+            let d = order_partials_naive(&a, &w, &sp);
+            for i in 0..sp.w_bits {
+                for j in 0..sp.a_bits {
+                    assert_eq!(pw.and_popcount(i, &pa, j), d[i][j], "i={i} j={j}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn packed_shapes() {
+        let p = PackedBits::pack(&[1; 144], 8, false);
+        assert_eq!(p.n_words, 3);
+        assert_eq!(p.plane(0).iter().map(|w| w.count_ones()).sum::<u32>(), 144);
+        assert_eq!(p.plane(1).iter().map(|w| w.count_ones()).sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn plane_sign_convention() {
+        assert_eq!(plane_sign(7, 8), -1);
+        assert_eq!(plane_sign(0, 8), 1);
+        assert_eq!(plane_sign(3, 4), -1);
+    }
+}

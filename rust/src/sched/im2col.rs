@@ -1,0 +1,148 @@
+//! im2col lowering of NHWC activations to GEMM rows.
+//!
+//! Patch layout is (dy, dx, c) with c fastest — identical to
+//! `python/compile/model.py::im2col` and the `[cout, kh*kw*cin]` weight
+//! matrices stored in `weights.rten`.
+
+/// Shape of an im2col result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// GEMM M dimension: one row per output pixel.
+    pub fn rows(&self) -> usize {
+        self.n * self.out_h() * self.out_w()
+    }
+
+    /// GEMM K dimension.
+    pub fn k(&self) -> usize {
+        self.kh * self.kw * self.c
+    }
+}
+
+/// Lower `[n, h, w, c]` (row-major i32) to `[rows, k]` patches with zero
+/// padding.
+pub fn im2col(x: &[i32], shape: &ConvShape) -> Vec<i32> {
+    let ConvShape { n, h, w, c, kh, kw, stride, pad } = *shape;
+    assert_eq!(x.len(), n * h * w * c, "input length mismatch");
+    let (ho, wo) = (shape.out_h(), shape.out_w());
+    let k = shape.k();
+    let mut out = vec![0i32; shape.rows() * k];
+    for img in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((img * ho + oy) * wo + ox) * k;
+                for dy in 0..kh {
+                    let iy = (oy * stride + dy) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let ix = (ox * stride + dx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((img * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (dy * kw + dx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1() {
+        let shape = ConvShape { n: 1, h: 2, w: 2, c: 3, kh: 1, kw: 1, stride: 1, pad: 0 };
+        let x: Vec<i32> = (0..12).collect();
+        assert_eq!(im2col(&x, &shape), x);
+        assert_eq!(shape.rows(), 4);
+        assert_eq!(shape.k(), 3);
+    }
+
+    #[test]
+    fn same_padding_3x3() {
+        let shape = ConvShape { n: 1, h: 3, w: 3, c: 1, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let x: Vec<i32> = (1..=9).collect();
+        let p = im2col(&x, &shape);
+        assert_eq!(shape.out_h(), 3);
+        // center pixel (1,1) sees the full image
+        let center = &p[4 * 9..5 * 9];
+        assert_eq!(center, &x[..]);
+        // corner pixel (0,0): top-left patch has zeros above/left
+        let corner = &p[0..9];
+        assert_eq!(corner, &[0, 0, 0, 0, 1, 2, 0, 4, 5]);
+    }
+
+    #[test]
+    fn stride2_shapes() {
+        let shape = ConvShape { n: 2, h: 8, w: 8, c: 4, kh: 3, kw: 3, stride: 2, pad: 1 };
+        assert_eq!(shape.out_h(), 4);
+        assert_eq!(shape.out_w(), 4);
+        let x = vec![1i32; 2 * 8 * 8 * 4];
+        let p = im2col(&x, &shape);
+        assert_eq!(p.len(), shape.rows() * shape.k());
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        // brute-force direct convolution vs im2col + dot
+        let shape = ConvShape { n: 1, h: 5, w: 5, c: 2, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let x: Vec<i32> = (0..5 * 5 * 2).map(|i| (i * 7 % 23) as i32).collect();
+        let wt: Vec<i32> = (0..3 * 3 * 2).map(|i| (i as i32 % 5) - 2).collect(); // one filter
+        let p = im2col(&x, &shape);
+        let k = shape.k();
+        for oy in 0..5usize {
+            for ox in 0..5usize {
+                let row = (oy * 5 + ox) * k;
+                let got: i32 = (0..k).map(|i| p[row + i] * wt[i]).sum();
+                // direct
+                let mut want = 0i32;
+                for dy in 0..3usize {
+                    for dx in 0..3usize {
+                        for c in 0..2usize {
+                            let iy = oy as isize + dy as isize - 1;
+                            let ix = ox as isize + dx as isize - 1;
+                            if iy < 0 || iy >= 5 || ix < 0 || ix >= 5 {
+                                continue;
+                            }
+                            let xv = x[((iy as usize * 5) + ix as usize) * 2 + c];
+                            want += xv * wt[(dy * 3 + dx) * 2 + c];
+                        }
+                    }
+                }
+                assert_eq!(got, want, "pixel ({oy},{ox})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input length mismatch")]
+    fn length_mismatch_panics() {
+        let shape = ConvShape { n: 1, h: 2, w: 2, c: 1, kh: 1, kw: 1, stride: 1, pad: 0 };
+        im2col(&[1, 2, 3], &shape);
+    }
+}

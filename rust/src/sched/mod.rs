@@ -1,0 +1,561 @@
+//! Layer scheduler: im2col lowering, K/N tiling onto 64x144 macros, and
+//! the digital/analog workload allocation of paper Fig. 5a.
+//!
+//! [`MacroGemm`] is the native (bit-exact, cycle-accounted) execution
+//! engine; `runtime::PjrtGemm` implements the same [`GemmEngine`]
+//! interface on top of the AOT PJRT artifacts.  Both follow the *same
+//! noise-stream convention* as `python/compile/model.py::MacroGemm`
+//! (one SplitMix64 stream per layer, advanced N-tile-major then K-tile,
+//! drawing `m*hmus*w_bits` normals per tile), so all three agree
+//! bit-exactly for a given seed.
+
+pub mod im2col;
+
+use crate::config::CimMode;
+use crate::energy::{EnergyAccount, EnergyParams};
+use crate::macrosim::ose::{Ose, SaliencyAccumulator};
+use crate::macrosim::{counts_for_boundary, MacroUnit};
+use crate::spec::MacroSpec;
+use crate::util::prng::{layer_noise_seed, SplitMix64};
+use anyhow::Result;
+
+/// Fixed sample-chunk size for deterministic intra-GEMM parallelism.
+const PAR_CHUNK: usize = 32;
+
+/// Pad a row-major `[m, k]` matrix to `[m, k_pad]` with zeros.
+pub fn pad_cols(a: &[i32], m: usize, k: usize, k_pad: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    if k == k_pad {
+        return a.to_vec();
+    }
+    let mut out = vec![0i32; m * k_pad];
+    for r in 0..m {
+        out[r * k_pad..r * k_pad + k].copy_from_slice(&a[r * k..(r + 1) * k]);
+    }
+    out
+}
+
+/// Pad a row-major `[n, k]` matrix to `[n_pad, k_pad]` with zeros.
+pub fn pad_matrix(w: &[i32], n: usize, k: usize, n_pad: usize, k_pad: usize) -> Vec<i32> {
+    assert_eq!(w.len(), n * k);
+    let mut out = vec![0i32; n_pad * k_pad];
+    for r in 0..n {
+        out[r * k_pad..r * k_pad + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+    }
+    out
+}
+
+/// Result of one tiled GEMM through the macro datapath.
+#[derive(Debug, Clone)]
+pub struct GemmResult {
+    /// `[m, n]` row-major i32 accumulators.
+    pub out: Vec<i32>,
+    pub m: usize,
+    pub n: usize,
+    /// Energy/cycle accounting over all macro ops.
+    pub account: EnergyAccount,
+    /// Histogram of chosen boundaries (index = B value, 0..16).
+    pub b_hist: [u64; 16],
+    /// Chosen boundary per (sample, N-tile), `[m, n_tiles]` row-major
+    /// (0 for DCIM, fixed B for HCIM, OSE-selected for OSA; -1 for ACIM).
+    pub bda: Vec<i32>,
+    pub n_tiles: usize,
+}
+
+/// Abstract GEMM engine so `nn::Executor` can run on either the native
+/// simulator or the PJRT artifacts.
+pub trait GemmEngine {
+    /// `a`: `[m, k]` uint8-as-i32 row-major; `w`: `[n, k]` int8-as-i32.
+    fn gemm(&mut self, a: &[i32], m: usize, k: usize, w: &[i32], n: usize, layer_idx: u64)
+        -> Result<GemmResult>;
+
+    /// Engine label for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Native tiled macro GEMM (the cycle-level path).
+#[derive(Debug, Clone)]
+pub struct MacroGemm {
+    pub mode: CimMode,
+    pub spec: MacroSpec,
+    pub fixed_b: i32,
+    pub ose: Ose,
+    pub noise_seed: u64,
+    pub energy: EnergyParams,
+    /// PG baseline: low-order pass is skipped when the high-order
+    /// partial's magnitude stays below this (accumulator units).
+    pub pg_delta: i32,
+    /// DRQ baseline: inputs whose tile mean is below this (uint8 units)
+    /// run at 4-bit precision.
+    pub drq_thresh: i32,
+}
+
+impl MacroGemm {
+    pub fn new(
+        mode: CimMode,
+        spec: MacroSpec,
+        fixed_b: i32,
+        thresholds: Vec<i32>,
+        noise_seed: u64,
+    ) -> Result<Self> {
+        Ok(Self {
+            mode,
+            spec,
+            fixed_b,
+            ose: Ose::with_default_candidates(thresholds)?,
+            noise_seed,
+            energy: EnergyParams::default(),
+            pg_delta: 1 << 13,
+            drq_thresh: 48,
+        })
+    }
+
+    /// Convenience constructor for a mode with default knobs.
+    pub fn with_mode(mode: CimMode) -> Self {
+        Self {
+            mode,
+            spec: MacroSpec::default(),
+            fixed_b: 8,
+            ose: Ose::with_default_candidates(vec![0, 0, 32, 94, 1024]).unwrap(),
+            noise_seed: 0xC1A0_2024,
+            energy: EnergyParams::default(),
+            pg_delta: 1 << 13,
+            drq_thresh: 48,
+        }
+    }
+
+    /// Dual-precision all-digital baselines (PG [13] / DRQ [14]).
+    ///
+    /// Both split the activation into a high nibble (bits 4..8) and a low
+    /// nibble; the low pass runs only for "important" outputs — PG gates
+    /// on the high-pass output magnitude, DRQ on the input-region mean.
+    fn gemm_dual_precision(
+        &self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+    ) -> Result<GemmResult> {
+        let sp = self.spec;
+        let kt = k.div_ceil(sp.cols).max(1);
+        let nt = n.div_ceil(sp.hmus).max(1);
+        let half_pairs = (sp.w_bits * sp.a_bits / 2) as u32;
+        let mut out = vec![0i32; m * n];
+        let mut account = EnergyAccount::default();
+        let mut b_hist = [0u64; 16];
+        let mut bda = vec![0i32; m * nt];
+        for s in 0..m {
+            let row = &a[s * k..(s + 1) * k];
+            let drq_full = if self.mode == CimMode::Drq {
+                let mean: i64 = row.iter().map(|&x| x as i64).sum::<i64>() / k as i64;
+                mean >= self.drq_thresh as i64
+            } else {
+                false
+            };
+            for ni in 0..nt {
+                let mut full = self.mode == CimMode::Drq && drq_full;
+                let c_lo = ni * sp.hmus;
+                let c_hi = ((ni + 1) * sp.hmus).min(n);
+                let mut hi_vals = vec![0i32; c_hi - c_lo];
+                for (ci, c) in (c_lo..c_hi).enumerate() {
+                    let wr = &w[c * k..(c + 1) * k];
+                    hi_vals[ci] =
+                        row.iter().zip(wr).map(|(&x, &y)| (x & !0xF) * y).sum::<i32>();
+                }
+                if self.mode == CimMode::Pg {
+                    full = hi_vals.iter().any(|v| v.abs() >= self.pg_delta);
+                }
+                for (ci, c) in (c_lo..c_hi).enumerate() {
+                    out[s * n + c] = if full {
+                        let wr = &w[c * k..(c + 1) * k];
+                        row.iter().zip(wr).map(|(&x, &y)| x * y).sum::<i32>()
+                    } else {
+                        hi_vals[ci]
+                    };
+                }
+                // energy: hi pass always; low pass only when not gated
+                let pairs = if full { 2 * half_pairs } else { half_pairs };
+                let mut counts = crate::macrosim::OpCounts {
+                    digital_pairs: pairs,
+                    compute_cycles: pairs.div_ceil(2),
+                    ..Default::default()
+                };
+                counts.discard_pairs = 2 * half_pairs - pairs;
+                for _ in 0..kt {
+                    account.record(&self.energy.op_energy(&counts, false, &sp), &counts);
+                }
+                bda[s * nt + ni] = full as i32;
+                b_hist[full as usize] += kt as u64;
+            }
+        }
+        Ok(GemmResult { out, m, n, account, b_hist, bda, n_tiles: nt })
+    }
+
+    fn n_slices(&self) -> usize {
+        self.spec.a_bits.div_ceil(self.spec.analog_band as usize)
+    }
+}
+
+impl GemmEngine for MacroGemm {
+    fn name(&self) -> &'static str {
+        "native-macrosim"
+    }
+
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
+            return self.gemm_dual_precision(a, m, k, w, n);
+        }
+        let sp = self.spec;
+        let kt = k.div_ceil(sp.cols).max(1);
+        let nt = n.div_ceil(sp.hmus).max(1);
+        let k_pad = kt * sp.cols;
+        let n_pad = nt * sp.hmus;
+        let a_p = pad_cols(a, m, k, k_pad);
+        let w_p = pad_matrix(w, n, k, n_pad, k_pad);
+        let mut stream = SplitMix64::new(layer_noise_seed(self.noise_seed, layer_idx));
+
+        // Pre-pack activation bit planes once per (sample, K-tile): they
+        // are reused by the SE pass, the compute pass and every N-tile.
+        let mut a_packed = Vec::with_capacity(m * kt);
+        for s in 0..m {
+            for ki in 0..kt {
+                let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                a_packed.push(crate::quant::PackedBits::pack(tile, sp.a_bits, false));
+            }
+        }
+
+        let mut out = vec![0i32; m * n_pad];
+        let mut account = EnergyAccount::default();
+        let mut b_hist = [0u64; 16];
+        let mut bda = vec![0i32; m * nt];
+
+        for ni in 0..nt {
+            // Build the macro for this group of 8 output channels, one
+            // K-tile at a time (the hardware reloads weights per tile).
+            let units: Vec<MacroUnit> = (0..kt)
+                .map(|ki| {
+                    let mut wt = Vec::with_capacity(sp.hmus * sp.cols);
+                    for h in 0..sp.hmus {
+                        let row = (ni * sp.hmus + h) * k_pad + ki * sp.cols;
+                        wt.extend_from_slice(&w_p[row..row + sp.cols]);
+                    }
+                    MacroUnit::new(&wt, sp)
+                })
+                .collect::<Result<_>>()?;
+
+            // ---- Saliency-Evaluation mode (OSA only) --------------------
+            let boundaries: Vec<i32> = match self.mode {
+                CimMode::Pg | CimMode::Drq => unreachable!("handled above"),
+                CimMode::Dcim => vec![crate::spec::B_DCIM; m],
+                CimMode::Hcim => vec![self.fixed_b; m],
+                CimMode::Acim => vec![-1; m],
+                CimMode::Osa => {
+                    // SE mode is pure compute: parallelize over fixed
+                    // sample chunks (deterministic regardless of core
+                    // count — each chunk writes a disjoint slice)
+                    let mut bs = vec![0i32; m];
+                    let units_ref = &units;
+                    let a_packed_ref = &a_packed;
+                    let ose = &self.ose;
+                    std::thread::scope(|scope| {
+                        for (ci, chunk) in bs.chunks_mut(PAR_CHUNK).enumerate() {
+                            scope.spawn(move || {
+                                for (off, slot) in chunk.iter_mut().enumerate() {
+                                    let s = ci * PAR_CHUNK + off;
+                                    let mut acc = SaliencyAccumulator::default();
+                                    for (ki, unit) in units_ref.iter().enumerate() {
+                                        acc.add(unit.saliency(&a_packed_ref[s * kt + ki]));
+                                    }
+                                    // N/Q normalization: rescale by the
+                                    // layer's true K so thresholds are
+                                    // layer-independent
+                                    let s_norm = crate::spec::normalize_saliency(
+                                        acc.value() as i64,
+                                        k,
+                                        sp.cols,
+                                    );
+                                    *slot = ose.select(s_norm);
+                                }
+                            });
+                        }
+                    });
+                    bs
+                }
+            };
+
+            // ---- Computing mode ----------------------------------------
+            // Parallelized over fixed sample chunks: each chunk writes a
+            // disjoint slice of a per-tile output buffer and keeps its own
+            // EnergyAccount; chunks are merged in index order, so results
+            // and accounting are bit-identical regardless of core count.
+            for (ki, unit) in units.iter().enumerate() {
+                let per_sample = if self.mode == CimMode::Acim {
+                    sp.hmus * sp.w_bits * self.n_slices()
+                } else {
+                    sp.hmus * sp.w_bits
+                };
+                // noise buffer for this (ni, ki) tile — matches python's
+                // MacroGemm._noise call order exactly (DCIM draws none)
+                let noise = if self.mode == CimMode::Dcim || sp.sigma_code == 0.0 {
+                    vec![0.0f32; if self.mode == CimMode::Dcim { 0 } else { m * per_sample }]
+                } else {
+                    stream.normals_f32(m * per_sample, sp.sigma_code)
+                };
+                let mut tile_out = vec![0i32; m * sp.hmus];
+                let n_chunks = m.div_ceil(PAR_CHUNK);
+                let mut chunk_accounts = vec![EnergyAccount::default(); n_chunks];
+                let mode = self.mode;
+                let energy = &self.energy;
+                let boundaries_ref = &boundaries;
+                let a_p_ref = &a_p;
+                let a_packed_ref = &a_packed;
+                let noise_ref = &noise;
+                let n_slices = self.n_slices();
+                std::thread::scope(|scope| {
+                    for ((ci, out_chunk), acct) in
+                        tile_out.chunks_mut(PAR_CHUNK * sp.hmus).enumerate().zip(&mut chunk_accounts)
+                    {
+                        scope.spawn(move || {
+                            let rows = out_chunk.len() / sp.hmus;
+                            for off in 0..rows {
+                                let s = ci * PAR_CHUNK + off;
+                                let (vals, counts, with_se) = match mode {
+                                    CimMode::Pg | CimMode::Drq => {
+                                        unreachable!("handled above")
+                                    }
+                                    CimMode::Dcim => {
+                                        let tile = &a_p_ref[s * k_pad + ki * sp.cols
+                                            ..s * k_pad + (ki + 1) * sp.cols];
+                                        let c = counts_for_boundary(0, false, &sp);
+                                        (unit.exact(tile), c, false)
+                                    }
+                                    CimMode::Acim => {
+                                        let packed = &a_packed_ref[s * kt + ki];
+                                        let nslice = &noise_ref
+                                            [s * per_sample..(s + 1) * per_sample];
+                                        // ACIM: every plane analog
+                                        let mut c = counts_for_boundary(0, false, &sp);
+                                        c.digital_pairs = 0;
+                                        c.analog_pairs = (sp.w_bits * sp.a_bits) as u32;
+                                        c.discard_pairs = 0;
+                                        c.adc_groups = (sp.w_bits * n_slices) as u32;
+                                        c.compute_cycles = c.adc_groups + 2;
+                                        (unit.compute_acim(packed, nslice), c, false)
+                                    }
+                                    CimMode::Osa => {
+                                        let packed = &a_packed_ref[s * kt + ki];
+                                        let nslice = &noise_ref
+                                            [s * per_sample..(s + 1) * per_sample];
+                                        let b = boundaries_ref[s];
+                                        let c = counts_for_boundary(b, true, &sp);
+                                        (unit.compute_hybrid(packed, b, nslice), c, true)
+                                    }
+                                    CimMode::Hcim => {
+                                        let packed = &a_packed_ref[s * kt + ki];
+                                        let nslice = &noise_ref
+                                            [s * per_sample..(s + 1) * per_sample];
+                                        let b = boundaries_ref[s];
+                                        let c = counts_for_boundary(b, false, &sp);
+                                        (unit.compute_hybrid(packed, b, nslice), c, false)
+                                    }
+                                };
+                                out_chunk[off * sp.hmus..(off + 1) * sp.hmus]
+                                    .copy_from_slice(&vals);
+                                acct.record(&energy.op_energy(&counts, with_se, &sp), &counts);
+                            }
+                        });
+                    }
+                });
+                for s in 0..m {
+                    for h in 0..sp.hmus {
+                        out[s * n_pad + ni * sp.hmus + h] += tile_out[s * sp.hmus + h];
+                    }
+                }
+                for acct in &chunk_accounts {
+                    account.merge(acct);
+                }
+            }
+
+            for s in 0..m {
+                bda[s * nt + ni] = boundaries[s];
+                let b = boundaries[s];
+                if (0..16).contains(&b) {
+                    b_hist[b as usize] += kt as u64;
+                }
+            }
+        }
+
+        // strip N padding
+        let mut final_out = vec![0i32; m * n];
+        for s in 0..m {
+            final_out[s * n..(s + 1) * n].copy_from_slice(&out[s * n_pad..s * n_pad + n]);
+        }
+        Ok(GemmResult { out: final_out, m, n, account, b_hist, bda, n_tiles: nt })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ptest::check;
+
+    fn rand_mat(g: &mut SplitMix64, rows: usize, cols: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..rows * cols).map(|_| g.next_range_i32(lo, hi)).collect()
+    }
+
+    fn exact_gemm(a: &[i32], m: usize, k: usize, w: &[i32], n: usize) -> Vec<i64> {
+        let mut out = vec![0i64; m * n];
+        for s in 0..m {
+            for c in 0..n {
+                let mut acc = 0i64;
+                for x in 0..k {
+                    acc += a[s * k + x] as i64 * w[c * k + x] as i64;
+                }
+                out[s * n + c] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dcim_matches_exact_for_arbitrary_shapes() {
+        check("dcim gemm exact", 10, |g| {
+            let mut rng = SplitMix64::new(g.u64());
+            let (m, k, n) =
+                (rng.next_below(6) + 1, rng.next_below(300) + 1, rng.next_below(20) + 1);
+            let a = rand_mat(&mut rng, m, k, 0, 256);
+            let w = rand_mat(&mut rng, n, k, -128, 128);
+            let mut gemm = MacroGemm::with_mode(CimMode::Dcim);
+            let r = gemm.gemm(&a, m, k, &w, n, 0).unwrap();
+            let expect = exact_gemm(&a, m, k, &w, n);
+            let got: Vec<i64> = r.out.iter().map(|&x| x as i64).collect();
+            assert_eq!(got, expect, "m={m} k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn hcim_b0_equals_dcim_outputs() {
+        let mut rng = SplitMix64::new(3);
+        let (m, k, n) = (4, 300, 10);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let mut hcim = MacroGemm::with_mode(CimMode::Hcim);
+        hcim.fixed_b = 0;
+        let mut dcim = MacroGemm::with_mode(CimMode::Dcim);
+        assert_eq!(
+            hcim.gemm(&a, m, k, &w, n, 0).unwrap().out,
+            dcim.gemm(&a, m, k, &w, n, 0).unwrap().out
+        );
+    }
+
+    #[test]
+    fn hcim_error_grows_with_b() {
+        let mut rng = SplitMix64::new(4);
+        let (m, k, n) = (16, 288, 8);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let exact = exact_gemm(&a, m, k, &w, n);
+        let mut prev = -1.0;
+        for b in [5, 8, 10] {
+            let mut gemm = MacroGemm::with_mode(CimMode::Hcim);
+            gemm.fixed_b = b;
+            let r = gemm.gemm(&a, m, k, &w, n, 0).unwrap();
+            let mse: f64 = r
+                .out
+                .iter()
+                .zip(&exact)
+                .map(|(&o, &e)| (o as f64 - e as f64).powi(2))
+                .sum::<f64>()
+                / exact.len() as f64;
+            assert!(mse > prev, "B={b}");
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn osa_selects_varied_boundaries() {
+        let mut rng = SplitMix64::new(5);
+        let m = 32;
+        let k = crate::spec::COLS;
+        let n = crate::spec::HMUS;
+        // half the samples high-magnitude, half low
+        let mut a = Vec::new();
+        for s in 0..m {
+            let (lo, hi) = if s % 2 == 0 { (180, 256) } else { (0, 30) };
+            a.extend(rand_mat(&mut rng, 1, k, lo, hi));
+        }
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let mut gemm = MacroGemm::with_mode(CimMode::Osa);
+        let r = gemm.gemm(&a, m, k, &w, n, 0).unwrap();
+        let distinct: std::collections::HashSet<i32> = r.bda.iter().copied().collect();
+        assert!(distinct.len() >= 2, "OSE chose a single boundary: {distinct:?}");
+        // high-magnitude samples must get a more precise (lower) boundary
+        let hi_b: f64 =
+            (0..m).step_by(2).map(|s| r.bda[s] as f64).sum::<f64>() / (m / 2) as f64;
+        let lo_b: f64 =
+            (1..m).step_by(2).map(|s| r.bda[s] as f64).sum::<f64>() / (m / 2) as f64;
+        assert!(hi_b < lo_b, "salient rows got coarser precision: {hi_b} vs {lo_b}");
+        assert!(r.b_hist.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn osa_uses_less_energy_than_dcim() {
+        let mut rng = SplitMix64::new(6);
+        let (m, k, n) = (16, 288, 16);
+        let a = rand_mat(&mut rng, m, k, 0, 120);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let e_d = MacroGemm::with_mode(CimMode::Dcim)
+            .gemm(&a, m, k, &w, n, 0)
+            .unwrap()
+            .account
+            .total_energy_j();
+        let e_o = MacroGemm::with_mode(CimMode::Osa)
+            .gemm(&a, m, k, &w, n, 0)
+            .unwrap()
+            .account
+            .total_energy_j();
+        assert!(e_o < e_d, "OSA {e_o} >= DCIM {e_d}");
+    }
+
+    #[test]
+    fn acim_runs_with_energy() {
+        let mut rng = SplitMix64::new(7);
+        let (m, k, n) = (4, 144, 8);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let r = MacroGemm::with_mode(CimMode::Acim).gemm(&a, m, k, &w, n, 0).unwrap();
+        assert!(r.account.breakdown.adc_fj > 0.0);
+        assert_eq!(r.bda, vec![-1; 4]);
+    }
+
+    #[test]
+    fn noise_stream_is_deterministic_per_seed() {
+        let mut rng = SplitMix64::new(8);
+        let (m, k, n) = (4, 144, 8);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let r1 = MacroGemm::with_mode(CimMode::Hcim).gemm(&a, m, k, &w, n, 3).unwrap();
+        let r2 = MacroGemm::with_mode(CimMode::Hcim).gemm(&a, m, k, &w, n, 3).unwrap();
+        assert_eq!(r1.out, r2.out);
+        let r3 = MacroGemm::with_mode(CimMode::Hcim).gemm(&a, m, k, &w, n, 4).unwrap();
+        assert_ne!(r1.out, r3.out, "different layer index must shift the noise stream");
+    }
+
+    #[test]
+    fn padding_helpers() {
+        let a = vec![1, 2, 3, 4];
+        let p = pad_cols(&a, 2, 2, 4);
+        assert_eq!(p, vec![1, 2, 0, 0, 3, 4, 0, 0]);
+        let w = pad_matrix(&a, 2, 2, 3, 3);
+        assert_eq!(w, vec![1, 2, 0, 3, 4, 0, 0, 0, 0]);
+    }
+}

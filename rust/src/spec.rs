@@ -1,0 +1,203 @@
+//! Normative numeric specification — mirror of
+//! `python/compile/kernels/spec.py` (DESIGN.md §3).
+//!
+//! [`MacroSpec::validate_against_artifacts`] cross-checks these constants
+//! against `artifacts/spec.json` at startup so the two languages can
+//! never silently drift.
+
+use crate::io::json::JsonValue;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// Columns per HMU == dot-product (K-tile) length.
+pub const COLS: usize = 144;
+/// HMUs per macro == output channels produced per macro op.
+pub const HMUS: usize = 8;
+/// SRAM rows = HMUS * W_BITS (one 8-bit weight per HCIMA).
+pub const ROWS: usize = 64;
+/// Weight bit-planes (int8 two's complement; plane 7 weighs -2^7).
+pub const W_BITS: usize = 8;
+/// Activation bit-planes (uint8, post-ReLU).
+pub const A_BITS: usize = 8;
+/// Highest output order k = i + j.
+pub const K_MAX: usize = W_BITS + A_BITS - 2;
+/// Orders B-4 <= k < B go to ACIM (the DAC supports 1..4-bit slices).
+pub const ANALOG_BAND: i32 = 4;
+/// Saliency is evaluated from the s=2 highest orders.
+pub const SE_ORDERS: usize = 2;
+/// k threshold for saliency-evaluation mode (k in {13, 14} for 8b x 8b).
+pub const SE_K_MIN: i32 = (K_MAX - SE_ORDERS + 1) as i32;
+/// N/Q unit: NQ(d) = min(NQ_MAX, d >> NQ_SHIFT).
+pub const NQ_SHIFT: i32 = 1;
+/// 3-bit N/Q ceiling.
+pub const NQ_MAX: i32 = 7;
+/// Fig 5b operating points, coarse -> fine.
+pub const B_CANDIDATES: [i32; 6] = [10, 9, 8, 7, 6, 5];
+/// Boundary value that makes every order digital (the DCIM baseline).
+pub const B_DCIM: i32 = 0;
+/// SAR ADC resolution.
+pub const ADC_BITS: u32 = 3;
+/// 2^ADC_BITS quantization levels.
+pub const ADC_LEVELS: i32 = 1 << ADC_BITS;
+/// Charge-share rail sized for typical 25% bit density (DESIGN.md §3).
+pub const ADC_FS_FRAC: f32 = 0.25;
+/// Default input-referred ADC noise, in code units.
+pub const SIGMA_CODE: f64 = 0.3;
+/// Samples per AOT hybrid/se tile artifact.
+pub const TILE_M: usize = 256;
+/// Spec version — bump together with spec.py.
+pub const SPEC_VERSION: i64 = 5;
+
+/// Runtime-carried spec so tests can override knobs (e.g. sigma = 0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MacroSpec {
+    pub cols: usize,
+    pub hmus: usize,
+    pub w_bits: usize,
+    pub a_bits: usize,
+    pub analog_band: i32,
+    pub se_orders: usize,
+    pub nq_shift: i32,
+    pub nq_max: i32,
+    pub adc_bits: u32,
+    pub adc_fs_frac: f32,
+    pub sigma_code: f64,
+}
+
+impl Default for MacroSpec {
+    fn default() -> Self {
+        Self {
+            cols: COLS,
+            hmus: HMUS,
+            w_bits: W_BITS,
+            a_bits: A_BITS,
+            analog_band: ANALOG_BAND,
+            se_orders: SE_ORDERS,
+            nq_shift: NQ_SHIFT,
+            nq_max: NQ_MAX,
+            adc_bits: ADC_BITS,
+            adc_fs_frac: ADC_FS_FRAC,
+            sigma_code: SIGMA_CODE,
+        }
+    }
+}
+
+impl MacroSpec {
+    /// Highest output order k = i + j.
+    pub fn k_max(&self) -> i32 {
+        (self.w_bits + self.a_bits - 2) as i32
+    }
+
+    /// Lowest order included in saliency evaluation.
+    pub fn se_k_min(&self) -> i32 {
+        self.k_max() - self.se_orders as i32 + 1
+    }
+
+    /// ADC quantization level count.
+    pub fn adc_levels(&self) -> i32 {
+        1 << self.adc_bits
+    }
+
+    /// A spec with noise disabled — the deterministic cross-language mode.
+    pub fn noiseless(mut self) -> Self {
+        self.sigma_code = 0.0;
+        self
+    }
+
+    /// Validate these constants against `artifacts/spec.json`.
+    pub fn validate_against_artifacts(&self, artifacts_dir: &Path) -> anyhow::Result<()> {
+        let path = artifacts_dir.join("spec.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = crate::io::json::parse(&text)?;
+        let geti = |k: &str| -> anyhow::Result<i64> {
+            doc.get(k)
+                .and_then(JsonValue::as_i64)
+                .with_context(|| format!("spec.json missing int field {k}"))
+        };
+        let getf = |k: &str| -> anyhow::Result<f64> {
+            doc.get(k)
+                .and_then(JsonValue::as_f64)
+                .with_context(|| format!("spec.json missing float field {k}"))
+        };
+        if geti("version")? != SPEC_VERSION {
+            bail!("spec.json version {} != crate {}", geti("version")?, SPEC_VERSION);
+        }
+        let checks: [(&str, i64); 9] = [
+            ("cols", self.cols as i64),
+            ("hmus", self.hmus as i64),
+            ("w_bits", self.w_bits as i64),
+            ("a_bits", self.a_bits as i64),
+            ("analog_band", self.analog_band as i64),
+            ("se_orders", self.se_orders as i64),
+            ("nq_shift", self.nq_shift as i64),
+            ("nq_max", self.nq_max as i64),
+            ("adc_bits", self.adc_bits as i64),
+        ];
+        for (k, v) in checks {
+            let got = geti(k)?;
+            if got != v {
+                bail!("spec mismatch for {k}: artifacts={got} crate={v}");
+            }
+        }
+        if (getf("adc_fs_frac")? - self.adc_fs_frac as f64).abs() > 1e-9 {
+            bail!("spec mismatch for adc_fs_frac");
+        }
+        let cands = doc
+            .get("b_candidates")
+            .and_then(JsonValue::as_array)
+            .context("spec.json missing b_candidates")?;
+        let cands: Vec<i64> = cands.iter().filter_map(JsonValue::as_i64).collect();
+        if cands != B_CANDIDATES.map(|x| x as i64) {
+            bail!("b_candidates mismatch: {cands:?}");
+        }
+        Ok(())
+    }
+}
+
+/// Normalize a raw accumulated saliency to the macro's column budget so
+/// OSE thresholds are comparable across layers with different K depths
+/// (the "normalization" half of the N/Q unit; a per-layer constant the
+/// controller programs).  `k_real` is the layer's unpadded K dimension.
+/// Mirrored by `spec.py::normalize_saliency`.
+pub fn normalize_saliency(s_raw: i64, k_real: usize, cols: usize) -> i32 {
+    if k_real == 0 {
+        return 0;
+    }
+    ((s_raw * cols as i64) / k_real as i64).min(i32::MAX as i64) as i32
+}
+
+/// Default artifacts directory (overridable with `--artifacts` / config).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("OSA_HCIM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_constants() {
+        let sp = MacroSpec::default();
+        assert_eq!(sp.k_max(), 14);
+        assert_eq!(sp.se_k_min(), 13);
+        assert_eq!(sp.adc_levels(), 8);
+        assert_eq!(ROWS, HMUS * W_BITS);
+    }
+
+    #[test]
+    fn noiseless_override() {
+        let sp = MacroSpec::default().noiseless();
+        assert_eq!(sp.sigma_code, 0.0);
+        assert_eq!(sp.cols, COLS);
+    }
+
+    #[test]
+    fn candidates_are_coarse_to_fine() {
+        for w in B_CANDIDATES.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! SplitMix64 PRNG + Box-Muller normals — bit-identical with
+//! `python/compile/prng.py` (see the parity test against the golden
+//! vectors embedded in `artifacts/spec.json`).
+//!
+//! The CIM noise model never samples inside a kernel: Rust draws explicit
+//! noise buffers from this generator and hands the *same* buffer to both
+//! the native simulator and the PJRT artifact, making the two paths
+//! comparable bit-exactly.
+
+/// The splitmix64 increment (also used for seed derivation conventions).
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Sebastiano Vigna's splitmix64.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Current internal state (used by stream-position tests).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * 2.0_f64.powi(-53)
+    }
+
+    /// One standard normal via Box-Muller (cosine branch only); consumes
+    /// exactly two u64s, matching the Python stream position.
+    pub fn next_normal(&mut self) -> f64 {
+        let mut u1 = self.next_f64();
+        let u2 = self.next_f64();
+        if u1 <= 0.0 {
+            u1 = 2.0_f64.powi(-53);
+        }
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// `n` standard normals as f32 (the ADC noise dtype), scaled by sigma.
+    /// Uses both Box-Muller branches (cos and sin) per pair of u64 draws —
+    /// half the transcendental cost of calling [`Self::next_normal`] n
+    /// times.  Bit-identical with `python prng.SplitMix64.normals`.
+    pub fn normals_f32(&mut self, n: usize, sigma: f64) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let mut u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 <= 0.0 {
+                u1 = 2.0_f64.powi(-53);
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let t = 2.0 * std::f64::consts::PI * u2;
+            out.push((r * t.cos() * sigma) as f32);
+            if out.len() < n {
+                out.push((r * t.sin() * sigma) as f32);
+            }
+        }
+        out
+    }
+
+    /// Uniform usize in [0, bound) by rejection-free multiply-shift
+    /// (small bias acceptable for test-data generation only).
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform i32 in [lo, hi).
+    pub fn next_range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.next_below((hi - lo) as usize) as i32
+    }
+}
+
+/// Per-layer noise stream seed — the convention shared with Python
+/// (`prng.layer_noise_seed`): `base ^ ((layer+1) * GOLDEN)`.
+pub fn layer_noise_seed(base_seed: u64, layer_idx: u64) -> u64 {
+    base_seed ^ (layer_idx + 1).wrapping_mul(GOLDEN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector_seed0() {
+        // Canonical outputs (Vigna's C implementation / python test_prng.py).
+        let mut g = SplitMix64::new(0);
+        assert_eq!(g.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(g.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(g.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut g = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let u = g.next_f64();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = SplitMix64::new(42);
+        let xs: Vec<f64> = (0..20000).map(|_| g.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.03, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn normal_consumes_two_u64() {
+        let mut g1 = SplitMix64::new(9);
+        g1.next_normal();
+        let mut g2 = SplitMix64::new(9);
+        g2.next_u64();
+        g2.next_u64();
+        assert_eq!(g1.state(), g2.state());
+    }
+
+    #[test]
+    fn layer_seed_convention() {
+        assert_eq!(layer_noise_seed(1, 0), 1 ^ GOLDEN);
+        let seeds: std::collections::HashSet<u64> =
+            (0..32).map(|i| layer_noise_seed(1, i)).collect();
+        assert_eq!(seeds.len(), 32);
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut g = SplitMix64::new(3);
+        for _ in 0..1000 {
+            assert!(g.next_below(10) < 10);
+        }
+        for _ in 0..1000 {
+            let v = g.next_range_i32(-5, 5);
+            assert!((-5..5).contains(&v));
+        }
+    }
+}

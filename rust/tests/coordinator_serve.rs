@@ -1,0 +1,103 @@
+//! Coordinator integration: live server over the native engine
+//! (requires `make artifacts`; skips when absent).
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::coordinator::Server;
+use osa_hcim::nn::data::Dataset;
+use osa_hcim::nn::QGraph;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = osa_hcim::spec::default_artifacts_dir();
+    dir.join("spec.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+fn setup(cfg: &SystemConfig) -> (Server, Dataset) {
+    let ds = Dataset::load(&cfg.artifacts_dir).unwrap();
+    let graph = Arc::new(QGraph::load(&cfg.artifacts_dir).unwrap());
+    (Server::start(cfg, graph).unwrap(), ds)
+}
+
+#[test]
+fn serves_requests_and_answers_all() {
+    let _dir = require_artifacts!();
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 2;
+    cfg.max_batch = 8;
+    let (server, ds) = setup(&cfg);
+    let n = 24usize.min(ds.test_n());
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let (img, _) = ds.test_batch(i, 1);
+        pending.push((i, server.submit(img.to_vec()).unwrap()));
+    }
+    let mut correct = 0;
+    let mut ids = std::collections::HashSet::new();
+    for (i, rx) in pending {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.batch_size >= 1);
+        assert!(ids.insert(resp.id), "duplicate response id");
+        if resp.pred as i32 == ds.test_y[i] {
+            correct += 1;
+        }
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, n as u64);
+    assert!(metrics.batches >= 1);
+    assert!(correct as f64 / n as f64 > 0.85, "serving path broke accuracy");
+    assert!(metrics.p95_latency_us() >= metrics.p50_latency_us());
+    assert!(metrics.tops_per_watt(&cfg.spec) > 1.0);
+}
+
+#[test]
+fn batcher_coalesces_under_load() {
+    let _dir = require_artifacts!();
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 16;
+    cfg.batch_timeout_us = 50_000; // generous window so the burst coalesces
+    let (server, ds) = setup(&cfg);
+    let n = 32;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let (img, _) = ds.test_batch(i, 1);
+        pending.push(server.submit(img.to_vec()).unwrap());
+    }
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let metrics = server.shutdown();
+    assert!(
+        metrics.mean_batch() > 1.5,
+        "burst of {n} produced mean batch {:.2}",
+        metrics.mean_batch()
+    );
+}
+
+#[test]
+fn shutdown_is_clean_and_rejects_after() {
+    let _dir = require_artifacts!();
+    let cfg = SystemConfig::default();
+    let (server, ds) = setup(&cfg);
+    let (img, _) = ds.test_batch(0, 1);
+    let rx = server.submit(img.to_vec()).unwrap();
+    rx.recv().expect("response before shutdown");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 1);
+}

@@ -1,0 +1,142 @@
+//! End-to-end integration over the quantized CNN engine + macro
+//! datapath (requires `make artifacts`; skips when absent).
+
+use osa_hcim::config::CimMode;
+use osa_hcim::nn::data::{Dataset, Golden};
+use osa_hcim::nn::{accuracy, cross_entropy, Executor, QGraph};
+use osa_hcim::sched::MacroGemm;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = osa_hcim::spec::default_artifacts_dir();
+    dir.join("spec.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn native_dcim_reproduces_python_quantized_golden() {
+    let dir = require_artifacts!();
+    let graph = QGraph::load(&dir).unwrap();
+    let ds = Dataset::load(&dir).unwrap();
+    let golden = Golden::load(&dir).unwrap();
+    let n = golden.golden_n;
+    let (imgs, _) = ds.test_batch(0, n);
+    let mut exec = Executor::new(&graph, MacroGemm::with_mode(CimMode::Dcim));
+    let (logits, stats) = exec.forward(imgs, n).unwrap();
+    // DCIM is exact integer math on both sides; the float steps (dequant
+    // scales, GAP mean, requantize) can land exactly on a rounding
+    // boundary, so allow one FC-input quantization step of slack.
+    for (i, (a, b)) in logits.iter().zip(&golden.dcim_logits).enumerate() {
+        assert!(
+            (a - b).abs() <= 1.5e-2 * b.abs().max(1.0),
+            "logit {i}: native {a} vs golden {b}"
+        );
+    }
+    assert!(stats.account.macro_ops > 0);
+    assert_eq!(stats.b_hist[0], stats.account.macro_ops);
+}
+
+#[test]
+fn mode_accuracy_ordering_holds() {
+    // The paper's Fig 9 ordering: DCIM >= HCIM(B=8) >> coarse points;
+    // every mode must stay well above chance except possibly ACIM.
+    let dir = require_artifacts!();
+    let graph = QGraph::load(&dir).unwrap();
+    let ds = Dataset::load(&dir).unwrap();
+    let n = 48usize.min(ds.test_n());
+    let (imgs, labels) = ds.test_batch(0, n);
+    let mut accs = std::collections::BTreeMap::new();
+    for (name, mode, b) in [
+        ("dcim", CimMode::Dcim, 0),
+        ("hcim6", CimMode::Hcim, 6),
+        ("hcim8", CimMode::Hcim, 8),
+    ] {
+        let mut gemm = MacroGemm::with_mode(mode);
+        gemm.fixed_b = b;
+        let mut exec = Executor::new(&graph, gemm);
+        let (logits, _) = exec.forward(imgs, n).unwrap();
+        accs.insert(name, accuracy(&logits, labels, graph.num_classes));
+    }
+    assert!(accs["dcim"] > 0.9, "DCIM too weak: {:?}", accs);
+    assert!(accs["dcim"] >= accs["hcim8"] - 1e-9, "{accs:?}");
+    assert!(accs["hcim6"] >= accs["hcim8"] - 0.05, "{accs:?}");
+    assert!(accs["hcim8"] > 0.85, "hybrid B=8 collapsed: {accs:?}");
+}
+
+#[test]
+fn energy_ordering_matches_paper_claims() {
+    let dir = require_artifacts!();
+    let graph = QGraph::load(&dir).unwrap();
+    let ds = Dataset::load(&dir).unwrap();
+    let n = 16usize.min(ds.test_n());
+    let (imgs, _) = ds.test_batch(0, n);
+    let mut energy = std::collections::BTreeMap::new();
+    for (name, mode, b) in [
+        ("dcim", CimMode::Dcim, 0),
+        ("hcim8", CimMode::Hcim, 8),
+        ("osa", CimMode::Osa, 8),
+    ] {
+        let mut gemm = MacroGemm::with_mode(mode);
+        gemm.fixed_b = b;
+        let mut exec = Executor::new(&graph, gemm);
+        let (_, stats) = exec.forward(imgs, n).unwrap();
+        energy.insert(name, stats.account.total_energy_j());
+    }
+    let r_hcim = energy["dcim"] / energy["hcim8"];
+    assert!(
+        (1.4..1.8).contains(&r_hcim),
+        "HCIM ratio {r_hcim:.3}, paper says 1.56x"
+    );
+    assert!(energy["osa"] < energy["dcim"], "OSA must beat DCIM energy");
+}
+
+#[test]
+fn osa_bda_maps_have_spatial_structure() {
+    // Fig 8a property: boundary maps must not be constant — the OSE must
+    // separate salient from non-salient positions within an image.
+    let dir = require_artifacts!();
+    let graph = QGraph::load(&dir).unwrap();
+    let ds = Dataset::load(&dir).unwrap();
+    let mut gemm = MacroGemm::with_mode(CimMode::Osa);
+    gemm.ose = osa_hcim::macrosim::ose::Ose::with_default_candidates(vec![2, 6, 14, 30, 60])
+        .unwrap();
+    let mut exec = Executor::new(&graph, gemm);
+    exec.collect_bda = true;
+    let (imgs, _) = ds.test_batch(0, 4);
+    let (_, stats) = exec.forward(imgs, 4).unwrap();
+    assert!(!stats.bda_maps.is_empty());
+    let mut saw_variation = false;
+    for (_, _, _, _, bda) in &stats.bda_maps {
+        let min = bda.iter().min().unwrap();
+        let max = bda.iter().max().unwrap();
+        if min != max {
+            saw_variation = true;
+        }
+    }
+    assert!(saw_variation, "every B_D/A map is constant — OSE is blind");
+}
+
+#[test]
+fn cross_entropy_consistent_with_accuracy() {
+    let dir = require_artifacts!();
+    let graph = QGraph::load(&dir).unwrap();
+    let ds = Dataset::load(&dir).unwrap();
+    let n = 32usize.min(ds.test_n());
+    let (imgs, labels) = ds.test_batch(0, n);
+    let mut exec = Executor::new(&graph, MacroGemm::with_mode(CimMode::Dcim));
+    let (logits, _) = exec.forward(imgs, n).unwrap();
+    let acc = accuracy(&logits, labels, graph.num_classes);
+    let ce = cross_entropy(&logits, labels, graph.num_classes);
+    assert!(acc > 0.9 && ce < 0.5, "acc {acc} ce {ce}");
+}
