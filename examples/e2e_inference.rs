@@ -105,7 +105,9 @@ fn main() -> anyhow::Result<()> {
     }
     let mut correct = 0usize;
     for (i, rx) in pending {
-        if rx.recv()?.pred as i32 == ctx.ds.test_y[i] {
+        let resp = rx.recv()?;
+        anyhow::ensure!(resp.error.is_none(), "request {i} failed: {:?}", resp.error);
+        if resp.pred as i32 == ctx.ds.test_y[i] {
             correct += 1;
         }
     }

@@ -51,6 +51,9 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0usize;
     for (i, rx) in pending {
         let resp = rx.recv()?;
+        if let Some(err) = &resp.error {
+            anyhow::bail!("request {i} failed in the worker: {err}");
+        }
         if resp.pred as i32 == ctx.ds.test_y[i] {
             correct += 1;
         }

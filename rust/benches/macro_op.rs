@@ -6,6 +6,7 @@
 
 use osa_hcim::benchkit::Bench;
 use osa_hcim::macrosim::MacroUnit;
+use osa_hcim::sched::plan::LayerPlan;
 use osa_hcim::spec::MacroSpec;
 use osa_hcim::util::prng::SplitMix64;
 use std::time::Duration;
@@ -50,4 +51,14 @@ fn main() {
         .target(Duration::from_secs(1))
         .items(64.0)
         .run(|| g.normals_f32(64, 0.3));
+
+    // plan build: the one-time weight-packing cost the PlanCache
+    // amortizes across every call (stage-2 layer shape)
+    let (kk, nn) = (288usize, 32usize);
+    let mut pg = SplitMix64::new(4);
+    let wl: Vec<i32> = (0..nn * kk).map(|_| pg.next_range_i32(-128, 128)).collect();
+    Bench::new("layer_plan_build(K=288,N=32)")
+        .target(Duration::from_secs(1))
+        .items((nn * kk) as f64)
+        .run(|| LayerPlan::build(&wl, nn, kk, 0, sp).unwrap());
 }

@@ -1,29 +1,41 @@
 //! End-to-end pipeline benchmarks (cargo bench --bench pipeline).
 //!
 //! One row per paper experiment surface: the tiled GEMM per mode
-//! (Fig 5 workloads), full-network single-image inference per mode
+//! (Fig 5 workloads), the plan/execute split (cold packing vs warm
+//! cached execution), full-network inference over a persistent executor
 //! (Fig 9 workloads) and the coordinator serve loop (throughput /
-//! latency claims).  Requires `make artifacts`.
+//! latency claims).  Falls back to `QGraph::synthetic()` when the AOT
+//! artifacts are absent so the perf trajectory is tracked everywhere.
+//!
+//! Emits `BENCH_pipeline.json` (override the path with `BENCH_OUT`):
+//! serve requests/s, latency percentiles and the plan-cache hit rate.
 
 use osa_hcim::benchkit::Bench;
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
+use osa_hcim::io::json::{num, obj, s, JsonValue};
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::{Executor, QGraph};
 use osa_hcim::sched::{GemmEngine, MacroGemm};
 use osa_hcim::util::prng::SplitMix64;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     osa_hcim::util::logging::init();
     let cfg = SystemConfig::default();
-    if cfg.spec.validate_against_artifacts(&cfg.artifacts_dir).is_err() {
-        eprintln!("pipeline bench needs artifacts — run `make artifacts` first");
-        return;
-    }
-    let ds = Dataset::load(&cfg.artifacts_dir).unwrap();
-    let graph = QGraph::load(&cfg.artifacts_dir).unwrap();
+    let have_artifacts = cfg.spec.validate_against_artifacts(&cfg.artifacts_dir).is_ok();
+    let (graph, img) = if have_artifacts {
+        let ds = Dataset::load(&cfg.artifacts_dir).unwrap();
+        let graph = QGraph::load(&cfg.artifacts_dir).unwrap();
+        let (img, _) = ds.test_batch(0, 1);
+        (graph, img.to_vec())
+    } else {
+        eprintln!("artifacts not built — benchmarking over the synthetic graph");
+        let mut g = SplitMix64::new(11);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect();
+        (QGraph::synthetic(), img)
+    };
 
     // --- tiled GEMM per mode (stage-2 layer shape: K=288, N=32) ---------
     let (m, k, n) = (256usize, 288usize, 32usize);
@@ -38,28 +50,51 @@ fn main() {
             .items((m * n * k) as f64)
             .run(|| gemm.gemm(&a, m, k, &w, n, 0).unwrap());
     }
+    for mode in [CimMode::Pg, CimMode::Drq] {
+        let mut gemm = MacroGemm::with_mode(mode);
+        Bench::new(&format!("gemm/{}", mode.name()))
+            .target(Duration::from_secs(1))
+            .items((m * n * k) as f64)
+            .run(|| gemm.gemm(&a, m, k, &w, n, 0).unwrap());
+    }
 
-    // --- full-network inference per mode --------------------------------
-    println!("\n# pipeline — ResNet-mini single-image inference (32x32x3)");
-    let (img, _) = ds.test_batch(0, 1);
+    // --- plan/execute split: cold packing vs warm cached execution -------
+    println!("\n# pipeline — plan/execute split (same GEMM, fresh cache vs cached plan)");
+    Bench::new("plan/cold_build_and_execute")
+        .target(Duration::from_secs(3))
+        .items((m * n * k) as f64)
+        .run(|| MacroGemm::with_mode(CimMode::Osa).gemm(&a, m, k, &w, n, 0).unwrap());
+    let mut warm = MacroGemm::with_mode(CimMode::Osa);
+    warm.gemm(&a, m, k, &w, n, 0).unwrap();
+    Bench::new("plan/warm_execute")
+        .target(Duration::from_secs(3))
+        .items((m * n * k) as f64)
+        .run(|| warm.gemm(&a, m, k, &w, n, 0).unwrap());
+    let ws = warm.plan_stats();
+    println!(
+        "plan cache after warm run: hits={} misses={} hit_rate={:.4}",
+        ws.hits,
+        ws.misses,
+        ws.hit_rate()
+    );
+
+    // --- full-network inference over a persistent executor ---------------
+    println!("\n# pipeline — single-image inference (32x32x3), persistent executor");
     for mode in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa] {
         let gemm = MacroGemm::with_mode(mode);
+        let mut exec = Executor::new(&graph, gemm);
+        exec.preplan().unwrap();
         Bench::new(&format!("infer/{}", mode.name()))
             .target(Duration::from_secs(5))
             .max_iters(200)
             .items(1.0)
-            .run(|| {
-                let mut exec = Executor::new(&graph, gemm.clone());
-                exec.forward(img, 1).unwrap()
-            });
+            .run(|| exec.forward(&img, 1).unwrap());
     }
 
     // --- coordinator serve loop ------------------------------------------
     println!("\n# pipeline — coordinator round trip (submit -> batch -> respond)");
     let graph = Arc::new(graph);
     let server = Server::start(&cfg, graph).unwrap();
-    let (img, _) = ds.test_batch(0, 1);
-    let img = img.to_vec();
     Bench::new("serve/round_trip")
         .target(Duration::from_secs(5))
         .max_iters(500)
@@ -68,6 +103,42 @@ fn main() {
             let rx = server.submit(img.clone()).unwrap();
             rx.recv().unwrap()
         });
+
+    // --- serve throughput: closed burst of single-image requests ---------
+    let burst = 256usize;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..burst).map(|_| server.submit(img.clone()).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "serve burst hit an error: {:?}", resp.error);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = burst as f64 / wall;
+    let pstats = server.plan_stats();
     let metrics = server.shutdown();
+    println!(
+        "serve/burst: {burst} requests in {wall:.3}s -> {rps:.1} req/s  \
+         plan_cache: hits={} misses={} hit_rate={:.4}",
+        pstats.hits,
+        pstats.misses,
+        pstats.hit_rate()
+    );
     println!("{}", metrics.report(&cfg.spec));
+
+    // --- BENCH_pipeline.json ---------------------------------------------
+    let doc = obj(vec![
+        ("bench", s("pipeline")),
+        ("synthetic_graph", JsonValue::Bool(!have_artifacts)),
+        ("serve_burst", num(burst as f64)),
+        ("serve_requests_per_s", num(rps)),
+        ("serve_p50_latency_us", num(metrics.p50_latency_us())),
+        ("serve_p95_latency_us", num(metrics.p95_latency_us())),
+        ("serve_mean_batch", num(metrics.mean_batch())),
+        ("plan_cache_hits", num(pstats.hits as f64)),
+        ("plan_cache_misses", num(pstats.misses as f64)),
+        ("plan_cache_hit_rate", num(pstats.hit_rate())),
+    ]);
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".into());
+    std::fs::write(&out, doc.to_string_compact()).unwrap();
+    println!("wrote {out}");
 }

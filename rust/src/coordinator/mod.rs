@@ -5,10 +5,14 @@
 //!
 //! Flow: clients [`Server::submit`] single images; the batcher thread
 //! coalesces them (up to `max_batch`, bounded by `batch_timeout_us`) and
-//! round-robins batches across workers; each worker owns a
-//! [`nn::Executor`] over its own engine clone and answers through the
-//! per-request response channel.  Energy/boundary metrics from every
-//! forward are folded into the shared [`Metrics`].
+//! round-robins batches across workers; each worker keeps one
+//! **persistent** [`nn::Executor`] over its own engine clone — the
+//! engine clones share one `sched::plan::PlanCache` via `Arc`, so every
+//! layer's weight tiles are packed exactly once per process and reused
+//! by all workers for all batches (the weight-stationary hot path).
+//! A failed forward answers every request in the batch with an error
+//! [`Response`] instead of dropping the channel.  Energy/boundary
+//! metrics from every forward are folded into the shared [`Metrics`].
 
 use crate::config::SystemConfig;
 use crate::energy::EnergyAccount;
@@ -39,6 +43,9 @@ pub struct Response {
     pub latency: Duration,
     /// Size of the batch this request rode in (batching observability).
     pub batch_size: usize,
+    /// Set when the worker's forward failed: the request was *answered*,
+    /// not served (`logits` is empty, `pred` is meaningless).
+    pub error: Option<String>,
 }
 
 /// Aggregated serving metrics.
@@ -46,6 +53,8 @@ pub struct Response {
 pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
+    /// Requests answered with an error `Response` (forward failures).
+    pub errors: u64,
     pub latencies_us: Vec<f64>,
     pub batch_sizes: Vec<f64>,
     pub account: EnergyAccount,
@@ -82,10 +91,11 @@ impl Metrics {
 
     pub fn report(&self, sp: &MacroSpec) -> String {
         format!(
-            "requests={} batches={} mean_batch={:.1} p50={:.1}ms p95={:.1}ms \
+            "requests={} batches={} errors={} mean_batch={:.1} p50={:.1}ms p95={:.1}ms \
              throughput={:.1} req/s macro_tops_per_watt={:.2}",
             self.requests,
             self.batches,
+            self.errors,
             self.mean_batch(),
             self.p50_latency_us() / 1e3,
             self.p95_latency_us() / 1e3,
@@ -107,6 +117,8 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<Metrics>>,
     next_id: std::sync::atomic::AtomicU64,
+    /// The worker pool's shared plan cache (observability handle).
+    plans: Arc<crate::sched::plan::PlanCache>,
 }
 
 impl Server {
@@ -122,6 +134,9 @@ impl Server {
             cfg.thresholds.clone(),
             cfg.noise_seed,
         )?;
+        // Engine clones share this cache: one weight-packing per layer
+        // per process, reused by every worker on every batch.
+        let plans = gemm.plan_cache().clone();
         let metrics = Arc::new(Mutex::new(Metrics { started: Some(Instant::now()), ..Default::default() }));
         let (tx, rx) = channel::<Job>();
         let workers_n = cfg.workers.max(1);
@@ -156,7 +171,15 @@ impl Server {
             workers,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(0),
+            plans,
         })
+    }
+
+    /// Plan-cache activity over the whole worker pool.  After warmup,
+    /// `misses` equals the layer count — each layer was packed exactly
+    /// once per process — and every further forward is a hit.
+    pub fn plan_stats(&self) -> crate::sched::plan::PlanCacheStats {
+        self.plans.stats()
     }
 
     /// Submit one image; returns the channel the response arrives on.
@@ -214,9 +237,8 @@ fn batcher_loop(
             match rx.recv_timeout(deadline - now) {
                 Ok(Job::One(r)) => batch.push(r),
                 Ok(Job::Shutdown) => {
-                    if !batch.is_empty() {
-                        let _ = worker_txs[next_worker].send(batch);
-                    }
+                    // batch always holds at least `first` — flush it
+                    let _ = worker_txs[next_worker].send(batch);
                     break 'outer;
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
@@ -235,6 +257,14 @@ fn worker_loop(
     gemm: MacroGemm,
     metrics: Arc<Mutex<Metrics>>,
 ) {
+    // One persistent executor per worker: plans (packed weight tiles)
+    // live in the engine's shared cache, so they survive across batches
+    // and across workers.  Preplan the whole graph up front so even the
+    // first request pays no packing cost.
+    let mut exec = Executor::new(&graph, gemm);
+    if let Err(e) = exec.preplan() {
+        log::error!("worker preplan failed (plans will build lazily): {e:#}");
+    }
     while let Ok(batch) = rx.recv() {
         let n = batch.len();
         let img_bytes = batch[0].image.len();
@@ -242,7 +272,6 @@ fn worker_loop(
         for r in &batch {
             images.extend_from_slice(&r.image);
         }
-        let mut exec = Executor::new(&graph, gemm.clone());
         match exec.forward(&images, n) {
             Ok((logits, stats)) => {
                 let classes = graph.num_classes;
@@ -275,12 +304,27 @@ fn worker_loop(
                         logits: row,
                         latency: done - r.submitted,
                         batch_size: n,
+                        error: None,
                     });
                 }
             }
             Err(e) => {
                 log::error!("worker forward failed: {e:#}");
-                // drop the batch; submitters see a closed channel
+                let msg = format!("{e:#}");
+                let done = Instant::now();
+                metrics.lock().unwrap().errors += n as u64;
+                // answer every request so submitters never hang on a
+                // silently dropped batch
+                for r in batch {
+                    let _ = r.respond.send(Response {
+                        id: r.id,
+                        pred: 0,
+                        logits: Vec::new(),
+                        latency: done - r.submitted,
+                        batch_size: n,
+                        error: Some(msg.clone()),
+                    });
+                }
             }
         }
     }

@@ -10,11 +10,13 @@ use crate::energy::{AreaParams, EnergyParams, CLK_ANALOG_HZ};
 use crate::macrosim::{counts_for_boundary, MacroUnit};
 use crate::nn::data::{Dataset, Golden};
 use crate::nn::{accuracy, cross_entropy, Executor, QGraph};
+use crate::sched::plan::PlanCache;
 use crate::sched::MacroGemm;
 use crate::spec::{MacroSpec, B_CANDIDATES};
 use crate::util::prng::SplitMix64;
 use anyhow::{Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Shared experiment context (artifacts loaded once).
 pub struct FigCtx {
@@ -22,6 +24,11 @@ pub struct FigCtx {
     pub ds: Dataset,
     pub graph: QGraph,
     pub golden: Golden,
+    /// Weight-stationary layer plans shared by every engine this context
+    /// hands out: plans are mode- and threshold-independent, so each
+    /// layer is packed once per context across all figure harnesses and
+    /// every calibration loss evaluation.
+    pub plans: Arc<PlanCache>,
 }
 
 impl FigCtx {
@@ -35,6 +42,7 @@ impl FigCtx {
             graph: QGraph::load(&dir)?,
             golden: Golden::load(&dir)?,
             cfg,
+            plans: Arc::new(PlanCache::new()),
         })
     }
 
@@ -47,6 +55,7 @@ impl FigCtx {
             self.cfg.noise_seed,
         )
         .expect("config thresholds validated at load")
+        .with_plan_cache(self.plans.clone())
     }
 
     /// Run `n` test images through a mode.
@@ -413,11 +422,14 @@ pub fn calibrate_osa(
     let s_max = 1024;
     let graph = &ctx.graph;
     let cfg = &ctx.cfg;
+    let plans = ctx.plans.clone();
     let mut loss_fn = |ts: &[i32]| -> f64 {
+        // plans are threshold-independent: every evaluation of the search
+        // reuses the context's packed weight tiles
         let gemm =
             match MacroGemm::new(CimMode::Osa, cfg.spec, cfg.fixed_b, ts.to_vec(), cfg.noise_seed)
             {
-                Ok(g) => g,
+                Ok(g) => g.with_plan_cache(plans.clone()),
                 Err(e) => {
                     log::error!("bad thresholds {ts:?}: {e:#}");
                     return f64::INFINITY;

@@ -144,6 +144,12 @@ impl MacroUnit {
         PackedBits::pack(a, self.sp.a_bits, false)
     }
 
+    /// Raw `[hmus, cols]` weights as loaded — the tile layout consumed by
+    /// the PJRT artifact dispatch and the plan-parity tests.
+    pub fn weights(&self) -> &[i32] {
+        &self.weights
+    }
+
     /// Loss-free integer MAC per HMU (conventional RW + digital compute —
     /// the DCIM ground truth).
     pub fn exact(&self, a: &[i32]) -> Vec<i32> {
@@ -151,6 +157,18 @@ impl MacroUnit {
             .map(|h| {
                 let w = &self.weights[h * self.sp.cols..(h + 1) * self.sp.cols];
                 a.iter().zip(w).map(|(&x, &y)| x * y).sum()
+            })
+            .collect()
+    }
+
+    /// Exact MAC per HMU over masked activation bits (`a & mask`) — the
+    /// high-nibble pass of the dual-precision PG/DRQ baselines
+    /// (`mask = !0xF` keeps bits 4..8).
+    pub fn exact_masked(&self, a: &[i32], mask: i32) -> Vec<i32> {
+        (0..self.sp.hmus)
+            .map(|h| {
+                let w = &self.weights[h * self.sp.cols..(h + 1) * self.sp.cols];
+                a.iter().zip(w).map(|(&x, &y)| (x & mask) * y).sum()
             })
             .collect()
     }
@@ -308,6 +326,20 @@ mod tests {
             prev = mse;
         }
         assert!(prev > 0.0);
+    }
+
+    #[test]
+    fn exact_masked_splits_into_nibbles() {
+        let (u, mut g) = unit(11);
+        let sp = *u.spec();
+        let a = acts(&mut g, sp.cols);
+        let hi = u.exact_masked(&a, !0xF);
+        let lo = u.exact_masked(&a, 0xF);
+        let full = u.exact(&a);
+        for h in 0..sp.hmus {
+            assert_eq!(hi[h] + lo[h], full[h], "hmu {h}");
+        }
+        assert_eq!(u.weights().len(), sp.hmus * sp.cols);
     }
 
     #[test]

@@ -155,15 +155,21 @@ fn main() -> Result<()> {
             let mut correct = 0usize;
             for (i, rx) in rxs {
                 let resp = rx.recv().context("worker dropped the batch")?;
+                if let Some(err) = &resp.error {
+                    bail!("request {i} failed in the worker: {err}");
+                }
                 if resp.pred as i32 == ctx.ds.test_y[i] {
                     correct += 1;
                 }
             }
+            let plan_stats = server.plan_stats();
             let metrics = server.shutdown();
             println!(
-                "serve: acc={:.2}%  {}",
+                "serve: acc={:.2}%  {}  plan_cache: {} layers packed once, hit rate {:.1}%",
                 correct as f64 / n as f64 * 100.0,
-                metrics.report(&cfg.spec)
+                metrics.report(&cfg.spec),
+                plan_stats.layers,
+                plan_stats.hit_rate() * 100.0
             );
         }
         "calibrate" => {
@@ -227,6 +233,7 @@ fn main() -> Result<()> {
             println!("golden.rten: OK (float acc {:.2}%)", golden.float_acc * 100.0);
             // native DCIM must reproduce the python DCIM golden logits
             let mut exec = Executor::new(&graph, MacroGemm::with_mode(CimMode::Dcim));
+            exec.preplan()?; // plan/execute split: pack every layer up front
             let n = golden.golden_n.min(16);
             let (imgs, _) = ds.test_batch(0, n);
             let (logits, _) = exec.forward(imgs, n)?;
@@ -242,11 +249,18 @@ fn main() -> Result<()> {
             if max_err >= 1.5e-2 {
                 bail!("native DCIM diverges from the python golden");
             }
-            let rt = osa_hcim::runtime::Runtime::load(&cfg.artifacts_dir, true)?;
-            println!("PJRT runtime: OK ({})", rt.platform());
-            let float_logits = rt.model_forward_all(imgs, n, golden.classes)?;
-            let acc = accuracy(&float_logits, &ds.test_y[..n], golden.classes);
-            println!("PJRT float model on {n} images: acc {:.1}% (golden path)", acc * 100.0);
+            match osa_hcim::runtime::Runtime::load(&cfg.artifacts_dir, true) {
+                Ok(rt) => {
+                    println!("PJRT runtime: OK ({})", rt.platform());
+                    let float_logits = rt.model_forward_all(imgs, n, golden.classes)?;
+                    let acc = accuracy(&float_logits, &ds.test_y[..n], golden.classes);
+                    println!(
+                        "PJRT float model on {n} images: acc {:.1}% (golden path)",
+                        acc * 100.0
+                    );
+                }
+                Err(e) => println!("PJRT runtime: skipped ({e})"),
+            }
         }
         other => bail!("unhandled subcommand {other}"),
     }

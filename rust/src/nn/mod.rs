@@ -158,6 +158,48 @@ impl QGraph {
     pub fn conv(&self, name: &str) -> Result<&QConv> {
         self.convs.get(name).with_context(|| format!("no conv named {name}"))
     }
+
+    /// A tiny self-contained graph (stem conv -> GAP -> FC) with
+    /// deterministic pseudo-random weights — the stand-in used by benches
+    /// and integration tests when the AOT artifacts are not built.  It
+    /// exercises the full dataflow (quantize -> im2col -> macro GEMM ->
+    /// requantize -> head) on real 32x32x3 inputs; the logits are not
+    /// meaningful, only deterministic.
+    pub fn synthetic() -> Self {
+        let (kh, kw, cin, cout, classes) = (3usize, 3usize, 3usize, 8usize, 10usize);
+        let k = kh * kw * cin;
+        let mut g = crate::util::prng::SplitMix64::new(0x51D_CA7);
+        let w_q: Vec<i32> = (0..cout * k).map(|_| g.next_range_i32(-64, 64)).collect();
+        let stem = QConv {
+            name: "stem".into(),
+            kh,
+            kw,
+            cin,
+            cout,
+            stride: 1,
+            act_scale: 1.0 / 255.0,
+            w_scale: 0.05,
+            w_q,
+            bias_q: vec![0; cout],
+        };
+        let fc_w: Vec<i32> = (0..classes * cout).map(|_| g.next_range_i32(-64, 64)).collect();
+        let fc = QFc {
+            cin: cout,
+            cout: classes,
+            act_scale: 0.05,
+            w_scale: 0.05,
+            w_q: fc_w,
+            bias_q: vec![0; classes],
+        };
+        let mut convs = BTreeMap::new();
+        convs.insert("stem".to_string(), stem);
+        Self {
+            convs,
+            fc,
+            ops: vec![Op::QConv { name: "stem".into(), relu: true }, Op::Gap, Op::QFc],
+            num_classes: classes,
+        }
+    }
 }
 
 /// Float NHWC activation buffer.
@@ -212,6 +254,27 @@ pub struct Executor<'a, E: GemmEngine> {
 impl<'a, E: GemmEngine> Executor<'a, E> {
     pub fn new(graph: &'a QGraph, engine: E) -> Self {
         Self { graph, engine, collect_bda: false }
+    }
+
+    /// Build the engine's execution plan for every conv layer of the
+    /// graph up front, with the same layer-index assignment as
+    /// [`Self::forward`] — so the executor holds plans for the whole
+    /// `QGraph` and the first forward pays no weight-packing cost.
+    /// Idempotent: already-cached plans are reused.
+    pub fn preplan(&mut self) -> Result<()> {
+        let graph = self.graph;
+        let mut layer_idx: u64 = 0;
+        for op in &graph.ops {
+            let name = match op {
+                Op::QConv { name, .. } | Op::QConvShortcut { name } => name,
+                _ => continue,
+            };
+            let conv = graph.conv(name)?;
+            let k = conv.kh * conv.kw * conv.cin;
+            self.engine.prepare(&conv.w_q, conv.cout, k, layer_idx)?;
+            layer_idx += 1;
+        }
+        Ok(())
     }
 
     /// Quantize a float buffer and run one conv through the engine.
@@ -414,6 +477,24 @@ mod tests {
         let t = FTensor::new(2, 4, 4, 3);
         assert_eq!(t.numel(), 96);
         assert_eq!(t.data.len(), 96);
+    }
+
+    #[test]
+    fn synthetic_graph_forward_and_preplan() {
+        let graph = QGraph::synthetic();
+        let gemm = crate::sched::MacroGemm::with_mode(crate::config::CimMode::Dcim);
+        let plans = gemm.plan_cache().clone();
+        let mut exec = Executor::new(&graph, gemm);
+        exec.preplan().unwrap();
+        assert_eq!(plans.stats().misses as usize, graph.convs.len());
+        let img = vec![128u8; 32 * 32 * 3];
+        let (logits, stats) = exec.forward(&img, 1).unwrap();
+        assert_eq!(logits.len(), graph.num_classes);
+        assert!(stats.account.macro_ops > 0);
+        // forward reused the preplanned layers — no extra packing
+        let s = plans.stats();
+        assert_eq!(s.misses as usize, graph.convs.len(), "forward re-packed a layer");
+        assert!(s.hits >= 1);
     }
 
     // Full graph execution is covered by rust/tests/nn_end_to_end.rs

@@ -1,0 +1,119 @@
+//! API-compatible stub used when the crate is built **without** the
+//! `pjrt` feature (the `xla` bindings are only available from the
+//! offline mirror).  Everything compiles and links; constructing a
+//! [`Runtime`] fails with a clear error, so `PjrtGemm` can never be
+//! driven — callers fall back to the native `sched::MacroGemm` engine.
+
+use crate::config::CimMode;
+use crate::energy::EnergyParams;
+use crate::macrosim::ose::Ose;
+use crate::sched::plan::{PlanCache, PlanCacheStats};
+use crate::sched::{GemmEngine, GemmResult};
+use crate::spec::MacroSpec;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` feature (the \
+     `xla` crate is not in the offline mirror); use the native engine instead";
+
+/// Stub of the PJRT artifact runtime — [`Runtime::load`] always errors.
+pub struct Runtime {
+    pub model_batch: usize,
+}
+
+impl Runtime {
+    pub fn load(_artifacts_dir: &Path, _with_model: bool) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".into()
+    }
+
+    pub fn se_tile(&self, _a: &[i32], _w: &[i32]) -> Result<Vec<i32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn hybrid_tile(
+        &self,
+        _a: &[i32],
+        _w: &[i32],
+        _b: &[i32],
+        _noise: &[f32],
+    ) -> Result<Vec<i32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn model_forward(&self, _x: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn model_forward_all(
+        &self,
+        _images_u8: &[u8],
+        _n: usize,
+        _classes: usize,
+    ) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Stub of the PJRT GEMM engine; mirrors the real field/method surface so
+/// downstream code (tests, examples) compiles unchanged.
+pub struct PjrtGemm<'r> {
+    pub rt: &'r Runtime,
+    pub mode: CimMode,
+    pub spec: MacroSpec,
+    pub fixed_b: i32,
+    pub ose: Ose,
+    pub noise_seed: u64,
+    pub energy: EnergyParams,
+    plans: Arc<PlanCache>,
+}
+
+impl<'r> PjrtGemm<'r> {
+    pub fn new(rt: &'r Runtime, mode: CimMode, thresholds: Vec<i32>) -> Result<Self> {
+        Ok(Self {
+            rt,
+            mode,
+            spec: MacroSpec::default(),
+            fixed_b: 8,
+            ose: Ose::with_default_candidates(thresholds)?,
+            noise_seed: 0xC1A0_2024,
+            energy: EnergyParams::default(),
+            plans: Arc::new(PlanCache::new()),
+        })
+    }
+
+    pub fn with_plan_cache(mut self, plans: Arc<PlanCache>) -> Self {
+        self.plans = plans;
+        self
+    }
+
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
+    }
+}
+
+impl<'r> GemmEngine for PjrtGemm<'r> {
+    fn name(&self) -> &'static str {
+        "pjrt-unavailable"
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        self.plans.get_or_build(layer_idx, w, n, k, self.spec).map(|_| ())
+    }
+
+    fn gemm(
+        &mut self,
+        _a: &[i32],
+        _m: usize,
+        _k: usize,
+        _w: &[i32],
+        _n: usize,
+        _layer_idx: u64,
+    ) -> Result<GemmResult> {
+        bail!(UNAVAILABLE)
+    }
+}

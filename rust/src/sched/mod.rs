@@ -1,23 +1,34 @@
 //! Layer scheduler: im2col lowering, K/N tiling onto 64x144 macros, and
 //! the digital/analog workload allocation of paper Fig. 5a.
 //!
+//! Execution follows a **plan/execute split** (DESIGN.md §5): [`plan`]
+//! builds an immutable, weight-stationary [`plan::LayerPlan`] once per
+//! layer (packed `MacroUnit` tiles + op-count templates), cached by
+//! `layer_idx` in a [`plan::PlanCache`] shared across engine clones;
+//! [`MacroGemm::gemm`] is a thin executor over that plan.  The
+//! dual-precision PG/DRQ baselines run through the same plan tiles as
+//! the CIM modes instead of a bespoke flat-K loop.
+//!
 //! [`MacroGemm`] is the native (bit-exact, cycle-accounted) execution
 //! engine; `runtime::PjrtGemm` implements the same [`GemmEngine`]
 //! interface on top of the AOT PJRT artifacts.  Both follow the *same
 //! noise-stream convention* as `python/compile/model.py::MacroGemm`
 //! (one SplitMix64 stream per layer, advanced N-tile-major then K-tile,
 //! drawing `m*hmus*w_bits` normals per tile), so all three agree
-//! bit-exactly for a given seed.
+//! bit-exactly for a given seed.  The stream is re-seeded per *call*,
+//! not per plan, so caching plans never shifts the noise.
 
 pub mod im2col;
+pub mod plan;
 
 use crate::config::CimMode;
 use crate::energy::{EnergyAccount, EnergyParams};
 use crate::macrosim::ose::{Ose, SaliencyAccumulator};
-use crate::macrosim::{counts_for_boundary, MacroUnit};
 use crate::spec::MacroSpec;
 use crate::util::prng::{layer_noise_seed, SplitMix64};
 use anyhow::Result;
+use plan::{LayerPlan, PlanCache, PlanCacheStats};
+use std::sync::Arc;
 
 /// Fixed sample-chunk size for deterministic intra-GEMM parallelism.
 const PAR_CHUNK: usize = 32;
@@ -69,11 +80,22 @@ pub trait GemmEngine {
     fn gemm(&mut self, a: &[i32], m: usize, k: usize, w: &[i32], n: usize, layer_idx: u64)
         -> Result<GemmResult>;
 
+    /// Build (and cache) the execution plan for a layer ahead of time so
+    /// the first `gemm` call doesn't pay the weight-packing cost.
+    /// No-op default for engines without a plan cache.
+    fn prepare(&mut self, _w: &[i32], _n: usize, _k: usize, _layer_idx: u64) -> Result<()> {
+        Ok(())
+    }
+
     /// Engine label for logs/metrics.
     fn name(&self) -> &'static str;
 }
 
 /// Native tiled macro GEMM (the cycle-level path).
+///
+/// Cloning is cheap and shares the plan cache: every clone (e.g. one per
+/// coordinator worker) executes over the same packed weight tiles, so a
+/// layer is packed exactly once per process.
 #[derive(Debug, Clone)]
 pub struct MacroGemm {
     pub mode: CimMode,
@@ -88,6 +110,8 @@ pub struct MacroGemm {
     /// DRQ baseline: inputs whose tile mean is below this (uint8 units)
     /// run at 4-bit precision.
     pub drq_thresh: i32,
+    /// Weight-stationary layer plans, shared across clones.
+    plans: Arc<PlanCache>,
 }
 
 impl MacroGemm {
@@ -107,6 +131,7 @@ impl MacroGemm {
             energy: EnergyParams::default(),
             pg_delta: 1 << 13,
             drq_thresh: 48,
+            plans: Arc::new(PlanCache::new()),
         })
     }
 
@@ -121,26 +146,43 @@ impl MacroGemm {
             energy: EnergyParams::default(),
             pg_delta: 1 << 13,
             drq_thresh: 48,
+            plans: Arc::new(PlanCache::new()),
         }
     }
 
-    /// Dual-precision all-digital baselines (PG [13] / DRQ [14]).
+    /// Attach an externally shared plan cache (e.g. one per `FigCtx` or
+    /// per server, so plans survive engine reconstruction).
+    pub fn with_plan_cache(mut self, plans: Arc<PlanCache>) -> Self {
+        self.plans = plans;
+        self
+    }
+
+    /// The shared plan cache handle.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
+    }
+
+    /// Cache activity snapshot (hit rate, packed layer count).
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
+    }
+
+    fn n_slices(&self) -> usize {
+        self.spec.a_bits.div_ceil(self.spec.analog_band as usize)
+    }
+
+    /// Dual-precision all-digital baselines (PG [13] / DRQ [14]) as a
+    /// plan executor.
     ///
     /// Both split the activation into a high nibble (bits 4..8) and a low
     /// nibble; the low pass runs only for "important" outputs — PG gates
     /// on the high-pass output magnitude, DRQ on the input-region mean.
-    fn gemm_dual_precision(
-        &self,
-        a: &[i32],
-        m: usize,
-        k: usize,
-        w: &[i32],
-        n: usize,
-    ) -> Result<GemmResult> {
+    /// Runs over the same packed plan tiles as the CIM modes (the padded
+    /// columns contribute zero to either pass, so tiling is exact).
+    fn execute_dual(&self, plan: &LayerPlan, a: &[i32], m: usize, k: usize) -> Result<GemmResult> {
         let sp = self.spec;
-        let kt = k.div_ceil(sp.cols).max(1);
-        let nt = n.div_ceil(sp.hmus).max(1);
-        let half_pairs = (sp.w_bits * sp.a_bits / 2) as u32;
+        let (kt, nt, k_pad, n) = (plan.kt, plan.nt, plan.k_pad, plan.n);
+        let a_p = pad_cols(a, m, k, k_pad);
         let mut out = vec![0i32; m * n];
         let mut account = EnergyAccount::default();
         let mut b_hist = [0u64; 16];
@@ -157,31 +199,37 @@ impl MacroGemm {
                 let mut full = self.mode == CimMode::Drq && drq_full;
                 let c_lo = ni * sp.hmus;
                 let c_hi = ((ni + 1) * sp.hmus).min(n);
-                let mut hi_vals = vec![0i32; c_hi - c_lo];
-                for (ci, c) in (c_lo..c_hi).enumerate() {
-                    let wr = &w[c * k..(c + 1) * k];
-                    hi_vals[ci] =
-                        row.iter().zip(wr).map(|(&x, &y)| (x & !0xF) * y).sum::<i32>();
+                // high-nibble pass over the packed weight tiles
+                let mut hi = vec![0i32; sp.hmus];
+                for ki in 0..kt {
+                    let tile =
+                        &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                    for (acc, v) in hi.iter_mut().zip(plan.unit(ni, ki).exact_masked(tile, !0xF))
+                    {
+                        *acc += v;
+                    }
                 }
                 if self.mode == CimMode::Pg {
-                    full = hi_vals.iter().any(|v| v.abs() >= self.pg_delta);
+                    full = hi[..c_hi - c_lo].iter().any(|v| v.abs() >= self.pg_delta);
                 }
-                for (ci, c) in (c_lo..c_hi).enumerate() {
-                    out[s * n + c] = if full {
-                        let wr = &w[c * k..(c + 1) * k];
-                        row.iter().zip(wr).map(|(&x, &y)| x * y).sum::<i32>()
-                    } else {
-                        hi_vals[ci]
-                    };
+                let vals = if full {
+                    let mut ex = vec![0i32; sp.hmus];
+                    for ki in 0..kt {
+                        let tile =
+                            &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                        for (acc, v) in ex.iter_mut().zip(plan.unit(ni, ki).exact(tile)) {
+                            *acc += v;
+                        }
+                    }
+                    ex
+                } else {
+                    hi
+                };
+                for (h, c) in (c_lo..c_hi).enumerate() {
+                    out[s * n + c] = vals[h];
                 }
                 // energy: hi pass always; low pass only when not gated
-                let pairs = if full { 2 * half_pairs } else { half_pairs };
-                let mut counts = crate::macrosim::OpCounts {
-                    digital_pairs: pairs,
-                    compute_cycles: pairs.div_ceil(2),
-                    ..Default::default()
-                };
-                counts.discard_pairs = 2 * half_pairs - pairs;
+                let counts = plan.dual_counts(full);
                 for _ in 0..kt {
                     account.record(&self.energy.op_energy(&counts, false, &sp), &counts);
                 }
@@ -192,35 +240,18 @@ impl MacroGemm {
         Ok(GemmResult { out, m, n, account, b_hist, bda, n_tiles: nt })
     }
 
-    fn n_slices(&self) -> usize {
-        self.spec.a_bits.div_ceil(self.spec.analog_band as usize)
-    }
-}
-
-impl GemmEngine for MacroGemm {
-    fn name(&self) -> &'static str {
-        "native-macrosim"
-    }
-
-    fn gemm(
-        &mut self,
+    /// CIM-mode plan executor (DCIM / HCIM / OSA / ACIM).
+    fn execute_cim(
+        &self,
+        plan: &LayerPlan,
         a: &[i32],
         m: usize,
         k: usize,
-        w: &[i32],
-        n: usize,
         layer_idx: u64,
     ) -> Result<GemmResult> {
-        if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
-            return self.gemm_dual_precision(a, m, k, w, n);
-        }
         let sp = self.spec;
-        let kt = k.div_ceil(sp.cols).max(1);
-        let nt = n.div_ceil(sp.hmus).max(1);
-        let k_pad = kt * sp.cols;
-        let n_pad = nt * sp.hmus;
+        let (kt, nt, k_pad, n_pad, n) = (plan.kt, plan.nt, plan.k_pad, plan.n_pad, plan.n);
         let a_p = pad_cols(a, m, k, k_pad);
-        let w_p = pad_matrix(w, n, k, n_pad, k_pad);
         let mut stream = SplitMix64::new(layer_noise_seed(self.noise_seed, layer_idx));
 
         // Pre-pack activation bit planes once per (sample, K-tile): they
@@ -239,22 +270,9 @@ impl GemmEngine for MacroGemm {
         let mut bda = vec![0i32; m * nt];
 
         for ni in 0..nt {
-            // Build the macro for this group of 8 output channels, one
-            // K-tile at a time (the hardware reloads weights per tile).
-            let units: Vec<MacroUnit> = (0..kt)
-                .map(|ki| {
-                    let mut wt = Vec::with_capacity(sp.hmus * sp.cols);
-                    for h in 0..sp.hmus {
-                        let row = (ni * sp.hmus + h) * k_pad + ki * sp.cols;
-                        wt.extend_from_slice(&w_p[row..row + sp.cols]);
-                    }
-                    MacroUnit::new(&wt, sp)
-                })
-                .collect::<Result<_>>()?;
-
             // ---- Saliency-Evaluation mode (OSA only) --------------------
             let boundaries: Vec<i32> = match self.mode {
-                CimMode::Pg | CimMode::Drq => unreachable!("handled above"),
+                CimMode::Pg | CimMode::Drq => unreachable!("dual precision runs execute_dual"),
                 CimMode::Dcim => vec![crate::spec::B_DCIM; m],
                 CimMode::Hcim => vec![self.fixed_b; m],
                 CimMode::Acim => vec![-1; m],
@@ -263,7 +281,6 @@ impl GemmEngine for MacroGemm {
                     // sample chunks (deterministic regardless of core
                     // count — each chunk writes a disjoint slice)
                     let mut bs = vec![0i32; m];
-                    let units_ref = &units;
                     let a_packed_ref = &a_packed;
                     let ose = &self.ose;
                     std::thread::scope(|scope| {
@@ -272,8 +289,11 @@ impl GemmEngine for MacroGemm {
                                 for (off, slot) in chunk.iter_mut().enumerate() {
                                     let s = ci * PAR_CHUNK + off;
                                     let mut acc = SaliencyAccumulator::default();
-                                    for (ki, unit) in units_ref.iter().enumerate() {
-                                        acc.add(unit.saliency(&a_packed_ref[s * kt + ki]));
+                                    for ki in 0..kt {
+                                        acc.add(
+                                            plan.unit(ni, ki)
+                                                .saliency(&a_packed_ref[s * kt + ki]),
+                                        );
                                     }
                                     // N/Q normalization: rescale by the
                                     // layer's true K so thresholds are
@@ -297,7 +317,8 @@ impl GemmEngine for MacroGemm {
             // disjoint slice of a per-tile output buffer and keeps its own
             // EnergyAccount; chunks are merged in index order, so results
             // and accounting are bit-identical regardless of core count.
-            for (ki, unit) in units.iter().enumerate() {
+            for ki in 0..kt {
+                let unit = plan.unit(ni, ki);
                 let per_sample = if self.mode == CimMode::Acim {
                     sp.hmus * sp.w_bits * self.n_slices()
                 } else {
@@ -319,7 +340,6 @@ impl GemmEngine for MacroGemm {
                 let a_p_ref = &a_p;
                 let a_packed_ref = &a_packed;
                 let noise_ref = &noise;
-                let n_slices = self.n_slices();
                 std::thread::scope(|scope| {
                     for ((ci, out_chunk), acct) in
                         tile_out.chunks_mut(PAR_CHUNK * sp.hmus).enumerate().zip(&mut chunk_accounts)
@@ -330,42 +350,44 @@ impl GemmEngine for MacroGemm {
                                 let s = ci * PAR_CHUNK + off;
                                 let (vals, counts, with_se) = match mode {
                                     CimMode::Pg | CimMode::Drq => {
-                                        unreachable!("handled above")
+                                        unreachable!("dual precision runs execute_dual")
                                     }
                                     CimMode::Dcim => {
                                         let tile = &a_p_ref[s * k_pad + ki * sp.cols
                                             ..s * k_pad + (ki + 1) * sp.cols];
-                                        let c = counts_for_boundary(0, false, &sp);
-                                        (unit.exact(tile), c, false)
+                                        (unit.exact(tile), plan.counts(0, false), false)
                                     }
                                     CimMode::Acim => {
                                         let packed = &a_packed_ref[s * kt + ki];
                                         let nslice = &noise_ref
                                             [s * per_sample..(s + 1) * per_sample];
-                                        // ACIM: every plane analog
-                                        let mut c = counts_for_boundary(0, false, &sp);
-                                        c.digital_pairs = 0;
-                                        c.analog_pairs = (sp.w_bits * sp.a_bits) as u32;
-                                        c.discard_pairs = 0;
-                                        c.adc_groups = (sp.w_bits * n_slices) as u32;
-                                        c.compute_cycles = c.adc_groups + 2;
-                                        (unit.compute_acim(packed, nslice), c, false)
+                                        (
+                                            unit.compute_acim(packed, nslice),
+                                            plan.acim_counts(),
+                                            false,
+                                        )
                                     }
                                     CimMode::Osa => {
                                         let packed = &a_packed_ref[s * kt + ki];
                                         let nslice = &noise_ref
                                             [s * per_sample..(s + 1) * per_sample];
                                         let b = boundaries_ref[s];
-                                        let c = counts_for_boundary(b, true, &sp);
-                                        (unit.compute_hybrid(packed, b, nslice), c, true)
+                                        (
+                                            unit.compute_hybrid(packed, b, nslice),
+                                            plan.counts(b, true),
+                                            true,
+                                        )
                                     }
                                     CimMode::Hcim => {
                                         let packed = &a_packed_ref[s * kt + ki];
                                         let nslice = &noise_ref
                                             [s * per_sample..(s + 1) * per_sample];
                                         let b = boundaries_ref[s];
-                                        let c = counts_for_boundary(b, false, &sp);
-                                        (unit.compute_hybrid(packed, b, nslice), c, false)
+                                        (
+                                            unit.compute_hybrid(packed, b, nslice),
+                                            plan.counts(b, false),
+                                            false,
+                                        )
                                     }
                                 };
                                 out_chunk[off * sp.hmus..(off + 1) * sp.hmus]
@@ -400,6 +422,33 @@ impl GemmEngine for MacroGemm {
             final_out[s * n..(s + 1) * n].copy_from_slice(&out[s * n_pad..s * n_pad + n]);
         }
         Ok(GemmResult { out: final_out, m, n, account, b_hist, bda, n_tiles: nt })
+    }
+}
+
+impl GemmEngine for MacroGemm {
+    fn name(&self) -> &'static str {
+        "native-macrosim"
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        self.plans.get_or_build(layer_idx, w, n, k, self.spec).map(|_| ())
+    }
+
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        let plan = self.plans.get_or_build(layer_idx, w, n, k, self.spec)?;
+        if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
+            self.execute_dual(&plan, a, m, k)
+        } else {
+            self.execute_cim(&plan, a, m, k, layer_idx)
+        }
     }
 }
 
@@ -548,6 +597,45 @@ mod tests {
         assert_eq!(r1.out, r2.out);
         let r3 = MacroGemm::with_mode(CimMode::Hcim).gemm(&a, m, k, &w, n, 4).unwrap();
         assert_ne!(r1.out, r3.out, "different layer index must shift the noise stream");
+    }
+
+    #[test]
+    fn cached_plan_calls_stay_deterministic() {
+        // The noise stream is per-call: executing over a cached plan must
+        // give the same result as the call that built it.
+        let mut rng = SplitMix64::new(9);
+        let (m, k, n) = (4, 300, 10);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let mut gemm = MacroGemm::with_mode(CimMode::Osa);
+        let r1 = gemm.gemm(&a, m, k, &w, n, 2).unwrap();
+        let r2 = gemm.gemm(&a, m, k, &w, n, 2).unwrap();
+        assert_eq!(r1.out, r2.out);
+        assert_eq!(r1.bda, r2.bda);
+        let stats = gemm.plan_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1), "second call must hit the cache");
+    }
+
+    #[test]
+    fn dual_precision_modes_run_through_plan_tiles() {
+        let mut rng = SplitMix64::new(10);
+        let (m, k, n) = (6, 300, 10);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let exact = exact_gemm(&a, m, k, &w, n);
+        for mode in [CimMode::Pg, CimMode::Drq] {
+            let mut gemm = MacroGemm::with_mode(mode);
+            let r = gemm.gemm(&a, m, k, &w, n, 0).unwrap();
+            assert_eq!(r.out.len(), m * n);
+            // gated outputs equal the high-nibble partial; full outputs
+            // are exact — either way |err| is bounded by the low nibble.
+            for (s, (&got, &want)) in r.out.iter().zip(&exact).enumerate() {
+                let err = (got as i64 - want).unsigned_abs();
+                let bound: u64 = 15 * 128 * k as u64;
+                assert!(err <= bound, "row {s}: err {err} > {bound}");
+            }
+            assert_eq!(gemm.plan_stats().misses, 1);
+        }
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Plan/execute split for the macro GEMM — weight-stationary caching.
+//!
+//! The HCIMA array is weight-stationary hardware: weights are written
+//! into the split-port 6T cells once per layer and reused by every input
+//! tile.  The original engine re-packed every [`MacroUnit`] per call, per
+//! batch, per request — the dominant avoidable cost on the serving hot
+//! path.  This module builds an immutable [`LayerPlan`] exactly once per
+//! layer (padded dims, packed weight tiles, per-mode op-count templates)
+//! and caches it by `layer_idx` in a [`PlanCache`] shared via `Arc`
+//! across engine clones — i.e. across all coordinator worker threads —
+//! so `MacroUnit` packing for a given layer happens once per process
+//! (DESIGN.md §5).
+//!
+//! The plan is mode-independent: it carries the packed weights plus
+//! op-count templates for every boundary, so one cache serves DCIM /
+//! HCIM / OSA / ACIM and the dual-precision PG / DRQ baselines alike,
+//! and can be shared between the native and PJRT engines.
+
+use crate::macrosim::{counts_for_boundary, MacroUnit, OpCounts};
+use crate::spec::MacroSpec;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Boundaries with a precomputed op-count template (covers `B_DCIM` and
+/// every Fig 5b candidate; out-of-range boundaries fall back to
+/// [`counts_for_boundary`]).
+const B_TEMPLATES: i32 = 16;
+
+/// Cheap order-sensitive fingerprint of a weight matrix (SplitMix64-style
+/// mixing).  Used to detect weight drift under a cached `layer_idx`; a
+/// collision can only *miss* drift, never reject valid reuse.
+pub fn weight_fingerprint(w: &[i32]) -> u64 {
+    let mut h: u64 = 0x9E37_79B9_7F4A_7C15 ^ (w.len() as u64);
+    for &x in w {
+        h = h.wrapping_add(x as u32 as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 31;
+    }
+    h
+}
+
+/// Immutable per-layer execution plan: everything about a GEMM that does
+/// not depend on the activations.
+#[derive(Debug)]
+pub struct LayerPlan {
+    pub layer_idx: u64,
+    /// Unpadded K (contraction) dimension.
+    pub k: usize,
+    /// Unpadded N (output-channel) dimension.
+    pub n: usize,
+    /// K-tile count.
+    pub kt: usize,
+    /// N-tile count.
+    pub nt: usize,
+    pub k_pad: usize,
+    pub n_pad: usize,
+    pub spec: MacroSpec,
+    /// Fingerprint of the source weight matrix (drift detection).
+    pub w_fingerprint: u64,
+    /// Packed macro units, `[nt, kt]` row-major — the weights as written
+    /// into the array, bit-planes pre-packed for the popcount datapath.
+    units: Vec<MacroUnit>,
+    /// Op-count templates per boundary `b in 0..B_TEMPLATES`, indexed
+    /// `[b][with_se]`.
+    counts: Vec<[OpCounts; 2]>,
+    /// Full-analog (ACIM) op-count template.
+    acim: OpCounts,
+    /// Dual-precision (PG/DRQ) templates, indexed by `full`.
+    dual: [OpCounts; 2],
+}
+
+impl LayerPlan {
+    /// Pack a layer's `[n, k]` weight matrix into macro tiles and
+    /// precompute the op-count templates.  This is the expensive step the
+    /// cache amortizes; everything it produces is immutable.
+    pub fn build(w: &[i32], n: usize, k: usize, layer_idx: u64, sp: MacroSpec) -> Result<Self> {
+        if w.len() != n * k {
+            bail!("layer {layer_idx}: weight length {} != n*k = {}", w.len(), n * k);
+        }
+        let kt = k.div_ceil(sp.cols).max(1);
+        let nt = n.div_ceil(sp.hmus).max(1);
+        let k_pad = kt * sp.cols;
+        let n_pad = nt * sp.hmus;
+        let w_p = super::pad_matrix(w, n, k, n_pad, k_pad);
+        let mut units = Vec::with_capacity(nt * kt);
+        for ni in 0..nt {
+            for ki in 0..kt {
+                let mut wt = Vec::with_capacity(sp.hmus * sp.cols);
+                for h in 0..sp.hmus {
+                    let row = (ni * sp.hmus + h) * k_pad + ki * sp.cols;
+                    wt.extend_from_slice(&w_p[row..row + sp.cols]);
+                }
+                units.push(MacroUnit::new(&wt, sp)?);
+            }
+        }
+
+        let counts: Vec<[OpCounts; 2]> = (0..B_TEMPLATES)
+            .map(|b| [counts_for_boundary(b, false, &sp), counts_for_boundary(b, true, &sp)])
+            .collect();
+
+        // ACIM: every plane analog, one ADC group per (weight plane,
+        // activation slice).
+        let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
+        let mut acim = counts_for_boundary(0, false, &sp);
+        acim.digital_pairs = 0;
+        acim.analog_pairs = (sp.w_bits * sp.a_bits) as u32;
+        acim.discard_pairs = 0;
+        acim.adc_groups = (sp.w_bits * n_slices) as u32;
+        acim.compute_cycles = acim.adc_groups + 2;
+
+        // PG/DRQ dual precision: the high-nibble pass always runs; the
+        // low-nibble pass only for "important" outputs.
+        let half_pairs = (sp.w_bits * sp.a_bits / 2) as u32;
+        let dual = [false, true].map(|full| {
+            let pairs = if full { 2 * half_pairs } else { half_pairs };
+            OpCounts {
+                digital_pairs: pairs,
+                discard_pairs: 2 * half_pairs - pairs,
+                compute_cycles: pairs.div_ceil(2),
+                ..Default::default()
+            }
+        });
+
+        Ok(Self {
+            layer_idx,
+            k,
+            n,
+            kt,
+            nt,
+            k_pad,
+            n_pad,
+            spec: sp,
+            w_fingerprint: weight_fingerprint(w),
+            units,
+            counts,
+            acim,
+            dual,
+        })
+    }
+
+    /// The packed macro for N-tile `ni`, K-tile `ki`.
+    #[inline]
+    pub fn unit(&self, ni: usize, ki: usize) -> &MacroUnit {
+        &self.units[ni * self.kt + ki]
+    }
+
+    /// Computing-mode op-count template at boundary `b`.
+    #[inline]
+    pub fn counts(&self, b: i32, with_se: bool) -> OpCounts {
+        if (0..B_TEMPLATES).contains(&b) {
+            self.counts[b as usize][with_se as usize]
+        } else {
+            counts_for_boundary(b, with_se, &self.spec)
+        }
+    }
+
+    /// Full-analog op-count template.
+    #[inline]
+    pub fn acim_counts(&self) -> OpCounts {
+        self.acim
+    }
+
+    /// Dual-precision template (`full` = low pass not gated off).
+    #[inline]
+    pub fn dual_counts(&self, full: bool) -> OpCounts {
+        self.dual[full as usize]
+    }
+
+    /// Number of packed weight tiles (`nt * kt`).
+    pub fn packed_tiles(&self) -> usize {
+        self.units.len()
+    }
+}
+
+/// Snapshot of cache activity, for metrics / benches / tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups answered from the cache (no packing).
+    pub hits: u64,
+    /// Lookups that built (packed) a new plan.
+    pub misses: u64,
+    /// Plans currently cached.
+    pub layers: u64,
+}
+
+impl PlanCacheStats {
+    /// hits / (hits + misses), 0.0 when the cache was never used.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe layer-plan cache, keyed by `layer_idx`.
+///
+/// Contract (weight stationarity): for the lifetime of one cache, a given
+/// `layer_idx` always refers to the same weight matrix — exactly the
+/// guarantee `nn::Executor` provides by assigning stable indices in graph
+/// order.  Dimension, spec, or weight-content changes under a cached
+/// index are rejected loudly rather than silently recomputed (contents
+/// via [`weight_fingerprint`], an O(n*k) check that is negligible next
+/// to the O(m*n*k) GEMM it guards).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<u64, Arc<LayerPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the plan for `layer_idx`, packing the weights on the first
+    /// call only.  Concurrent callers serialize on the cache lock, so a
+    /// plan is never built twice.
+    pub fn get_or_build(
+        &self,
+        layer_idx: u64,
+        w: &[i32],
+        n: usize,
+        k: usize,
+        sp: MacroSpec,
+    ) -> Result<Arc<LayerPlan>> {
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(plan) = plans.get(&layer_idx) {
+            if plan.n != n || plan.k != k || plan.spec != sp {
+                bail!(
+                    "plan cache: layer {layer_idx} was planned as [{}x{}] but called with \
+                     [{n}x{k}] — layer indices must be stable per weight matrix",
+                    plan.n,
+                    plan.k
+                );
+            }
+            if plan.w_fingerprint != weight_fingerprint(w) {
+                bail!(
+                    "plan cache: layer {layer_idx} called with different weight contents — \
+                     layer indices must be stable per weight matrix (clear() the cache to \
+                     reload weights)"
+                );
+            }
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(plan.clone());
+        }
+        let plan = Arc::new(LayerPlan::build(w, n, k, layer_idx, sp)?);
+        plans.insert(layer_idx, plan.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(plan)
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            layers: self.plans.lock().unwrap().len() as u64,
+        }
+    }
+
+    /// Drop every cached plan (weights will re-pack on next use).
+    pub fn clear(&self) {
+        self.plans.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_w(seed: u64, n: usize, k: usize) -> Vec<i32> {
+        let mut g = SplitMix64::new(seed);
+        (0..n * k).map(|_| g.next_range_i32(-128, 128)).collect()
+    }
+
+    #[test]
+    fn plan_dims_and_tiles() {
+        let sp = MacroSpec::default();
+        let (n, k) = (20, 300);
+        let plan = LayerPlan::build(&rand_w(1, n, k), n, k, 0, sp).unwrap();
+        assert_eq!(plan.kt, 3);
+        assert_eq!(plan.nt, 3);
+        assert_eq!(plan.k_pad, 432);
+        assert_eq!(plan.n_pad, 24);
+        assert_eq!(plan.packed_tiles(), 9);
+    }
+
+    #[test]
+    fn plan_units_match_direct_packing() {
+        // The plan's packed tile must equal a MacroUnit built from the
+        // same padded weight rows by hand.
+        let sp = MacroSpec::default();
+        let (n, k) = (10, 150);
+        let w = rand_w(2, n, k);
+        let plan = LayerPlan::build(&w, n, k, 0, sp).unwrap();
+        let w_p = crate::sched::pad_matrix(&w, n, k, plan.n_pad, plan.k_pad);
+        for ni in 0..plan.nt {
+            for ki in 0..plan.kt {
+                let mut wt = Vec::new();
+                for h in 0..sp.hmus {
+                    let row = (ni * sp.hmus + h) * plan.k_pad + ki * sp.cols;
+                    wt.extend_from_slice(&w_p[row..row + sp.cols]);
+                }
+                assert_eq!(plan.unit(ni, ki).weights(), &wt[..], "tile ({ni},{ki})");
+            }
+        }
+    }
+
+    #[test]
+    fn count_templates_match_direct_computation() {
+        let sp = MacroSpec::default();
+        let plan = LayerPlan::build(&rand_w(3, 8, 144), 8, 144, 0, sp).unwrap();
+        for b in 0..16 {
+            assert_eq!(plan.counts(b, false), counts_for_boundary(b, false, &sp), "B={b}");
+            assert_eq!(plan.counts(b, true), counts_for_boundary(b, true, &sp), "B={b} se");
+        }
+        // out-of-template boundaries fall back
+        assert_eq!(plan.counts(20, false), counts_for_boundary(20, false, &sp));
+    }
+
+    #[test]
+    fn cache_hits_and_misses() {
+        let sp = MacroSpec::default();
+        let cache = PlanCache::new();
+        let w = rand_w(4, 8, 144);
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        cache.get_or_build(1, &w, 8, 144, sp).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.layers), (1, 2, 2));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        cache.clear();
+        assert_eq!(cache.stats().layers, 0);
+    }
+
+    #[test]
+    fn cache_rejects_dimension_drift() {
+        let sp = MacroSpec::default();
+        let cache = PlanCache::new();
+        let w = rand_w(5, 8, 144);
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        assert!(cache.get_or_build(0, &w[..8 * 72], 8, 72, sp).is_err());
+    }
+
+    #[test]
+    fn cache_rejects_weight_content_drift() {
+        let sp = MacroSpec::default();
+        let cache = PlanCache::new();
+        let w = rand_w(6, 8, 144);
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        let mut w2 = w.clone();
+        w2[10] = w2[10].wrapping_neg().clamp(-128, 127);
+        if w2[10] == w[10] {
+            w2[10] = if w[10] == 1 { 2 } else { 1 };
+        }
+        assert!(
+            cache.get_or_build(0, &w2, 8, 144, sp).is_err(),
+            "same-shape weight change must be rejected, not served stale tiles"
+        );
+        // unchanged weights still hit
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_content_sensitive() {
+        let a = vec![1, 2, 3, 4];
+        let b = vec![2, 1, 3, 4];
+        let c = vec![1, 2, 3, 5];
+        assert_ne!(weight_fingerprint(&a), weight_fingerprint(&b));
+        assert_ne!(weight_fingerprint(&a), weight_fingerprint(&c));
+        assert_eq!(weight_fingerprint(&a), weight_fingerprint(&[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn bad_weight_length_rejected() {
+        let sp = MacroSpec::default();
+        assert!(LayerPlan::build(&[0; 10], 8, 144, 0, sp).is_err());
+    }
+}

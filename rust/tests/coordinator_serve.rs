@@ -1,5 +1,8 @@
-//! Coordinator integration: live server over the native engine
-//! (requires `make artifacts`; skips when absent).
+//! Coordinator integration: live server over the native engine.
+//!
+//! Accuracy tests require `make artifacts` (skip when absent); the
+//! drain / error-response / plan-cache tests run over
+//! `QGraph::synthetic()` and need nothing on disk.
 
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
@@ -49,6 +52,7 @@ fn serves_requests_and_answers_all() {
     let mut ids = std::collections::HashSet::new();
     for (i, rx) in pending {
         let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "request {i} errored: {:?}", resp.error);
         assert_eq!(resp.logits.len(), 10);
         assert!(resp.batch_size >= 1);
         assert!(ids.insert(resp.id), "duplicate response id");
@@ -100,4 +104,85 @@ fn shutdown_is_clean_and_rejects_after() {
     rx.recv().expect("response before shutdown");
     let metrics = server.shutdown();
     assert_eq!(metrics.requests, 1);
+}
+
+// ---- artifact-free tests over the synthetic graph ----------------------
+
+fn synth_server(cfg: &SystemConfig) -> Server {
+    Server::start(cfg, Arc::new(QGraph::synthetic())).unwrap()
+}
+
+fn synth_image(seed: u64) -> Vec<u8> {
+    let mut g = osa_hcim::util::prng::SplitMix64::new(seed);
+    (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+#[test]
+fn drain_on_shutdown_answers_every_request() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 2;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 1_000;
+    let server = synth_server(&cfg);
+    let n = 10usize;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        pending.push(server.submit(synth_image(i as u64)).unwrap());
+    }
+    // shutdown must flush everything already submitted before joining
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, n as u64, "shutdown dropped requests");
+    assert_eq!(metrics.errors, 0);
+    assert!(metrics.batches >= 1);
+    for rx in pending {
+        let resp = rx.recv().expect("every submitted request must be answered");
+        assert!(resp.error.is_none());
+        assert_eq!(resp.logits.len(), 10);
+    }
+}
+
+#[test]
+fn forward_error_answers_with_error_response() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 2;
+    cfg.batch_timeout_us = 1_000;
+    let server = synth_server(&cfg);
+    // wrong image size -> Executor::forward bails inside the worker;
+    // the seed behavior dropped the batch and left submitters hanging
+    // on a closed channel
+    let rx = server.submit(vec![0u8; 16]).unwrap();
+    let resp = rx.recv().expect("error must be answered, not dropped");
+    assert!(resp.error.is_some(), "expected an error response");
+    assert!(resp.logits.is_empty());
+    // a well-formed request after the failure is still served
+    let rx_ok = server.submit(synth_image(1)).unwrap();
+    let ok = rx_ok.recv().expect("server must survive a failed batch");
+    assert!(ok.error.is_none());
+    let metrics = server.shutdown();
+    assert_eq!(metrics.errors, 1);
+    assert_eq!(metrics.requests, 1, "failed requests must not count as served");
+}
+
+#[test]
+fn workers_share_one_plan_cache() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 4;
+    let server = synth_server(&cfg);
+    let mut pending = Vec::new();
+    for i in 0..8 {
+        pending.push(server.submit(synth_image(100 + i)).unwrap());
+    }
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let stats = server.plan_stats();
+    // synthetic graph has one conv layer: packed exactly once per
+    // process even with 4 workers preplanning concurrently
+    assert_eq!(stats.misses, 1, "layer was re-packed: {stats:?}");
+    assert!(stats.hits >= 1);
+    server.shutdown();
 }

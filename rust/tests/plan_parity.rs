@@ -1,0 +1,274 @@
+//! Plan/execute parity: the `LayerPlan`-cached engine must be
+//! bit-identical to a plan-free reference that re-packs every weight
+//! tile per call (the seed semantics), for every `CimMode`; and a layer
+//! must be packed exactly once per process (cache-reuse + clone-sharing
+//! tests).  Needs no artifacts.
+
+use osa_hcim::config::CimMode;
+use osa_hcim::macrosim::ose::{Ose, SaliencyAccumulator};
+use osa_hcim::macrosim::MacroUnit;
+use osa_hcim::sched::{pad_cols, pad_matrix, GemmEngine, MacroGemm};
+use osa_hcim::spec::MacroSpec;
+use osa_hcim::util::prng::{layer_noise_seed, SplitMix64};
+
+const MODES: [CimMode; 6] =
+    [CimMode::Dcim, CimMode::Hcim, CimMode::Osa, CimMode::Acim, CimMode::Pg, CimMode::Drq];
+
+/// Plan-free reference engine: packs weights from scratch on every call,
+/// runs strictly sequentially, and mirrors the shared noise-stream
+/// convention (one SplitMix64 stream per layer, N-tile-major then
+/// K-tile, `m*hmus*w_bits` normals per tile).
+struct Reference {
+    mode: CimMode,
+    sp: MacroSpec,
+    fixed_b: i32,
+    ose: Ose,
+    noise_seed: u64,
+    pg_delta: i32,
+    drq_thresh: i32,
+}
+
+impl Reference {
+    /// Mirror of `MacroGemm::with_mode` defaults.
+    fn for_mode(mode: CimMode) -> Self {
+        Self {
+            mode,
+            sp: MacroSpec::default(),
+            fixed_b: 8,
+            ose: Ose::with_default_candidates(vec![0, 0, 32, 94, 1024]).unwrap(),
+            noise_seed: 0xC1A0_2024,
+            pg_delta: 1 << 13,
+            drq_thresh: 48,
+        }
+    }
+
+    /// Returns (out `[m, n]`, bda `[m, nt]`).
+    fn gemm(
+        &self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> (Vec<i32>, Vec<i32>) {
+        if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
+            return self.gemm_dual(a, m, k, w, n);
+        }
+        let sp = self.sp;
+        let kt = k.div_ceil(sp.cols).max(1);
+        let nt = n.div_ceil(sp.hmus).max(1);
+        let k_pad = kt * sp.cols;
+        let n_pad = nt * sp.hmus;
+        let a_p = pad_cols(a, m, k, k_pad);
+        let w_p = pad_matrix(w, n, k, n_pad, k_pad);
+        let mut stream = SplitMix64::new(layer_noise_seed(self.noise_seed, layer_idx));
+        let mut out = vec![0i32; m * n_pad];
+        let mut bda = vec![0i32; m * nt];
+        for ni in 0..nt {
+            // pack this N-tile's macros from scratch (no plan, no cache)
+            let units: Vec<MacroUnit> = (0..kt)
+                .map(|ki| {
+                    let mut wt = Vec::with_capacity(sp.hmus * sp.cols);
+                    for h in 0..sp.hmus {
+                        let row = (ni * sp.hmus + h) * k_pad + ki * sp.cols;
+                        wt.extend_from_slice(&w_p[row..row + sp.cols]);
+                    }
+                    MacroUnit::new(&wt, sp).unwrap()
+                })
+                .collect();
+            let boundaries: Vec<i32> = match self.mode {
+                CimMode::Dcim => vec![osa_hcim::spec::B_DCIM; m],
+                CimMode::Hcim => vec![self.fixed_b; m],
+                CimMode::Acim => vec![-1; m],
+                CimMode::Osa => (0..m)
+                    .map(|s| {
+                        let mut acc = SaliencyAccumulator::default();
+                        for (ki, unit) in units.iter().enumerate() {
+                            let tile = &a_p
+                                [s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                            acc.add(unit.saliency(&unit.pack_acts(tile)));
+                        }
+                        let s_norm = osa_hcim::spec::normalize_saliency(
+                            acc.value() as i64,
+                            k,
+                            sp.cols,
+                        );
+                        self.ose.select(s_norm)
+                    })
+                    .collect(),
+                CimMode::Pg | CimMode::Drq => unreachable!(),
+            };
+            for (ki, unit) in units.iter().enumerate() {
+                let per_sample = if self.mode == CimMode::Acim {
+                    sp.hmus * sp.w_bits * sp.a_bits.div_ceil(sp.analog_band as usize)
+                } else {
+                    sp.hmus * sp.w_bits
+                };
+                let noise = if self.mode == CimMode::Dcim || sp.sigma_code == 0.0 {
+                    vec![0.0f32; if self.mode == CimMode::Dcim { 0 } else { m * per_sample }]
+                } else {
+                    stream.normals_f32(m * per_sample, sp.sigma_code)
+                };
+                for s in 0..m {
+                    let tile =
+                        &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                    let vals = match self.mode {
+                        CimMode::Dcim => unit.exact(tile),
+                        CimMode::Acim => unit.compute_acim(
+                            &unit.pack_acts(tile),
+                            &noise[s * per_sample..(s + 1) * per_sample],
+                        ),
+                        CimMode::Osa | CimMode::Hcim => unit.compute_hybrid(
+                            &unit.pack_acts(tile),
+                            boundaries[s],
+                            &noise[s * per_sample..(s + 1) * per_sample],
+                        ),
+                        CimMode::Pg | CimMode::Drq => unreachable!(),
+                    };
+                    for h in 0..sp.hmus {
+                        out[s * n_pad + ni * sp.hmus + h] += vals[h];
+                    }
+                }
+            }
+            for s in 0..m {
+                bda[s * nt + ni] = boundaries[s];
+            }
+        }
+        let mut final_out = vec![0i32; m * n];
+        for s in 0..m {
+            final_out[s * n..(s + 1) * n].copy_from_slice(&out[s * n_pad..s * n_pad + n]);
+        }
+        (final_out, bda)
+    }
+
+    /// Seed-style dual-precision path: flat K, raw weight indexing.
+    fn gemm_dual(&self, a: &[i32], m: usize, k: usize, w: &[i32], n: usize) -> (Vec<i32>, Vec<i32>) {
+        let sp = self.sp;
+        let nt = n.div_ceil(sp.hmus).max(1);
+        let mut out = vec![0i32; m * n];
+        let mut bda = vec![0i32; m * nt];
+        for s in 0..m {
+            let row = &a[s * k..(s + 1) * k];
+            let drq_full = if self.mode == CimMode::Drq {
+                let mean: i64 = row.iter().map(|&x| x as i64).sum::<i64>() / k as i64;
+                mean >= self.drq_thresh as i64
+            } else {
+                false
+            };
+            for ni in 0..nt {
+                let mut full = self.mode == CimMode::Drq && drq_full;
+                let c_lo = ni * sp.hmus;
+                let c_hi = ((ni + 1) * sp.hmus).min(n);
+                let hi_vals: Vec<i32> = (c_lo..c_hi)
+                    .map(|c| {
+                        let wr = &w[c * k..(c + 1) * k];
+                        row.iter().zip(wr).map(|(&x, &y)| (x & !0xF) * y).sum()
+                    })
+                    .collect();
+                if self.mode == CimMode::Pg {
+                    full = hi_vals.iter().any(|v| v.abs() >= self.pg_delta);
+                }
+                for (ci, c) in (c_lo..c_hi).enumerate() {
+                    out[s * n + c] = if full {
+                        let wr = &w[c * k..(c + 1) * k];
+                        row.iter().zip(wr).map(|(&x, &y)| x * y).sum()
+                    } else {
+                        hi_vals[ci]
+                    };
+                }
+                bda[s * nt + ni] = full as i32;
+            }
+        }
+        (out, bda)
+    }
+}
+
+fn rand_inputs(seed: u64, m: usize, k: usize, n: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut g = SplitMix64::new(seed);
+    let a = (0..m * k).map(|_| g.next_range_i32(0, 256)).collect();
+    let w = (0..n * k).map(|_| g.next_range_i32(-128, 128)).collect();
+    (a, w)
+}
+
+#[test]
+fn plan_outputs_bit_identical_to_plan_free_reference() {
+    let mut shapes = SplitMix64::new(0xBEEF);
+    for mode in MODES {
+        for round in 0..3u64 {
+            let m = shapes.next_below(5) + 1;
+            let k = shapes.next_below(400) + 1;
+            let n = shapes.next_below(24) + 1;
+            let (a, w) = rand_inputs(round * 7 + 1, m, k, n);
+            let mut engine = MacroGemm::with_mode(mode);
+            let r = engine.gemm(&a, m, k, &w, n, round).unwrap();
+            let reference = Reference::for_mode(mode);
+            let (out, bda) = reference.gemm(&a, m, k, &w, n, round);
+            assert_eq!(r.out, out, "mode {} m={m} k={k} n={n} round={round}", mode.name());
+            assert_eq!(r.bda, bda, "mode {} boundaries m={m} k={k} n={n}", mode.name());
+        }
+    }
+}
+
+#[test]
+fn second_call_reuses_cached_plan_no_repack() {
+    let (m, k, n) = (8usize, 300usize, 20usize);
+    let (a1, w) = rand_inputs(1, m, k, n);
+    let (a2, _) = rand_inputs(2, m, k, n);
+    let mut gemm = MacroGemm::with_mode(CimMode::Osa);
+    gemm.gemm(&a1, m, k, &w, n, 4).unwrap();
+    let s1 = gemm.plan_stats();
+    assert_eq!((s1.hits, s1.misses, s1.layers), (0, 1, 1));
+    // different activations, same layer: plan must be reused, not rebuilt
+    gemm.gemm(&a2, m, k, &w, n, 4).unwrap();
+    let s2 = gemm.plan_stats();
+    assert_eq!((s2.hits, s2.misses), (1, 1), "second call re-packed the layer");
+    // identical inputs through the cached plan stay bit-identical
+    let r1 = gemm.gemm(&a1, m, k, &w, n, 4).unwrap();
+    let r2 = gemm.gemm(&a1, m, k, &w, n, 4).unwrap();
+    assert_eq!(r1.out, r2.out);
+    assert_eq!(r1.b_hist, r2.b_hist);
+    // a distinct layer index builds a distinct plan
+    gemm.gemm(&a1, m, k, &w, n, 5).unwrap();
+    assert_eq!(gemm.plan_stats().misses, 2);
+}
+
+#[test]
+fn clones_share_one_cache_packing_once_per_process() {
+    let (m, k, n) = (4usize, 144usize, 8usize);
+    let (a, w) = rand_inputs(3, m, k, n);
+    let gemm = MacroGemm::with_mode(CimMode::Hcim);
+    let mut c1 = gemm.clone();
+    let mut c2 = gemm.clone();
+    let r1 = c1.gemm(&a, m, k, &w, n, 0).unwrap();
+    let r2 = c2.gemm(&a, m, k, &w, n, 0).unwrap();
+    assert_eq!(r1.out, r2.out, "clones must agree bit-exactly");
+    let s = gemm.plan_stats();
+    assert_eq!(s.misses, 1, "weights packed more than once across clones");
+    assert_eq!(s.hits, 1);
+}
+
+#[test]
+fn prepare_prebuilds_and_gemm_hits() {
+    let (m, k, n) = (4usize, 144usize, 8usize);
+    let (a, w) = rand_inputs(4, m, k, n);
+    let mut gemm = MacroGemm::with_mode(CimMode::Dcim);
+    gemm.prepare(&w, n, k, 3).unwrap();
+    assert_eq!(gemm.plan_stats().misses, 1);
+    gemm.gemm(&a, m, k, &w, n, 3).unwrap();
+    let s = gemm.plan_stats();
+    assert_eq!((s.hits, s.misses), (1, 1), "gemm after prepare must hit the cache");
+}
+
+#[test]
+fn dimension_drift_under_cached_index_is_rejected() {
+    let (m, k, n) = (4usize, 100usize, 8usize);
+    let (a, w) = rand_inputs(5, m, k, n);
+    let mut gemm = MacroGemm::with_mode(CimMode::Dcim);
+    gemm.gemm(&a, m, k, &w, n, 0).unwrap();
+    let (a2, w2) = rand_inputs(6, m, 50, n);
+    assert!(
+        gemm.gemm(&a2, m, 50, &w2, n, 0).is_err(),
+        "shape change under a cached layer index must fail loudly"
+    );
+}
