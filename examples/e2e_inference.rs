@@ -97,7 +97,11 @@ fn main() -> anyhow::Result<()> {
     let dcim = ctx.eval_mode(CimMode::Dcim, 0, &[], 64)?;
     let serve_n = 256.min(n_all);
     let graph = Arc::new(ctx.graph);
-    let server = Server::start(&cfg, graph.clone())?;
+    // the closed-loop burst below submits everything up front: size the
+    // admission bound so it exercises batching, not backpressure
+    let mut serve_cfg = cfg.clone();
+    serve_cfg.queue_cap = serve_cfg.queue_cap.max(serve_n);
+    let server = Server::start(&serve_cfg, graph.clone())?;
     let mut pending = Vec::with_capacity(serve_n);
     for i in 0..serve_n {
         let (img, _) = ctx.ds.test_batch(i, 1);

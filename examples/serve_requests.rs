@@ -8,6 +8,8 @@
 //!     [--requests N] [--workers N] [--max-batch N] [--rps N]
 //! ```
 
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
 use osa_hcim::config::SystemConfig;
 use osa_hcim::coordinator::Server;
 use osa_hcim::figures::FigCtx;
@@ -29,6 +31,8 @@ fn main() -> anyhow::Result<()> {
 
     let ctx = FigCtx::load(cfg.clone())?;
     let n = n.min(ctx.ds.test_n());
+    // open-loop demo: admit the whole run even if the pool lags
+    cfg.queue_cap = cfg.queue_cap.max(n);
     let graph = Arc::new(ctx.graph);
     let server = Server::start(&cfg, graph)?;
     println!(
@@ -38,13 +42,15 @@ fn main() -> anyhow::Result<()> {
         cfg.mode.name()
     );
 
-    // open-loop arrival: deterministic jittered inter-arrival times
+    // open-loop arrival: deterministic jittered inter-arrival times,
+    // cycling through the QoS tiers (gold / silver / batch)
+    let tiers = osa_hcim::serve::Tier::ALL;
     let mut rng = osa_hcim::util::prng::SplitMix64::new(7);
     let mut pending = Vec::with_capacity(n);
     let t0 = Instant::now();
     for i in 0..n {
         let (img, _) = ctx.ds.test_batch(i, 1);
-        pending.push((i, server.submit(img.to_vec())?));
+        pending.push((i, server.submit_tier(img.to_vec(), tiers[i % tiers.len()])?));
         let jitter = 0.5 + rng.next_f64(); // 0.5..1.5x the base gap
         std::thread::sleep(Duration::from_secs_f64(jitter / rps));
     }
@@ -69,5 +75,16 @@ fn main() -> anyhow::Result<()> {
     println!("  mean batch    {:.1}", metrics.mean_batch());
     println!("  batches       {}", metrics.batches);
     println!("  macro model   {:.2} TOPS/W", metrics.tops_per_watt(&cfg.spec));
+    for tier in tiers {
+        let t = metrics.tier(tier);
+        println!(
+            "  tier {:<6}   {} reqs  p50 {:.1} ms  p99 {:.1} ms  mean_B {:.2}",
+            tier.name(),
+            t.requests,
+            t.p50_latency_us() / 1e3,
+            t.p99_latency_us() / 1e3,
+            t.mean_boundary()
+        );
+    }
     Ok(())
 }

@@ -8,7 +8,11 @@
 //! artifacts are absent so the perf trajectory is tracked everywhere.
 //!
 //! Emits `BENCH_pipeline.json` (override the path with `BENCH_OUT`):
-//! serve requests/s, latency percentiles and the plan-cache hit rate.
+//! serve requests/s, latency percentiles and the plan-cache hit rate —
+//! and `BENCH_serve.json` (override with `BENCH_SERVE_OUT`): per-QoS-
+//! tier latency through the HTTP gateway over a real socket.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
 
 use osa_hcim::benchkit::Bench;
 use osa_hcim::config::{CimMode, SystemConfig};
@@ -17,13 +21,19 @@ use osa_hcim::io::json::{num, obj, s, JsonValue};
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::{Executor, QGraph};
 use osa_hcim::sched::{GemmEngine, MacroGemm};
+use osa_hcim::serve::{http, Gateway, Tier};
 use osa_hcim::util::prng::SplitMix64;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use osa_hcim::serve::http::infer_body;
+
 fn main() {
     osa_hcim::util::logging::init();
-    let cfg = SystemConfig::default();
+    let mut cfg = SystemConfig::default();
+    // the closed-loop burst submits everything up front — keep it under
+    // the admission bound so the bench measures batching, not 429s
+    cfg.queue_cap = 1024;
     let have_artifacts = cfg.spec.validate_against_artifacts(&cfg.artifacts_dir).is_ok();
     let (graph, img) = if have_artifacts {
         let ds = Dataset::load(&cfg.artifacts_dir).unwrap();
@@ -94,7 +104,7 @@ fn main() {
     // --- coordinator serve loop ------------------------------------------
     println!("\n# pipeline — coordinator round trip (submit -> batch -> respond)");
     let graph = Arc::new(graph);
-    let server = Server::start(&cfg, graph).unwrap();
+    let server = Server::start(&cfg, graph.clone()).unwrap();
     Bench::new("serve/round_trip")
         .target(Duration::from_secs(5))
         .max_iters(500)
@@ -141,4 +151,91 @@ fn main() {
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".into());
     std::fs::write(&out, doc.to_string_compact()).unwrap();
     println!("wrote {out}");
+
+    // --- HTTP gateway: per-QoS-tier latency over a real socket -----------
+    println!("\n# pipeline — HTTP gateway (POST /v1/infer per tier, real socket)");
+    let mut gcfg = SystemConfig::default();
+    gcfg.workers = 4;
+    gcfg.max_batch = 16;
+    gcfg.batch_timeout_us = 2_000;
+    gcfg.queue_cap = 1024;
+    let gateway = Gateway::start(&gcfg, graph.clone(), "127.0.0.1:0").unwrap();
+    let addr = gateway.addr().to_string();
+    // sequential closed loop per tier: isolates the tier's coalescing
+    // window + dispatch priority in the round-trip latency
+    let seq_per_tier = 40usize;
+    for tier in Tier::ALL {
+        let body = infer_body(tier.name(), &img);
+        let addr = addr.clone();
+        Bench::new(&format!("serve_http/{}", tier.name()))
+            .warmup(Duration::from_millis(100))
+            .target(Duration::from_secs(2))
+            .max_iters(seq_per_tier)
+            .items(1.0)
+            .run(|| {
+                let (status, _) =
+                    http::request(&addr, "POST", "/v1/infer", Some(&body)).unwrap();
+                assert_eq!(status, 200);
+            });
+    }
+    // mixed-tier burst from parallel clients: throughput + backpressure
+    let clients = 8usize;
+    let per_client = 16usize;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let img = img.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut served = 0u64;
+            let mut busy = 0u64;
+            for i in 0..per_client {
+                let tier = Tier::ALL[(c + i) % Tier::ALL.len()];
+                let body = infer_body(tier.name(), &img);
+                match http::request(&addr, "POST", "/v1/infer", Some(&body)) {
+                    Ok((200, _)) => served += 1,
+                    Ok((429, _)) => busy += 1,
+                    Ok((status, b)) => panic!("unexpected status {status}: {b}"),
+                    Err(e) => panic!("gateway request failed: {e:#}"),
+                }
+            }
+            (served, busy)
+        }));
+    }
+    let mut served = 0u64;
+    let mut busy = 0u64;
+    for h in handles {
+        let (s_n, b_n) = h.join().unwrap();
+        served += s_n;
+        busy += b_n;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let http_rps = served as f64 / wall;
+    let m = gateway.shutdown();
+    println!(
+        "serve_http/burst: {served} served + {busy} busy in {wall:.3}s -> {http_rps:.1} req/s \
+         (gold p99 {:.1}us, batch p99 {:.1}us)",
+        m.tier(Tier::Gold).p99_latency_us(),
+        m.tier(Tier::Batch).p99_latency_us()
+    );
+    let serve_doc = obj(vec![
+        ("bench", s("serve")),
+        ("synthetic_graph", JsonValue::Bool(!have_artifacts)),
+        ("http_served", num(served as f64)),
+        ("http_busy", num(busy as f64)),
+        ("http_requests_per_s", num(http_rps)),
+        ("rejected", num(m.rejected as f64)),
+        ("gold_p50_latency_us", num(m.tier(Tier::Gold).p50_latency_us())),
+        ("gold_p99_latency_us", num(m.tier(Tier::Gold).p99_latency_us())),
+        ("silver_p50_latency_us", num(m.tier(Tier::Silver).p50_latency_us())),
+        ("silver_p99_latency_us", num(m.tier(Tier::Silver).p99_latency_us())),
+        ("batch_p50_latency_us", num(m.tier(Tier::Batch).p50_latency_us())),
+        ("batch_p99_latency_us", num(m.tier(Tier::Batch).p99_latency_us())),
+        ("mean_batch", num(m.mean_batch())),
+        ("tops_per_watt", num(m.tops_per_watt(&gcfg.spec))),
+    ]);
+    let serve_out =
+        std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&serve_out, serve_doc.to_string_compact()).unwrap();
+    println!("wrote {serve_out}");
 }

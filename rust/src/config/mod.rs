@@ -212,6 +212,24 @@ pub struct SystemConfig {
     pub workers: usize,
     /// Use the PJRT artifact path for tile math (vs native simulator).
     pub use_pjrt: bool,
+    /// Bound of each QoS tier's admission queue; admission past it is a
+    /// typed `Busy` error (HTTP 429 at the gateway).
+    pub queue_cap: usize,
+    /// Enable the dynamic precision governor (`serve::governor`).
+    pub governor: bool,
+    /// Modeled macro power budget in watts for the governor; 0 disables
+    /// the energy term of the feedback loop.
+    pub energy_budget_w: f64,
+    /// Governor: queue pressure (worst tier fill fraction) above which
+    /// one tier degrades one precision level.
+    pub gov_high_watermark: f64,
+    /// Governor: pressure below which one tier recovers one level.
+    pub gov_low_watermark: f64,
+    /// Governor: max degrade levels per tier (each level doubles the
+    /// tier's OSE thresholds).
+    pub gov_max_level: u32,
+    /// Governor: minimum milliseconds between level changes.
+    pub gov_hold_ms: u64,
 }
 
 impl Default for SystemConfig {
@@ -227,6 +245,13 @@ impl Default for SystemConfig {
             batch_timeout_us: 2_000,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             use_pjrt: false,
+            queue_cap: 256,
+            governor: true,
+            energy_budget_w: 0.0,
+            gov_high_watermark: 0.75,
+            gov_low_watermark: 0.25,
+            gov_max_level: 3,
+            gov_hold_ms: 100,
         }
     }
 }
@@ -257,6 +282,20 @@ impl SystemConfig {
             t.get_usize("coordinator.batch_timeout_us", cfg.batch_timeout_us as usize)? as u64;
         cfg.workers = t.get_usize("coordinator.workers", cfg.workers)?;
         cfg.use_pjrt = t.get_bool("coordinator.use_pjrt", cfg.use_pjrt)?;
+        cfg.queue_cap = t.get_usize("serve.queue_cap", cfg.queue_cap)?;
+        cfg.governor = t.get_bool("serve.governor", cfg.governor)?;
+        cfg.energy_budget_w = t.get_f64("serve.energy_budget_w", cfg.energy_budget_w)?;
+        cfg.gov_high_watermark = t.get_f64("serve.gov_high_watermark", cfg.gov_high_watermark)?;
+        cfg.gov_low_watermark = t.get_f64("serve.gov_low_watermark", cfg.gov_low_watermark)?;
+        cfg.gov_max_level = t.get_usize("serve.gov_max_level", cfg.gov_max_level as usize)? as u32;
+        cfg.gov_hold_ms = t.get_usize("serve.gov_hold_ms", cfg.gov_hold_ms as usize)? as u64;
+        if cfg.gov_low_watermark > cfg.gov_high_watermark {
+            bail!(
+                "serve.gov_low_watermark ({}) must not exceed serve.gov_high_watermark ({})",
+                cfg.gov_low_watermark,
+                cfg.gov_high_watermark
+            );
+        }
         if cfg.thresholds.len() + 1 != crate::spec::B_CANDIDATES.len() {
             bail!(
                 "need {} thresholds for {} candidates, got {}",
@@ -315,6 +354,33 @@ use_pjrt = true
         assert_eq!(t.get("z"), Some(&TomlValue::Str("s".into())));
         assert_eq!(t.get("w"), Some(&TomlValue::Bool(true)));
         assert_eq!(t.get("v"), Some(&TomlValue::Array(vec![1.0, 2.0])));
+    }
+
+    #[test]
+    fn serve_section_parsed() {
+        let t = Toml::parse(
+            "[serve]\nqueue_cap = 64\ngovernor = false\nenergy_budget_w = 2.5\n\
+             gov_high_watermark = 0.9\ngov_low_watermark = 0.1\ngov_max_level = 5\n\
+             gov_hold_ms = 20",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.queue_cap, 64);
+        assert!(!cfg.governor);
+        assert_eq!(cfg.energy_budget_w, 2.5);
+        assert_eq!(cfg.gov_max_level, 5);
+        assert_eq!(cfg.gov_hold_ms, 20);
+        // defaults when the section is absent
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.queue_cap, 256);
+        assert!(cfg.governor);
+        assert_eq!(cfg.energy_budget_w, 0.0);
+    }
+
+    #[test]
+    fn inverted_watermarks_rejected() {
+        let t = Toml::parse("[serve]\ngov_high_watermark = 0.2\ngov_low_watermark = 0.8").unwrap();
+        assert!(SystemConfig::from_toml(&t).is_err());
     }
 
     #[test]

@@ -1,27 +1,40 @@
-//! L3 coordinator: request queue, dynamic batcher, worker pool and
-//! metrics — the serving front of the CIM accelerator (vLLM-router
+//! L3 coordinator: QoS-tiered admission, dynamic batcher, worker pool
+//! and metrics — the serving core behind `serve::gateway` (vLLM-router
 //! shaped, built on std threads + channels; tokio is not in the offline
 //! mirror).
 //!
-//! Flow: clients [`Server::submit`] single images; the batcher thread
-//! coalesces them (up to `max_batch`, bounded by `batch_timeout_us`) and
-//! round-robins batches across workers; each worker keeps one
-//! **persistent** [`nn::Executor`] over its own engine clone — the
-//! engine clones share one `sched::plan::PlanCache` via `Arc`, so every
-//! layer's weight tiles are packed exactly once per process and reused
-//! by all workers for all batches (the weight-stationary hot path).
-//! A failed forward answers every request in the batch with an error
-//! [`Response`] instead of dropping the channel.  Energy/boundary
-//! metrics from every forward are folded into the shared [`Metrics`].
+//! Flow: clients [`Server::submit_tier`] single images into bounded
+//! per-tier queues ([`serve::qos::TierQueues`]); admission past a
+//! tier's bound fails fast with a typed [`SubmitError::Busy`] (the
+//! gateway maps it to HTTP 429) instead of growing an unbounded queue.
+//! The batcher thread drains tiers strictly by priority and coalesces
+//! single-tier batches under a **hard deadline from first enqueue**,
+//! then hands them to the worker pool over a *bounded* channel — when
+//! every worker is busy the batcher blocks, the tier queues fill, and
+//! pressure becomes visible to both admission (429) and the precision
+//! governor ([`serve::governor::Governor`]), which degrades low-tier
+//! OSA thresholds under load and restores them when the queues drain.
+//!
+//! Each worker keeps one **persistent** [`nn::Executor`] over its own
+//! engine clone — the clones share one `sched::plan::PlanCache` via
+//! `Arc`, so every layer's weight tiles are packed exactly once per
+//! process (the weight-stationary hot path).  In OSA mode the worker
+//! re-programs the engine's OSE threshold registers per batch from the
+//! governor's current per-tier contract.  A failed forward answers
+//! every request in the batch with an error [`Response`] instead of
+//! dropping the channel.
 
-use crate::config::SystemConfig;
+use crate::config::{CimMode, SystemConfig};
 use crate::energy::EnergyAccount;
+use crate::macrosim::ose::Ose;
 use crate::nn::{Executor, QGraph};
 use crate::sched::MacroGemm;
+use crate::serve::governor::{Governor, GovernorSnapshot};
+use crate::serve::qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};
 use crate::spec::MacroSpec;
 use crate::util::percentile;
 use anyhow::{Context, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -30,6 +43,7 @@ pub struct Request {
     pub id: u64,
     /// 32x32x3 uint8 image.
     pub image: Vec<u8>,
+    pub tier: Tier,
     pub submitted: Instant,
     respond: Sender<Response>,
 }
@@ -40,12 +54,63 @@ pub struct Response {
     pub id: u64,
     pub logits: Vec<f32>,
     pub pred: usize,
+    pub tier: Tier,
     pub latency: Duration,
     /// Size of the batch this request rode in (batching observability).
     pub batch_size: usize,
     /// Set when the worker's forward failed: the request was *answered*,
     /// not served (`logits` is empty, `pred` is meaningless).
     pub error: Option<String>,
+}
+
+/// Sample buffers are rings: percentiles/means are over the most recent
+/// `SAMPLE_CAP` observations, so a long-running gateway's metrics stay
+/// bounded in memory and cheap to snapshot.
+const SAMPLE_CAP: usize = 4096;
+
+fn push_sample(buf: &mut Vec<f64>, cursor: &mut usize, x: f64) {
+    if buf.len() < SAMPLE_CAP {
+        buf.push(x);
+    } else {
+        buf[*cursor] = x;
+        *cursor = (*cursor + 1) % SAMPLE_CAP;
+    }
+}
+
+/// Per-tier serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct TierStats {
+    pub requests: u64,
+    pub errors: u64,
+    /// Admissions refused with `Busy` (snapshot from the tier queues).
+    pub rejected: u64,
+    /// Most recent `SAMPLE_CAP` request latencies (ring).
+    pub latencies_us: Vec<f64>,
+    lat_cursor: usize,
+    /// Boundary histogram of everything served for this tier
+    /// (index = B value; higher B = more analog = cheaper).
+    pub b_hist: [u64; 16],
+}
+
+impl TierStats {
+    pub fn p50_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 50.0)
+    }
+
+    pub fn p99_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 99.0)
+    }
+
+    /// Mean chosen boundary over the tier's served MAC tiles (0 when
+    /// nothing ran through the OSE yet).
+    pub fn mean_boundary(&self) -> f64 {
+        let total: u64 = self.b_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let weighted: f64 = self.b_hist.iter().enumerate().map(|(b, &c)| b as f64 * c as f64).sum();
+        weighted / total as f64
+    }
 }
 
 /// Aggregated serving metrics.
@@ -55,10 +120,18 @@ pub struct Metrics {
     pub batches: u64,
     /// Requests answered with an error `Response` (forward failures).
     pub errors: u64,
+    /// Admissions refused with `Busy` across all tiers.
+    pub rejected: u64,
+    /// Most recent `SAMPLE_CAP` request latencies (ring).
     pub latencies_us: Vec<f64>,
+    lat_cursor: usize,
+    /// Most recent `SAMPLE_CAP` batch sizes (ring).
     pub batch_sizes: Vec<f64>,
+    batch_cursor: usize,
     pub account: EnergyAccount,
     pub b_hist: [u64; 16],
+    /// Indexed by [`Tier::index`] (gold, silver, batch).
+    pub per_tier: [TierStats; 3],
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
 }
@@ -72,8 +145,16 @@ impl Metrics {
         percentile(&self.latencies_us, 95.0)
     }
 
+    pub fn p99_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us, 99.0)
+    }
+
     pub fn mean_batch(&self) -> f64 {
         crate::util::mean(&self.batch_sizes)
+    }
+
+    pub fn tier(&self, tier: Tier) -> &TierStats {
+        &self.per_tier[tier.index()]
     }
 
     /// Requests per second of wall-clock serving time.
@@ -91,11 +172,12 @@ impl Metrics {
 
     pub fn report(&self, sp: &MacroSpec) -> String {
         format!(
-            "requests={} batches={} errors={} mean_batch={:.1} p50={:.1}ms p95={:.1}ms \
-             throughput={:.1} req/s macro_tops_per_watt={:.2}",
+            "requests={} batches={} errors={} rejected={} mean_batch={:.1} p50={:.1}ms \
+             p95={:.1}ms throughput={:.1} req/s macro_tops_per_watt={:.2}",
             self.requests,
             self.batches,
             self.errors,
+            self.rejected,
             self.mean_batch(),
             self.p50_latency_us() / 1e3,
             self.p95_latency_us() / 1e3,
@@ -105,14 +187,10 @@ impl Metrics {
     }
 }
 
-enum Job {
-    One(Request),
-    Shutdown,
-}
-
 /// The serving coordinator.
 pub struct Server {
-    tx: Sender<Job>,
+    queues: Arc<TierQueues<Request>>,
+    governor: Arc<Governor>,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<Metrics>>,
@@ -120,6 +198,16 @@ pub struct Server {
     /// The worker pool's shared plan cache (observability handle).
     plans: Arc<crate::sched::plan::PlanCache>,
 }
+
+/// Floor of the idle batcher's wake interval (the actual tick is
+/// derived from `gov_hold_ms` — ticking much faster than the governor
+/// can act would just burn idle wakeups).
+const MIN_IDLE_TICK: Duration = Duration::from_millis(2);
+
+/// Power observations are averaged over at least this window: energy is
+/// deposited in lumps at batch completion, so shorter windows would
+/// spike far above the true draw and flap the energy-budget term.
+const WATTS_WINDOW: Duration = Duration::from_millis(100);
 
 impl Server {
     /// Spin up the batcher + worker pool for the given config.
@@ -138,35 +226,54 @@ impl Server {
         // per process, reused by every worker on every batch.
         let plans = gemm.plan_cache().clone();
         let metrics = Arc::new(Mutex::new(Metrics { started: Some(Instant::now()), ..Default::default() }));
-        let (tx, rx) = channel::<Job>();
+        let governor = Arc::new(Governor::from_system(cfg));
+        let queues = Arc::new(TierQueues::new(QosConfig {
+            queue_cap: cfg.queue_cap.max(1),
+            max_batch: cfg.max_batch.max(1),
+            base_window: Duration::from_micros(cfg.batch_timeout_us),
+        }));
         let workers_n = cfg.workers.max(1);
+        // Per-tier precision only exists on the OSA datapath; the other
+        // modes ignore the OSE threshold registers.
+        let apply_precision = cfg.mode == CimMode::Osa;
 
-        // per-worker channels, round-robin dispatch
-        let mut worker_txs = Vec::new();
+        // Bounded dispatch: when every worker is busy the batcher blocks
+        // here, the tier queues fill, and overload surfaces as `Busy`.
+        let (wtx, wrx) = sync_channel::<(Tier, Vec<Request>)>(workers_n);
+        let shared_rx = Arc::new(Mutex::new(wrx));
         let mut workers = Vec::new();
         for wid in 0..workers_n {
-            let (wtx, wrx) = channel::<Vec<Request>>();
-            worker_txs.push(wtx);
             let graph = graph.clone();
             let gemm = gemm.clone();
             let metrics = metrics.clone();
+            let governor = governor.clone();
+            let shared_rx = shared_rx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cim-worker-{wid}"))
-                    .spawn(move || worker_loop(wrx, graph, gemm, metrics))
+                    .spawn(move || {
+                        worker_loop(shared_rx, graph, gemm, metrics, governor, apply_precision)
+                    })
                     .context("spawning worker")?,
             );
         }
 
-        let max_batch = cfg.max_batch.max(1);
-        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        // The governor acts at most once per hold interval, so the idle
+        // tick only needs to be a fraction of it.
+        let idle_tick = Duration::from_millis(cfg.gov_hold_ms / 4).max(MIN_IDLE_TICK);
         let batcher = std::thread::Builder::new()
             .name("cim-batcher".into())
-            .spawn(move || batcher_loop(rx, worker_txs, max_batch, timeout))
+            .spawn({
+                let queues = queues.clone();
+                let governor = governor.clone();
+                let metrics = metrics.clone();
+                move || batcher_loop(queues, wtx, governor, metrics, idle_tick)
+            })
             .context("spawning batcher")?;
 
         Ok(Self {
-            tx,
+            queues,
+            governor,
             batcher: Some(batcher),
             workers,
             metrics,
@@ -182,80 +289,116 @@ impl Server {
         self.plans.stats()
     }
 
-    /// Submit one image; returns the channel the response arrives on.
-    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<Response>> {
+    /// Submit one image at the default (silver) tier.
+    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_tier(image, Tier::Silver)
+    }
+
+    /// Submit one image under a tier's SLO contract; returns the channel
+    /// the response arrives on, or [`SubmitError::Busy`] when the tier's
+    /// bounded queue is full (backpressure, not silent growth).
+    pub fn submit_tier(
+        &self,
+        image: Vec<u8>,
+        tier: Tier,
+    ) -> Result<Receiver<Response>, SubmitError> {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(Job::One(Request { id, image, submitted: Instant::now(), respond: rtx }))
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        let req = Request { id, image, tier, submitted: Instant::now(), respond: rtx };
+        self.queues.push(tier, req)?;
         Ok(rrx)
+    }
+
+    /// Current queue depth per tier (gold, silver, batch).
+    pub fn queue_depths(&self) -> [usize; 3] {
+        self.queues.depths()
+    }
+
+    /// The precision governor's current per-tier contracts.
+    pub fn governor(&self) -> GovernorSnapshot {
+        self.governor.snapshot()
+    }
+
+    fn snapshot_metrics(&self) -> Metrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.finished = Some(Instant::now());
+        let rejected = self.queues.rejected();
+        for (i, r) in rejected.iter().enumerate() {
+            m.per_tier[i].rejected = *r;
+        }
+        m.rejected = rejected.iter().sum();
+        m
     }
 
     /// Snapshot the metrics.
     pub fn metrics(&self) -> Metrics {
-        let mut m = self.metrics.lock().unwrap().clone();
-        m.finished = Some(Instant::now());
-        m
+        self.snapshot_metrics()
     }
 
     /// Drain and stop all threads.
     pub fn shutdown(mut self) -> Metrics {
-        let _ = self.tx.send(Job::Shutdown);
+        self.queues.close();
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let mut m = self.metrics.lock().unwrap().clone();
-        m.finished = Some(Instant::now());
-        m
+        self.snapshot_metrics()
     }
 }
 
 fn batcher_loop(
-    rx: Receiver<Job>,
-    worker_txs: Vec<Sender<Vec<Request>>>,
-    max_batch: usize,
-    timeout: Duration,
+    queues: Arc<TierQueues<Request>>,
+    wtx: SyncSender<(Tier, Vec<Request>)>,
+    governor: Arc<Governor>,
+    metrics: Arc<Mutex<Metrics>>,
+    idle_tick: Duration,
 ) {
-    let mut next_worker = 0usize;
-    'outer: loop {
-        // block for the first request of a batch
-        let first = match rx.recv() {
-            Ok(Job::One(r)) => r,
-            Ok(Job::Shutdown) | Err(_) => break 'outer,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + timeout;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Job::One(r)) => batch.push(r),
-                Ok(Job::Shutdown) => {
-                    // batch always holds at least `first` — flush it
-                    let _ = worker_txs[next_worker].send(batch);
-                    break 'outer;
-                }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => break,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'outer,
-            }
+    let mut last_energy_j = 0.0f64;
+    let mut last_obs = Instant::now();
+    let mut watts = 0.0f64;
+    loop {
+        // Observe load BEFORE popping: the queues hold everything that
+        // accumulated while the workers chewed the previous dispatch,
+        // which is exactly the pressure signal (popping first would
+        // drain the queues and systematically under-read it).
+        //
+        // The power term is *windowed and smoothed* — modeled joules
+        // over at least WATTS_WINDOW of wall time, EWMA-blended — not
+        // the run-lifetime average: once traffic stops the estimate
+        // decays to zero, so an energy-budget breach degrades tiers
+        // only while work is actually flowing, and recovery is never
+        // pinned by old history nor flapped by per-batch energy lumps.
+        let now = Instant::now();
+        if now - last_obs >= WATTS_WINDOW {
+            let energy_j = metrics.lock().unwrap().account.total_energy_j();
+            let inst = ((energy_j - last_energy_j) / (now - last_obs).as_secs_f64()).max(0.0);
+            watts = 0.7 * watts + 0.3 * inst;
+            last_energy_j = energy_j;
+            last_obs = now;
         }
-        let _ = worker_txs[next_worker].send(batch);
-        next_worker = (next_worker + 1) % worker_txs.len();
+        governor.observe(queues.pressure(), watts);
+        match queues.pop_batch(idle_tick) {
+            Pop::Batch(tier, batch) => {
+                if wtx.send((tier, batch)).is_err() {
+                    break; // worker pool is gone
+                }
+            }
+            Pop::Idle => {} // next iteration observes the (empty) queues
+            Pop::Closed => break,
+        }
     }
-    drop(worker_txs); // closes worker channels -> workers exit
+    // dropping wtx closes the worker channel -> workers exit after drain
 }
 
 fn worker_loop(
-    rx: Receiver<Vec<Request>>,
+    shared_rx: Arc<Mutex<Receiver<(Tier, Vec<Request>)>>>,
     graph: Arc<QGraph>,
     gemm: MacroGemm,
     metrics: Arc<Mutex<Metrics>>,
+    governor: Arc<Governor>,
+    apply_precision: bool,
 ) {
     // One persistent executor per worker: plans (packed weight tiles)
     // live in the engine's shared cache, so they survive across batches
@@ -265,7 +408,25 @@ fn worker_loop(
     if let Err(e) = exec.preplan() {
         log::error!("worker preplan failed (plans will build lazily): {e:#}");
     }
-    while let Ok(batch) = rx.recv() {
+    loop {
+        // Hold the lock only for the blocking recv; batches are handed
+        // to whichever worker is idle first.
+        let job = { shared_rx.lock().unwrap().recv() };
+        let (tier, batch) = match job {
+            Ok(j) => j,
+            Err(_) => break,
+        };
+        // Program the OSE threshold registers with the tier's current
+        // contract (base profile + governor degrade level).
+        if apply_precision {
+            let ts = governor.thresholds_for(tier);
+            if ts.as_slice() != exec.engine.ose.thresholds() {
+                match Ose::with_default_candidates(ts) {
+                    Ok(ose) => exec.engine.ose = ose,
+                    Err(e) => log::error!("bad governor thresholds for {}: {e:#}", tier.name()),
+                }
+            }
+        }
         let n = batch.len();
         let img_bytes = batch[0].image.len();
         let mut images = Vec::with_capacity(n * img_bytes);
@@ -280,13 +441,20 @@ fn worker_loop(
                     let mut m = metrics.lock().unwrap();
                     m.requests += n as u64;
                     m.batches += 1;
-                    m.batch_sizes.push(n as f64);
+                    push_sample(&mut m.batch_sizes, &mut m.batch_cursor, n as f64);
                     m.account.merge(&stats.account);
+                    m.per_tier[tier.index()].requests += n as u64;
+                    // one fused pass each: the aggregate and per-tier
+                    // views must never diverge
                     for (i, v) in stats.b_hist.iter().enumerate() {
                         m.b_hist[i] += v;
+                        m.per_tier[tier.index()].b_hist[i] += v;
                     }
                     for r in &batch {
-                        m.latencies_us.push((done - r.submitted).as_micros() as f64);
+                        let lat = (done - r.submitted).as_micros() as f64;
+                        push_sample(&mut m.latencies_us, &mut m.lat_cursor, lat);
+                        let t = &mut m.per_tier[tier.index()];
+                        push_sample(&mut t.latencies_us, &mut t.lat_cursor, lat);
                     }
                     m.finished = Some(done);
                 }
@@ -302,6 +470,7 @@ fn worker_loop(
                         id: r.id,
                         pred,
                         logits: row,
+                        tier,
                         latency: done - r.submitted,
                         batch_size: n,
                         error: None,
@@ -312,7 +481,11 @@ fn worker_loop(
                 log::error!("worker forward failed: {e:#}");
                 let msg = format!("{e:#}");
                 let done = Instant::now();
-                metrics.lock().unwrap().errors += n as u64;
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.errors += n as u64;
+                    m.per_tier[tier.index()].errors += n as u64;
+                }
                 // answer every request so submitters never hang on a
                 // silently dropped batch
                 for r in batch {
@@ -320,6 +493,7 @@ fn worker_loop(
                         id: r.id,
                         pred: 0,
                         logits: Vec::new(),
+                        tier,
                         latency: done - r.submitted,
                         batch_size: n,
                         error: Some(msg.clone()),
@@ -344,12 +518,23 @@ mod tests {
         m.finished = Some(Instant::now());
         assert_eq!(m.p50_latency_us(), 300.0);
         assert!(m.p95_latency_us() >= 400.0);
+        assert!(m.p99_latency_us() >= m.p50_latency_us());
         assert!((m.mean_batch() - 2.5).abs() < 1e-9);
         assert!(m.throughput_rps() > 4.0 && m.throughput_rps() < 6.0);
         let report = m.report(&MacroSpec::default());
         assert!(report.contains("requests=5"));
+        assert!(report.contains("rejected=0"));
+    }
+
+    #[test]
+    fn tier_stats_mean_boundary() {
+        let mut t = TierStats::default();
+        assert_eq!(t.mean_boundary(), 0.0);
+        t.b_hist[8] = 2;
+        t.b_hist[10] = 2;
+        assert!((t.mean_boundary() - 9.0).abs() < 1e-9);
     }
 
     // Live server tests need artifacts (the QGraph); they live in
-    // rust/tests/coordinator_serve.rs.
+    // rust/tests/coordinator_serve.rs and rust/tests/serve_gateway.rs.
 }

@@ -16,7 +16,11 @@
 //!   through the macro datapath;
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas tile
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at inference;
-//! * [`coordinator`] — threaded request router / batcher / server loop;
+//! * [`coordinator`] — threaded request router / batcher / server loop
+//!   with QoS-tiered bounded admission;
+//! * [`serve`] — the network surface: HTTP/1.1 gateway, per-tier SLO
+//!   queues and the dynamic precision governor (tier → OSA loss
+//!   profile, degraded under load, restored on drain);
 //! * [`energy`] — per-component energy/area/latency model calibrated to
 //!   the paper's reported breakdowns, producing TOPS/W;
 //! * substrates built in-repo because the offline crate mirror only
@@ -24,6 +28,10 @@
 //!   (TOML-subset), [`io::json`] (JSON), [`ptest`] (property testing),
 //!   [`benchkit`] (benchmark harness), [`util::prng`] (SplitMix64 shared
 //!   bit-exactly with Python).
+
+// Repo idiom: configs/metrics are built as `let mut x = X::default()`
+// followed by field overrides (mirrors the TOML/CLI override flow).
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod analog;
 pub mod benchkit;
@@ -40,6 +48,7 @@ pub mod ptest;
 pub mod quant;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod spec;
 pub mod util;
 

@@ -2,8 +2,9 @@
 //!
 //! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §9):
 //! `fig 5a|5b|6|7|8a|8b|9`, `table1`, plus `run` (single-shot batch
-//! inference), `serve` (coordinator demo), `calibrate` (Fig 4b threshold
-//! search) and `validate` (artifact/spec/PJRT sanity).
+//! inference), `serve` (HTTP gateway with `--listen`, or the in-process
+//! coordinator demo), `calibrate` (Fig 4b threshold search) and
+//! `validate` (artifact/spec/PJRT sanity).
 
 use anyhow::{bail, Context, Result};
 use osa_hcim::cli::{Cli, Command, Opt};
@@ -68,12 +69,24 @@ fn main() -> Result<()> {
             },
             Command {
                 name: "serve",
-                about: "threaded request coordinator demo (router + batcher + workers)",
+                about: "serve inference: HTTP gateway (--listen) or in-process demo",
                 opts: {
                     let mut o = common_opts();
-                    o.push(Opt::value("requests", "requests to submit", Some("256")));
+                    o.push(Opt::value("requests", "requests to submit (demo mode)", Some("256")));
                     o.push(Opt::value("workers", "worker threads", Some("4")));
                     o.push(Opt::value("max-batch", "max requests per batch", Some("32")));
+                    o.push(Opt::value(
+                        "listen",
+                        "bind the HTTP gateway here (e.g. 127.0.0.1:8080) instead of the demo",
+                        None,
+                    ));
+                    o.push(Opt::value("queue-cap", "bound of each QoS tier's queue", None));
+                    o.push(Opt::flag("no-governor", "disable the dynamic precision governor"));
+                    o.push(Opt::value(
+                        "energy-budget-w",
+                        "modeled macro power budget in watts (governor)",
+                        None,
+                    ));
                     o
                 },
             },
@@ -143,14 +156,47 @@ fn main() -> Result<()> {
             let mut cfg = cfg;
             cfg.workers = args.get_usize("workers", cfg.workers)?;
             cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+            cfg.queue_cap = args.get_usize("queue-cap", cfg.queue_cap)?;
+            if args.flag("no-governor") {
+                cfg.governor = false;
+            }
+            cfg.energy_budget_w = args.get_f64("energy-budget-w", cfg.energy_budget_w)?;
+            if let Some(listen) = args.get("listen") {
+                // gateway mode: serve HTTP until the process is killed.
+                // Fall back to the synthetic graph when the AOT artifacts
+                // are not built so the network surface is always testable.
+                let graph = match FigCtx::load(cfg.clone()) {
+                    Ok(ctx) => std::sync::Arc::new(ctx.graph),
+                    Err(e) => {
+                        eprintln!("artifacts not available ({e:#}); serving the synthetic graph");
+                        std::sync::Arc::new(QGraph::synthetic())
+                    }
+                };
+                let gateway = osa_hcim::serve::Gateway::start(&cfg, graph, listen)?;
+                let addr = gateway.addr();
+                println!("gateway listening on http://{addr}");
+                println!("  GET  http://{addr}/healthz");
+                println!("  GET  http://{addr}/metrics");
+                println!(
+                    "  curl -s -X POST http://{addr}/v1/infer -d \
+                     '{{\"tier\":\"gold\",\"image\":[...3072 uint8...]}}'"
+                );
+                gateway.wait();
+                return Ok(());
+            }
             let ctx = FigCtx::load(cfg.clone())?;
             let graph = std::sync::Arc::new(ctx.graph);
-            let server = osa_hcim::coordinator::Server::start(&cfg, graph)?;
             let n = args.get_usize("requests", 256)?.min(ctx.ds.test_n());
+            // the closed-loop demo submits everything up front: size the
+            // admission bound so it exercises batching, not backpressure
+            cfg.queue_cap = cfg.queue_cap.max(n);
+            let server = osa_hcim::coordinator::Server::start(&cfg, graph)?;
+            // demo drives all three QoS tiers round-robin
+            let tiers = osa_hcim::serve::Tier::ALL;
             let mut rxs = Vec::new();
             for i in 0..n {
                 let (img, _) = ctx.ds.test_batch(i, 1);
-                rxs.push((i, server.submit(img.to_vec())?));
+                rxs.push((i, server.submit_tier(img.to_vec(), tiers[i % tiers.len()])?));
             }
             let mut correct = 0usize;
             for (i, rx) in rxs {
@@ -171,6 +217,17 @@ fn main() -> Result<()> {
                 plan_stats.layers,
                 plan_stats.hit_rate() * 100.0
             );
+            for tier in tiers {
+                let t = metrics.tier(tier);
+                println!(
+                    "  tier {:<6} requests={} p50={:.1}ms p99={:.1}ms mean_B={:.2}",
+                    tier.name(),
+                    t.requests,
+                    t.p50_latency_us() / 1e3,
+                    t.p99_latency_us() / 1e3,
+                    t.mean_boundary()
+                );
+            }
         }
         "calibrate" => {
             let ctx = FigCtx::load(cfg)?;

@@ -203,6 +203,59 @@ mod tests {
     }
 
     #[test]
+    fn unknown_profile_is_none_known_profiles_parse() {
+        assert!(loss_profile("bogus").is_none());
+        assert!(loss_profile("").is_none());
+        assert!(loss_profile("TIGHT").is_none(), "profile names are case-sensitive");
+        for name in PROFILES {
+            let p = loss_profile(name).expect(name);
+            assert!(p.iter().all(|&x| x > 0.0), "{name}: non-positive budget {p:?}");
+            // budgets grow strictly with the level (coarser levels get
+            // strictly more loss headroom)
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "{name}: not strictly ascending {p:?}");
+        }
+    }
+
+    #[test]
+    fn calibrated_thresholds_ascending_under_every_profile() {
+        for name in PROFILES {
+            let mut f = synthetic_loss;
+            let constraints = loss_profile(name).unwrap();
+            let r = calibrate_thresholds(&mut f, 0.1, &constraints, 1000, 10).unwrap();
+            assert!(
+                r.thresholds.windows(2).all(|w| w[0] <= w[1]),
+                "{name}: {:?}",
+                r.thresholds
+            );
+        }
+    }
+
+    #[test]
+    fn eval_count_budget_respected() {
+        // Per level: one probe at the loose end, at most `search_steps`
+        // bisection probes, and one final evaluation.
+        let mut f = synthetic_loss;
+        let constraints = vec![0.02, 0.04, 0.06, 0.08, 0.10];
+        let steps = 6u32;
+        let r = calibrate_thresholds(&mut f, 0.1, &constraints, 1000, steps).unwrap();
+        let budget = constraints.len() * (steps as usize + 2);
+        assert!(r.evals <= budget, "evals {} exceeded budget {budget}", r.evals);
+        // the log never records more steps than the evaluator ran
+        assert!(r.log.len() <= r.evals);
+    }
+
+    #[test]
+    fn unconstrained_level_early_stops_with_one_eval() {
+        // When the loosest threshold already satisfies every budget the
+        // search takes exactly one evaluation per level — the Fig 4b
+        // early-stop — instead of burning the full bisection budget.
+        let mut f = synthetic_loss;
+        let r = calibrate_thresholds(&mut f, 0.1, &[10.0; 5], 1000, 10).unwrap();
+        assert_eq!(r.evals, 5, "early-stop should probe each level once");
+        assert!(r.thresholds.iter().all(|&t| t == 1000));
+    }
+
+    #[test]
     fn input_validation() {
         let mut f = synthetic_loss;
         assert!(calibrate_thresholds(&mut f, 0.1, &[], 1000, 8).is_err());

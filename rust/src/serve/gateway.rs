@@ -1,0 +1,329 @@
+//! Network gateway: a `std::net::TcpListener` HTTP/1.1 JSON front-end
+//! over the tier-aware coordinator (DESIGN.md §10).
+//!
+//! Routes:
+//! * `POST /v1/infer` — body `{"tier": "gold|silver|batch", "image":
+//!   [3072 uint8]}`; answers the prediction, or `429 Busy` when the
+//!   tier's bounded queue is full (explicit backpressure), `400` on
+//!   malformed input, `500` when the worker's forward failed.
+//! * `GET /metrics` — JSON snapshot: aggregate + per-tier latency
+//!   percentiles, boundary histograms, queue depths, rejection counts
+//!   and the governor's current per-tier precision contracts.
+//! * `GET /healthz` — liveness probe.
+//!
+//! Threading: one accept thread, one short-lived thread per connection
+//! (one request per connection, `Connection: close`), the coordinator's
+//! batcher + worker pool underneath.  Graceful [`Gateway::shutdown`]
+//! drains in-flight connections before draining the coordinator.
+
+use super::http::{self, HttpRequest};
+use super::qos::{SubmitError, Tier};
+use crate::config::SystemConfig;
+use crate::coordinator::{Metrics, Server};
+use crate::io::json::{self, arr, num, obj, s, JsonValue};
+use crate::nn::QGraph;
+use crate::spec::MacroSpec;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Expected image payload: 32x32x3 uint8.
+pub const IMAGE_BYTES: usize = 32 * 32 * 3;
+
+/// The serving gateway (listener + coordinator).
+pub struct Gateway {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Gateway {
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
+    /// start serving the graph under the given config.
+    pub fn start(cfg: &SystemConfig, graph: Arc<QGraph>, listen: &str) -> Result<Gateway> {
+        // bind first: a failed bind (port in use) must not leave a live
+        // batcher + worker pool behind with nothing to shut them down
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let server = Arc::new(Server::start(cfg, graph)?);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let spec = cfg.spec;
+        let accept = std::thread::Builder::new()
+            .name("gateway-accept".into())
+            .spawn({
+                let server = server.clone();
+                let stop = stop.clone();
+                let conns = conns.clone();
+                move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(e) => {
+                                log::warn!("accept failed: {e}");
+                                continue;
+                            }
+                        };
+                        let server = server.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("gateway-conn".into())
+                            .spawn(move || handle_conn(stream, server, spec));
+                        match spawned {
+                            Ok(h) => {
+                                let mut c = conns.lock().unwrap();
+                                c.retain(|h| !h.is_finished());
+                                c.push(h);
+                            }
+                            Err(e) => log::error!("spawning connection handler: {e}"),
+                        }
+                    }
+                }
+            })
+            .context("spawning accept loop")?;
+        log::info!("gateway listening on {addr}");
+        Ok(Gateway { server, addr, accept: Some(accept), conns, stop })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (i.e. until shutdown or
+    /// process death) — the `osa-hcim serve --listen` foreground mode.
+    pub fn wait(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+
+    /// Stop accepting, drain in-flight connections, then drain the
+    /// coordinator.  Returns the final serving metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop with one last connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        match Arc::try_unwrap(self.server) {
+            Ok(server) => server.shutdown(),
+            // a straggler still holds a handle; fall back to a snapshot
+            Err(server) => server.metrics(),
+        }
+    }
+}
+
+fn err_body(msg: &str) -> String {
+    obj(vec![("error", s(msg))]).to_string_compact()
+}
+
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) {
+    if let Err(e) = http::write_response(stream, status, reason, "application/json", body.as_bytes())
+    {
+        log::debug!("writing response: {e}");
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, server: Arc<Server>, spec: MacroSpec) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            respond(&mut stream, 400, "Bad Request", &err_body(&format!("{e:#}")));
+            return;
+        }
+    };
+    // route on the path only — a query string must not 404 an endpoint
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            let body = obj(vec![("status", s("ok"))]).to_string_compact();
+            respond(&mut stream, 200, "OK", &body);
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_json(&server, &spec).to_string_compact();
+            respond(&mut stream, 200, "OK", &body);
+        }
+        ("POST", "/v1/infer") => handle_infer(&mut stream, &req, &server),
+        _ => respond(&mut stream, 404, "Not Found", &err_body("no such route")),
+    }
+}
+
+fn handle_infer(stream: &mut TcpStream, req: &HttpRequest, server: &Server) {
+    let parsed = req.body_str().and_then(json::parse);
+    let doc = match parsed {
+        Ok(d) => d,
+        Err(e) => {
+            respond(stream, 400, "Bad Request", &err_body(&format!("bad JSON body: {e:#}")));
+            return;
+        }
+    };
+    // an absent tier defaults to silver; a present-but-invalid one is a
+    // client error, never a silent SLO downgrade
+    let tier_name = match doc.get("tier") {
+        None => "silver",
+        Some(v) => match v.as_str() {
+            Some(name) => name,
+            None => {
+                respond(stream, 400, "Bad Request", &err_body("\"tier\" must be a string"));
+                return;
+            }
+        },
+    };
+    let Some(tier) = Tier::parse(tier_name) else {
+        respond(
+            stream,
+            400,
+            "Bad Request",
+            &err_body(&format!("unknown tier {tier_name:?} (gold|silver|batch)")),
+        );
+        return;
+    };
+    let Some(pixels) = doc.get("image").and_then(JsonValue::as_array) else {
+        respond(stream, 400, "Bad Request", &err_body("missing \"image\" array"));
+        return;
+    };
+    if pixels.len() != IMAGE_BYTES {
+        respond(
+            stream,
+            400,
+            "Bad Request",
+            &err_body(&format!("image must be {IMAGE_BYTES} bytes, got {}", pixels.len())),
+        );
+        return;
+    }
+    let mut image = Vec::with_capacity(IMAGE_BYTES);
+    for p in pixels {
+        // as_i64 would silently truncate 1.9 -> 1; demand true integers
+        match p.as_f64() {
+            Some(v) if v.fract() == 0.0 && (0.0..=255.0).contains(&v) => image.push(v as u8),
+            _ => {
+                respond(
+                    stream,
+                    400,
+                    "Bad Request",
+                    &err_body("image values must be integers in 0..=255"),
+                );
+                return;
+            }
+        }
+    }
+    let rx = match server.submit_tier(image, tier) {
+        Ok(rx) => rx,
+        Err(e @ SubmitError::Busy { .. }) => {
+            let body = obj(vec![
+                ("error", s("busy")),
+                ("detail", s(&e.to_string())),
+                ("tier", s(tier.name())),
+            ])
+            .to_string_compact();
+            respond(stream, 429, "Too Many Requests", &body);
+            return;
+        }
+        Err(SubmitError::ShutDown) => {
+            respond(stream, 503, "Service Unavailable", &err_body("server is shutting down"));
+            return;
+        }
+    };
+    let resp = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => {
+            respond(stream, 500, "Internal Server Error", &err_body("response channel dropped"));
+            return;
+        }
+    };
+    if let Some(msg) = &resp.error {
+        respond(stream, 500, "Internal Server Error", &err_body(msg));
+        return;
+    }
+    let body = obj(vec![
+        ("id", num(resp.id as f64)),
+        ("tier", s(resp.tier.name())),
+        ("pred", num(resp.pred as f64)),
+        ("logits", arr(resp.logits.iter().map(|&x| num(x as f64)))),
+        ("latency_us", num(resp.latency.as_micros() as f64)),
+        ("batch_size", num(resp.batch_size as f64)),
+    ])
+    .to_string_compact();
+    respond(stream, 200, "OK", &body);
+}
+
+fn hist_json(h: &[u64; 16]) -> JsonValue {
+    arr(h.iter().map(|&c| num(c as f64)))
+}
+
+/// The `/metrics` document (also reused by the pipeline bench).
+pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
+    let m = server.metrics();
+    let depths = server.queue_depths();
+    let gov = server.governor();
+    let mut tier_objs = Vec::new();
+    for tier in Tier::ALL {
+        let t = m.tier(tier);
+        tier_objs.push((
+            tier.name(),
+            obj(vec![
+                ("requests", num(t.requests as f64)),
+                ("errors", num(t.errors as f64)),
+                ("rejected", num(t.rejected as f64)),
+                ("queue_depth", num(depths[tier.index()] as f64)),
+                ("p50_latency_us", num(t.p50_latency_us())),
+                ("p99_latency_us", num(t.p99_latency_us())),
+                ("mean_boundary", num(t.mean_boundary())),
+                ("b_hist", hist_json(&t.b_hist)),
+            ]),
+        ));
+    }
+    let gov_tiers: Vec<(&str, JsonValue)> = gov
+        .tiers
+        .iter()
+        .map(|c| {
+            (
+                c.tier.name(),
+                obj(vec![
+                    ("profile", s(c.profile)),
+                    ("level", num(c.level as f64)),
+                    ("thresholds", arr(c.thresholds.iter().map(|&t| num(t as f64)))),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("requests", num(m.requests as f64)),
+        ("batches", num(m.batches as f64)),
+        ("errors", num(m.errors as f64)),
+        ("rejected", num(m.rejected as f64)),
+        ("mean_batch", num(m.mean_batch())),
+        ("p50_latency_us", num(m.p50_latency_us())),
+        ("p95_latency_us", num(m.p95_latency_us())),
+        ("p99_latency_us", num(m.p99_latency_us())),
+        ("throughput_rps", num(m.throughput_rps())),
+        ("tops_per_watt", num(m.tops_per_watt(spec))),
+        ("watts", num(m.account.watts())),
+        ("b_hist", hist_json(&m.b_hist)),
+        ("tiers", obj(tier_objs)),
+        (
+            "governor",
+            obj(vec![
+                ("enabled", JsonValue::Bool(gov.enabled)),
+                ("transitions", num(gov.transitions as f64)),
+                ("tiers", obj(gov_tiers)),
+            ]),
+        ),
+    ])
+}

@@ -1,0 +1,326 @@
+//! Dynamic precision governor (DESIGN.md §10): the serving-time
+//! realization of on-the-fly saliency-aware precision.
+//!
+//! Each QoS tier maps onto an OSA loss-constraint profile
+//! ([`crate::osa::loss_profile`]): gold → `tight`, silver → `normal`,
+//! batch → `loose`.  The configured thresholds are the *calibrated*
+//! (silver / `normal`) operating point; a tier's base thresholds are
+//! derived by scaling each level with the ratio of its profile's loss
+//! budget to the normal budget — a looser budget admits a higher
+//! saliency threshold, steering more MACs across the digital/analog
+//! boundary into the cheap analog domain (paper Fig 9: efficiency is
+//! monotone in the loss constraint).
+//!
+//! On top of the static per-tier contract sits a feedback loop:
+//! [`Governor::observe`] folds queue pressure (and, optionally, the
+//! modeled power draw vs an energy budget) into a per-tier *degrade
+//! level* with hysteresis.  Each level doubles the effective thresholds
+//! — more samples fall below them, the OSE resolves a coarser boundary
+//! (higher B in this codebase's candidate list `[10..5]`, i.e. more
+//! analog, cheaper, slightly lossier) — batch first, then silver; gold
+//! never degrades.  When the queues drain, levels step back down and
+//! the calibrated contract is restored.
+
+use super::qos::Tier;
+use crate::config::SystemConfig;
+use crate::osa;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Feedback-loop knobs (defaults in [`SystemConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorConfig {
+    /// Master switch: disabled ⇒ every tier stays at its base contract.
+    pub enabled: bool,
+    /// Queue pressure (worst tier fill fraction) above which one tier
+    /// degrades one level.
+    pub high_watermark: f64,
+    /// Pressure below which one tier recovers one level.
+    pub low_watermark: f64,
+    /// Max degrade levels per tier (each level doubles thresholds).
+    pub max_level: u32,
+    /// Minimum time between level changes (hysteresis hold).
+    pub hold: Duration,
+    /// Modeled macro power budget in watts; 0 disables the energy term.
+    /// Running above budget counts as full pressure.
+    pub energy_budget_w: f64,
+}
+
+impl GovernorConfig {
+    pub fn from_system(cfg: &SystemConfig) -> Self {
+        Self {
+            enabled: cfg.governor,
+            high_watermark: cfg.gov_high_watermark,
+            low_watermark: cfg.gov_low_watermark,
+            max_level: cfg.gov_max_level,
+            hold: Duration::from_millis(cfg.gov_hold_ms),
+            energy_budget_w: cfg.energy_budget_w,
+        }
+    }
+}
+
+/// Point-in-time view of one tier's precision contract (for `/metrics`).
+#[derive(Debug, Clone)]
+pub struct TierContract {
+    pub tier: Tier,
+    pub profile: &'static str,
+    pub level: u32,
+    /// Effective OSE thresholds at the current degrade level.
+    pub thresholds: Vec<i32>,
+}
+
+/// Point-in-time view of the whole governor (for `/metrics` and tests).
+#[derive(Debug, Clone)]
+pub struct GovernorSnapshot {
+    pub enabled: bool,
+    pub tiers: Vec<TierContract>,
+    /// Total level changes since start (escalations + recoveries).
+    pub transitions: u64,
+}
+
+/// The per-tier dynamic precision controller.  Cheap to share: workers
+/// read per-batch thresholds with two atomic loads and a small alloc.
+pub struct Governor {
+    cfg: GovernorConfig,
+    /// Per-tier base thresholds (profile-scaled calibrated thresholds).
+    base: [Vec<i32>; 3],
+    /// Per-tier degrade level, 0 = base contract.
+    levels: [AtomicU32; 3],
+    transitions: AtomicU64,
+    last_change: Mutex<Instant>,
+}
+
+impl Governor {
+    /// Derive per-tier contracts from the calibrated thresholds.
+    pub fn new(calibrated: &[i32], cfg: GovernorConfig) -> Self {
+        let normal = osa::loss_profile(Tier::Silver.profile()).expect("normal profile exists");
+        let mut base: [Vec<i32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for tier in Tier::ALL {
+            let prof = osa::loss_profile(tier.profile()).expect("tier profile exists");
+            let mut ts = Vec::with_capacity(calibrated.len());
+            let mut hi = i32::MIN;
+            for (i, &t) in calibrated.iter().enumerate() {
+                let scale = prof[i % prof.len()] / normal[i % normal.len()].max(1e-12);
+                let v = ((t as f64) * scale).round();
+                let v = v.clamp(i32::MIN as f64, i32::MAX as f64) as i32;
+                // keep ascending even for non-monotone scale ratios
+                hi = hi.max(v);
+                ts.push(hi);
+            }
+            base[tier.index()] = ts;
+        }
+        Self {
+            cfg,
+            base,
+            levels: [AtomicU32::new(0), AtomicU32::new(0), AtomicU32::new(0)],
+            transitions: AtomicU64::new(0),
+            last_change: Mutex::new(Instant::now()),
+        }
+    }
+
+    pub fn from_system(cfg: &SystemConfig) -> Self {
+        Self::new(&cfg.thresholds, GovernorConfig::from_system(cfg))
+    }
+
+    /// Current degrade level of a tier.
+    pub fn level(&self, tier: Tier) -> u32 {
+        self.levels[tier.index()].load(Ordering::Relaxed)
+    }
+
+    /// Effective OSE thresholds for a tier at its current level.  Each
+    /// level doubles the base thresholds (saturating), so fewer samples
+    /// clear them and the OSE resolves coarser boundaries.
+    pub fn thresholds_for(&self, tier: Tier) -> Vec<i32> {
+        let level = self.level(tier).min(31);
+        self.base[tier.index()]
+            .iter()
+            .map(|&t| ((t as i64) << level).clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+            .collect()
+    }
+
+    /// Feed one load observation into the feedback loop.  `pressure` is
+    /// the worst tier queue fill fraction in [0, 1]; `watts` the modeled
+    /// macro power (ignored unless an energy budget is configured).
+    /// At most one tier moves one level per `hold` interval.
+    pub fn observe(&self, pressure: f64, watts: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut p = pressure;
+        if self.cfg.energy_budget_w > 0.0 && watts > self.cfg.energy_budget_w {
+            p = 1.0;
+        }
+        let mut last = self.last_change.lock().unwrap();
+        let now = Instant::now();
+        if now.duration_since(*last) < self.cfg.hold {
+            return;
+        }
+        if p >= self.cfg.high_watermark {
+            // degrade the lowest tier that still has headroom; gold never
+            for tier in [Tier::Batch, Tier::Silver] {
+                let l = self.levels[tier.index()].load(Ordering::Relaxed);
+                if l < self.cfg.max_level {
+                    self.levels[tier.index()].store(l + 1, Ordering::Relaxed);
+                    self.transitions.fetch_add(1, Ordering::Relaxed);
+                    *last = now;
+                    log::info!(
+                        "governor: pressure {p:.2} — {} degraded to level {}",
+                        tier.name(),
+                        l + 1
+                    );
+                    return;
+                }
+            }
+        } else if p <= self.cfg.low_watermark {
+            // recover the highest tier first so silver heals before batch
+            for tier in [Tier::Silver, Tier::Batch] {
+                let l = self.levels[tier.index()].load(Ordering::Relaxed);
+                if l > 0 {
+                    self.levels[tier.index()].store(l - 1, Ordering::Relaxed);
+                    self.transitions.fetch_add(1, Ordering::Relaxed);
+                    *last = now;
+                    log::info!(
+                        "governor: pressure {p:.2} — {} recovered to level {}",
+                        tier.name(),
+                        l - 1
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> GovernorSnapshot {
+        GovernorSnapshot {
+            enabled: self.cfg.enabled,
+            tiers: Tier::ALL
+                .iter()
+                .map(|&t| TierContract {
+                    tier: t,
+                    profile: t.profile(),
+                    level: self.level(t),
+                    thresholds: self.thresholds_for(t),
+                })
+                .collect(),
+            transitions: self.transitions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gcfg() -> GovernorConfig {
+        GovernorConfig {
+            enabled: true,
+            high_watermark: 0.75,
+            low_watermark: 0.25,
+            max_level: 3,
+            hold: Duration::ZERO,
+            energy_budget_w: 0.0,
+        }
+    }
+
+    const CAL: [i32; 5] = [0, 0, 32, 94, 1024];
+
+    #[test]
+    fn tier_contracts_scale_with_profile_looseness() {
+        let g = Governor::new(&CAL, gcfg());
+        let gold = g.thresholds_for(Tier::Gold);
+        let silver = g.thresholds_for(Tier::Silver);
+        let batch = g.thresholds_for(Tier::Batch);
+        // silver IS the calibrated operating point
+        assert_eq!(silver, CAL.to_vec());
+        // tighter budget -> lower thresholds -> finer boundaries
+        assert!(gold.iter().zip(&silver).all(|(a, b)| a <= b), "{gold:?} vs {silver:?}");
+        assert!(batch.iter().zip(&silver).all(|(a, b)| a >= b), "{batch:?} vs {silver:?}");
+        assert!(batch.iter().sum::<i32>() > silver.iter().sum::<i32>());
+        // all contracts stay ascending (Ose::new requirement)
+        for ts in [&gold, &silver, &batch] {
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+        }
+    }
+
+    #[test]
+    fn escalates_batch_then_silver_never_gold() {
+        let g = Governor::new(&CAL, gcfg());
+        for _ in 0..10 {
+            g.observe(1.0, 0.0);
+        }
+        assert_eq!(g.level(Tier::Batch), 3, "batch pinned at max level");
+        assert_eq!(g.level(Tier::Silver), 3, "silver degrades after batch maxes");
+        assert_eq!(g.level(Tier::Gold), 0, "gold must never degrade");
+        // degraded thresholds are the base shifted left by the level
+        let batch0: Vec<i32> = Governor::new(&CAL, gcfg()).thresholds_for(Tier::Batch);
+        let batch3 = g.thresholds_for(Tier::Batch);
+        for (a, b) in batch0.iter().zip(&batch3) {
+            assert_eq!(*b, a << 3);
+        }
+    }
+
+    #[test]
+    fn recovers_silver_first_then_batch() {
+        let g = Governor::new(&CAL, gcfg());
+        for _ in 0..2 {
+            g.observe(1.0, 0.0); // batch -> 2
+        }
+        for _ in 0..4 {
+            g.observe(1.0, 0.0); // batch -> 3, silver -> 3
+        }
+        g.observe(0.0, 0.0);
+        assert_eq!(g.level(Tier::Silver), 2, "silver recovers first");
+        for _ in 0..10 {
+            g.observe(0.0, 0.0);
+        }
+        assert_eq!(g.level(Tier::Silver), 0);
+        assert_eq!(g.level(Tier::Batch), 0, "calibrated contract restored after drain");
+        assert!(g.snapshot().transitions >= 8);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_levels() {
+        let g = Governor::new(&CAL, gcfg());
+        g.observe(1.0, 0.0);
+        assert_eq!(g.level(Tier::Batch), 1);
+        // mid-band pressure changes nothing in either direction
+        for _ in 0..5 {
+            g.observe(0.5, 0.0);
+        }
+        assert_eq!(g.level(Tier::Batch), 1);
+    }
+
+    #[test]
+    fn hold_interval_rate_limits_changes() {
+        let mut cfg = gcfg();
+        cfg.hold = Duration::from_secs(3600);
+        let g = Governor::new(&CAL, cfg);
+        for _ in 0..5 {
+            g.observe(1.0, 0.0);
+        }
+        // the hold window from construction hasn't elapsed
+        assert_eq!(g.level(Tier::Batch), 0);
+    }
+
+    #[test]
+    fn energy_budget_counts_as_pressure() {
+        let mut cfg = gcfg();
+        cfg.energy_budget_w = 0.5;
+        let g = Governor::new(&CAL, cfg);
+        g.observe(0.0, 1.0); // over budget, empty queues
+        assert_eq!(g.level(Tier::Batch), 1);
+    }
+
+    #[test]
+    fn disabled_governor_is_inert() {
+        let mut cfg = gcfg();
+        cfg.enabled = false;
+        let g = Governor::new(&CAL, cfg);
+        for _ in 0..5 {
+            g.observe(1.0, 1e9);
+        }
+        assert_eq!(g.level(Tier::Batch), 0);
+        assert!(!g.snapshot().enabled);
+    }
+}

@@ -1,0 +1,229 @@
+//! Minimal HTTP/1.1 substrate for the gateway (no HTTP crates in the
+//! offline mirror — hand-rolled in-repo, like `io::json`).
+//!
+//! Scope: exactly what `serve::gateway` needs.  One request per
+//! connection (`Connection: close` on every response), request line +
+//! headers + `Content-Length` body, bounded sizes.  Also provides the
+//! tiny blocking client used by the integration tests and benches.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Parsing bounds (a request violating them is a 400).
+const MAX_HEADER_LINE: usize = 16 * 1024;
+const MAX_HEADERS: usize = 64;
+const MAX_BODY: usize = 4 * 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names lower-cased.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+fn read_line_bounded(r: &mut impl BufRead) -> Result<String> {
+    // `take` bounds how much a newline-less line can buffer: a peer
+    // streaming garbage can cost at most MAX_HEADER_LINE + 1 bytes here,
+    // never unbounded memory.
+    let mut buf = Vec::new();
+    let n = r
+        .by_ref()
+        .take(MAX_HEADER_LINE as u64 + 1)
+        .read_until(b'\n', &mut buf)
+        .context("reading header line")?;
+    if n == 0 {
+        bail!("connection closed before a full request arrived");
+    }
+    if buf.len() > MAX_HEADER_LINE {
+        bail!("header line too long (over {MAX_HEADER_LINE} bytes)");
+    }
+    let line = String::from_utf8(buf).context("header line is not UTF-8")?;
+    Ok(line.trim_end_matches(|c| c == '\r' || c == '\n').to_string())
+}
+
+/// Read one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(&mut *stream);
+    let request_line = read_line_bounded(&mut reader)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line missing path")?.to_string();
+    let version = parts.next().context("request line missing version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version:?}");
+    }
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = read_line_bounded(&mut reader)?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("too many headers");
+        }
+        let (name, value) = line.split_once(':').context("malformed header line")?;
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    let len = match headers.get("content-length") {
+        Some(v) => v.parse::<usize>().context("bad Content-Length")?,
+        None => 0,
+    };
+    if len > MAX_BODY {
+        bail!("body too large ({len} bytes, max {MAX_BODY})");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("reading request body")?;
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// Write one response and flush.  Always closes after (the gateway is
+/// one-request-per-connection).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// `POST /v1/infer` body for one image at one tier — the wire format
+/// `gateway::handle_infer` parses.  Lives here so the tests and the
+/// pipeline bench build requests from one definition.
+pub fn infer_body(tier: &str, img: &[u8]) -> String {
+    let mut body = String::with_capacity(img.len() * 4 + 64);
+    body.push_str("{\"tier\":\"");
+    body.push_str(tier);
+    body.push_str("\",\"image\":[");
+    for (i, b) in img.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&b.to_string());
+    }
+    body.push_str("]}");
+    body
+}
+
+/// Blocking one-shot client: returns (status, body).  Used by the
+/// integration tests, the pipeline bench and `examples/serve_requests`.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let payload = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        payload.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).context("reading response")?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .context("malformed status line")?
+        .parse()
+        .context("non-numeric status")?;
+    let resp_body = match raw.find("\r\n\r\n") {
+        Some(i) => raw[i + 4..].to_string(),
+        None => String::new(),
+    };
+    Ok((status, resp_body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Round-trip a raw request through a real socket pair.
+    fn roundtrip(raw: &str) -> Result<HttpRequest> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_string();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+        });
+        let (mut server_side, _) = listener.accept().unwrap();
+        let req = read_request(&mut server_side);
+        client.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let body = "{\"tier\":\"gold\"}";
+        let raw = format!(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let req = roundtrip(&raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.body_str().unwrap(), body);
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = roundtrip("GET /healthz HTTP/1.1\r\nX-Trace: 7\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("x-trace"), Some("7"));
+        assert_eq!(req.header("X-Trace"), Some("7"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(roundtrip("not http at all\r\n\r\n").is_err());
+        assert!(roundtrip("GET /x SPDY/99\r\n\r\n").is_err());
+        assert!(roundtrip("GET /x HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
+        assert!(roundtrip("POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+        // body shorter than Content-Length -> read_exact fails at EOF
+        assert!(roundtrip("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn response_writer_and_client_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_request(&mut s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.body_str().unwrap(), "{\"x\":1}");
+            write_response(&mut s, 200, "OK", "application/json", b"{\"ok\":true}").unwrap();
+        });
+        let (status, body) = request(&addr, "POST", "/echo", Some("{\"x\":1}")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        server.join().unwrap();
+    }
+}

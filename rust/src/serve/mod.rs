@@ -1,0 +1,24 @@
+//! The network serving subsystem (DESIGN.md §10): HTTP gateway →
+//! QoS-tiered admission → dynamic precision governor.
+//!
+//! * [`gateway`] — `std::net` HTTP/1.1 JSON front-end (`POST /v1/infer`,
+//!   `GET /metrics`, `GET /healthz`) with explicit `429 Busy`
+//!   backpressure;
+//! * [`qos`] — per-request SLO tiers (`gold`/`silver`/`batch`), bounded
+//!   per-tier queues and deadline-aware single-tier batch coalescing
+//!   (hard window from first enqueue);
+//! * [`governor`] — the feedback loop that maps each tier onto an OSA
+//!   loss profile and degrades/restores the effective digital↔analog
+//!   boundary with load — serving-time on-the-fly saliency-aware
+//!   precision;
+//! * [`http`] — the hand-rolled HTTP substrate (no HTTP crates in the
+//!   offline mirror), plus the blocking client used by tests/benches.
+
+pub mod gateway;
+pub mod governor;
+pub mod http;
+pub mod qos;
+
+pub use gateway::Gateway;
+pub use governor::{Governor, GovernorConfig, GovernorSnapshot};
+pub use qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};

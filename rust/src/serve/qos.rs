@@ -1,0 +1,407 @@
+//! QoS-tiered admission: per-request SLO tiers, bounded per-tier queues
+//! and deadline-aware batch coalescing (DESIGN.md §10).
+//!
+//! Three tiers map onto the OSA loss-constraint profiles of Fig 9:
+//! `gold` (interactive, tight loss budget, short coalescing window),
+//! `silver` (default, the calibrated operating point) and `batch`
+//! (throughput traffic, loose budget, long window).  Each tier owns a
+//! bounded FIFO; admission past the bound fails fast with a typed
+//! [`SubmitError::Busy`] instead of growing an unbounded queue — the
+//! gateway maps it to HTTP 429.
+//!
+//! The consumer ([`TierQueues::pop_batch`]) drains strictly by priority
+//! and coalesces one single-tier batch at a time, because the precision
+//! governor configures the engine *per batch* — mixing tiers in a batch
+//! would mix precision contracts.  The coalescing window is a **hard
+//! deadline counted from the first request's enqueue time**: a trickle
+//! of later arrivals can never extend it (the seed batcher's window
+//! restarted at dequeue time, so queued requests aged invisibly).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-request service tier, highest priority first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Interactive: tight loss profile, shortest coalescing window.
+    Gold,
+    /// Default: the calibrated (`normal` profile) operating point.
+    Silver,
+    /// Throughput: loose loss profile, full coalescing window; the
+    /// governor degrades this tier first under load.
+    Batch,
+}
+
+impl Tier {
+    /// All tiers, highest priority first (the drain order).
+    pub const ALL: [Tier; 3] = [Tier::Gold, Tier::Silver, Tier::Batch];
+
+    pub fn parse(text: &str) -> Option<Tier> {
+        match text {
+            "gold" => Some(Tier::Gold),
+            "silver" => Some(Tier::Silver),
+            "batch" => Some(Tier::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Gold => "gold",
+            Tier::Silver => "silver",
+            Tier::Batch => "batch",
+        }
+    }
+
+    /// Index into per-tier arrays (== priority rank, 0 first).
+    pub fn index(&self) -> usize {
+        match self {
+            Tier::Gold => 0,
+            Tier::Silver => 1,
+            Tier::Batch => 2,
+        }
+    }
+
+    /// The OSA loss-constraint profile this tier's precision contract
+    /// maps onto ([`crate::osa::loss_profile`]).
+    pub fn profile(&self) -> &'static str {
+        match self {
+            Tier::Gold => "tight",
+            Tier::Silver => "normal",
+            Tier::Batch => "loose",
+        }
+    }
+
+    /// Coalescing window for this tier given the configured base window:
+    /// gold flushes almost immediately, batch uses the full window.
+    pub fn coalesce_window(&self, base: Duration) -> Duration {
+        let w = match self {
+            Tier::Gold => base / 8,
+            Tier::Silver => base / 2,
+            Tier::Batch => base,
+        };
+        w.max(Duration::from_micros(1))
+    }
+}
+
+/// Typed admission error surfaced by [`TierQueues::push`] (and
+/// `coordinator::Server::submit*`).  `Busy` is the backpressure signal:
+/// the caller should shed or retry later; the gateway answers 429.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The tier's bounded queue is at capacity.
+    Busy { tier: Tier, cap: usize },
+    /// The server is shutting down (or already shut down).
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy { tier, cap } => {
+                write!(f, "{} tier queue is full ({cap} pending) — busy, retry later", tier.name())
+            }
+            SubmitError::ShutDown => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Admission / coalescing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct QosConfig {
+    /// Bound of each tier's queue (admission past it returns `Busy`).
+    pub queue_cap: usize,
+    /// Max requests per coalesced batch.
+    pub max_batch: usize,
+    /// Base coalescing window; tiers derive theirs via
+    /// [`Tier::coalesce_window`].
+    pub base_window: Duration,
+}
+
+/// Result of one [`TierQueues::pop_batch`] call.
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// One single-tier batch, highest-priority tier first.
+    Batch(Tier, Vec<T>),
+    /// No work arrived within the idle tick — a chance for the caller
+    /// to run periodic upkeep (governor observation).
+    Idle,
+    /// Closed and fully drained: no more batches will ever come.
+    Closed,
+}
+
+struct QueueState<T> {
+    queues: [VecDeque<(Instant, T)>; 3],
+    rejected: [u64; 3],
+    closed: bool,
+}
+
+/// Bounded, prioritized, deadline-coalescing tier queues (single
+/// consumer, many producers).
+pub struct TierQueues<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+    cfg: QosConfig,
+}
+
+impl<T> TierQueues<T> {
+    pub fn new(mut cfg: QosConfig) -> Self {
+        // a zero bound would admit nothing / coalesce nothing
+        cfg.queue_cap = cfg.queue_cap.max(1);
+        cfg.max_batch = cfg.max_batch.max(1);
+        Self {
+            state: Mutex::new(QueueState {
+                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                rejected: [0; 3],
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &QosConfig {
+        &self.cfg
+    }
+
+    /// Admit one item, or fail fast when the tier's bound is reached.
+    pub fn push(&self, tier: Tier, item: T) -> Result<(), SubmitError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::ShutDown);
+        }
+        if st.queues[tier.index()].len() >= self.cfg.queue_cap {
+            st.rejected[tier.index()] += 1;
+            return Err(SubmitError::Busy { tier, cap: self.cfg.queue_cap });
+        }
+        st.queues[tier.index()].push_back((Instant::now(), item));
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Stop admitting; wake the consumer.  Items already queued are
+    /// still drained by `pop_batch` before it reports `Closed`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Queue depth per tier (gold, silver, batch).
+    pub fn depths(&self) -> [usize; 3] {
+        let st = self.state.lock().unwrap();
+        [st.queues[0].len(), st.queues[1].len(), st.queues[2].len()]
+    }
+
+    /// Rejections (Busy) per tier since start.
+    pub fn rejected(&self) -> [u64; 3] {
+        self.state.lock().unwrap().rejected
+    }
+
+    /// Load signal for the governor: the worst per-tier fill fraction,
+    /// in [0, 1].  A single saturated tier is full pressure — that is
+    /// the tier whose latency contract is already breaking.
+    pub fn pressure(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        let cap = self.cfg.queue_cap.max(1) as f64;
+        st.queues.iter().map(|q| q.len() as f64 / cap).fold(0.0, f64::max)
+    }
+
+    /// Block for the next single-tier batch (priority drain, hard
+    /// per-tier coalescing deadline), or `Idle` after `idle_tick`
+    /// without work, or `Closed` once closed and drained.
+    pub fn pop_batch(&self, idle_tick: Duration) -> Pop<T> {
+        let mut st = self.state.lock().unwrap();
+        // Wait for the first item (bounded so the caller can tick).
+        while st.queues.iter().all(|q| q.is_empty()) {
+            if st.closed {
+                return Pop::Closed;
+            }
+            let (guard, res) = self.cv.wait_timeout(st, idle_tick).unwrap();
+            st = guard;
+            if res.timed_out() && st.queues.iter().all(|q| q.is_empty()) {
+                return if st.closed { Pop::Closed } else { Pop::Idle };
+            }
+        }
+        let tier = *Tier::ALL
+            .iter()
+            .find(|t| !st.queues[t.index()].is_empty())
+            .expect("some queue is non-empty");
+        let window = tier.coalesce_window(self.cfg.base_window);
+        let mut batch: Vec<(Instant, T)> = Vec::new();
+        loop {
+            while batch.len() < self.cfg.max_batch {
+                match st.queues[tier.index()].pop_front() {
+                    Some(x) => batch.push(x),
+                    None => break,
+                }
+            }
+            // Hard deadline from the FIRST request's enqueue time: a
+            // trickle of later arrivals can never extend the window.
+            let deadline = batch[0].0 + window;
+            let now = Instant::now();
+            let higher_waiting =
+                Tier::ALL[..tier.index()].iter().any(|t| !st.queues[t.index()].is_empty());
+            if batch.len() >= self.cfg.max_batch || now >= deadline || st.closed || higher_waiting
+            {
+                drop(st);
+                return Pop::Batch(tier, batch.into_iter().map(|(_, x)| x).collect());
+            }
+            let (guard, _res) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn cfg(cap: usize, max_batch: usize, window_ms: u64) -> QosConfig {
+        QosConfig { queue_cap: cap, max_batch, base_window: Duration::from_millis(window_ms) }
+    }
+
+    #[test]
+    fn tier_parse_and_names() {
+        for t in Tier::ALL {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("bronze"), None);
+        assert!(crate::osa::loss_profile(Tier::Gold.profile()).is_some());
+        assert!(crate::osa::loss_profile(Tier::Silver.profile()).is_some());
+        assert!(crate::osa::loss_profile(Tier::Batch.profile()).is_some());
+    }
+
+    #[test]
+    fn coalesce_windows_ordered_by_priority() {
+        let base = Duration::from_millis(8);
+        assert!(Tier::Gold.coalesce_window(base) < Tier::Silver.coalesce_window(base));
+        assert!(Tier::Silver.coalesce_window(base) < Tier::Batch.coalesce_window(base));
+        // never zero, even for a zero base window
+        assert!(Tier::Gold.coalesce_window(Duration::ZERO) > Duration::ZERO);
+    }
+
+    #[test]
+    fn priority_drain_order() {
+        let q = TierQueues::new(cfg(8, 1, 1));
+        q.push(Tier::Batch, 30u32).unwrap();
+        q.push(Tier::Silver, 20).unwrap();
+        q.push(Tier::Gold, 10).unwrap();
+        let tick = Duration::from_millis(50);
+        for expect in [(Tier::Gold, 10u32), (Tier::Silver, 20), (Tier::Batch, 30)] {
+            match q.pop_batch(tick) {
+                Pop::Batch(t, items) => {
+                    assert_eq!(t, expect.0);
+                    assert_eq!(items, vec![expect.1]);
+                }
+                other => panic!("expected a batch, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn busy_at_cap_and_rejected_counter() {
+        let q = TierQueues::new(cfg(2, 4, 1));
+        q.push(Tier::Gold, 1u32).unwrap();
+        q.push(Tier::Gold, 2).unwrap();
+        let err = q.push(Tier::Gold, 3).unwrap_err();
+        assert_eq!(err, SubmitError::Busy { tier: Tier::Gold, cap: 2 });
+        assert!(err.to_string().contains("busy"));
+        assert_eq!(q.rejected(), [1, 0, 0]);
+        // other tiers are bounded independently
+        q.push(Tier::Batch, 4).unwrap();
+        assert_eq!(q.depths(), [2, 0, 1]);
+        assert!(q.pressure() > 0.99);
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = TierQueues::new(cfg(8, 16, 1));
+        q.push(Tier::Silver, 1u32).unwrap();
+        q.push(Tier::Silver, 2).unwrap();
+        q.close();
+        assert_eq!(q.push(Tier::Silver, 3).unwrap_err(), SubmitError::ShutDown);
+        match q.pop_batch(Duration::from_millis(10)) {
+            Pop::Batch(t, items) => {
+                assert_eq!(t, Tier::Silver);
+                assert_eq!(items, vec![1, 2]);
+            }
+            other => panic!("expected drained batch, got {other:?}"),
+        }
+        assert!(matches!(q.pop_batch(Duration::from_millis(10)), Pop::Closed));
+    }
+
+    #[test]
+    fn idle_tick_without_work() {
+        let q: TierQueues<u32> = TierQueues::new(cfg(8, 16, 1));
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_batch(Duration::from_millis(5)), Pop::Idle));
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn hard_deadline_from_first_enqueue_stops_trickle_extension() {
+        // Arrivals every 20ms for 8 items (span ~140ms) against a 60ms
+        // batch-tier window: the first batch must flush on the deadline
+        // of its FIRST item, not keep absorbing the trickle.
+        let q = Arc::new(TierQueues::new(cfg(64, 100, 60)));
+        let prod = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..8u32 {
+                    q.push(Tier::Batch, i).unwrap();
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            })
+        };
+        // wait for the first arrival, then time the batch
+        let batch = loop {
+            match q.pop_batch(Duration::from_millis(5)) {
+                Pop::Batch(_, items) => break items,
+                _ => continue,
+            }
+        };
+        assert!(
+            batch.len() < 8,
+            "trickle extended the window: {} items coalesced into one batch",
+            batch.len()
+        );
+        assert!(!batch.is_empty());
+        prod.join().unwrap();
+    }
+
+    #[test]
+    fn gold_arrival_preempts_batch_coalescing() {
+        let q = Arc::new(TierQueues::new(cfg(8, 100, 400)));
+        q.push(Tier::Batch, 1u32).unwrap();
+        let pusher = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                q.push(Tier::Gold, 2).unwrap();
+            })
+        };
+        let t0 = Instant::now();
+        match q.pop_batch(Duration::from_millis(5)) {
+            Pop::Batch(t, items) => {
+                assert_eq!(t, Tier::Batch);
+                assert_eq!(items, vec![1]);
+            }
+            other => panic!("expected the preempted batch, got {other:?}"),
+        }
+        // flushed well before the 400ms batch window because gold arrived
+        assert!(t0.elapsed() < Duration::from_millis(300), "no preemption: {:?}", t0.elapsed());
+        match q.pop_batch(Duration::from_millis(50)) {
+            Pop::Batch(t, items) => {
+                assert_eq!(t, Tier::Gold);
+                assert_eq!(items, vec![2]);
+            }
+            other => panic!("expected the gold batch, got {other:?}"),
+        }
+        pusher.join().unwrap();
+    }
+}

@@ -4,10 +4,13 @@
 //! drain / error-response / plan-cache tests run over
 //! `QGraph::synthetic()` and need nothing on disk.
 
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::QGraph;
+use osa_hcim::serve::{SubmitError, Tier};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -164,6 +167,98 @@ fn forward_error_answers_with_error_response() {
     let metrics = server.shutdown();
     assert_eq!(metrics.errors, 1);
     assert_eq!(metrics.requests, 1, "failed requests must not count as served");
+}
+
+#[test]
+fn bounded_queue_surfaces_typed_busy_error() {
+    // Seed behavior: `submit` pushed into an unbounded channel, so a
+    // slow worker pool meant unbounded memory growth.  Now admission is
+    // bounded per tier and overload fails fast with `SubmitError::Busy`.
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 1;
+    cfg.queue_cap = 2;
+    cfg.batch_timeout_us = 100;
+    let server = synth_server(&cfg);
+    let mut accepted = Vec::new();
+    let mut busy = 0u64;
+    for i in 0..100u64 {
+        match server.submit(synth_image(i)) {
+            Ok(rx) => accepted.push(rx),
+            Err(e @ SubmitError::Busy { .. }) => {
+                assert!(e.to_string().contains("busy"), "{e}");
+                busy += 1;
+            }
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    assert!(busy > 0, "100 rapid submissions against cap=2 never hit backpressure");
+    // every *admitted* request is still answered — shedding never drops
+    // an accepted channel
+    for rx in accepted {
+        let resp = rx.recv().expect("admitted request must be answered");
+        assert!(resp.error.is_none());
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.rejected, busy, "rejection counter mismatch");
+    assert_eq!(metrics.requests + metrics.rejected, 100);
+}
+
+#[test]
+fn batch_window_is_hard_deadline_from_first_enqueue() {
+    // Regression: the seed batcher restarted its timeout window when it
+    // *dequeued* the first request, so a steady trickle of arrivals
+    // could keep extending the window far past `batch_timeout_us`.  The
+    // window now ends at `first_enqueue + window`, hard.
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 64;
+    cfg.queue_cap = 64;
+    cfg.batch_timeout_us = 60_000; // batch tier uses the full 60ms window
+    let server = synth_server(&cfg);
+    let mut pending = Vec::new();
+    // 8 arrivals spaced 20ms apart span ~140ms — more than two windows
+    for i in 0..8u64 {
+        pending.push(server.submit_tier(synth_image(i), Tier::Batch).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let metrics = server.shutdown();
+    assert!(
+        metrics.batches >= 2,
+        "a 140ms trickle coalesced into {} batch(es) — the 60ms window was extended",
+        metrics.batches
+    );
+    assert_eq!(metrics.requests, 8);
+}
+
+#[test]
+fn tiers_are_tracked_separately_in_metrics() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 2;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 1_000;
+    let server = synth_server(&cfg);
+    let mut pending = Vec::new();
+    for (i, tier) in [(0u64, Tier::Gold), (1, Tier::Gold), (2, Tier::Batch)] {
+        pending.push((tier, server.submit_tier(synth_image(i), tier).unwrap()));
+    }
+    for (tier, rx) in pending {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tier, tier, "response must carry its request's tier");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.tier(Tier::Gold).requests, 2);
+    assert_eq!(metrics.tier(Tier::Batch).requests, 1);
+    assert_eq!(metrics.tier(Tier::Silver).requests, 0);
+    assert_eq!(metrics.requests, 3);
+    assert_eq!(metrics.tier(Tier::Gold).latencies_us.len(), 2);
 }
 
 #[test]

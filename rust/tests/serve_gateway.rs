@@ -1,0 +1,306 @@
+//! End-to-end gateway tests over a real socket: HTTP surface, QoS
+//! tier latency ordering, governor pressure/drain dynamics and 429
+//! backpressure.  Everything runs on `QGraph::synthetic()` — no
+//! artifacts needed.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::QGraph;
+use osa_hcim::serve::http;
+use osa_hcim::serve::{Gateway, Tier};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn synth_image(seed: u64) -> Vec<u8> {
+    let mut g = osa_hcim::util::prng::SplitMix64::new(seed);
+    (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+fn infer_body(tier: &str, seed: u64) -> String {
+    http::infer_body(tier, &synth_image(seed))
+}
+
+fn start_gateway(cfg: &SystemConfig) -> (Gateway, String) {
+    let gw = Gateway::start(cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    (gw, addr)
+}
+
+fn get_metrics(addr: &str) -> JsonValue {
+    let (status, body) = http::request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200, "metrics endpoint failed: {body}");
+    parse(&body).unwrap()
+}
+
+fn gov_level(metrics: &JsonValue, tier: &str) -> i64 {
+    metrics
+        .get("governor")
+        .and_then(|g| g.get("tiers"))
+        .and_then(|t| t.get(tier))
+        .and_then(|t| t.get("level"))
+        .and_then(JsonValue::as_i64)
+        .expect("governor level in /metrics")
+}
+
+#[test]
+fn http_surface_health_metrics_infer_and_errors() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 500;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let (status, body) = http::request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"), "{body}");
+
+    // a good inference round trip
+    let (status, body) =
+        http::request(&addr, "POST", "/v1/infer", Some(&infer_body("gold", 1))).unwrap();
+    assert_eq!(status, 200, "infer failed: {body}");
+    let doc = parse(&body).unwrap();
+    assert_eq!(doc.get("tier").and_then(JsonValue::as_str), Some("gold"));
+    assert_eq!(doc.get("logits").and_then(JsonValue::as_array).map(|a| a.len()), Some(10));
+    let pred = doc.get("pred").and_then(JsonValue::as_usize).unwrap();
+    assert!(pred < 10);
+    assert!(doc.get("latency_us").and_then(JsonValue::as_f64).unwrap() > 0.0);
+
+    // malformed inputs are 4xx, not hangs or 500s
+    let (status, _) = http::request(&addr, "POST", "/v1/infer", Some("not json")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        http::request(&addr, "POST", "/v1/infer", Some("{\"tier\":\"bronze\",\"image\":[]}"))
+            .unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        http::request(&addr, "POST", "/v1/infer", Some("{\"image\":[1,2,3]}")).unwrap();
+    assert_eq!(status, 400);
+    // present-but-non-string tier is rejected, not silently downgraded
+    let (status, _) =
+        http::request(&addr, "POST", "/v1/infer", Some("{\"tier\":1,\"image\":[]}")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http::request(&addr, "GET", "/no/such/route", None).unwrap();
+    assert_eq!(status, 404);
+
+    // metrics reflect exactly the one served request
+    let m = get_metrics(&addr);
+    assert_eq!(m.get("requests").and_then(JsonValue::as_i64), Some(1));
+    assert_eq!(
+        m.get("tiers").and_then(|t| t.get("gold")).and_then(|t| t.get("requests")).and_then(JsonValue::as_i64),
+        Some(1)
+    );
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.errors, 0);
+}
+
+/// Acceptance (a): under mixed-tier burst load, gold's tail latency
+/// beats batch's — priority drain + the 8x shorter coalescing window.
+#[test]
+fn gold_p99_beats_batch_p99_under_burst() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 2;
+    cfg.max_batch = 8;
+    cfg.queue_cap = 256;
+    cfg.batch_timeout_us = 60_000; // batch coalesces up to 60ms, gold 7.5ms
+    let (gw, addr) = start_gateway(&cfg);
+
+    let failures: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut clients = Vec::new();
+    // 3 batch-tier producers + 2 gold-tier producers, closed loop
+    for (t, tier, reqs) in
+        [(0, "batch", 6), (1, "batch", 6), (2, "batch", 6), (3, "gold", 6), (4, "gold", 6)]
+    {
+        let addr = addr.clone();
+        let failures = failures.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..reqs {
+                let body = infer_body(tier, (t * 100 + i) as u64);
+                match http::request(&addr, "POST", "/v1/infer", Some(&body)) {
+                    Ok((200, _)) => {}
+                    Ok((status, b)) => {
+                        failures.lock().unwrap().push(format!("{tier}: status {status}: {b}"))
+                    }
+                    Err(e) => failures.lock().unwrap().push(format!("{tier}: {e:#}")),
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let fails = failures.lock().unwrap();
+    assert!(fails.is_empty(), "{fails:?}");
+    drop(fails);
+
+    let metrics = gw.shutdown();
+    let gold = metrics.tier(Tier::Gold);
+    let batch = metrics.tier(Tier::Batch);
+    assert_eq!(gold.requests, 12);
+    assert_eq!(batch.requests, 18);
+    assert!(
+        gold.p99_latency_us() < batch.p99_latency_us(),
+        "gold p99 {:.0}us must beat batch p99 {:.0}us",
+        gold.p99_latency_us(),
+        batch.p99_latency_us()
+    );
+}
+
+/// Acceptance (b): sustained batch-tier pressure makes the governor
+/// degrade the batch tier's precision contract (coarser boundary =
+/// higher effective thresholds), and draining restores it — all
+/// visible through `/metrics`.
+#[test]
+fn governor_degrades_batch_under_pressure_and_restores_after_drain() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Osa; // tier precision only exists on the OSA datapath
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.queue_cap = 8;
+    cfg.batch_timeout_us = 2_000;
+    cfg.gov_high_watermark = 0.2;
+    cfg.gov_low_watermark = 0.05;
+    cfg.gov_hold_ms = 10;
+    let (gw, addr) = start_gateway(&cfg);
+
+    // baseline: batch contract at level 0
+    let m0 = get_metrics(&addr);
+    assert_eq!(gov_level(&m0, "batch"), 0);
+    assert_eq!(gov_level(&m0, "gold"), 0);
+
+    // flood the batch tier from 4 closed-loop clients; tolerate 429
+    let stop_poll = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let poller = {
+        let addr = addr.clone();
+        let stop = stop_poll.clone();
+        std::thread::spawn(move || {
+            let mut max_level = 0i64;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                let m = get_metrics(&addr);
+                max_level = max_level.max(gov_level(&m, "batch"));
+                assert_eq!(gov_level(&m, "gold"), 0, "gold must never degrade");
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            max_level
+        })
+    };
+    let mut clients = Vec::new();
+    for t in 0..6u64 {
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..4u64 {
+                let body = infer_body("batch", t * 1000 + i);
+                let _ = http::request(&addr, "POST", "/v1/infer", Some(&body));
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    stop_poll.store(true, std::sync::atomic::Ordering::SeqCst);
+    let max_level_seen = poller.join().unwrap();
+    // a couple of gold requests so both boundary histograms have mass
+    for i in 0..2u64 {
+        let (status, body) =
+            http::request(&addr, "POST", "/v1/infer", Some(&infer_body("gold", 9000 + i)))
+                .unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+    assert!(
+        max_level_seen >= 1,
+        "governor never degraded the batch tier under sustained pressure"
+    );
+
+    // after the flood drains, idle observations walk the level back to 0
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let restored = loop {
+        let m = get_metrics(&addr);
+        if gov_level(&m, "batch") == 0 {
+            break true;
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(restored, "governor did not restore the batch contract after drain");
+
+    let metrics = gw.shutdown();
+    let gold = metrics.tier(Tier::Gold);
+    let batch = metrics.tier(Tier::Batch);
+    assert!(batch.b_hist.iter().sum::<u64>() > 0, "batch boundary histogram is empty");
+    assert!(gold.b_hist.iter().sum::<u64>() > 0, "gold boundary histogram is empty");
+    // batch served coarser (more analog, higher B) than gold on average:
+    // the loose profile + degrade levels push its boundary mass up
+    assert!(
+        batch.mean_boundary() >= gold.mean_boundary(),
+        "batch mean B {:.2} should be at least gold's {:.2}",
+        batch.mean_boundary(),
+        gold.mean_boundary()
+    );
+}
+
+/// Acceptance (c): overload answers `429 Too Many Requests` — every
+/// request gets an HTTP response (no dropped channels), admitted ones
+/// are served.
+#[test]
+fn overload_returns_429_and_drops_nothing() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 1; // serialize the worker so the queue really fills
+    cfg.queue_cap = 2;
+    cfg.batch_timeout_us = 100;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let outcomes: Arc<Mutex<Vec<(u16, String)>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut clients = Vec::new();
+    for t in 0..12u64 {
+        let addr = addr.clone();
+        let outcomes = outcomes.clone();
+        clients.push(std::thread::spawn(move || {
+            for i in 0..3u64 {
+                let body = infer_body("silver", t * 100 + i);
+                let res = http::request(&addr, "POST", "/v1/infer", Some(&body))
+                    .expect("every request must get an HTTP response");
+                outcomes.lock().unwrap().push(res);
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let outcomes = outcomes.lock().unwrap();
+    assert_eq!(outcomes.len(), 36, "a request vanished without a response");
+    let mut served = 0u64;
+    let mut busy = 0u64;
+    for (status, body) in outcomes.iter() {
+        match *status {
+            200 => {
+                let doc = parse(body).unwrap();
+                assert_eq!(
+                    doc.get("logits").and_then(JsonValue::as_array).map(|a| a.len()),
+                    Some(10),
+                    "served response is malformed: {body}"
+                );
+                served += 1;
+            }
+            429 => {
+                assert!(body.contains("busy"), "{body}");
+                busy += 1;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert!(served >= 1, "overload starved every request");
+    assert!(busy >= 1, "36 rapid requests against cap=2 never saw backpressure");
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, served, "served count disagrees with metrics");
+    assert_eq!(metrics.rejected, busy, "rejected count disagrees with metrics");
+    assert_eq!(metrics.errors, 0, "overload must shed, not fail forwards");
+}
