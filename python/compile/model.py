@@ -25,7 +25,7 @@ import numpy as np
 
 from .kernels import ref
 from .kernels import spec as S
-from .prng import SplitMix64, layer_noise_seed
+from .prng import SplitMix64, unit_noise_seed
 
 NUM_CLASSES = 10
 STAGES = (16, 32, 64)
@@ -287,11 +287,17 @@ class MacroGemm:
         self.stats = {"macro_ops": 0, "b_hist": np.zeros(16, np.int64)}
         self.last_bda = None
 
-    def _noise(self, shape, stream: SplitMix64):
+    def _noise(self, shape, streams):
+        """One K-tile's noise: row ``s`` draws ``prod(shape[1:])`` normals
+        from its own per-unit stream (Rust convention, DESIGN.md §6)."""
         if self.sp.sigma_code == 0.0:
             return jnp.zeros(shape, jnp.float32)
-        n = int(np.prod(shape))
-        vals = np.asarray(stream.normals(n), np.float64) * self.sp.sigma_code
+        m = shape[0]
+        per_row = int(np.prod(shape[1:]))
+        vals = np.empty((m, per_row), np.float64)
+        for s in range(m):
+            vals[s] = np.asarray(streams[s].normals(per_row), np.float64)
+        vals *= self.sp.sigma_code
         return jnp.asarray(vals.astype(np.float32).reshape(shape))
 
     def __call__(self, a_q, w_q, layer_idx: int):
@@ -302,7 +308,6 @@ class MacroGemm:
         w_p = pad_to(pad_to(w_q, 1, sp.cols), 0, sp.hmus)
         kt = a_p.shape[1] // sp.cols
         nt = w_p.shape[0] // sp.hmus
-        stream = SplitMix64(layer_noise_seed(self.noise_seed, layer_idx))
 
         if self.mode == "dcim":
             self.stats["macro_ops"] += m * kt * nt
@@ -332,16 +337,22 @@ class MacroGemm:
             else:  # acim
                 b_da = None
 
+            # per-unit noise streams (Rust convention): row s of N-tile ni
+            # draws from its own stream, advanced K-tile-major
+            streams = [
+                SplitMix64(unit_noise_seed(self.noise_seed, layer_idx, s, ni))
+                for s in range(m)
+            ]
             acc = jnp.zeros((m, sp.hmus), jnp.int32)
             for ki in range(kt):
                 a_t = a_p[:, ki * sp.cols:(ki + 1) * sp.cols]
                 w_t = w_rows[:, ki * sp.cols:(ki + 1) * sp.cols]
                 if self.mode == "acim":
                     n_slices = (sp.a_bits + sp.analog_band - 1) // sp.analog_band
-                    noise = self._noise((m, sp.hmus, sp.w_bits, n_slices), stream)
+                    noise = self._noise((m, sp.hmus, sp.w_bits, n_slices), streams)
                     acc = acc + ref.acim_mac_ref(a_t, w_t, noise, sp)
                 else:
-                    noise = self._noise((m, sp.hmus, sp.w_bits), stream)
+                    noise = self._noise((m, sp.hmus, sp.w_bits), streams)
                     acc = acc + ref.hybrid_mac_ref(a_t, w_t, b_da, noise, sp)
             out = out.at[:, ni * sp.hmus:(ni + 1) * sp.hmus].set(acc)
             self.stats["macro_ops"] += m * kt

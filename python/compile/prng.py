@@ -69,6 +69,18 @@ def layer_noise_seed(base_seed: int, layer_idx: int) -> int:
     return (base_seed ^ ((layer_idx + 1) * GOLDEN)) & MASK64
 
 
+def unit_noise_seed(base_seed: int, layer_idx: int, row: int, tile_idx: int) -> int:
+    """Per-work-unit noise stream seed, shared with Rust
+    ``prng::unit_noise_seed``: one independent stream per
+    ``(layer, row, N-tile)`` work unit, advanced K-tile-major inside the
+    unit.  Depends only on the unit's coordinates, so the execution
+    schedule (thread count, unit order) can never shift the noise."""
+    h = layer_noise_seed(base_seed, layer_idx)
+    h = (h + (row + 1) * 0xBF58476D1CE4E5B9) & MASK64
+    h = (h + (tile_idx + 1) * 0x94D049BB133111EB) & MASK64
+    return SplitMix64(h).next_u64()
+
+
 def golden_vectors(seed: int = 0xC1A0_05A1_1CE5_2024, n: int = 64) -> dict:
     """Golden parity vectors embedded in spec.json and checked by Rust.
 

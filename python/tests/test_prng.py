@@ -5,7 +5,14 @@ import math
 import numpy as np
 import pytest
 
-from compile.prng import GOLDEN, MASK64, SplitMix64, golden_vectors, layer_noise_seed
+from compile.prng import (
+    GOLDEN,
+    MASK64,
+    SplitMix64,
+    golden_vectors,
+    layer_noise_seed,
+    unit_noise_seed,
+)
 
 
 def test_splitmix_reference_vector():
@@ -51,6 +58,22 @@ def test_layer_noise_seed_distinct():
     seeds = {layer_noise_seed(1, i) for i in range(32)}
     assert len(seeds) == 32
     assert layer_noise_seed(1, 0) == (1 ^ GOLDEN) & MASK64
+
+
+def test_unit_noise_seed_golden_and_distinct():
+    # golden vectors asserted on the Rust side too (util::prng tests):
+    # the per-work-unit convention must agree bit-exactly cross-language
+    assert unit_noise_seed(0, 0, 0, 0) == 0xA95E878202EA98D0
+    assert unit_noise_seed(0xC1A02024, 3, 17, 2) == 0x219A57539A5E311A
+    assert unit_noise_seed(1, 0, 1, 0) == 0x852EF111CD105E34
+    assert unit_noise_seed(1, 0, 0, 1) == 0x3CB65FF36326AD46
+    seeds = {
+        unit_noise_seed(1, layer, row, tile)
+        for layer in range(2)
+        for row in range(32)
+        for tile in range(4)
+    }
+    assert len(seeds) == 2 * 32 * 4
 
 
 def test_golden_vectors_shape():

@@ -17,9 +17,10 @@
 use osa_hcim::benchkit::Bench;
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
-use osa_hcim::io::json::{num, obj, s, JsonValue};
+use osa_hcim::io::json::{arr, num, obj, s, JsonValue};
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::{Executor, QGraph};
+use osa_hcim::sched::exec::{auto_threads, ExecPool};
 use osa_hcim::sched::{GemmEngine, MacroGemm};
 use osa_hcim::serve::{http, Gateway, Tier};
 use osa_hcim::util::prng::SplitMix64;
@@ -67,6 +68,38 @@ fn main() {
             .items((m * n * k) as f64)
             .run(|| gemm.gemm(&a, m, k, &w, n, 0).unwrap());
     }
+
+    // --- engine thread scaling: the same warm OSA GEMM on explicit pools -
+    // The acceptance curve for the parallel tile engine: single-request
+    // speedup vs a 1-thread pool (near-linear on multicore runners).
+    println!("\n# pipeline — engine thread scaling (OSA GEMM, explicit pool sizes)");
+    let cores = auto_threads();
+    let mut scale_threads: Vec<usize> = vec![1, 2, 4];
+    if cores > 4 {
+        scale_threads.push(cores);
+    }
+    let mut scale_rates: Vec<f64> = Vec::new();
+    for &t in &scale_threads {
+        let mut gemm = MacroGemm::with_mode(CimMode::Osa).with_pool(ExecPool::new(t));
+        gemm.gemm(&a, m, k, &w, n, 0).unwrap(); // build the plan once
+        let stats = Bench::new(&format!("gemm/osa_threads_{t}"))
+            .target(Duration::from_secs(2))
+            .items((m * n * k) as f64)
+            .run(|| gemm.gemm(&a, m, k, &w, n, 0).unwrap());
+        scale_rates.push(stats.throughput().unwrap_or(0.0));
+    }
+    let rate_at = |t: usize| -> f64 {
+        scale_threads
+            .iter()
+            .position(|&tt| tt == t)
+            .map(|i| scale_rates[i])
+            .unwrap_or(0.0)
+    };
+    let speedup_2t = rate_at(2) / rate_at(1).max(1e-9);
+    let speedup_4t = rate_at(4) / rate_at(1).max(1e-9);
+    println!(
+        "gemm thread scaling on {cores}-core runner: 2t = {speedup_2t:.2}x, 4t = {speedup_4t:.2}x"
+    );
 
     // --- plan/execute split: cold packing vs warm cached execution -------
     println!("\n# pipeline — plan/execute split (same GEMM, fresh cache vs cached plan)");
@@ -139,6 +172,11 @@ fn main() {
     let doc = obj(vec![
         ("bench", s("pipeline")),
         ("synthetic_graph", JsonValue::Bool(!have_artifacts)),
+        ("engine_cores", num(cores as f64)),
+        ("gemm_scale_threads", arr(scale_threads.iter().map(|&t| num(t as f64)))),
+        ("gemm_scale_items_per_s", arr(scale_rates.iter().map(|&r| num(r)))),
+        ("gemm_speedup_2t", num(speedup_2t)),
+        ("gemm_speedup_4t", num(speedup_4t)),
         ("serve_burst", num(burst as f64)),
         ("serve_requests_per_s", num(rps)),
         ("serve_p50_latency_us", num(metrics.p50_latency_us())),

@@ -210,6 +210,12 @@ pub struct SystemConfig {
     pub batch_timeout_us: u64,
     /// Worker threads in the coordinator.
     pub workers: usize,
+    /// Tile-execution pool size (`[engine] threads`, `--threads`);
+    /// 0 = auto (the `OSA_ENGINE_THREADS` env override, else every
+    /// available core).  One pool is shared by all coordinator workers,
+    /// so this bounds total tile parallelism rather than multiplying it
+    /// by the worker count (DESIGN.md §11).
+    pub engine_threads: usize,
     /// Use the PJRT artifact path for tile math (vs native simulator).
     pub use_pjrt: bool,
     /// Bound of each QoS tier's admission queue; admission past it is a
@@ -244,6 +250,7 @@ impl Default for SystemConfig {
             max_batch: 64,
             batch_timeout_us: 2_000,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            engine_threads: 0,
             use_pjrt: false,
             queue_cap: 256,
             governor: true,
@@ -257,6 +264,16 @@ impl Default for SystemConfig {
 }
 
 impl SystemConfig {
+    /// Resolved tile-pool size: explicit `[engine] threads` when set,
+    /// else [`crate::sched::exec::auto_threads`] (env override / cores).
+    pub fn resolved_engine_threads(&self) -> usize {
+        if self.engine_threads > 0 {
+            self.engine_threads
+        } else {
+            crate::sched::exec::auto_threads()
+        }
+    }
+
     /// Load from a TOML file, falling back to defaults for missing keys.
     pub fn from_toml_file(path: &Path) -> Result<Self> {
         let text =
@@ -282,6 +299,7 @@ impl SystemConfig {
             t.get_usize("coordinator.batch_timeout_us", cfg.batch_timeout_us as usize)? as u64;
         cfg.workers = t.get_usize("coordinator.workers", cfg.workers)?;
         cfg.use_pjrt = t.get_bool("coordinator.use_pjrt", cfg.use_pjrt)?;
+        cfg.engine_threads = t.get_usize("engine.threads", cfg.engine_threads)?;
         cfg.queue_cap = t.get_usize("serve.queue_cap", cfg.queue_cap)?;
         cfg.governor = t.get_bool("serve.governor", cfg.governor)?;
         cfg.energy_budget_w = t.get_f64("serve.energy_budget_w", cfg.energy_budget_w)?;
@@ -375,6 +393,18 @@ use_pjrt = true
         assert_eq!(cfg.queue_cap, 256);
         assert!(cfg.governor);
         assert_eq!(cfg.energy_budget_w, 0.0);
+    }
+
+    #[test]
+    fn engine_section_parsed() {
+        let t = Toml::parse("[engine]\nthreads = 3").unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.engine_threads, 3);
+        assert_eq!(cfg.resolved_engine_threads(), 3);
+        // absent section -> auto (always at least one thread)
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.engine_threads, 0);
+        assert!(cfg.resolved_engine_threads() >= 1);
     }
 
     #[test]

@@ -157,12 +157,22 @@ impl Metrics {
         &self.per_tier[tier.index()]
     }
 
-    /// Requests per second of wall-clock serving time.
+    /// Requests per second of wall-clock serving time.  The
+    /// zero-served contract is explicit: a server shut down before
+    /// serving anything (zero requests, or a start/finish window too
+    /// short to measure) reports `0.0`.  Non-finite values can't arise
+    /// here (the `f > s` guard keeps the denominator positive); the
+    /// gateway additionally scrubs every derived stat via `fnum` before
+    /// it reaches the `/metrics` payload.
     pub fn throughput_rps(&self) -> f64 {
-        match (self.started, self.finished) {
-            (Some(s), Some(f)) if f > s => self.requests as f64 / (f - s).as_secs_f64(),
-            _ => 0.0,
+        let secs = match (self.started, self.finished) {
+            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
+            _ => return 0.0,
+        };
+        if self.requests == 0 || secs <= 0.0 {
+            return 0.0;
         }
+        self.requests as f64 / secs
     }
 
     /// Modeled macro TOPS/W over everything served so far.
@@ -215,13 +225,23 @@ impl Server {
     /// engine path is exercised through `examples/e2e_inference` where a
     /// single runtime drives the batch loop directly.
     pub fn start(cfg: &SystemConfig, graph: Arc<QGraph>) -> Result<Self> {
+        // One tile-execution pool for the whole server: every worker's
+        // engine clone submits onto it, so total tile parallelism is the
+        // pool size — a lone gold-tier request can use every pool thread
+        // while concurrent batches interleave at work-unit granularity.
+        // Clamped to the machine's cores: workers block on the pool for
+        // the duration of their GEMMs, so `workers x threads`
+        // oversubscription cannot happen (DESIGN.md §11).
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let pool = crate::sched::exec::ExecPool::new(cfg.resolved_engine_threads().min(cores));
         let gemm = MacroGemm::new(
             cfg.mode,
             cfg.spec,
             cfg.fixed_b,
             cfg.thresholds.clone(),
             cfg.noise_seed,
-        )?;
+        )?
+        .with_pool(pool);
         // Engine clones share this cache: one weight-packing per layer
         // per process, reused by every worker on every batch.
         let plans = gemm.plan_cache().clone();
@@ -524,6 +544,29 @@ mod tests {
         let report = m.report(&MacroSpec::default());
         assert!(report.contains("requests=5"));
         assert!(report.contains("rejected=0"));
+    }
+
+    #[test]
+    fn empty_server_metrics_are_zero_not_nan() {
+        // a server shut down before serving anything: started == finished
+        // (or within the same tick) and zero requests must report 0.0
+        // everywhere, never NaN the /metrics payload
+        let t = Instant::now();
+        let m = Metrics { started: Some(t), finished: Some(t), ..Default::default() };
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.tops_per_watt(&MacroSpec::default()), 0.0);
+        assert_eq!(m.account.watts(), 0.0);
+        assert_eq!(m.mean_batch(), 0.0);
+        let report = m.report(&MacroSpec::default());
+        assert!(!report.contains("NaN"), "{report}");
+        assert!(report.contains("throughput=0.0"), "{report}");
+        // a finished stamp with elapsed time but zero requests: still 0.0
+        let m = Metrics {
+            started: Some(t - Duration::from_secs(1)),
+            finished: Some(t),
+            ..Default::default()
+        };
+        assert_eq!(m.throughput_rps(), 0.0);
     }
 
     #[test]

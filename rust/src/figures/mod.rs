@@ -29,6 +29,9 @@ pub struct FigCtx {
     /// layer is packed once per context across all figure harnesses and
     /// every calibration loss evaluation.
     pub plans: Arc<PlanCache>,
+    /// Tile-execution pool shared by every engine this context hands
+    /// out, sized from `[engine] threads` / `--threads`.
+    pub pool: Arc<crate::sched::exec::ExecPool>,
 }
 
 impl FigCtx {
@@ -37,12 +40,14 @@ impl FigCtx {
         cfg.spec
             .validate_against_artifacts(&dir)
             .context("spec.json mismatch — run `make artifacts`")?;
+        let pool = crate::sched::exec::ExecPool::new(cfg.resolved_engine_threads());
         Ok(Self {
             ds: Dataset::load(&dir)?,
             graph: QGraph::load(&dir)?,
             golden: Golden::load(&dir)?,
             cfg,
             plans: Arc::new(PlanCache::new()),
+            pool,
         })
     }
 
@@ -56,6 +61,7 @@ impl FigCtx {
         )
         .expect("config thresholds validated at load")
         .with_plan_cache(self.plans.clone())
+        .with_pool(self.pool.clone())
     }
 
     /// Run `n` test images through a mode.
@@ -423,13 +429,14 @@ pub fn calibrate_osa(
     let graph = &ctx.graph;
     let cfg = &ctx.cfg;
     let plans = ctx.plans.clone();
+    let pool = ctx.pool.clone();
     let mut loss_fn = |ts: &[i32]| -> f64 {
         // plans are threshold-independent: every evaluation of the search
         // reuses the context's packed weight tiles
         let gemm =
             match MacroGemm::new(CimMode::Osa, cfg.spec, cfg.fixed_b, ts.to_vec(), cfg.noise_seed)
             {
-                Ok(g) => g.with_plan_cache(plans.clone()),
+                Ok(g) => g.with_plan_cache(plans.clone()).with_pool(pool.clone()),
                 Err(e) => {
                     log::error!("bad thresholds {ts:?}: {e:#}");
                     return f64::INFINITY;

@@ -27,9 +27,21 @@
 pub mod ose;
 
 use crate::analog::{adc_transfer, analog_group_bounds};
-use crate::quant::{plane_sign, PackedBits};
+use crate::quant::{and_popcount_words, plane_sign, PackedBits};
 use crate::spec::MacroSpec;
 use anyhow::{ensure, Result};
+
+/// Resolve the activation planes once per call: `None` for an all-zero
+/// plane (its 1-bit MACs are 0 — the sparsity fast path), else the
+/// plane's packed words.  Hoists both the `plane_empty` test and the
+/// plane-slice lookup out of the per-HMU/per-weight-plane walk, leaving
+/// a word-blocked AND+POPCNT as the only work in the inner loop.
+#[inline]
+fn resolve_planes(a_packed: &PackedBits) -> Vec<Option<&[u64]>> {
+    (0..a_packed.n_planes)
+        .map(|j| (!a_packed.plane_empty(j)).then(|| a_packed.plane(j)))
+        .collect()
+}
 
 /// Workload/latency accounting of one macro op (all 8 HMUs).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -177,15 +189,15 @@ impl MacroUnit {
     /// (3-bit N/Q per high-order DMAC, summed over HMU channels).
     pub fn saliency(&self, a_packed: &PackedBits) -> i32 {
         let sp = &self.sp;
+        let a_planes = resolve_planes(a_packed);
         let mut s = 0i32;
         for h in 0..sp.hmus {
+            let wp = &self.packed[h];
             for i in 0..sp.w_bits {
-                let j_start = (sp.se_k_min() - i as i32).max(0) as usize;
-                for j in j_start..sp.a_bits {
-                    if a_packed.plane_empty(j) {
-                        continue;
-                    }
-                    let d = self.packed[h].and_popcount(i, a_packed, j);
+                let j_start = ((sp.se_k_min() - i as i32).max(0) as usize).min(sp.a_bits);
+                let wrow = wp.plane(i);
+                for aw in a_planes[j_start..].iter().flatten() {
+                    let d = and_popcount_words(wrow, aw);
                     s += (d >> sp.nq_shift).min(sp.nq_max);
                 }
             }
@@ -198,31 +210,31 @@ impl MacroUnit {
     pub fn compute_hybrid(&self, a_packed: &PackedBits, b: i32, noise: &[f32]) -> Vec<i32> {
         let sp = &self.sp;
         debug_assert_eq!(noise.len(), sp.hmus * sp.w_bits);
+        let a_planes = resolve_planes(a_packed);
         let mut out = vec![0i32; sp.hmus];
         for h in 0..sp.hmus {
             let wp = &self.packed[h];
             let mut acc = 0i32;
             for i in 0..sp.w_bits {
                 let sign = plane_sign(i, sp.w_bits);
+                let wrow = wp.plane(i);
                 // digital domain: orders k >= b (loop starts at the
                 // boundary; empty activation planes contribute nothing)
-                let j_start = (b - i as i32).max(0) as usize;
-                for j in j_start..sp.a_bits {
-                    if a_packed.plane_empty(j) {
-                        continue;
+                let j_start = ((b - i as i32).max(0) as usize).min(sp.a_bits);
+                for (j, aw) in a_planes.iter().enumerate().skip(j_start) {
+                    if let Some(aw) = aw {
+                        let d = and_popcount_words(wrow, aw);
+                        acc += sign * (d << (i + j));
                     }
-                    let d = wp.and_popcount(i, a_packed, j);
-                    acc += sign * (d << (i + j));
                 }
                 // analog domain: one DAC slice + ADC conversion per plane
                 if let Some((j_lo, j_hi)) = analog_group_bounds(i as i32, b, sp) {
                     let mut amac = 0i32;
                     for j in j_lo..=j_hi {
-                        if a_packed.plane_empty(j as usize) {
-                            continue;
+                        if let Some(aw) = a_planes[j as usize] {
+                            let d = and_popcount_words(wrow, aw);
+                            amac += d << (j - j_lo);
                         }
-                        let d = wp.and_popcount(i, a_packed, j as usize);
-                        amac += d << (j - j_lo);
                     }
                     let nbits = j_hi - j_lo + 1;
                     let rec = adc_transfer(amac, nbits, noise[h * sp.w_bits + i], sp);
@@ -241,22 +253,23 @@ impl MacroUnit {
         let sp = &self.sp;
         let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
         debug_assert_eq!(noise.len(), sp.hmus * sp.w_bits * n_slices);
+        let a_planes = resolve_planes(a_packed);
         let mut out = vec![0i32; sp.hmus];
         for h in 0..sp.hmus {
             let wp = &self.packed[h];
             let mut acc = 0i32;
             for i in 0..sp.w_bits {
                 let sign = plane_sign(i, sp.w_bits);
+                let wrow = wp.plane(i);
                 for sl in 0..n_slices {
                     let j_lo = (sl * sp.analog_band as usize) as i32;
                     let j_hi = (j_lo + sp.analog_band - 1).min(sp.a_bits as i32 - 1);
                     let mut amac = 0i32;
                     for j in j_lo..=j_hi {
-                        if a_packed.plane_empty(j as usize) {
-                            continue;
+                        if let Some(aw) = a_planes[j as usize] {
+                            let d = and_popcount_words(wrow, aw);
+                            amac += d << (j - j_lo);
                         }
-                        let d = wp.and_popcount(i, a_packed, j as usize);
-                        amac += d << (j - j_lo);
                     }
                     let nbits = j_hi - j_lo + 1;
                     let idx = (h * sp.w_bits + i) * n_slices + sl;

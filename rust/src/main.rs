@@ -28,6 +28,7 @@ fn common_opts() -> Vec<Opt> {
         Opt::value("nq-shift", "OSE N/Q shift (ablation override)", None),
         Opt::value("seed", "noise seed", None),
         Opt::value("thresholds", "comma-separated OSE thresholds", None),
+        Opt::value("threads", "tile-execution pool size (0 = all cores)", None),
     ]
 }
 
@@ -47,6 +48,7 @@ fn build_config(args: &osa_hcim::cli::Args) -> Result<SystemConfig> {
         cfg.spec.sigma_code = sigma.parse()?;
     }
     cfg.noise_seed = args.get_u64("seed", cfg.noise_seed)?;
+    cfg.engine_threads = args.get_usize("threads", cfg.engine_threads)?;
     if let Some(ts) = args.get("thresholds") {
         cfg.thresholds = ts
             .split(',')

@@ -5,7 +5,10 @@
 //! at build time by `python -m compile.aot`; Python never runs here.
 //! Any [`GemmEngine`] can back the convolutions: the native cycle-level
 //! simulator (`sched::MacroGemm`) or the AOT PJRT artifacts
-//! (`runtime::PjrtGemm`).
+//! (`runtime::PjrtGemm`).  The executor itself is single-threaded and
+//! cheap — each conv's GEMM is where the time goes, and the engine
+//! shards it across the shared `sched::exec` pool (DESIGN.md §11), so
+//! one `forward` call can use every pool thread.
 
 pub mod data;
 
@@ -363,7 +366,7 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                 Op::QConvShortcut { name } => {
                     let conv = self.graph.conv(name)?;
                     let input = block_input.as_ref().context("shortcut outside block")?;
-                    let out = self.qconv(conv, &input.clone(), layer_idx, &mut stats)?;
+                    let out = self.qconv(conv, input, layer_idx, &mut stats)?;
                     layer_idx += 1;
                     shortcut = Some(out);
                 }

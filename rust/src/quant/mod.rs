@@ -108,14 +108,18 @@ impl PackedBits {
     #[inline]
     pub fn and_popcount(&self, p: usize, other: &PackedBits, q: usize) -> i32 {
         debug_assert_eq!(self.n_words, other.n_words);
-        let a = self.plane(p);
-        let b = other.plane(q);
-        let mut acc = 0u32;
-        for w in 0..self.n_words {
-            acc += (a[w] & b[w]).count_ones();
-        }
-        acc as i32
+        and_popcount_words(self.plane(p), other.plane(q))
     }
+}
+
+/// Word-blocked 1-bit MAC over two pre-resolved plane slices: the inner
+/// loop of the hot path, written over `u64` blocks with no index bounds
+/// checks so callers can hoist the plane lookups (and the `plane_empty`
+/// test) out of their per-HMU walk.
+#[inline]
+pub fn and_popcount_words(a: &[u64], b: &[u64]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones()).sum::<u32>() as i32
 }
 
 /// All order partial sums `D[i][j]` for one (activation row, weight row)

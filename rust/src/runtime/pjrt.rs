@@ -11,7 +11,7 @@
 use crate::sched::plan::PlanCache;
 use crate::sched::{GemmEngine, GemmResult};
 use crate::spec::{MacroSpec, TILE_M};
-use crate::util::prng::{layer_noise_seed, SplitMix64};
+use crate::util::prng::{unit_noise_seed, SplitMix64};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -208,7 +208,6 @@ impl<'r> GemmEngine for PjrtGemm<'r> {
         let plan = self.plans.get_or_build(layer_idx, w, n, k, sp)?;
         let (kt, nt, k_pad, n_pad) = (plan.kt, plan.nt, plan.k_pad, plan.n_pad);
         let a_p = pad_cols(a, m, k, k_pad);
-        let mut stream = SplitMix64::new(layer_noise_seed(self.noise_seed, layer_idx));
         let mt = m.div_ceil(TILE_M); // sample-axis tiling to the artifact shape
 
         let mut out = vec![0i32; m * n_pad];
@@ -262,16 +261,36 @@ impl<'r> GemmEngine for PjrtGemm<'r> {
                 _ => unreachable!(),
             }
 
+            // per-unit noise streams (DESIGN.md §6): row `s` of N-tile
+            // `ni` draws from its own `(seed, layer, row, tile)` stream,
+            // advanced K-tile-major — the same convention as the native
+            // engine, so the two stay bit-comparable.  DCIM / noiseless
+            // runs never draw, so don't seed streams for them either.
+            let draw_noise = sp.sigma_code != 0.0 && self.mode != CimMode::Dcim;
+            let mut streams: Vec<SplitMix64> = if draw_noise {
+                (0..m)
+                    .map(|s| {
+                        SplitMix64::new(unit_noise_seed(
+                            self.noise_seed,
+                            layer_idx,
+                            s as u64,
+                            ni as u64,
+                        ))
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
             for ki in 0..kt {
                 let wt = plan.unit(ni, ki).weights();
                 let per_sample = sp.hmus * sp.w_bits;
-                // one noise buffer per (ni, ki) covering all m samples,
-                // in the shared stream order
-                let noise_all = if sp.sigma_code == 0.0 || self.mode == CimMode::Dcim {
-                    vec![0.0f32; m * per_sample]
-                } else {
-                    stream.normals_f32(m * per_sample, sp.sigma_code)
-                };
+                let mut noise_all = vec![0.0f32; m * per_sample];
+                if draw_noise {
+                    for (s, stream) in streams.iter_mut().enumerate() {
+                        let buf = stream.normals_f32(per_sample, sp.sigma_code);
+                        noise_all[s * per_sample..(s + 1) * per_sample].copy_from_slice(&buf);
+                    }
+                }
                 for mi in 0..mt {
                     let abuf = tile_a(mi, ki);
                     let mut bbuf = vec![0i32; TILE_M];

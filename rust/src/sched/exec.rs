@@ -1,0 +1,252 @@
+//! Persistent tile-execution pool — the parallel substrate under the
+//! macro GEMM (DESIGN.md §11).
+//!
+//! The HCIMA derives its throughput from many macros firing
+//! concurrently (split-port 6T cells let the DCIM and ACIM paths run in
+//! the same cycle); this module is the simulator-side analogue: a
+//! std-only pool of worker threads (rayon is not in the offline mirror)
+//! that executes a layer's `(row-chunk, N-tile)` work units in any
+//! order on any number of cores.
+//!
+//! Determinism contract: a work unit's result may depend only on the
+//! unit's *coordinates*, never on the execution schedule.  Engines
+//! enforce this by seeding every unit's noise stream from
+//! `prng::unit_noise_seed(seed, layer, row, tile)` and by merging unit
+//! results in index order ([`ExecPool::run_indexed`]) — so outputs,
+//! boundary maps and even the f64 energy totals are bit-identical for
+//! any thread count, including 1.
+//!
+//! Sharing contract: one pool per process (or per server) is the rule —
+//! coordinator workers all submit onto the same pool, so tile-level
+//! parallelism is bounded by the pool size rather than multiplied by
+//! the worker count, and concurrent requests interleave at work-unit
+//! granularity (a lone gold-tier request can use every pool thread).
+//!
+//! Shutdown contract: dropping the last handle drains every queued job
+//! before the workers exit — no work unit is ever lost, and a panicking
+//! job is contained to its unit (the worker survives; the submitter
+//! sees the missing unit).  Jobs must never block on the pool they run
+//! on (no nested submission).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+/// A fixed-size pool of persistent worker threads executing boxed jobs
+/// from one FIFO queue.  Cheap to share via `Arc`; see the module docs
+/// for the determinism / sharing / shutdown contracts.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    threads: usize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for ExecPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecPool").field("threads", &self.threads).finish()
+    }
+}
+
+/// Engine worker count when nothing is configured: the
+/// `OSA_ENGINE_THREADS` env override, else every available core.
+pub fn auto_threads() -> usize {
+    std::env::var("OSA_ENGINE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+impl ExecPool {
+    /// Spawn a pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Arc<Self> {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads);
+        for wid in 0..threads {
+            let shared = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("exec-{wid}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawning exec pool worker");
+            workers.push(handle);
+        }
+        Arc::new(Self { shared, threads, workers: Mutex::new(workers) })
+    }
+
+    /// The process-wide default pool, sized by [`auto_threads`] on first
+    /// use.  Engines built without an explicit pool share this one.
+    pub fn global() -> Arc<ExecPool> {
+        static GLOBAL: OnceLock<Arc<ExecPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| ExecPool::new(auto_threads())).clone()
+    }
+
+    /// Worker count of this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Queued (not yet started) job count — observability only.
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, job: F) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push_back(Box::new(job));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `n` independent work units on the pool and return their
+    /// results **in unit-index order** (the deterministic-merge
+    /// primitive).  `make(i)` builds unit `i`'s closure; units must be
+    /// independent and must not submit onto this pool.
+    ///
+    /// Panics if a unit's result never arrives (i.e. the unit itself
+    /// panicked) — a lost work unit is a bug, never silent data loss.
+    pub fn run_indexed<T, J, F>(&self, n: usize, make: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        J: FnOnce() -> T + Send + 'static,
+        F: Fn(usize) -> J,
+    {
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, T)>();
+        for i in 0..n {
+            let unit = make(i);
+            let tx = tx.clone();
+            self.spawn(move || {
+                let _ = tx.send((i, unit()));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.unwrap_or_else(|| panic!("work unit {i} lost (panicked?)")))
+            .collect()
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    break job;
+                }
+                // drain-then-exit: shutdown only takes effect once the
+                // queue is empty, so no submitted unit is ever dropped
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        // contain a panicking unit to that unit: the worker (and the
+        // queue mutex, which is not held here) survive
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_indexed_returns_results_in_order() {
+        let pool = ExecPool::new(4);
+        let out = pool.run_indexed(257, |i| move || i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_completes_everything() {
+        let pool = ExecPool::new(1);
+        let out = pool.run_indexed(64, |i| move || i + 1);
+        assert_eq!(out, (1..=64).collect::<Vec<_>>());
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn zero_thread_request_clamps_to_one() {
+        let pool = ExecPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.run_indexed(3, |i| move || i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn shutdown_under_load_drains_every_job() {
+        // drop the pool while hundreds of jobs are still queued: every
+        // one must run before the workers exit
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ExecPool::new(2);
+            for _ in 0..500 {
+                let counter = counter.clone();
+                pool.spawn(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // pool dropped here: Drop joins after draining
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 500, "shutdown lost queued work units");
+    }
+
+    #[test]
+    fn panicking_job_does_not_poison_the_pool() {
+        let pool = ExecPool::new(2);
+        pool.spawn(|| panic!("unit under test explodes"));
+        // the pool (workers + queue mutex) must survive and keep serving
+        let out = pool.run_indexed(32, |i| move || i * 2);
+        assert_eq!(out[31], 62);
+        assert_eq!(pool.queued(), 0);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = ExecPool::global();
+        let b = ExecPool::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+}

@@ -9,29 +9,45 @@
 //! dual-precision PG/DRQ baselines run through the same plan tiles as
 //! the CIM modes instead of a bespoke flat-K loop.
 //!
+//! On top of that split sits the **parallel tile engine** (DESIGN.md
+//! §11): a GEMM is sharded into `(row-chunk, N-tile)` work units submitted
+//! onto a persistent [`exec::ExecPool`]; each unit fuses the SE pass
+//! (OSA) with the computing pass over every K-tile of its N-tile, the
+//! simulator-side analogue of the split-port macro firing its digital
+//! and analog paths concurrently.
+//!
 //! [`MacroGemm`] is the native (bit-exact, cycle-accounted) execution
 //! engine; `runtime::PjrtGemm` implements the same [`GemmEngine`]
 //! interface on top of the AOT PJRT artifacts.  Both follow the *same
 //! noise-stream convention* as `python/compile/model.py::MacroGemm`
-//! (one SplitMix64 stream per layer, advanced N-tile-major then K-tile,
-//! drawing `m*hmus*w_bits` normals per tile), so all three agree
-//! bit-exactly for a given seed.  The stream is re-seeded per *call*,
-//! not per plan, so caching plans never shifts the noise.
+//! (DESIGN.md §6): one independent SplitMix64 stream per `(layer, row,
+//! N-tile)` work unit, seeded by `prng::unit_noise_seed` and advanced
+//! K-tile-major, drawing `hmus*w_bits` normals per K-tile.  Because a
+//! unit's stream depends only on its coordinates, outputs are
+//! bit-identical for any thread count (including 1) and for any unit
+//! schedule; streams are re-seeded per *call*, not per plan, so caching
+//! plans never shifts the noise either.
 
+pub mod exec;
 pub mod im2col;
 pub mod plan;
 
 use crate::config::CimMode;
 use crate::energy::{EnergyAccount, EnergyParams};
 use crate::macrosim::ose::{Ose, SaliencyAccumulator};
+use crate::quant::PackedBits;
 use crate::spec::MacroSpec;
-use crate::util::prng::{layer_noise_seed, SplitMix64};
+use crate::util::prng::{unit_noise_seed, SplitMix64};
 use anyhow::Result;
+use exec::ExecPool;
 use plan::{LayerPlan, PlanCache, PlanCacheStats};
 use std::sync::Arc;
 
-/// Fixed sample-chunk size for deterministic intra-GEMM parallelism.
-const PAR_CHUNK: usize = 32;
+/// Rows per work unit: small enough that concurrent requests interleave
+/// at fine granularity on a shared pool, large enough to amortize the
+/// per-unit queue hop.  Purely a scheduling knob — noise streams are
+/// per *row*, so the chunk size can never shift results.
+const UNIT_ROWS: usize = 16;
 
 /// Pad a row-major `[m, k]` matrix to `[m, k_pad]` with zeros.
 pub fn pad_cols(a: &[i32], m: usize, k: usize, k_pad: usize) -> Vec<i32> {
@@ -112,6 +128,10 @@ pub struct MacroGemm {
     pub drq_thresh: i32,
     /// Weight-stationary layer plans, shared across clones.
     plans: Arc<PlanCache>,
+    /// Tile-execution pool, shared across clones.  `None` = fall back
+    /// to [`ExecPool::global`] lazily at execution time, so merely
+    /// constructing an engine never spawns threads.
+    pool: Option<Arc<ExecPool>>,
 }
 
 impl MacroGemm {
@@ -132,6 +152,7 @@ impl MacroGemm {
             pg_delta: 1 << 13,
             drq_thresh: 48,
             plans: Arc::new(PlanCache::new()),
+            pool: None,
         })
     }
 
@@ -147,6 +168,7 @@ impl MacroGemm {
             pg_delta: 1 << 13,
             drq_thresh: 48,
             plans: Arc::new(PlanCache::new()),
+            pool: None,
         }
     }
 
@@ -155,6 +177,25 @@ impl MacroGemm {
     pub fn with_plan_cache(mut self, plans: Arc<PlanCache>) -> Self {
         self.plans = plans;
         self
+    }
+
+    /// Attach an execution pool (e.g. one per server, shared by every
+    /// coordinator worker's engine clone; or an explicitly sized pool
+    /// for the thread-scaling benches and parity tests).
+    pub fn with_pool(mut self, pool: Arc<ExecPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The engine's tile-execution pool: the attached one, else the
+    /// process-global default (created on first use).
+    pub fn pool(&self) -> Arc<ExecPool> {
+        self.pool.clone().unwrap_or_else(ExecPool::global)
+    }
+
+    /// Worker-thread count of the engine's pool.
+    pub fn threads(&self) -> usize {
+        self.pool().threads()
     }
 
     /// The shared plan cache handle.
@@ -178,72 +219,76 @@ impl MacroGemm {
     /// nibble; the low pass runs only for "important" outputs — PG gates
     /// on the high-pass output magnitude, DRQ on the input-region mean.
     /// Runs over the same packed plan tiles as the CIM modes (the padded
-    /// columns contribute zero to either pass, so tiling is exact).
-    fn execute_dual(&self, plan: &LayerPlan, a: &[i32], m: usize, k: usize) -> Result<GemmResult> {
+    /// columns contribute zero to either pass, so tiling is exact), and
+    /// over the same `(row-chunk, N-tile)` work units on the pool — the
+    /// math is noise-free, so determinism is trivial here.
+    fn execute_dual(
+        &self,
+        plan: &Arc<LayerPlan>,
+        a: &[i32],
+        m: usize,
+        k: usize,
+    ) -> Result<GemmResult> {
         let sp = self.spec;
-        let (kt, nt, k_pad, n) = (plan.kt, plan.nt, plan.k_pad, plan.n);
-        let a_p = pad_cols(a, m, k, k_pad);
+        let (kt, nt, n) = (plan.kt, plan.nt, plan.n);
+        let a_p: Arc<Vec<i32>> = Arc::new(pad_cols(a, m, k, plan.k_pad));
+        let chunks = m.div_ceil(UNIT_ROWS).max(1);
+        let results = self.pool().run_indexed(chunks * nt, |u| {
+            let (ci, ni) = (u / nt, u % nt);
+            let (s0, s1) = (ci * UNIT_ROWS, ((ci + 1) * UNIT_ROWS).min(m));
+            let plan = plan.clone();
+            let a_p = a_p.clone();
+            let mode = self.mode;
+            let energy = self.energy;
+            let (pg_delta, drq_thresh) = (self.pg_delta, self.drq_thresh);
+            move || {
+                dual_unit(
+                    &plan,
+                    &a_p,
+                    mode,
+                    energy,
+                    pg_delta,
+                    drq_thresh,
+                    k,
+                    s0,
+                    s1,
+                    ni,
+                )
+            }
+        });
+
         let mut out = vec![0i32; m * n];
         let mut account = EnergyAccount::default();
         let mut b_hist = [0u64; 16];
         let mut bda = vec![0i32; m * nt];
-        for s in 0..m {
-            let row = &a[s * k..(s + 1) * k];
-            let drq_full = if self.mode == CimMode::Drq {
-                let mean: i64 = row.iter().map(|&x| x as i64).sum::<i64>() / k as i64;
-                mean >= self.drq_thresh as i64
-            } else {
-                false
-            };
-            for ni in 0..nt {
-                let mut full = self.mode == CimMode::Drq && drq_full;
-                let c_lo = ni * sp.hmus;
-                let c_hi = ((ni + 1) * sp.hmus).min(n);
-                // high-nibble pass over the packed weight tiles
-                let mut hi = vec![0i32; sp.hmus];
-                for ki in 0..kt {
-                    let tile =
-                        &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
-                    for (acc, v) in hi.iter_mut().zip(plan.unit(ni, ki).exact_masked(tile, !0xF))
-                    {
-                        *acc += v;
-                    }
-                }
-                if self.mode == CimMode::Pg {
-                    full = hi[..c_hi - c_lo].iter().any(|v| v.abs() >= self.pg_delta);
-                }
-                let vals = if full {
-                    let mut ex = vec![0i32; sp.hmus];
-                    for ki in 0..kt {
-                        let tile =
-                            &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
-                        for (acc, v) in ex.iter_mut().zip(plan.unit(ni, ki).exact(tile)) {
-                            *acc += v;
-                        }
-                    }
-                    ex
-                } else {
-                    hi
-                };
+        for (u, unit) in results.iter().enumerate() {
+            let (ci, ni) = (u / nt, u % nt);
+            let s0 = ci * UNIT_ROWS;
+            let c_lo = ni * sp.hmus;
+            let c_hi = ((ni + 1) * sp.hmus).min(n);
+            for (r, &full) in unit.boundaries.iter().enumerate() {
+                let s = s0 + r;
                 for (h, c) in (c_lo..c_hi).enumerate() {
-                    out[s * n + c] = vals[h];
+                    out[s * n + c] = unit.vals[r * sp.hmus + h];
                 }
-                // energy: hi pass always; low pass only when not gated
-                let counts = plan.dual_counts(full);
-                for _ in 0..kt {
-                    account.record(&self.energy.op_energy(&counts, false, &sp), &counts);
-                }
-                bda[s * nt + ni] = full as i32;
+                bda[s * nt + ni] = full;
                 b_hist[full as usize] += kt as u64;
             }
+            account.merge(&unit.account);
         }
         Ok(GemmResult { out, m, n, account, b_hist, bda, n_tiles: nt })
     }
 
-    /// CIM-mode plan executor (DCIM / HCIM / OSA / ACIM).
+    /// CIM-mode plan executor (DCIM / HCIM / OSA / ACIM): shard the GEMM
+    /// into `(row-chunk, N-tile)` work units on the pool.  Each unit
+    /// fuses the SE pass (OSA boundary select) with the computing pass
+    /// over every K-tile of its rows, writes a disjoint output slice,
+    /// and keeps its own `EnergyAccount`; units are merged in index
+    /// order, and noise streams are seeded per `(layer, row, N-tile)` —
+    /// so results and accounting are bit-identical for any thread count.
     fn execute_cim(
         &self,
-        plan: &LayerPlan,
+        plan: &Arc<LayerPlan>,
         a: &[i32],
         m: usize,
         k: usize,
@@ -251,169 +296,74 @@ impl MacroGemm {
     ) -> Result<GemmResult> {
         let sp = self.spec;
         let (kt, nt, k_pad, n_pad, n) = (plan.kt, plan.nt, plan.k_pad, plan.n_pad, plan.n);
-        let a_p = pad_cols(a, m, k, k_pad);
-        let mut stream = SplitMix64::new(layer_noise_seed(self.noise_seed, layer_idx));
+        let a_p: Arc<Vec<i32>> = Arc::new(pad_cols(a, m, k, k_pad));
 
         // Pre-pack activation bit planes once per (sample, K-tile): they
         // are reused by the SE pass, the compute pass and every N-tile.
-        let mut a_packed = Vec::with_capacity(m * kt);
-        for s in 0..m {
-            for ki in 0..kt {
-                let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
-                a_packed.push(crate::quant::PackedBits::pack(tile, sp.a_bits, false));
+        // DCIM runs the exact integer path on the raw tiles and never
+        // touches bit planes, so skip the packing entirely there.
+        let mut packed = Vec::new();
+        if self.mode != CimMode::Dcim {
+            packed.reserve(m * kt);
+            for s in 0..m {
+                for ki in 0..kt {
+                    let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                    packed.push(PackedBits::pack(tile, sp.a_bits, false));
+                }
             }
         }
+        let a_packed: Arc<Vec<PackedBits>> = Arc::new(packed);
+
+        let n_slices = self.n_slices();
+        let chunks = m.div_ceil(UNIT_ROWS).max(1);
+        let results = self.pool().run_indexed(chunks * nt, |u| {
+            let (ci, ni) = (u / nt, u % nt);
+            let (s0, s1) = (ci * UNIT_ROWS, ((ci + 1) * UNIT_ROWS).min(m));
+            let plan = plan.clone();
+            let a_p = a_p.clone();
+            let a_packed = a_packed.clone();
+            let mode = self.mode;
+            let ose = self.ose.clone();
+            let energy = self.energy;
+            let fixed_b = self.fixed_b;
+            let noise_seed = self.noise_seed;
+            move || {
+                cim_unit(
+                    &plan,
+                    &a_p,
+                    &a_packed,
+                    mode,
+                    &ose,
+                    energy,
+                    fixed_b,
+                    noise_seed,
+                    layer_idx,
+                    k,
+                    s0,
+                    s1,
+                    ni,
+                    n_slices,
+                )
+            }
+        });
 
         let mut out = vec![0i32; m * n_pad];
         let mut account = EnergyAccount::default();
         let mut b_hist = [0u64; 16];
         let mut bda = vec![0i32; m * nt];
-
-        for ni in 0..nt {
-            // ---- Saliency-Evaluation mode (OSA only) --------------------
-            let boundaries: Vec<i32> = match self.mode {
-                CimMode::Pg | CimMode::Drq => unreachable!("dual precision runs execute_dual"),
-                CimMode::Dcim => vec![crate::spec::B_DCIM; m],
-                CimMode::Hcim => vec![self.fixed_b; m],
-                CimMode::Acim => vec![-1; m],
-                CimMode::Osa => {
-                    // SE mode is pure compute: parallelize over fixed
-                    // sample chunks (deterministic regardless of core
-                    // count — each chunk writes a disjoint slice)
-                    let mut bs = vec![0i32; m];
-                    let a_packed_ref = &a_packed;
-                    let ose = &self.ose;
-                    std::thread::scope(|scope| {
-                        for (ci, chunk) in bs.chunks_mut(PAR_CHUNK).enumerate() {
-                            scope.spawn(move || {
-                                for (off, slot) in chunk.iter_mut().enumerate() {
-                                    let s = ci * PAR_CHUNK + off;
-                                    let mut acc = SaliencyAccumulator::default();
-                                    for ki in 0..kt {
-                                        acc.add(
-                                            plan.unit(ni, ki)
-                                                .saliency(&a_packed_ref[s * kt + ki]),
-                                        );
-                                    }
-                                    // N/Q normalization: rescale by the
-                                    // layer's true K so thresholds are
-                                    // layer-independent
-                                    let s_norm = crate::spec::normalize_saliency(
-                                        acc.value() as i64,
-                                        k,
-                                        sp.cols,
-                                    );
-                                    *slot = ose.select(s_norm);
-                                }
-                            });
-                        }
-                    });
-                    bs
-                }
-            };
-
-            // ---- Computing mode ----------------------------------------
-            // Parallelized over fixed sample chunks: each chunk writes a
-            // disjoint slice of a per-tile output buffer and keeps its own
-            // EnergyAccount; chunks are merged in index order, so results
-            // and accounting are bit-identical regardless of core count.
-            for ki in 0..kt {
-                let unit = plan.unit(ni, ki);
-                let per_sample = if self.mode == CimMode::Acim {
-                    sp.hmus * sp.w_bits * self.n_slices()
-                } else {
-                    sp.hmus * sp.w_bits
-                };
-                // noise buffer for this (ni, ki) tile — matches python's
-                // MacroGemm._noise call order exactly (DCIM draws none)
-                let noise = if self.mode == CimMode::Dcim || sp.sigma_code == 0.0 {
-                    vec![0.0f32; if self.mode == CimMode::Dcim { 0 } else { m * per_sample }]
-                } else {
-                    stream.normals_f32(m * per_sample, sp.sigma_code)
-                };
-                let mut tile_out = vec![0i32; m * sp.hmus];
-                let n_chunks = m.div_ceil(PAR_CHUNK);
-                let mut chunk_accounts = vec![EnergyAccount::default(); n_chunks];
-                let mode = self.mode;
-                let energy = &self.energy;
-                let boundaries_ref = &boundaries;
-                let a_p_ref = &a_p;
-                let a_packed_ref = &a_packed;
-                let noise_ref = &noise;
-                std::thread::scope(|scope| {
-                    for ((ci, out_chunk), acct) in
-                        tile_out.chunks_mut(PAR_CHUNK * sp.hmus).enumerate().zip(&mut chunk_accounts)
-                    {
-                        scope.spawn(move || {
-                            let rows = out_chunk.len() / sp.hmus;
-                            for off in 0..rows {
-                                let s = ci * PAR_CHUNK + off;
-                                let (vals, counts, with_se) = match mode {
-                                    CimMode::Pg | CimMode::Drq => {
-                                        unreachable!("dual precision runs execute_dual")
-                                    }
-                                    CimMode::Dcim => {
-                                        let tile = &a_p_ref[s * k_pad + ki * sp.cols
-                                            ..s * k_pad + (ki + 1) * sp.cols];
-                                        (unit.exact(tile), plan.counts(0, false), false)
-                                    }
-                                    CimMode::Acim => {
-                                        let packed = &a_packed_ref[s * kt + ki];
-                                        let nslice = &noise_ref
-                                            [s * per_sample..(s + 1) * per_sample];
-                                        (
-                                            unit.compute_acim(packed, nslice),
-                                            plan.acim_counts(),
-                                            false,
-                                        )
-                                    }
-                                    CimMode::Osa => {
-                                        let packed = &a_packed_ref[s * kt + ki];
-                                        let nslice = &noise_ref
-                                            [s * per_sample..(s + 1) * per_sample];
-                                        let b = boundaries_ref[s];
-                                        (
-                                            unit.compute_hybrid(packed, b, nslice),
-                                            plan.counts(b, true),
-                                            true,
-                                        )
-                                    }
-                                    CimMode::Hcim => {
-                                        let packed = &a_packed_ref[s * kt + ki];
-                                        let nslice = &noise_ref
-                                            [s * per_sample..(s + 1) * per_sample];
-                                        let b = boundaries_ref[s];
-                                        (
-                                            unit.compute_hybrid(packed, b, nslice),
-                                            plan.counts(b, false),
-                                            false,
-                                        )
-                                    }
-                                };
-                                out_chunk[off * sp.hmus..(off + 1) * sp.hmus]
-                                    .copy_from_slice(&vals);
-                                acct.record(&energy.op_energy(&counts, with_se, &sp), &counts);
-                            }
-                        });
-                    }
-                });
-                for s in 0..m {
-                    for h in 0..sp.hmus {
-                        out[s * n_pad + ni * sp.hmus + h] += tile_out[s * sp.hmus + h];
-                    }
-                }
-                for acct in &chunk_accounts {
-                    account.merge(acct);
-                }
-            }
-
-            for s in 0..m {
-                bda[s * nt + ni] = boundaries[s];
-                let b = boundaries[s];
+        for (u, unit) in results.iter().enumerate() {
+            let (ci, ni) = (u / nt, u % nt);
+            let s0 = ci * UNIT_ROWS;
+            for (r, &b) in unit.boundaries.iter().enumerate() {
+                let s = s0 + r;
+                bda[s * nt + ni] = b;
                 if (0..16).contains(&b) {
                     b_hist[b as usize] += kt as u64;
                 }
+                out[s * n_pad + ni * sp.hmus..s * n_pad + (ni + 1) * sp.hmus]
+                    .copy_from_slice(&unit.vals[r * sp.hmus..(r + 1) * sp.hmus]);
             }
+            account.merge(&unit.account);
         }
 
         // strip N padding
@@ -423,6 +373,180 @@ impl MacroGemm {
         }
         Ok(GemmResult { out: final_out, m, n, account, b_hist, bda, n_tiles: nt })
     }
+}
+
+/// One work unit's result: one N-tile's output for a chunk of rows,
+/// already accumulated over every K-tile.
+struct UnitOut {
+    /// `[rows, hmus]` accumulators.
+    vals: Vec<i32>,
+    /// Per-row boundary (CIM modes) or full-precision flag (PG/DRQ).
+    boundaries: Vec<i32>,
+    account: EnergyAccount,
+}
+
+/// Draw one K-tile's noise buffer from the unit's stream, or zeros
+/// *without advancing the stream* when noise is disabled (the
+/// cross-language noiseless convention).
+fn draw_noise(stream: &mut SplitMix64, n: usize, sigma: f64) -> Vec<f32> {
+    if sigma == 0.0 {
+        vec![0.0f32; n]
+    } else {
+        stream.normals_f32(n, sigma)
+    }
+}
+
+/// CIM-mode work unit: rows `s0..s1` of N-tile `ni`.  SE pass (OSA) and
+/// computing pass fused per row; noise per `(layer, row, N-tile)` stream
+/// advanced K-tile-major (DESIGN.md §6).
+#[allow(clippy::too_many_arguments)]
+fn cim_unit(
+    plan: &LayerPlan,
+    a_p: &[i32],
+    a_packed: &[PackedBits],
+    mode: CimMode,
+    ose: &Ose,
+    energy: EnergyParams,
+    fixed_b: i32,
+    noise_seed: u64,
+    layer_idx: u64,
+    k: usize,
+    s0: usize,
+    s1: usize,
+    ni: usize,
+    n_slices: usize,
+) -> UnitOut {
+    let sp = plan.spec;
+    let (kt, k_pad) = (plan.kt, plan.k_pad);
+    let rows = s1 - s0;
+    let mut vals = vec![0i32; rows * sp.hmus];
+    let mut boundaries = vec![0i32; rows];
+    let mut account = EnergyAccount::default();
+    let per_tile = if mode == CimMode::Acim {
+        sp.hmus * sp.w_bits * n_slices
+    } else {
+        sp.hmus * sp.w_bits
+    };
+    for (r, s) in (s0..s1).enumerate() {
+        // ---- Saliency-Evaluation mode (OSA only): resolve B_D/A ------
+        let b = match mode {
+            CimMode::Pg | CimMode::Drq => unreachable!("dual precision runs execute_dual"),
+            CimMode::Dcim => crate::spec::B_DCIM,
+            CimMode::Hcim => fixed_b,
+            CimMode::Acim => -1,
+            CimMode::Osa => {
+                let mut acc = SaliencyAccumulator::default();
+                for ki in 0..kt {
+                    acc.add(plan.unit(ni, ki).saliency(&a_packed[s * kt + ki]));
+                }
+                // N/Q normalization: rescale by the layer's true K so
+                // thresholds are layer-independent
+                let s_norm = crate::spec::normalize_saliency(acc.value() as i64, k, sp.cols);
+                ose.select(s_norm)
+            }
+        };
+        boundaries[r] = b;
+        // ---- Computing mode over every K-tile ------------------------
+        let mut stream =
+            SplitMix64::new(unit_noise_seed(noise_seed, layer_idx, s as u64, ni as u64));
+        for ki in 0..kt {
+            let unit = plan.unit(ni, ki);
+            let (tile_vals, counts, with_se) = match mode {
+                CimMode::Pg | CimMode::Drq => unreachable!("dual precision runs execute_dual"),
+                CimMode::Dcim => {
+                    let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                    (unit.exact(tile), plan.counts(0, false), false)
+                }
+                CimMode::Acim => {
+                    let noise = draw_noise(&mut stream, per_tile, sp.sigma_code);
+                    (
+                        unit.compute_acim(&a_packed[s * kt + ki], &noise),
+                        plan.acim_counts(),
+                        false,
+                    )
+                }
+                CimMode::Osa | CimMode::Hcim => {
+                    let noise = draw_noise(&mut stream, per_tile, sp.sigma_code);
+                    let with_se = mode == CimMode::Osa;
+                    (
+                        unit.compute_hybrid(&a_packed[s * kt + ki], b, &noise),
+                        plan.counts(b, with_se),
+                        with_se,
+                    )
+                }
+            };
+            for (acc, v) in vals[r * sp.hmus..(r + 1) * sp.hmus].iter_mut().zip(&tile_vals) {
+                *acc += v;
+            }
+            account.record(&energy.op_energy(&counts, with_se, &sp), &counts);
+        }
+    }
+    UnitOut { vals, boundaries, account }
+}
+
+/// Dual-precision (PG/DRQ) work unit: rows `s0..s1` of N-tile `ni`.
+/// `boundaries` carries the per-row full-precision flag (0/1).
+#[allow(clippy::too_many_arguments)]
+fn dual_unit(
+    plan: &LayerPlan,
+    a_p: &[i32],
+    mode: CimMode,
+    energy: EnergyParams,
+    pg_delta: i32,
+    drq_thresh: i32,
+    k: usize,
+    s0: usize,
+    s1: usize,
+    ni: usize,
+) -> UnitOut {
+    let sp = plan.spec;
+    let (kt, k_pad, n) = (plan.kt, plan.k_pad, plan.n);
+    let rows = s1 - s0;
+    let mut vals = vec![0i32; rows * sp.hmus];
+    let mut boundaries = vec![0i32; rows];
+    let mut account = EnergyAccount::default();
+    let c_lo = ni * sp.hmus;
+    let c_hi = ((ni + 1) * sp.hmus).min(n);
+    for (r, s) in (s0..s1).enumerate() {
+        // DRQ gates on the *unpadded* row mean: slice the true-k prefix
+        // of the padded row (identical data, no extra copy of `a`)
+        let row = &a_p[s * k_pad..s * k_pad + k];
+        let mut full = mode == CimMode::Drq && {
+            let mean: i64 = row.iter().map(|&x| x as i64).sum::<i64>() / k as i64;
+            mean >= drq_thresh as i64
+        };
+        // high-nibble pass over the packed weight tiles
+        let mut hi = vec![0i32; sp.hmus];
+        for ki in 0..kt {
+            let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+            for (acc, v) in hi.iter_mut().zip(plan.unit(ni, ki).exact_masked(tile, !0xF)) {
+                *acc += v;
+            }
+        }
+        if mode == CimMode::Pg {
+            full = hi[..c_hi - c_lo].iter().any(|v| v.abs() >= pg_delta);
+        }
+        let out_row = if full {
+            let mut ex = vec![0i32; sp.hmus];
+            for ki in 0..kt {
+                let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                for (acc, v) in ex.iter_mut().zip(plan.unit(ni, ki).exact(tile)) {
+                    *acc += v;
+                }
+            }
+            ex
+        } else {
+            hi
+        };
+        vals[r * sp.hmus..(r + 1) * sp.hmus].copy_from_slice(&out_row);
+        boundaries[r] = full as i32;
+        // energy: hi pass always; low pass only when not gated
+        let counts = plan.dual_counts(full);
+        for _ in 0..kt {
+            account.record(&energy.op_energy(&counts, false, &sp), &counts);
+        }
+    }
+    UnitOut { vals, boundaries, account }
 }
 
 impl GemmEngine for MacroGemm {

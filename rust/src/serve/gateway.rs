@@ -267,6 +267,14 @@ fn hist_json(h: &[u64; 16]) -> JsonValue {
     arr(h.iter().map(|&c| num(c as f64)))
 }
 
+/// A JSON number that is guaranteed well-formed: non-finite derived
+/// stats (e.g. a ratio on a server that served nothing yet) serialize
+/// as `0.0` instead of emitting a literal `NaN`/`inf` token that would
+/// corrupt the whole `/metrics` payload.
+fn fnum(x: f64) -> JsonValue {
+    num(if x.is_finite() { x } else { 0.0 })
+}
+
 /// The `/metrics` document (also reused by the pipeline bench).
 pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
     let m = server.metrics();
@@ -282,9 +290,9 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
                 ("errors", num(t.errors as f64)),
                 ("rejected", num(t.rejected as f64)),
                 ("queue_depth", num(depths[tier.index()] as f64)),
-                ("p50_latency_us", num(t.p50_latency_us())),
-                ("p99_latency_us", num(t.p99_latency_us())),
-                ("mean_boundary", num(t.mean_boundary())),
+                ("p50_latency_us", fnum(t.p50_latency_us())),
+                ("p99_latency_us", fnum(t.p99_latency_us())),
+                ("mean_boundary", fnum(t.mean_boundary())),
                 ("b_hist", hist_json(&t.b_hist)),
             ]),
         ));
@@ -308,13 +316,13 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
         ("batches", num(m.batches as f64)),
         ("errors", num(m.errors as f64)),
         ("rejected", num(m.rejected as f64)),
-        ("mean_batch", num(m.mean_batch())),
-        ("p50_latency_us", num(m.p50_latency_us())),
-        ("p95_latency_us", num(m.p95_latency_us())),
-        ("p99_latency_us", num(m.p99_latency_us())),
-        ("throughput_rps", num(m.throughput_rps())),
-        ("tops_per_watt", num(m.tops_per_watt(spec))),
-        ("watts", num(m.account.watts())),
+        ("mean_batch", fnum(m.mean_batch())),
+        ("p50_latency_us", fnum(m.p50_latency_us())),
+        ("p95_latency_us", fnum(m.p95_latency_us())),
+        ("p99_latency_us", fnum(m.p99_latency_us())),
+        ("throughput_rps", fnum(m.throughput_rps())),
+        ("tops_per_watt", fnum(m.tops_per_watt(spec))),
+        ("watts", fnum(m.account.watts())),
         ("b_hist", hist_json(&m.b_hist)),
         ("tiers", obj(tier_objs)),
         (

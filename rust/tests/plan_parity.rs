@@ -9,15 +9,15 @@ use osa_hcim::macrosim::ose::{Ose, SaliencyAccumulator};
 use osa_hcim::macrosim::MacroUnit;
 use osa_hcim::sched::{pad_cols, pad_matrix, GemmEngine, MacroGemm};
 use osa_hcim::spec::MacroSpec;
-use osa_hcim::util::prng::{layer_noise_seed, SplitMix64};
+use osa_hcim::util::prng::{unit_noise_seed, SplitMix64};
 
 const MODES: [CimMode; 6] =
     [CimMode::Dcim, CimMode::Hcim, CimMode::Osa, CimMode::Acim, CimMode::Pg, CimMode::Drq];
 
 /// Plan-free reference engine: packs weights from scratch on every call,
-/// runs strictly sequentially, and mirrors the shared noise-stream
-/// convention (one SplitMix64 stream per layer, N-tile-major then
-/// K-tile, `m*hmus*w_bits` normals per tile).
+/// runs strictly sequentially, and mirrors the per-unit noise-stream
+/// convention (DESIGN.md §6: one SplitMix64 stream per `(layer, row,
+/// N-tile)`, advanced K-tile-major, `hmus*w_bits` normals per K-tile).
 struct Reference {
     mode: CimMode,
     sp: MacroSpec,
@@ -62,7 +62,6 @@ impl Reference {
         let n_pad = nt * sp.hmus;
         let a_p = pad_cols(a, m, k, k_pad);
         let w_p = pad_matrix(w, n, k, n_pad, k_pad);
-        let mut stream = SplitMix64::new(layer_noise_seed(self.noise_seed, layer_idx));
         let mut out = vec![0i32; m * n_pad];
         let mut bda = vec![0i32; m * nt];
         for ni in 0..nt {
@@ -99,31 +98,33 @@ impl Reference {
                     .collect(),
                 CimMode::Pg | CimMode::Drq => unreachable!(),
             };
-            for (ki, unit) in units.iter().enumerate() {
-                let per_sample = if self.mode == CimMode::Acim {
-                    sp.hmus * sp.w_bits * sp.a_bits.div_ceil(sp.analog_band as usize)
-                } else {
-                    sp.hmus * sp.w_bits
-                };
-                let noise = if self.mode == CimMode::Dcim || sp.sigma_code == 0.0 {
-                    vec![0.0f32; if self.mode == CimMode::Dcim { 0 } else { m * per_sample }]
-                } else {
-                    stream.normals_f32(m * per_sample, sp.sigma_code)
-                };
-                for s in 0..m {
+            let per_tile = if self.mode == CimMode::Acim {
+                sp.hmus * sp.w_bits * sp.a_bits.div_ceil(sp.analog_band as usize)
+            } else {
+                sp.hmus * sp.w_bits
+            };
+            for s in 0..m {
+                // one stream per (layer, row, N-tile), advanced K-tile-major
+                let mut stream = SplitMix64::new(unit_noise_seed(
+                    self.noise_seed,
+                    layer_idx,
+                    s as u64,
+                    ni as u64,
+                ));
+                for (ki, unit) in units.iter().enumerate() {
+                    let noise = if self.mode == CimMode::Dcim || sp.sigma_code == 0.0 {
+                        vec![0.0f32; per_tile]
+                    } else {
+                        stream.normals_f32(per_tile, sp.sigma_code)
+                    };
                     let tile =
                         &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
                     let vals = match self.mode {
                         CimMode::Dcim => unit.exact(tile),
-                        CimMode::Acim => unit.compute_acim(
-                            &unit.pack_acts(tile),
-                            &noise[s * per_sample..(s + 1) * per_sample],
-                        ),
-                        CimMode::Osa | CimMode::Hcim => unit.compute_hybrid(
-                            &unit.pack_acts(tile),
-                            boundaries[s],
-                            &noise[s * per_sample..(s + 1) * per_sample],
-                        ),
+                        CimMode::Acim => unit.compute_acim(&unit.pack_acts(tile), &noise),
+                        CimMode::Osa | CimMode::Hcim => {
+                            unit.compute_hybrid(&unit.pack_acts(tile), boundaries[s], &noise)
+                        }
                         CimMode::Pg | CimMode::Drq => unreachable!(),
                     };
                     for h in 0..sp.hmus {

@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate (stdlib only).
+
+Diffs fresh bench emissions (``BENCH_pipeline.json`` / ``BENCH_serve.json``)
+against the committed floors in ``BENCH_baseline/`` and fails on a
+throughput regression beyond the tolerance.  Noise-tolerant by design:
+the gate takes the **median of N runs** (CI passes 3) per metric, so a
+single noisy run cannot fail — or pass — the gate.
+
+Two kinds of checks:
+
+* ``--metric KEY`` (repeatable): higher-is-better throughput metrics.
+  FAIL when ``median(runs) < baseline * (1 - tolerance)``.
+* ``--check-speedup KEY --speedup-floor X``: a machine-relative check
+  (e.g. the engine thread-scaling curve, ``gemm_speedup_4t``), enforced
+  only when the runner reports at least ``--min-cores`` cores in the
+  bench doc — a 2-core runner cannot show a 4-thread speedup.
+
+``--write-median PATH`` additionally writes the median document (the
+baseline refresh artifact: copy it into ``BENCH_baseline/`` to re-anchor
+the floors on new hardware).
+
+Exit status: 0 = pass, 1 = regression, 2 = bad invocation/inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def median_of(runs: list[dict], key: str) -> float | None:
+    vals = [r[key] for r in runs if isinstance(r.get(key), (int, float))]
+    if not vals:
+        return None
+    return statistics.median(vals)
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", required=True, help="committed baseline JSON")
+    p.add_argument("--runs", nargs="+", required=True, help="fresh bench JSONs (>=1)")
+    p.add_argument(
+        "--metric",
+        action="append",
+        default=[],
+        help="higher-is-better metric key to gate (repeatable)",
+    )
+    p.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed fractional regression vs baseline (default 0.25)",
+    )
+    p.add_argument("--check-speedup", help="machine-relative speedup key to enforce")
+    p.add_argument("--speedup-floor", type=float, default=1.5)
+    p.add_argument(
+        "--speedup-warn-only",
+        action="store_true",
+        help="report a speedup miss without failing the gate (for shared CI "
+        "runners where noisy-neighbor contention can eat the scaling headroom)",
+    )
+    p.add_argument(
+        "--min-cores",
+        type=int,
+        default=4,
+        help="skip the speedup check below this engine_cores reading",
+    )
+    p.add_argument("--write-median", help="write the median document here")
+    args = p.parse_args()
+
+    baseline = load(args.baseline)
+    runs = [load(r) for r in args.runs]
+    failures: list[str] = []
+
+    print(f"bench-gate: {len(runs)} run(s) vs {args.baseline} (tolerance {args.tolerance:.0%})")
+    for key in args.metric:
+        med = median_of(runs, key)
+        base = baseline.get(key)
+        if med is None:
+            failures.append(f"{key}: missing from every run")
+            continue
+        if not isinstance(base, (int, float)):
+            failures.append(f"{key}: missing from baseline {args.baseline}")
+            continue
+        floor = base * (1.0 - args.tolerance)
+        verdict = "OK" if med >= floor else "REGRESSION"
+        print(f"  {key}: median {med:.2f} vs baseline {base:.2f} (floor {floor:.2f}) {verdict}")
+        if med < floor:
+            failures.append(f"{key}: median {med:.2f} < floor {floor:.2f} (baseline {base:.2f})")
+
+    if args.check_speedup:
+        cores = median_of(runs, "engine_cores") or 0
+        med = median_of(runs, args.check_speedup)
+        if cores < args.min_cores:
+            print(
+                f"  {args.check_speedup}: skipped (runner has {cores:.0f} cores"
+                f" < {args.min_cores})"
+            )
+        elif med is None:
+            failures.append(f"{args.check_speedup}: missing from every run")
+        else:
+            below = med < args.speedup_floor
+            verdict = "OK" if not below else ("WARN" if args.speedup_warn_only else "REGRESSION")
+            print(
+                f"  {args.check_speedup}: median {med:.2f}x"
+                f" (floor {args.speedup_floor:.2f}x, {cores:.0f} cores) {verdict}"
+            )
+            if below and not args.speedup_warn_only:
+                failures.append(
+                    f"{args.check_speedup}: median {med:.2f}x < {args.speedup_floor:.2f}x"
+                )
+
+    if args.write_median:
+        med_doc = dict(runs[0])
+        for key, val in runs[0].items():
+            if isinstance(val, (int, float)) and not isinstance(val, bool):
+                m = median_of(runs, key)
+                if m is not None:
+                    med_doc[key] = m
+        Path(args.write_median).write_text(json.dumps(med_doc, sort_keys=True) + "\n")
+        print(f"  wrote median doc -> {args.write_median}")
+
+    if failures:
+        print("bench-gate: FAIL", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

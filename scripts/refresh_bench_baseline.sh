@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Re-anchor the CI bench-gate floors on this machine: run the pipeline
+# bench 3x, take the median, and overwrite BENCH_baseline/*.json.
+# Review the diff before committing — the floors gate every future PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+runs=${1:-3}
+tmp=$(mktemp -d)
+trap 'rm -rf "$tmp"' EXIT
+
+for i in $(seq 1 "$runs"); do
+    echo "== bench run $i/$runs =="
+    (cd rust && BENCH_OUT="$tmp/BENCH_pipeline.run$i.json" \
+        BENCH_SERVE_OUT="$tmp/BENCH_serve.run$i.json" \
+        cargo bench --bench pipeline)
+done
+
+python3 scripts/bench_gate.py \
+    --baseline BENCH_baseline/BENCH_pipeline.json \
+    --runs "$tmp"/BENCH_pipeline.run*.json \
+    --write-median BENCH_baseline/BENCH_pipeline.json || true
+python3 scripts/bench_gate.py \
+    --baseline BENCH_baseline/BENCH_serve.json \
+    --runs "$tmp"/BENCH_serve.run*.json \
+    --write-median BENCH_baseline/BENCH_serve.json || true
+
+echo "refreshed BENCH_baseline/ — review with: git diff BENCH_baseline/"
