@@ -249,10 +249,90 @@ fn main() {
     }
     let wall = t0.elapsed().as_secs_f64();
     let http_rps = served as f64 / wall;
+    println!(
+        "serve_http/burst (close): {served} served + {busy} busy in {wall:.3}s \
+         -> {http_rps:.1} req/s"
+    );
+
+    // --- keep-alive burst: same load, one persistent conn per client ----
+    // The tentpole acceptance curve: requests/s with connection reuse vs
+    // the Connection: close baseline above, on the same machine.
+    let conn_stats = gateway.conn_stats();
+    let ka_conns_before = conn_stats.accepted.load(std::sync::atomic::Ordering::Relaxed);
+    let ka_reqs_before = conn_stats.requests.load(std::sync::atomic::Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let img = img.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut conn = http::Client::connect(&addr).expect("keep-alive connect");
+            let mut served = 0u64;
+            let mut busy = 0u64;
+            for i in 0..per_client {
+                let tier = Tier::ALL[(c + i) % Tier::ALL.len()];
+                let body = infer_body(tier.name(), &img);
+                match conn.request("POST", "/v1/infer", Some(&body)) {
+                    Ok((200, _)) => served += 1,
+                    Ok((429, _)) => busy += 1,
+                    Ok((status, b)) => panic!("unexpected status {status}: {b}"),
+                    Err(e) => panic!("keep-alive request failed: {e:#}"),
+                }
+            }
+            (served, busy)
+        }));
+    }
+    let mut ka_served = 0u64;
+    let mut ka_busy = 0u64;
+    for h in handles {
+        let (s_n, b_n) = h.join().unwrap();
+        ka_served += s_n;
+        ka_busy += b_n;
+    }
+    let ka_wall = t0.elapsed().as_secs_f64();
+    let ka_rps = ka_served as f64 / ka_wall;
+    let ka_conns = conn_stats.accepted.load(std::sync::atomic::Ordering::Relaxed) - ka_conns_before;
+    let ka_reqs = conn_stats.requests.load(std::sync::atomic::Ordering::Relaxed) - ka_reqs_before;
+    let conn_reuse_rate =
+        if ka_reqs == 0 { 0.0 } else { 1.0 - ka_conns.min(ka_reqs) as f64 / ka_reqs as f64 };
+    let keepalive_speedup = ka_rps / http_rps.max(1e-9);
+    println!(
+        "serve_http/burst (keep-alive): {ka_served} served + {ka_busy} busy in {ka_wall:.3}s \
+         -> {ka_rps:.1} req/s ({keepalive_speedup:.2}x vs close, reuse {conn_reuse_rate:.3} \
+         over {ka_conns} conns)"
+    );
+
+    // --- NDJSON batch endpoint: many images per request ------------------
+    let batch_lines = 64usize;
+    let batch_posts = 4usize;
+    let ndjson = {
+        let mut lines = String::new();
+        for _ in 0..batch_lines {
+            lines.push_str(&infer_body("batch", &img));
+            lines.push('\n');
+        }
+        lines
+    };
+    let t0 = Instant::now();
+    let mut conn = http::Client::connect(&addr).expect("batch connect");
+    let mut batch_images = 0u64;
+    for _ in 0..batch_posts {
+        let (status, body) = conn
+            .request_typed("POST", "/v1/infer_batch", "application/x-ndjson", Some(&ndjson))
+            .expect("infer_batch request");
+        assert_eq!(status, 200, "{body}");
+        batch_images += body.lines().filter(|l| !l.contains("\"error\"")).count() as u64;
+    }
+    let batch_wall = t0.elapsed().as_secs_f64();
+    let batch_ips = batch_images as f64 / batch_wall;
+    println!(
+        "serve_http/infer_batch: {batch_images} images over {batch_posts} NDJSON posts in \
+         {batch_wall:.3}s -> {batch_ips:.1} images/s"
+    );
+
     let m = gateway.shutdown();
     println!(
-        "serve_http/burst: {served} served + {busy} busy in {wall:.3}s -> {http_rps:.1} req/s \
-         (gold p99 {:.1}us, batch p99 {:.1}us)",
+        "serve_http totals: gold p99 {:.1}us, batch p99 {:.1}us",
         m.tier(Tier::Gold).p99_latency_us(),
         m.tier(Tier::Batch).p99_latency_us()
     );
@@ -262,6 +342,12 @@ fn main() {
         ("http_served", num(served as f64)),
         ("http_busy", num(busy as f64)),
         ("http_requests_per_s", num(http_rps)),
+        ("http_keepalive_served", num(ka_served as f64)),
+        ("http_keepalive_requests_per_s", num(ka_rps)),
+        ("keepalive_speedup", num(keepalive_speedup)),
+        ("conn_reuse_rate", num(conn_reuse_rate)),
+        ("infer_batch_images", num(batch_images as f64)),
+        ("infer_batch_images_per_s", num(batch_ips)),
         ("rejected", num(m.rejected as f64)),
         ("gold_p50_latency_us", num(m.tier(Tier::Gold).p50_latency_us())),
         ("gold_p99_latency_us", num(m.tier(Tier::Gold).p99_latency_us())),

@@ -221,6 +221,19 @@ pub struct SystemConfig {
     /// Bound of each QoS tier's admission queue; admission past it is a
     /// typed `Busy` error (HTTP 429 at the gateway).
     pub queue_cap: usize,
+    /// Gateway: serve HTTP/1.1 persistent connections (keep-alive
+    /// request loop).  `false` answers every request with
+    /// `Connection: close` — the one-request-per-connection baseline.
+    pub keep_alive: bool,
+    /// Gateway: connection-worker pool size = max concurrent HTTP
+    /// connections; the same number again may wait in the accept
+    /// backlog, then admission answers 429 and closes.
+    pub max_conns: usize,
+    /// Gateway: per-read socket timeout in milliseconds for the
+    /// keep-alive loop (idle sessions are closed after it; a stalled
+    /// mid-request read is answered 408).  The whole-request slowloris
+    /// deadline is 4x this.  0 disables both.
+    pub read_timeout_ms: u64,
     /// Enable the dynamic precision governor (`serve::governor`).
     pub governor: bool,
     /// Modeled macro power budget in watts for the governor; 0 disables
@@ -253,6 +266,9 @@ impl Default for SystemConfig {
             engine_threads: 0,
             use_pjrt: false,
             queue_cap: 256,
+            keep_alive: true,
+            max_conns: 64,
+            read_timeout_ms: 5_000,
             governor: true,
             energy_budget_w: 0.0,
             gov_high_watermark: 0.75,
@@ -301,6 +317,10 @@ impl SystemConfig {
         cfg.use_pjrt = t.get_bool("coordinator.use_pjrt", cfg.use_pjrt)?;
         cfg.engine_threads = t.get_usize("engine.threads", cfg.engine_threads)?;
         cfg.queue_cap = t.get_usize("serve.queue_cap", cfg.queue_cap)?;
+        cfg.keep_alive = t.get_bool("serve.keep_alive", cfg.keep_alive)?;
+        cfg.max_conns = t.get_usize("serve.max_conns", cfg.max_conns)?;
+        cfg.read_timeout_ms =
+            t.get_usize("serve.read_timeout_ms", cfg.read_timeout_ms as usize)? as u64;
         cfg.governor = t.get_bool("serve.governor", cfg.governor)?;
         cfg.energy_budget_w = t.get_f64("serve.energy_budget_w", cfg.energy_budget_w)?;
         cfg.gov_high_watermark = t.get_f64("serve.gov_high_watermark", cfg.gov_high_watermark)?;
@@ -379,7 +399,7 @@ use_pjrt = true
         let t = Toml::parse(
             "[serve]\nqueue_cap = 64\ngovernor = false\nenergy_budget_w = 2.5\n\
              gov_high_watermark = 0.9\ngov_low_watermark = 0.1\ngov_max_level = 5\n\
-             gov_hold_ms = 20",
+             gov_hold_ms = 20\nkeep_alive = false\nmax_conns = 8\nread_timeout_ms = 250",
         )
         .unwrap();
         let cfg = SystemConfig::from_toml(&t).unwrap();
@@ -388,11 +408,17 @@ use_pjrt = true
         assert_eq!(cfg.energy_budget_w, 2.5);
         assert_eq!(cfg.gov_max_level, 5);
         assert_eq!(cfg.gov_hold_ms, 20);
+        assert!(!cfg.keep_alive);
+        assert_eq!(cfg.max_conns, 8);
+        assert_eq!(cfg.read_timeout_ms, 250);
         // defaults when the section is absent
         let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(cfg.queue_cap, 256);
         assert!(cfg.governor);
         assert_eq!(cfg.energy_budget_w, 0.0);
+        assert!(cfg.keep_alive);
+        assert_eq!(cfg.max_conns, 64);
+        assert_eq!(cfg.read_timeout_ms, 5_000);
     }
 
     #[test]

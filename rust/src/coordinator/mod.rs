@@ -457,20 +457,36 @@ fn worker_loop(
             Ok((logits, stats)) => {
                 let classes = graph.num_classes;
                 let done = Instant::now();
+                // NaN-safe preds up front: a NaN-poisoned row (aggressive
+                // ACIM noise) is *answered* through the error path — a
+                // fabricated pred would be indistinguishable from a real
+                // class-0 answer — and never aborts the worker mid-batch
+                // the way the old max_by(partial_cmp).unwrap() did.
+                let preds: Vec<Option<usize>> = (0..n)
+                    .map(|i| crate::nn::argmax(&logits[i * classes..(i + 1) * classes]))
+                    .collect();
+                let nan_rows = preds.iter().filter(|p| p.is_none()).count() as u64;
                 {
                     let mut m = metrics.lock().unwrap();
-                    m.requests += n as u64;
+                    // poisoned rows count as errors (answered, not
+                    // served), mirroring the failed-forward branch
+                    m.requests += n as u64 - nan_rows;
+                    m.errors += nan_rows;
                     m.batches += 1;
                     push_sample(&mut m.batch_sizes, &mut m.batch_cursor, n as f64);
                     m.account.merge(&stats.account);
-                    m.per_tier[tier.index()].requests += n as u64;
+                    m.per_tier[tier.index()].requests += n as u64 - nan_rows;
+                    m.per_tier[tier.index()].errors += nan_rows;
                     // one fused pass each: the aggregate and per-tier
                     // views must never diverge
                     for (i, v) in stats.b_hist.iter().enumerate() {
                         m.b_hist[i] += v;
                         m.per_tier[tier.index()].b_hist[i] += v;
                     }
-                    for r in &batch {
+                    for (r, pred) in batch.iter().zip(&preds) {
+                        if pred.is_none() {
+                            continue; // error responses carry no latency sample
+                        }
                         let lat = (done - r.submitted).as_micros() as f64;
                         push_sample(&mut m.latencies_us, &mut m.lat_cursor, lat);
                         let t = &mut m.per_tier[tier.index()];
@@ -480,20 +496,17 @@ fn worker_loop(
                 }
                 for (i, r) in batch.into_iter().enumerate() {
                     let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    let pred = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(j, _)| j)
-                        .unwrap_or(0);
                     let _ = r.respond.send(Response {
                         id: r.id,
-                        pred,
+                        pred: preds[i].unwrap_or(0),
                         logits: row,
                         tier,
                         latency: done - r.submitted,
                         batch_size: n,
-                        error: None,
+                        error: preds[i].is_none().then(|| {
+                            "non-finite logits (NaN) — the row cannot express a prediction"
+                                .to_string()
+                        }),
                     });
                 }
             }

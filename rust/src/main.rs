@@ -83,6 +83,20 @@ fn main() -> Result<()> {
                         None,
                     ));
                     o.push(Opt::value("queue-cap", "bound of each QoS tier's queue", None));
+                    o.push(Opt::value(
+                        "max-conns",
+                        "connection-worker pool size (max concurrent HTTP connections)",
+                        None,
+                    ));
+                    o.push(Opt::value(
+                        "read-timeout-ms",
+                        "keep-alive per-read timeout; slowloris deadline is 4x (0 disables)",
+                        None,
+                    ));
+                    o.push(Opt::flag(
+                        "no-keep-alive",
+                        "one request per connection (Connection: close on every response)",
+                    ));
                     o.push(Opt::flag("no-governor", "disable the dynamic precision governor"));
                     o.push(Opt::value(
                         "energy-budget-w",
@@ -159,6 +173,11 @@ fn main() -> Result<()> {
             cfg.workers = args.get_usize("workers", cfg.workers)?;
             cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
             cfg.queue_cap = args.get_usize("queue-cap", cfg.queue_cap)?;
+            cfg.max_conns = args.get_usize("max-conns", cfg.max_conns)?;
+            cfg.read_timeout_ms = args.get_u64("read-timeout-ms", cfg.read_timeout_ms)?;
+            if args.flag("no-keep-alive") {
+                cfg.keep_alive = false;
+            }
             if args.flag("no-governor") {
                 cfg.governor = false;
             }
@@ -182,6 +201,10 @@ fn main() -> Result<()> {
                 println!(
                     "  curl -s -X POST http://{addr}/v1/infer -d \
                      '{{\"tier\":\"gold\",\"image\":[...3072 uint8...]}}'"
+                );
+                println!(
+                    "  POST http://{addr}/v1/infer_batch  (NDJSON: one image per line, \
+                     per-line tier override)"
                 );
                 gateway.wait();
                 return Ok(());

@@ -428,19 +428,26 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
     }
 }
 
-/// Classification accuracy of logits against labels.
+/// Index of the largest logit, by `f32::total_cmp`.  `None` for an
+/// empty row or one containing any NaN: a NaN-poisoned row (aggressive
+/// ACIM noise settings can produce one) cannot express a prediction, so
+/// callers count it as a miss or answer a sentinel — the old
+/// `max_by(partial_cmp).unwrap()` aborted the whole process instead.
+pub fn argmax(row: &[f32]) -> Option<usize> {
+    if row.is_empty() || row.iter().any(|v| v.is_nan()) {
+        return None;
+    }
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(j, _)| j)
+}
+
+/// Classification accuracy of logits against labels.  A row with any
+/// NaN logit counts as a miss (never a panic).
 pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
     let n = labels.len();
     let mut correct = 0usize;
     for i in 0..n {
         let row = &logits[i * classes..(i + 1) * classes];
-        let pred = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap();
-        if pred as i32 == labels[i] {
+        if argmax(row).map(|p| p as i32) == Some(labels[i]) {
             correct += 1;
         }
     }
@@ -473,6 +480,31 @@ mod tests {
         assert_eq!(accuracy(&logits, &labels_bad, 2), 0.0);
         let ce = cross_entropy(&logits, &labels, 2);
         assert!(ce > 0.0 && ce < 0.2, "{ce}");
+    }
+
+    #[test]
+    fn nan_logits_are_a_miss_not_an_abort() {
+        // regression: NaN logits used to panic max_by(partial_cmp)
+        let logits = vec![f32::NAN, 0.0, 2.0, 1.0]; // 2 samples, 2 classes
+        let labels = vec![0, 0];
+        // sample 0 is NaN-poisoned -> miss even though NaN sits at the
+        // label index; sample 1 predicts class 0 -> hit
+        assert_eq!(accuracy(&logits, &labels, 2), 0.5);
+        // all-NaN rows: zero accuracy, no panic
+        let poisoned = vec![f32::NAN; 4];
+        assert_eq!(accuracy(&poisoned, &labels, 2), 0.0);
+    }
+
+    #[test]
+    fn argmax_semantics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+        assert_eq!(argmax(&[1.0, f32::NAN]), None);
+        // -inf/+inf are ordinary, orderable values
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0, f32::INFINITY]), Some(2));
+        // ties resolve to the LAST maximal index (max_by keeps later
+        // elements on Equal) — stable, documented behavior
+        assert_eq!(argmax(&[5.0, 5.0]), Some(1));
     }
 
     #[test]

@@ -1,22 +1,37 @@
-//! Network gateway: a `std::net::TcpListener` HTTP/1.1 JSON front-end
-//! over the tier-aware coordinator (DESIGN.md §10).
+//! Network gateway: a `std::net::TcpListener` HTTP/1.1 front-end over
+//! the tier-aware coordinator (DESIGN.md §10) with **persistent
+//! connections**.
 //!
 //! Routes:
 //! * `POST /v1/infer` — body `{"tier": "gold|silver|batch", "image":
 //!   [3072 uint8]}`; answers the prediction, or `429 Busy` when the
 //!   tier's bounded queue is full (explicit backpressure), `400` on
 //!   malformed input, `500` when the worker's forward failed.
+//! * `POST /v1/infer_batch` — NDJSON: one `{"tier": ..., "image":
+//!   [...]}` object per line (tier optional per line, default silver;
+//!   blank lines skipped).  Answers NDJSON, one result (or per-line
+//!   error) per non-blank input line, in order, each tagged with its
+//!   original input line number (`"line"`).  Batch-tier clients
+//!   amortize connection AND request-parse cost across many images.
 //! * `GET /metrics` — JSON snapshot: aggregate + per-tier latency
-//!   percentiles, boundary histograms, queue depths, rejection counts
-//!   and the governor's current per-tier precision contracts.
+//!   percentiles, boundary histograms, queue depths, rejection counts,
+//!   connection/reuse counters and the governor's current per-tier
+//!   precision contracts.
 //! * `GET /healthz` — liveness probe.
 //!
-//! Threading: one accept thread, one short-lived thread per connection
-//! (one request per connection, `Connection: close`), the coordinator's
-//! batcher + worker pool underneath.  Graceful [`Gateway::shutdown`]
-//! drains in-flight connections before draining the coordinator.
+//! Threading: one accept thread feeding a **bounded connection-worker
+//! pool** (`[serve] max_conns` workers, same pattern as `sched::exec`)
+//! through an accept backlog of the same depth.  A connection past the
+//! backlog is answered `429` and closed — the connection-level twin of
+//! the QoS queues' `SubmitError` admission.  Each worker runs the
+//! keep-alive loop: read request (per-read timeout + whole-request
+//! slowloris deadline), dispatch, respond `Connection: keep-alive`
+//! until the client closes, errs, stalls, asks for `close`, or the
+//! gateway shuts down.  Graceful [`Gateway::shutdown`] stops accepting,
+//! finishes in-flight requests (responses carry `Connection: close`),
+//! nudges idle keep-alive readers awake, then drains the coordinator.
 
-use super::http::{self, HttpRequest};
+use super::http::{self, HttpRequest, ReadError};
 use super::qos::{SubmitError, Tier};
 use crate::config::SystemConfig;
 use crate::coordinator::{Metrics, Server};
@@ -24,21 +39,131 @@ use crate::io::json::{self, arr, num, obj, s, JsonValue};
 use crate::nn::QGraph;
 use crate::spec::MacroSpec;
 use anyhow::{Context, Result};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// Expected image payload: 32x32x3 uint8.
 pub const IMAGE_BYTES: usize = 32 * 32 * 3;
 
-/// The serving gateway (listener + coordinator).
-pub struct Gateway {
+/// Hard cap on `/v1/infer_batch` lines per request (the body-size bound
+/// already limits this in practice; the explicit cap keeps the error
+/// message honest).
+pub const MAX_BATCH_LINES: usize = 256;
+
+/// Connection-level counters (all monotonic; snapshot via `/metrics`).
+#[derive(Debug, Default)]
+pub struct ConnStats {
+    /// Connections claimed by a connection worker.
+    pub accepted: AtomicU64,
+    /// Connections refused at admission (backlog full -> 429 + close).
+    pub rejected: AtomicU64,
+    /// HTTP requests served across all connections.
+    pub requests: AtomicU64,
+}
+
+impl ConnStats {
+    /// Fraction of requests that rode a reused connection:
+    /// `1 - connections/requests`.  0 when every request paid a fresh
+    /// TCP setup (the old one-shot gateway), -> 1 as keep-alive clients
+    /// amortize the connection across many requests.
+    pub fn reuse_rate(&self) -> f64 {
+        let conns = self.accepted.load(Ordering::Relaxed);
+        let reqs = self.requests.load(Ordering::Relaxed);
+        if reqs == 0 {
+            return 0.0;
+        }
+        1.0 - conns.min(reqs) as f64 / reqs as f64
+    }
+}
+
+/// Connection-lifecycle knobs resolved from [`SystemConfig`].
+#[derive(Debug, Clone, Copy)]
+struct ConnOpts {
+    keep_alive: bool,
+    /// Per-read socket timeout (None = wait forever).
+    read_timeout: Option<Duration>,
+    /// Whole-request deadline (slowloris guard; ZERO = disabled).
+    request_deadline: Duration,
+    spec: MacroSpec,
+}
+
+/// Bounded queue of accepted-but-unclaimed connections (the accept
+/// backlog).  Push past the bound fails fast — the accept thread
+/// answers 429 — mirroring the QoS tier queues.
+struct ConnQueue {
+    state: Mutex<(VecDeque<TcpStream>, bool)>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> Self {
+        Self { state: Mutex::new((VecDeque::new(), false)), cv: Condvar::new(), cap }
+    }
+
+    /// Admit one connection, or hand it back when the backlog is full
+    /// or the queue is closed.
+    fn push(&self, stream: TcpStream) -> std::result::Result<(), TcpStream> {
+        let mut st = self.state.lock().unwrap();
+        if st.1 || st.0.len() >= self.cap {
+            return Err(stream);
+        }
+        st.0.push_back(stream);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block for the next connection; `None` once closed (queued
+    /// connections left at close are dropped — they have no in-flight
+    /// requests to finish).
+    fn pop(&self) -> Option<TcpStream> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.1 {
+                return None;
+            }
+            if let Some(s) = st.0.pop_front() {
+                return Some(s);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stop handing out connections and drop anything still queued.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        st.0.clear();
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Everything a connection worker needs.
+struct ConnCtx {
     server: Arc<Server>,
+    opts: ConnOpts,
+    stats: Arc<ConnStats>,
+    /// Read-half clones of every connection currently inside a worker,
+    /// keyed by a serial id: shutdown nudges blocked keep-alive readers
+    /// awake via `Shutdown::Read` without touching in-flight writes.
+    active: Mutex<HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// The serving gateway (listener + connection pool + coordinator).
+pub struct Gateway {
+    ctx: Arc<ConnCtx>,
+    queue: Arc<ConnQueue>,
     addr: SocketAddr,
     accept: Option<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
-    stop: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Gateway {
@@ -51,19 +176,55 @@ impl Gateway {
             TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
         let addr = listener.local_addr().context("local_addr")?;
         let server = Arc::new(Server::start(cfg, graph)?);
-        let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
-        let spec = cfg.spec;
+        let read_timeout = match cfg.read_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+        let opts = ConnOpts {
+            keep_alive: cfg.keep_alive,
+            read_timeout,
+            // a request must complete within a few read-timeouts even if
+            // the peer trickles bytes to keep each individual read alive
+            request_deadline: read_timeout.map(|t| t * 4).unwrap_or(Duration::ZERO),
+            spec: cfg.spec,
+        };
+        let ctx = Arc::new(ConnCtx {
+            server,
+            opts,
+            stats: Arc::new(ConnStats::default()),
+            active: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let max_conns = cfg.max_conns.max(1);
+        let queue = Arc::new(ConnQueue::new(max_conns));
+        let mut workers = Vec::with_capacity(max_conns);
+        for wid in 0..max_conns {
+            let ctx = ctx.clone();
+            let queue = queue.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("gateway-conn-{wid}"))
+                    .spawn(move || conn_worker(&ctx, &queue))
+                    .context("spawning connection worker")?,
+            );
+        }
+        // Bounded budget of concurrent rejection threads: each 429 is
+        // written + linger-closed off the accept thread (so a flood
+        // cannot stall accepts), but never with unbounded thread growth
+        // — past the budget a connection is shed silently, which is the
+        // honest signal at that level of overload.
+        const MAX_REJECTORS: u64 = 32;
+        let rejectors = Arc::new(AtomicU64::new(0));
         let accept = std::thread::Builder::new()
             .name("gateway-accept".into())
             .spawn({
-                let server = server.clone();
-                let stop = stop.clone();
-                let conns = conns.clone();
+                let ctx = ctx.clone();
+                let queue = queue.clone();
+                let rejectors = rejectors.clone();
                 move || {
                     for incoming in listener.incoming() {
-                        if stop.load(Ordering::SeqCst) {
+                        if ctx.stop.load(Ordering::SeqCst) {
                             break;
                         }
                         let stream = match incoming {
@@ -73,29 +234,64 @@ impl Gateway {
                                 continue;
                             }
                         };
-                        let server = server.clone();
-                        let spawned = std::thread::Builder::new()
-                            .name("gateway-conn".into())
-                            .spawn(move || handle_conn(stream, server, spec));
-                        match spawned {
-                            Ok(h) => {
-                                let mut c = conns.lock().unwrap();
-                                c.retain(|h| !h.is_finished());
-                                c.push(h);
+                        if let Err(mut stream) = queue.push(stream) {
+                            // connection-level admission: the pool and
+                            // its backlog are full — same explicit-429
+                            // contract as the QoS tier queues.  The
+                            // write + lingering close run on a short
+                            // detached thread so the accept loop stays
+                            // fast exactly when it is being flooded.
+                            ctx.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                            if rejectors.load(Ordering::Relaxed) >= MAX_REJECTORS {
+                                // even the rejection budget is gone:
+                                // shed silently (drop = RST)
+                                continue;
                             }
-                            Err(e) => log::error!("spawning connection handler: {e}"),
+                            rejectors.fetch_add(1, Ordering::Relaxed);
+                            let rejectors = rejectors.clone();
+                            let e = SubmitError::Overloaded { max_conns };
+                            let body = obj(vec![
+                                ("error", s("busy")),
+                                ("detail", s(&e.to_string())),
+                            ])
+                            .to_string_compact();
+                            std::thread::spawn(move || {
+                                let _ =
+                                    stream.set_write_timeout(Some(Duration::from_secs(2)));
+                                let _ = http::write_response(
+                                    &mut stream,
+                                    429,
+                                    "Too Many Requests",
+                                    "application/json",
+                                    body.as_bytes(),
+                                    false,
+                                );
+                                // the peer's request was never read at
+                                // all: drain briefly so the 429 is not
+                                // destroyed by an RST
+                                linger_close(&stream, &mut (&stream));
+                                rejectors.fetch_sub(1, Ordering::Relaxed);
+                            });
                         }
                     }
                 }
             })
             .context("spawning accept loop")?;
-        log::info!("gateway listening on {addr}");
-        Ok(Gateway { server, addr, accept: Some(accept), conns, stop })
+        log::info!(
+            "gateway listening on {addr} (keep_alive={}, max_conns={max_conns})",
+            cfg.keep_alive
+        );
+        Ok(Gateway { ctx, queue, addr, accept: Some(accept), workers })
     }
 
     /// The bound address (resolves port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Connection-level counters (accepted / rejected / requests).
+    pub fn conn_stats(&self) -> Arc<ConnStats> {
+        self.ctx.stats.clone()
     }
 
     /// Block until the accept loop exits (i.e. until shutdown or
@@ -106,24 +302,63 @@ impl Gateway {
         }
     }
 
-    /// Stop accepting, drain in-flight connections, then drain the
-    /// coordinator.  Returns the final serving metrics.
+    /// Stop accepting, finish in-flight requests (drain), then drain
+    /// the coordinator.  Returns the final serving metrics.
     pub fn shutdown(mut self) -> Metrics {
-        self.stop.store(true, Ordering::SeqCst);
+        self.ctx.stop.store(true, Ordering::SeqCst);
         // unblock the accept loop with one last connection
         let _ = TcpStream::connect(self.addr);
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
+        // no new connections reach the workers; queued-but-idle ones are
+        // dropped (they have no in-flight requests)
+        self.queue.close();
+        // wake workers blocked waiting for the NEXT request of an idle
+        // keep-alive session: shutting down the read half makes their
+        // blocked read return EOF (a clean request boundary) without
+        // disturbing a response that is still being written
+        {
+            let active = self.ctx.active.lock().unwrap();
+            for stream in active.values() {
+                let _ = stream.shutdown(Shutdown::Read);
+            }
         }
-        match Arc::try_unwrap(self.server) {
-            Ok(server) => server.shutdown(),
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        match Arc::try_unwrap(self.ctx) {
+            Ok(ctx) => match Arc::try_unwrap(ctx.server) {
+                Ok(server) => server.shutdown(),
+                Err(server) => server.metrics(),
+            },
             // a straggler still holds a handle; fall back to a snapshot
-            Err(server) => server.metrics(),
+            Err(ctx) => ctx.server.metrics(),
         }
+    }
+}
+
+fn conn_worker(ctx: &ConnCtx, queue: &ConnQueue) {
+    while let Some(stream) = queue.pop() {
+        ctx.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        let id = ctx.next_conn.fetch_add(1, Ordering::Relaxed);
+        // register the read half BEFORE the first blocking read so a
+        // concurrent shutdown can always nudge this connection
+        if let Ok(clone) = stream.try_clone() {
+            ctx.active.lock().unwrap().insert(id, clone);
+        }
+        // Panic containment, same invariant as the `sched::exec` pool
+        // this design mirrors: one panicking handler loses ITS
+        // connection, never a pool worker — an uncontained panic would
+        // permanently shrink the bounded pool (with max_conns=1, into a
+        // gateway that 429s everything forever).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_conn(stream, ctx);
+        }));
+        if result.is_err() {
+            log::error!("connection handler panicked; connection dropped");
+        }
+        ctx.active.lock().unwrap().remove(&id);
     }
 }
 
@@ -131,136 +366,321 @@ fn err_body(msg: &str) -> String {
     obj(vec![("error", s(msg))]).to_string_compact()
 }
 
-fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) {
-    if let Err(e) = http::write_response(stream, status, reason, "application/json", body.as_bytes())
-    {
-        log::debug!("writing response: {e}");
+/// Lingering close for a connection whose request was NOT fully read
+/// (parse reject, stall, admission 429): FIN the write half after the
+/// final response, then briefly and boundedly discard whatever the
+/// peer was still sending.  Dropping a socket with unread bytes queued
+/// makes the kernel answer RST, and an RST purges the peer's receive
+/// buffer — destroying the just-written error response before the
+/// client can read it (invisible on loopback, real over networks).
+fn linger_close(stream: &TcpStream, reader: &mut impl std::io::Read) {
+    let _ = stream.shutdown(Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut scratch = [0u8; 4096];
+    let mut budget = 64 * 1024usize;
+    // hard wall-clock cap alongside the byte budget: a peer trickling
+    // one byte per read-timeout would otherwise pin this pool worker
+    // for hours (64K reads x 250ms) — the exact slowloris shape the
+    // request deadline sheds
+    let deadline = std::time::Instant::now() + Duration::from_secs(1);
+    loop {
+        if std::time::Instant::now() >= deadline {
+            break;
+        }
+        match reader.read(&mut scratch) {
+            Ok(0) => break, // peer saw the FIN and closed
+            Ok(n) => {
+                if n >= budget {
+                    break;
+                }
+                budget -= n;
+            }
+            Err(_) => break, // grace window elapsed (or transport died)
+        }
     }
 }
 
-fn handle_conn(mut stream: TcpStream, server: Arc<Server>, spec: MacroSpec) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+/// Write one response; `false` means the write failed (possibly
+/// part-way).  After a partial write the byte stream is misframed —
+/// response N+1 would be consumed as the tail of N's body — so the
+/// connection loop MUST close on `false`, never keep serving.
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str, keep: bool) -> bool {
+    respond_typed(stream, status, reason, "application/json", body, keep)
+}
+
+fn respond_typed(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    keep: bool,
+) -> bool {
+    match http::write_response(stream, status, reason, content_type, body.as_bytes(), keep) {
+        Ok(()) => true,
+        Err(e) => {
+            log::debug!("writing response: {e}");
+            false
+        }
+    }
+}
+
+/// The keep-alive request loop for one connection (DESIGN.md §10).
+/// Returns when the peer closes, a read stalls past the timeout, the
+/// request is malformed, the request asked for `Connection: close`, or
+/// the gateway is shutting down — whichever comes first.  Every
+/// response on the way out of the loop carries `Connection: close`.
+fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_read_timeout(ctx.opts.read_timeout);
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let req = match http::read_request(&mut stream) {
-        Ok(r) => r,
+    let _ = stream.set_nodelay(true);
+    // ONE BufReader for the whole session: a pipelining client's next
+    // request may already sit in the buffer, and a fresh reader per
+    // request would silently drop it
+    let mut reader = match stream.try_clone() {
+        Ok(clone) => BufReader::new(clone),
         Err(e) => {
-            respond(&mut stream, 400, "Bad Request", &err_body(&format!("{e:#}")));
+            log::debug!("cloning connection stream: {e}");
             return;
         }
     };
-    // route on the path only — a query string must not 404 an endpoint
-    let path = req.path.split('?').next().unwrap_or("");
-    match (req.method.as_str(), path) {
-        ("GET", "/healthz") => {
-            let body = obj(vec![("status", s("ok"))]).to_string_compact();
-            respond(&mut stream, 200, "OK", &body);
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
         }
-        ("GET", "/metrics") => {
-            let body = metrics_json(&server, &spec).to_string_compact();
-            respond(&mut stream, 200, "OK", &body);
+        let req = match http::read_request_from(&mut reader, ctx.opts.request_deadline) {
+            Ok(r) => r,
+            // normal end of a keep-alive session
+            Err(ReadError::Closed) => break,
+            // idle keep-alive timeout: close silently; a stalled upload
+            // gets told before the close (slowloris shed)
+            Err(ReadError::TimedOut { mid_request }) => {
+                if mid_request {
+                    respond(
+                        &mut stream,
+                        408,
+                        "Request Timeout",
+                        &err_body("request stalled mid-read"),
+                        false,
+                    );
+                    linger_close(&stream, &mut reader);
+                }
+                break;
+            }
+            // protocol violation: answer 400 then drop the connection —
+            // after a framing error the byte stream can't be trusted
+            Err(ReadError::Malformed(msg)) => {
+                respond(&mut stream, 400, "Bad Request", &err_body(&msg), false);
+                // the rejected request's unread remainder (e.g. a body
+                // we refused to frame) must not turn the 400 into an RST
+                linger_close(&stream, &mut reader);
+                break;
+            }
+            Err(ReadError::Io(e)) => {
+                log::debug!("connection read failed: {e}");
+                break;
+            }
+        };
+        ctx.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // persist only when the gateway allows it, the request allows
+        // it, and we aren't draining for shutdown
+        let keep =
+            ctx.opts.keep_alive && req.wants_keep_alive() && !ctx.stop.load(Ordering::SeqCst);
+        // route on the path only — a query string must not 404 an endpoint
+        let path = req.path.split('?').next().unwrap_or("");
+        let wrote_ok = match (req.method.as_str(), path) {
+            ("GET", "/healthz") => {
+                let body = obj(vec![("status", s("ok"))]).to_string_compact();
+                respond(&mut stream, 200, "OK", &body, keep)
+            }
+            ("GET", "/metrics") => {
+                let body = metrics_json(&ctx.server, &ctx.opts.spec, Some(&ctx.stats))
+                    .to_string_compact();
+                respond(&mut stream, 200, "OK", &body, keep)
+            }
+            ("POST", "/v1/infer") => handle_infer(&mut stream, &req, &ctx.server, keep),
+            ("POST", "/v1/infer_batch") => {
+                handle_infer_batch(&mut stream, &req, &ctx.server, keep)
+            }
+            _ => respond(&mut stream, 404, "Not Found", &err_body("no such route"), keep),
+        };
+        // a failed (possibly partial) write leaves the stream misframed:
+        // the only safe continuation is no continuation
+        if !wrote_ok || !keep {
+            break;
         }
-        ("POST", "/v1/infer") => handle_infer(&mut stream, &req, &server),
-        _ => respond(&mut stream, 404, "Not Found", &err_body("no such route")),
     }
 }
 
-fn handle_infer(stream: &mut TcpStream, req: &HttpRequest, server: &Server) {
-    let parsed = req.body_str().and_then(json::parse);
-    let doc = match parsed {
-        Ok(d) => d,
-        Err(e) => {
-            respond(stream, 400, "Bad Request", &err_body(&format!("bad JSON body: {e:#}")));
-            return;
-        }
-    };
+/// Parse one infer document (`{"tier": optional, "image": [u8; 3072]}`)
+/// into a submission; the error string is ready for a 400 / per-line
+/// error.  Shared by `/v1/infer` and `/v1/infer_batch`.
+fn parse_infer_doc(doc: &JsonValue) -> std::result::Result<(Tier, Vec<u8>), String> {
     // an absent tier defaults to silver; a present-but-invalid one is a
     // client error, never a silent SLO downgrade
     let tier_name = match doc.get("tier") {
         None => "silver",
         Some(v) => match v.as_str() {
             Some(name) => name,
-            None => {
-                respond(stream, 400, "Bad Request", &err_body("\"tier\" must be a string"));
-                return;
-            }
+            None => return Err("\"tier\" must be a string".into()),
         },
     };
     let Some(tier) = Tier::parse(tier_name) else {
-        respond(
-            stream,
-            400,
-            "Bad Request",
-            &err_body(&format!("unknown tier {tier_name:?} (gold|silver|batch)")),
-        );
-        return;
+        return Err(format!("unknown tier {tier_name:?} (gold|silver|batch)"));
     };
     let Some(pixels) = doc.get("image").and_then(JsonValue::as_array) else {
-        respond(stream, 400, "Bad Request", &err_body("missing \"image\" array"));
-        return;
+        return Err("missing \"image\" array".into());
     };
     if pixels.len() != IMAGE_BYTES {
-        respond(
-            stream,
-            400,
-            "Bad Request",
-            &err_body(&format!("image must be {IMAGE_BYTES} bytes, got {}", pixels.len())),
-        );
-        return;
+        return Err(format!("image must be {IMAGE_BYTES} bytes, got {}", pixels.len()));
     }
     let mut image = Vec::with_capacity(IMAGE_BYTES);
     for p in pixels {
         // as_i64 would silently truncate 1.9 -> 1; demand true integers
         match p.as_f64() {
             Some(v) if v.fract() == 0.0 && (0.0..=255.0).contains(&v) => image.push(v as u8),
-            _ => {
-                respond(
-                    stream,
-                    400,
-                    "Bad Request",
-                    &err_body("image values must be integers in 0..=255"),
-                );
-                return;
-            }
+            _ => return Err("image values must be integers in 0..=255".into()),
         }
     }
+    Ok((tier, image))
+}
+
+/// A served response as a JSON object (shared by both infer routes).
+fn response_json(resp: &crate::coordinator::Response) -> JsonValue {
+    obj(vec![
+        ("id", num(resp.id as f64)),
+        ("tier", s(resp.tier.name())),
+        ("pred", num(resp.pred as f64)),
+        // logits scrubbed through fnum: a NaN logit (aggressive ACIM
+        // noise) must not corrupt the whole JSON payload
+        ("logits", arr(resp.logits.iter().map(|&x| fnum(x as f64)))),
+        ("latency_us", num(resp.latency.as_micros() as f64)),
+        ("batch_size", num(resp.batch_size as f64)),
+    ])
+}
+
+fn handle_infer(stream: &mut TcpStream, req: &HttpRequest, server: &Server, keep: bool) -> bool {
+    let parsed = req.body_str().and_then(json::parse);
+    let doc = match parsed {
+        Ok(d) => d,
+        Err(e) => {
+            let body = err_body(&format!("bad JSON body: {e:#}"));
+            return respond(stream, 400, "Bad Request", &body, keep);
+        }
+    };
+    let (tier, image) = match parse_infer_doc(&doc) {
+        Ok(x) => x,
+        Err(msg) => return respond(stream, 400, "Bad Request", &err_body(&msg), keep),
+    };
     let rx = match server.submit_tier(image, tier) {
         Ok(rx) => rx,
-        Err(e @ SubmitError::Busy { .. }) => {
+        Err(e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. })) => {
             let body = obj(vec![
                 ("error", s("busy")),
                 ("detail", s(&e.to_string())),
                 ("tier", s(tier.name())),
             ])
             .to_string_compact();
-            respond(stream, 429, "Too Many Requests", &body);
-            return;
+            return respond(stream, 429, "Too Many Requests", &body, keep);
         }
         Err(SubmitError::ShutDown) => {
-            respond(stream, 503, "Service Unavailable", &err_body("server is shutting down"));
-            return;
+            let body = err_body("server is shutting down");
+            return respond(stream, 503, "Service Unavailable", &body, false);
         }
     };
     let resp = match rx.recv() {
         Ok(r) => r,
         Err(_) => {
-            respond(stream, 500, "Internal Server Error", &err_body("response channel dropped"));
-            return;
+            let body = err_body("response channel dropped");
+            return respond(stream, 500, "Internal Server Error", &body, keep);
         }
     };
     if let Some(msg) = &resp.error {
-        respond(stream, 500, "Internal Server Error", &err_body(msg));
-        return;
+        return respond(stream, 500, "Internal Server Error", &err_body(msg), keep);
     }
-    let body = obj(vec![
-        ("id", num(resp.id as f64)),
-        ("tier", s(resp.tier.name())),
-        ("pred", num(resp.pred as f64)),
-        ("logits", arr(resp.logits.iter().map(|&x| num(x as f64)))),
-        ("latency_us", num(resp.latency.as_micros() as f64)),
-        ("batch_size", num(resp.batch_size as f64)),
-    ])
-    .to_string_compact();
-    respond(stream, 200, "OK", &body);
+    respond(stream, 200, "OK", &response_json(&resp).to_string_compact(), keep)
+}
+
+/// NDJSON batch inference: parse every line, submit the valid ones (so
+/// they pipeline into the coordinator's coalescing window), then
+/// collect in input order.  Per-line failures (parse error, tier queue
+/// Busy, worker error) become per-line `{"error": ...}` objects; the
+/// HTTP status stays 200 unless the request itself is malformed.
+fn handle_infer_batch(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    server: &Server,
+    keep: bool,
+) -> bool {
+    let text = match req.body_str() {
+        Ok(t) => t,
+        Err(e) => {
+            return respond(stream, 400, "Bad Request", &err_body(&format!("{e:#}")), keep)
+        }
+    };
+    // enumerate BEFORE filtering so the "line" field in every result
+    // refers to the client's own line numbers even when the input has
+    // interior blank lines
+    let lines: Vec<(usize, &str)> =
+        text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty()).collect();
+    if lines.is_empty() {
+        return respond(stream, 400, "Bad Request", &err_body("empty NDJSON body"), keep);
+    }
+    if lines.len() > MAX_BATCH_LINES {
+        return respond(
+            stream,
+            400,
+            "Bad Request",
+            &err_body(&format!("too many lines ({}, max {MAX_BATCH_LINES})", lines.len())),
+            keep,
+        );
+    }
+    // submit phase: get every admissible line in flight before waiting
+    // on any response — this is what lets one HTTP request fill whole
+    // coordinator batches
+    enum Pending {
+        Rx(std::sync::mpsc::Receiver<crate::coordinator::Response>),
+        Err(String),
+    }
+    let mut pending = Vec::with_capacity(lines.len());
+    for (i, line) in &lines {
+        let slot = match json::parse(line).map_err(|e| format!("bad JSON line: {e:#}")).and_then(
+            |doc| parse_infer_doc(&doc),
+        ) {
+            Ok((tier, image)) => match server.submit_tier(image, tier) {
+                Ok(rx) => Pending::Rx(rx),
+                Err(e) => Pending::Err(e.to_string()),
+            },
+            Err(msg) => Pending::Err(msg),
+        };
+        pending.push((*i, slot));
+    }
+    // collect phase: input order, one NDJSON object per non-blank line
+    let mut out = String::new();
+    for (i, slot) in pending {
+        let line_obj = match slot {
+            Pending::Err(msg) => obj(vec![("line", num(i as f64)), ("error", s(&msg))]),
+            Pending::Rx(rx) => match rx.recv() {
+                Err(_) => obj(vec![
+                    ("line", num(i as f64)),
+                    ("error", s("response channel dropped")),
+                ]),
+                Ok(resp) => match &resp.error {
+                    Some(msg) => obj(vec![("line", num(i as f64)), ("error", s(msg))]),
+                    None => {
+                        let mut o = response_json(&resp);
+                        if let JsonValue::Object(map) = &mut o {
+                            map.insert("line".into(), num(i as f64));
+                        }
+                        o
+                    }
+                },
+            },
+        };
+        out.push_str(&line_obj.to_string_compact());
+        out.push('\n');
+    }
+    respond_typed(stream, 200, "OK", "application/x-ndjson", &out, keep)
 }
 
 fn hist_json(h: &[u64; 16]) -> JsonValue {
@@ -276,7 +696,9 @@ fn fnum(x: f64) -> JsonValue {
 }
 
 /// The `/metrics` document (also reused by the pipeline bench).
-pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
+/// `conns` adds the gateway's connection-lifecycle counters when the
+/// snapshot is taken through the HTTP surface.
+pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>) -> JsonValue {
     let m = server.metrics();
     let depths = server.queue_depths();
     let gov = server.governor();
@@ -311,7 +733,7 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
             )
         })
         .collect();
-    obj(vec![
+    let mut fields = vec![
         ("requests", num(m.requests as f64)),
         ("batches", num(m.batches as f64)),
         ("errors", num(m.errors as f64)),
@@ -333,5 +755,17 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec) -> JsonValue {
                 ("tiers", obj(gov_tiers)),
             ]),
         ),
-    ])
+    ];
+    if let Some(c) = conns {
+        fields.push((
+            "connections",
+            obj(vec![
+                ("accepted", num(c.accepted.load(Ordering::Relaxed) as f64)),
+                ("rejected", num(c.rejected.load(Ordering::Relaxed) as f64)),
+                ("http_requests", num(c.requests.load(Ordering::Relaxed) as f64)),
+                ("reuse_rate", fnum(c.reuse_rate())),
+            ]),
+        ));
+    }
+    obj(fields)
 }

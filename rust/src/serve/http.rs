@@ -1,15 +1,30 @@
 //! Minimal HTTP/1.1 substrate for the gateway (no HTTP crates in the
 //! offline mirror — hand-rolled in-repo, like `io::json`).
 //!
-//! Scope: exactly what `serve::gateway` needs.  One request per
-//! connection (`Connection: close` on every response), request line +
-//! headers + `Content-Length` body, bounded sizes.  Also provides the
-//! tiny blocking client used by the integration tests and benches.
+//! Scope: exactly what `serve::gateway` needs.  **Persistent
+//! connections** (HTTP/1.1 keep-alive with correct `Connection` /
+//! `Content-Length` semantics), request line + headers +
+//! `Content-Length` body, bounded sizes, and a typed [`ReadError`] so
+//! the gateway's connection loop can tell a clean keep-alive close from
+//! a stalled peer from a protocol violation.  Also provides the
+//! blocking clients used by the integration tests and benches: the
+//! one-shot [`request`] (sends `Connection: close`) and the persistent
+//! [`Client`] (many requests over one TCP connection).
+//!
+//! Hardening (request-smuggling shapes are rejected, not normalized):
+//! duplicate *framing* headers are a 400 (two `Content-Length` values
+//! must never silently last-write-win; other repeated headers combine
+//! per RFC 7230 list semantics, as multi-hop proxies legitimately
+//! produce), `Content-Length` must be pure ASCII digits
+//! (`parse::<usize>` alone would accept a leading `+`), and
+//! `Transfer-Encoding` is refused outright (chunked bodies are not
+//! implemented, so ignoring the header would desynchronize framing).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 /// Parsing bounds (a request violating them is a 400).
 const MAX_HEADER_LINE: usize = 16 * 1024;
@@ -21,6 +36,8 @@ const MAX_BODY: usize = 4 * 1024 * 1024;
 pub struct HttpRequest {
     pub method: String,
     pub path: String,
+    /// `HTTP/1.0` or `HTTP/1.1` (anything else is rejected at parse).
+    pub version: String,
     /// Header names lower-cased.
     pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
@@ -34,75 +51,298 @@ impl HttpRequest {
     pub fn body_str(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).context("request body is not UTF-8")
     }
+
+    /// Whether the peer allows this connection to persist after the
+    /// response: HTTP/1.1 defaults to keep-alive unless the request says
+    /// `Connection: close`; HTTP/1.0 persists only on an explicit
+    /// `Connection: keep-alive`.  `Connection` is a comma-separated
+    /// token list (RFC 7230 §6.1) — and this parser itself merges
+    /// repeated non-framing headers into one list — so the tokens are
+    /// scanned individually, never the whole value compared.
+    pub fn wants_keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        let has = |token: &str| conn.split(',').any(|t| t.trim().eq_ignore_ascii_case(token));
+        if self.version == "HTTP/1.0" {
+            has("keep-alive")
+        } else {
+            !has("close")
+        }
+    }
 }
 
-fn read_line_bounded(r: &mut impl BufRead) -> Result<String> {
-    // `take` bounds how much a newline-less line can buffer: a peer
-    // streaming garbage can cost at most MAX_HEADER_LINE + 1 bytes here,
-    // never unbounded memory.
-    let mut buf = Vec::new();
-    let n = r
-        .by_ref()
-        .take(MAX_HEADER_LINE as u64 + 1)
-        .read_until(b'\n', &mut buf)
-        .context("reading header line")?;
-    if n == 0 {
-        bail!("connection closed before a full request arrived");
+/// Why [`read_request_from`] produced no request.  The connection loop
+/// keys its lifecycle off this: `Closed` ends the session quietly,
+/// `TimedOut`/`Malformed` end it with (at most) one final response,
+/// `Io` ends it silently — the transport is already broken.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The peer closed cleanly at a request boundary (EOF before any
+    /// byte of a new request) — the normal end of a keep-alive session.
+    Closed,
+    /// A read timed out (the socket's per-read timeout elapsed) or the
+    /// whole-request deadline passed (slowloris guard).  `mid_request`
+    /// distinguishes a stalled upload (answer 408) from an idle
+    /// keep-alive connection that simply went quiet (close silently).
+    TimedOut { mid_request: bool },
+    /// The bytes were not a well-formed request within bounds (400).
+    Malformed(String),
+    /// Transport failure (peer reset, EOF mid-request, ...).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Closed => write!(f, "connection closed at a request boundary"),
+            ReadError::TimedOut { mid_request: true } => write!(f, "request stalled mid-read"),
+            ReadError::TimedOut { mid_request: false } => write!(f, "idle connection timed out"),
+            ReadError::Malformed(msg) => write!(f, "{msg}"),
+            ReadError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// A blocked read returning `WouldBlock`/`TimedOut` is the socket's
+/// read-timeout firing (platform-dependent which kind).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one `\n`-terminated line of at most `MAX_HEADER_LINE` bytes.
+/// `Ok(None)` = clean EOF before any byte (a request boundary).
+///
+/// The read loop goes through `fill_buf` chunk by chunk so `deadline`
+/// is re-checked *between chunks*: the per-read socket timeout resets
+/// on every arriving byte, so without this a peer trickling one byte
+/// per timeout could hold a bounded-pool worker on a single header
+/// line for hours (the slowloris shape the deadline exists to shed).
+fn read_line_bounded(
+    r: &mut impl BufRead,
+    deadline: Option<Instant>,
+) -> Result<Option<String>, ReadError> {
+    // buf is bounded by MAX_HEADER_LINE + 1: a peer streaming garbage
+    // can never cost unbounded memory here.
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(ReadError::TimedOut { mid_request: !buf.is_empty() });
+        }
+        let avail = match r.fill_buf() {
+            Ok(a) => a,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                return Err(ReadError::TimedOut { mid_request: !buf.is_empty() })
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        };
+        if avail.is_empty() {
+            // EOF: clean only at a line (= request) boundary
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(ReadError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-line",
+            )));
+        }
+        let take = avail.len().min(MAX_HEADER_LINE + 1 - buf.len());
+        match avail[..take].iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                buf.extend_from_slice(&avail[..=pos]);
+                r.consume(pos + 1);
+                break;
+            }
+            None => {
+                buf.extend_from_slice(&avail[..take]);
+                r.consume(take);
+                if buf.len() > MAX_HEADER_LINE {
+                    return Err(ReadError::Malformed(format!(
+                        "header line too long (over {MAX_HEADER_LINE} bytes)"
+                    )));
+                }
+            }
+        }
     }
     if buf.len() > MAX_HEADER_LINE {
-        bail!("header line too long (over {MAX_HEADER_LINE} bytes)");
+        return Err(ReadError::Malformed(format!(
+            "header line too long (over {MAX_HEADER_LINE} bytes)"
+        )));
     }
-    let line = String::from_utf8(buf).context("header line is not UTF-8")?;
-    Ok(line.trim_end_matches(|c| c == '\r' || c == '\n').to_string())
+    let line = String::from_utf8(buf)
+        .map_err(|_| ReadError::Malformed("header line is not UTF-8".into()))?;
+    Ok(Some(line.trim_end_matches(|c| c == '\r' || c == '\n').to_string()))
 }
 
-/// Read one request from the stream.
-pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    let mut reader = BufReader::new(&mut *stream);
-    let request_line = read_line_bounded(&mut reader)?;
+/// Read one request from a persistent reader.  The reader MUST be
+/// reused across calls on a keep-alive connection — a pipelining client
+/// may land bytes of request N+1 in the buffer while N is being read,
+/// and a fresh `BufReader` would silently drop them.
+///
+/// `deadline` bounds the wall-clock time a request may take to arrive
+/// in full, armed from the moment we start waiting for it (the
+/// slowloris guard: per-read socket timeouts alone let a peer trickle
+/// one byte per timeout forever).  An *idle* keep-alive connection
+/// still surfaces as `TimedOut { mid_request: false }` via the shorter
+/// per-read timeout before this deadline can fire.  `Duration::ZERO`
+/// disables the guard.
+pub fn read_request_from(
+    reader: &mut impl BufRead,
+    deadline: Duration,
+) -> Result<HttpRequest, ReadError> {
+    let deadline_at =
+        if deadline.is_zero() { None } else { Some(Instant::now() + deadline) };
+    let expired = || deadline_at.is_some_and(|d| Instant::now() >= d);
+    // --- request line: EOF here is a clean keep-alive close ----------
+    let request_line = match read_line_bounded(reader, deadline_at)? {
+        Some(l) => l,
+        None => return Err(ReadError::Closed),
+    };
     let mut parts = request_line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_string();
-    let path = parts.next().context("request line missing path")?.to_string();
-    let version = parts.next().context("request line missing version")?;
+    let malformed = |msg: &str| ReadError::Malformed(msg.to_string());
+    let method = parts.next().ok_or_else(|| malformed("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| malformed("request line missing path"))?.to_string();
+    let version = parts.next().ok_or_else(|| malformed("request line missing version"))?;
     if !version.starts_with("HTTP/1.") {
-        bail!("unsupported protocol {version:?}");
+        return Err(ReadError::Malformed(format!("unsupported protocol {version:?}")));
     }
+    let version = version.to_string();
+
+    // --- headers ------------------------------------------------------
     let mut headers = BTreeMap::new();
+    // the bound counts header LINES, not distinct names: duplicate
+    // merging below must not let a peer grow one entry without limit
+    let mut header_lines = 0usize;
     loop {
-        let line = read_line_bounded(&mut reader)?;
+        if expired() {
+            return Err(ReadError::TimedOut { mid_request: true });
+        }
+        let line = match read_line_bounded(reader, deadline_at) {
+            Ok(Some(l)) => l,
+            // EOF inside the header block is a broken request, not a boundary
+            Ok(None) => {
+                return Err(ReadError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed inside headers",
+                )))
+            }
+            // any stall past the request line is mid-request
+            Err(ReadError::TimedOut { .. }) => {
+                return Err(ReadError::TimedOut { mid_request: true })
+            }
+            Err(e) => return Err(e),
+        };
         if line.is_empty() {
             break;
         }
-        if headers.len() >= MAX_HEADERS {
-            bail!("too many headers");
+        header_lines += 1;
+        if header_lines > MAX_HEADERS {
+            return Err(malformed("too many headers"));
         }
-        let (name, value) = line.split_once(':').context("malformed header line")?;
-        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        let (name, value) = line.split_once(':').ok_or_else(|| malformed("malformed header line"))?;
+        let name = name.trim().to_ascii_lowercase();
+        if name.is_empty() {
+            return Err(malformed("empty header name"));
+        }
+        match headers.entry(name) {
+            std::collections::btree_map::Entry::Vacant(slot) => {
+                slot.insert(value.trim().to_string());
+            }
+            std::collections::btree_map::Entry::Occupied(mut slot) => {
+                // A repeated *framing* header is rejected outright: two
+                // `Content-Length` values is the classic
+                // request-smuggling shape, and silently keeping the last
+                // one (the old `BTreeMap::insert` behavior) means this
+                // parser and any intermediary can disagree on where the
+                // body ends.  Other repeats are legal for list-valued
+                // fields (Via, X-Forwarded-For from multi-hop proxies) —
+                // combine them per RFC 7230 §3.2.2.
+                let key = slot.key();
+                if key == "content-length" || key == "transfer-encoding" {
+                    return Err(ReadError::Malformed(format!("duplicate header {key:?}")));
+                }
+                let merged = slot.get_mut();
+                merged.push_str(", ");
+                merged.push_str(value.trim());
+            }
+        }
     }
+    if headers.contains_key("transfer-encoding") {
+        // not implemented; ignoring it would desynchronize body framing
+        return Err(malformed("Transfer-Encoding is not supported (use Content-Length)"));
+    }
+
+    // --- body ---------------------------------------------------------
     let len = match headers.get("content-length") {
-        Some(v) => v.parse::<usize>().context("bad Content-Length")?,
         None => 0,
+        Some(v) => {
+            // strict digits only: Rust's usize::parse accepts a leading
+            // '+' which no HTTP grammar does
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(ReadError::Malformed(format!("bad Content-Length {v:?}")));
+            }
+            v.parse::<usize>()
+                .map_err(|_| ReadError::Malformed(format!("Content-Length {v:?} out of range")))?
+        }
     };
     if len > MAX_BODY {
-        bail!("body too large ({len} bytes, max {MAX_BODY})");
+        return Err(ReadError::Malformed(format!("body too large ({len} bytes, max {MAX_BODY})")));
     }
     let mut body = vec![0u8; len];
-    reader.read_exact(&mut body).context("reading request body")?;
-    Ok(HttpRequest { method, path, headers, body })
+    let mut off = 0usize;
+    while off < len {
+        if expired() {
+            return Err(ReadError::TimedOut { mid_request: true });
+        }
+        // chunked reads so the deadline is re-checked while a slow peer
+        // trickles the body in
+        let want = (len - off).min(64 * 1024);
+        match reader.read(&mut body[off..off + want]) {
+            Ok(0) => {
+                return Err(ReadError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed inside the body",
+                )))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return Err(ReadError::TimedOut { mid_request: true }),
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    Ok(HttpRequest { method, path, version, headers, body })
 }
 
-/// Write one response and flush.  Always closes after (the gateway is
-/// one-request-per-connection).
+/// Read one request from the stream (one-shot convenience for tests).
+/// The gateway's keep-alive loop uses [`read_request_from`] with a
+/// persistent `BufReader` instead.
+///
+/// Sets a read timeout on the socket: the 30s deadline below is only
+/// re-checked when reads *return*, so without a socket timeout a peer
+/// that connects and sends nothing would block this thread forever and
+/// the deadline would never be consulted.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut reader = BufReader::new(&mut *stream);
+    read_request_from(&mut reader, Duration::from_secs(30)).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Write one response and flush.  `keep_alive` selects the
+/// `Connection` header: the gateway keeps the socket open only when the
+/// request allowed it AND the server isn't shutting down.
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
     content_type: &str,
     body: &[u8],
+    keep_alive: bool,
 ) -> std::io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -128,8 +368,139 @@ pub fn infer_body(tier: &str, img: &[u8]) -> String {
     body
 }
 
-/// Blocking one-shot client: returns (status, body).  Used by the
-/// integration tests, the pipeline bench and `examples/serve_requests`.
+/// `POST /v1/infer_batch` body: NDJSON, one `infer_body` line per
+/// (tier, image) pair.
+pub fn infer_batch_body(lines: &[(&str, &[u8])]) -> String {
+    let mut body = String::new();
+    for (tier, img) in lines {
+        body.push_str(&infer_body(tier, img));
+        body.push('\n');
+    }
+    body
+}
+
+/// Parse a response head + `Content-Length` body from a persistent
+/// reader.  Returns (status, body).
+fn read_response_from(
+    reader: &mut impl BufRead,
+) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
+    let status_line = match read_line_bounded(reader, None).map_err(|e| anyhow::anyhow!("{e}"))? {
+        Some(l) => l,
+        None => bail!("connection closed before a response arrived"),
+    };
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("malformed status line")?
+        .parse()
+        .context("non-numeric status")?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = match read_line_bounded(reader, None).map_err(|e| anyhow::anyhow!("{e}"))? {
+            Some(l) => l,
+            None => bail!("connection closed inside response headers"),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').context("malformed response header")?;
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    let len = headers
+        .get("content-length")
+        .map(|v| v.parse::<usize>().context("bad response Content-Length"))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        bail!("response body too large ({len} bytes)");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("reading response body")?;
+    Ok((status, headers, body))
+}
+
+/// Blocking **persistent-connection** client: many requests over one
+/// TCP connection (HTTP/1.1 keep-alive).  Used by the keep-alive e2e
+/// tests and the pipeline bench's connection-reuse measurements.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    host: String,
+    closed: bool,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning client stream")?);
+        Ok(Client { stream, reader, host: addr.to_string(), closed: false })
+    }
+
+    /// The server announced `Connection: close` (or the transport died):
+    /// this client can issue no further requests.
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Raw socket access (tests use it to inject malformed bytes
+    /// mid-stream or to stall deliberately).
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Send one request on the persistent connection and read the full
+    /// response.  Returns (status, body).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        self.request_typed(method, path, "application/json", body)
+    }
+
+    /// Like [`Client::request`] with an explicit request content type
+    /// (the NDJSON batch endpoint).
+    pub fn request_typed(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        if self.closed {
+            bail!("connection was closed by the server");
+        }
+        let payload = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\n\r\n{payload}",
+            self.host,
+            payload.len()
+        );
+        let sent = self.stream.write_all(req.as_bytes()).and_then(|_| self.stream.flush());
+        if let Err(e) = sent {
+            self.closed = true;
+            return Err(e).context("sending request");
+        }
+        let (status, headers, resp_body) = match read_response_from(&mut self.reader) {
+            Ok(r) => r,
+            Err(e) => {
+                self.closed = true;
+                return Err(e);
+            }
+        };
+        if headers.get("connection").map(String::as_str) == Some("close") {
+            self.closed = true;
+        }
+        Ok((status, String::from_utf8_lossy(&resp_body).into_owned()))
+    }
+}
+
+/// Blocking one-shot client: returns (status, body).  Sends
+/// `Connection: close` — one request per connection, the baseline the
+/// keep-alive bench compares against.
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     let payload = body.unwrap_or("");
@@ -186,8 +557,10 @@ mod tests {
         let req = roundtrip(&raw).unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/infer");
+        assert_eq!(req.version, "HTTP/1.1");
         assert_eq!(req.header("content-type"), Some("application/json"));
         assert_eq!(req.body_str().unwrap(), body);
+        assert!(req.wants_keep_alive());
     }
 
     #[test]
@@ -201,13 +574,165 @@ mod tests {
     }
 
     #[test]
+    fn keep_alive_semantics_per_version() {
+        let req = roundtrip("GET /x HTTP/1.1\r\n\r\n").unwrap();
+        assert!(req.wants_keep_alive(), "1.1 defaults to keep-alive");
+        let req = roundtrip("GET /x HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.wants_keep_alive());
+        let req = roundtrip("GET /x HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.wants_keep_alive(), "1.0 defaults to close");
+        let req = roundtrip("GET /x HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.wants_keep_alive());
+        // Connection is a token LIST: close buried in a list (or
+        // produced by this parser's own duplicate-header merging) must
+        // still close — whole-string comparison would miss it
+        let req = roundtrip("GET /x HTTP/1.1\r\nConnection: close, TE\r\n\r\n").unwrap();
+        assert!(!req.wants_keep_alive(), "close inside a token list");
+        let req =
+            roundtrip("GET /x HTTP/1.1\r\nConnection: close\r\nConnection: close\r\n\r\n")
+                .unwrap();
+        assert!(!req.wants_keep_alive(), "merged duplicate close, close");
+        let req = roundtrip("GET /x HTTP/1.0\r\nConnection: keep-alive, TE\r\n\r\n").unwrap();
+        assert!(req.wants_keep_alive());
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(roundtrip("not http at all\r\n\r\n").is_err());
         assert!(roundtrip("GET /x SPDY/99\r\n\r\n").is_err());
         assert!(roundtrip("GET /x HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
         assert!(roundtrip("POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
-        // body shorter than Content-Length -> read_exact fails at EOF
+        // body shorter than Content-Length -> UnexpectedEof at close
         assert!(roundtrip("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn rejects_smuggling_shapes() {
+        // duplicate Content-Length: the old BTreeMap::insert silently
+        // kept the second value
+        let err = roundtrip(
+            "POST /x HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 0\r\n\r\nabc",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // non-framing repeats are NOT smuggling: they combine per RFC
+        // 7230 list semantics (what multi-hop proxies emit for Via /
+        // X-Forwarded-For) instead of 400ing the whole request
+        let req = roundtrip("GET /x HTTP/1.1\r\nVia: 1.1 a\r\nVia: 1.1 b\r\n\r\n").unwrap();
+        assert_eq!(req.header("via"), Some("1.1 a, 1.1 b"));
+        // a leading '+' parses under usize::parse but is not HTTP
+        let err =
+            roundtrip("POST /x HTTP/1.1\r\nContent-Length: +3\r\n\r\nabc").unwrap_err();
+        assert!(err.to_string().contains("Content-Length"), "{err}");
+        // signs, spaces, hex: all refused
+        assert!(roundtrip("POST /x HTTP/1.1\r\nContent-Length: -3\r\n\r\n").is_err());
+        assert!(roundtrip("POST /x HTTP/1.1\r\nContent-Length: 0x3\r\n\r\n").is_err());
+        // Transfer-Encoding would desynchronize framing if ignored
+        let err = roundtrip(
+            "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("Transfer-Encoding"), "{err}");
+    }
+
+    #[test]
+    fn repeated_header_lines_stay_bounded() {
+        // duplicate merging must not bypass MAX_HEADERS: the bound is
+        // on header LINES, so one endlessly-repeated name still trips it
+        let mut raw = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            raw.push_str(&format!("Via: 1.1 hop{i}\r\n"));
+        }
+        raw.push_str("\r\n");
+        let err = roundtrip(&raw).unwrap_err();
+        assert!(err.to_string().contains("too many headers"), "{err}");
+    }
+
+    #[test]
+    fn persistent_reader_serves_pipelined_requests() {
+        // two requests land in one write: the shared BufReader must hand
+        // back both, in order, without dropping buffered bytes
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"GET /first HTTP/1.1\r\n\r\nPOST /second HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi",
+            )
+            .unwrap();
+        });
+        let (server_side, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(server_side);
+        let r1 = read_request_from(&mut reader, Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.path, "/first");
+        let r2 = read_request_from(&mut reader, Duration::from_secs(5)).unwrap();
+        assert_eq!(r2.path, "/second");
+        assert_eq!(r2.body_str().unwrap(), "hi");
+        // after the peer closes: a clean boundary EOF
+        client.join().unwrap();
+        match read_request_from(&mut reader, Duration::from_secs(5)) {
+            Err(ReadError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slowloris_trickle_hits_request_deadline() {
+        // One byte per 10ms, never a newline: every byte resets the
+        // per-read socket timeout (200ms here), so only the
+        // whole-request deadline can shed this peer — and it must do so
+        // even though the trickle starts on the REQUEST LINE itself.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            for b in b"GET /never-finishes".iter().cycle().take(60) {
+                if s.write_all(&[*b]).is_err() {
+                    break; // server hung up (expected)
+                }
+                s.flush().ok();
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        });
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        let mut reader = BufReader::new(server_side);
+        let t0 = Instant::now();
+        match read_request_from(&mut reader, Duration::from_millis(120)) {
+            Err(ReadError::TimedOut { mid_request: true }) => {}
+            other => panic!("expected deadline timeout, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(600),
+            "deadline fired late: {:?}",
+            t0.elapsed()
+        );
+        drop(reader);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn idle_timeout_vs_mid_request_stall() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut reader = BufReader::new(server_side);
+        // nothing sent at all: idle boundary timeout
+        match read_request_from(&mut reader, Duration::from_secs(5)) {
+            Err(ReadError::TimedOut { mid_request: false }) => {}
+            other => panic!("expected idle timeout, got {other:?}"),
+        }
+        // a partial request line then silence: mid-request stall
+        let mut w = client.try_clone().unwrap();
+        w.write_all(b"GET /slow").unwrap();
+        w.flush().unwrap();
+        match read_request_from(&mut reader, Duration::from_secs(5)) {
+            Err(ReadError::TimedOut { mid_request: true }) => {}
+            other => panic!("expected mid-request stall, got {other:?}"),
+        }
+        drop(client);
     }
 
     #[test]
@@ -219,11 +744,52 @@ mod tests {
             let req = read_request(&mut s).unwrap();
             assert_eq!(req.method, "POST");
             assert_eq!(req.body_str().unwrap(), "{\"x\":1}");
-            write_response(&mut s, 200, "OK", "application/json", b"{\"ok\":true}").unwrap();
+            write_response(&mut s, 200, "OK", "application/json", b"{\"ok\":true}", false)
+                .unwrap();
         });
         let (status, body) = request(&addr, "POST", "/echo", Some("{\"x\":1}")).unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, "{\"ok\":true}");
         server.join().unwrap();
+    }
+
+    #[test]
+    fn persistent_client_two_requests_one_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // ONE accept: both requests must arrive on the same socket
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            for i in 0..2u32 {
+                let req = read_request_from(&mut reader, Duration::from_secs(5)).unwrap();
+                assert!(req.wants_keep_alive());
+                let body = format!("{{\"n\":{i}}}");
+                write_response(&mut writer, 200, "OK", "application/json", body.as_bytes(), i == 0)
+                    .unwrap();
+            }
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let (status, body) = c.request("GET", "/a", None).unwrap();
+        assert_eq!((status, body.as_str()), (200, "{\"n\":0}"));
+        assert!(!c.is_closed());
+        let (status, body) = c.request("GET", "/b", None).unwrap();
+        assert_eq!((status, body.as_str()), (200, "{\"n\":1}"));
+        // the second response said Connection: close
+        assert!(c.is_closed());
+        assert!(c.request("GET", "/c", None).is_err());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn infer_batch_body_is_one_line_per_image() {
+        let a = [1u8, 2];
+        let b = [3u8];
+        let body = infer_batch_body(&[("gold", &a[..]), ("batch", &b[..])]);
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], infer_body("gold", &a));
+        assert_eq!(lines[1], infer_body("batch", &b));
     }
 }

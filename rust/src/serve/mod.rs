@@ -1,9 +1,11 @@
 //! The network serving subsystem (DESIGN.md §10): HTTP gateway →
 //! QoS-tiered admission → dynamic precision governor.
 //!
-//! * [`gateway`] — `std::net` HTTP/1.1 JSON front-end (`POST /v1/infer`,
-//!   `GET /metrics`, `GET /healthz`) with explicit `429 Busy`
-//!   backpressure;
+//! * [`gateway`] — `std::net` HTTP/1.1 front-end (`POST /v1/infer`,
+//!   NDJSON `POST /v1/infer_batch`, `GET /metrics`, `GET /healthz`)
+//!   with persistent connections (a bounded connection-worker pool
+//!   runs a keep-alive loop per socket) and explicit `429 Busy`
+//!   backpressure at both the connection and the tier-queue level;
 //! * [`qos`] — per-request SLO tiers (`gold`/`silver`/`batch`), bounded
 //!   per-tier queues and deadline-aware single-tier batch coalescing
 //!   (hard window from first enqueue);
@@ -19,6 +21,6 @@ pub mod governor;
 pub mod http;
 pub mod qos;
 
-pub use gateway::Gateway;
+pub use gateway::{ConnStats, Gateway};
 pub use governor::{Governor, GovernorConfig, GovernorSnapshot};
 pub use qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};

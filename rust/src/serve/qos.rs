@@ -92,6 +92,9 @@ impl Tier {
 pub enum SubmitError {
     /// The tier's bounded queue is at capacity.
     Busy { tier: Tier, cap: usize },
+    /// The gateway's connection pool + accept backlog are at capacity —
+    /// the connection-level twin of `Busy` (both map to HTTP 429).
+    Overloaded { max_conns: usize },
     /// The server is shutting down (or already shut down).
     ShutDown,
 }
@@ -101,6 +104,9 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Busy { tier, cap } => {
                 write!(f, "{} tier queue is full ({cap} pending) — busy, retry later", tier.name())
+            }
+            SubmitError::Overloaded { max_conns } => {
+                write!(f, "connection limit reached ({max_conns} workers + backlog) — busy")
             }
             SubmitError::ShutDown => write!(f, "server is shut down"),
         }
@@ -311,6 +317,8 @@ mod tests {
         let err = q.push(Tier::Gold, 3).unwrap_err();
         assert_eq!(err, SubmitError::Busy { tier: Tier::Gold, cap: 2 });
         assert!(err.to_string().contains("busy"));
+        // the connection-level twin reads as busy too (both are 429s)
+        assert!(SubmitError::Overloaded { max_conns: 4 }.to_string().contains("busy"));
         assert_eq!(q.rejected(), [1, 0, 0]);
         // other tiers are bounded independently
         q.push(Tier::Batch, 4).unwrap();

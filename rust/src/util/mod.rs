@@ -27,12 +27,18 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+///
+/// NaN-safe by construction: `total_cmp` is a total order (NaN sorts
+/// above +inf), so one non-finite sample in a metrics ring can never
+/// panic the metrics path the way `partial_cmp().unwrap()` did — the
+/// gateway additionally scrubs non-finite results before they reach
+/// the `/metrics` payload.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let idx = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[idx.min(v.len() - 1)]
 }
@@ -54,5 +60,18 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_sample() {
+        // regression: a single NaN latency sample in a ring used to
+        // panic `sort_by(partial_cmp().unwrap())`; with total_cmp the
+        // NaN sorts above +inf and the low/mid percentiles stay sane
+        let xs = [5.0, 1.0, f64::NAN, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 4.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // all-NaN never panics either
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 }

@@ -1,0 +1,351 @@
+//! End-to-end tests for the persistent-connection engine: pipelined
+//! sequential requests on one socket (bit-identical to the
+//! one-connection-per-request path), NDJSON batch inference, malformed
+//! mid-stream requests, read-timeout shedding, connection-limit 429s
+//! and drain-on-shutdown.  Everything runs on `QGraph::synthetic()` —
+//! no artifacts needed.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::QGraph;
+use osa_hcim::serve::http::{self, Client};
+use osa_hcim::serve::{Gateway, Tier};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn synth_image(seed: u64) -> Vec<u8> {
+    let mut g = osa_hcim::util::prng::SplitMix64::new(seed);
+    (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+fn infer_body(tier: &str, seed: u64) -> String {
+    http::infer_body(tier, &synth_image(seed))
+}
+
+fn dcim_config() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim; // deterministic logits: bit-identity is testable
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 500;
+    cfg
+}
+
+fn start_gateway(cfg: &SystemConfig) -> (Gateway, String) {
+    let gw = Gateway::start(cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    (gw, addr)
+}
+
+/// Extract (pred, logits-bits) — the deterministic part of an infer
+/// response (id / latency_us legitimately differ between runs).
+fn pred_and_logits(body: &str) -> (usize, Vec<u64>) {
+    let doc = parse(body).unwrap();
+    let pred = doc.get("pred").and_then(JsonValue::as_usize).unwrap();
+    let logits: Vec<u64> = doc
+        .get("logits")
+        .and_then(JsonValue::as_array)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap().to_bits())
+        .collect();
+    (pred, logits)
+}
+
+/// Acceptance: >= 2 requests served over ONE TCP connection, each
+/// bit-identical to the same request over its own connection.
+#[test]
+fn keepalive_serves_pipelined_requests_bit_identical() {
+    let (gw, addr) = start_gateway(&dcim_config());
+
+    // baseline: one connection per request (Connection: close)
+    let mut baseline = Vec::new();
+    for seed in [11u64, 22, 33] {
+        let (status, body) =
+            http::request(&addr, "POST", "/v1/infer", Some(&infer_body("gold", seed))).unwrap();
+        assert_eq!(status, 200, "{body}");
+        baseline.push(pred_and_logits(&body));
+    }
+
+    // the same three requests over one persistent connection
+    let mut c = Client::connect(&addr).unwrap();
+    for (i, seed) in [11u64, 22, 33].iter().enumerate() {
+        let (status, body) =
+            c.request("POST", "/v1/infer", Some(&infer_body("gold", *seed))).unwrap();
+        assert_eq!(status, 200, "{body}");
+        assert!(!c.is_closed(), "server closed a keep-alive session early");
+        assert_eq!(
+            pred_and_logits(&body),
+            baseline[i],
+            "request {i} differs between keep-alive and per-connection serving"
+        );
+    }
+
+    // the reuse is visible in /metrics: fewer connections than requests
+    let (status, body) = c.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let m = parse(&body).unwrap();
+    let conns = m.get("connections").expect("connections block in /metrics");
+    let accepted = conns.get("accepted").and_then(JsonValue::as_i64).unwrap();
+    let requests = conns.get("http_requests").and_then(JsonValue::as_i64).unwrap();
+    assert!(requests >= accepted + 3, "no connection reuse: {accepted} conns / {requests} reqs");
+    assert!(
+        conns.get("reuse_rate").and_then(JsonValue::as_f64).unwrap() > 0.0,
+        "reuse_rate not reported"
+    );
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 6);
+    assert_eq!(metrics.errors, 0);
+}
+
+/// A malformed request mid-session answers 400 with `Connection:
+/// close` and the socket actually closes (no half-dead session).
+#[test]
+fn malformed_mid_stream_closes_cleanly() {
+    let (gw, addr) = start_gateway(&dcim_config());
+    let mut c = Client::connect(&addr).unwrap();
+    let (status, _) = c.request("POST", "/v1/infer", Some(&infer_body("silver", 1))).unwrap();
+    assert_eq!(status, 200);
+
+    // inject a framing violation on the live session: duplicate
+    // Content-Length is the request-smuggling shape
+    c.stream_mut()
+        .write_all(b"POST /v1/infer HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 0\r\n\r\nabc")
+        .unwrap();
+    c.stream_mut().flush().unwrap();
+    c.stream_mut().set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut raw = String::new();
+    // read_to_string returning proves the server closed the socket
+    c.stream_mut().read_to_string(&mut raw).unwrap();
+    assert!(raw.contains("400 Bad Request"), "{raw}");
+    assert!(raw.contains("Connection: close"), "{raw}");
+    assert!(raw.contains("duplicate"), "{raw}");
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.errors, 0, "a parse error must never reach the workers");
+}
+
+/// Strict Content-Length: a leading '+' (which `usize::parse` accepts)
+/// is a 400, not a silently mis-framed body.
+#[test]
+fn nondigit_content_length_rejected() {
+    let (gw, addr) = start_gateway(&dcim_config());
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"POST /v1/infer HTTP/1.1\r\nContent-Length: +3\r\n\r\nabc").unwrap();
+    s.flush().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.contains("400 Bad Request"), "{raw}");
+    assert!(raw.contains("Content-Length"), "{raw}");
+    gw.shutdown();
+}
+
+/// The read timeout sheds stalled peers: a half-sent request gets a
+/// 408 and the socket closes; an idle keep-alive session is closed
+/// silently.
+#[test]
+fn read_timeout_kicks_stalled_peer() {
+    let mut cfg = dcim_config();
+    cfg.read_timeout_ms = 150;
+    let (gw, addr) = start_gateway(&cfg);
+
+    // stalled mid-request: request line sent, then silence
+    let mut stalled = TcpStream::connect(&addr).unwrap();
+    stalled.write_all(b"POST /v1/infer HTTP/1.1\r\n").unwrap();
+    stalled.flush().unwrap();
+    stalled.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let t0 = Instant::now();
+    let mut raw = String::new();
+    stalled.read_to_string(&mut raw).unwrap();
+    assert!(raw.contains("408"), "stalled peer answer: {raw}");
+    assert!(t0.elapsed() < Duration::from_secs(5), "timeout took {:?}", t0.elapsed());
+
+    // idle at a request boundary: closed silently (clean EOF, no 408)
+    let mut idle = TcpStream::connect(&addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut raw = String::new();
+    idle.read_to_string(&mut raw).unwrap();
+    assert!(raw.is_empty(), "idle close must be silent, got: {raw}");
+
+    // a well-behaved request still works afterwards
+    let (status, _) =
+        http::request(&addr, "POST", "/v1/infer", Some(&infer_body("gold", 5))).unwrap();
+    assert_eq!(status, 200);
+    gw.shutdown();
+}
+
+/// Graceful drain: a request already inside the coordinator when
+/// shutdown starts is answered, not dropped.
+#[test]
+fn drain_on_shutdown_finishes_in_flight_requests() {
+    let mut cfg = dcim_config();
+    // a lone batch-tier request coalesces for its full 100ms window —
+    // plenty of time for shutdown to start while it is in flight
+    cfg.batch_timeout_us = 100_000;
+    cfg.max_batch = 8;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let client = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.request("POST", "/v1/infer", Some(&infer_body("batch", 7))).unwrap()
+        })
+    };
+    // Wait until the POST is demonstrably in flight before shutting
+    // down.  `connections.http_requests` increments the moment a
+    // request is read off the socket (before dispatch), and each of our
+    // /metrics polls adds exactly one more — so the counter exceeding
+    // the poll count proves the POST has been read and will therefore
+    // be drained, not dropped.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut polls = 0i64;
+    loop {
+        polls += 1;
+        let (status, body) = http::request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let m = parse(&body).unwrap();
+        let reqs = m
+            .get("connections")
+            .and_then(|c| c.get("http_requests"))
+            .and_then(JsonValue::as_i64)
+            .unwrap();
+        if reqs > polls {
+            break;
+        }
+        assert!(Instant::now() < deadline, "the POST was never read by the gateway");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let metrics = gw.shutdown();
+    let (status, body) = client.join().unwrap();
+    assert_eq!(status, 200, "in-flight request was dropped by shutdown: {body}");
+    let (pred, logits) = pred_and_logits(&body);
+    assert!(pred < 10);
+    assert_eq!(logits.len(), 10);
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.errors, 0);
+}
+
+/// NDJSON batch inference: per-line tiers, per-line errors, input
+/// order, and bit-identity with the single-request path.
+#[test]
+fn infer_batch_ndjson_roundtrip() {
+    let (gw, addr) = start_gateway(&dcim_config());
+
+    // singles first (fresh connections) for the identity baseline
+    let mut baseline = Vec::new();
+    for (tier, seed) in [("gold", 100u64), ("silver", 200), ("batch", 300)] {
+        let (status, body) =
+            http::request(&addr, "POST", "/v1/infer", Some(&infer_body(tier, seed))).unwrap();
+        assert_eq!(status, 200, "{body}");
+        baseline.push(pred_and_logits(&body));
+    }
+
+    // NDJSON: explicit gold, an interior blank line (skipped but the
+    // numbering must not shift), tier-less (defaults to silver), a
+    // broken line, then batch — all in one request on one connection
+    let img_silver = synth_image(200);
+    let mut ndjson = String::new();
+    ndjson.push_str(&infer_body("gold", 100)); // input line 0
+    ndjson.push_str("\n\n"); // input line 1: blank
+    ndjson.push_str(&http::infer_body("silver", &img_silver).replace("\"tier\":\"silver\",", ""));
+    ndjson.push('\n'); // input line 2
+    ndjson.push_str("{\"tier\":\"bronze\",\"image\":[]}\n"); // input line 3
+    ndjson.push_str(&infer_body("batch", 300)); // input line 4
+    ndjson.push('\n');
+
+    let mut c = Client::connect(&addr).unwrap();
+    let (status, body) = c
+        .request_typed("POST", "/v1/infer_batch", "application/x-ndjson", Some(&ndjson))
+        .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let lines: Vec<&str> = body.lines().collect();
+    assert_eq!(lines.len(), 4, "one NDJSON result per non-blank input line: {body}");
+
+    // (response position, original input line, tier, baseline index)
+    let expected = [(0usize, 0usize, "gold", 0usize), (1, 2, "silver", 1), (3, 4, "batch", 2)];
+    for (pos, input_line, expect_tier, base_idx) in expected {
+        let doc = parse(lines[pos]).unwrap();
+        assert_eq!(
+            doc.get("line").and_then(JsonValue::as_usize),
+            Some(input_line),
+            "result numbering must use the client's own line numbers: {}",
+            lines[pos]
+        );
+        assert_eq!(doc.get("tier").and_then(JsonValue::as_str), Some(expect_tier));
+        assert_eq!(
+            pred_and_logits(lines[pos]),
+            baseline[base_idx],
+            "batch line {input_line} differs from the single-request path"
+        );
+    }
+    let broken = parse(lines[2]).unwrap();
+    assert_eq!(broken.get("line").and_then(JsonValue::as_usize), Some(3));
+    assert!(
+        broken.get("error").and_then(JsonValue::as_str).unwrap().contains("bronze"),
+        "per-line error missing: {}",
+        lines[2]
+    );
+
+    // an empty body is a request-level 400
+    let (status, _) = c
+        .request_typed("POST", "/v1/infer_batch", "application/x-ndjson", Some("\n\n"))
+        .unwrap();
+    assert_eq!(status, 400);
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 6, "3 singles + 3 valid batch lines");
+    assert_eq!(metrics.tier(Tier::Silver).requests, 2);
+    assert_eq!(metrics.errors, 0);
+}
+
+/// Connection admission: with the worker pool and backlog full, a new
+/// connection is answered 429 and closed; a queued connection is still
+/// served once capacity frees up.
+#[test]
+fn connection_limit_answers_429_then_recovers() {
+    let mut cfg = dcim_config();
+    cfg.max_conns = 1; // one worker + one backlog slot
+    let (gw, addr) = start_gateway(&cfg);
+
+    // hold the lone worker with an idle keep-alive session
+    let mut held = Client::connect(&addr).unwrap();
+    let (status, _) = held.request("POST", "/v1/infer", Some(&infer_body("gold", 1))).unwrap();
+    assert_eq!(status, 200);
+
+    // fills the single backlog slot (request queued but unserved)
+    let mut queued = TcpStream::connect(&addr).unwrap();
+    let body = infer_body("silver", 2);
+    let req = format!(
+        "POST /v1/infer HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    queued.write_all(req.as_bytes()).unwrap();
+    queued.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let accept queue it
+
+    // overflow: answered 429 at admission without reading a request
+    let mut over = TcpStream::connect(&addr).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut raw = String::new();
+    over.read_to_string(&mut raw).unwrap();
+    assert!(raw.contains("429"), "overflow connection got: {raw}");
+    assert!(raw.contains("busy"), "{raw}");
+
+    // free the worker: the queued connection must now be served
+    drop(held);
+    queued.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut raw = String::new();
+    queued.read_to_string(&mut raw).unwrap();
+    assert!(raw.contains("200 OK"), "queued connection starved: {raw}");
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 2);
+}

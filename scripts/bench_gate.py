@@ -11,6 +11,10 @@ Two kinds of checks:
 
 * ``--metric KEY`` (repeatable): higher-is-better throughput metrics.
   FAIL when ``median(runs) < baseline * (1 - tolerance)``.
+* ``--warn-metric KEY`` (repeatable): same floor math, but a miss is
+  reported WARN without failing the gate — for metrics that shared
+  runners can sink with no code change (connection-reuse rate under
+  noisy-neighbor accept latency, NDJSON batch throughput).
 * ``--check-speedup KEY --speedup-floor X``: a machine-relative check
   (e.g. the engine thread-scaling curve, ``gemm_speedup_4t``), enforced
   only when the runner reports at least ``--min-cores`` cores in the
@@ -59,6 +63,12 @@ def main() -> int:
         help="higher-is-better metric key to gate (repeatable)",
     )
     p.add_argument(
+        "--warn-metric",
+        action="append",
+        default=[],
+        help="higher-is-better metric key to report without failing (repeatable)",
+    )
+    p.add_argument(
         "--tolerance",
         type=float,
         default=0.25,
@@ -86,19 +96,25 @@ def main() -> int:
     failures: list[str] = []
 
     print(f"bench-gate: {len(runs)} run(s) vs {args.baseline} (tolerance {args.tolerance:.0%})")
-    for key in args.metric:
+    for key, warn_only in [(k, False) for k in args.metric] + [
+        (k, True) for k in args.warn_metric
+    ]:
         med = median_of(runs, key)
         base = baseline.get(key)
         if med is None:
+            # a warn-only metric that is absent is still a hard failure:
+            # the bench stopped emitting it, which is a code bug, not
+            # runner noise
             failures.append(f"{key}: missing from every run")
             continue
         if not isinstance(base, (int, float)):
             failures.append(f"{key}: missing from baseline {args.baseline}")
             continue
         floor = base * (1.0 - args.tolerance)
-        verdict = "OK" if med >= floor else "REGRESSION"
+        below = med < floor
+        verdict = "OK" if not below else ("WARN" if warn_only else "REGRESSION")
         print(f"  {key}: median {med:.2f} vs baseline {base:.2f} (floor {floor:.2f}) {verdict}")
-        if med < floor:
+        if below and not warn_only:
             failures.append(f"{key}: median {med:.2f} < floor {floor:.2f} (baseline {base:.2f})")
 
     if args.check_speedup:
