@@ -17,10 +17,10 @@
 
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
+use osa_hcim::engine::{Backend, Engine};
 use osa_hcim::figures::FigCtx;
 use osa_hcim::nn::{accuracy, Executor};
-use osa_hcim::runtime::{PjrtGemm, Runtime};
-use osa_hcim::sched::{GemmEngine, MacroGemm};
+use osa_hcim::runtime::Runtime;
 use osa_hcim::spec::TILE_M;
 use osa_hcim::util::prng::SplitMix64;
 use std::sync::Arc;
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         "[1] artifacts OK: {} train / {} test images, {} conv layers, float acc {:.2}%",
         ctx.ds.train_n(),
         ctx.ds.test_n(),
-        ctx.graph.convs.len(),
+        ctx.graph().convs.len(),
         ctx.golden.float_acc * 100.0
     );
 
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. native DCIM vs python golden ----------------------------------
     let n_golden = ctx.golden.golden_n;
     let (imgs, labels) = ctx.ds.test_batch(0, n_golden);
-    let mut exec = Executor::new(&ctx.graph, MacroGemm::with_mode(CimMode::Dcim));
+    let mut exec = Executor::new(ctx.graph(), ctx.backend(CimMode::Dcim)?);
     let (logits, _) = exec.forward(imgs, labels.len())?;
     let mut max_rel = 0.0f32;
     for (a, b) in logits.iter().zip(&ctx.golden.dcim_logits) {
@@ -87,21 +87,34 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(mism == 0, "{mism}/{TILE_M} rows mismatch between PJRT and native");
     println!("[4] PJRT hybrid tile (Pallas L1) == native simulator, bit-exact on {TILE_M} rows");
 
-    // sanity: the PjrtGemm engine drives a whole GEMM through the artifact
-    let mut pjrt_gemm = PjrtGemm::new(&rt, CimMode::Hcim, cfg.thresholds.clone())?;
-    let r = pjrt_gemm.gemm(&a[..4 * sp.cols], 4, sp.cols, &w, sp.hmus, 0)?;
-    println!("    PjrtGemm engine OK ({} macro ops accounted)", r.account.macro_ops);
+    // sanity: the registry's pjrt backend drives a whole GEMM through the
+    // artifact runtime (its own Runtime instance, selected by name)
+    let mut pjrt_cfg = cfg.clone();
+    pjrt_cfg.mode = CimMode::Hcim;
+    pjrt_cfg.backend = "pjrt".to_string();
+    match Engine::builder().config(pjrt_cfg).graph(ctx.engine.graph().clone()).build() {
+        Ok(pjrt_engine) => {
+            let mut pjrt_gemm = pjrt_engine.backend()?;
+            let r = pjrt_gemm.gemm(&a[..4 * sp.cols], 4, sp.cols, &w, sp.hmus, 0)?;
+            println!(
+                "    pjrt backend OK ({} macro ops accounted)",
+                r.account.macro_ops
+            );
+        }
+        Err(e) => println!("    pjrt backend skipped ({e:#})"),
+    }
 
     // ---- 5. serve the test set through the coordinator (OSA) --------------
-    // DCIM reference efficiency for the ratio (before moving the graph)
+    // DCIM reference efficiency for the ratio
     let dcim = ctx.eval_mode(CimMode::Dcim, 0, &[], 64)?;
     let serve_n = 256.min(n_all);
-    let graph = Arc::new(ctx.graph);
+    let graph = ctx.engine.graph().clone();
     // the closed-loop burst below submits everything up front: size the
     // admission bound so it exercises batching, not backpressure
     let mut serve_cfg = cfg.clone();
     serve_cfg.queue_cap = serve_cfg.queue_cap.max(serve_n);
-    let server = Server::start(&serve_cfg, graph.clone())?;
+    let engine = Engine::builder().config(serve_cfg).graph(graph).build()?;
+    let server = Server::with_engine(Arc::new(engine))?;
     let mut pending = Vec::with_capacity(serve_n);
     for i in 0..serve_n {
         let (img, _) = ctx.ds.test_batch(i, 1);

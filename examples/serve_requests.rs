@@ -33,8 +33,9 @@ fn main() -> anyhow::Result<()> {
     let n = n.min(ctx.ds.test_n());
     // open-loop demo: admit the whole run even if the pool lags
     cfg.queue_cap = cfg.queue_cap.max(n);
-    let graph = Arc::new(ctx.graph);
-    let server = Server::start(&cfg, graph)?;
+    let graph = ctx.engine.graph().clone();
+    let engine = osa_hcim::engine::Engine::builder().config(cfg.clone()).graph(graph).build()?;
+    let server = Server::with_engine(Arc::new(engine))?;
     println!(
         "serving {n} requests at ~{rps:.0} req/s (workers={}, max_batch={}, mode={})",
         cfg.workers,

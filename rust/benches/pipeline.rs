@@ -17,11 +17,11 @@
 use osa_hcim::benchkit::Bench;
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
+use osa_hcim::engine::{Backend, Engine};
 use osa_hcim::io::json::{arr, num, obj, s, JsonValue};
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::{Executor, QGraph};
-use osa_hcim::sched::exec::{auto_threads, ExecPool};
-use osa_hcim::sched::{GemmEngine, MacroGemm};
+use osa_hcim::sched::exec::auto_threads;
 use osa_hcim::serve::{http, Gateway, Tier};
 use osa_hcim::util::prng::SplitMix64;
 use std::sync::Arc;
@@ -47,6 +47,12 @@ fn main() {
         let img: Vec<u8> = (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect();
         (QGraph::synthetic(), img)
     };
+    let graph = Arc::new(graph);
+
+    // One engine per bench section; every backend below comes out of a
+    // registry via the builder — no hand-wired MacroGemm anywhere.
+    let engine =
+        Engine::builder().config(cfg.clone()).graph(graph.clone()).build().unwrap();
 
     // --- tiled GEMM per mode (stage-2 layer shape: K=288, N=32) ---------
     let (m, k, n) = (256usize, 288usize, 32usize);
@@ -55,14 +61,14 @@ fn main() {
     let w: Vec<i32> = (0..n * k).map(|_| rng.next_range_i32(-128, 128)).collect();
     println!("# pipeline — tiled GEMM [{m}x{k}] x [{n}x{k}] through the macro datapath");
     for mode in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa, CimMode::Acim] {
-        let mut gemm = MacroGemm::with_mode(mode);
+        let mut gemm = engine.backend_for_mode(mode).unwrap();
         Bench::new(&format!("gemm/{}", mode.name()))
             .target(Duration::from_secs(3))
             .items((m * n * k) as f64)
             .run(|| gemm.gemm(&a, m, k, &w, n, 0).unwrap());
     }
     for mode in [CimMode::Pg, CimMode::Drq] {
-        let mut gemm = MacroGemm::with_mode(mode);
+        let mut gemm = engine.backend_for_mode(mode).unwrap();
         Bench::new(&format!("gemm/{}", mode.name()))
             .target(Duration::from_secs(1))
             .items((m * n * k) as f64)
@@ -80,7 +86,13 @@ fn main() {
     }
     let mut scale_rates: Vec<f64> = Vec::new();
     for &t in &scale_threads {
-        let mut gemm = MacroGemm::with_mode(CimMode::Osa).with_pool(ExecPool::new(t));
+        let sized = Engine::builder()
+            .config(cfg.clone())
+            .graph(graph.clone())
+            .threads(t)
+            .build()
+            .unwrap();
+        let mut gemm = sized.backend_for_mode(CimMode::Osa).unwrap();
         gemm.gemm(&a, m, k, &w, n, 0).unwrap(); // build the plan once
         let stats = Bench::new(&format!("gemm/osa_threads_{t}"))
             .target(Duration::from_secs(2))
@@ -103,17 +115,19 @@ fn main() {
 
     // --- plan/execute split: cold packing vs warm cached execution -------
     println!("\n# pipeline — plan/execute split (same GEMM, fresh cache vs cached plan)");
+    let plan_engine =
+        Engine::builder().config(cfg.clone()).graph(graph.clone()).build().unwrap();
     Bench::new("plan/cold_build_and_execute")
         .target(Duration::from_secs(3))
         .items((m * n * k) as f64)
-        .run(|| MacroGemm::with_mode(CimMode::Osa).gemm(&a, m, k, &w, n, 0).unwrap());
-    let mut warm = MacroGemm::with_mode(CimMode::Osa);
+        .run(|| plan_engine.backend_cold().unwrap().gemm(&a, m, k, &w, n, 0).unwrap());
+    let mut warm = plan_engine.backend_for_mode(CimMode::Osa).unwrap();
     warm.gemm(&a, m, k, &w, n, 0).unwrap();
     Bench::new("plan/warm_execute")
         .target(Duration::from_secs(3))
         .items((m * n * k) as f64)
         .run(|| warm.gemm(&a, m, k, &w, n, 0).unwrap());
-    let ws = warm.plan_stats();
+    let ws = plan_engine.plan_stats();
     println!(
         "plan cache after warm run: hits={} misses={} hit_rate={:.4}",
         ws.hits,
@@ -124,7 +138,7 @@ fn main() {
     // --- full-network inference over a persistent executor ---------------
     println!("\n# pipeline — single-image inference (32x32x3), persistent executor");
     for mode in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa] {
-        let gemm = MacroGemm::with_mode(mode);
+        let gemm = engine.backend_for_mode(mode).unwrap();
         let mut exec = Executor::new(&graph, gemm);
         exec.preplan().unwrap();
         Bench::new(&format!("infer/{}", mode.name()))
@@ -136,8 +150,9 @@ fn main() {
 
     // --- coordinator serve loop ------------------------------------------
     println!("\n# pipeline — coordinator round trip (submit -> batch -> respond)");
-    let graph = Arc::new(graph);
-    let server = Server::start(&cfg, graph.clone()).unwrap();
+    let serve_engine =
+        Engine::builder().config(cfg.clone()).graph(graph.clone()).build().unwrap();
+    let server = Server::with_engine(Arc::new(serve_engine)).unwrap();
     Bench::new("serve/round_trip")
         .target(Duration::from_secs(5))
         .max_iters(500)
@@ -197,7 +212,9 @@ fn main() {
     gcfg.max_batch = 16;
     gcfg.batch_timeout_us = 2_000;
     gcfg.queue_cap = 1024;
-    let gateway = Gateway::start(&gcfg, graph.clone(), "127.0.0.1:0").unwrap();
+    let gateway_engine =
+        Engine::builder().config(gcfg.clone()).graph(graph.clone()).build().unwrap();
+    let gateway = Gateway::with_engine(Arc::new(gateway_engine), "127.0.0.1:0").unwrap();
     let addr = gateway.addr().to_string();
     // sequential closed loop per tier: isolates the tier's coalescing
     // window + dispatch priority in the round-trip latency

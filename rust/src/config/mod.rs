@@ -5,6 +5,7 @@
 //! headers, `key = value` with string/int/float/bool/array-of-number
 //! values, and `#` comments.
 
+use crate::serve::qos::Tier;
 use crate::spec::MacroSpec;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -212,12 +213,20 @@ pub struct SystemConfig {
     pub workers: usize,
     /// Tile-execution pool size (`[engine] threads`, `--threads`);
     /// 0 = auto (the `OSA_ENGINE_THREADS` env override, else every
-    /// available core).  One pool is shared by all coordinator workers,
-    /// so this bounds total tile parallelism rather than multiplying it
-    /// by the worker count (DESIGN.md §11).
+    /// available core).  An *explicit* `threads = 0` is rejected at
+    /// load time — omit the key for auto.  One pool is shared by all
+    /// coordinator workers, so this bounds total tile parallelism
+    /// rather than multiplying it by the worker count (DESIGN.md §11).
     pub engine_threads: usize,
-    /// Use the PJRT artifact path for tile math (vs native simulator).
-    pub use_pjrt: bool,
+    /// Active execution backend, by `engine::BackendRegistry` name
+    /// (`[engine] backend`, `--backend`, or per-request via
+    /// `POST /v2/infer`).  Unknown names fail at engine build time with
+    /// an error listing every registered backend.
+    pub backend: String,
+    /// QoS tier assumed when a request names none
+    /// (`[serve] default_tier`); unknown tier strings are rejected at
+    /// load time.
+    pub default_tier: Tier,
     /// Bound of each QoS tier's admission queue; admission past it is a
     /// typed `Busy` error (HTTP 429 at the gateway).
     pub queue_cap: usize,
@@ -264,7 +273,8 @@ impl Default for SystemConfig {
             batch_timeout_us: 2_000,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             engine_threads: 0,
-            use_pjrt: false,
+            backend: "macro-hybrid".to_string(),
+            default_tier: Tier::Silver,
             queue_cap: 256,
             keep_alive: true,
             max_conns: 64,
@@ -314,8 +324,20 @@ impl SystemConfig {
         cfg.batch_timeout_us =
             t.get_usize("coordinator.batch_timeout_us", cfg.batch_timeout_us as usize)? as u64;
         cfg.workers = t.get_usize("coordinator.workers", cfg.workers)?;
-        cfg.use_pjrt = t.get_bool("coordinator.use_pjrt", cfg.use_pjrt)?;
+        // NOTE: `coordinator.use_pjrt` (a bool nothing ever read) is
+        // superseded by `engine.backend = "pjrt"` and intentionally no
+        // longer parsed; unknown keys are ignored, so old files load.
         cfg.engine_threads = t.get_usize("engine.threads", cfg.engine_threads)?;
+        // 0 means "auto" internally, but an *explicit* zero in the file
+        // is a misconfiguration, not a request for auto
+        if t.get("engine.threads").is_some() && cfg.engine_threads == 0 {
+            bail!("engine.threads must be >= 1 (omit the key for auto-sizing)");
+        }
+        cfg.backend = t.get_str("engine.backend", &cfg.backend)?;
+        let tier_name = t.get_str("serve.default_tier", cfg.default_tier.name())?;
+        cfg.default_tier = Tier::parse(&tier_name).ok_or_else(|| {
+            anyhow::anyhow!("serve.default_tier: unknown tier {tier_name:?} (gold|silver|batch)")
+        })?;
         cfg.queue_cap = t.get_usize("serve.queue_cap", cfg.queue_cap)?;
         cfg.keep_alive = t.get_bool("serve.keep_alive", cfg.keep_alive)?;
         cfg.max_conns = t.get_usize("serve.max_conns", cfg.max_conns)?;
@@ -327,22 +349,33 @@ impl SystemConfig {
         cfg.gov_low_watermark = t.get_f64("serve.gov_low_watermark", cfg.gov_low_watermark)?;
         cfg.gov_max_level = t.get_usize("serve.gov_max_level", cfg.gov_max_level as usize)? as u32;
         cfg.gov_hold_ms = t.get_usize("serve.gov_hold_ms", cfg.gov_hold_ms as usize)? as u64;
-        if cfg.gov_low_watermark > cfg.gov_high_watermark {
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation with field-named errors.  Runs at config
+    /// load AND at `engine::EngineBuilder::build` (CLI overrides land
+    /// between the two).
+    pub fn validate(&self) -> Result<()> {
+        if self.backend.trim().is_empty() {
+            bail!("engine.backend must not be empty (e.g. \"macro-hybrid\")");
+        }
+        if self.gov_low_watermark > self.gov_high_watermark {
             bail!(
                 "serve.gov_low_watermark ({}) must not exceed serve.gov_high_watermark ({})",
-                cfg.gov_low_watermark,
-                cfg.gov_high_watermark
+                self.gov_low_watermark,
+                self.gov_high_watermark
             );
         }
-        if cfg.thresholds.len() + 1 != crate::spec::B_CANDIDATES.len() {
+        if self.thresholds.len() + 1 != crate::spec::B_CANDIDATES.len() {
             bail!(
-                "need {} thresholds for {} candidates, got {}",
+                "cim.thresholds: need {} thresholds for {} candidates, got {}",
                 crate::spec::B_CANDIDATES.len() - 1,
                 crate::spec::B_CANDIDATES.len(),
-                cfg.thresholds.len()
+                self.thresholds.len()
             );
         }
-        Ok(cfg)
+        Ok(())
     }
 }
 
@@ -363,7 +396,7 @@ sigma_code = 0.0
 
 [coordinator]
 max_batch = 32
-use_pjrt = true
+use_pjrt = true   # retired knob: ignored (backend selection replaced it)
 "#;
 
     #[test]
@@ -374,7 +407,6 @@ use_pjrt = true
         assert_eq!(cfg.thresholds, vec![10, 20, 30, 40, 50]);
         assert_eq!(cfg.spec.sigma_code, 0.0);
         assert_eq!(cfg.max_batch, 32);
-        assert!(cfg.use_pjrt);
     }
 
     #[test]
@@ -423,14 +455,61 @@ use_pjrt = true
 
     #[test]
     fn engine_section_parsed() {
-        let t = Toml::parse("[engine]\nthreads = 3").unwrap();
+        let t = Toml::parse("[engine]\nthreads = 3\nbackend = \"macro-dcim\"").unwrap();
         let cfg = SystemConfig::from_toml(&t).unwrap();
         assert_eq!(cfg.engine_threads, 3);
         assert_eq!(cfg.resolved_engine_threads(), 3);
-        // absent section -> auto (always at least one thread)
+        assert_eq!(cfg.backend, "macro-dcim");
+        // absent section -> auto (always at least one thread), default backend
         let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(cfg.engine_threads, 0);
         assert!(cfg.resolved_engine_threads() >= 1);
+        assert_eq!(cfg.backend, "macro-hybrid");
+        assert_eq!(cfg.default_tier, Tier::Silver);
+    }
+
+    #[test]
+    fn explicit_zero_engine_threads_rejected() {
+        let t = Toml::parse("[engine]\nthreads = 0").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("engine.threads"), "{err}");
+        // negative is rejected by the typed getter, also field-named
+        let t = Toml::parse("[engine]\nthreads = -2").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("engine.threads"), "{err}");
+    }
+
+    #[test]
+    fn empty_backend_name_rejected() {
+        let t = Toml::parse("[engine]\nbackend = \"\"").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("engine.backend"), "{err}");
+        // whitespace-only is just as empty
+        let t = Toml::parse("[engine]\nbackend = \"  \"").unwrap();
+        assert!(SystemConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn serve_default_tier_parsed_and_validated() {
+        let t = Toml::parse("[serve]\ndefault_tier = \"gold\"").unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.default_tier, Tier::Gold);
+        let t = Toml::parse("[serve]\ndefault_tier = \"bronze\"").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("serve.default_tier"), "{err}");
+        assert!(err.to_string().contains("bronze"), "{err}");
+    }
+
+    #[test]
+    fn validate_is_rerunnable_on_mutated_configs() {
+        // the builder re-validates after CLI overrides; make sure a
+        // config mutated into a bad state is caught with a field name
+        let mut cfg = SystemConfig::default();
+        cfg.backend = String::new();
+        assert!(cfg.validate().unwrap_err().to_string().contains("engine.backend"));
+        let mut cfg = SystemConfig::default();
+        cfg.thresholds = vec![1, 2];
+        assert!(cfg.validate().unwrap_err().to_string().contains("cim.thresholds"));
     }
 
     #[test]

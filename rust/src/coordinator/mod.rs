@@ -4,7 +4,7 @@
 //! mirror).
 //!
 //! Flow: clients [`Server::submit_tier`] single images into bounded
-//! per-tier queues ([`serve::qos::TierQueues`]); admission past a
+//! per-tier queues ([`crate::serve::qos::TierQueues`]); admission past a
 //! tier's bound fails fast with a typed [`SubmitError::Busy`] (the
 //! gateway maps it to HTTP 429) instead of growing an unbounded queue.
 //! The batcher thread drains tiers strictly by priority and coalesces
@@ -12,55 +12,50 @@
 //! then hands them to the worker pool over a *bounded* channel — when
 //! every worker is busy the batcher blocks, the tier queues fill, and
 //! pressure becomes visible to both admission (429) and the precision
-//! governor ([`serve::governor::Governor`]), which degrades low-tier
-//! OSA thresholds under load and restores them when the queues drain.
+//! governor ([`crate::serve::governor::Governor`]), which degrades
+//! low-tier OSA thresholds under load and restores them when the queues
+//! drain.
 //!
-//! Each worker keeps one **persistent** [`nn::Executor`] over its own
-//! engine clone — the clones share one `sched::plan::PlanCache` via
-//! `Arc`, so every layer's weight tiles are packed exactly once per
-//! process (the weight-stationary hot path).  In OSA mode the worker
-//! re-programs the engine's OSE threshold registers per batch from the
-//! governor's current per-tier contract.  A failed forward answers
-//! every request in the batch with an error [`Response`] instead of
-//! dropping the channel.
+//! Each worker keeps one **persistent** [`crate::nn::Executor`] per
+//! backend it has served, built through the shared [`Engine`] — every
+//! executor shares the engine's `sched::plan::PlanCache`, so a layer's
+//! weight tiles are packed exactly once per process (the
+//! weight-stationary hot path).  Per batch the worker re-programs the
+//! backend's runtime knobs ([`BackendKnobs`]): the governor's current
+//! per-tier OSE contract (OSA datapaths), plus any per-request
+//! noise-seed / boundary overrides carried in [`InferOptions`].
+//! A batch whose requests name different backends or overrides is split
+//! into sub-groups, one engine forward each; the hot path (no
+//! overrides) stays a single group.  A failed forward answers every
+//! request in the group with an error [`Response`] instead of dropping
+//! the channel.
 
-use crate::config::{CimMode, SystemConfig};
+use crate::config::SystemConfig;
 use crate::energy::EnergyAccount;
-use crate::macrosim::ose::Ose;
+use crate::engine::{Backend, BackendKnobs, Engine, InferRequest};
 use crate::nn::{Executor, QGraph};
-use crate::sched::MacroGemm;
 use crate::serve::governor::{Governor, GovernorSnapshot};
 use crate::serve::qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};
 use crate::spec::MacroSpec;
 use crate::util::percentile;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+pub use crate::engine::{InferOptions, InferResponse as Response};
 
 /// One inference request.
 pub struct Request {
     pub id: u64,
     /// 32x32x3 uint8 image.
     pub image: Vec<u8>,
-    pub tier: Tier,
+    /// Per-request options: QoS tier plus backend / noise-seed /
+    /// boundary overrides (validated at submission).
+    pub opts: InferOptions,
     pub submitted: Instant,
     respond: Sender<Response>,
-}
-
-/// One inference response.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    pub logits: Vec<f32>,
-    pub pred: usize,
-    pub tier: Tier,
-    pub latency: Duration,
-    /// Size of the batch this request rode in (batching observability).
-    pub batch_size: usize,
-    /// Set when the worker's forward failed: the request was *answered*,
-    /// not served (`logits` is empty, `pred` is meaningless).
-    pub error: Option<String>,
 }
 
 /// Sample buffers are rings: percentiles/means are over the most recent
@@ -199,14 +194,14 @@ impl Metrics {
 
 /// The serving coordinator.
 pub struct Server {
+    /// The unified engine every worker draws its backends from.
+    engine: Arc<Engine>,
     queues: Arc<TierQueues<Request>>,
     governor: Arc<Governor>,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<Metrics>>,
     next_id: std::sync::atomic::AtomicU64,
-    /// The worker pool's shared plan cache (observability handle).
-    plans: Arc<crate::sched::plan::PlanCache>,
 }
 
 /// Floor of the idle batcher's wake interval (the actual tick is
@@ -220,31 +215,24 @@ const MIN_IDLE_TICK: Duration = Duration::from_millis(2);
 const WATTS_WINDOW: Duration = Duration::from_millis(100);
 
 impl Server {
-    /// Spin up the batcher + worker pool for the given config.
-    /// Workers run the *native* engine (each owns a clone); the PJRT
-    /// engine path is exercised through `examples/e2e_inference` where a
-    /// single runtime drives the batch loop directly.
+    /// Convenience: build a default [`Engine`] for the config and start
+    /// on it.  Callers with their own builder wiring (shared pools,
+    /// custom registries) use [`Server::with_engine`] directly.
     pub fn start(cfg: &SystemConfig, graph: Arc<QGraph>) -> Result<Self> {
-        // One tile-execution pool for the whole server: every worker's
-        // engine clone submits onto it, so total tile parallelism is the
-        // pool size — a lone gold-tier request can use every pool thread
-        // while concurrent batches interleave at work-unit granularity.
-        // Clamped to the machine's cores: workers block on the pool for
-        // the duration of their GEMMs, so `workers x threads`
-        // oversubscription cannot happen (DESIGN.md §11).
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let pool = crate::sched::exec::ExecPool::new(cfg.resolved_engine_threads().min(cores));
-        let gemm = MacroGemm::new(
-            cfg.mode,
-            cfg.spec,
-            cfg.fixed_b,
-            cfg.thresholds.clone(),
-            cfg.noise_seed,
-        )?
-        .with_pool(pool);
-        // Engine clones share this cache: one weight-packing per layer
-        // per process, reused by every worker on every batch.
-        let plans = gemm.plan_cache().clone();
+        let engine = Engine::builder().config(cfg.clone()).graph(graph).build()?;
+        Self::with_engine(Arc::new(engine))
+    }
+
+    /// Spin up the batcher + worker pool over an assembled engine.
+    /// Every worker draws its backend instances from this one engine:
+    /// one shared plan cache (a layer is packed once per process) and
+    /// one shared tile pool (a lone gold-tier request can use every
+    /// pool thread while concurrent batches interleave at work-unit
+    /// granularity; the builder sizes auto pools to the machine's
+    /// cores, so `workers x threads` oversubscription cannot happen —
+    /// DESIGN.md §11/§12).
+    pub fn with_engine(engine: Arc<Engine>) -> Result<Self> {
+        let cfg = engine.config();
         let metrics = Arc::new(Mutex::new(Metrics { started: Some(Instant::now()), ..Default::default() }));
         let governor = Arc::new(Governor::from_system(cfg));
         let queues = Arc::new(TierQueues::new(QosConfig {
@@ -253,9 +241,7 @@ impl Server {
             base_window: Duration::from_micros(cfg.batch_timeout_us),
         }));
         let workers_n = cfg.workers.max(1);
-        // Per-tier precision only exists on the OSA datapath; the other
-        // modes ignore the OSE threshold registers.
-        let apply_precision = cfg.mode == CimMode::Osa;
+        let idle_tick = Duration::from_millis(cfg.gov_hold_ms / 4).max(MIN_IDLE_TICK);
 
         // Bounded dispatch: when every worker is busy the batcher blocks
         // here, the tier queues fill, and overload surfaces as `Busy`.
@@ -263,24 +249,20 @@ impl Server {
         let shared_rx = Arc::new(Mutex::new(wrx));
         let mut workers = Vec::new();
         for wid in 0..workers_n {
-            let graph = graph.clone();
-            let gemm = gemm.clone();
+            let engine = engine.clone();
             let metrics = metrics.clone();
             let governor = governor.clone();
             let shared_rx = shared_rx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cim-worker-{wid}"))
-                    .spawn(move || {
-                        worker_loop(shared_rx, graph, gemm, metrics, governor, apply_precision)
-                    })
+                    .spawn(move || worker_loop(shared_rx, engine, metrics, governor))
                     .context("spawning worker")?,
             );
         }
 
         // The governor acts at most once per hold interval, so the idle
         // tick only needs to be a fraction of it.
-        let idle_tick = Duration::from_millis(cfg.gov_hold_ms / 4).max(MIN_IDLE_TICK);
         let batcher = std::thread::Builder::new()
             .name("cim-batcher".into())
             .spawn({
@@ -292,39 +274,97 @@ impl Server {
             .context("spawning batcher")?;
 
         Ok(Self {
+            engine,
             queues,
             governor,
             batcher: Some(batcher),
             workers,
             metrics,
             next_id: std::sync::atomic::AtomicU64::new(0),
-            plans,
         })
+    }
+
+    /// The engine this server executes on (registry, plan cache, pool).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
     }
 
     /// Plan-cache activity over the whole worker pool.  After warmup,
     /// `misses` equals the layer count — each layer was packed exactly
     /// once per process — and every further forward is a hit.
     pub fn plan_stats(&self) -> crate::sched::plan::PlanCacheStats {
-        self.plans.stats()
+        self.engine.plan_stats()
     }
 
-    /// Submit one image at the default (silver) tier.
+    /// Submit one image at the configured default tier
+    /// (`[serve] default_tier`, silver unless overridden) — the
+    /// in-process twin of a wire request that names no tier.
     pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<Response>, SubmitError> {
-        self.submit_tier(image, Tier::Silver)
+        self.submit_tier(image, self.engine.config().default_tier)
     }
 
-    /// Submit one image under a tier's SLO contract; returns the channel
-    /// the response arrives on, or [`SubmitError::Busy`] when the tier's
-    /// bounded queue is full (backpressure, not silent growth).
+    /// Submit one image under a tier's SLO contract.
     pub fn submit_tier(
         &self,
         image: Vec<u8>,
         tier: Tier,
     ) -> Result<Receiver<Response>, SubmitError> {
+        self.submit_request(InferRequest::new(image).with_tier(tier))
+    }
+
+    /// Submit a typed [`InferRequest`] (the same struct `POST /v2/infer`
+    /// deserializes into); returns the channel the response arrives on.
+    /// Typed failures: [`SubmitError::Busy`] when the tier's bounded
+    /// queue is full (backpressure, not silent growth),
+    /// [`SubmitError::UnknownBackend`] / [`SubmitError::BackendUnavailable`]
+    /// / [`SubmitError::InvalidOption`] for bad per-request options —
+    /// validated here, before anything is enqueued.
+    pub fn submit_request(&self, req: InferRequest) -> Result<Receiver<Response>, SubmitError> {
+        let InferRequest { image, options } = req;
+        // the wire paths already 400 on bad sizes, but the typed API is
+        // public too — a short image coalesced into a batch would shear
+        // the flattened input buffer and silently mis-serve everything
+        // behind it
+        if image.len() != crate::serve::gateway::IMAGE_BYTES {
+            return Err(SubmitError::InvalidOption {
+                field: "image",
+                detail: format!(
+                    "must be {} bytes (32x32x3 uint8), got {}",
+                    crate::serve::gateway::IMAGE_BYTES,
+                    image.len()
+                ),
+            });
+        }
+        if let Some(name) = &options.backend {
+            let reg = self.engine.registry();
+            match reg.get(name) {
+                None => {
+                    return Err(SubmitError::UnknownBackend {
+                        requested: name.clone(),
+                        registered: reg.names().iter().map(|s| s.to_string()).collect(),
+                    })
+                }
+                Some(spec) if !spec.available => {
+                    return Err(SubmitError::BackendUnavailable {
+                        name: name.clone(),
+                        reason: spec.description.to_string(),
+                    })
+                }
+                Some(_) => {}
+            }
+        }
+        if let Some(b) = options.boundary {
+            if !(0..16).contains(&b) {
+                return Err(SubmitError::InvalidOption {
+                    field: "boundary",
+                    detail: format!("must be in 0..=15, got {b}"),
+                });
+            }
+        }
+        let tier = options.tier;
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = Request { id, image, tier, submitted: Instant::now(), respond: rtx };
+        let req = Request { id, image, opts: options, submitted: Instant::now(), respond: rtx };
         self.queues.push(tier, req)?;
         Ok(rrx)
     }
@@ -412,21 +452,46 @@ fn batcher_loop(
     // dropping wtx closes the worker channel -> workers exit after drain
 }
 
+/// Requests that can share one engine forward: same backend, same
+/// noise-seed override, same boundary override.  `None` = the
+/// engine-default value, so the hot path (no overrides) is one group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct GroupKey {
+    backend: String,
+    noise_seed: Option<u64>,
+    boundary: Option<i32>,
+}
+
+/// A worker's persistent executors, one per backend name it has served.
+type ExecMap<'g> = BTreeMap<String, Executor<'g, Box<dyn Backend>>>;
+
 fn worker_loop(
     shared_rx: Arc<Mutex<Receiver<(Tier, Vec<Request>)>>>,
-    graph: Arc<QGraph>,
-    gemm: MacroGemm,
+    engine: Arc<Engine>,
     metrics: Arc<Mutex<Metrics>>,
     governor: Arc<Governor>,
-    apply_precision: bool,
 ) {
-    // One persistent executor per worker: plans (packed weight tiles)
-    // live in the engine's shared cache, so they survive across batches
-    // and across workers.  Preplan the whole graph up front so even the
-    // first request pays no packing cost.
-    let mut exec = Executor::new(&graph, gemm);
-    if let Err(e) = exec.preplan() {
-        log::error!("worker preplan failed (plans will build lazily): {e:#}");
+    let cfg = engine.config().clone();
+    let graph_arc = engine.graph().clone();
+    let graph = graph_arc.as_ref();
+    let base_name = engine.backend_name().to_string();
+    // One persistent executor per (worker, backend): plans (packed
+    // weight tiles) live in the engine's shared cache, so they survive
+    // across batches, workers AND backends.  The active backend is
+    // built (and preplanned) up front so even the first request pays no
+    // packing cost; override backends are built lazily on first use.
+    let mut execs: ExecMap<'_> = BTreeMap::new();
+    match engine.backend() {
+        Ok(b) => {
+            let mut exec = Executor::new(graph, b);
+            if let Err(e) = exec.preplan() {
+                log::error!("worker preplan failed (plans will build lazily): {e:#}");
+            }
+            execs.insert(base_name.clone(), exec);
+        }
+        // validated at engine build; a failure here still must not kill
+        // the worker — groups will answer with error responses
+        Err(e) => log::error!("worker could not build backend {base_name:?}: {e:#}"),
     }
     loop {
         // Hold the lock only for the blocking recv; batches are handed
@@ -436,104 +501,184 @@ fn worker_loop(
             Ok(j) => j,
             Err(_) => break,
         };
-        // Program the OSE threshold registers with the tier's current
-        // contract (base profile + governor degrade level).
-        if apply_precision {
-            let ts = governor.thresholds_for(tier);
-            if ts.as_slice() != exec.engine.ose.thresholds() {
-                match Ose::with_default_candidates(ts) {
-                    Ok(ose) => exec.engine.ose = ose,
-                    Err(e) => log::error!("bad governor thresholds for {}: {e:#}", tier.name()),
-                }
+        // Split the batch into runnable sub-groups (order-preserving).
+        // Requests without overrides — the overwhelming hot path — all
+        // land in one group keyed by the active backend.  A request
+        // with an explicit noise seed NEVER coalesces, even with an
+        // identical seed: noise streams are per `(seed, layer, row,
+        // N-tile)` and the row index is the offset inside the forward's
+        // batch, so riding at offset 1 would draw different noise than
+        // riding alone — the seed's whole point is bit-reproducibility,
+        // so each seeded request runs as its own batch of one.
+        let mut groups: Vec<(GroupKey, Vec<Request>)> = Vec::new();
+        for r in batch {
+            let key = GroupKey {
+                backend: r.opts.backend.clone().unwrap_or_else(|| base_name.clone()),
+                noise_seed: r.opts.noise_seed,
+                boundary: r.opts.boundary,
+            };
+            let mergeable = key.noise_seed.is_none();
+            match groups.iter_mut().find(|(k, _)| mergeable && *k == key) {
+                Some((_, g)) => g.push(r),
+                None => groups.push((key, vec![r])),
             }
         }
-        let n = batch.len();
-        let img_bytes = batch[0].image.len();
-        let mut images = Vec::with_capacity(n * img_bytes);
-        for r in &batch {
-            images.extend_from_slice(&r.image);
+        for (key, group) in groups {
+            run_group(&mut execs, graph, &engine, &cfg, &governor, &metrics, tier, key, group);
         }
-        match exec.forward(&images, n) {
-            Ok((logits, stats)) => {
-                let classes = graph.num_classes;
-                let done = Instant::now();
-                // NaN-safe preds up front: a NaN-poisoned row (aggressive
-                // ACIM noise) is *answered* through the error path — a
-                // fabricated pred would be indistinguishable from a real
-                // class-0 answer — and never aborts the worker mid-batch
-                // the way the old max_by(partial_cmp).unwrap() did.
-                let preds: Vec<Option<usize>> = (0..n)
-                    .map(|i| crate::nn::argmax(&logits[i * classes..(i + 1) * classes]))
-                    .collect();
-                let nan_rows = preds.iter().filter(|p| p.is_none()).count() as u64;
-                {
-                    let mut m = metrics.lock().unwrap();
-                    // poisoned rows count as errors (answered, not
-                    // served), mirroring the failed-forward branch
-                    m.requests += n as u64 - nan_rows;
-                    m.errors += nan_rows;
-                    m.batches += 1;
-                    push_sample(&mut m.batch_sizes, &mut m.batch_cursor, n as f64);
-                    m.account.merge(&stats.account);
-                    m.per_tier[tier.index()].requests += n as u64 - nan_rows;
-                    m.per_tier[tier.index()].errors += nan_rows;
-                    // one fused pass each: the aggregate and per-tier
-                    // views must never diverge
-                    for (i, v) in stats.b_hist.iter().enumerate() {
-                        m.b_hist[i] += v;
-                        m.per_tier[tier.index()].b_hist[i] += v;
-                    }
-                    for (r, pred) in batch.iter().zip(&preds) {
-                        if pred.is_none() {
-                            continue; // error responses carry no latency sample
-                        }
-                        let lat = (done - r.submitted).as_micros() as f64;
-                        push_sample(&mut m.latencies_us, &mut m.lat_cursor, lat);
-                        let t = &mut m.per_tier[tier.index()];
-                        push_sample(&mut t.latencies_us, &mut t.lat_cursor, lat);
-                    }
-                    m.finished = Some(done);
-                }
-                for (i, r) in batch.into_iter().enumerate() {
-                    let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    let _ = r.respond.send(Response {
-                        id: r.id,
-                        pred: preds[i].unwrap_or(0),
-                        logits: row,
-                        tier,
-                        latency: done - r.submitted,
-                        batch_size: n,
-                        error: preds[i].is_none().then(|| {
-                            "non-finite logits (NaN) — the row cannot express a prediction"
-                                .to_string()
-                        }),
-                    });
-                }
+    }
+}
+
+/// Execute one sub-group of a batch on its backend: resolve the
+/// executor, program the runtime knobs, forward, respond.
+#[allow(clippy::too_many_arguments)]
+fn run_group<'g>(
+    execs: &mut ExecMap<'g>,
+    graph: &'g QGraph,
+    engine: &Engine,
+    cfg: &SystemConfig,
+    governor: &Governor,
+    metrics: &Mutex<Metrics>,
+    tier: Tier,
+    key: GroupKey,
+    group: Vec<Request>,
+) {
+    // Submission validated the name against the registry, but
+    // construction can still fail (e.g. a runtime that won't load) —
+    // answer the group, never drop it.
+    if !execs.contains_key(&key.backend) {
+        match engine.backend_named(&key.backend) {
+            Ok(b) => {
+                execs.insert(key.backend.clone(), Executor::new(graph, b));
             }
             Err(e) => {
-                log::error!("worker forward failed: {e:#}");
-                let msg = format!("{e:#}");
-                let done = Instant::now();
-                {
-                    let mut m = metrics.lock().unwrap();
-                    m.errors += n as u64;
-                    m.per_tier[tier.index()].errors += n as u64;
-                }
-                // answer every request so submitters never hang on a
-                // silently dropped batch
-                for r in batch {
-                    let _ = r.respond.send(Response {
-                        id: r.id,
-                        pred: 0,
-                        logits: Vec::new(),
-                        tier,
-                        latency: done - r.submitted,
-                        batch_size: n,
-                        error: Some(msg.clone()),
-                    });
-                }
+                let msg = format!("backend {:?} failed to build: {e:#}", key.backend);
+                answer_error(metrics, tier, &key.backend, group, &msg);
+                return;
             }
         }
+    }
+    let exec = execs.get_mut(&key.backend).expect("just inserted");
+
+    // Program the run knobs: the governor's current tier contract
+    // (backends with programmable OSE registers, i.e. the OSA
+    // datapath), then seed/boundary — always re-applied from the
+    // resolved values so a previous group's overrides never leak into
+    // the next.
+    let caps = exec.engine.capabilities();
+    let knobs = BackendKnobs {
+        noise_seed: Some(key.noise_seed.unwrap_or(cfg.noise_seed)),
+        fixed_b: Some(key.boundary.unwrap_or(cfg.fixed_b)),
+        thresholds: caps
+            .programmable_thresholds
+            .then(|| governor.thresholds_for(tier)),
+    };
+    if let Err(e) = exec.engine.apply(&knobs) {
+        let msg = format!("programming engine knobs: {e:#}");
+        answer_error(metrics, tier, &key.backend, group, &msg);
+        return;
+    }
+    let backend_name = exec.engine.name().to_string();
+
+    let n = group.len();
+    let img_bytes = group[0].image.len();
+    let mut images = Vec::with_capacity(n * img_bytes);
+    for r in &group {
+        images.extend_from_slice(&r.image);
+    }
+    match exec.forward(&images, n) {
+        Ok((logits, stats)) => {
+            let classes = graph.num_classes;
+            let done = Instant::now();
+            // NaN-safe preds up front: a NaN-poisoned row (aggressive
+            // ACIM noise) is *answered* through the error path — a
+            // fabricated pred would be indistinguishable from a real
+            // class-0 answer — and never aborts the worker mid-batch
+            // the way the old max_by(partial_cmp).unwrap() did.
+            let preds: Vec<Option<usize>> = (0..n)
+                .map(|i| crate::nn::argmax(&logits[i * classes..(i + 1) * classes]))
+                .collect();
+            let nan_rows = preds.iter().filter(|p| p.is_none()).count() as u64;
+            {
+                let mut m = metrics.lock().unwrap();
+                // poisoned rows count as errors (answered, not
+                // served), mirroring the failed-forward branch
+                m.requests += n as u64 - nan_rows;
+                m.errors += nan_rows;
+                m.batches += 1;
+                push_sample(&mut m.batch_sizes, &mut m.batch_cursor, n as f64);
+                m.account.merge(&stats.account);
+                m.per_tier[tier.index()].requests += n as u64 - nan_rows;
+                m.per_tier[tier.index()].errors += nan_rows;
+                // one fused pass each: the aggregate and per-tier
+                // views must never diverge
+                for (i, v) in stats.b_hist.iter().enumerate() {
+                    m.b_hist[i] += v;
+                    m.per_tier[tier.index()].b_hist[i] += v;
+                }
+                for (r, pred) in group.iter().zip(&preds) {
+                    if pred.is_none() {
+                        continue; // error responses carry no latency sample
+                    }
+                    let lat = (done - r.submitted).as_micros() as f64;
+                    push_sample(&mut m.latencies_us, &mut m.lat_cursor, lat);
+                    let t = &mut m.per_tier[tier.index()];
+                    push_sample(&mut t.latencies_us, &mut t.lat_cursor, lat);
+                }
+                m.finished = Some(done);
+            }
+            for (i, r) in group.into_iter().enumerate() {
+                let row = logits[i * classes..(i + 1) * classes].to_vec();
+                let _ = r.respond.send(Response {
+                    id: r.id,
+                    pred: preds[i].unwrap_or(0),
+                    logits: row,
+                    tier,
+                    backend: backend_name.clone(),
+                    latency: done - r.submitted,
+                    batch_size: n,
+                    error: preds[i].is_none().then(|| {
+                        "non-finite logits (NaN) — the row cannot express a prediction"
+                            .to_string()
+                    }),
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            answer_error(metrics, tier, &backend_name, group, &msg);
+        }
+    }
+}
+
+/// Answer every request of a group with an error [`Response`] so
+/// submitters never hang on a silently dropped batch.
+fn answer_error(
+    metrics: &Mutex<Metrics>,
+    tier: Tier,
+    backend: &str,
+    group: Vec<Request>,
+    msg: &str,
+) {
+    log::error!("worker error on backend {backend:?}: {msg}");
+    let done = Instant::now();
+    let n = group.len();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.errors += n as u64;
+        m.per_tier[tier.index()].errors += n as u64;
+    }
+    for r in group {
+        let _ = r.respond.send(Response {
+            id: r.id,
+            pred: 0,
+            logits: Vec::new(),
+            tier,
+            backend: backend.to_string(),
+            latency: done - r.submitted,
+            batch_size: n,
+            error: Some(msg.to_string()),
+        });
     }
 }
 

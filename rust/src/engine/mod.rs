@@ -1,0 +1,961 @@
+//! The unified engine API — the single front door to the stack
+//! (DESIGN.md §12).
+//!
+//! Everything that used to be wired by hand in `coordinator`, `figures`,
+//! the benches and `main.rs` (engine construction, `PlanCache` sharing,
+//! `ExecPool` sizing) now flows through three pieces:
+//!
+//! * [`Backend`] — an object-safe execution backend: the `dyn`-friendly
+//!   rework of [`crate::sched::GemmEngine`] with a `name()` /
+//!   [`Backend::capabilities`] surface and runtime-programmable knobs
+//!   ([`Backend::apply`]) for the per-call digital/analog boundary,
+//!   noise seed and OSE thresholds — the paper's dynamic precision
+//!   configuration as a first-class runtime decision instead of a type
+//!   parameter;
+//! * [`BackendRegistry`] — string-selectable backend factories.  The
+//!   builtin registry carries `macro-hybrid` (the mode-configurable
+//!   native simulator), `macro-dcim` / `macro-acim` (the all-digital and
+//!   all-analog baselines pinned by name) and `pjrt` (the AOT artifact
+//!   runtime; stub-aware — registered but unavailable without the
+//!   `pjrt` feature).  Future backends (GPU, remote macro, weight-pool
+//!   sharing) land as registry entries, not refactors;
+//! * [`Engine`] / [`EngineBuilder`] — owns the graph, the shared
+//!   weight-stationary [`PlanCache`] and the tile [`ExecPool`], and
+//!   hands out backend instances that all share both:
+//!
+//! ```no_run
+//! # use osa_hcim::engine::Engine;
+//! # use osa_hcim::nn::QGraph;
+//! # use std::sync::Arc;
+//! let engine = Engine::builder()
+//!     .graph(Arc::new(QGraph::synthetic()))
+//!     .backend("macro-hybrid")
+//!     .threads(4)
+//!     .build()?;
+//! let mut exec = engine.executor()?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The typed [`InferRequest`] / [`InferOptions`] / [`InferResponse`]
+//! structs are shared verbatim by in-process callers
+//! (`coordinator::Server::submit_request`) and the versioned
+//! `POST /v2/infer` HTTP route (`serve::gateway`), so the wire surface
+//! and the library surface can never drift apart.
+
+use crate::config::{CimMode, SystemConfig};
+use crate::macrosim::ose::Ose;
+use crate::nn::{Executor, QGraph};
+use crate::sched::exec::ExecPool;
+use crate::sched::plan::{PlanCache, PlanCacheStats};
+use crate::sched::{GemmEngine, GemmResult, MacroGemm};
+use crate::serve::qos::Tier;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ------------------------------------------------------------------ Backend
+
+/// What a backend can do — used for routing decisions (e.g. the
+/// coordinator only programs OSE thresholds into backends that report
+/// `programmable_thresholds`) and for `/v1/version` introspection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendCaps {
+    /// The backend can actually execute in this build (the `pjrt` entry
+    /// is registered but unavailable without the `pjrt` feature).
+    pub available: bool,
+    /// The CIM datapath mode this instance runs.
+    pub mode: CimMode,
+    /// OSE threshold registers exist and can be re-programmed per call
+    /// (the OSA datapath).
+    pub programmable_thresholds: bool,
+    /// A fixed digital/analog boundary override (`fixed_b`) is
+    /// meaningful (HCIM-style hybrid modes).
+    pub hybrid_boundary: bool,
+    /// One-line human description.
+    pub description: &'static str,
+}
+
+/// Per-call knob overrides — the dynamic D/A boundary of the paper as a
+/// runtime decision.  `None` leaves the backend's current value alone.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BackendKnobs {
+    /// Base seed of the per-unit ADC noise streams.
+    pub noise_seed: Option<u64>,
+    /// Fixed digital/analog boundary (HCIM mode).
+    pub fixed_b: Option<i32>,
+    /// OSE threshold registers (ascending; OSA mode).
+    pub thresholds: Option<Vec<i32>>,
+}
+
+/// Object-safe execution backend: the `dyn`-friendly face of
+/// [`GemmEngine`].  All methods return concrete types so
+/// `Box<dyn Backend>` works everywhere a monomorphized engine used to,
+/// including inside [`crate::nn::Executor`] (via the blanket
+/// [`GemmEngine`] impl below).
+pub trait Backend: Send {
+    /// `a`: `[m, k]` uint8-as-i32 row-major; `w`: `[n, k]` int8-as-i32.
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult>;
+
+    /// Build (and cache) the layer's execution plan ahead of time.
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()>;
+
+    /// The registry name this backend was built under (`macro-hybrid`,
+    /// `macro-dcim`, ...) — the string a client selects it by.
+    fn name(&self) -> &str;
+
+    /// Capability surface for routing and introspection.
+    fn capabilities(&self) -> BackendCaps;
+
+    /// Re-program the backend's runtime knobs.  Implementations must be
+    /// idempotent (applying the current values is a cheap no-op) because
+    /// the coordinator re-applies per batch.
+    fn apply(&mut self, knobs: &BackendKnobs) -> Result<()>;
+
+    /// Current OSE thresholds, when the backend has threshold registers.
+    fn thresholds(&self) -> Option<Vec<i32>>;
+
+    /// A fresh, independently-owned instance sharing the same plan
+    /// cache and pool (one per coordinator worker).
+    fn clone_backend(&self) -> Result<Box<dyn Backend>>;
+}
+
+/// `Box<dyn Backend>` drives everything a monomorphized [`GemmEngine`]
+/// drives — this is what lets `nn::Executor<Box<dyn Backend>>` replace
+/// `nn::Executor<MacroGemm>` without touching the executor.
+impl GemmEngine for Box<dyn Backend> {
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        (**self).gemm(a, m, k, w, n, layer_idx)
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        (**self).prepare(w, n, k, layer_idx)
+    }
+
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+}
+
+// ----------------------------------------------------------- typed errors
+
+/// Typed backend-selection failures.  Carried through `anyhow` so the
+/// CLI prints them directly; the gateway maps the same conditions
+/// (re-detected via [`BackendRegistry::get`]) onto typed 400s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendError {
+    /// The requested name is not in the registry.
+    Unknown { requested: String, registered: Vec<String> },
+    /// Registered, but cannot run in this build.
+    Unavailable { name: String, reason: String },
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Unknown { requested, registered } => write!(
+                f,
+                "unknown backend {requested:?} (registered: {})",
+                registered.join(", ")
+            ),
+            BackendError::Unavailable { name, reason } => {
+                write!(f, "backend {name:?} is registered but unavailable: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+// ------------------------------------------------------------- registry
+
+/// Everything a backend factory needs: the resolved config plus the
+/// engine's shared plan cache and tile pool.
+pub struct BackendCtx<'a> {
+    pub cfg: &'a SystemConfig,
+    pub plans: Arc<PlanCache>,
+    pub pool: Arc<ExecPool>,
+}
+
+/// A backend factory function (plain `fn` so the registry stays
+/// `Clone` + `Send` + `Sync` for free).
+pub type BackendFactory = fn(&BackendCtx) -> Result<Box<dyn Backend>>;
+
+/// One registry entry.
+#[derive(Clone)]
+pub struct BackendSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Whether this build can actually construct the backend (the
+    /// `pjrt` entry is registered either way so error messages can say
+    /// *why* it is missing instead of "unknown backend").
+    pub available: bool,
+    pub factory: BackendFactory,
+}
+
+/// String-selectable backend factories.  Registration order is the
+/// listing order shown in errors and `/v1/version`.
+#[derive(Clone, Default)]
+pub struct BackendRegistry {
+    entries: Vec<BackendSpec>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (extension point for embedders).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The builtin set: `macro-hybrid`, `macro-dcim`, `macro-acim`,
+    /// `pjrt`.
+    pub fn builtin() -> Self {
+        let mut r = Self::new();
+        r.register(BackendSpec {
+            name: "macro-hybrid",
+            description: "native cycle-level macro simulator in the configured CIM mode \
+                          (osa/hcim/pg/drq via [cim] mode)",
+            available: true,
+            factory: build_macro_hybrid,
+        });
+        r.register(BackendSpec {
+            name: "macro-dcim",
+            description: "native simulator pinned to the all-digital (loss-free) baseline",
+            available: true,
+            factory: build_macro_dcim,
+        });
+        r.register(BackendSpec {
+            name: "macro-acim",
+            description: "native simulator pinned to the full-analog baseline",
+            available: true,
+            factory: build_macro_acim,
+        });
+        r.register(BackendSpec {
+            name: "pjrt",
+            description: if cfg!(feature = "pjrt") {
+                "AOT PJRT artifact runtime (Pallas tile kernels)"
+            } else {
+                "AOT PJRT artifact runtime — built without the `pjrt` feature"
+            },
+            available: cfg!(feature = "pjrt"),
+            factory: build_pjrt,
+        });
+        r
+    }
+
+    /// Add (or replace, by name) an entry.
+    pub fn register(&mut self, spec: BackendSpec) {
+        if let Some(slot) = self.entries.iter_mut().find(|e| e.name == spec.name) {
+            *slot = spec;
+        } else {
+            self.entries.push(spec);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BackendSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// All entries, in registration order.
+    pub fn specs(&self) -> &[BackendSpec] {
+        &self.entries
+    }
+
+    /// Build a backend by name.  Unknown names produce a typed
+    /// [`BackendError::Unknown`] listing every registered backend.
+    pub fn build(&self, name: &str, ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+        let Some(spec) = self.get(name) else {
+            return Err(anyhow::Error::new(BackendError::Unknown {
+                requested: name.to_string(),
+                registered: self.names().iter().map(|s| s.to_string()).collect(),
+            }));
+        };
+        (spec.factory)(ctx)
+    }
+}
+
+// ------------------------------------------------- native backend + factories
+
+/// The native cycle-level simulator behind a registry name.
+#[derive(Clone)]
+struct NativeBackend {
+    reg_name: &'static str,
+    inner: MacroGemm,
+}
+
+impl Backend for NativeBackend {
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        self.inner.gemm(a, m, k, w, n, layer_idx)
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        self.inner.prepare(w, n, k, layer_idx)
+    }
+
+    fn name(&self) -> &str {
+        self.reg_name
+    }
+
+    fn capabilities(&self) -> BackendCaps {
+        let mode = self.inner.mode;
+        BackendCaps {
+            available: true,
+            mode,
+            programmable_thresholds: mode == CimMode::Osa,
+            hybrid_boundary: matches!(mode, CimMode::Hcim | CimMode::Osa),
+            description: "native cycle-level macro simulator",
+        }
+    }
+
+    fn apply(&mut self, knobs: &BackendKnobs) -> Result<()> {
+        if let Some(seed) = knobs.noise_seed {
+            self.inner.noise_seed = seed;
+        }
+        if let Some(b) = knobs.fixed_b {
+            self.inner.fixed_b = b;
+        }
+        if let Some(ts) = &knobs.thresholds {
+            // rebuilding the OSE is the only non-trivial knob: skip it
+            // when the registers already hold these values (the
+            // coordinator re-applies per batch)
+            if ts.as_slice() != self.inner.ose.thresholds() {
+                self.inner.ose = Ose::with_default_candidates(ts.clone())?;
+            }
+        }
+        Ok(())
+    }
+
+    fn thresholds(&self) -> Option<Vec<i32>> {
+        Some(self.inner.ose.thresholds().to_vec())
+    }
+
+    fn clone_backend(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(self.clone()))
+    }
+}
+
+fn build_native(
+    ctx: &BackendCtx,
+    reg_name: &'static str,
+    mode: CimMode,
+) -> Result<Box<dyn Backend>> {
+    let gemm = MacroGemm::new(
+        mode,
+        ctx.cfg.spec,
+        ctx.cfg.fixed_b,
+        ctx.cfg.thresholds.clone(),
+        ctx.cfg.noise_seed,
+    )?
+    .with_plan_cache(ctx.plans.clone())
+    .with_pool(ctx.pool.clone());
+    Ok(Box::new(NativeBackend { reg_name, inner: gemm }))
+}
+
+fn build_macro_hybrid(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+    build_native(ctx, "macro-hybrid", ctx.cfg.mode)
+}
+
+fn build_macro_dcim(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+    build_native(ctx, "macro-dcim", CimMode::Dcim)
+}
+
+fn build_macro_acim(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+    build_native(ctx, "macro-acim", CimMode::Acim)
+}
+
+/// The PJRT artifact runtime as a registry entry.  Without the `pjrt`
+/// feature the stub `Runtime::load` fails with its canonical
+/// "unavailable" error, which this factory surfaces unchanged — the
+/// entry is *registered* either way so selection errors are precise.
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+    let _rt = crate::runtime::Runtime::load(&ctx.cfg.artifacts_dir, false)?;
+    unreachable!("the stub Runtime::load always errors")
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+    // Each backend instance currently loads its own Runtime (one per
+    // coordinator worker at startup).  If that load cost ever matters,
+    // cache one Arc<Runtime> per Engine and hand clones to instances —
+    // PjrtBackend already holds the runtime behind an Arc.
+    let rt = crate::runtime::Runtime::load(&ctx.cfg.artifacts_dir, false)?;
+    Ok(Box::new(PjrtBackend {
+        rt: Arc::new(rt),
+        mode: ctx.cfg.mode,
+        thresholds: ctx.cfg.thresholds.clone(),
+        fixed_b: ctx.cfg.fixed_b,
+        noise_seed: ctx.cfg.noise_seed,
+        plans: ctx.plans.clone(),
+    }))
+}
+
+/// Owning wrapper over the borrowed `runtime::PjrtGemm<'r>`: holds the
+/// runtime in an `Arc` and constructs the thin per-call engine on
+/// demand (plans are shared, so the per-call construction cost is one
+/// `Ose` build).
+#[cfg(feature = "pjrt")]
+struct PjrtBackend {
+    rt: Arc<crate::runtime::Runtime>,
+    mode: CimMode,
+    thresholds: Vec<i32>,
+    fixed_b: i32,
+    noise_seed: u64,
+    plans: Arc<PlanCache>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    fn engine(&self) -> Result<crate::runtime::PjrtGemm<'_>> {
+        let mut g =
+            crate::runtime::PjrtGemm::new(&self.rt, self.mode, self.thresholds.clone())?
+                .with_plan_cache(self.plans.clone());
+        g.fixed_b = self.fixed_b;
+        g.noise_seed = self.noise_seed;
+        Ok(g)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        self.engine()?.gemm(a, m, k, w, n, layer_idx)
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        self.engine()?.prepare(w, n, k, layer_idx)
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> BackendCaps {
+        BackendCaps {
+            available: true,
+            mode: self.mode,
+            programmable_thresholds: self.mode == CimMode::Osa,
+            hybrid_boundary: matches!(self.mode, CimMode::Hcim | CimMode::Osa),
+            description: "AOT PJRT artifact runtime",
+        }
+    }
+
+    fn apply(&mut self, knobs: &BackendKnobs) -> Result<()> {
+        if let Some(seed) = knobs.noise_seed {
+            self.noise_seed = seed;
+        }
+        if let Some(b) = knobs.fixed_b {
+            self.fixed_b = b;
+        }
+        if let Some(ts) = &knobs.thresholds {
+            self.thresholds = ts.clone();
+        }
+        Ok(())
+    }
+
+    fn thresholds(&self) -> Option<Vec<i32>> {
+        Some(self.thresholds.clone())
+    }
+
+    fn clone_backend(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(Self {
+            rt: self.rt.clone(),
+            mode: self.mode,
+            thresholds: self.thresholds.clone(),
+            fixed_b: self.fixed_b,
+            noise_seed: self.noise_seed,
+            plans: self.plans.clone(),
+        }))
+    }
+}
+
+// ------------------------------------------------------- request/response
+
+/// Per-request options, shared verbatim by in-process callers and the
+/// `POST /v2/infer` wire schema (DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferOptions {
+    /// QoS tier (gold / silver / batch).
+    pub tier: Tier,
+    /// Execution backend override; `None` = the engine's active backend.
+    pub backend: Option<String>,
+    /// Noise-seed override (reproducible analog noise per request).
+    pub noise_seed: Option<u64>,
+    /// Digital/analog boundary override in `0..=15` (HCIM-mode
+    /// backends); finer (lower) = more digital = more precise.
+    pub boundary: Option<i32>,
+}
+
+impl Default for InferOptions {
+    fn default() -> Self {
+        Self { tier: Tier::Silver, backend: None, noise_seed: None, boundary: None }
+    }
+}
+
+/// One inference request: a 32x32x3 uint8 image plus options.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub image: Vec<u8>,
+    pub options: InferOptions,
+}
+
+impl InferRequest {
+    pub fn new(image: Vec<u8>) -> Self {
+        Self { image, options: InferOptions::default() }
+    }
+
+    pub fn with_tier(mut self, tier: Tier) -> Self {
+        self.options.tier = tier;
+        self
+    }
+}
+
+/// One inference response (the coordinator's `Response` type).
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub tier: Tier,
+    /// Registry name of the backend that served this request.
+    pub backend: String,
+    pub latency: Duration,
+    /// Size of the engine batch this request rode in.
+    pub batch_size: usize,
+    /// Set when the request was *answered*, not served (`logits` is
+    /// empty or poisoned, `pred` is meaningless).
+    pub error: Option<String>,
+}
+
+// ----------------------------------------------------------------- Engine
+
+/// The assembled engine: graph + registry + shared plan cache + tile
+/// pool + the active backend name.  Cheap to share behind an `Arc`;
+/// every [`Engine::backend`] call hands out an independent instance
+/// wired onto the shared caches.
+pub struct Engine {
+    cfg: SystemConfig,
+    graph: Arc<QGraph>,
+    registry: Arc<BackendRegistry>,
+    plans: Arc<PlanCache>,
+    pool: Arc<ExecPool>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// The resolved configuration (includes the active backend name and
+    /// thread count).
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn graph(&self) -> &Arc<QGraph> {
+        &self.graph
+    }
+
+    /// The active backend's registry name.
+    pub fn backend_name(&self) -> &str {
+        &self.cfg.backend
+    }
+
+    pub fn registry(&self) -> &BackendRegistry {
+        &self.registry
+    }
+
+    /// Worker-thread count of the shared tile pool.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    pub fn pool(&self) -> &Arc<ExecPool> {
+        &self.pool
+    }
+
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
+    }
+
+    /// Plan-cache activity across every backend this engine handed out.
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
+    }
+
+    fn ctx<'a>(&self, cfg: &'a SystemConfig) -> BackendCtx<'a> {
+        BackendCtx { cfg, plans: self.plans.clone(), pool: self.pool.clone() }
+    }
+
+    /// Build an instance of the active backend.
+    pub fn backend(&self) -> Result<Box<dyn Backend>> {
+        self.backend_named(&self.cfg.backend)
+    }
+
+    /// Build a backend by registry name (shares the plan cache + pool).
+    pub fn backend_named(&self, name: &str) -> Result<Box<dyn Backend>> {
+        self.registry.build(name, &self.ctx(&self.cfg))
+    }
+
+    /// Build a native backend pinned to an explicit CIM mode under an
+    /// explicit config — the figure harnesses' entry point (ablation
+    /// overrides mutate a copy of the config after load).
+    pub fn backend_with(&self, cfg: &SystemConfig, mode: CimMode) -> Result<Box<dyn Backend>> {
+        let name = match mode {
+            CimMode::Dcim => "macro-dcim",
+            CimMode::Acim => "macro-acim",
+            _ => "macro-hybrid",
+        };
+        let mut c = cfg.clone();
+        c.mode = mode;
+        self.registry.build(name, &self.ctx(&c))
+    }
+
+    /// [`Engine::backend_with`] under the engine's own config.
+    pub fn backend_for_mode(&self, mode: CimMode) -> Result<Box<dyn Backend>> {
+        self.backend_with(&self.cfg, mode)
+    }
+
+    /// The active backend over a *fresh, unshared* plan cache — for
+    /// cold-start measurement (the pipeline bench) and isolation tests.
+    pub fn backend_cold(&self) -> Result<Box<dyn Backend>> {
+        let ctx = BackendCtx {
+            cfg: &self.cfg,
+            plans: Arc::new(PlanCache::new()),
+            pool: self.pool.clone(),
+        };
+        self.registry.build(&self.cfg.backend, &ctx)
+    }
+
+    /// A model executor over a fresh instance of the active backend.
+    pub fn executor(&self) -> Result<Executor<'_, Box<dyn Backend>>> {
+        Ok(Executor::new(self.graph.as_ref(), self.backend()?))
+    }
+}
+
+// ---------------------------------------------------------------- builder
+
+/// Step-wise [`Engine`] construction:
+///
+/// ```no_run
+/// # use osa_hcim::engine::Engine;
+/// # use osa_hcim::nn::QGraph;
+/// # use std::sync::Arc;
+/// let engine = Engine::builder()
+///     .graph(Arc::new(QGraph::synthetic()))
+///     .backend("macro-dcim")
+///     .threads(2)
+///     .loss_profile("loose")
+///     .build()?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Default)]
+pub struct EngineBuilder {
+    cfg: Option<SystemConfig>,
+    graph: Option<Arc<QGraph>>,
+    backend: Option<String>,
+    threads: Option<usize>,
+    loss_profile: Option<String>,
+    registry: Option<Arc<BackendRegistry>>,
+    pool: Option<Arc<ExecPool>>,
+    plans: Option<Arc<PlanCache>>,
+}
+
+impl EngineBuilder {
+    /// Start from a full [`SystemConfig`] (defaults otherwise).
+    pub fn config(mut self, cfg: SystemConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// The model graph (required).
+    pub fn graph(mut self, graph: Arc<QGraph>) -> Self {
+        self.graph = Some(graph);
+        self
+    }
+
+    /// Active backend by registry name (overrides `[engine] backend`).
+    pub fn backend(mut self, name: impl Into<String>) -> Self {
+        self.backend = Some(name.into());
+        self
+    }
+
+    /// Exact tile-pool size (overrides `[engine] threads`; not clamped
+    /// to the core count — parity tests size pools explicitly).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Scale the calibrated OSE thresholds onto a loss-constraint
+    /// profile (`tight` / `normal` / `loose` / `max-eff`) — the static
+    /// flavor of what the serving governor does per tier.
+    pub fn loss_profile(mut self, profile: impl Into<String>) -> Self {
+        self.loss_profile = Some(profile.into());
+        self
+    }
+
+    /// A custom backend registry (defaults to
+    /// [`BackendRegistry::builtin`]).
+    pub fn registry(mut self, registry: Arc<BackendRegistry>) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Share an existing tile pool instead of creating one.
+    pub fn pool(mut self, pool: Arc<ExecPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Share an existing plan cache instead of creating one.
+    pub fn plan_cache(mut self, plans: Arc<PlanCache>) -> Self {
+        self.plans = Some(plans);
+        self
+    }
+
+    /// Validate and assemble.  Fails fast (typed, field-named errors)
+    /// on: missing graph, invalid config, zero threads, unknown or
+    /// unavailable active backend — the error lists every registered
+    /// backend.
+    pub fn build(self) -> Result<Engine> {
+        let mut cfg = self.cfg.unwrap_or_default();
+        if let Some(t) = self.threads {
+            if t == 0 {
+                anyhow::bail!("EngineBuilder::threads must be >= 1");
+            }
+            cfg.engine_threads = t;
+        }
+        if let Some(b) = self.backend {
+            cfg.backend = b;
+        }
+        if let Some(profile) = &self.loss_profile {
+            cfg.thresholds = crate::osa::profile_thresholds(&cfg.thresholds, profile)
+                .with_context(|| {
+                    format!(
+                        "unknown loss profile {profile:?} (one of: {})",
+                        crate::osa::PROFILES.join(", ")
+                    )
+                })?;
+        }
+        cfg.validate()?;
+        let graph = self
+            .graph
+            .context("EngineBuilder: a graph is required (call .graph(Arc<QGraph>))")?;
+        let registry =
+            self.registry.unwrap_or_else(|| Arc::new(BackendRegistry::builtin()));
+        let pool = self.pool.unwrap_or_else(|| {
+            if self.threads.is_some() {
+                ExecPool::new(cfg.engine_threads)
+            } else {
+                // auto-sized pools are clamped to the machine: engine
+                // callers (coordinator workers) block on the pool for
+                // the duration of their GEMMs, so oversubscription buys
+                // nothing (DESIGN.md §11)
+                let cores =
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                ExecPool::new(cfg.resolved_engine_threads().min(cores).max(1))
+            }
+        });
+        let plans = self.plans.unwrap_or_else(|| Arc::new(PlanCache::new()));
+        let engine = Engine { cfg, graph, registry, plans, pool };
+        // fail fast: an unknown or unavailable active backend is a
+        // build-time error, not a first-request surprise
+        engine.backend().with_context(|| {
+            format!("building active backend {:?}", engine.cfg.backend)
+        })?;
+        Ok(engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_engine() -> Engine {
+        Engine::builder().graph(Arc::new(QGraph::synthetic())).build().unwrap()
+    }
+
+    #[test]
+    fn builtin_registry_names_and_order() {
+        let r = BackendRegistry::builtin();
+        assert_eq!(r.names(), vec!["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"]);
+        assert!(r.get("macro-hybrid").unwrap().available);
+        #[cfg(not(feature = "pjrt"))]
+        assert!(!r.get("pjrt").unwrap().available);
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_registered() {
+        let e = synth_engine().backend_named("macro-gpu").unwrap_err();
+        let be = e.downcast_ref::<BackendError>().expect("typed BackendError");
+        match be {
+            BackendError::Unknown { requested, registered } => {
+                assert_eq!(requested, "macro-gpu");
+                assert!(registered.contains(&"macro-hybrid".to_string()));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(e.to_string().contains("macro-dcim"), "{e}");
+    }
+
+    #[test]
+    fn builder_requires_graph_and_valid_threads() {
+        assert!(Engine::builder().build().is_err());
+        let err = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .threads(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_backend_and_profile() {
+        let err = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .backend("macro-tpu")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("registered"), "{err:#}");
+        let err = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .loss_profile("bogus")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("loss profile"), "{err:#}");
+    }
+
+    #[test]
+    fn loss_profile_scales_thresholds_monotonically() {
+        let base = SystemConfig::default().thresholds;
+        let loose = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .loss_profile("loose")
+            .build()
+            .unwrap();
+        let got = loose.config().thresholds.clone();
+        assert!(got.iter().zip(&base).all(|(a, b)| a >= b), "{got:?} vs {base:?}");
+        assert!(got.iter().sum::<i32>() > base.iter().sum::<i32>());
+        // normal is the calibrated identity
+        let normal = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .loss_profile("normal")
+            .build()
+            .unwrap();
+        assert_eq!(normal.config().thresholds, base);
+    }
+
+    #[test]
+    fn backends_share_the_engine_plan_cache() {
+        let engine = synth_engine();
+        let mut a = engine.backend().unwrap();
+        let mut b = engine.backend().unwrap();
+        let w: Vec<i32> = (0..4 * 16).map(|i| (i % 7) as i32 - 3).collect();
+        a.prepare(&w, 4, 16, 0).unwrap();
+        b.prepare(&w, 4, 16, 0).unwrap();
+        let stats = engine.plan_stats();
+        assert_eq!((stats.misses, stats.hits), (1, 1), "second prepare must hit");
+        // a cold backend does NOT share it
+        let mut c = engine.backend_cold().unwrap();
+        c.prepare(&w, 4, 16, 0).unwrap();
+        assert_eq!(engine.plan_stats().misses, 1);
+    }
+
+    #[test]
+    fn knobs_round_trip() {
+        let engine = synth_engine();
+        let mut b = engine.backend().unwrap();
+        assert_eq!(b.name(), "macro-hybrid");
+        let caps = b.capabilities();
+        assert!(caps.available && caps.programmable_thresholds, "{caps:?}");
+        let ts = vec![1, 2, 3, 4, 5];
+        b.apply(&BackendKnobs {
+            noise_seed: Some(7),
+            fixed_b: Some(6),
+            thresholds: Some(ts.clone()),
+        })
+        .unwrap();
+        assert_eq!(b.thresholds(), Some(ts));
+        // descending thresholds are an Ose validation error
+        assert!(b
+            .apply(&BackendKnobs { thresholds: Some(vec![5, 1, 0, 0, 0]), ..Default::default() })
+            .is_err());
+    }
+
+    #[test]
+    fn mode_pinned_backends_report_their_mode() {
+        let engine = synth_engine();
+        let d = engine.backend_for_mode(CimMode::Dcim).unwrap();
+        assert_eq!(d.name(), "macro-dcim");
+        assert_eq!(d.capabilities().mode, CimMode::Dcim);
+        assert!(!d.capabilities().programmable_thresholds);
+        let a = engine.backend_for_mode(CimMode::Acim).unwrap();
+        assert_eq!(a.name(), "macro-acim");
+        let h = engine.backend_for_mode(CimMode::Hcim).unwrap();
+        assert_eq!(h.name(), "macro-hybrid");
+        assert_eq!(h.capabilities().mode, CimMode::Hcim);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_is_registered_but_unavailable() {
+        let engine = synth_engine();
+        assert!(!engine.registry().get("pjrt").unwrap().available);
+        let err = engine.backend_named("pjrt").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn executor_runs_on_a_boxed_backend() {
+        let engine = synth_engine();
+        let mut exec = engine.executor().unwrap();
+        exec.preplan().unwrap();
+        let img = vec![100u8; 32 * 32 * 3];
+        let (logits, stats) = exec.forward(&img, 1).unwrap();
+        assert_eq!(logits.len(), engine.graph().num_classes);
+        assert!(stats.account.macro_ops > 0);
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<BackendRegistry>();
+    }
+}

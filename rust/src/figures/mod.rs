@@ -7,11 +7,10 @@
 
 use crate::config::{CimMode, SystemConfig};
 use crate::energy::{AreaParams, EnergyParams, CLK_ANALOG_HZ};
+use crate::engine::{Backend, BackendKnobs, Engine};
 use crate::macrosim::{counts_for_boundary, MacroUnit};
 use crate::nn::data::{Dataset, Golden};
 use crate::nn::{accuracy, cross_entropy, Executor, QGraph};
-use crate::sched::plan::PlanCache;
-use crate::sched::MacroGemm;
 use crate::spec::{MacroSpec, B_CANDIDATES};
 use crate::util::prng::SplitMix64;
 use anyhow::{Context, Result};
@@ -19,19 +18,21 @@ use std::path::Path;
 use std::sync::Arc;
 
 /// Shared experiment context (artifacts loaded once).
+///
+/// All engine construction flows through [`FigCtx::backend`], i.e.
+/// through the context's [`Engine`]: the weight-stationary plan cache
+/// and the tile pool (sized from `[engine] threads` / `--threads`) are
+/// shared by every backend the context hands out, so each layer is
+/// packed once per context across all figure harnesses and every
+/// calibration loss evaluation.
 pub struct FigCtx {
+    /// Mutable copy of the engine's config: ablation harnesses
+    /// (`--fs-frac`, `--nq-shift`) intentionally override spec knobs
+    /// after load, and [`FigCtx::backend`] reads *this* copy.
     pub cfg: SystemConfig,
     pub ds: Dataset,
-    pub graph: QGraph,
     pub golden: Golden,
-    /// Weight-stationary layer plans shared by every engine this context
-    /// hands out: plans are mode- and threshold-independent, so each
-    /// layer is packed once per context across all figure harnesses and
-    /// every calibration loss evaluation.
-    pub plans: Arc<PlanCache>,
-    /// Tile-execution pool shared by every engine this context hands
-    /// out, sized from `[engine] threads` / `--threads`.
-    pub pool: Arc<crate::sched::exec::ExecPool>,
+    pub engine: Engine,
 }
 
 impl FigCtx {
@@ -40,28 +41,20 @@ impl FigCtx {
         cfg.spec
             .validate_against_artifacts(&dir)
             .context("spec.json mismatch — run `make artifacts`")?;
-        let pool = crate::sched::exec::ExecPool::new(cfg.resolved_engine_threads());
-        Ok(Self {
-            ds: Dataset::load(&dir)?,
-            graph: QGraph::load(&dir)?,
-            golden: Golden::load(&dir)?,
-            cfg,
-            plans: Arc::new(PlanCache::new()),
-            pool,
-        })
+        let graph = Arc::new(QGraph::load(&dir)?);
+        let engine = Engine::builder().config(cfg.clone()).graph(graph).build()?;
+        Ok(Self { ds: Dataset::load(&dir)?, golden: Golden::load(&dir)?, cfg, engine })
     }
 
-    fn gemm(&self, mode: CimMode) -> MacroGemm {
-        MacroGemm::new(
-            mode,
-            self.cfg.spec,
-            self.cfg.fixed_b,
-            self.cfg.thresholds.clone(),
-            self.cfg.noise_seed,
-        )
-        .expect("config thresholds validated at load")
-        .with_plan_cache(self.plans.clone())
-        .with_pool(self.pool.clone())
+    /// The loaded model graph.
+    pub fn graph(&self) -> &QGraph {
+        self.engine.graph().as_ref()
+    }
+
+    /// A backend pinned to `mode` under the context's (possibly
+    /// ablation-overridden) config.
+    pub fn backend(&self, mode: CimMode) -> Result<Box<dyn Backend>> {
+        self.engine.backend_with(&self.cfg, mode)
     }
 
     /// Run `n` test images through a mode.
@@ -72,17 +65,19 @@ impl FigCtx {
         thresholds: &[i32],
         n: usize,
     ) -> Result<ModeEval> {
-        let mut gemm = self.gemm(mode);
-        gemm.fixed_b = fixed_b;
-        if mode == CimMode::Osa && !thresholds.is_empty() {
-            gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(thresholds.to_vec())?;
-        }
-        let mut exec = Executor::new(&self.graph, gemm);
+        let mut gemm = self.backend(mode)?;
+        gemm.apply(&BackendKnobs {
+            fixed_b: Some(fixed_b),
+            thresholds: (mode == CimMode::Osa && !thresholds.is_empty())
+                .then(|| thresholds.to_vec()),
+            ..Default::default()
+        })?;
+        let mut exec = Executor::new(self.graph(), gemm);
         let (images, labels) = self.ds.test_batch(0, n);
         let (logits, stats) = exec.forward(images, labels.len())?;
         Ok(ModeEval {
-            acc: accuracy(&logits, labels, self.graph.num_classes),
-            ce: cross_entropy(&logits, labels, self.graph.num_classes),
+            acc: accuracy(&logits, labels, self.graph().num_classes),
+            ce: cross_entropy(&logits, labels, self.graph().num_classes),
             tops_w: stats.account.tops_per_watt(&self.cfg.spec),
             b_hist: stats.b_hist,
             energy_nj_per_img: stats.account.total_energy_j() * 1e9 / labels.len() as f64,
@@ -199,9 +194,9 @@ pub fn fig6() -> String {
 
 /// Power & area breakdowns at the OSA operating mix of a real workload.
 pub fn fig7(ctx: &FigCtx, images: usize) -> Result<String> {
-    let mut gemm = ctx.gemm(CimMode::Osa);
-    gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(ctx.cfg.thresholds.clone())?;
-    let mut exec = Executor::new(&ctx.graph, gemm);
+    // the context's backend is already programmed with the configured
+    // thresholds (the engine factory reads `cfg.thresholds`)
+    let mut exec = Executor::new(ctx.graph(), ctx.backend(CimMode::Osa)?);
     let (imgs, labels) = ctx.ds.test_batch(0, images);
     let (_, stats) = exec.forward(imgs, labels.len())?;
     let mut out = String::from("Fig 7 — power & area breakdown of OSA-HCIM\n");
@@ -243,9 +238,7 @@ fn b_glyph(b: i32) -> char {
 
 /// Per-pixel B_D/A maps of selected hidden layers for one image.
 pub fn fig8a(ctx: &FigCtx, image_idx: usize, layers: &[&str]) -> Result<String> {
-    let mut gemm = ctx.gemm(CimMode::Osa);
-    gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(ctx.cfg.thresholds.clone())?;
-    let mut exec = Executor::new(&ctx.graph, gemm);
+    let mut exec = Executor::new(ctx.graph(), ctx.backend(CimMode::Osa)?);
     exec.collect_bda = true;
     let (imgs, labels) = ctx.ds.test_batch(image_idx, 1);
     let (_, stats) = exec.forward(imgs, 1)?;
@@ -280,9 +273,7 @@ pub fn fig8a(ctx: &FigCtx, image_idx: usize, layers: &[&str]) -> Result<String> 
 
 /// Proportion of each B_D/A across conv layers of the network.
 pub fn fig8b(ctx: &FigCtx, images: usize) -> Result<String> {
-    let mut gemm = ctx.gemm(CimMode::Osa);
-    gemm.ose = crate::macrosim::ose::Ose::with_default_candidates(ctx.cfg.thresholds.clone())?;
-    let mut exec = Executor::new(&ctx.graph, gemm);
+    let mut exec = Executor::new(ctx.graph(), ctx.backend(CimMode::Osa)?);
     exec.collect_bda = true;
     let (imgs, labels) = ctx.ds.test_batch(0, images);
     let (_, stats) = exec.forward(imgs, labels.len())?;
@@ -420,28 +411,27 @@ pub fn calibrate_osa(
     let labels = labels.to_vec();
     let n = labels.len();
     // baseline loss: DCIM
-    let mut dcim_exec = Executor::new(&ctx.graph, ctx.gemm(CimMode::Dcim));
+    let mut dcim_exec = Executor::new(ctx.graph(), ctx.backend(CimMode::Dcim)?);
     let (logits, _) = dcim_exec.forward(imgs, n)?;
-    let baseline = cross_entropy(&logits, &labels, ctx.graph.num_classes);
+    let baseline = cross_entropy(&logits, &labels, ctx.graph().num_classes);
     // saliency upper bound after K-normalization: the small-K stem layer
     // can scale a full-range raw S up to ~nq_max*3*hmus * (cols/27) ≈ 900
     let s_max = 1024;
-    let graph = &ctx.graph;
-    let cfg = &ctx.cfg;
-    let plans = ctx.plans.clone();
-    let pool = ctx.pool.clone();
+    let graph = ctx.graph();
     let mut loss_fn = |ts: &[i32]| -> f64 {
-        // plans are threshold-independent: every evaluation of the search
-        // reuses the context's packed weight tiles
-        let gemm =
-            match MacroGemm::new(CimMode::Osa, cfg.spec, cfg.fixed_b, ts.to_vec(), cfg.noise_seed)
-            {
-                Ok(g) => g.with_plan_cache(plans.clone()).with_pool(pool.clone()),
-                Err(e) => {
-                    log::error!("bad thresholds {ts:?}: {e:#}");
-                    return f64::INFINITY;
-                }
-            };
+        // plans are threshold-independent: every evaluation of the
+        // search reuses the engine's packed weight tiles (one backend
+        // per evaluation, all on the shared plan cache + pool)
+        let gemm = match ctx.backend(CimMode::Osa).and_then(|mut g| {
+            g.apply(&BackendKnobs { thresholds: Some(ts.to_vec()), ..Default::default() })?;
+            Ok(g)
+        }) {
+            Ok(g) => g,
+            Err(e) => {
+                log::error!("bad thresholds {ts:?}: {e:#}");
+                return f64::INFINITY;
+            }
+        };
         let mut exec = Executor::new(graph, gemm);
         match exec.forward(imgs, n) {
             Ok((logits, _)) => cross_entropy(&logits, &labels, graph.num_classes),

@@ -16,6 +16,12 @@
 //!   through the macro datapath;
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas tile
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at inference;
+//! * [`engine`] — the unified front door: an object-safe [`engine::Backend`]
+//!   abstraction, a string-selectable [`engine::BackendRegistry`]
+//!   (`macro-hybrid` / `macro-dcim` / `macro-acim` / `pjrt`), the
+//!   [`engine::EngineBuilder`] that owns plan-cache/pool wiring, and the
+//!   typed [`engine::InferRequest`]/[`engine::InferResponse`] structs
+//!   shared by in-process callers and `POST /v2/infer`;
 //! * [`coordinator`] — threaded request router / batcher / server loop
 //!   with QoS-tiered bounded admission;
 //! * [`serve`] — the network surface: HTTP/1.1 gateway, per-tier SLO
@@ -39,6 +45,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod figures;
 pub mod io;
 pub mod macrosim;

@@ -9,9 +9,9 @@
 use anyhow::{bail, Context, Result};
 use osa_hcim::cli::{Cli, Command, Opt};
 use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::engine::Engine;
 use osa_hcim::figures::{self, FigCtx};
 use osa_hcim::nn::{accuracy, Executor, QGraph};
-use osa_hcim::sched::MacroGemm;
 use std::path::PathBuf;
 
 fn common_opts() -> Vec<Opt> {
@@ -20,6 +20,7 @@ fn common_opts() -> Vec<Opt> {
         Opt::value("config", "TOML config file", None),
         Opt::value("results", "directory for result text files", Some("results")),
         Opt::value("mode", "cim mode: dcim|hcim|osa|acim", Some("osa")),
+        Opt::value("backend", "execution backend: macro-hybrid|macro-dcim|macro-acim|pjrt", None),
         Opt::value("fixed-b", "boundary for hcim mode", Some("8")),
         Opt::value("images", "number of test images", Some("128")),
         Opt::value("calib-images", "images for threshold calibration", Some("48")),
@@ -28,7 +29,7 @@ fn common_opts() -> Vec<Opt> {
         Opt::value("nq-shift", "OSE N/Q shift (ablation override)", None),
         Opt::value("seed", "noise seed", None),
         Opt::value("thresholds", "comma-separated OSE thresholds", None),
-        Opt::value("threads", "tile-execution pool size (0 = all cores)", None),
+        Opt::value("threads", "tile-execution pool size, >= 1 (omit for all cores)", None),
     ]
 }
 
@@ -43,18 +44,28 @@ fn build_config(args: &osa_hcim::cli::Args) -> Result<SystemConfig> {
     if let Some(mode) = args.get("mode") {
         cfg.mode = CimMode::parse(mode)?;
     }
+    if let Some(backend) = args.get("backend") {
+        cfg.backend = backend.to_string();
+    }
     cfg.fixed_b = args.get_i32("fixed-b", cfg.fixed_b)?;
     if let Some(sigma) = args.get("sigma") {
         cfg.spec.sigma_code = sigma.parse()?;
     }
     cfg.noise_seed = args.get_u64("seed", cfg.noise_seed)?;
-    cfg.engine_threads = args.get_usize("threads", cfg.engine_threads)?;
+    if args.get("threads").is_some() {
+        let threads = args.get_usize("threads", 0)?;
+        if threads == 0 {
+            bail!("--threads must be >= 1 (omit the flag for auto-sizing)");
+        }
+        cfg.engine_threads = threads;
+    }
     if let Some(ts) = args.get("thresholds") {
         cfg.thresholds = ts
             .split(',')
             .map(|s| s.trim().parse::<i32>().context("bad threshold"))
             .collect::<Result<_>>()?;
     }
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -187,20 +198,34 @@ fn main() -> Result<()> {
                 // Fall back to the synthetic graph when the AOT artifacts
                 // are not built so the network surface is always testable.
                 let graph = match FigCtx::load(cfg.clone()) {
-                    Ok(ctx) => std::sync::Arc::new(ctx.graph),
+                    Ok(ctx) => ctx.engine.graph().clone(),
                     Err(e) => {
                         eprintln!("artifacts not available ({e:#}); serving the synthetic graph");
                         std::sync::Arc::new(QGraph::synthetic())
                     }
                 };
-                let gateway = osa_hcim::serve::Gateway::start(&cfg, graph, listen)?;
+                let engine = Engine::builder().config(cfg.clone()).graph(graph).build()?;
+                println!(
+                    "engine: backend={} threads={} (registered: {})",
+                    engine.backend_name(),
+                    engine.threads(),
+                    engine.registry().names().join(", ")
+                );
+                let gateway =
+                    osa_hcim::serve::Gateway::with_engine(std::sync::Arc::new(engine), listen)?;
                 let addr = gateway.addr();
                 println!("gateway listening on http://{addr}");
                 println!("  GET  http://{addr}/healthz");
+                println!("  GET  http://{addr}/v1/version");
                 println!("  GET  http://{addr}/metrics");
                 println!(
-                    "  curl -s -X POST http://{addr}/v1/infer -d \
-                     '{{\"tier\":\"gold\",\"image\":[...3072 uint8...]}}'"
+                    "  curl -s -X POST http://{addr}/v2/infer -d \
+                     '{{\"image\":[...3072 uint8...],\"options\":{{\"tier\":\"gold\",\
+                     \"backend\":\"macro-hybrid\"}}}}'"
+                );
+                println!(
+                    "  POST http://{addr}/v1/infer        (legacy adapter: \
+                     '{{\"tier\":\"gold\",\"image\":[...]}}')"
                 );
                 println!(
                     "  POST http://{addr}/v1/infer_batch  (NDJSON: one image per line, \
@@ -210,12 +235,14 @@ fn main() -> Result<()> {
                 return Ok(());
             }
             let ctx = FigCtx::load(cfg.clone())?;
-            let graph = std::sync::Arc::new(ctx.graph);
+            let graph = ctx.engine.graph().clone();
             let n = args.get_usize("requests", 256)?.min(ctx.ds.test_n());
             // the closed-loop demo submits everything up front: size the
             // admission bound so it exercises batching, not backpressure
             cfg.queue_cap = cfg.queue_cap.max(n);
-            let server = osa_hcim::coordinator::Server::start(&cfg, graph)?;
+            let engine = Engine::builder().config(cfg.clone()).graph(graph).build()?;
+            let server =
+                osa_hcim::coordinator::Server::with_engine(std::sync::Arc::new(engine))?;
             // demo drives all three QoS tiers round-robin
             let tiers = osa_hcim::serve::Tier::ALL;
             let mut rxs = Vec::new();
@@ -313,8 +340,20 @@ fn main() -> Result<()> {
             println!("graph.json + weights.rten: OK ({} convs)", graph.convs.len());
             let golden = osa_hcim::nn::data::Golden::load(&cfg.artifacts_dir)?;
             println!("golden.rten: OK (float acc {:.2}%)", golden.float_acc * 100.0);
-            // native DCIM must reproduce the python DCIM golden logits
-            let mut exec = Executor::new(&graph, MacroGemm::with_mode(CimMode::Dcim));
+            // native DCIM must reproduce the python DCIM golden logits —
+            // driven through the unified engine API like everything else
+            let engine = Engine::builder()
+                .config(cfg.clone())
+                .graph(std::sync::Arc::new(graph.clone()))
+                .build()?;
+            println!(
+                "engine: backend={} threads={} (registered: {})",
+                engine.backend_name(),
+                engine.threads(),
+                engine.registry().names().join(", ")
+            );
+            let mut exec =
+                Executor::new(&graph, engine.backend_for_mode(CimMode::Dcim)?);
             exec.preplan()?; // plan/execute split: pack every layer up front
             let n = golden.golden_n.min(16);
             let (imgs, _) = ds.test_batch(0, n);

@@ -54,6 +54,32 @@ pub fn loss_profile(name: &str) -> Option<Vec<f64>> {
 /// All profile names, in increasing-efficiency order.
 pub const PROFILES: [&str; 4] = ["tight", "normal", "loose", "max-eff"];
 
+/// Scale the *calibrated* (`normal`-profile) thresholds onto another
+/// loss-constraint profile: each level is multiplied by the ratio of
+/// the profile's loss budget to the normal budget (a looser budget
+/// admits a higher saliency threshold, steering more MACs into the
+/// cheap analog domain), then clamped to stay ascending — the
+/// [`crate::macrosim::ose::Ose`] register requirement.
+///
+/// This is the static flavor of the serving governor's per-tier
+/// contract derivation, shared by `serve::governor` and
+/// `engine::EngineBuilder::loss_profile`.  `None` for unknown profiles.
+pub fn profile_thresholds(calibrated: &[i32], profile: &str) -> Option<Vec<i32>> {
+    let normal = loss_profile("normal")?;
+    let prof = loss_profile(profile)?;
+    let mut ts = Vec::with_capacity(calibrated.len());
+    let mut hi = i32::MIN;
+    for (i, &t) in calibrated.iter().enumerate() {
+        let scale = prof[i % prof.len()] / normal[i % normal.len()].max(1e-12);
+        let v = ((t as f64) * scale).round();
+        let v = v.clamp(i32::MIN as f64, i32::MAX as f64) as i32;
+        // keep ascending even for non-monotone scale ratios
+        hi = hi.max(v);
+        ts.push(hi);
+    }
+    Some(ts)
+}
+
 /// Calibrate OSE thresholds against a loss evaluator.
 ///
 /// * `loss_fn(thresholds)` — runs the OSA model and returns the loss.

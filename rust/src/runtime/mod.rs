@@ -1,9 +1,9 @@
 //! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
 //! `python -m compile.aot` and executes them on the CPU PJRT client.
 //!
-//! The real implementation ([`pjrt`], feature `pjrt`) is the only code
+//! The real implementation (`pjrt`, feature `pjrt`) is the only code
 //! touching the `xla` crate, which exists solely in the offline mirror.
-//! Default builds get an API-compatible [`stub`] whose `Runtime::load`
+//! Default builds get an API-compatible `stub` whose `Runtime::load`
 //! returns a clear error, so the rest of the stack (tests, examples,
 //! the coordinator) compiles and runs on the native engine without the
 //! bindings.  Both variants implement `sched::GemmEngine` and draw their

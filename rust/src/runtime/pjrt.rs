@@ -178,7 +178,7 @@ impl<'r> PjrtGemm<'r> {
 }
 
 impl<'r> GemmEngine for PjrtGemm<'r> {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "pjrt-artifacts"
     }
 

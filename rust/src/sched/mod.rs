@@ -90,7 +90,11 @@ pub struct GemmResult {
 }
 
 /// Abstract GEMM engine so `nn::Executor` can run on either the native
-/// simulator or the PJRT artifacts.
+/// simulator or the PJRT artifacts.  The public, runtime-selectable
+/// face of this trait is `engine::Backend` (an object-safe rework with
+/// a capability surface); `Box<dyn engine::Backend>` implements
+/// `GemmEngine`, so anything generic over this trait also runs on a
+/// registry-selected backend.
 pub trait GemmEngine {
     /// `a`: `[m, k]` uint8-as-i32 row-major; `w`: `[n, k]` int8-as-i32.
     fn gemm(&mut self, a: &[i32], m: usize, k: usize, w: &[i32], n: usize, layer_idx: u64)
@@ -103,8 +107,9 @@ pub trait GemmEngine {
         Ok(())
     }
 
-    /// Engine label for logs/metrics.
-    fn name(&self) -> &'static str;
+    /// Engine label for logs/metrics (borrowed from the engine so
+    /// `dyn`-backed engines can report their registry name).
+    fn name(&self) -> &str;
 }
 
 /// Native tiled macro GEMM (the cycle-level path).
@@ -550,7 +555,7 @@ fn dual_unit(
 }
 
 impl GemmEngine for MacroGemm {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "native-macrosim"
     }
 

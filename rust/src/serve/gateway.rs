@@ -35,6 +35,7 @@ use super::http::{self, HttpRequest, ReadError};
 use super::qos::{SubmitError, Tier};
 use crate::config::SystemConfig;
 use crate::coordinator::{Metrics, Server};
+use crate::engine::{Engine, InferOptions, InferRequest};
 use crate::io::json::{self, arr, num, obj, s, JsonValue};
 use crate::nn::QGraph;
 use crate::spec::MacroSpec;
@@ -89,6 +90,8 @@ struct ConnOpts {
     /// Whole-request deadline (slowloris guard; ZERO = disabled).
     request_deadline: Duration,
     spec: MacroSpec,
+    /// Tier assumed when a request names none (`[serve] default_tier`).
+    default_tier: Tier,
 }
 
 /// Bounded queue of accepted-but-unclaimed connections (the accept
@@ -167,15 +170,23 @@ pub struct Gateway {
 }
 
 impl Gateway {
-    /// Bind `listen` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
-    /// start serving the graph under the given config.
+    /// Bind `listen` and serve a default [`Engine`] built for the
+    /// config (convenience over [`Gateway::with_engine`]).
     pub fn start(cfg: &SystemConfig, graph: Arc<QGraph>, listen: &str) -> Result<Gateway> {
+        let engine = Engine::builder().config(cfg.clone()).graph(graph).build()?;
+        Self::with_engine(Arc::new(engine), listen)
+    }
+
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
+    /// start serving on an assembled engine.
+    pub fn with_engine(engine: Arc<Engine>, listen: &str) -> Result<Gateway> {
+        let cfg = engine.config().clone();
         // bind first: a failed bind (port in use) must not leave a live
         // batcher + worker pool behind with nothing to shut them down
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
         let addr = listener.local_addr().context("local_addr")?;
-        let server = Arc::new(Server::start(cfg, graph)?);
+        let server = Arc::new(Server::with_engine(engine)?);
         let read_timeout = match cfg.read_timeout_ms {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
@@ -187,6 +198,7 @@ impl Gateway {
             // the peer trickles bytes to keep each individual read alive
             request_deadline: read_timeout.map(|t| t * 4).unwrap_or(Duration::ZERO),
             spec: cfg.spec,
+            default_tier: cfg.default_tier,
         };
         let ctx = Arc::new(ConnCtx {
             server,
@@ -425,6 +437,66 @@ fn respond_typed(
     }
 }
 
+/// [`respond`] with extra response headers (the 405 `Allow` list).
+fn respond_with_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+    keep: bool,
+) -> bool {
+    match http::write_response_with(
+        stream,
+        status,
+        reason,
+        "application/json",
+        extra_headers,
+        body.as_bytes(),
+        keep,
+    ) {
+        Ok(()) => true,
+        Err(e) => {
+            log::debug!("writing response: {e}");
+            false
+        }
+    }
+}
+
+/// The methods a known path answers, `None` for unknown paths.  Drives
+/// the 405-vs-404 split: a wrong method on a real endpoint must say so
+/// (and name the right method in `Allow`) instead of denying the path
+/// exists.
+fn allowed_methods(path: &str) -> Option<&'static [&'static str]> {
+    match path {
+        "/healthz" | "/metrics" | "/v1/version" => Some(&["GET"]),
+        "/v1/infer" | "/v1/infer_batch" | "/v2/infer" => Some(&["POST"]),
+        _ => None,
+    }
+}
+
+/// The `GET /v1/version` document: crate version, active backend,
+/// engine thread count, and every registered backend with availability
+/// — what a fleet rollout checks before shifting traffic.
+fn version_json(engine: &Engine) -> JsonValue {
+    obj(vec![
+        ("version", s(env!("CARGO_PKG_VERSION"))),
+        ("backend", s(engine.backend_name())),
+        ("engine_threads", num(engine.threads() as f64)),
+        ("api", arr(["v1", "v2"].into_iter().map(s))),
+        (
+            "backends",
+            arr(engine.registry().specs().iter().map(|sp| {
+                obj(vec![
+                    ("name", s(sp.name)),
+                    ("available", JsonValue::Bool(sp.available)),
+                    ("description", s(sp.description)),
+                ])
+            })),
+        ),
+    ])
+}
+
 /// The keep-alive request loop for one connection (DESIGN.md §10).
 /// Returns when the peer closes, a read stalls past the timeout, the
 /// request is malformed, the request asked for `Connection: close`, or
@@ -490,7 +562,20 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
         let path = req.path.split('?').next().unwrap_or("");
         let wrote_ok = match (req.method.as_str(), path) {
             ("GET", "/healthz") => {
-                let body = obj(vec![("status", s("ok"))]).to_string_compact();
+                // enriched liveness: fleet rollouts verify what is
+                // actually serving (backend, threads, crate version)
+                let e = ctx.server.engine();
+                let body = obj(vec![
+                    ("status", s("ok")),
+                    ("backend", s(e.backend_name())),
+                    ("engine_threads", num(e.threads() as f64)),
+                    ("version", s(env!("CARGO_PKG_VERSION"))),
+                ])
+                .to_string_compact();
+                respond(&mut stream, 200, "OK", &body, keep)
+            }
+            ("GET", "/v1/version") => {
+                let body = version_json(ctx.server.engine()).to_string_compact();
                 respond(&mut stream, 200, "OK", &body, keep)
             }
             ("GET", "/metrics") => {
@@ -498,11 +583,32 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
                     .to_string_compact();
                 respond(&mut stream, 200, "OK", &body, keep)
             }
-            ("POST", "/v1/infer") => handle_infer(&mut stream, &req, &ctx.server, keep),
-            ("POST", "/v1/infer_batch") => {
-                handle_infer_batch(&mut stream, &req, &ctx.server, keep)
+            ("POST", "/v1/infer") => {
+                handle_infer(&mut stream, &req, &ctx.server, ctx.opts.default_tier, keep)
             }
-            _ => respond(&mut stream, 404, "Not Found", &err_body("no such route"), keep),
+            ("POST", "/v1/infer_batch") => {
+                handle_infer_batch(&mut stream, &req, &ctx.server, ctx.opts.default_tier, keep)
+            }
+            ("POST", "/v2/infer") => {
+                handle_infer_v2(&mut stream, &req, &ctx.server, ctx.opts.default_tier, keep)
+            }
+            (_, path) => match allowed_methods(path) {
+                // known path, wrong method: 405 + Allow, not a 404
+                Some(methods) => {
+                    let allow = methods.join(", ");
+                    respond_with_headers(
+                        &mut stream,
+                        405,
+                        "Method Not Allowed",
+                        &[("Allow", allow.as_str())],
+                        &err_body("method not allowed"),
+                        keep,
+                    )
+                }
+                None => {
+                    respond(&mut stream, 404, "Not Found", &err_body("no such route"), keep)
+                }
+            },
         };
         // a failed (possibly partial) write leaves the stream misframed:
         // the only safe continuation is no continuation
@@ -512,22 +618,8 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     }
 }
 
-/// Parse one infer document (`{"tier": optional, "image": [u8; 3072]}`)
-/// into a submission; the error string is ready for a 400 / per-line
-/// error.  Shared by `/v1/infer` and `/v1/infer_batch`.
-fn parse_infer_doc(doc: &JsonValue) -> std::result::Result<(Tier, Vec<u8>), String> {
-    // an absent tier defaults to silver; a present-but-invalid one is a
-    // client error, never a silent SLO downgrade
-    let tier_name = match doc.get("tier") {
-        None => "silver",
-        Some(v) => match v.as_str() {
-            Some(name) => name,
-            None => return Err("\"tier\" must be a string".into()),
-        },
-    };
-    let Some(tier) = Tier::parse(tier_name) else {
-        return Err(format!("unknown tier {tier_name:?} (gold|silver|batch)"));
-    };
+/// Parse the `"image"` array of an infer document.
+fn parse_image(doc: &JsonValue) -> std::result::Result<Vec<u8>, String> {
     let Some(pixels) = doc.get("image").and_then(JsonValue::as_array) else {
         return Err("missing \"image\" array".into());
     };
@@ -542,14 +634,90 @@ fn parse_infer_doc(doc: &JsonValue) -> std::result::Result<(Tier, Vec<u8>), Stri
             _ => return Err("image values must be integers in 0..=255".into()),
         }
     }
-    Ok((tier, image))
+    Ok(image)
 }
 
-/// A served response as a JSON object (shared by both infer routes).
+/// Parse a tier name field; a present-but-invalid tier is a client
+/// error, never a silent SLO downgrade.
+fn parse_tier(v: &JsonValue, field: &str) -> std::result::Result<Tier, String> {
+    let Some(name) = v.as_str() else {
+        return Err(format!("{field:?} must be a string"));
+    };
+    Tier::parse(name).ok_or_else(|| format!("unknown tier {name:?} (gold|silver|batch)"))
+}
+
+/// Parse one **v1** infer document (`{"tier": optional, "image":
+/// [u8; 3072]}`) into a typed [`InferRequest`]; the error string is
+/// ready for a 400 / per-line error.  Shared by `/v1/infer` and
+/// `/v1/infer_batch`.
+fn parse_infer_doc(
+    doc: &JsonValue,
+    default_tier: Tier,
+) -> std::result::Result<InferRequest, String> {
+    let tier = match doc.get("tier") {
+        None => default_tier,
+        Some(v) => parse_tier(v, "tier")?,
+    };
+    Ok(InferRequest::new(parse_image(doc)?).with_tier(tier))
+}
+
+/// Parse one **v2** infer document: `{"image": [u8; 3072], "options":
+/// {"tier": ..., "backend": ..., "seed": ..., "boundary": ...}}` — the
+/// wire twin of [`InferOptions`] (DESIGN.md §12).
+fn parse_infer_doc_v2(
+    doc: &JsonValue,
+    default_tier: Tier,
+) -> std::result::Result<InferRequest, String> {
+    let image = parse_image(doc)?;
+    let mut options = InferOptions { tier: default_tier, ..Default::default() };
+    if let Some(o) = doc.get("options") {
+        if !matches!(o, JsonValue::Object(_)) {
+            return Err("\"options\" must be an object".into());
+        }
+        if let Some(v) = o.get("tier") {
+            options.tier = parse_tier(v, "options.tier")?;
+        }
+        if let Some(v) = o.get("backend") {
+            match v.as_str() {
+                Some(name) => options.backend = Some(name.to_string()),
+                None => return Err("\"options.backend\" must be a string".into()),
+            }
+        }
+        if let Some(v) = o.get("seed") {
+            // the JSON substrate carries numbers as f64, which is only
+            // exact up to 2^53 — beyond that distinct seeds would
+            // silently collapse onto the same noise stream, so larger
+            // values are rejected rather than rounded
+            const SEED_MAX: f64 = (1u64 << 53) as f64;
+            match v.as_f64() {
+                Some(x) if x.fract() == 0.0 && (0.0..=SEED_MAX).contains(&x) => {
+                    options.noise_seed = Some(x as u64)
+                }
+                _ => {
+                    return Err(
+                        "\"options.seed\" must be a non-negative integer <= 2^53".into()
+                    )
+                }
+            }
+        }
+        if let Some(v) = o.get("boundary") {
+            match v.as_f64() {
+                Some(x) if x.fract() == 0.0 && (0.0..16.0).contains(&x) => {
+                    options.boundary = Some(x as i32)
+                }
+                _ => return Err("\"options.boundary\" must be an integer in 0..=15".into()),
+            }
+        }
+    }
+    Ok(InferRequest { image, options })
+}
+
+/// A served response as a JSON object (shared by every infer route).
 fn response_json(resp: &crate::coordinator::Response) -> JsonValue {
     obj(vec![
         ("id", num(resp.id as f64)),
         ("tier", s(resp.tier.name())),
+        ("backend", s(&resp.backend)),
         ("pred", num(resp.pred as f64)),
         // logits scrubbed through fnum: a NaN logit (aggressive ACIM
         // noise) must not corrupt the whole JSON payload
@@ -559,7 +727,35 @@ fn response_json(resp: &crate::coordinator::Response) -> JsonValue {
     ])
 }
 
-fn handle_infer(stream: &mut TcpStream, req: &HttpRequest, server: &Server, keep: bool) -> bool {
+/// How one dispatched request ended — the shared submit/await core
+/// behind `/v1/infer` and `/v2/infer`; only the JSON rendering differs
+/// per API version.
+enum Dispatch {
+    /// Served (the response may still carry a worker error).
+    Done(Box<crate::coordinator::Response>),
+    /// Rejected at admission.
+    Rejected(SubmitError),
+    /// The worker dropped the response channel (bug-shaped 500).
+    ChannelDropped,
+}
+
+fn dispatch(server: &Server, req: InferRequest) -> Dispatch {
+    match server.submit_request(req) {
+        Err(e) => Dispatch::Rejected(e),
+        Ok(rx) => match rx.recv() {
+            Ok(resp) => Dispatch::Done(Box::new(resp)),
+            Err(_) => Dispatch::ChannelDropped,
+        },
+    }
+}
+
+fn handle_infer(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    server: &Server,
+    default_tier: Tier,
+    keep: bool,
+) -> bool {
     let parsed = req.body_str().and_then(json::parse);
     let doc = match parsed {
         Ok(d) => d,
@@ -568,37 +764,120 @@ fn handle_infer(stream: &mut TcpStream, req: &HttpRequest, server: &Server, keep
             return respond(stream, 400, "Bad Request", &body, keep);
         }
     };
-    let (tier, image) = match parse_infer_doc(&doc) {
+    let ireq = match parse_infer_doc(&doc, default_tier) {
         Ok(x) => x,
         Err(msg) => return respond(stream, 400, "Bad Request", &err_body(&msg), keep),
     };
-    let rx = match server.submit_tier(image, tier) {
-        Ok(rx) => rx,
-        Err(e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. })) => {
+    let tier = ireq.options.tier;
+    match dispatch(server, ireq) {
+        Dispatch::Rejected(e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. })) => {
             let body = obj(vec![
                 ("error", s("busy")),
                 ("detail", s(&e.to_string())),
                 ("tier", s(tier.name())),
             ])
             .to_string_compact();
-            return respond(stream, 429, "Too Many Requests", &body, keep);
+            respond(stream, 429, "Too Many Requests", &body, keep)
         }
-        Err(SubmitError::ShutDown) => {
+        Dispatch::Rejected(SubmitError::ShutDown) => {
             let body = err_body("server is shutting down");
-            return respond(stream, 503, "Service Unavailable", &body, false);
+            respond(stream, 503, "Service Unavailable", &body, false)
         }
-    };
-    let resp = match rx.recv() {
-        Ok(r) => r,
-        Err(_) => {
+        // v1 never populates backend overrides, but the in-process
+        // option surface is shared — keep the arm total, not reachable
+        Dispatch::Rejected(e) => {
+            respond(stream, 400, "Bad Request", &err_body(&e.to_string()), keep)
+        }
+        Dispatch::ChannelDropped => {
             let body = err_body("response channel dropped");
-            return respond(stream, 500, "Internal Server Error", &body, keep);
+            respond(stream, 500, "Internal Server Error", &body, keep)
+        }
+        Dispatch::Done(resp) => {
+            if let Some(msg) = &resp.error {
+                return respond(stream, 500, "Internal Server Error", &err_body(msg), keep);
+            }
+            respond(stream, 200, "OK", &response_json(&resp).to_string_compact(), keep)
+        }
+    }
+}
+
+/// The machine-readable `/v2` error envelope:
+/// `{"error": {"code": ..., "message": ..., ...extra}}`.
+fn v2_err(code: &str, message: &str, extra: Vec<(&str, JsonValue)>) -> String {
+    let mut fields = vec![("code", s(code)), ("message", s(message))];
+    fields.extend(extra);
+    obj(vec![("error", obj(fields))]).to_string_compact()
+}
+
+/// `POST /v2/infer` — the versioned typed surface: per-request tier,
+/// backend, noise-seed and boundary options, a consistent error
+/// envelope, and a response tagged with the serving backend.
+fn handle_infer_v2(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    server: &Server,
+    default_tier: Tier,
+    keep: bool,
+) -> bool {
+    let doc = match req.body_str().and_then(json::parse) {
+        Ok(d) => d,
+        Err(e) => {
+            let body = v2_err("bad_request", &format!("bad JSON body: {e:#}"), vec![]);
+            return respond(stream, 400, "Bad Request", &body, keep);
         }
     };
-    if let Some(msg) = &resp.error {
-        return respond(stream, 500, "Internal Server Error", &err_body(msg), keep);
+    let ireq = match parse_infer_doc_v2(&doc, default_tier) {
+        Ok(x) => x,
+        Err(msg) => {
+            return respond(stream, 400, "Bad Request", &v2_err("bad_request", &msg, vec![]), keep)
+        }
+    };
+    let tier = ireq.options.tier;
+    match dispatch(server, ireq) {
+        Dispatch::Rejected(SubmitError::UnknownBackend { requested, registered }) => {
+            let body = v2_err(
+                "unknown_backend",
+                &format!("unknown backend {requested:?}"),
+                vec![("backends", arr(registered.iter().map(|n| s(n))))],
+            );
+            respond(stream, 400, "Bad Request", &body, keep)
+        }
+        Dispatch::Rejected(SubmitError::BackendUnavailable { name, reason }) => {
+            let body = v2_err(
+                "backend_unavailable",
+                &format!("backend {name:?} is unavailable: {reason}"),
+                vec![],
+            );
+            respond(stream, 400, "Bad Request", &body, keep)
+        }
+        Dispatch::Rejected(e @ SubmitError::InvalidOption { .. }) => {
+            let body = v2_err("invalid_option", &e.to_string(), vec![]);
+            respond(stream, 400, "Bad Request", &body, keep)
+        }
+        Dispatch::Rejected(e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. })) => {
+            let body = v2_err("busy", &e.to_string(), vec![("tier", s(tier.name()))]);
+            respond(stream, 429, "Too Many Requests", &body, keep)
+        }
+        Dispatch::Rejected(SubmitError::ShutDown) => {
+            let body = v2_err("shutting_down", "server is shutting down", vec![]);
+            respond(stream, 503, "Service Unavailable", &body, false)
+        }
+        Dispatch::ChannelDropped => {
+            let body = v2_err("internal", "response channel dropped", vec![]);
+            respond(stream, 500, "Internal Server Error", &body, keep)
+        }
+        Dispatch::Done(resp) => {
+            if let Some(msg) = &resp.error {
+                let body = v2_err("infer_failed", msg, vec![]);
+                return respond(stream, 500, "Internal Server Error", &body, keep);
+            }
+            let mut o = response_json(&resp);
+            if let JsonValue::Object(map) = &mut o {
+                map.insert("api".into(), s("v2"));
+            }
+            respond(stream, 200, "OK", &o.to_string_compact(), keep)
+        }
     }
-    respond(stream, 200, "OK", &response_json(&resp).to_string_compact(), keep)
 }
 
 /// NDJSON batch inference: parse every line, submit the valid ones (so
@@ -610,6 +889,7 @@ fn handle_infer_batch(
     stream: &mut TcpStream,
     req: &HttpRequest,
     server: &Server,
+    default_tier: Tier,
     keep: bool,
 ) -> bool {
     let text = match req.body_str() {
@@ -644,10 +924,11 @@ fn handle_infer_batch(
     }
     let mut pending = Vec::with_capacity(lines.len());
     for (i, line) in &lines {
-        let slot = match json::parse(line).map_err(|e| format!("bad JSON line: {e:#}")).and_then(
-            |doc| parse_infer_doc(&doc),
-        ) {
-            Ok((tier, image)) => match server.submit_tier(image, tier) {
+        let slot = match json::parse(line)
+            .map_err(|e| format!("bad JSON line: {e:#}"))
+            .and_then(|doc| parse_infer_doc(&doc, default_tier))
+        {
+            Ok(ireq) => match server.submit_request(ireq) {
                 Ok(rx) => Pending::Rx(rx),
                 Err(e) => Pending::Err(e.to_string()),
             },

@@ -92,23 +92,14 @@ pub struct Governor {
 }
 
 impl Governor {
-    /// Derive per-tier contracts from the calibrated thresholds.
+    /// Derive per-tier contracts from the calibrated thresholds (the
+    /// profile scaling itself lives in [`osa::profile_thresholds`],
+    /// shared with `engine::EngineBuilder::loss_profile`).
     pub fn new(calibrated: &[i32], cfg: GovernorConfig) -> Self {
-        let normal = osa::loss_profile(Tier::Silver.profile()).expect("normal profile exists");
         let mut base: [Vec<i32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         for tier in Tier::ALL {
-            let prof = osa::loss_profile(tier.profile()).expect("tier profile exists");
-            let mut ts = Vec::with_capacity(calibrated.len());
-            let mut hi = i32::MIN;
-            for (i, &t) in calibrated.iter().enumerate() {
-                let scale = prof[i % prof.len()] / normal[i % normal.len()].max(1e-12);
-                let v = ((t as f64) * scale).round();
-                let v = v.clamp(i32::MIN as f64, i32::MAX as f64) as i32;
-                // keep ascending even for non-monotone scale ratios
-                hi = hi.max(v);
-                ts.push(hi);
-            }
-            base[tier.index()] = ts;
+            base[tier.index()] = osa::profile_thresholds(calibrated, tier.profile())
+                .expect("tier profile exists");
         }
         Self {
             cfg,

@@ -339,12 +339,33 @@ pub fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_with(stream, status, reason, content_type, &[], body, keep_alive)
+}
+
+/// [`write_response`] with extra response headers (e.g. the `Allow`
+/// list a 405 must carry per RFC 9110 §15.5.6).
+pub fn write_response_with(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let conn = if keep_alive { "keep-alive" } else { "close" };
-    let head = format!(
+    let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: {conn}\r\n\r\n",
+         Content-Length: {}\r\nConnection: {conn}\r\n",
         body.len()
     );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()
@@ -460,6 +481,19 @@ impl Client {
         self.request_typed(method, path, "application/json", body)
     }
 
+    /// Like [`Client::request`] but also returning the response headers
+    /// (names lower-cased) — e.g. the `Allow` list on a 405.
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, BTreeMap<String, String>, String)> {
+        let (status, headers, body) =
+            self.request_full(method, path, "application/json", body)?;
+        Ok((status, headers, body))
+    }
+
     /// Like [`Client::request`] with an explicit request content type
     /// (the NDJSON batch endpoint).
     pub fn request_typed(
@@ -469,6 +503,17 @@ impl Client {
         content_type: &str,
         body: Option<&str>,
     ) -> Result<(u16, String)> {
+        let (status, _, body) = self.request_full(method, path, content_type, body)?;
+        Ok((status, body))
+    }
+
+    fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, BTreeMap<String, String>, String)> {
         if self.closed {
             bail!("connection was closed by the server");
         }
@@ -494,7 +539,7 @@ impl Client {
         if headers.get("connection").map(String::as_str) == Some("close") {
             self.closed = true;
         }
-        Ok((status, String::from_utf8_lossy(&resp_body).into_owned()))
+        Ok((status, headers, String::from_utf8_lossy(&resp_body).into_owned()))
     }
 }
 

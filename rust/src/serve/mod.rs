@@ -1,11 +1,14 @@
 //! The network serving subsystem (DESIGN.md §10): HTTP gateway →
 //! QoS-tiered admission → dynamic precision governor.
 //!
-//! * [`gateway`] — `std::net` HTTP/1.1 front-end (`POST /v1/infer`,
-//!   NDJSON `POST /v1/infer_batch`, `GET /metrics`, `GET /healthz`)
-//!   with persistent connections (a bounded connection-worker pool
-//!   runs a keep-alive loop per socket) and explicit `429 Busy`
-//!   backpressure at both the connection and the tier-queue level;
+//! * [`gateway`] — `std::net` HTTP/1.1 front-end (versioned
+//!   `POST /v2/infer` with typed per-request options, the `/v1/*`
+//!   adapters `POST /v1/infer` + NDJSON `POST /v1/infer_batch`,
+//!   `GET /metrics`, `GET /v1/version`, `GET /healthz`) with persistent
+//!   connections (a bounded connection-worker pool runs a keep-alive
+//!   loop per socket), `405 + Allow` on known paths hit with the wrong
+//!   method, and explicit `429 Busy` backpressure at both the
+//!   connection and the tier-queue level;
 //! * [`qos`] — per-request SLO tiers (`gold`/`silver`/`batch`), bounded
 //!   per-tier queues and deadline-aware single-tier batch coalescing
 //!   (hard window from first enqueue);

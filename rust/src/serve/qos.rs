@@ -97,6 +97,14 @@ pub enum SubmitError {
     Overloaded { max_conns: usize },
     /// The server is shutting down (or already shut down).
     ShutDown,
+    /// A per-request backend override named nothing in the engine's
+    /// registry (HTTP 400; the listing keeps the error actionable).
+    UnknownBackend { requested: String, registered: Vec<String> },
+    /// The named backend is registered but cannot run in this build
+    /// (e.g. `pjrt` without the `pjrt` feature) — HTTP 400.
+    BackendUnavailable { name: String, reason: String },
+    /// A per-request option failed validation (HTTP 400).
+    InvalidOption { field: &'static str, detail: String },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -109,6 +117,16 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "connection limit reached ({max_conns} workers + backlog) — busy")
             }
             SubmitError::ShutDown => write!(f, "server is shut down"),
+            SubmitError::UnknownBackend { requested, registered } => {
+                let names = registered.join(", ");
+                write!(f, "unknown backend {requested:?} (registered: {names})")
+            }
+            SubmitError::BackendUnavailable { name, reason } => {
+                write!(f, "backend {name:?} is unavailable: {reason}")
+            }
+            SubmitError::InvalidOption { field, detail } => {
+                write!(f, "invalid option {field:?}: {detail}")
+            }
         }
     }
 }

@@ -8,8 +8,13 @@
 
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
+use osa_hcim::engine::{
+    Backend, BackendCaps, BackendCtx, BackendKnobs, BackendRegistry, BackendSpec, Engine,
+    InferOptions, InferRequest,
+};
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::QGraph;
+use osa_hcim::sched::GemmResult;
 use osa_hcim::serve::{SubmitError, Tier};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -145,6 +150,59 @@ fn drain_on_shutdown_answers_every_request() {
     }
 }
 
+/// A registry entry whose every GEMM fails — drives the worker's
+/// answer-with-error path deterministically through the public
+/// extension point (a custom `BackendRegistry`).
+struct FailingBackend;
+
+impl Backend for FailingBackend {
+    fn gemm(
+        &mut self,
+        _a: &[i32],
+        _m: usize,
+        _k: usize,
+        _w: &[i32],
+        _n: usize,
+        _layer_idx: u64,
+    ) -> anyhow::Result<GemmResult> {
+        anyhow::bail!("injected gemm failure")
+    }
+
+    fn prepare(&mut self, _w: &[i32], _n: usize, _k: usize, _layer_idx: u64) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn name(&self) -> &str {
+        "failing"
+    }
+
+    fn capabilities(&self) -> BackendCaps {
+        BackendCaps {
+            available: true,
+            mode: CimMode::Dcim,
+            programmable_thresholds: false,
+            hybrid_boundary: false,
+            description: "test backend that always fails",
+        }
+    }
+
+    fn apply(&mut self, _knobs: &BackendKnobs) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn thresholds(&self) -> Option<Vec<i32>> {
+        None
+    }
+
+    fn clone_backend(&self) -> anyhow::Result<Box<dyn Backend>> {
+        Ok(Box::new(FailingBackend))
+    }
+}
+
+fn failing_factory(_ctx: &BackendCtx) -> anyhow::Result<Box<dyn Backend>> {
+    Ok(Box::new(FailingBackend))
+}
+
 #[test]
 fn forward_error_answers_with_error_response() {
     let mut cfg = SystemConfig::default();
@@ -152,14 +210,38 @@ fn forward_error_answers_with_error_response() {
     cfg.workers = 1;
     cfg.max_batch = 2;
     cfg.batch_timeout_us = 1_000;
-    let server = synth_server(&cfg);
-    // wrong image size -> Executor::forward bails inside the worker;
-    // the seed behavior dropped the batch and left submitters hanging
-    // on a closed channel
-    let rx = server.submit(vec![0u8; 16]).unwrap();
+    let mut registry = BackendRegistry::builtin();
+    registry.register(BackendSpec {
+        name: "failing",
+        description: "test backend that always fails",
+        available: true,
+        factory: failing_factory,
+    });
+    let engine = Engine::builder()
+        .config(cfg.clone())
+        .graph(Arc::new(QGraph::synthetic()))
+        .registry(Arc::new(registry))
+        .build()
+        .unwrap();
+    let server = Server::with_engine(Arc::new(engine)).unwrap();
+    // a wrong-size image never reaches a worker anymore: typed
+    // rejection at submission (the seed behavior dropped the batch and
+    // left submitters hanging on a closed channel)
+    match server.submit(vec![0u8; 16]) {
+        Err(SubmitError::InvalidOption { field, .. }) => assert_eq!(field, "image"),
+        other => panic!("expected InvalidOption, got {other:?}"),
+    }
+    // a forward failure inside the worker answers with an error
+    // Response tagged with the failing backend
+    let req = InferRequest {
+        image: synth_image(0),
+        options: InferOptions { backend: Some("failing".into()), ..Default::default() },
+    };
+    let rx = server.submit_request(req).unwrap();
     let resp = rx.recv().expect("error must be answered, not dropped");
     assert!(resp.error.is_some(), "expected an error response");
     assert!(resp.logits.is_empty());
+    assert_eq!(resp.backend, "failing");
     // a well-formed request after the failure is still served
     let rx_ok = server.submit(synth_image(1)).unwrap();
     let ok = rx_ok.recv().expect("server must survive a failed batch");

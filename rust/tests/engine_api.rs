@@ -1,0 +1,227 @@
+//! Unified-engine API guarantees (DESIGN.md §12):
+//!
+//! * public-API smoke — `engine::{Engine, EngineBuilder, BackendRegistry,
+//!   InferRequest}` stay exported (the CI contract for downstream users);
+//! * backend parity — the same synthetic batch through an `Engine` with
+//!   the `macro-hybrid` backend is **bit-identical** (logits AND energy
+//!   f64s) to a hand-built `MacroGemm` executor, across 1 and 4 threads;
+//! * typed selection errors — unknown backend names list every
+//!   registered backend at builder, registry and coordinator level.
+
+// The smoke import IS the test: if any of these stops being exported,
+// this file no longer compiles.
+use osa_hcim::engine::{
+    Backend, BackendCaps, BackendKnobs, BackendRegistry, Engine, EngineBuilder, InferOptions,
+    InferRequest, InferResponse,
+};
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::coordinator::Server;
+use osa_hcim::nn::{Executor, QGraph};
+use osa_hcim::sched::exec::ExecPool;
+use osa_hcim::sched::MacroGemm;
+use osa_hcim::serve::qos::{SubmitError, Tier};
+use osa_hcim::util::prng::SplitMix64;
+use std::sync::Arc;
+
+fn synth_batch(n: usize) -> Vec<u8> {
+    let mut g = SplitMix64::new(0xBA7C4);
+    (0..n * 32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+/// The public-API smoke test proper: every re-exported name is usable,
+/// not just importable.
+#[test]
+fn public_api_surface_stays_exported() {
+    let _builder: EngineBuilder = Engine::builder();
+    let registry: BackendRegistry = BackendRegistry::builtin();
+    assert_eq!(registry.names(), vec!["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"]);
+    let req: InferRequest = InferRequest::new(vec![0u8; 4]).with_tier(Tier::Gold);
+    let opts: InferOptions = req.options.clone();
+    assert_eq!(opts.tier, Tier::Gold);
+    // Backend stays object-safe: a trait object can be named and the
+    // caps/knobs types are public
+    fn _takes_dyn(_b: &mut dyn Backend) {}
+    let _caps: Option<BackendCaps> = None;
+    let _knobs = BackendKnobs::default();
+    let _resp: Option<InferResponse> = None;
+}
+
+/// Forward a batch through the engine facade and through a hand-built
+/// `MacroGemm` executor on an identically sized pool; both runs must
+/// agree to the bit on logits and on the modeled energy (f64).
+fn parity_at(threads: usize) -> (Vec<u32>, u64, [u64; 16]) {
+    let cfg = SystemConfig::default(); // mode = osa: noise + OSE active
+    let graph = Arc::new(QGraph::synthetic());
+    let n = 4usize;
+    let images = synth_batch(n);
+
+    // facade path
+    let engine = Engine::builder()
+        .config(cfg.clone())
+        .graph(graph.clone())
+        .backend("macro-hybrid")
+        .threads(threads)
+        .build()
+        .unwrap();
+    let mut exec = engine.executor().unwrap();
+    exec.preplan().unwrap();
+    let (logits_e, stats_e) = exec.forward(&images, n).unwrap();
+
+    // hand-built path (what `coordinator` wired up before the registry)
+    let gemm = MacroGemm::new(
+        cfg.mode,
+        cfg.spec,
+        cfg.fixed_b,
+        cfg.thresholds.clone(),
+        cfg.noise_seed,
+    )
+    .unwrap()
+    .with_pool(ExecPool::new(threads));
+    let mut hand = Executor::new(&graph, gemm);
+    hand.preplan().unwrap();
+    let (logits_h, stats_h) = hand.forward(&images, n).unwrap();
+
+    let bits_e: Vec<u32> = logits_e.iter().map(|x| x.to_bits()).collect();
+    let bits_h: Vec<u32> = logits_h.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(bits_e, bits_h, "logit bits diverge at {threads} threads");
+    let energy_e = stats_e.account.total_energy_j().to_bits();
+    let energy_h = stats_h.account.total_energy_j().to_bits();
+    assert_eq!(energy_e, energy_h, "energy f64 bits diverge at {threads} threads");
+    assert_eq!(stats_e.b_hist, stats_h.b_hist, "boundary histograms diverge");
+    (bits_e, energy_e, stats_e.b_hist)
+}
+
+#[test]
+fn facade_is_bit_identical_to_hand_built_macro_gemm() {
+    let (bits_1, energy_1, hist_1) = parity_at(1);
+    let (bits_4, energy_4, hist_4) = parity_at(4);
+    // and the thread count itself never shifts results (DESIGN.md §11)
+    assert_eq!(bits_1, bits_4, "1-thread vs 4-thread logits diverge");
+    assert_eq!(energy_1, energy_4, "1-thread vs 4-thread energy diverges");
+    assert_eq!(hist_1, hist_4);
+}
+
+#[test]
+fn mode_pinned_backends_match_hand_built_modes() {
+    // the dcim/acim registry entries are the same datapaths as the
+    // hand-built engines, bit for bit
+    let graph = Arc::new(QGraph::synthetic());
+    let images = synth_batch(2);
+    let engine = Engine::builder().graph(graph.clone()).threads(2).build().unwrap();
+    for mode in [CimMode::Dcim, CimMode::Acim] {
+        let mut facade = Executor::new(&graph, engine.backend_for_mode(mode).unwrap());
+        let (lf, sf) = facade.forward(&images, 2).unwrap();
+        let mut hand =
+            Executor::new(&graph, MacroGemm::with_mode(mode).with_pool(ExecPool::new(2)));
+        let (lh, sh) = hand.forward(&images, 2).unwrap();
+        assert_eq!(
+            lf.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            lh.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{mode:?} logits diverge"
+        );
+        assert_eq!(
+            sf.account.total_energy_j().to_bits(),
+            sh.account.total_energy_j().to_bits(),
+            "{mode:?} energy diverges"
+        );
+    }
+}
+
+#[test]
+fn builder_error_lists_registered_backends() {
+    let err = Engine::builder()
+        .graph(Arc::new(QGraph::synthetic()))
+        .backend("gpu-macro")
+        .build()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    for name in ["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"] {
+        assert!(msg.contains(name), "error must list {name}: {msg}");
+    }
+}
+
+#[test]
+fn coordinator_validates_per_request_backend() {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    let server = Server::start(&cfg, Arc::new(QGraph::synthetic())).unwrap();
+
+    // unknown name: typed error listing the registry, nothing enqueued
+    let req = InferRequest {
+        image: synth_batch(1),
+        options: InferOptions { backend: Some("nope".into()), ..Default::default() },
+    };
+    match server.submit_request(req) {
+        Err(SubmitError::UnknownBackend { requested, registered }) => {
+            assert_eq!(requested, "nope");
+            assert!(registered.iter().any(|n| n == "macro-hybrid"), "{registered:?}");
+        }
+        other => panic!("expected UnknownBackend, got {other:?}"),
+    }
+
+    // registered-but-unavailable (pjrt without the feature): typed 400 shape
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let req = InferRequest {
+            image: synth_batch(1),
+            options: InferOptions { backend: Some("pjrt".into()), ..Default::default() },
+        };
+        match server.submit_request(req) {
+            Err(SubmitError::BackendUnavailable { name, .. }) => assert_eq!(name, "pjrt"),
+            other => panic!("expected BackendUnavailable, got {other:?}"),
+        }
+    }
+
+    // out-of-range boundary: typed option error
+    let req = InferRequest {
+        image: synth_batch(1),
+        options: InferOptions { boundary: Some(99), ..Default::default() },
+    };
+    match server.submit_request(req) {
+        Err(SubmitError::InvalidOption { field, .. }) => assert_eq!(field, "boundary"),
+        other => panic!("expected InvalidOption, got {other:?}"),
+    }
+
+    // a valid per-request backend override is served, tagged with it
+    let req = InferRequest {
+        image: synth_batch(1),
+        options: InferOptions { backend: Some("macro-dcim".into()), ..Default::default() },
+    };
+    let resp = server.submit_request(req).unwrap().recv().unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.backend, "macro-dcim");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.errors, 0);
+}
+
+#[test]
+fn per_request_seed_override_is_deterministic() {
+    // OSA mode: analog noise is live, so the seed must matter — and the
+    // same seed must reproduce the same bits through the whole serving
+    // stack (request grouping, knob re-application, plan cache reuse)
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    let server = Server::start(&cfg, Arc::new(QGraph::synthetic())).unwrap();
+    let image = synth_batch(1);
+    let logits_for = |seed: Option<u64>| -> Vec<u32> {
+        let req = InferRequest {
+            image: image.clone(),
+            options: InferOptions { noise_seed: seed, ..Default::default() },
+        };
+        let resp = server.submit_request(req).unwrap().recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        resp.logits.iter().map(|x| x.to_bits()).collect()
+    };
+    let a1 = logits_for(Some(1));
+    let a2 = logits_for(Some(1));
+    let b = logits_for(Some(2));
+    let default1 = logits_for(None);
+    let default2 = logits_for(None);
+    assert_eq!(a1, a2, "same seed must be bit-identical");
+    assert_ne!(a1, b, "different seeds must shift the noise");
+    assert_eq!(default1, default2, "default seed must stay deterministic");
+    server.shutdown();
+}

@@ -1,0 +1,274 @@
+//! End-to-end tests of the versioned HTTP surface over a real socket:
+//! `POST /v2/infer` (typed options, machine-readable error envelope),
+//! `GET /v1/version`, the enriched `/healthz`, and the 405 + `Allow`
+//! contract on known paths.  Everything runs on `QGraph::synthetic()`.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::QGraph;
+use osa_hcim::serve::http;
+use osa_hcim::serve::Gateway;
+use std::sync::Arc;
+
+fn synth_image(seed: u64) -> Vec<u8> {
+    let mut g = osa_hcim::util::prng::SplitMix64::new(seed);
+    (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+/// A `/v2/infer` body: the image plus a raw JSON options object.
+fn v2_body(seed: u64, options: &str) -> String {
+    let img = synth_image(seed);
+    let mut body = String::with_capacity(img.len() * 4 + 64);
+    body.push_str("{\"image\":[");
+    for (i, b) in img.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&b.to_string());
+    }
+    body.push_str("],\"options\":");
+    body.push_str(options);
+    body.push('}');
+    body
+}
+
+fn start_gateway(cfg: &SystemConfig) -> (Gateway, String) {
+    let gw = Gateway::start(cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    (gw, addr)
+}
+
+fn err_field<'a>(doc: &'a JsonValue, field: &str) -> Option<&'a JsonValue> {
+    doc.get("error").and_then(|e| e.get(field))
+}
+
+#[test]
+fn v2_infer_round_trip_with_options() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 500;
+    let (gw, addr) = start_gateway(&cfg);
+
+    // full option set: tier + explicit backend + seed + boundary
+    let body = v2_body(1, "{\"tier\":\"gold\",\"backend\":\"macro-dcim\",\"seed\":7}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let doc = parse(&resp).unwrap();
+    assert_eq!(doc.get("api").and_then(JsonValue::as_str), Some("v2"));
+    assert_eq!(doc.get("tier").and_then(JsonValue::as_str), Some("gold"));
+    assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-dcim"));
+    assert_eq!(doc.get("logits").and_then(JsonValue::as_array).map(|a| a.len()), Some(10));
+
+    // options are optional: bare image serves at the default tier on the
+    // active backend
+    let body = v2_body(2, "{}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let doc = parse(&resp).unwrap();
+    assert_eq!(doc.get("tier").and_then(JsonValue::as_str), Some("silver"));
+    assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-hybrid"));
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 2);
+    assert_eq!(metrics.errors, 0);
+}
+
+#[test]
+fn v2_error_envelope_is_machine_readable() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    let (gw, addr) = start_gateway(&cfg);
+
+    // unknown backend: typed 400 listing every registered backend
+    let body = v2_body(1, "{\"backend\":\"macro-gpu\"}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 400, "{resp}");
+    let doc = parse(&resp).unwrap();
+    assert_eq!(err_field(&doc, "code").and_then(JsonValue::as_str), Some("unknown_backend"));
+    let listed: Vec<String> = err_field(&doc, "backends")
+        .and_then(JsonValue::as_array)
+        .expect("backends list in envelope")
+        .iter()
+        .filter_map(|v| v.as_str().map(String::from))
+        .collect();
+    for name in ["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"] {
+        assert!(listed.iter().any(|n| n == name), "{listed:?} missing {name}");
+    }
+
+    // registered but unavailable in this build
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let body = v2_body(1, "{\"backend\":\"pjrt\"}");
+        let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+        assert_eq!(status, 400, "{resp}");
+        let doc = parse(&resp).unwrap();
+        assert_eq!(
+            err_field(&doc, "code").and_then(JsonValue::as_str),
+            Some("backend_unavailable")
+        );
+    }
+
+    // malformed options: typed bad_request with a field-naming message
+    for (options, needle) in [
+        ("{\"tier\":\"bronze\"}", "bronze"),
+        ("{\"seed\":-1}", "seed"),
+        // beyond 2^53 the f64 wire encoding rounds: rejected, not bent
+        ("{\"seed\":100000000000000000}", "seed"),
+        ("{\"boundary\":42}", "boundary"),
+        ("{\"backend\":7}", "backend"),
+        ("[1,2]", "options"),
+    ] {
+        let body = v2_body(1, options);
+        let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+        assert_eq!(status, 400, "{options} -> {resp}");
+        let doc = parse(&resp).unwrap();
+        assert_eq!(
+            err_field(&doc, "code").and_then(JsonValue::as_str),
+            Some("bad_request"),
+            "{resp}"
+        );
+        let msg = err_field(&doc, "message").and_then(JsonValue::as_str).unwrap();
+        assert!(msg.contains(needle), "message {msg:?} should name {needle:?}");
+    }
+
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 0, "rejected requests must never reach a worker");
+}
+
+#[test]
+fn v2_seed_and_boundary_options_steer_the_datapath() {
+    // HCIM mode so the boundary override is live; noise is on by default
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Hcim;
+    cfg.workers = 1;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let logits_of = |options: &str| -> Vec<String> {
+        let body = v2_body(42, options);
+        let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+        assert_eq!(status, 200, "{options} -> {resp}");
+        let doc = parse(&resp).unwrap();
+        doc.get("logits")
+            .and_then(JsonValue::as_array)
+            .unwrap()
+            .iter()
+            .map(|v| format!("{:?}", v.as_f64().unwrap()))
+            .collect()
+    };
+
+    // same seed twice: bit-stable through the wire
+    let a1 = logits_of("{\"seed\":5}");
+    let a2 = logits_of("{\"seed\":5}");
+    assert_eq!(a1, a2, "same seed must reproduce identical logits");
+    // a different seed shifts the analog noise
+    let b = logits_of("{\"seed\":6}");
+    assert_ne!(a1, b, "seed override had no effect");
+    // a finer boundary changes the digital/analog split (B=0 is the
+    // all-digital extreme; B=10 discards most digital orders)
+    let fine = logits_of("{\"seed\":5,\"boundary\":0}");
+    let coarse = logits_of("{\"seed\":5,\"boundary\":10}");
+    assert_ne!(fine, coarse, "boundary override had no effect");
+
+    gw.shutdown();
+}
+
+#[test]
+fn wrong_method_on_known_path_is_405_with_allow() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let mut client = http::Client::connect(&addr).unwrap();
+    // GET on a POST-only route
+    let (status, headers, body) =
+        client.request_with_headers("GET", "/v2/infer", None).unwrap();
+    assert_eq!(status, 405, "{body}");
+    assert_eq!(headers.get("allow").map(String::as_str), Some("POST"));
+    // POST on a GET-only route — and keep-alive survives the 405
+    let (status, headers, _) =
+        client.request_with_headers("POST", "/metrics", Some("{}")).unwrap();
+    assert_eq!(status, 405);
+    assert_eq!(headers.get("allow").map(String::as_str), Some("GET"));
+    let (status, _, _) = client.request_with_headers("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200, "connection must survive a 405");
+    // unknown path is still a plain 404
+    let (status, headers, _) = client.request_with_headers("GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    assert!(headers.get("allow").is_none(), "404 must not advertise methods");
+
+    gw.shutdown();
+}
+
+#[test]
+fn version_and_healthz_report_the_running_engine() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.engine_threads = 2;
+    cfg.backend = "macro-dcim".to_string();
+    let (gw, addr) = start_gateway(&cfg);
+
+    let (status, body) = http::request(&addr, "GET", "/v1/version", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    assert_eq!(
+        doc.get("version").and_then(JsonValue::as_str),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+    assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-dcim"));
+    assert_eq!(doc.get("engine_threads").and_then(JsonValue::as_i64), Some(2));
+    let backends = doc.get("backends").and_then(JsonValue::as_array).unwrap();
+    assert_eq!(backends.len(), 4);
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let pjrt = backends
+            .iter()
+            .find(|b| b.get("name").and_then(JsonValue::as_str) == Some("pjrt"))
+            .expect("pjrt listed");
+        assert_eq!(pjrt.get("available").and_then(JsonValue::as_bool), Some(false));
+    }
+
+    let (status, body) = http::request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = parse(&body).unwrap();
+    assert_eq!(doc.get("status").and_then(JsonValue::as_str), Some("ok"));
+    assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-dcim"));
+    assert_eq!(doc.get("engine_threads").and_then(JsonValue::as_i64), Some(2));
+    assert_eq!(
+        doc.get("version").and_then(JsonValue::as_str),
+        Some(env!("CARGO_PKG_VERSION"))
+    );
+
+    gw.shutdown();
+}
+
+#[test]
+fn v1_adapter_serves_default_tier_and_backend_tag() {
+    // the /v1 surface rides the same typed path: configured default
+    // tier applies, responses carry the serving backend
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.default_tier = osa_hcim::serve::Tier::Gold;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let img = synth_image(3);
+    // v1 body with NO tier field: the configured default must apply
+    let mut body = String::from("{\"image\":[");
+    for (i, b) in img.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&b.to_string());
+    }
+    body.push_str("]}");
+    let (status, resp) = http::request(&addr, "POST", "/v1/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let doc = parse(&resp).unwrap();
+    assert_eq!(doc.get("tier").and_then(JsonValue::as_str), Some("gold"));
+    assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-hybrid"));
+
+    gw.shutdown();
+}
