@@ -1,0 +1,190 @@
+//! Connection-scaling smoke bench (`cargo bench --bench conn_scale`).
+//!
+//! The CI shape of the event-loop acceptance claim: park 1000 idle
+//! keep-alive connections on one gateway, then assert
+//!
+//! * memory stays flat — RSS growth under ~40 KB per idle connection
+//!   (pooled buffers, no thread per connection);
+//! * requests still flow at full speed with the herd attached;
+//! * shutdown drains: an in-flight request is answered, the idle herd
+//!   is closed, and the whole teardown completes promptly.
+//!
+//! Runs on `QGraph::synthetic()` — no artifacts needed.  Emits
+//! `BENCH_conn_scale.json` (override the path with
+//! `BENCH_CONN_SCALE_OUT`) for `scripts/bench_gate.py`.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+fn main() {
+    osa_hcim::util::logging::init();
+    #[cfg(unix)]
+    run();
+    #[cfg(not(unix))]
+    println!("conn_scale: the readiness-driven gateway needs unix — skipping");
+}
+
+#[cfg(unix)]
+fn run() {
+    use osa_hcim::benchkit::{raise_nofile, vm_rss_mb};
+    use osa_hcim::config::SystemConfig;
+    use osa_hcim::io::json::{num, obj, parse, s, JsonValue};
+    use osa_hcim::nn::QGraph;
+    use osa_hcim::serve::{http, Gateway};
+    use osa_hcim::util::prng::SplitMix64;
+    use std::io::Read;
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 2;
+    cfg.max_batch = 8;
+    // a lone batch-tier request coalesces for its full 100ms window —
+    // room for shutdown to start while it is demonstrably in flight
+    cfg.batch_timeout_us = 100_000;
+    cfg.queue_cap = 1024;
+    cfg.max_conns = 4096;
+    cfg.read_timeout_ms = 120_000; // the idle herd must not be shed mid-bench
+
+    let nofile = raise_nofile(8192);
+    let budget = (nofile as usize).saturating_sub(256) / 2;
+    let target = 1000usize.min(budget);
+
+    let gw = Gateway::start(&cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+
+    // warm the serving path so pooled buffers and lazy allocations are
+    // part of the RSS base, not attributed to the herd
+    let mut probe = http::Client::connect(&addr).expect("probe connect");
+    for _ in 0..50 {
+        let (status, _) = probe.request("GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+    }
+    let rss_before = vm_rss_mb();
+
+    // --- the idle herd ---------------------------------------------------
+    let mut herd: Vec<TcpStream> = Vec::new();
+    while herd.len() < target {
+        herd.push(TcpStream::connect(&addr).expect("herd connect"));
+    }
+    // accepts are asynchronous: wait for the gauge to agree
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (status, body) = http::request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let open = parse(&body)
+            .ok()
+            .and_then(|doc| {
+                doc.get("event_loop")
+                    .and_then(|ev| ev.get("open_connections"))
+                    .and_then(JsonValue::as_f64)
+            })
+            .expect("event_loop gauges in /metrics");
+        if open >= herd.len() as f64 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "gateway never accepted the herd ({open} open)");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // --- flat memory -----------------------------------------------------
+    let rss_after = vm_rss_mb();
+    let delta_mb = (rss_after - rss_before).max(0.0);
+    let kb_per_conn = delta_mb * 1024.0 / herd.len().max(1) as f64;
+    println!(
+        "conn_scale: {} idle conns, rss {rss_before:.1} -> {rss_after:.1} MB \
+         ({kb_per_conn:.1} KB/conn)",
+        herd.len()
+    );
+    if rss_after > 0.0 {
+        assert!(
+            kb_per_conn < 40.0,
+            "idle connections are not flat-memory: {kb_per_conn:.1} KB/conn"
+        );
+    }
+
+    // --- throughput with the herd attached -------------------------------
+    let probe_reqs = 500usize;
+    let t0 = Instant::now();
+    for _ in 0..probe_reqs {
+        let (status, _) = probe.request("GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+    }
+    let rps = probe_reqs as f64 / t0.elapsed().as_secs_f64();
+    println!("conn_scale: probe {rps:.0} req/s through {} idle conns", herd.len());
+
+    // --- drain on shutdown -----------------------------------------------
+    // submit a slow-coalescing request, prove it was read, then shut
+    // down with the herd still parked: the request must be answered and
+    // the teardown must not wait out any idle timeout
+    let img: Vec<u8> = {
+        let mut g = SplitMix64::new(17);
+        (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+    };
+    let http_requests = |addr: &str| -> i64 {
+        let (status, body) = http::request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        parse(&body)
+            .unwrap()
+            .get("connections")
+            .and_then(|c| c.get("http_requests"))
+            .and_then(JsonValue::as_i64)
+            .unwrap()
+    };
+    // the baseline includes the snapshot request itself; afterwards
+    // each poll adds exactly one more, so the counter strictly
+    // exceeding baseline + polls proves the POST has been read and
+    // will therefore be drained, not dropped
+    let baseline = http_requests(&addr);
+    let in_flight = {
+        let addr = addr.clone();
+        let body = http::infer_body("batch", &img);
+        std::thread::spawn(move || {
+            let mut c = http::Client::connect(&addr).unwrap();
+            c.request("POST", "/v1/infer", Some(&body)).unwrap()
+        })
+    };
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut polls = 0i64;
+    loop {
+        polls += 1;
+        if http_requests(&addr) > baseline + polls {
+            break;
+        }
+        assert!(Instant::now() < deadline, "the POST was never read by the gateway");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let t0 = Instant::now();
+    let metrics = gw.shutdown();
+    let drain_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (status, body) = in_flight.join().unwrap();
+    assert_eq!(status, 200, "in-flight request dropped by shutdown: {body}");
+    assert!(
+        drain_ms < 10_000.0,
+        "shutdown waited out idle connections instead of draining: {drain_ms:.0} ms"
+    );
+    assert_eq!(metrics.errors, 0);
+    // the herd was actively closed, not abandoned: sockets read EOF
+    for sock in herd.iter_mut().take(8) {
+        sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 64];
+        assert_eq!(sock.read(&mut buf).unwrap(), 0, "idle conn not closed by drain");
+    }
+    println!(
+        "conn_scale: drained in {drain_ms:.0} ms with {} idle conns parked",
+        herd.len()
+    );
+
+    let doc = obj(vec![
+        ("bench", s("conn_scale")),
+        ("conn_scale_conns", num(herd.len() as f64)),
+        ("conn_scale_rps", num(rps)),
+        ("conn_scale_rss_mb_delta", num(delta_mb)),
+        ("conn_scale_rss_kb_per_conn", num(kb_per_conn)),
+        ("conn_scale_drain_ms", num(drain_ms)),
+    ]);
+    let out = std::env::var("BENCH_CONN_SCALE_OUT")
+        .unwrap_or_else(|_| "BENCH_conn_scale.json".into());
+    std::fs::write(&out, doc.to_string_compact()).unwrap();
+    println!("wrote {out}");
+}

@@ -15,6 +15,8 @@
 #![allow(clippy::field_reassign_with_default)] // repo config idiom
 
 use osa_hcim::benchkit::Bench;
+#[cfg(unix)]
+use osa_hcim::benchkit::{raise_nofile, vm_rss_mb};
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
 use osa_hcim::engine::{Backend, Engine};
@@ -353,6 +355,73 @@ fn main() {
         m.tier(Tier::Gold).p99_latency_us(),
         m.tier(Tier::Batch).p99_latency_us()
     );
+
+    // --- connection scaling: idle keep-alive herds, RSS + throughput -----
+    // The event-loop acceptance curve: 64 / 1k / 10k idle keep-alive
+    // connections parked on one gateway while a probe client measures
+    // round-trip throughput; RSS is sampled at each point (the
+    // flat-memory claim).  Conn counts clamp to the fd budget — client
+    // and server sockets both live in this one process.
+    #[allow(unused_mut)]
+    let mut scale_points: Vec<(&str, f64, f64, f64)> = Vec::new();
+    #[allow(unused_mut)]
+    let mut conns_max = 0.0f64;
+    #[cfg(unix)]
+    {
+        println!("\n# pipeline — connection scaling (idle keep-alive herds, event loop)");
+        let nofile = raise_nofile(65_536);
+        let budget = (nofile as usize).saturating_sub(256) / 2;
+        let mut scfg = SystemConfig::default();
+        scfg.workers = 2;
+        scfg.queue_cap = 1024;
+        scfg.max_conns = 16_384;
+        scfg.read_timeout_ms = 120_000; // the idle herd must not be shed mid-bench
+        let scale_engine =
+            Engine::builder().config(scfg.clone()).graph(graph.clone()).build().unwrap();
+        let scale_gw = Gateway::with_engine(Arc::new(scale_engine), "127.0.0.1:0").unwrap();
+        let saddr = scale_gw.addr().to_string();
+        let mut herd: Vec<std::net::TcpStream> = Vec::new();
+        for (label, target) in [("64", 64usize), ("1k", 1_000), ("10k", 10_000)] {
+            let want = target.min(budget);
+            while herd.len() < want {
+                match std::net::TcpStream::connect(&saddr) {
+                    Ok(s) => herd.push(s),
+                    Err(e) => {
+                        println!("conn_scale/{label}: connect stalled at {}: {e}", herd.len());
+                        break;
+                    }
+                }
+            }
+            wait_for_open_conns(&saddr, herd.len());
+            let rss_mb = vm_rss_mb();
+            let mut probe = http::Client::connect(&saddr).expect("probe connect");
+            let probe_reqs = 300usize;
+            let t0 = Instant::now();
+            for _ in 0..probe_reqs {
+                let (status, _) = probe.request("GET", "/healthz", None).unwrap();
+                assert_eq!(status, 200);
+            }
+            let rps = probe_reqs as f64 / t0.elapsed().as_secs_f64();
+            println!(
+                "conn_scale/{label}: {} idle conns, probe {rps:.0} req/s, rss {rss_mb:.1} MB",
+                herd.len()
+            );
+            conns_max = conns_max.max(herd.len() as f64);
+            scale_points.push((label, herd.len() as f64, rps, rss_mb));
+        }
+        drop(herd);
+        scale_gw.shutdown();
+    }
+    let point = |label: &str| {
+        scale_points
+            .iter()
+            .find(|p| p.0 == label)
+            .map(|&(_, c, r, mb)| (c, r, mb))
+            .unwrap_or((0.0, 0.0, 0.0))
+    };
+    let (c64, r64, m64) = point("64");
+    let (c1k, r1k, m1k) = point("1k");
+    let (c10k, r10k, m10k) = point("10k");
     let serve_doc = obj(vec![
         ("bench", s("serve")),
         ("synthetic_graph", JsonValue::Bool(!have_artifacts)),
@@ -374,9 +443,44 @@ fn main() {
         ("batch_p99_latency_us", num(m.tier(Tier::Batch).p99_latency_us())),
         ("mean_batch", num(m.mean_batch())),
         ("tops_per_watt", num(m.tops_per_watt(&gcfg.spec))),
+        ("conn_scale_64_conns", num(c64)),
+        ("conn_scale_64_rps", num(r64)),
+        ("conn_scale_64_rss_mb", num(m64)),
+        ("conn_scale_1k_conns", num(c1k)),
+        ("conn_scale_1k_rps", num(r1k)),
+        ("conn_scale_1k_rss_mb", num(m1k)),
+        ("conn_scale_10k_conns", num(c10k)),
+        ("conn_scale_10k_rps", num(r10k)),
+        ("conn_scale_10k_rss_mb", num(m10k)),
+        ("conn_scale_conns_max", num(conns_max)),
     ]);
     let serve_out =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
     std::fs::write(&serve_out, serve_doc.to_string_compact()).unwrap();
     println!("wrote {serve_out}");
+}
+
+/// Block until the gateway reports at least `want` open connections in
+/// its `/metrics` event-loop gauges (accepts are asynchronous), or a
+/// 20s deadline passes.  The threaded fallback has no gauge block —
+/// treat that as ready so the bench still runs.
+#[cfg(unix)]
+fn wait_for_open_conns(addr: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (status, body) = http::request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let open = osa_hcim::io::json::parse(&body)
+            .ok()
+            .and_then(|doc| {
+                doc.get("event_loop")
+                    .and_then(|ev| ev.get("open_connections"))
+                    .and_then(JsonValue::as_f64)
+            })
+            .unwrap_or(want as f64);
+        if open >= want as f64 || Instant::now() >= deadline {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
 }

@@ -129,6 +129,64 @@ impl Bench {
     }
 }
 
+/// Raise the open-file soft limit toward `want` (connection-scaling
+/// benches park thousands of sockets, client and server ends in one
+/// process).  Returns the effective soft limit after the attempt.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile(want: u64) -> u64 {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = Rlimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return 1024;
+        }
+        if r.cur < want {
+            let bumped = Rlimit { cur: want.min(r.max), max: r.max };
+            if setrlimit(RLIMIT_NOFILE, &bumped) == 0 {
+                return bumped.cur;
+            }
+        }
+        r.cur
+    }
+}
+
+/// Conservative fallback where rlimits are unavailable: callers clamp
+/// their fd appetite to the returned budget.
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile(_want: u64) -> u64 {
+    1024
+}
+
+/// Resident set size in MiB (`VmRSS` from /proc); 0.0 where /proc is
+/// unavailable — scaling benches still report throughput there.
+#[cfg(target_os = "linux")]
+pub fn vm_rss_mb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|st| {
+            st.lines()
+                .find(|l| l.starts_with("VmRSS:"))
+                .and_then(|l| l.split_whitespace().nth(1).and_then(|kb| kb.parse::<f64>().ok()))
+        })
+        .map(|kb| kb / 1024.0)
+        .unwrap_or(0.0)
+}
+
+/// See the linux variant; no portable RSS source without /proc.
+#[cfg(not(target_os = "linux"))]
+pub fn vm_rss_mb() -> f64 {
+    0.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

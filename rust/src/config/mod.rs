@@ -234,10 +234,17 @@ pub struct SystemConfig {
     /// request loop).  `false` answers every request with
     /// `Connection: close` — the one-request-per-connection baseline.
     pub keep_alive: bool,
-    /// Gateway: connection-worker pool size = max concurrent HTTP
-    /// connections; the same number again may wait in the accept
-    /// backlog, then admission answers 429 and closes.
+    /// Gateway: max concurrent HTTP connections (the connection cap).
+    /// Event loop: that many connections are served concurrently and as
+    /// many again may sit parked awaiting a slot.  Threaded pool: the
+    /// worker count, with an accept backlog of the same depth.  Past
+    /// both, admission answers 429 and closes.
     pub max_conns: usize,
+    /// Gateway: serve through the readiness-driven event loop (epoll /
+    /// poll; unix only — other platforms fall back to the threaded
+    /// pool).  `false` forces the thread-per-connection pool
+    /// (`--no-event-loop` escape hatch).
+    pub event_loop: bool,
     /// Gateway: per-read socket timeout in milliseconds for the
     /// keep-alive loop (idle sessions are closed after it; a stalled
     /// mid-request read is answered 408).  The whole-request slowloris
@@ -278,6 +285,7 @@ impl Default for SystemConfig {
             queue_cap: 256,
             keep_alive: true,
             max_conns: 64,
+            event_loop: true,
             read_timeout_ms: 5_000,
             governor: true,
             energy_budget_w: 0.0,
@@ -341,6 +349,7 @@ impl SystemConfig {
         cfg.queue_cap = t.get_usize("serve.queue_cap", cfg.queue_cap)?;
         cfg.keep_alive = t.get_bool("serve.keep_alive", cfg.keep_alive)?;
         cfg.max_conns = t.get_usize("serve.max_conns", cfg.max_conns)?;
+        cfg.event_loop = t.get_bool("serve.event_loop", cfg.event_loop)?;
         cfg.read_timeout_ms =
             t.get_usize("serve.read_timeout_ms", cfg.read_timeout_ms as usize)? as u64;
         cfg.governor = t.get_bool("serve.governor", cfg.governor)?;
@@ -431,7 +440,8 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
         let t = Toml::parse(
             "[serve]\nqueue_cap = 64\ngovernor = false\nenergy_budget_w = 2.5\n\
              gov_high_watermark = 0.9\ngov_low_watermark = 0.1\ngov_max_level = 5\n\
-             gov_hold_ms = 20\nkeep_alive = false\nmax_conns = 8\nread_timeout_ms = 250",
+             gov_hold_ms = 20\nkeep_alive = false\nmax_conns = 8\nread_timeout_ms = 250\n\
+             event_loop = false",
         )
         .unwrap();
         let cfg = SystemConfig::from_toml(&t).unwrap();
@@ -443,6 +453,7 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
         assert!(!cfg.keep_alive);
         assert_eq!(cfg.max_conns, 8);
         assert_eq!(cfg.read_timeout_ms, 250);
+        assert!(!cfg.event_loop);
         // defaults when the section is absent
         let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(cfg.queue_cap, 256);
@@ -451,6 +462,7 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
         assert!(cfg.keep_alive);
         assert_eq!(cfg.max_conns, 64);
         assert_eq!(cfg.read_timeout_ms, 5_000);
+        assert!(cfg.event_loop);
     }
 
     #[test]

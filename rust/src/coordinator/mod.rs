@@ -55,7 +55,39 @@ pub struct Request {
     /// boundary overrides (validated at submission).
     pub opts: InferOptions,
     pub submitted: Instant,
-    respond: Sender<Response>,
+    respond: ResponseSink,
+}
+
+/// Where a finished [`Response`] is delivered.
+///
+/// `Channel` is the classic blocking shape: one private channel per
+/// request, the submitter parks on `recv()` (connection-worker gateway,
+/// in-process `submit*` callers).  `Routed` is the event-loop shape:
+/// many in-flight requests share ONE completion channel, each tagged so
+/// the receiver can route it back to its connection, and a `wake`
+/// callback nudges the (never-blocking) event loop after every
+/// delivery.  Workers stay oblivious: they call [`ResponseSink::send`]
+/// either way.
+enum ResponseSink {
+    Channel(Sender<Response>),
+    Routed { tag: u64, tx: Sender<(u64, Response)>, wake: Arc<dyn Fn() + Send + Sync> },
+}
+
+impl ResponseSink {
+    /// Deliver the response; a vanished receiver is the submitter's
+    /// problem (it hung up), never the worker's.
+    fn send(&self, resp: Response) {
+        match self {
+            ResponseSink::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            ResponseSink::Routed { tag, tx, wake } => {
+                if tx.send((*tag, resp)).is_ok() {
+                    wake();
+                }
+            }
+        }
+    }
 }
 
 /// Sample buffers are rings: percentiles/means are over the most recent
@@ -320,6 +352,32 @@ impl Server {
     /// / [`SubmitError::InvalidOption`] for bad per-request options —
     /// validated here, before anything is enqueued.
     pub fn submit_request(&self, req: InferRequest) -> Result<Receiver<Response>, SubmitError> {
+        let (rtx, rrx) = channel();
+        self.submit_with_sink(req, ResponseSink::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Submit with a **routed** completion: the response arrives on the
+    /// shared `tx` as `(tag, response)` and `wake` is invoked after the
+    /// send.  This is the event-loop gateway's submission path — one
+    /// completion channel for every in-flight request of the loop, no
+    /// thread parked per request.  Validation and admission are
+    /// identical to [`Server::submit_request`].
+    pub fn submit_request_routed(
+        &self,
+        req: InferRequest,
+        tag: u64,
+        tx: Sender<(u64, Response)>,
+        wake: Arc<dyn Fn() + Send + Sync>,
+    ) -> Result<(), SubmitError> {
+        self.submit_with_sink(req, ResponseSink::Routed { tag, tx, wake })
+    }
+
+    fn submit_with_sink(
+        &self,
+        req: InferRequest,
+        sink: ResponseSink,
+    ) -> Result<(), SubmitError> {
         let InferRequest { image, options } = req;
         // the wire paths already 400 on bad sizes, but the typed API is
         // public too — a short image coalesced into a batch would shear
@@ -362,11 +420,10 @@ impl Server {
             }
         }
         let tier = options.tier;
-        let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = Request { id, image, opts: options, submitted: Instant::now(), respond: rtx };
+        let req = Request { id, image, opts: options, submitted: Instant::now(), respond: sink };
         self.queues.push(tier, req)?;
-        Ok(rrx)
+        Ok(())
     }
 
     /// Current queue depth per tier (gold, silver, batch).
@@ -629,7 +686,7 @@ fn run_group<'g>(
             }
             for (i, r) in group.into_iter().enumerate() {
                 let row = logits[i * classes..(i + 1) * classes].to_vec();
-                let _ = r.respond.send(Response {
+                r.respond.send(Response {
                     id: r.id,
                     pred: preds[i].unwrap_or(0),
                     logits: row,
@@ -669,7 +726,7 @@ fn answer_error(
         m.per_tier[tier.index()].errors += n as u64;
     }
     for r in group {
-        let _ = r.respond.send(Response {
+        r.respond.send(Response {
             id: r.id,
             pred: 0,
             logits: Vec::new(),

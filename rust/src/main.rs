@@ -96,7 +96,7 @@ fn main() -> Result<()> {
                     o.push(Opt::value("queue-cap", "bound of each QoS tier's queue", None));
                     o.push(Opt::value(
                         "max-conns",
-                        "connection-worker pool size (max concurrent HTTP connections)",
+                        "max concurrent HTTP connections (event loop) / worker pool size",
                         None,
                     ));
                     o.push(Opt::value(
@@ -107,6 +107,14 @@ fn main() -> Result<()> {
                     o.push(Opt::flag(
                         "no-keep-alive",
                         "one request per connection (Connection: close on every response)",
+                    ));
+                    o.push(Opt::flag(
+                        "event-loop",
+                        "force the readiness-driven gateway (default on unix)",
+                    ));
+                    o.push(Opt::flag(
+                        "no-event-loop",
+                        "use the thread-per-connection gateway instead of the event loop",
                     ));
                     o.push(Opt::flag("no-governor", "disable the dynamic precision governor"));
                     o.push(Opt::value(
@@ -188,6 +196,12 @@ fn main() -> Result<()> {
             cfg.read_timeout_ms = args.get_u64("read-timeout-ms", cfg.read_timeout_ms)?;
             if args.flag("no-keep-alive") {
                 cfg.keep_alive = false;
+            }
+            if args.flag("event-loop") {
+                cfg.event_loop = true;
+            }
+            if args.flag("no-event-loop") {
+                cfg.event_loop = false;
             }
             if args.flag("no-governor") {
                 cfg.governor = false;

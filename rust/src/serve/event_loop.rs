@@ -1,0 +1,1225 @@
+//! Readiness-driven serving loop (the default gateway mode on unix).
+//!
+//! One thread multiplexes every connection through an OS readiness
+//! poller — `epoll(7)` on Linux, `poll(2)` elsewhere — instead of the
+//! thread-per-connection pool in `serve::gateway`.  Connections are
+//! nonblocking state machines (DESIGN.md §10):
+//!
+//! ```text
+//! accept → Reading ⇄ Dispatched → Writing → (Reading | Lingering | close)
+//! ```
+//!
+//! * **Reading**: bytes stream into the connection's incremental
+//!   [`http::RequestParser`] as they arrive; a request may take any
+//!   number of wakeups to complete.  The per-read idle timeout and the
+//!   whole-request slowloris deadline (anchored at the FIRST byte of
+//!   the request, surviving arbitrarily many wakeups) are enforced by a
+//!   timer heap, not socket timeouts.
+//! * **Dispatched**: compute runs on the coordinator's ExecPool exactly
+//!   as in threaded mode; no gateway thread parks on the response.  The
+//!   worker routes the finished [`Response`] back over a channel and
+//!   nudges the loop through a self-pipe waker.  Reads are disarmed
+//!   while a request is in flight — unread pipelined bytes stay in the
+//!   kernel buffer, which is the backpressure.
+//! * **Writing**: the rendered bytes are flushed until `EAGAIN`, then
+//!   re-armed on writability so one slow reader can never stall the
+//!   loop.
+//! * **Lingering**: after an error response the write half is FIN'd and
+//!   the peer's unread request remainder is discarded (bounded budget +
+//!   deadline) so the kernel doesn't RST the response away.
+//!
+//! `max_conns` is the **connection cap**: up to `max_conns` admitted
+//! (served) connections plus up to `max_conns` parked ones (accepted
+//! but not yet read — promoted oldest-first as active slots free up);
+//! beyond that a connection is answered `429` and closed.
+//!
+//! Per-connection buffers (parser + response) are recycled through a
+//! small pool, so a keep-alive session allocates nothing per request on
+//! the hot path.
+
+use super::gateway::{
+    batch_line_json, err_body, render_batch, render_done, render_submit_err, route, Api,
+    BatchLine, ConnOpts, ConnStats, EventLoopStats, Rendered, RouteCtx, RouteOutcome,
+};
+use super::http::{ReadError, RequestParser};
+use super::qos::SubmitError;
+use crate::coordinator::{Response, Server};
+use crate::io::json::{obj, s};
+use anyhow::{Context, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poller token of the TCP listener.
+const TOK_LISTENER: u64 = 0;
+/// Poller token of the self-pipe waker.
+const TOK_WAKER: u64 = 1;
+/// First token handed to an admitted connection.
+const TOK_CONN0: u64 = 2;
+
+/// How long a response write may sit blocked on a slow reader.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Grace window for the lingering close.
+const LINGER_TIMEOUT: Duration = Duration::from_secs(1);
+/// Byte budget discarded during a lingering close.
+const LINGER_BUDGET: usize = 64 * 1024;
+/// Hard wall-clock cap on the shutdown drain.
+const DRAIN_CAP: Duration = Duration::from_secs(30);
+/// Buffers kept in the recycle pool.
+const POOL_CAP: usize = 64;
+/// A buffer that grew past this is dropped instead of pooled, so one
+/// huge body can't pin memory forever.
+const POOL_MAX_BUF: usize = 64 * 1024;
+
+/// Handle shared between the loop thread, the [`Gateway`], and the
+/// coordinator workers (through the wake closure).
+///
+/// [`Gateway`]: super::gateway::Gateway
+pub(crate) struct Shared {
+    pub(crate) stop: AtomicBool,
+    pub(crate) ev: Arc<EventLoopStats>,
+    /// Write end of the self-pipe; one byte = "something to process".
+    waker: UnixStream,
+}
+
+impl Shared {
+    /// Nudge the loop out of its poller wait.  Nonblocking: if the pipe
+    /// is already full the loop is guaranteed to wake anyway.
+    pub(crate) fn wake(&self) {
+        let _ = (&self.waker).write(&[1u8]);
+    }
+
+    /// Ask the loop to drain and exit (idempotent).
+    pub(crate) fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+}
+
+/// Start the event loop on its own thread.
+pub(crate) fn spawn(
+    server: Arc<Server>,
+    opts: ConnOpts,
+    max_conns: usize,
+    listener: TcpListener,
+    stats: Arc<ConnStats>,
+) -> Result<(Arc<Shared>, std::thread::JoinHandle<()>)> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let (wtx, wrx) = UnixStream::pair().context("waker pipe")?;
+    wtx.set_nonblocking(true).context("nonblocking waker")?;
+    wrx.set_nonblocking(true).context("nonblocking waker")?;
+    let ev = Arc::new(EventLoopStats::default());
+    let shared = Arc::new(Shared { stop: AtomicBool::new(false), ev, waker: wtx });
+    let poller = sys::Poller::new().context("creating poller")?;
+    let thread = std::thread::Builder::new()
+        .name("gateway-loop".into())
+        .spawn({
+            let shared = shared.clone();
+            move || {
+                let (comp_tx, comp_rx) = channel();
+                let wake_fn: Arc<dyn Fn() + Send + Sync> = {
+                    let shared = shared.clone();
+                    Arc::new(move || shared.wake())
+                };
+                let mut lp = EventLoop {
+                    server,
+                    opts,
+                    max_conns,
+                    listener,
+                    stats,
+                    shared,
+                    waker_rx: wrx,
+                    poller,
+                    conns: HashMap::new(),
+                    parked: VecDeque::new(),
+                    timers: BinaryHeap::new(),
+                    pool: Vec::new(),
+                    next_token: TOK_CONN0,
+                    comp_tx,
+                    comp_rx,
+                    wake_fn,
+                    tags: HashMap::new(),
+                    next_tag: 0,
+                    draining_since: None,
+                };
+                if let Err(e) = lp.run() {
+                    log::error!("gateway event loop failed: {e}");
+                }
+            }
+        })
+        .context("spawning event loop")?;
+    Ok((shared, thread))
+}
+
+/// Where a connection is in its lifecycle.
+enum Phase {
+    /// Accumulating request bytes into the parser.
+    Reading,
+    /// A request is on the coordinator; reads disarmed.
+    Dispatched,
+    /// Flushing a rendered response.
+    Writing,
+    /// Error response sent; discarding the peer's unread remainder.
+    Lingering,
+}
+
+/// In-flight coordinator work owned by one connection.
+enum PendingWork {
+    Single {
+        api: Api,
+        keep: bool,
+        tag: u64,
+    },
+    Batch {
+        /// `(client line number, rendered NDJSON line when done)` in
+        /// input order.
+        slots: Vec<(usize, Option<String>)>,
+        remaining: usize,
+        keep: bool,
+        tags: Vec<u64>,
+    },
+}
+
+impl PendingWork {
+    fn tags(&self) -> Vec<u64> {
+        match self {
+            PendingWork::Single { tag, .. } => vec![*tag],
+            PendingWork::Batch { tags, .. } => tags.clone(),
+        }
+    }
+}
+
+/// One admitted connection.
+struct Conn {
+    stream: TcpStream,
+    parser: RequestParser,
+    /// Response bytes being flushed (`out_pos` already written).
+    out: Vec<u8>,
+    out_pos: usize,
+    phase: Phase,
+    /// Last instant a byte arrived (idle / per-read deadline anchor).
+    last_byte: Instant,
+    /// First byte of the CURRENT request (whole-request slowloris
+    /// deadline anchor); `None` between requests.
+    req_start: Option<Instant>,
+    write_deadline: Option<Instant>,
+    linger_deadline: Option<Instant>,
+    linger_budget: usize,
+    /// Keep serving after the current response flushes?
+    keep_after_write: bool,
+    /// Linger-close after the current response flushes (error path)?
+    drain_after_write: bool,
+    /// Currently armed poller interest `(read, write)`.
+    interest: (bool, bool),
+    pending: Option<PendingWork>,
+}
+
+struct EventLoop {
+    server: Arc<Server>,
+    opts: ConnOpts,
+    max_conns: usize,
+    listener: TcpListener,
+    stats: Arc<ConnStats>,
+    shared: Arc<Shared>,
+    waker_rx: UnixStream,
+    poller: sys::Poller,
+    conns: HashMap<u64, Conn>,
+    /// Accepted connections waiting for a free active slot (FIFO).
+    parked: VecDeque<TcpStream>,
+    /// Min-heap of `(deadline, token)`; entries are lazily invalidated
+    /// by recomputing the true deadline on pop.
+    timers: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// Recycled connection buffers.
+    pool: Vec<Vec<u8>>,
+    next_token: u64,
+    comp_tx: Sender<(u64, Response)>,
+    comp_rx: Receiver<(u64, Response)>,
+    wake_fn: Arc<dyn Fn() + Send + Sync>,
+    /// In-flight tag → (connection token, batch slot index).
+    tags: HashMap<u64, (u64, usize)>,
+    next_tag: u64,
+    draining_since: Option<Instant>,
+}
+
+impl EventLoop {
+    fn run(&mut self) -> io::Result<()> {
+        self.poller.add(self.listener.as_raw_fd(), TOK_LISTENER, true, false)?;
+        self.poller.add(self.waker_rx.as_raw_fd(), TOK_WAKER, true, false)?;
+        let mut events: Vec<sys::Event> = Vec::with_capacity(256);
+        loop {
+            self.drain_completions();
+            if self.shared.stop.load(Ordering::SeqCst) {
+                self.begin_drain();
+                if self.drained() {
+                    return Ok(());
+                }
+            }
+            let timeout = self.next_timeout();
+            self.poller.wait(&mut events, timeout)?;
+            self.shared.ev.wakeups.fetch_add(1, Ordering::Relaxed);
+            let now = Instant::now();
+            for ev in events.drain(..) {
+                match ev.token {
+                    TOK_LISTENER => self.accept_ready(now),
+                    TOK_WAKER => self.drain_waker(),
+                    token => self.conn_event(token, ev, now),
+                }
+            }
+            self.drain_completions();
+            self.process_timers(Instant::now());
+        }
+    }
+
+    /// The poller wait bound: the nearest timer (possibly stale — it is
+    /// re-validated on expiry), capped during drain so the hard drain
+    /// deadline is observed.
+    fn next_timeout(&self) -> Option<Duration> {
+        let now = Instant::now();
+        let mut t = self
+            .timers
+            .peek()
+            .map(|Reverse((when, _))| when.saturating_duration_since(now));
+        if self.draining_since.is_some() {
+            let cap = Duration::from_millis(250);
+            t = Some(t.map_or(cap, |x| x.min(cap)));
+        }
+        t
+    }
+
+    // ---- admission -----------------------------------------------------
+
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream, now),
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream, now: Instant) {
+        if self.shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if self.conns.len() < self.max_conns {
+            self.activate(stream, now);
+        } else if self.parked.len() < self.max_conns {
+            // accepted but not served yet: reads stay unarmed, so the
+            // peer just sees a connected-but-quiet server until a slot
+            // frees up — the event-loop analogue of the accept backlog
+            self.parked.push_back(stream);
+            self.shared
+                .ev
+                .parked_connections
+                .store(self.parked.len() as u64, Ordering::Relaxed);
+        } else {
+            self.reject_429(stream);
+        }
+    }
+
+    fn activate(&mut self, stream: TcpStream, now: Instant) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        if let Err(e) = self.poller.add(stream.as_raw_fd(), token, true, false) {
+            log::warn!("registering connection: {e}");
+            return;
+        }
+        self.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        let parser = RequestParser::with_buffer(self.take_buf());
+        let out = self.take_buf();
+        self.conns.insert(
+            token,
+            Conn {
+                stream,
+                parser,
+                out,
+                out_pos: 0,
+                phase: Phase::Reading,
+                last_byte: now,
+                req_start: None,
+                write_deadline: None,
+                linger_deadline: None,
+                linger_budget: 0,
+                keep_after_write: false,
+                drain_after_write: false,
+                interest: (true, false),
+                pending: None,
+            },
+        );
+        self.shared
+            .ev
+            .open_connections
+            .store(self.conns.len() as u64, Ordering::Relaxed);
+        self.arm_timer(token);
+    }
+
+    /// Over both caps: explicit backpressure, same contract (and body)
+    /// as the threaded accept path.  The write targets a fresh socket's
+    /// empty send buffer, so it effectively never blocks the loop; the
+    /// short timeout bounds the pathological case.
+    fn reject_429(&mut self, stream: TcpStream) {
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        let e = SubmitError::Overloaded { max_conns: self.max_conns };
+        let body =
+            obj(vec![("error", s("busy")), ("detail", s(&e.to_string()))]).to_string_compact();
+        let r = Rendered::json(429, "Too Many Requests", body, false);
+        let mut out = Vec::new();
+        r.to_bytes(&mut out);
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+        let _ = (&stream).write_all(&out);
+        // FIN after the data: the peer (which never sent a byte, so no
+        // unread input can RST the response away) reads the 429, then EOF
+        let _ = stream.shutdown(Shutdown::Write);
+    }
+
+    fn promote_parked(&mut self, now: Instant) {
+        while self.conns.len() < self.max_conns {
+            let Some(stream) = self.parked.pop_front() else { break };
+            self.activate(stream, now);
+        }
+        self.shared
+            .ev
+            .parked_connections
+            .store(self.parked.len() as u64, Ordering::Relaxed);
+    }
+
+    // ---- buffer pool ---------------------------------------------------
+
+    fn take_buf(&mut self) -> Vec<u8> {
+        match self.pool.pop() {
+            Some(b) => {
+                self.shared.ev.pool_hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.shared.ev.pool_misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(4096)
+            }
+        }
+    }
+
+    fn put_buf(&mut self, mut b: Vec<u8>) {
+        if self.pool.len() < POOL_CAP && b.capacity() <= POOL_MAX_BUF {
+            b.clear();
+            self.pool.push(b);
+        }
+    }
+
+    // ---- socket readiness ----------------------------------------------
+
+    fn conn_event(&mut self, token: u64, ev: sys::Event, now: Instant) {
+        if ev.readable {
+            self.on_readable(token, now);
+        }
+        if ev.writable {
+            self.try_flush(token, now);
+        }
+        if ev.hangup && !ev.readable && !ev.writable {
+            // pure HUP/ERR (no data left to read): the peer is gone.
+            // This is also how a Dispatched connection (interest fully
+            // disarmed) learns its client vanished.
+            self.close_conn(token, now);
+        }
+    }
+
+    fn on_readable(&mut self, token: u64, now: Instant) {
+        match self.conns.get(&token).map(|c| matches!(c.phase, Phase::Lingering)) {
+            None => return,
+            Some(true) => {
+                self.linger_read(token, now);
+                return;
+            }
+            Some(false) => {}
+        }
+        let mut scratch = [0u8; 16 * 1024];
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if !matches!(conn.phase, Phase::Reading) {
+                // a parsed request transitioned the connection away;
+                // pipelined bytes wait in the kernel buffer
+                return;
+            }
+            match (&conn.stream).read(&mut scratch) {
+                Ok(0) => {
+                    // normal end of a keep-alive session (peer close)
+                    self.close_conn(token, now);
+                    return;
+                }
+                Ok(n) => {
+                    conn.last_byte = now;
+                    conn.parser.push(&scratch[..n]);
+                    self.advance_conn(token, now);
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    self.shared.ev.eagain_reads.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::debug!("connection read failed: {e}");
+                    self.close_conn(token, now);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Parse-and-serve loop over whatever the parser holds.  Called
+    /// after every read and after each response completes (pipelining).
+    fn advance_conn(&mut self, token: u64, now: Instant) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if !matches!(conn.phase, Phase::Reading) {
+                return;
+            }
+            match conn.parser.poll() {
+                Ok(None) => {
+                    // partial request: the whole-request (slowloris)
+                    // deadline anchors at its FIRST byte and sticks
+                    // across however many wakeups the request takes
+                    if conn.parser.mid_request() {
+                        if conn.req_start.is_none() {
+                            conn.req_start = Some(now);
+                        }
+                    } else {
+                        conn.req_start = None;
+                    }
+                    self.arm_timer(token);
+                    return;
+                }
+                Ok(Some(req)) => {
+                    conn.req_start = None;
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let keep = self.opts.keep_alive
+                        && req.wants_keep_alive()
+                        && !self.shared.stop.load(Ordering::SeqCst);
+                    self.handle_request(token, &req, keep, now);
+                }
+                Err(e) => {
+                    // protocol violation: 400, then drop the connection
+                    // — after a framing error the byte stream can't be
+                    // trusted
+                    let msg = match e {
+                        ReadError::Malformed(m) => m,
+                        ReadError::Io(err) => err.to_string(),
+                        // the incremental parser never produces these
+                        ReadError::Closed | ReadError::TimedOut { .. } => {
+                            "connection error".into()
+                        }
+                    };
+                    let r = Rendered::json(400, "Bad Request", err_body(&msg), false);
+                    self.queue_response(token, &r, true, now);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_request(
+        &mut self,
+        token: u64,
+        req: &super::http::HttpRequest,
+        keep: bool,
+        now: Instant,
+    ) {
+        let outcome = {
+            let rctx = RouteCtx {
+                server: &self.server,
+                spec: &self.opts.spec,
+                default_tier: self.opts.default_tier,
+                stats: &self.stats,
+                ev: Some(&self.shared.ev),
+            };
+            route(req, &rctx, keep)
+        };
+        match outcome {
+            RouteOutcome::Respond(r) => self.queue_response(token, &r, false, now),
+            RouteOutcome::Dispatch { ireq, api, keep } => {
+                let tier = ireq.options.tier;
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                match self.server.submit_request_routed(
+                    ireq,
+                    tag,
+                    self.comp_tx.clone(),
+                    self.wake_fn.clone(),
+                ) {
+                    Ok(()) => {
+                        self.tags.insert(tag, (token, 0));
+                        if let Some(conn) = self.conns.get_mut(&token) {
+                            conn.phase = Phase::Dispatched;
+                            conn.pending = Some(PendingWork::Single { api, keep, tag });
+                        }
+                        self.set_interest(token, false, false);
+                    }
+                    Err(e) => {
+                        let r = render_submit_err(api, &e, tier, keep);
+                        self.queue_response(token, &r, false, now);
+                    }
+                }
+            }
+            RouteOutcome::DispatchBatch { lines, keep } => {
+                self.dispatch_batch(token, lines, keep, now)
+            }
+        }
+    }
+
+    /// Submit every admissible batch line before any response lands —
+    /// the same pipelining-into-the-coalescing-window property as the
+    /// threaded submit/collect phases, without parking a thread.
+    fn dispatch_batch(&mut self, token: u64, lines: Vec<BatchLine>, keep: bool, now: Instant) {
+        let mut slots: Vec<(usize, Option<String>)> = Vec::with_capacity(lines.len());
+        let mut tags = Vec::new();
+        let mut remaining = 0usize;
+        for l in lines {
+            match l {
+                BatchLine::Err { line, msg } => {
+                    slots.push((line, Some(batch_line_json(line, Err(&msg)))));
+                }
+                BatchLine::Submit { line, ireq } => {
+                    let tag = self.next_tag;
+                    self.next_tag += 1;
+                    match self.server.submit_request_routed(
+                        ireq,
+                        tag,
+                        self.comp_tx.clone(),
+                        self.wake_fn.clone(),
+                    ) {
+                        Ok(()) => {
+                            self.tags.insert(tag, (token, slots.len()));
+                            tags.push(tag);
+                            slots.push((line, None));
+                            remaining += 1;
+                        }
+                        Err(e) => {
+                            slots.push((line, Some(batch_line_json(line, Err(&e.to_string())))));
+                        }
+                    }
+                }
+            }
+        }
+        if remaining == 0 {
+            let body: Vec<String> =
+                slots.into_iter().filter_map(|(_, rendered)| rendered).collect();
+            let r = render_batch(body, keep);
+            self.queue_response(token, &r, false, now);
+            return;
+        }
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.phase = Phase::Dispatched;
+            conn.pending = Some(PendingWork::Batch { slots, remaining, keep, tags });
+        }
+        self.set_interest(token, false, false);
+    }
+
+    // ---- completions ---------------------------------------------------
+
+    fn drain_completions(&mut self) {
+        while let Ok((tag, resp)) = self.comp_rx.try_recv() {
+            let Some((token, idx)) = self.tags.remove(&tag) else {
+                // connection died while the request was in flight
+                continue;
+            };
+            let now = Instant::now();
+            // take the pending work, fold the response in, and either
+            // finish (a Rendered to queue) or put the rest back
+            let finished = {
+                let Some(conn) = self.conns.get_mut(&token) else { continue };
+                match conn.pending.take() {
+                    None => None,
+                    Some(PendingWork::Single { api, keep, .. }) => {
+                        Some(render_done(api, &resp, keep))
+                    }
+                    Some(PendingWork::Batch { mut slots, mut remaining, keep, tags }) => {
+                        if let Some(slot) = slots.get_mut(idx) {
+                            if slot.1.is_none() {
+                                slot.1 = Some(batch_line_json(slot.0, Ok(&resp)));
+                                remaining -= 1;
+                            }
+                        }
+                        if remaining == 0 {
+                            let body: Vec<String> = slots
+                                .into_iter()
+                                .map(|(line, rendered)| {
+                                    rendered.unwrap_or_else(|| {
+                                        batch_line_json(line, Err("response channel dropped"))
+                                    })
+                                })
+                                .collect();
+                            Some(render_batch(body, keep))
+                        } else {
+                            conn.pending =
+                                Some(PendingWork::Batch { slots, remaining, keep, tags });
+                            None
+                        }
+                    }
+                }
+            };
+            if let Some(r) = finished {
+                self.queue_response(token, &r, false, now);
+            }
+        }
+    }
+
+    // ---- writing -------------------------------------------------------
+
+    /// Render `r` into the connection's (pooled) output buffer and
+    /// start flushing.  `drain` = linger-close afterwards (error path
+    /// where the peer's request was not fully read).
+    fn queue_response(&mut self, token: u64, r: &Rendered, drain: bool, now: Instant) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        conn.out.clear();
+        conn.out_pos = 0;
+        r.to_bytes(&mut conn.out);
+        conn.keep_after_write = r.keep;
+        conn.drain_after_write = drain;
+        conn.phase = Phase::Writing;
+        conn.write_deadline = Some(now + WRITE_TIMEOUT);
+        self.arm_timer(token);
+        self.try_flush(token, now);
+    }
+
+    fn try_flush(&mut self, token: u64, now: Instant) {
+        enum Flush {
+            Done,
+            Blocked,
+            Dead,
+        }
+        let res = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if !matches!(conn.phase, Phase::Writing) {
+                return;
+            }
+            loop {
+                if conn.out_pos >= conn.out.len() {
+                    break Flush::Done;
+                }
+                match (&conn.stream).write(&conn.out[conn.out_pos..]) {
+                    Ok(0) => break Flush::Dead,
+                    Ok(n) => conn.out_pos += n,
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break Flush::Blocked,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        log::debug!("writing response: {e}");
+                        break Flush::Dead;
+                    }
+                }
+            }
+        };
+        match res {
+            Flush::Done => self.post_write(token, now),
+            Flush::Blocked => {
+                self.shared.ev.eagain_writes.fetch_add(1, Ordering::Relaxed);
+                self.set_interest(token, false, true);
+            }
+            // a failed (possibly partial) write leaves the stream
+            // misframed: the only safe continuation is no continuation
+            Flush::Dead => self.close_conn(token, now),
+        }
+    }
+
+    /// One response fully flushed: linger (error path), close
+    /// (`Connection: close` / draining), or go back to Reading — where
+    /// a pipelined next request may already sit in the parser.
+    fn post_write(&mut self, token: u64, now: Instant) {
+        let stop = self.shared.stop.load(Ordering::SeqCst);
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        conn.write_deadline = None;
+        conn.out.clear();
+        conn.out_pos = 0;
+        if conn.drain_after_write {
+            conn.phase = Phase::Lingering;
+            let _ = conn.stream.shutdown(Shutdown::Write);
+            conn.linger_deadline = Some(now + LINGER_TIMEOUT);
+            conn.linger_budget = LINGER_BUDGET;
+            self.set_interest(token, true, false);
+            self.arm_timer(token);
+            return;
+        }
+        if !conn.keep_after_write || stop {
+            self.close_conn(token, now);
+            return;
+        }
+        conn.phase = Phase::Reading;
+        conn.last_byte = now;
+        self.set_interest(token, true, false);
+        self.advance_conn(token, now);
+    }
+
+    // ---- lingering close ----------------------------------------------
+
+    /// Discard the peer's unread bytes (bounded) so the kernel doesn't
+    /// RST away the error response we just wrote (see the threaded
+    /// `linger_close` for the full rationale).
+    fn linger_read(&mut self, token: u64, now: Instant) {
+        let mut scratch = [0u8; 4096];
+        let done = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            loop {
+                match (&conn.stream).read(&mut scratch) {
+                    Ok(0) => break true, // peer saw the FIN and closed
+                    Ok(n) => {
+                        if n >= conn.linger_budget {
+                            break true;
+                        }
+                        conn.linger_budget -= n;
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        self.shared.ev.eagain_reads.fetch_add(1, Ordering::Relaxed);
+                        break false;
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break true,
+                }
+            }
+        };
+        if done {
+            self.close_conn(token, now);
+        }
+    }
+
+    // ---- teardown ------------------------------------------------------
+
+    fn close_conn(&mut self, token: u64, now: Instant) {
+        let Some(conn) = self.conns.remove(&token) else { return };
+        let _ = self.poller.del(conn.stream.as_raw_fd());
+        // orphan in-flight completions: their tags no longer resolve,
+        // so drain_completions drops the responses on the floor
+        if let Some(p) = &conn.pending {
+            for t in p.tags() {
+                self.tags.remove(&t);
+            }
+        }
+        self.put_buf(conn.parser.into_buffer());
+        self.put_buf(conn.out);
+        self.shared
+            .ev
+            .open_connections
+            .store(self.conns.len() as u64, Ordering::Relaxed);
+        self.promote_parked(now);
+    }
+
+    /// First observation of the stop flag: stop accepting, drop parked
+    /// connections (nothing in flight), close idle/lingering ones, and
+    /// keep only Dispatched/Writing connections until they finish.
+    fn begin_drain(&mut self) {
+        if self.draining_since.is_some() {
+            return;
+        }
+        self.draining_since = Some(Instant::now());
+        let _ = self.poller.del(self.listener.as_raw_fd());
+        self.parked.clear();
+        self.shared.ev.parked_connections.store(0, Ordering::Relaxed);
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.phase, Phase::Reading | Phase::Lingering))
+            .map(|(t, _)| *t)
+            .collect();
+        let now = Instant::now();
+        for t in idle {
+            self.close_conn(t, now);
+        }
+    }
+
+    fn drained(&self) -> bool {
+        if self.conns.is_empty() {
+            return true;
+        }
+        match self.draining_since {
+            // past the cap, stragglers are cut off rather than holding
+            // shutdown hostage
+            Some(t) => t.elapsed() > DRAIN_CAP,
+            None => false,
+        }
+    }
+
+    // ---- timers --------------------------------------------------------
+
+    /// The connection's TRUE deadline right now (timer heap entries are
+    /// only hints; this is authoritative).
+    fn deadline_of(&self, conn: &Conn) -> Option<Instant> {
+        match conn.phase {
+            Phase::Reading => {
+                let rt = self.opts.read_timeout?;
+                let mut d = conn.last_byte + rt;
+                if !self.opts.request_deadline.is_zero() {
+                    if let Some(start) = conn.req_start {
+                        d = d.min(start + self.opts.request_deadline);
+                    }
+                }
+                Some(d)
+            }
+            Phase::Dispatched => None, // compute takes what it takes
+            Phase::Writing => conn.write_deadline,
+            Phase::Lingering => conn.linger_deadline,
+        }
+    }
+
+    fn arm_timer(&mut self, token: u64) {
+        let d = match self.conns.get(&token) {
+            Some(conn) => self.deadline_of(conn),
+            None => return,
+        };
+        if let Some(d) = d {
+            self.timers.push(Reverse((d, token)));
+        }
+    }
+
+    fn process_timers(&mut self, now: Instant) {
+        while let Some(&Reverse((when, token))) = self.timers.peek() {
+            if when > now {
+                break;
+            }
+            self.timers.pop();
+            // lazily re-validate: the connection may be gone, or in a
+            // different phase with a different (or no) deadline
+            let true_deadline = match self.conns.get(&token) {
+                Some(conn) => self.deadline_of(conn),
+                None => continue,
+            };
+            match true_deadline {
+                None => continue,
+                Some(d) if d > now => self.timers.push(Reverse((d, token))),
+                Some(_) => self.expire(token, now),
+            }
+        }
+    }
+
+    fn expire(&mut self, token: u64, now: Instant) {
+        self.shared.ev.deadline_expirations.fetch_add(1, Ordering::Relaxed);
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        match conn.phase {
+            Phase::Reading => {
+                if conn.parser.mid_request() {
+                    // stalled upload / slowloris: tell the peer before
+                    // shedding it
+                    let r = Rendered::json(
+                        408,
+                        "Request Timeout",
+                        err_body("request stalled mid-read"),
+                        false,
+                    );
+                    self.queue_response(token, &r, true, now);
+                } else {
+                    // idle keep-alive timeout: close silently
+                    self.close_conn(token, now);
+                }
+            }
+            Phase::Writing | Phase::Lingering => self.close_conn(token, now),
+            Phase::Dispatched => {}
+        }
+    }
+
+    // ---- poller plumbing -----------------------------------------------
+
+    fn set_interest(&mut self, token: u64, read: bool, write: bool) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.interest == (read, write) {
+            return;
+        }
+        conn.interest = (read, write);
+        if let Err(e) = self.poller.modify(conn.stream.as_raw_fd(), token, read, write) {
+            log::debug!("poller modify failed: {e}");
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut scratch = [0u8; 256];
+        loop {
+            match (&self.waker_rx).read(&mut scratch) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Poller timeout in milliseconds (`-1` = wait forever), rounded UP so
+/// a deadline under 1ms away doesn't make the loop spin.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let whole = d.as_millis();
+            let ms = if d > Duration::from_millis(whole as u64) { whole + 1 } else { whole };
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+/// Linux: `epoll(7)`.
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    /// The kernel ABI struct: packed on x86 (no padding between
+    /// `events` and `data`), naturally aligned elsewhere.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// One readiness notification, poller-agnostic.
+    #[derive(Clone, Copy, Debug)]
+    pub(super) struct Event {
+        pub(super) token: u64,
+        pub(super) readable: bool,
+        pub(super) writable: bool,
+        pub(super) hangup: bool,
+    }
+
+    pub(super) struct Poller {
+        epfd: c_int,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(
+            &self,
+            op: c_int,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            let mut bits = 0u32;
+            if read {
+                bits |= EPOLLIN;
+            }
+            if write {
+                bits |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events: bits, data: token };
+            let arg: *mut EpollEvent =
+                if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub(super) fn add(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+        }
+
+        pub(super) fn modify(
+            &self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+        }
+
+        pub(super) fn del(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, false, false)
+        }
+
+        pub(super) fn wait(
+            &self,
+            out: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 256];
+            let ms = super::timeout_ms(timeout);
+            let n = unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as c_int, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // copy out of the (possibly packed) struct before use
+                let bits = ev.events;
+                let data = ev.data;
+                out.push(Event {
+                    token: data,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLHUP | EPOLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+/// Non-Linux unix: `poll(2)` over an explicit registration table.
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    /// One readiness notification, poller-agnostic.
+    #[derive(Clone, Copy, Debug)]
+    pub(super) struct Event {
+        pub(super) token: u64,
+        pub(super) readable: bool,
+        pub(super) writable: bool,
+        pub(super) hangup: bool,
+    }
+
+    pub(super) struct Poller {
+        reg: RefCell<HashMap<RawFd, (u64, bool, bool)>>,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            Ok(Poller { reg: RefCell::new(HashMap::new()) })
+        }
+
+        pub(super) fn add(&self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.reg.borrow_mut().insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub(super) fn modify(
+            &self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.reg.borrow_mut().insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub(super) fn del(&self, fd: RawFd) -> io::Result<()> {
+            self.reg.borrow_mut().remove(&fd);
+            Ok(())
+        }
+
+        pub(super) fn wait(
+            &self,
+            out: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = self
+                .reg
+                .borrow()
+                .iter()
+                .map(|(&fd, &(_, read, write))| {
+                    let mut events: c_short = 0;
+                    if read {
+                        events |= POLLIN;
+                    }
+                    if write {
+                        events |= POLLOUT;
+                    }
+                    PollFd { fd, events, revents: 0 }
+                })
+                .collect();
+            let ms = super::timeout_ms(timeout);
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_uint, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            let reg = self.reg.borrow();
+            for pfd in &fds {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                let Some(&(token, _, _)) = reg.get(&pfd.fd) else { continue };
+                out.push(Event {
+                    token,
+                    readable: pfd.revents & POLLIN != 0,
+                    writable: pfd.revents & POLLOUT != 0,
+                    hangup: pfd.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}

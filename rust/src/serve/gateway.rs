@@ -19,17 +19,30 @@
 //!   precision contracts.
 //! * `GET /healthz` — liveness probe.
 //!
-//! Threading: one accept thread feeding a **bounded connection-worker
-//! pool** (`[serve] max_conns` workers, same pattern as `sched::exec`)
-//! through an accept backlog of the same depth.  A connection past the
-//! backlog is answered `429` and closed — the connection-level twin of
-//! the QoS queues' `SubmitError` admission.  Each worker runs the
-//! keep-alive loop: read request (per-read timeout + whole-request
-//! slowloris deadline), dispatch, respond `Connection: keep-alive`
-//! until the client closes, errs, stalls, asks for `close`, or the
-//! gateway shuts down.  Graceful [`Gateway::shutdown`] stops accepting,
-//! finishes in-flight requests (responses carry `Connection: close`),
-//! nudges idle keep-alive readers awake, then drains the coordinator.
+//! Two serving modes share one routing/rendering core (so they emit
+//! byte-identical responses):
+//!
+//! * **Event loop** (default on unix, `[serve] event_loop = true`): a
+//!   single readiness-driven thread multiplexes every connection —
+//!   nonblocking accept, per-connection state machines over the
+//!   incremental `http::RequestParser`, pooled buffers, a timer heap
+//!   for read/slowloris/idle deadlines, and completions routed back
+//!   from the coordinator's ExecPool without parking a thread per
+//!   request (see `serve::event_loop`).  `max_conns` is a **connection
+//!   cap**: up to `max_conns` connections are served concurrently,
+//!   up to `max_conns` more are parked (accepted, not yet read), and
+//!   anything beyond is answered `429` and closed.
+//! * **Threaded** (`--no-event-loop`, and every non-unix build): the
+//!   PR-4 bounded connection-worker pool — one accept thread feeding
+//!   `max_conns` workers through an accept backlog of the same depth;
+//!   each worker runs a blocking keep-alive loop (per-read timeout +
+//!   whole-request slowloris deadline).
+//!
+//! In both modes a request persists the connection only when the
+//! gateway allows it, the request allows it, and the gateway isn't
+//! draining; graceful [`Gateway::shutdown`] stops accepting, finishes
+//! in-flight requests (responses carry `Connection: close`), then
+//! drains the coordinator.
 
 use super::http::{self, HttpRequest, ReadError};
 use super::qos::{SubmitError, Tier};
@@ -41,7 +54,7 @@ use crate::nn::QGraph;
 use crate::spec::MacroSpec;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
-use std::io::BufReader;
+use std::io::{BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -81,17 +94,58 @@ impl ConnStats {
     }
 }
 
-/// Connection-lifecycle knobs resolved from [`SystemConfig`].
+/// Event-loop observability (`/metrics` → `"event_loop"`).  Counters
+/// are monotonic; `open_connections` / `parked_connections` are gauges
+/// tracking current state.  Defined here (not in `serve::event_loop`)
+/// so the `/metrics` surface exists on every platform even when the
+/// loop itself is compiled out.
+#[derive(Debug, Default)]
+pub struct EventLoopStats {
+    /// Admitted connections currently registered with the poller.
+    pub open_connections: AtomicU64,
+    /// Accepted connections parked awaiting a free active slot.
+    pub parked_connections: AtomicU64,
+    /// Poller returns (epoll_wait / poll), including timer-only ticks.
+    pub wakeups: AtomicU64,
+    /// Reads that hit `EAGAIN`/`WouldBlock` (socket buffer drained).
+    pub eagain_reads: AtomicU64,
+    /// Writes that hit `EAGAIN`/`WouldBlock` (kernel send buffer full;
+    /// the response is re-armed on writability instead of blocking).
+    pub eagain_writes: AtomicU64,
+    /// Idle / slowloris / write / linger deadlines that actually fired.
+    pub deadline_expirations: AtomicU64,
+    /// Connection buffers recycled from the pool vs freshly allocated.
+    pub pool_hits: AtomicU64,
+    pub pool_misses: AtomicU64,
+}
+
+impl EventLoopStats {
+    /// Fraction of buffer acquisitions served by the pool (0 before
+    /// any connection arrived).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let h = self.pool_hits.load(Ordering::Relaxed) as f64;
+        let m = self.pool_misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+/// Connection-lifecycle knobs resolved from [`SystemConfig`] (shared
+/// by both serving modes).
 #[derive(Debug, Clone, Copy)]
-struct ConnOpts {
-    keep_alive: bool,
-    /// Per-read socket timeout (None = wait forever).
-    read_timeout: Option<Duration>,
-    /// Whole-request deadline (slowloris guard; ZERO = disabled).
-    request_deadline: Duration,
-    spec: MacroSpec,
+pub(crate) struct ConnOpts {
+    pub(crate) keep_alive: bool,
+    /// Per-read / idle timeout (None = wait forever).
+    pub(crate) read_timeout: Option<Duration>,
+    /// Whole-request deadline anchored at the FIRST byte of a request
+    /// (slowloris guard; ZERO = disabled).
+    pub(crate) request_deadline: Duration,
+    pub(crate) spec: MacroSpec,
     /// Tier assumed when a request names none (`[serve] default_tier`).
-    default_tier: Tier,
+    pub(crate) default_tier: Tier,
 }
 
 /// Bounded queue of accepted-but-unclaimed connections (the accept
@@ -160,13 +214,31 @@ struct ConnCtx {
     stop: AtomicBool,
 }
 
-/// The serving gateway (listener + connection pool + coordinator).
+/// The serving gateway (listener + event loop or connection pool +
+/// coordinator).
 pub struct Gateway {
-    ctx: Arc<ConnCtx>,
-    queue: Arc<ConnQueue>,
     addr: SocketAddr,
-    accept: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<ConnStats>,
+    inner: Inner,
+}
+
+enum Inner {
+    /// The PR-4 bounded connection-worker pool — the `--no-event-loop`
+    /// escape hatch, and the only mode on non-unix builds.
+    Threaded {
+        ctx: Arc<ConnCtx>,
+        queue: Arc<ConnQueue>,
+        accept: Option<std::thread::JoinHandle<()>>,
+        workers: Vec<std::thread::JoinHandle<()>>,
+    },
+    /// Readiness-driven event loop: every connection multiplexed onto
+    /// one thread; compute still runs on the coordinator's ExecPool.
+    #[cfg(unix)]
+    Event {
+        server: Arc<Server>,
+        shared: Arc<super::event_loop::Shared>,
+        thread: Option<std::thread::JoinHandle<()>>,
+    },
 }
 
 impl Gateway {
@@ -200,15 +272,54 @@ impl Gateway {
             spec: cfg.spec,
             default_tier: cfg.default_tier,
         };
+        let stats = Arc::new(ConnStats::default());
+        let max_conns = cfg.max_conns.max(1);
+        #[cfg(unix)]
+        if cfg.event_loop {
+            let (shared, thread) = super::event_loop::spawn(
+                server.clone(),
+                opts,
+                max_conns,
+                listener,
+                stats.clone(),
+            )?;
+            log::info!(
+                "gateway listening on {addr} (event loop, keep_alive={}, max_conns={max_conns})",
+                cfg.keep_alive
+            );
+            return Ok(Gateway {
+                addr,
+                stats,
+                inner: Inner::Event { server, shared, thread: Some(thread) },
+            });
+        }
+        #[cfg(not(unix))]
+        if cfg.event_loop {
+            log::warn!(
+                "[serve] event_loop has no poller on this platform; using the threaded gateway"
+            );
+        }
+        Self::threaded(server, opts, max_conns, listener, stats, addr)
+    }
+
+    /// Start the bounded connection-worker pool (the threaded mode).
+    fn threaded(
+        server: Arc<Server>,
+        opts: ConnOpts,
+        max_conns: usize,
+        listener: TcpListener,
+        stats: Arc<ConnStats>,
+        addr: SocketAddr,
+    ) -> Result<Gateway> {
+        let keep_alive = opts.keep_alive;
         let ctx = Arc::new(ConnCtx {
             server,
             opts,
-            stats: Arc::new(ConnStats::default()),
+            stats: stats.clone(),
             active: Mutex::new(HashMap::new()),
             next_conn: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
-        let max_conns = cfg.max_conns.max(1);
         let queue = Arc::new(ConnQueue::new(max_conns));
         let mut workers = Vec::with_capacity(max_conns);
         for wid in 0..max_conns {
@@ -290,10 +401,13 @@ impl Gateway {
             })
             .context("spawning accept loop")?;
         log::info!(
-            "gateway listening on {addr} (keep_alive={}, max_conns={max_conns})",
-            cfg.keep_alive
+            "gateway listening on {addr} (threaded, keep_alive={keep_alive}, max_conns={max_conns})"
         );
-        Ok(Gateway { ctx, queue, addr, accept: Some(accept), workers })
+        Ok(Gateway {
+            addr,
+            stats,
+            inner: Inner::Threaded { ctx, queue, accept: Some(accept), workers },
+        })
     }
 
     /// The bound address (resolves port 0).
@@ -303,49 +417,91 @@ impl Gateway {
 
     /// Connection-level counters (accepted / rejected / requests).
     pub fn conn_stats(&self) -> Arc<ConnStats> {
-        self.ctx.stats.clone()
+        self.stats.clone()
     }
 
-    /// Block until the accept loop exits (i.e. until shutdown or
+    /// Event-loop counters (wakeups, EAGAINs, pool hit rate) — `None`
+    /// in threaded mode.
+    pub fn event_loop_stats(&self) -> Option<Arc<EventLoopStats>> {
+        match &self.inner {
+            Inner::Threaded { .. } => None,
+            #[cfg(unix)]
+            Inner::Event { shared, .. } => Some(shared.ev.clone()),
+        }
+    }
+
+    /// Block until the serving loop exits (i.e. until shutdown or
     /// process death) — the `osa-hcim serve --listen` foreground mode.
     pub fn wait(mut self) {
-        if let Some(a) = self.accept.take() {
-            let _ = a.join();
+        match &mut self.inner {
+            Inner::Threaded { accept, .. } => {
+                if let Some(a) = accept.take() {
+                    let _ = a.join();
+                }
+            }
+            #[cfg(unix)]
+            Inner::Event { thread, .. } => {
+                if let Some(t) = thread.take() {
+                    let _ = t.join();
+                }
+            }
         }
     }
 
     /// Stop accepting, finish in-flight requests (drain), then drain
     /// the coordinator.  Returns the final serving metrics.
-    pub fn shutdown(mut self) -> Metrics {
-        self.ctx.stop.store(true, Ordering::SeqCst);
-        // unblock the accept loop with one last connection
-        let _ = TcpStream::connect(self.addr);
-        if let Some(a) = self.accept.take() {
-            let _ = a.join();
-        }
-        // no new connections reach the workers; queued-but-idle ones are
-        // dropped (they have no in-flight requests)
-        self.queue.close();
-        // wake workers blocked waiting for the NEXT request of an idle
-        // keep-alive session: shutting down the read half makes their
-        // blocked read return EOF (a clean request boundary) without
-        // disturbing a response that is still being written
-        {
-            let active = self.ctx.active.lock().unwrap();
-            for stream in active.values() {
-                let _ = stream.shutdown(Shutdown::Read);
+    pub fn shutdown(self) -> Metrics {
+        let addr = self.addr;
+        match self.inner {
+            Inner::Threaded { ctx, queue, mut accept, mut workers } => {
+                ctx.stop.store(true, Ordering::SeqCst);
+                // unblock the accept loop with one last connection
+                let _ = TcpStream::connect(addr);
+                if let Some(a) = accept.take() {
+                    let _ = a.join();
+                }
+                // no new connections reach the workers; queued-but-idle
+                // ones are dropped (they have no in-flight requests)
+                queue.close();
+                // wake workers blocked waiting for the NEXT request of
+                // an idle keep-alive session: shutting down the read
+                // half makes their blocked read return EOF (a clean
+                // request boundary) without disturbing a response that
+                // is still being written
+                {
+                    let active = ctx.active.lock().unwrap();
+                    for stream in active.values() {
+                        let _ = stream.shutdown(Shutdown::Read);
+                    }
+                }
+                for w in workers.drain(..) {
+                    let _ = w.join();
+                }
+                match Arc::try_unwrap(ctx) {
+                    Ok(ctx) => match Arc::try_unwrap(ctx.server) {
+                        Ok(server) => server.shutdown(),
+                        Err(server) => server.metrics(),
+                    },
+                    // a straggler still holds a handle; fall back to a
+                    // snapshot
+                    Err(ctx) => ctx.server.metrics(),
+                }
             }
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-        match Arc::try_unwrap(self.ctx) {
-            Ok(ctx) => match Arc::try_unwrap(ctx.server) {
-                Ok(server) => server.shutdown(),
-                Err(server) => server.metrics(),
-            },
-            // a straggler still holds a handle; fall back to a snapshot
-            Err(ctx) => ctx.server.metrics(),
+            #[cfg(unix)]
+            Inner::Event { server, shared, mut thread } => {
+                // the loop thread owns the drain: it stops accepting,
+                // finishes dispatched/writing connections, closes idle
+                // ones, then exits
+                shared.request_stop();
+                if let Some(t) = thread.take() {
+                    let _ = t.join();
+                }
+                drop(shared);
+                match Arc::try_unwrap(server) {
+                    Ok(server) => server.shutdown(),
+                    Err(server) => server.metrics(),
+                }
+            }
         }
     }
 }
@@ -374,7 +530,7 @@ fn conn_worker(ctx: &ConnCtx, queue: &ConnQueue) {
     }
 }
 
-fn err_body(msg: &str) -> String {
+pub(crate) fn err_body(msg: &str) -> String {
     obj(vec![("error", s(msg))]).to_string_compact()
 }
 
@@ -412,49 +568,66 @@ fn linger_close(stream: &TcpStream, reader: &mut impl std::io::Read) {
     }
 }
 
+/// Which wire API a dispatched request belongs to — selects the error
+/// envelope and response tagging at render time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Api {
+    V1,
+    V2,
+}
+
+/// One fully-decided HTTP response, independent of how (and when) its
+/// bytes reach the socket: the threaded mode writes it immediately, the
+/// event loop queues the bytes and arms writability.  Keeping rendering
+/// separate from transport is what guarantees both modes answer
+/// byte-identically.
+pub(crate) struct Rendered {
+    pub(crate) status: u16,
+    pub(crate) reason: &'static str,
+    pub(crate) content_type: &'static str,
+    pub(crate) extra: Vec<(String, String)>,
+    pub(crate) body: String,
+    /// Whether the connection persists AFTER this response (also what
+    /// the `Connection:` header says on the wire).
+    pub(crate) keep: bool,
+}
+
+impl Rendered {
+    pub(crate) fn json(status: u16, reason: &'static str, body: String, keep: bool) -> Rendered {
+        Rendered {
+            status,
+            reason,
+            content_type: "application/json",
+            extra: Vec::new(),
+            body,
+            keep,
+        }
+    }
+
+    /// Serialize onto `out` in the gateway's exact wire format.
+    pub(crate) fn to_bytes(&self, out: &mut Vec<u8>) {
+        let extra: Vec<(&str, &str)> =
+            self.extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        http::format_response_into(
+            out,
+            self.status,
+            self.reason,
+            self.content_type,
+            &extra,
+            self.body.as_bytes(),
+            self.keep,
+        );
+    }
+}
+
 /// Write one response; `false` means the write failed (possibly
 /// part-way).  After a partial write the byte stream is misframed —
 /// response N+1 would be consumed as the tail of N's body — so the
 /// connection loop MUST close on `false`, never keep serving.
-fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str, keep: bool) -> bool {
-    respond_typed(stream, status, reason, "application/json", body, keep)
-}
-
-fn respond_typed(
-    stream: &mut TcpStream,
-    status: u16,
-    reason: &str,
-    content_type: &str,
-    body: &str,
-    keep: bool,
-) -> bool {
-    match http::write_response(stream, status, reason, content_type, body.as_bytes(), keep) {
-        Ok(()) => true,
-        Err(e) => {
-            log::debug!("writing response: {e}");
-            false
-        }
-    }
-}
-
-/// [`respond`] with extra response headers (the 405 `Allow` list).
-fn respond_with_headers(
-    stream: &mut TcpStream,
-    status: u16,
-    reason: &str,
-    extra_headers: &[(&str, &str)],
-    body: &str,
-    keep: bool,
-) -> bool {
-    match http::write_response_with(
-        stream,
-        status,
-        reason,
-        "application/json",
-        extra_headers,
-        body.as_bytes(),
-        keep,
-    ) {
+fn write_rendered(stream: &mut TcpStream, r: &Rendered) -> bool {
+    let mut out = Vec::new();
+    r.to_bytes(&mut out);
+    match stream.write_all(&out).and_then(|_| stream.flush()) {
         Ok(()) => true,
         Err(e) => {
             log::debug!("writing response: {e}");
@@ -497,11 +670,285 @@ fn version_json(engine: &Engine) -> JsonValue {
     ])
 }
 
-/// The keep-alive request loop for one connection (DESIGN.md §10).
-/// Returns when the peer closes, a read stalls past the timeout, the
-/// request is malformed, the request asked for `Connection: close`, or
-/// the gateway is shutting down — whichever comes first.  Every
-/// response on the way out of the loop carries `Connection: close`.
+/// Everything the router needs to answer a request (borrowed — both
+/// serving modes assemble one per request from their own state).
+pub(crate) struct RouteCtx<'a> {
+    pub(crate) server: &'a Server,
+    pub(crate) spec: &'a MacroSpec,
+    pub(crate) default_tier: Tier,
+    pub(crate) stats: &'a ConnStats,
+    /// Event-loop gauges for `/metrics`; `None` in threaded mode.
+    pub(crate) ev: Option<&'a EventLoopStats>,
+}
+
+/// One line of an NDJSON batch after parse/validation, before submit.
+pub(crate) enum BatchLine {
+    Submit { line: usize, ireq: InferRequest },
+    Err { line: usize, msg: String },
+}
+
+/// What the router decided for one parsed request: answer right away,
+/// or hand compute to the coordinator and render when it completes.
+/// The dispatch variants carry `keep` so the eventual render happens
+/// long after the request itself is gone.
+pub(crate) enum RouteOutcome {
+    Respond(Rendered),
+    Dispatch { ireq: InferRequest, api: Api, keep: bool },
+    DispatchBatch { lines: Vec<BatchLine>, keep: bool },
+}
+
+/// Route one parsed request.  Pure with respect to transport: no
+/// sockets, no blocking — both serving modes call this and then execute
+/// the outcome their own way, which is what keeps their responses
+/// byte-identical.
+pub(crate) fn route(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteOutcome {
+    // route on the path only — a query string must not 404 an endpoint
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            // enriched liveness: fleet rollouts verify what is
+            // actually serving (backend, threads, crate version)
+            let e = ctx.server.engine();
+            let body = obj(vec![
+                ("status", s("ok")),
+                ("backend", s(e.backend_name())),
+                ("engine_threads", num(e.threads() as f64)),
+                ("version", s(env!("CARGO_PKG_VERSION"))),
+            ])
+            .to_string_compact();
+            RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+        }
+        ("GET", "/v1/version") => {
+            let body = version_json(ctx.server.engine()).to_string_compact();
+            RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_json_ev(ctx.server, ctx.spec, Some(ctx.stats), ctx.ev)
+                .to_string_compact();
+            RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+        }
+        ("POST", "/v1/infer") => route_infer(req, ctx, Api::V1, keep),
+        ("POST", "/v2/infer") => route_infer(req, ctx, Api::V2, keep),
+        ("POST", "/v1/infer_batch") => route_infer_batch(req, ctx, keep),
+        (_, path) => match allowed_methods(path) {
+            // known path, wrong method: 405 + Allow, not a 404
+            Some(methods) => {
+                let mut r = Rendered::json(
+                    405,
+                    "Method Not Allowed",
+                    err_body("method not allowed"),
+                    keep,
+                );
+                r.extra.push(("Allow".to_string(), methods.join(", ")));
+                RouteOutcome::Respond(r)
+            }
+            None => RouteOutcome::Respond(Rendered::json(
+                404,
+                "Not Found",
+                err_body("no such route"),
+                keep,
+            )),
+        },
+    }
+}
+
+/// Shared `/v1/infer` + `/v2/infer` front half: body → JSON → typed
+/// [`InferRequest`], or an immediate 400 in the API's own envelope.
+fn route_infer(req: &HttpRequest, ctx: &RouteCtx<'_>, api: Api, keep: bool) -> RouteOutcome {
+    let bad = |msg: &str, keep: bool| {
+        let body = match api {
+            Api::V1 => err_body(msg),
+            Api::V2 => v2_err("bad_request", msg, vec![]),
+        };
+        RouteOutcome::Respond(Rendered::json(400, "Bad Request", body, keep))
+    };
+    let doc = match req.body_str().and_then(json::parse) {
+        Ok(d) => d,
+        Err(e) => return bad(&format!("bad JSON body: {e:#}"), keep),
+    };
+    let parsed = match api {
+        Api::V1 => parse_infer_doc(&doc, ctx.default_tier),
+        Api::V2 => parse_infer_doc_v2(&doc, ctx.default_tier),
+    };
+    match parsed {
+        Ok(ireq) => RouteOutcome::Dispatch { ireq, api, keep },
+        Err(msg) => bad(&msg, keep),
+    }
+}
+
+/// `/v1/infer_batch` front half: NDJSON body → per-line parse results.
+/// Line numbers are the client's own (interior blank lines preserved in
+/// the numbering, skipped in the output).
+fn route_infer_batch(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteOutcome {
+    let bad = |msg: &str| {
+        RouteOutcome::Respond(Rendered::json(400, "Bad Request", err_body(msg), keep))
+    };
+    let text = match req.body_str() {
+        Ok(t) => t,
+        Err(e) => return bad(&format!("{e:#}")),
+    };
+    // enumerate BEFORE filtering so the "line" field in every result
+    // refers to the client's own line numbers even when the input has
+    // interior blank lines
+    let lines: Vec<(usize, &str)> =
+        text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty()).collect();
+    if lines.is_empty() {
+        return bad("empty NDJSON body");
+    }
+    if lines.len() > MAX_BATCH_LINES {
+        return bad(&format!("too many lines ({}, max {MAX_BATCH_LINES})", lines.len()));
+    }
+    let mut out = Vec::with_capacity(lines.len());
+    for (i, line) in &lines {
+        let slot = match json::parse(line)
+            .map_err(|e| format!("bad JSON line: {e:#}"))
+            .and_then(|doc| parse_infer_doc(&doc, ctx.default_tier))
+        {
+            Ok(ireq) => BatchLine::Submit { line: *i, ireq },
+            Err(msg) => BatchLine::Err { line: *i, msg },
+        };
+        out.push(slot);
+    }
+    RouteOutcome::DispatchBatch { lines: out, keep }
+}
+
+/// Render an admission rejection in the API's envelope (the back half
+/// of a [`RouteOutcome::Dispatch`] that never reached a worker).
+pub(crate) fn render_submit_err(api: Api, e: &SubmitError, tier: Tier, keep: bool) -> Rendered {
+    match api {
+        Api::V1 => match e {
+            SubmitError::Busy { .. } | SubmitError::Overloaded { .. } => {
+                let body = obj(vec![
+                    ("error", s("busy")),
+                    ("detail", s(&e.to_string())),
+                    ("tier", s(tier.name())),
+                ])
+                .to_string_compact();
+                Rendered::json(429, "Too Many Requests", body, keep)
+            }
+            SubmitError::ShutDown => Rendered::json(
+                503,
+                "Service Unavailable",
+                err_body("server is shutting down"),
+                false,
+            ),
+            // v1 never populates backend overrides, but the in-process
+            // option surface is shared — keep the arm total
+            e => Rendered::json(400, "Bad Request", err_body(&e.to_string()), keep),
+        },
+        Api::V2 => match e {
+            SubmitError::UnknownBackend { requested, registered } => {
+                let body = v2_err(
+                    "unknown_backend",
+                    &format!("unknown backend {requested:?}"),
+                    vec![("backends", arr(registered.iter().map(|n| s(n))))],
+                );
+                Rendered::json(400, "Bad Request", body, keep)
+            }
+            SubmitError::BackendUnavailable { name, reason } => {
+                let body = v2_err(
+                    "backend_unavailable",
+                    &format!("backend {name:?} is unavailable: {reason}"),
+                    vec![],
+                );
+                Rendered::json(400, "Bad Request", body, keep)
+            }
+            e @ SubmitError::InvalidOption { .. } => Rendered::json(
+                400,
+                "Bad Request",
+                v2_err("invalid_option", &e.to_string(), vec![]),
+                keep,
+            ),
+            e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. }) => Rendered::json(
+                429,
+                "Too Many Requests",
+                v2_err("busy", &e.to_string(), vec![("tier", s(tier.name()))]),
+                keep,
+            ),
+            SubmitError::ShutDown => Rendered::json(
+                503,
+                "Service Unavailable",
+                v2_err("shutting_down", "server is shutting down", vec![]),
+                false,
+            ),
+        },
+    }
+}
+
+/// Render a served response (which may still carry a worker error).
+pub(crate) fn render_done(api: Api, resp: &crate::coordinator::Response, keep: bool) -> Rendered {
+    if let Some(msg) = &resp.error {
+        let body = match api {
+            Api::V1 => err_body(msg),
+            Api::V2 => v2_err("infer_failed", msg, vec![]),
+        };
+        return Rendered::json(500, "Internal Server Error", body, keep);
+    }
+    let mut o = response_json(resp);
+    if api == Api::V2 {
+        if let JsonValue::Object(map) = &mut o {
+            map.insert("api".into(), s("v2"));
+        }
+    }
+    Rendered::json(200, "OK", o.to_string_compact(), keep)
+}
+
+/// Render the bug-shaped 500 for a worker that dropped its response
+/// channel.
+pub(crate) fn render_channel_dropped(api: Api, keep: bool) -> Rendered {
+    let body = match api {
+        Api::V1 => err_body("response channel dropped"),
+        Api::V2 => v2_err("internal", "response channel dropped", vec![]),
+    };
+    Rendered::json(500, "Internal Server Error", body, keep)
+}
+
+/// One NDJSON output line for a batch slot (`Err` = per-line error
+/// string from parse/admission/transport, `Ok` = a served response).
+pub(crate) fn batch_line_json(
+    line: usize,
+    result: std::result::Result<&crate::coordinator::Response, &str>,
+) -> String {
+    let o = match result {
+        Err(msg) => obj(vec![("line", num(line as f64)), ("error", s(msg))]),
+        Ok(resp) => match &resp.error {
+            Some(msg) => obj(vec![("line", num(line as f64)), ("error", s(msg))]),
+            None => {
+                let mut o = response_json(resp);
+                if let JsonValue::Object(map) = &mut o {
+                    map.insert("line".into(), num(line as f64));
+                }
+                o
+            }
+        },
+    };
+    o.to_string_compact()
+}
+
+/// Assemble a finished batch (already in input order) into the NDJSON
+/// response.
+pub(crate) fn render_batch(body_lines: Vec<String>, keep: bool) -> Rendered {
+    let mut out = String::new();
+    for l in body_lines {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    Rendered {
+        status: 200,
+        reason: "OK",
+        content_type: "application/x-ndjson",
+        extra: Vec::new(),
+        body: out,
+        keep,
+    }
+}
+
+/// The keep-alive request loop for one connection — **threaded mode**
+/// (DESIGN.md §10).  Returns when the peer closes, a read stalls past
+/// the timeout, the request is malformed, the request asked for
+/// `Connection: close`, or the gateway is shutting down — whichever
+/// comes first.  Every response on the way out of the loop carries
+/// `Connection: close`.
 fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     let _ = stream.set_read_timeout(ctx.opts.read_timeout);
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
@@ -528,13 +975,13 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
             // gets told before the close (slowloris shed)
             Err(ReadError::TimedOut { mid_request }) => {
                 if mid_request {
-                    respond(
-                        &mut stream,
+                    let r = Rendered::json(
                         408,
                         "Request Timeout",
-                        &err_body("request stalled mid-read"),
+                        err_body("request stalled mid-read"),
                         false,
                     );
+                    write_rendered(&mut stream, &r);
                     linger_close(&stream, &mut reader);
                 }
                 break;
@@ -542,7 +989,8 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
             // protocol violation: answer 400 then drop the connection —
             // after a framing error the byte stream can't be trusted
             Err(ReadError::Malformed(msg)) => {
-                respond(&mut stream, 400, "Bad Request", &err_body(&msg), false);
+                let r = Rendered::json(400, "Bad Request", err_body(&msg), false);
+                write_rendered(&mut stream, &r);
                 // the rejected request's unread remainder (e.g. a body
                 // we refused to frame) must not turn the 400 into an RST
                 linger_close(&stream, &mut reader);
@@ -558,61 +1006,62 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
         // it, and we aren't draining for shutdown
         let keep =
             ctx.opts.keep_alive && req.wants_keep_alive() && !ctx.stop.load(Ordering::SeqCst);
-        // route on the path only — a query string must not 404 an endpoint
-        let path = req.path.split('?').next().unwrap_or("");
-        let wrote_ok = match (req.method.as_str(), path) {
-            ("GET", "/healthz") => {
-                // enriched liveness: fleet rollouts verify what is
-                // actually serving (backend, threads, crate version)
-                let e = ctx.server.engine();
-                let body = obj(vec![
-                    ("status", s("ok")),
-                    ("backend", s(e.backend_name())),
-                    ("engine_threads", num(e.threads() as f64)),
-                    ("version", s(env!("CARGO_PKG_VERSION"))),
-                ])
-                .to_string_compact();
-                respond(&mut stream, 200, "OK", &body, keep)
-            }
-            ("GET", "/v1/version") => {
-                let body = version_json(ctx.server.engine()).to_string_compact();
-                respond(&mut stream, 200, "OK", &body, keep)
-            }
-            ("GET", "/metrics") => {
-                let body = metrics_json(&ctx.server, &ctx.opts.spec, Some(&ctx.stats))
-                    .to_string_compact();
-                respond(&mut stream, 200, "OK", &body, keep)
-            }
-            ("POST", "/v1/infer") => {
-                handle_infer(&mut stream, &req, &ctx.server, ctx.opts.default_tier, keep)
-            }
-            ("POST", "/v1/infer_batch") => {
-                handle_infer_batch(&mut stream, &req, &ctx.server, ctx.opts.default_tier, keep)
-            }
-            ("POST", "/v2/infer") => {
-                handle_infer_v2(&mut stream, &req, &ctx.server, ctx.opts.default_tier, keep)
-            }
-            (_, path) => match allowed_methods(path) {
-                // known path, wrong method: 405 + Allow, not a 404
-                Some(methods) => {
-                    let allow = methods.join(", ");
-                    respond_with_headers(
-                        &mut stream,
-                        405,
-                        "Method Not Allowed",
-                        &[("Allow", allow.as_str())],
-                        &err_body("method not allowed"),
-                        keep,
-                    )
-                }
-                None => {
-                    respond(&mut stream, 404, "Not Found", &err_body("no such route"), keep)
-                }
-            },
+        let rctx = RouteCtx {
+            server: &ctx.server,
+            spec: &ctx.opts.spec,
+            default_tier: ctx.opts.default_tier,
+            stats: &ctx.stats,
+            ev: None,
         };
+        let rendered = match route(&req, &rctx, keep) {
+            RouteOutcome::Respond(r) => r,
+            RouteOutcome::Dispatch { ireq, api, keep } => {
+                let tier = ireq.options.tier;
+                match dispatch(&ctx.server, ireq) {
+                    Dispatch::Rejected(e) => render_submit_err(api, &e, tier, keep),
+                    Dispatch::ChannelDropped => render_channel_dropped(api, keep),
+                    Dispatch::Done(resp) => render_done(api, &resp, keep),
+                }
+            }
+            RouteOutcome::DispatchBatch { lines, keep } => {
+                // submit phase: get every admissible line in flight
+                // before waiting on any response — this is what lets one
+                // HTTP request fill whole coordinator batches
+                enum Pending {
+                    Rx(usize, std::sync::mpsc::Receiver<crate::coordinator::Response>),
+                    Err(usize, String),
+                }
+                let mut pending = Vec::with_capacity(lines.len());
+                for l in lines {
+                    pending.push(match l {
+                        BatchLine::Err { line, msg } => Pending::Err(line, msg),
+                        BatchLine::Submit { line, ireq } => {
+                            match ctx.server.submit_request(ireq) {
+                                Ok(rx) => Pending::Rx(line, rx),
+                                Err(e) => Pending::Err(line, e.to_string()),
+                            }
+                        }
+                    });
+                }
+                // collect phase: input order, one NDJSON object per
+                // non-blank line
+                let mut body_lines = Vec::with_capacity(pending.len());
+                for p in pending {
+                    body_lines.push(match p {
+                        Pending::Err(line, msg) => batch_line_json(line, Err(&msg)),
+                        Pending::Rx(line, rx) => match rx.recv() {
+                            Ok(resp) => batch_line_json(line, Ok(&resp)),
+                            Err(_) => batch_line_json(line, Err("response channel dropped")),
+                        },
+                    });
+                }
+                render_batch(body_lines, keep)
+            }
+        };
+        let wrote_ok = write_rendered(&mut stream, &rendered);
         // a failed (possibly partial) write leaves the stream misframed:
         // the only safe continuation is no continuation
-        if !wrote_ok || !keep {
+        if !wrote_ok || !rendered.keep {
             break;
         }
     }
@@ -749,219 +1198,12 @@ fn dispatch(server: &Server, req: InferRequest) -> Dispatch {
     }
 }
 
-fn handle_infer(
-    stream: &mut TcpStream,
-    req: &HttpRequest,
-    server: &Server,
-    default_tier: Tier,
-    keep: bool,
-) -> bool {
-    let parsed = req.body_str().and_then(json::parse);
-    let doc = match parsed {
-        Ok(d) => d,
-        Err(e) => {
-            let body = err_body(&format!("bad JSON body: {e:#}"));
-            return respond(stream, 400, "Bad Request", &body, keep);
-        }
-    };
-    let ireq = match parse_infer_doc(&doc, default_tier) {
-        Ok(x) => x,
-        Err(msg) => return respond(stream, 400, "Bad Request", &err_body(&msg), keep),
-    };
-    let tier = ireq.options.tier;
-    match dispatch(server, ireq) {
-        Dispatch::Rejected(e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. })) => {
-            let body = obj(vec![
-                ("error", s("busy")),
-                ("detail", s(&e.to_string())),
-                ("tier", s(tier.name())),
-            ])
-            .to_string_compact();
-            respond(stream, 429, "Too Many Requests", &body, keep)
-        }
-        Dispatch::Rejected(SubmitError::ShutDown) => {
-            let body = err_body("server is shutting down");
-            respond(stream, 503, "Service Unavailable", &body, false)
-        }
-        // v1 never populates backend overrides, but the in-process
-        // option surface is shared — keep the arm total, not reachable
-        Dispatch::Rejected(e) => {
-            respond(stream, 400, "Bad Request", &err_body(&e.to_string()), keep)
-        }
-        Dispatch::ChannelDropped => {
-            let body = err_body("response channel dropped");
-            respond(stream, 500, "Internal Server Error", &body, keep)
-        }
-        Dispatch::Done(resp) => {
-            if let Some(msg) = &resp.error {
-                return respond(stream, 500, "Internal Server Error", &err_body(msg), keep);
-            }
-            respond(stream, 200, "OK", &response_json(&resp).to_string_compact(), keep)
-        }
-    }
-}
-
 /// The machine-readable `/v2` error envelope:
 /// `{"error": {"code": ..., "message": ..., ...extra}}`.
 fn v2_err(code: &str, message: &str, extra: Vec<(&str, JsonValue)>) -> String {
     let mut fields = vec![("code", s(code)), ("message", s(message))];
     fields.extend(extra);
     obj(vec![("error", obj(fields))]).to_string_compact()
-}
-
-/// `POST /v2/infer` — the versioned typed surface: per-request tier,
-/// backend, noise-seed and boundary options, a consistent error
-/// envelope, and a response tagged with the serving backend.
-fn handle_infer_v2(
-    stream: &mut TcpStream,
-    req: &HttpRequest,
-    server: &Server,
-    default_tier: Tier,
-    keep: bool,
-) -> bool {
-    let doc = match req.body_str().and_then(json::parse) {
-        Ok(d) => d,
-        Err(e) => {
-            let body = v2_err("bad_request", &format!("bad JSON body: {e:#}"), vec![]);
-            return respond(stream, 400, "Bad Request", &body, keep);
-        }
-    };
-    let ireq = match parse_infer_doc_v2(&doc, default_tier) {
-        Ok(x) => x,
-        Err(msg) => {
-            return respond(stream, 400, "Bad Request", &v2_err("bad_request", &msg, vec![]), keep)
-        }
-    };
-    let tier = ireq.options.tier;
-    match dispatch(server, ireq) {
-        Dispatch::Rejected(SubmitError::UnknownBackend { requested, registered }) => {
-            let body = v2_err(
-                "unknown_backend",
-                &format!("unknown backend {requested:?}"),
-                vec![("backends", arr(registered.iter().map(|n| s(n))))],
-            );
-            respond(stream, 400, "Bad Request", &body, keep)
-        }
-        Dispatch::Rejected(SubmitError::BackendUnavailable { name, reason }) => {
-            let body = v2_err(
-                "backend_unavailable",
-                &format!("backend {name:?} is unavailable: {reason}"),
-                vec![],
-            );
-            respond(stream, 400, "Bad Request", &body, keep)
-        }
-        Dispatch::Rejected(e @ SubmitError::InvalidOption { .. }) => {
-            let body = v2_err("invalid_option", &e.to_string(), vec![]);
-            respond(stream, 400, "Bad Request", &body, keep)
-        }
-        Dispatch::Rejected(e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. })) => {
-            let body = v2_err("busy", &e.to_string(), vec![("tier", s(tier.name()))]);
-            respond(stream, 429, "Too Many Requests", &body, keep)
-        }
-        Dispatch::Rejected(SubmitError::ShutDown) => {
-            let body = v2_err("shutting_down", "server is shutting down", vec![]);
-            respond(stream, 503, "Service Unavailable", &body, false)
-        }
-        Dispatch::ChannelDropped => {
-            let body = v2_err("internal", "response channel dropped", vec![]);
-            respond(stream, 500, "Internal Server Error", &body, keep)
-        }
-        Dispatch::Done(resp) => {
-            if let Some(msg) = &resp.error {
-                let body = v2_err("infer_failed", msg, vec![]);
-                return respond(stream, 500, "Internal Server Error", &body, keep);
-            }
-            let mut o = response_json(&resp);
-            if let JsonValue::Object(map) = &mut o {
-                map.insert("api".into(), s("v2"));
-            }
-            respond(stream, 200, "OK", &o.to_string_compact(), keep)
-        }
-    }
-}
-
-/// NDJSON batch inference: parse every line, submit the valid ones (so
-/// they pipeline into the coordinator's coalescing window), then
-/// collect in input order.  Per-line failures (parse error, tier queue
-/// Busy, worker error) become per-line `{"error": ...}` objects; the
-/// HTTP status stays 200 unless the request itself is malformed.
-fn handle_infer_batch(
-    stream: &mut TcpStream,
-    req: &HttpRequest,
-    server: &Server,
-    default_tier: Tier,
-    keep: bool,
-) -> bool {
-    let text = match req.body_str() {
-        Ok(t) => t,
-        Err(e) => {
-            return respond(stream, 400, "Bad Request", &err_body(&format!("{e:#}")), keep)
-        }
-    };
-    // enumerate BEFORE filtering so the "line" field in every result
-    // refers to the client's own line numbers even when the input has
-    // interior blank lines
-    let lines: Vec<(usize, &str)> =
-        text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty()).collect();
-    if lines.is_empty() {
-        return respond(stream, 400, "Bad Request", &err_body("empty NDJSON body"), keep);
-    }
-    if lines.len() > MAX_BATCH_LINES {
-        return respond(
-            stream,
-            400,
-            "Bad Request",
-            &err_body(&format!("too many lines ({}, max {MAX_BATCH_LINES})", lines.len())),
-            keep,
-        );
-    }
-    // submit phase: get every admissible line in flight before waiting
-    // on any response — this is what lets one HTTP request fill whole
-    // coordinator batches
-    enum Pending {
-        Rx(std::sync::mpsc::Receiver<crate::coordinator::Response>),
-        Err(String),
-    }
-    let mut pending = Vec::with_capacity(lines.len());
-    for (i, line) in &lines {
-        let slot = match json::parse(line)
-            .map_err(|e| format!("bad JSON line: {e:#}"))
-            .and_then(|doc| parse_infer_doc(&doc, default_tier))
-        {
-            Ok(ireq) => match server.submit_request(ireq) {
-                Ok(rx) => Pending::Rx(rx),
-                Err(e) => Pending::Err(e.to_string()),
-            },
-            Err(msg) => Pending::Err(msg),
-        };
-        pending.push((*i, slot));
-    }
-    // collect phase: input order, one NDJSON object per non-blank line
-    let mut out = String::new();
-    for (i, slot) in pending {
-        let line_obj = match slot {
-            Pending::Err(msg) => obj(vec![("line", num(i as f64)), ("error", s(&msg))]),
-            Pending::Rx(rx) => match rx.recv() {
-                Err(_) => obj(vec![
-                    ("line", num(i as f64)),
-                    ("error", s("response channel dropped")),
-                ]),
-                Ok(resp) => match &resp.error {
-                    Some(msg) => obj(vec![("line", num(i as f64)), ("error", s(msg))]),
-                    None => {
-                        let mut o = response_json(&resp);
-                        if let JsonValue::Object(map) = &mut o {
-                            map.insert("line".into(), num(i as f64));
-                        }
-                        o
-                    }
-                },
-            },
-        };
-        out.push_str(&line_obj.to_string_compact());
-        out.push('\n');
-    }
-    respond_typed(stream, 200, "OK", "application/x-ndjson", &out, keep)
 }
 
 fn hist_json(h: &[u64; 16]) -> JsonValue {
@@ -1049,4 +1291,34 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
         ));
     }
     obj(fields)
+}
+
+/// [`metrics_json`] plus the event-loop gauges when the snapshot is
+/// taken through an event-mode gateway.  Everything goes through
+/// `fnum` so a pathological counter can never emit a non-finite token.
+pub(crate) fn metrics_json_ev(
+    server: &Server,
+    spec: &MacroSpec,
+    conns: Option<&ConnStats>,
+    ev: Option<&EventLoopStats>,
+) -> JsonValue {
+    let mut doc = metrics_json(server, spec, conns);
+    if let Some(ev) = ev {
+        if let JsonValue::Object(map) = &mut doc {
+            let g = |c: &AtomicU64| fnum(c.load(Ordering::Relaxed) as f64);
+            map.insert(
+                "event_loop".into(),
+                obj(vec![
+                    ("open_connections", g(&ev.open_connections)),
+                    ("parked_connections", g(&ev.parked_connections)),
+                    ("wakeups", g(&ev.wakeups)),
+                    ("eagain_reads", g(&ev.eagain_reads)),
+                    ("eagain_writes", g(&ev.eagain_writes)),
+                    ("deadline_expirations", g(&ev.deadline_expirations)),
+                    ("buffer_pool_hit_rate", fnum(ev.pool_hit_rate())),
+                ]),
+            );
+        }
+    }
+    doc
 }

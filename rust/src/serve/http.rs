@@ -19,6 +19,14 @@
 //! (`parse::<usize>` alone would accept a leading `+`), and
 //! `Transfer-Encoding` is refused outright (chunked bodies are not
 //! implemented, so ignoring the header would desynchronize framing).
+//!
+//! Two parse front-ends share one grammar: the blocking
+//! [`read_request_from`] (connection-worker gateway, tests, benches)
+//! and the incremental [`RequestParser`] (the event-loop gateway feeds
+//! it whatever bytes a readiness wakeup produced).  Both call the same
+//! request-line / header-insert / framing-validation helpers, so a
+//! request split at any byte boundary parses — or is rejected — with
+//! byte-identical semantics and error strings.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -110,6 +118,84 @@ fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
+fn malformed(msg: &str) -> ReadError {
+    ReadError::Malformed(msg.to_string())
+}
+
+/// Split a request line into (method, path, version).  Shared by the
+/// blocking and incremental parsers so both reject the same shapes
+/// with the same words.
+fn parse_request_line(line: &str) -> Result<(String, String, String), ReadError> {
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| malformed("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| malformed("request line missing path"))?.to_string();
+    let version = parts.next().ok_or_else(|| malformed("request line missing version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Malformed(format!("unsupported protocol {version:?}")));
+    }
+    Ok((method, path, version.to_string()))
+}
+
+/// Insert one header line into the map: lower-cased names, rejected
+/// duplicate *framing* headers (the request-smuggling shape), RFC 7230
+/// list-merge for every other repeat.
+fn insert_header(headers: &mut BTreeMap<String, String>, line: &str) -> Result<(), ReadError> {
+    let (name, value) = line.split_once(':').ok_or_else(|| malformed("malformed header line"))?;
+    let name = name.trim().to_ascii_lowercase();
+    if name.is_empty() {
+        return Err(malformed("empty header name"));
+    }
+    match headers.entry(name) {
+        std::collections::btree_map::Entry::Vacant(slot) => {
+            slot.insert(value.trim().to_string());
+        }
+        std::collections::btree_map::Entry::Occupied(mut slot) => {
+            // A repeated *framing* header is rejected outright: two
+            // `Content-Length` values is the classic request-smuggling
+            // shape, and silently keeping the last one (the old
+            // `BTreeMap::insert` behavior) means this parser and any
+            // intermediary can disagree on where the body ends.  Other
+            // repeats are legal for list-valued fields (Via,
+            // X-Forwarded-For from multi-hop proxies) — combine them
+            // per RFC 7230 §3.2.2.
+            let key = slot.key();
+            if key == "content-length" || key == "transfer-encoding" {
+                return Err(ReadError::Malformed(format!("duplicate header {key:?}")));
+            }
+            let merged = slot.get_mut();
+            merged.push_str(", ");
+            merged.push_str(value.trim());
+        }
+    }
+    Ok(())
+}
+
+/// Validate body framing once the header block is complete: refuse
+/// `Transfer-Encoding`, demand a pure-digit in-bounds `Content-Length`.
+/// Returns the body length.
+fn validate_framing(headers: &BTreeMap<String, String>) -> Result<usize, ReadError> {
+    if headers.contains_key("transfer-encoding") {
+        // not implemented; ignoring it would desynchronize body framing
+        return Err(malformed("Transfer-Encoding is not supported (use Content-Length)"));
+    }
+    let len = match headers.get("content-length") {
+        None => 0,
+        Some(v) => {
+            // strict digits only: Rust's usize::parse accepts a leading
+            // '+' which no HTTP grammar does
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(ReadError::Malformed(format!("bad Content-Length {v:?}")));
+            }
+            v.parse::<usize>()
+                .map_err(|_| ReadError::Malformed(format!("Content-Length {v:?} out of range")))?
+        }
+    };
+    if len > MAX_BODY {
+        return Err(ReadError::Malformed(format!("body too large ({len} bytes, max {MAX_BODY})")));
+    }
+    Ok(len)
+}
+
 /// Read one `\n`-terminated line of at most `MAX_HEADER_LINE` bytes.
 /// `Ok(None)` = clean EOF before any byte (a request boundary).
 ///
@@ -199,15 +285,7 @@ pub fn read_request_from(
         Some(l) => l,
         None => return Err(ReadError::Closed),
     };
-    let mut parts = request_line.split_whitespace();
-    let malformed = |msg: &str| ReadError::Malformed(msg.to_string());
-    let method = parts.next().ok_or_else(|| malformed("empty request line"))?.to_string();
-    let path = parts.next().ok_or_else(|| malformed("request line missing path"))?.to_string();
-    let version = parts.next().ok_or_else(|| malformed("request line missing version"))?;
-    if !version.starts_with("HTTP/1.") {
-        return Err(ReadError::Malformed(format!("unsupported protocol {version:?}")));
-    }
-    let version = version.to_string();
+    let (method, path, version) = parse_request_line(&request_line)?;
 
     // --- headers ------------------------------------------------------
     let mut headers = BTreeMap::new();
@@ -240,55 +318,11 @@ pub fn read_request_from(
         if header_lines > MAX_HEADERS {
             return Err(malformed("too many headers"));
         }
-        let (name, value) = line.split_once(':').ok_or_else(|| malformed("malformed header line"))?;
-        let name = name.trim().to_ascii_lowercase();
-        if name.is_empty() {
-            return Err(malformed("empty header name"));
-        }
-        match headers.entry(name) {
-            std::collections::btree_map::Entry::Vacant(slot) => {
-                slot.insert(value.trim().to_string());
-            }
-            std::collections::btree_map::Entry::Occupied(mut slot) => {
-                // A repeated *framing* header is rejected outright: two
-                // `Content-Length` values is the classic
-                // request-smuggling shape, and silently keeping the last
-                // one (the old `BTreeMap::insert` behavior) means this
-                // parser and any intermediary can disagree on where the
-                // body ends.  Other repeats are legal for list-valued
-                // fields (Via, X-Forwarded-For from multi-hop proxies) —
-                // combine them per RFC 7230 §3.2.2.
-                let key = slot.key();
-                if key == "content-length" || key == "transfer-encoding" {
-                    return Err(ReadError::Malformed(format!("duplicate header {key:?}")));
-                }
-                let merged = slot.get_mut();
-                merged.push_str(", ");
-                merged.push_str(value.trim());
-            }
-        }
-    }
-    if headers.contains_key("transfer-encoding") {
-        // not implemented; ignoring it would desynchronize body framing
-        return Err(malformed("Transfer-Encoding is not supported (use Content-Length)"));
+        insert_header(&mut headers, &line)?;
     }
 
     // --- body ---------------------------------------------------------
-    let len = match headers.get("content-length") {
-        None => 0,
-        Some(v) => {
-            // strict digits only: Rust's usize::parse accepts a leading
-            // '+' which no HTTP grammar does
-            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
-                return Err(ReadError::Malformed(format!("bad Content-Length {v:?}")));
-            }
-            v.parse::<usize>()
-                .map_err(|_| ReadError::Malformed(format!("Content-Length {v:?} out of range")))?
-        }
-    };
-    if len > MAX_BODY {
-        return Err(ReadError::Malformed(format!("body too large ({len} bytes, max {MAX_BODY})")));
-    }
+    let len = validate_framing(&headers)?;
     let mut body = vec![0u8; len];
     let mut off = 0usize;
     while off < len {
@@ -312,6 +346,223 @@ pub fn read_request_from(
         }
     }
     Ok(HttpRequest { method, path, version, headers, body })
+}
+
+/// Incremental (push-based) request parser for the event-loop gateway.
+///
+/// Feed it whatever bytes a readiness wakeup produced with
+/// [`RequestParser::push`], then ask [`RequestParser::poll`] whether a
+/// complete request materialized.  The grammar, bounds and error
+/// strings are shared with the blocking [`read_request_from`] (same
+/// request-line / header / framing helpers), so a request split at any
+/// byte boundary — mid-header-name, mid-`Content-Length` value,
+/// mid-body — parses or 400s identically to the whole-buffer path.
+///
+/// The parser is reusable across requests on one connection: after a
+/// request is returned, leftover pipelined bytes stay buffered and the
+/// next [`RequestParser::poll`] resumes on them.  Memory is bounded:
+/// completed lines are consumed eagerly, so the raw buffer never holds
+/// more than one in-progress header line (≤ `MAX_HEADER_LINE`) plus
+/// unconsumed pipelined input, and the body accumulator is capped by
+/// `MAX_BODY` via the shared framing validation.
+pub struct RequestParser {
+    /// Raw unconsumed bytes (`pos..` is live; compacted periodically).
+    buf: Vec<u8>,
+    pos: usize,
+    state: ParseState,
+}
+
+enum ParseState {
+    /// Waiting for (or mid-way through) the request line.
+    RequestLine,
+    /// Request line parsed; accumulating the header block.
+    Headers {
+        method: String,
+        path: String,
+        version: String,
+        headers: BTreeMap<String, String>,
+        header_lines: usize,
+    },
+    /// Headers complete; accumulating `need` body bytes.
+    Body {
+        method: String,
+        path: String,
+        version: String,
+        headers: BTreeMap<String, String>,
+        body: Vec<u8>,
+        need: usize,
+    },
+}
+
+/// Extract one `\n`-terminated line from `buf[*pos..]` without copying
+/// the scan, enforcing the same `MAX_HEADER_LINE` bound (newline
+/// included) as the blocking `read_line_bounded`.  `Ok(None)` = the
+/// line is still incomplete.
+fn take_line(buf: &[u8], pos: &mut usize) -> Result<Option<String>, ReadError> {
+    let avail = &buf[*pos..];
+    match avail.iter().position(|&b| b == b'\n') {
+        Some(i) => {
+            if i + 1 > MAX_HEADER_LINE {
+                return Err(ReadError::Malformed(format!(
+                    "header line too long (over {MAX_HEADER_LINE} bytes)"
+                )));
+            }
+            let text = std::str::from_utf8(&avail[..i])
+                .map_err(|_| malformed("header line is not UTF-8"))?;
+            let line = text.trim_end_matches(|c| c == '\r' || c == '\n').to_string();
+            *pos += i + 1;
+            Ok(Some(line))
+        }
+        None => {
+            if avail.len() > MAX_HEADER_LINE {
+                return Err(ReadError::Malformed(format!(
+                    "header line too long (over {MAX_HEADER_LINE} bytes)"
+                )));
+            }
+            Ok(None)
+        }
+    }
+}
+
+impl Default for RequestParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        Self::with_buffer(Vec::new())
+    }
+
+    /// Build a parser around a recycled buffer (the event loop's
+    /// per-connection buffer pool); the buffer is cleared first.
+    pub fn with_buffer(mut buf: Vec<u8>) -> RequestParser {
+        buf.clear();
+        RequestParser { buf, pos: 0, state: ParseState::RequestLine }
+    }
+
+    /// Append freshly read bytes.  Cheap; parsing happens in `poll`.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// True when some bytes of a new request have been consumed (or
+    /// buffered) but the request is not complete — the distinction
+    /// between a stalled upload (408) and an idle keep-alive connection
+    /// (silent close), same contract as `ReadError::TimedOut`'s
+    /// `mid_request` flag.
+    pub fn mid_request(&self) -> bool {
+        !matches!(self.state, ParseState::RequestLine) || self.pos < self.buf.len()
+    }
+
+    /// Reclaim the raw buffer (hand it back to the pool on close).
+    pub fn into_buffer(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Drop consumed bytes once they dominate the buffer so a
+    /// long-lived connection's buffer stays proportional to what is
+    /// actually pending, not to everything it ever received.
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Advance the state machine over the buffered bytes.  `Ok(None)` =
+    /// need more input; `Ok(Some(req))` = one complete request (leftover
+    /// pipelined bytes remain buffered for the next call); `Err` = the
+    /// connection is poisoned (400 + close, exactly like the blocking
+    /// path's `ReadError::Malformed`).
+    pub fn poll(&mut self) -> Result<Option<HttpRequest>, ReadError> {
+        loop {
+            match std::mem::replace(&mut self.state, ParseState::RequestLine) {
+                ParseState::RequestLine => match take_line(&self.buf, &mut self.pos)? {
+                    None => {
+                        self.compact();
+                        return Ok(None);
+                    }
+                    Some(line) => {
+                        let (method, path, version) = parse_request_line(&line)?;
+                        self.state = ParseState::Headers {
+                            method,
+                            path,
+                            version,
+                            headers: BTreeMap::new(),
+                            header_lines: 0,
+                        };
+                    }
+                },
+                ParseState::Headers { method, path, version, mut headers, mut header_lines } => {
+                    match take_line(&self.buf, &mut self.pos)? {
+                        None => {
+                            self.state = ParseState::Headers {
+                                method,
+                                path,
+                                version,
+                                headers,
+                                header_lines,
+                            };
+                            self.compact();
+                            return Ok(None);
+                        }
+                        Some(line) if line.is_empty() => {
+                            let need = validate_framing(&headers)?;
+                            if need == 0 {
+                                self.compact();
+                                return Ok(Some(HttpRequest {
+                                    method,
+                                    path,
+                                    version,
+                                    headers,
+                                    body: Vec::new(),
+                                }));
+                            }
+                            self.state = ParseState::Body {
+                                method,
+                                path,
+                                version,
+                                headers,
+                                body: Vec::new(),
+                                need,
+                            };
+                        }
+                        Some(line) => {
+                            header_lines += 1;
+                            if header_lines > MAX_HEADERS {
+                                return Err(malformed("too many headers"));
+                            }
+                            insert_header(&mut headers, &line)?;
+                            self.state = ParseState::Headers {
+                                method,
+                                path,
+                                version,
+                                headers,
+                                header_lines,
+                            };
+                        }
+                    }
+                }
+                ParseState::Body { method, path, version, headers, mut body, need } => {
+                    let take = (need - body.len()).min(self.buf.len() - self.pos);
+                    body.extend_from_slice(&self.buf[self.pos..self.pos + take]);
+                    self.pos += take;
+                    if body.len() == need {
+                        self.compact();
+                        return Ok(Some(HttpRequest { method, path, version, headers, body }));
+                    }
+                    self.state = ParseState::Body { method, path, version, headers, body, need };
+                    self.compact();
+                    return Ok(None);
+                }
+            }
+        }
+    }
 }
 
 /// Read one request from the stream (one-shot convenience for tests).
@@ -353,6 +604,25 @@ pub fn write_response_with(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(body.len() + 128);
+    format_response_into(&mut out, status, reason, content_type, extra_headers, body, keep_alive);
+    stream.write_all(&out)?;
+    stream.flush()
+}
+
+/// Serialize one response (head + body) into `out`.  This is THE wire
+/// format: both the blocking writer above and the event-loop gateway's
+/// buffered writes go through it, so the two serving modes emit
+/// byte-identical responses.
+pub fn format_response_into(
+    out: &mut Vec<u8>,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) {
     let conn = if keep_alive { "keep-alive" } else { "close" };
     let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
@@ -366,9 +636,8 @@ pub fn write_response_with(
         head.push_str("\r\n");
     }
     head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body);
 }
 
 /// `POST /v1/infer` body for one image at one tier — the wire format
@@ -825,6 +1094,127 @@ mod tests {
         assert!(c.is_closed());
         assert!(c.request("GET", "/c", None).is_err());
         server.join().unwrap();
+    }
+
+    /// Parse `raw` through the incremental parser in one push.
+    fn parse_whole(raw: &[u8]) -> Result<Option<HttpRequest>, ReadError> {
+        let mut p = RequestParser::new();
+        p.push(raw);
+        p.poll()
+    }
+
+    /// The deterministic shape of a parsed request, for split-point
+    /// equivalence checks.
+    fn fingerprint(r: &HttpRequest) -> (String, String, String, Vec<(String, String)>, Vec<u8>) {
+        (
+            r.method.clone(),
+            r.path.clone(),
+            r.version.clone(),
+            r.headers.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            r.body.clone(),
+        )
+    }
+
+    #[test]
+    fn incremental_parser_byte_by_byte_matches_whole_buffer() {
+        let body = "{\"tier\":\"gold\"}";
+        let raw = format!(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let whole = parse_whole(raw.as_bytes()).unwrap().unwrap();
+        let mut p = RequestParser::new();
+        let mut got = None;
+        for (i, b) in raw.as_bytes().iter().enumerate() {
+            p.push(&[*b]);
+            if let Some(req) = p.poll().unwrap() {
+                assert_eq!(i, raw.len() - 1, "request completed before its last byte");
+                got = Some(req);
+            }
+        }
+        let got = got.expect("byte-by-byte feed never produced the request");
+        assert_eq!(fingerprint(&got), fingerprint(&whole));
+        assert!(!p.mid_request(), "clean boundary after a complete request");
+    }
+
+    #[test]
+    fn incremental_parser_adversarial_split_points() {
+        let body = "{\"tier\":\"silver\",\"image\":[1,2,3]}";
+        let raw = format!(
+            "POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let whole = parse_whole(raw.as_bytes()).unwrap().unwrap();
+        // split mid-header-NAME, mid-Content-Length VALUE, and mid-body
+        let cut_name = raw.find("Content-Le").unwrap() + 6;
+        let cut_value = raw.find(": 3").map(|i| i + 3).unwrap_or(raw.len() - 8);
+        let cut_body = raw.len() - body.len() / 2;
+        for cut in [cut_name, cut_value, cut_body] {
+            let mut p = RequestParser::new();
+            p.push(&raw.as_bytes()[..cut]);
+            assert!(p.poll().unwrap().is_none(), "split at {cut} produced an early request");
+            assert!(p.mid_request(), "split at {cut} must read as mid-request");
+            p.push(&raw.as_bytes()[cut..]);
+            let req = p.poll().unwrap().expect("second half must complete the request");
+            assert_eq!(fingerprint(&req), fingerprint(&whole), "split at {cut} diverged");
+        }
+    }
+
+    #[test]
+    fn incremental_parser_pipelined_requests_and_leftover() {
+        let mut p = RequestParser::new();
+        p.push(b"GET /first HTTP/1.1\r\n\r\nPOST /second HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi");
+        let r1 = p.poll().unwrap().unwrap();
+        assert_eq!(r1.path, "/first");
+        assert!(p.mid_request(), "pipelined leftover bytes are a pending request");
+        let r2 = p.poll().unwrap().unwrap();
+        assert_eq!(r2.path, "/second");
+        assert_eq!(r2.body_str().unwrap(), "hi");
+        assert!(p.poll().unwrap().is_none());
+        assert!(!p.mid_request());
+    }
+
+    #[test]
+    fn incremental_parser_rejects_same_smuggling_shapes() {
+        // the error STRINGS must match the blocking parser: the gateway
+        // 400 bodies are part of the observable contract
+        let err =
+            parse_whole(b"POST /x HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 0\r\n\r\nabc")
+                .unwrap_err();
+        assert_eq!(err.to_string(), "duplicate header \"content-length\"");
+        let err = parse_whole(b"POST /x HTTP/1.1\r\nContent-Length: +3\r\n\r\nabc").unwrap_err();
+        assert_eq!(err.to_string(), "bad Content-Length \"+3\"");
+        let err =
+            parse_whole(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n")
+                .unwrap_err();
+        assert_eq!(err.to_string(), "Transfer-Encoding is not supported (use Content-Length)");
+        // non-framing repeats still merge per RFC 7230 list semantics
+        let req = parse_whole(b"GET /x HTTP/1.1\r\nVia: 1.1 a\r\nVia: 1.1 b\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.header("via"), Some("1.1 a, 1.1 b"));
+    }
+
+    #[test]
+    fn incremental_parser_enforces_bounds() {
+        // an endless header line with no newline trips MAX_HEADER_LINE
+        let mut p = RequestParser::new();
+        p.push(b"GET /x HTTP/1.1\r\nX-Big: ");
+        // enough 1 KiB chunks to blow past MAX_HEADER_LINE without a newline
+        for _ in 0..(MAX_HEADER_LINE / 1024 + 1) {
+            p.push(&[b'a'; 1024]);
+        }
+        let err = p.poll().unwrap_err();
+        assert!(err.to_string().contains("header line too long"), "{err}");
+        // too many header lines (duplicate merging must not bypass it)
+        let mut raw = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            raw.push_str(&format!("Via: 1.1 hop{i}\r\n"));
+        }
+        raw.push_str("\r\n");
+        let err = parse_whole(raw.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("too many headers"), "{err}");
     }
 
     #[test]

@@ -5,10 +5,15 @@
 //!   `POST /v2/infer` with typed per-request options, the `/v1/*`
 //!   adapters `POST /v1/infer` + NDJSON `POST /v1/infer_batch`,
 //!   `GET /metrics`, `GET /v1/version`, `GET /healthz`) with persistent
-//!   connections (a bounded connection-worker pool runs a keep-alive
-//!   loop per socket), `405 + Allow` on known paths hit with the wrong
+//!   connections, `405 + Allow` on known paths hit with the wrong
 //!   method, and explicit `429 Busy` backpressure at both the
 //!   connection and the tier-queue level;
+//! * `event_loop` (crate-private) — the default unix serving mode: one
+//!   readiness-driven thread (`epoll`, fallback `poll`) multiplexing
+//!   every connection as a nonblocking state machine, with `max_conns`
+//!   re-semanticized as a connection cap (the threaded worker pool
+//!   remains as the `--no-event-loop` escape hatch and the non-unix
+//!   default);
 //! * [`qos`] — per-request SLO tiers (`gold`/`silver`/`batch`), bounded
 //!   per-tier queues and deadline-aware single-tier batch coalescing
 //!   (hard window from first enqueue);
@@ -17,13 +22,17 @@
 //!   boundary with load — serving-time on-the-fly saliency-aware
 //!   precision;
 //! * [`http`] — the hand-rolled HTTP substrate (no HTTP crates in the
-//!   offline mirror), plus the blocking client used by tests/benches.
+//!   offline mirror): the blocking request reader, the incremental
+//!   [`http::RequestParser`] the event loop feeds byte-at-a-time, and
+//!   the blocking client used by tests/benches.
 
+#[cfg(unix)]
+pub(crate) mod event_loop;
 pub mod gateway;
 pub mod governor;
 pub mod http;
 pub mod qos;
 
-pub use gateway::{ConnStats, Gateway};
+pub use gateway::{ConnStats, EventLoopStats, Gateway};
 pub use governor::{Governor, GovernorConfig, GovernorSnapshot};
 pub use qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};

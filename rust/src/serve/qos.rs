@@ -92,8 +92,10 @@ impl Tier {
 pub enum SubmitError {
     /// The tier's bounded queue is at capacity.
     Busy { tier: Tier, cap: usize },
-    /// The gateway's connection pool + accept backlog are at capacity —
-    /// the connection-level twin of `Busy` (both map to HTTP 429).
+    /// The gateway's connection budget is spent — `max_conns` served
+    /// connections plus an equal parked/backlog allowance (event loop
+    /// and threaded pool respectively) — the connection-level twin of
+    /// `Busy` (both map to HTTP 429).
     Overloaded { max_conns: usize },
     /// The server is shutting down (or already shut down).
     ShutDown,
@@ -114,7 +116,7 @@ impl std::fmt::Display for SubmitError {
                 write!(f, "{} tier queue is full ({cap} pending) — busy, retry later", tier.name())
             }
             SubmitError::Overloaded { max_conns } => {
-                write!(f, "connection limit reached ({max_conns} workers + backlog) — busy")
+                write!(f, "connection cap reached ({max_conns} conns + backlog) — busy")
             }
             SubmitError::ShutDown => write!(f, "server is shut down"),
             SubmitError::UnknownBackend { requested, registered } => {

@@ -1,0 +1,326 @@
+//! Event-loop gateway tests: incremental parsing at adversarial split
+//! points (bit-identical to the whole-buffer path), byte-by-byte
+//! request trickling, the slowloris whole-request deadline surviving
+//! requests split across many readiness wakeups, pipelined requests
+//! arriving in one write, `/metrics` event-loop gauges, and the
+//! `event_loop = false` threaded fallback answering byte-for-byte the
+//! same on cold paths.  Everything runs on `QGraph::synthetic()`.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::QGraph;
+use osa_hcim::serve::http::{self, Client};
+use osa_hcim::serve::Gateway;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn synth_image(seed: u64) -> Vec<u8> {
+    let mut g = osa_hcim::util::prng::SplitMix64::new(seed);
+    (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+fn dcim_config() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim; // deterministic logits: bit-identity is testable
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 500;
+    cfg
+}
+
+fn start_gateway(cfg: &SystemConfig) -> (Gateway, String) {
+    let gw = Gateway::start(cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    (gw, addr)
+}
+
+/// Deterministic part of an infer response (id / latency_us differ).
+fn pred_and_logits(body: &str) -> (usize, Vec<u64>) {
+    let doc = parse(body).unwrap();
+    let pred = doc.get("pred").and_then(JsonValue::as_usize).unwrap();
+    let logits: Vec<u64> = doc
+        .get("logits")
+        .and_then(JsonValue::as_array)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap().to_bits())
+        .collect();
+    (pred, logits)
+}
+
+fn raw_post(addr: &str, path: &str, body: &str) -> Vec<u8> {
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Content-Type: application/json\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Send `req` over a fresh connection in fragments cut at `splits`
+/// (byte offsets, ascending), pausing between fragments so each one
+/// arrives in its own readiness wakeup, then read the full response.
+fn send_in_fragments(addr: &str, req: &[u8], splits: &[usize]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let mut at = 0usize;
+    for &cut in splits.iter().chain(std::iter::once(&req.len())) {
+        assert!(cut >= at && cut <= req.len(), "bad split point {cut}");
+        if cut > at {
+            s.write_all(&req[at..cut]).unwrap();
+            s.flush().unwrap();
+            at = cut;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in: {raw}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// Acceptance: a request chopped at adversarial byte offsets (inside
+/// the request line, inside a header name, between CR and LF, at the
+/// header/body boundary, mid-body) parses to the same response as the
+/// whole-buffer path, bit for bit.
+#[test]
+fn adversarial_split_points_bit_identical() {
+    let (gw, addr) = start_gateway(&dcim_config());
+    let body = http::infer_body("gold", &synth_image(77));
+    let (status, base) = http::request(&addr, "POST", "/v1/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{base}");
+    let baseline = pred_and_logits(&base);
+
+    let req = raw_post(&addr, "/v1/infer", &body);
+    let head_end = req.windows(4).position(|w| w == b"\r\n\r\n").unwrap();
+    let first_crlf = req.windows(2).position(|w| w == b"\r\n").unwrap();
+    let split_sets: [Vec<usize>; 7] = [
+        vec![2],                             // inside "POST"
+        vec![first_crlf + 1],                // between CR and LF of the request line
+        vec![first_crlf + 4],                // inside the Host header name
+        vec![head_end + 2],                  // middle of the blank line
+        vec![head_end + 4],                  // exactly at the header/body boundary
+        vec![head_end + 4 + body.len() / 2], // mid-body
+        vec![2, first_crlf + 1, head_end + 2, head_end + 4, req.len() - 1], // all at once
+    ];
+    for splits in &split_sets {
+        let (status, resp) = send_in_fragments(&addr, &req, splits);
+        assert_eq!(status, 200, "splits {splits:?}: {resp}");
+        assert_eq!(
+            pred_and_logits(&resp),
+            baseline,
+            "response differs from the whole-buffer path at splits {splits:?}"
+        );
+    }
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.errors, 0);
+}
+
+/// A small request trickled one byte per write still parses and the
+/// connection stays usable for a follow-up request.
+#[test]
+fn byte_by_byte_request_parses() {
+    let (gw, addr) = start_gateway(&dcim_config());
+    let req = format!("GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n");
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    for b in req.as_bytes() {
+        s.write_all(std::slice::from_ref(b)).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut buf = [0u8; 4096];
+    let n = s.read(&mut buf).unwrap();
+    let raw = String::from_utf8_lossy(&buf[..n]);
+    assert!(raw.contains("200 OK"), "{raw}");
+    assert!(raw.contains("\"ok\""), "{raw}");
+    drop(s);
+
+    // framing violations still answer 400 when trickled byte-by-byte
+    let bad = format!("POST /v1/infer HTTP/1.1\r\nHost: {addr}\r\nContent-Length: +3\r\n\r\nabc");
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    for b in bad.as_bytes() {
+        if s.write_all(std::slice::from_ref(b)).is_err() {
+            break; // server may 400 + close before the body arrives
+        }
+        let _ = s.flush();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut raw = String::new();
+    let _ = s.read_to_string(&mut raw);
+    assert!(raw.contains("400 Bad Request"), "{raw}");
+    assert!(raw.contains("Content-Length"), "{raw}");
+    gw.shutdown();
+}
+
+/// Two complete requests arriving in a single write are both served,
+/// in order, on the one connection.
+#[test]
+fn pipelined_requests_in_one_write() {
+    let (gw, addr) = start_gateway(&dcim_config());
+    let one = format!("GET /healthz HTTP/1.1\r\nHost: {addr}\r\n\r\n");
+    let two = format!("GET /v1/version HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(format!("{one}{two}").as_bytes()).unwrap();
+    s.flush().unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert_eq!(raw.matches("HTTP/1.1 200 OK").count(), 2, "{raw}");
+    assert!(raw.contains("\"ok\""), "{raw}");
+    assert!(raw.contains("\"api\""), "{raw}");
+    let health = raw.find("\"ok\"").unwrap();
+    let version = raw.find("\"api\"").unwrap();
+    assert!(health < version, "responses out of order: {raw}");
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.errors, 0);
+}
+
+/// The slowloris guard survives requests split across many readiness
+/// wakeups: a peer feeding one byte at a time fast enough to defeat
+/// the per-read timeout still hits the whole-request deadline
+/// (anchored at the FIRST byte of the request) and gets a 408.
+#[cfg(unix)]
+#[test]
+fn slowloris_across_wakeups_gets_408() {
+    let mut cfg = dcim_config();
+    cfg.read_timeout_ms = 150; // whole-request deadline = 4x = 600ms
+    let (gw, addr) = start_gateway(&cfg);
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(1))).unwrap();
+    let drip = format!("POST /v1/infer HTTP/1.1\r\nHost: {addr}\r\nX-Pad: {}", "a".repeat(512));
+    let t0 = Instant::now();
+    let mut got = Vec::new();
+    let mut buf = [0u8; 1024];
+    // each byte lands well inside the 150ms per-read timeout, so only
+    // the first-byte-anchored whole-request deadline can stop this
+    'drip: for b in drip.as_bytes() {
+        if s.write_all(std::slice::from_ref(b)).is_err() {
+            break; // server gave up on us — expected
+        }
+        let _ = s.flush();
+        std::thread::sleep(Duration::from_millis(40));
+        match s.read(&mut buf) {
+            Ok(0) => break 'drip, // closed without a byte: the 408 is already drained below
+            Ok(n) => {
+                got.extend_from_slice(&buf[..n]);
+                break 'drip; // the 408 landed
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break 'drip,
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "slowloris peer never shed");
+    }
+    let shed_at = t0.elapsed();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = s.read_to_end(&mut got);
+    let raw = String::from_utf8_lossy(&got);
+    assert!(raw.contains("408"), "slowloris peer answer: {raw}");
+    assert!(raw.contains("stalled"), "{raw}");
+    assert!(
+        shed_at >= Duration::from_millis(400),
+        "shed too early ({shed_at:?}) — per-read timeout fired instead of the request deadline"
+    );
+    gw.shutdown();
+}
+
+/// `/metrics` exposes the event-loop gauges: open connections, epoll
+/// wakeups, EAGAIN counts, deadline expirations and the buffer-pool
+/// hit rate.
+#[cfg(unix)]
+#[test]
+fn metrics_expose_event_loop_gauges() {
+    let (gw, addr) = start_gateway(&dcim_config());
+    // a few keep-alive requests so wakeups and pool reuse accumulate
+    let mut c = Client::connect(&addr).unwrap();
+    for seed in [1u64, 2] {
+        let body = http::infer_body("gold", &synth_image(seed));
+        let (status, resp) = c.request("POST", "/v1/infer", Some(&body)).unwrap();
+        assert_eq!(status, 200, "{resp}");
+    }
+    // a same-wakeup request/response cycle always drains the socket to
+    // EAGAIN before /metrics below samples the gauges
+    let (status, _) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let (status, body) = c.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let m = parse(&body).unwrap();
+    let ev = m.get("event_loop").expect("event_loop block in /metrics");
+    let gauge = |k: &str| {
+        ev.get(k)
+            .and_then(JsonValue::as_f64)
+            .unwrap_or_else(|| panic!("missing event_loop.{k}: {body}"))
+    };
+    assert!(gauge("open_connections") >= 1.0, "our own connection is open");
+    assert!(gauge("wakeups") >= 3.0, "three requests = at least three wakeups");
+    assert!(gauge("eagain_reads") >= 1.0, "level-triggered reads must drain to EAGAIN");
+    assert!(gauge("parked_connections") >= 0.0);
+    assert!(gauge("deadline_expirations") >= 0.0);
+    let hit_rate = gauge("buffer_pool_hit_rate");
+    assert!((0.0..=1.0).contains(&hit_rate), "pool hit rate out of range: {hit_rate}");
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.errors, 0);
+}
+
+/// `event_loop = false` falls back to the threaded gateway, and the
+/// two modes answer cold paths byte-for-byte identically (shared
+/// routing/rendering layer) and infer requests bit-identically.
+#[test]
+fn threaded_fallback_is_byte_equivalent() {
+    let mut threaded_cfg = dcim_config();
+    threaded_cfg.event_loop = false;
+    let (gw_t, addr_t) = start_gateway(&threaded_cfg);
+    let (gw_e, addr_e) = start_gateway(&dcim_config());
+
+    // deterministic cold paths: raw bytes must match exactly
+    for req in [
+        "GET /nope HTTP/1.1\r\nHost: h\r\nConnection: close\r\n\r\n".to_string(),
+        "PUT /v1/infer HTTP/1.1\r\nHost: h\r\nConnection: close\r\n\r\n".to_string(),
+        "POST /v1/infer HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 0\r\n\r\nabc"
+            .to_string(),
+    ] {
+        let fetch = |addr: &str| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(req.as_bytes()).unwrap();
+            s.flush().unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            let mut raw = Vec::new();
+            s.read_to_end(&mut raw).unwrap();
+            raw
+        };
+        let a = fetch(&addr_t);
+        let b = fetch(&addr_e);
+        assert_eq!(
+            String::from_utf8_lossy(&a),
+            String::from_utf8_lossy(&b),
+            "threaded and event-loop responses differ for: {req}"
+        );
+    }
+
+    // inference answers are bit-identical across modes
+    let body = http::infer_body("gold", &synth_image(9));
+    let (st_t, resp_t) = http::request(&addr_t, "POST", "/v1/infer", Some(&body)).unwrap();
+    let (st_e, resp_e) = http::request(&addr_e, "POST", "/v1/infer", Some(&body)).unwrap();
+    assert_eq!((st_t, st_e), (200, 200), "{resp_t} / {resp_e}");
+    assert_eq!(pred_and_logits(&resp_t), pred_and_logits(&resp_e));
+
+    gw_t.shutdown();
+    gw_e.shutdown();
+}
