@@ -321,6 +321,51 @@ fn main() {
          over {ka_conns} conns)"
     );
 
+    // --- tracing overhead: paired keep-alive bursts, spans on vs off ----
+    // The obs acceptance curve: per-request span tracing must stay
+    // under a few percent of keep-alive throughput.  Run the identical
+    // burst twice back-to-back — ring enabled, then disabled — so both
+    // sides see the same warm server; the wait-free histograms stay on
+    // in both runs (they are the always-on telemetry path).
+    let ka_burst = |label: &str| -> f64 {
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            let img = img.clone();
+            let label = label.to_string();
+            handles.push(std::thread::spawn(move || {
+                let mut conn = http::Client::connect(&addr).expect("burst connect");
+                let mut served = 0u64;
+                for i in 0..per_client {
+                    let tier = Tier::ALL[(c + i) % Tier::ALL.len()];
+                    let body = infer_body(tier.name(), &img);
+                    match conn.request("POST", "/v1/infer", Some(&body)) {
+                        Ok((200, _)) => served += 1,
+                        Ok((429, _)) => {}
+                        Ok((status, b)) => panic!("{label}: unexpected status {status}: {b}"),
+                        Err(e) => panic!("{label}: request failed: {e:#}"),
+                    }
+                }
+                served
+            }));
+        }
+        let served: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        served as f64 / t0.elapsed().as_secs_f64()
+    };
+    let telem = gateway.obs();
+    telem.set_trace_enabled(true);
+    let rps_traced = ka_burst("traced");
+    telem.set_trace_enabled(false);
+    let rps_untraced = ka_burst("untraced");
+    telem.set_trace_enabled(true);
+    let obs_delta = (rps_untraced - rps_traced).max(0.0);
+    let obs_overhead_pct = obs_delta / rps_untraced.max(1e-9) * 100.0;
+    println!(
+        "serve_http/obs_overhead: traced {rps_traced:.1} req/s vs untraced {rps_untraced:.1} \
+         req/s -> overhead {obs_overhead_pct:.2}%"
+    );
+
     // --- NDJSON batch endpoint: many images per request ------------------
     let batch_lines = 64usize;
     let batch_posts = 4usize;
@@ -432,6 +477,9 @@ fn main() {
         ("http_keepalive_requests_per_s", num(ka_rps)),
         ("keepalive_speedup", num(keepalive_speedup)),
         ("conn_reuse_rate", num(conn_reuse_rate)),
+        ("obs_overhead_pct", num(obs_overhead_pct)),
+        ("obs_rps_traced", num(rps_traced)),
+        ("obs_rps_untraced", num(rps_untraced)),
         ("infer_batch_images", num(batch_images as f64)),
         ("infer_batch_images_per_s", num(batch_ips)),
         ("rejected", num(m.rejected as f64)),

@@ -265,6 +265,17 @@ pub struct SystemConfig {
     pub gov_max_level: u32,
     /// Governor: minimum milliseconds between level changes.
     pub gov_hold_ms: u64,
+    /// Observability: collect per-request trace spans (`[obs] trace`,
+    /// `--no-trace`).  Metrics/histograms are always on; this gates
+    /// only the span ring + `/debug/trace`.
+    pub obs_trace: bool,
+    /// Observability: span ring capacity (`[obs] trace_capacity`);
+    /// fixed memory, oldest spans overwritten.
+    pub obs_trace_capacity: usize,
+    /// Observability: log a structured warn line for any request slower
+    /// than this many milliseconds end to end (`[obs] slow_ms`,
+    /// `--slow-ms`); 0 disables the slow-request log.
+    pub obs_slow_ms: u64,
 }
 
 impl Default for SystemConfig {
@@ -293,6 +304,9 @@ impl Default for SystemConfig {
             gov_low_watermark: 0.25,
             gov_max_level: 3,
             gov_hold_ms: 100,
+            obs_trace: true,
+            obs_trace_capacity: 4096,
+            obs_slow_ms: 250,
         }
     }
 }
@@ -358,6 +372,9 @@ impl SystemConfig {
         cfg.gov_low_watermark = t.get_f64("serve.gov_low_watermark", cfg.gov_low_watermark)?;
         cfg.gov_max_level = t.get_usize("serve.gov_max_level", cfg.gov_max_level as usize)? as u32;
         cfg.gov_hold_ms = t.get_usize("serve.gov_hold_ms", cfg.gov_hold_ms as usize)? as u64;
+        cfg.obs_trace = t.get_bool("obs.trace", cfg.obs_trace)?;
+        cfg.obs_trace_capacity = t.get_usize("obs.trace_capacity", cfg.obs_trace_capacity)?;
+        cfg.obs_slow_ms = t.get_usize("obs.slow_ms", cfg.obs_slow_ms as usize)? as u64;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -375,6 +392,9 @@ impl SystemConfig {
                 self.gov_low_watermark,
                 self.gov_high_watermark
             );
+        }
+        if self.obs_trace && self.obs_trace_capacity == 0 {
+            bail!("obs.trace_capacity must be >= 1 while obs.trace is enabled");
         }
         if self.thresholds.len() + 1 != crate::spec::B_CANDIDATES.len() {
             bail!(
@@ -522,6 +542,27 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
         let mut cfg = SystemConfig::default();
         cfg.thresholds = vec![1, 2];
         assert!(cfg.validate().unwrap_err().to_string().contains("cim.thresholds"));
+    }
+
+    #[test]
+    fn obs_section_parsed() {
+        let t = Toml::parse("[obs]\ntrace = false\ntrace_capacity = 128\nslow_ms = 50").unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert!(!cfg.obs_trace);
+        assert_eq!(cfg.obs_trace_capacity, 128);
+        assert_eq!(cfg.obs_slow_ms, 50);
+        // defaults when the section is absent
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(cfg.obs_trace);
+        assert_eq!(cfg.obs_trace_capacity, 4096);
+        assert_eq!(cfg.obs_slow_ms, 250);
+        // a zero-capacity ring with tracing on is a misconfiguration
+        let t = Toml::parse("[obs]\ntrace_capacity = 0").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("obs.trace_capacity"), "{err}");
+        // ... but fine when tracing is off
+        let t = Toml::parse("[obs]\ntrace = false\ntrace_capacity = 0").unwrap();
+        assert!(SystemConfig::from_toml(&t).is_ok());
     }
 
     #[test]

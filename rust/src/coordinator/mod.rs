@@ -34,10 +34,10 @@ use crate::config::SystemConfig;
 use crate::energy::EnergyAccount;
 use crate::engine::{Backend, BackendKnobs, Engine, InferRequest};
 use crate::nn::{Executor, QGraph};
+use crate::obs::{self, ServerObs, Stage};
 use crate::serve::governor::{Governor, GovernorSnapshot};
 use crate::serve::qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};
 use crate::spec::MacroSpec;
-use crate::util::percentile;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
@@ -49,6 +49,10 @@ pub use crate::engine::{InferOptions, InferResponse as Response};
 /// One inference request.
 pub struct Request {
     pub id: u64,
+    /// Trace/request id (`X-Request-Id`), minted by the gateway at
+    /// accept or by `submit_*` for in-process callers — every span this
+    /// request produces carries it.
+    pub rid: u64,
     /// 32x32x3 uint8 image.
     pub image: Vec<u8>,
     /// Per-request options: QoS tier plus backend / noise-seed /
@@ -90,42 +94,40 @@ impl ResponseSink {
     }
 }
 
-/// Sample buffers are rings: percentiles/means are over the most recent
-/// `SAMPLE_CAP` observations, so a long-running gateway's metrics stay
-/// bounded in memory and cheap to snapshot.
-const SAMPLE_CAP: usize = 4096;
-
-fn push_sample(buf: &mut Vec<f64>, cursor: &mut usize, x: f64) {
-    if buf.len() < SAMPLE_CAP {
-        buf.push(x);
-    } else {
-        buf[*cursor] = x;
-        *cursor = (*cursor + 1) % SAMPLE_CAP;
-    }
-}
-
-/// Per-tier serving statistics.
-#[derive(Debug, Default, Clone)]
+/// Per-tier serving statistics.  Latency percentiles come from the
+/// shared [`ServerObs`] histograms — bounded memory, lock-free record —
+/// not from per-sample vectors (which grew with traffic and needed the
+/// metrics `Mutex` on every request).
+#[derive(Debug, Clone)]
 pub struct TierStats {
     pub requests: u64,
     pub errors: u64,
     /// Admissions refused with `Busy` (snapshot from the tier queues).
     pub rejected: u64,
-    /// Most recent `SAMPLE_CAP` request latencies (ring).
-    pub latencies_us: Vec<f64>,
-    lat_cursor: usize,
     /// Boundary histogram of everything served for this tier
     /// (index = B value; higher B = more analog = cheaper).
     pub b_hist: [u64; 16],
+    obs: Arc<ServerObs>,
+    idx: usize,
+}
+
+impl Default for TierStats {
+    fn default() -> Self {
+        Self::with_obs(Arc::new(ServerObs::default()), 0)
+    }
 }
 
 impl TierStats {
+    fn with_obs(obs: Arc<ServerObs>, idx: usize) -> Self {
+        TierStats { requests: 0, errors: 0, rejected: 0, b_hist: [0; 16], obs, idx }
+    }
+
     pub fn p50_latency_us(&self) -> f64 {
-        percentile(&self.latencies_us, 50.0)
+        self.obs.tier_latency_us[self.idx].snapshot().percentile(0.50)
     }
 
     pub fn p99_latency_us(&self) -> f64 {
-        percentile(&self.latencies_us, 99.0)
+        self.obs.tier_latency_us[self.idx].snapshot().percentile(0.99)
     }
 
     /// Mean chosen boundary over the tier's served MAC tiles (0 when
@@ -140,8 +142,10 @@ impl TierStats {
     }
 }
 
-/// Aggregated serving metrics.
-#[derive(Debug, Default, Clone)]
+/// Aggregated serving metrics.  Counters/energy live here behind the
+/// metrics `Mutex` (updated once per *batch*); per-request latency goes
+/// straight into the [`ServerObs`] histograms, wait-free.
+#[derive(Debug, Clone)]
 pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
@@ -149,35 +153,62 @@ pub struct Metrics {
     pub errors: u64,
     /// Admissions refused with `Busy` across all tiers.
     pub rejected: u64,
-    /// Most recent `SAMPLE_CAP` request latencies (ring).
-    pub latencies_us: Vec<f64>,
-    lat_cursor: usize,
-    /// Most recent `SAMPLE_CAP` batch sizes (ring).
-    pub batch_sizes: Vec<f64>,
-    batch_cursor: usize,
+    /// Sum of dispatched batch sizes (mean = sum / batches).
+    pub batch_size_sum: f64,
     pub account: EnergyAccount,
     pub b_hist: [u64; 16],
     /// Indexed by [`Tier::index`] (gold, silver, batch).
     pub per_tier: [TierStats; 3],
     pub started: Option<Instant>,
     pub finished: Option<Instant>,
+    /// The observability registry the latency getters read from (shared
+    /// with the gateway and every worker).
+    pub obs: Arc<ServerObs>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::with_obs(Arc::new(ServerObs::default()))
+    }
 }
 
 impl Metrics {
+    /// Build over a shared registry (the server's own construction
+    /// path; `Default` makes a private registry for tests).
+    pub fn with_obs(obs: Arc<ServerObs>) -> Self {
+        Metrics {
+            requests: 0,
+            batches: 0,
+            errors: 0,
+            rejected: 0,
+            batch_size_sum: 0.0,
+            account: EnergyAccount::default(),
+            b_hist: [0; 16],
+            per_tier: std::array::from_fn(|i| TierStats::with_obs(obs.clone(), i)),
+            started: None,
+            finished: None,
+            obs,
+        }
+    }
+
     pub fn p50_latency_us(&self) -> f64 {
-        percentile(&self.latencies_us, 50.0)
+        self.obs.latency_us.snapshot().percentile(0.50)
     }
 
     pub fn p95_latency_us(&self) -> f64 {
-        percentile(&self.latencies_us, 95.0)
+        self.obs.latency_us.snapshot().percentile(0.95)
     }
 
     pub fn p99_latency_us(&self) -> f64 {
-        percentile(&self.latencies_us, 99.0)
+        self.obs.latency_us.snapshot().percentile(0.99)
     }
 
     pub fn mean_batch(&self) -> f64 {
-        crate::util::mean(&self.batch_sizes)
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum / self.batches as f64
+        }
     }
 
     pub fn tier(&self, tier: Tier) -> &TierStats {
@@ -233,6 +264,7 @@ pub struct Server {
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Mutex<Metrics>>,
+    obs: Arc<ServerObs>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
@@ -265,7 +297,11 @@ impl Server {
     /// DESIGN.md §11/§12).
     pub fn with_engine(engine: Arc<Engine>) -> Result<Self> {
         let cfg = engine.config();
-        let metrics = Arc::new(Mutex::new(Metrics { started: Some(Instant::now()), ..Default::default() }));
+        let obs =
+            Arc::new(ServerObs::new(cfg.obs_trace_capacity, cfg.obs_slow_ms, cfg.obs_trace));
+        let mut seed_metrics = Metrics::with_obs(obs.clone());
+        seed_metrics.started = Some(Instant::now());
+        let metrics = Arc::new(Mutex::new(seed_metrics));
         let governor = Arc::new(Governor::from_system(cfg));
         let queues = Arc::new(TierQueues::new(QosConfig {
             queue_cap: cfg.queue_cap.max(1),
@@ -285,10 +321,11 @@ impl Server {
             let metrics = metrics.clone();
             let governor = governor.clone();
             let shared_rx = shared_rx.clone();
+            let obs = obs.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cim-worker-{wid}"))
-                    .spawn(move || worker_loop(shared_rx, engine, metrics, governor))
+                    .spawn(move || worker_loop(shared_rx, engine, metrics, governor, obs))
                     .context("spawning worker")?,
             );
         }
@@ -301,7 +338,8 @@ impl Server {
                 let queues = queues.clone();
                 let governor = governor.clone();
                 let metrics = metrics.clone();
-                move || batcher_loop(queues, wtx, governor, metrics, idle_tick)
+                let obs = obs.clone();
+                move || batcher_loop(queues, wtx, governor, metrics, obs, idle_tick)
             })
             .context("spawning batcher")?;
 
@@ -312,8 +350,15 @@ impl Server {
             batcher: Some(batcher),
             workers,
             metrics,
+            obs,
             next_id: std::sync::atomic::AtomicU64::new(0),
         })
+    }
+
+    /// The observability registry this server records into (request-id
+    /// mint, latency/stage histograms, the trace-span ring).
+    pub fn obs(&self) -> &Arc<ServerObs> {
+        &self.obs
     }
 
     /// The engine this server executes on (registry, plan cache, pool).
@@ -352,8 +397,21 @@ impl Server {
     /// / [`SubmitError::InvalidOption`] for bad per-request options —
     /// validated here, before anything is enqueued.
     pub fn submit_request(&self, req: InferRequest) -> Result<Receiver<Response>, SubmitError> {
+        let rid = self.obs.mint_rid();
+        self.submit_request_with_rid(req, rid)
+    }
+
+    /// [`Server::submit_request`] with an explicit trace id — the
+    /// gateway's path, where the id was minted at accept (or adopted
+    /// from an inbound `X-Request-Id`) so wire and coordinator spans
+    /// correlate.
+    pub fn submit_request_with_rid(
+        &self,
+        req: InferRequest,
+        rid: u64,
+    ) -> Result<Receiver<Response>, SubmitError> {
         let (rtx, rrx) = channel();
-        self.submit_with_sink(req, ResponseSink::Channel(rtx))?;
+        self.submit_with_sink(req, ResponseSink::Channel(rtx), rid)?;
         Ok(rrx)
     }
 
@@ -369,15 +427,18 @@ impl Server {
         tag: u64,
         tx: Sender<(u64, Response)>,
         wake: Arc<dyn Fn() + Send + Sync>,
+        rid: u64,
     ) -> Result<(), SubmitError> {
-        self.submit_with_sink(req, ResponseSink::Routed { tag, tx, wake })
+        self.submit_with_sink(req, ResponseSink::Routed { tag, tx, wake }, rid)
     }
 
     fn submit_with_sink(
         &self,
         req: InferRequest,
         sink: ResponseSink,
+        rid: u64,
     ) -> Result<(), SubmitError> {
+        let admit_start = obs::now_us();
         let InferRequest { image, options } = req;
         // the wire paths already 400 on bad sizes, but the typed API is
         // public too — a short image coalesced into a batch would shear
@@ -421,8 +482,18 @@ impl Server {
         }
         let tier = options.tier;
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let req = Request { id, image, opts: options, submitted: Instant::now(), respond: sink };
+        let req =
+            Request { id, rid, image, opts: options, submitted: Instant::now(), respond: sink };
         self.queues.push(tier, req)?;
+        self.obs.span(
+            rid,
+            Stage::Admit,
+            tier.index() as u8,
+            u8::MAX,
+            admit_start,
+            obs::now_us().saturating_sub(admit_start),
+            "",
+        );
         Ok(())
     }
 
@@ -470,6 +541,7 @@ fn batcher_loop(
     wtx: SyncSender<(Tier, Vec<Request>)>,
     governor: Arc<Governor>,
     metrics: Arc<Mutex<Metrics>>,
+    obs: Arc<ServerObs>,
     idle_tick: Duration,
 ) {
     let mut last_energy_j = 0.0f64;
@@ -498,6 +570,20 @@ fn batcher_loop(
         governor.observe(queues.pressure(), watts);
         match queues.pop_batch(idle_tick) {
             Pop::Batch(tier, batch) => {
+                // Coalesce span: first member's enqueue → dispatch, the
+                // window this batch actually waited to assemble.
+                if let Some(oldest) = batch.iter().map(|r| r.submitted).min() {
+                    let waited = oldest.elapsed().as_micros() as u64;
+                    obs.span(
+                        batch[0].rid,
+                        Stage::Coalesce,
+                        tier.index() as u8,
+                        u8::MAX,
+                        obs::now_us().saturating_sub(waited),
+                        waited,
+                        "",
+                    );
+                }
                 if wtx.send((tier, batch)).is_err() {
                     break; // worker pool is gone
                 }
@@ -527,6 +613,7 @@ fn worker_loop(
     engine: Arc<Engine>,
     metrics: Arc<Mutex<Metrics>>,
     governor: Arc<Governor>,
+    obs: Arc<ServerObs>,
 ) {
     let cfg = engine.config().clone();
     let graph_arc = engine.graph().clone();
@@ -581,7 +668,18 @@ fn worker_loop(
             }
         }
         for (key, group) in groups {
-            run_group(&mut execs, graph, &engine, &cfg, &governor, &metrics, tier, key, group);
+            run_group(
+                &mut execs,
+                graph,
+                &engine,
+                &cfg,
+                &governor,
+                &metrics,
+                &obs,
+                tier,
+                key,
+                group,
+            );
         }
     }
 }
@@ -596,6 +694,7 @@ fn run_group<'g>(
     cfg: &SystemConfig,
     governor: &Governor,
     metrics: &Mutex<Metrics>,
+    obs: &ServerObs,
     tier: Tier,
     key: GroupKey,
     group: Vec<Request>,
@@ -643,10 +742,50 @@ fn run_group<'g>(
     for r in &group {
         images.extend_from_slice(&r.image);
     }
+    let exec_started = Instant::now();
+    let exec_start_us = obs::now_us();
+    // Queue spans: enqueue → dispatch, one per member request.
+    for r in &group {
+        let waited = (exec_started - r.submitted).as_micros() as u64;
+        obs.span(
+            r.rid,
+            Stage::Queue,
+            tier.index() as u8,
+            u8::MAX,
+            exec_start_us.saturating_sub(waited),
+            waited,
+            "",
+        );
+    }
     match exec.forward(&images, n) {
         Ok((logits, stats)) => {
             let classes = graph.num_classes;
             let done = Instant::now();
+            let exec_us = (done - exec_started).as_micros() as u64;
+            let boundary = key.boundary.unwrap_or(cfg.fixed_b).clamp(0, 15) as u8;
+            // Exec span (whole-batch forward) + per-layer sub-spans,
+            // anchored on the first member's id.
+            obs.span(
+                group[0].rid,
+                Stage::Exec,
+                tier.index() as u8,
+                boundary,
+                exec_start_us,
+                exec_us,
+                &backend_name,
+            );
+            for layer in &stats.layers {
+                obs.span(
+                    group[0].rid,
+                    Stage::Layer,
+                    tier.index() as u8,
+                    boundary,
+                    exec_start_us + layer.offset_us,
+                    layer.dur_us,
+                    &layer.name,
+                );
+            }
+            obs.record_layers(&stats.layers);
             // NaN-safe preds up front: a NaN-poisoned row (aggressive
             // ACIM noise) is *answered* through the error path — a
             // fabricated pred would be indistinguishable from a real
@@ -663,7 +802,7 @@ fn run_group<'g>(
                 m.requests += n as u64 - nan_rows;
                 m.errors += nan_rows;
                 m.batches += 1;
-                push_sample(&mut m.batch_sizes, &mut m.batch_cursor, n as f64);
+                m.batch_size_sum += n as f64;
                 m.account.merge(&stats.account);
                 m.per_tier[tier.index()].requests += n as u64 - nan_rows;
                 m.per_tier[tier.index()].errors += nan_rows;
@@ -673,16 +812,30 @@ fn run_group<'g>(
                     m.b_hist[i] += v;
                     m.per_tier[tier.index()].b_hist[i] += v;
                 }
-                for (r, pred) in group.iter().zip(&preds) {
-                    if pred.is_none() {
-                        continue; // error responses carry no latency sample
-                    }
-                    let lat = (done - r.submitted).as_micros() as f64;
-                    push_sample(&mut m.latencies_us, &mut m.lat_cursor, lat);
-                    let t = &mut m.per_tier[tier.index()];
-                    push_sample(&mut t.latencies_us, &mut t.lat_cursor, lat);
-                }
                 m.finished = Some(done);
+            }
+            // Per-request latency/stage recording: wait-free histogram
+            // adds, outside any lock (the old per-sample Vec needed the
+            // metrics Mutex on every request).
+            let slow_us = obs.slow_us();
+            for (r, pred) in group.iter().zip(&preds) {
+                if pred.is_none() {
+                    continue; // error responses carry no latency sample
+                }
+                let total_us = (done - r.submitted).as_micros() as u64;
+                let queue_us = (exec_started - r.submitted).as_micros() as u64;
+                obs.latency_us.record(total_us);
+                obs.tier_latency_us[tier.index()].record(total_us);
+                obs.tier_queue_us[tier.index()].record(queue_us);
+                obs.tier_exec_us[tier.index()].record(exec_us);
+                if slow_us > 0 && total_us >= slow_us {
+                    log::warn!(
+                        "slow request rid={} tier={} total_us={total_us} queue_us={queue_us} \
+                         exec_us={exec_us} batch={n} backend={backend_name}",
+                        obs::format_rid(r.rid),
+                        tier.name(),
+                    );
+                }
             }
             for (i, r) in group.into_iter().enumerate() {
                 let row = logits[i * classes..(i + 1) * classes].to_vec();
@@ -746,19 +899,43 @@ mod tests {
     #[test]
     fn metrics_math() {
         let mut m = Metrics::default();
-        m.latencies_us = vec![100.0, 200.0, 300.0, 400.0, 1000.0];
-        m.batch_sizes = vec![2.0, 3.0];
+        for v in [100u64, 200, 300, 400, 1000] {
+            m.obs.latency_us.record(v);
+        }
+        m.batches = 2;
+        m.batch_size_sum = 5.0;
         m.requests = 5;
         m.started = Some(Instant::now() - Duration::from_secs(1));
         m.finished = Some(Instant::now());
-        assert_eq!(m.p50_latency_us(), 300.0);
-        assert!(m.p95_latency_us() >= 400.0);
+        // histogram percentiles are bucket-resolution: the estimate must
+        // land in the same log bucket as the exact sample percentile
+        use crate::obs::bucket_index;
+        assert_eq!(bucket_index(m.p50_latency_us() as u64), bucket_index(300));
+        assert!(m.p95_latency_us() >= m.p50_latency_us());
         assert!(m.p99_latency_us() >= m.p50_latency_us());
+        assert_eq!(bucket_index(m.p99_latency_us() as u64), bucket_index(1000));
         assert!((m.mean_batch() - 2.5).abs() < 1e-9);
         assert!(m.throughput_rps() > 4.0 && m.throughput_rps() < 6.0);
         let report = m.report(&MacroSpec::default());
         assert!(report.contains("requests=5"));
         assert!(report.contains("rejected=0"));
+    }
+
+    #[test]
+    fn latency_recording_is_flat_memory_over_100k_samples() {
+        // the old per-sample Vec rings grew with traffic; the histogram
+        // registry must not allocate at all while recording
+        let m = Metrics::default();
+        let before = m.obs.heap_bytes();
+        for i in 0..100_000u64 {
+            m.obs.latency_us.record(1 + i % 10_000);
+            m.obs.tier_latency_us[(i % 3) as usize].record(1 + i % 10_000);
+            m.obs.tier_queue_us[(i % 3) as usize].record(i % 500);
+        }
+        assert_eq!(m.obs.latency_us.count(), 100_000);
+        assert_eq!(m.obs.heap_bytes(), before, "recording must never allocate");
+        assert!(m.p50_latency_us() > 0.0);
+        assert!(m.tier(Tier::Gold).p99_latency_us() > 0.0);
     }
 
     #[test]

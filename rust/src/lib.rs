@@ -27,6 +27,9 @@
 //! * [`serve`] — the network surface: HTTP/1.1 gateway, per-tier SLO
 //!   queues and the dynamic precision governor (tier → OSA loss
 //!   profile, degraded under load, restored on drain);
+//! * [`obs`] — the observability substrate: per-request trace spans in
+//!   a lock-free ring, bounded atomic latency histograms, Chrome
+//!   trace-event export and Prometheus text exposition;
 //! * [`energy`] — per-component energy/area/latency model calibrated to
 //!   the paper's reported breakdowns, producing TOPS/W;
 //! * substrates built in-repo because the offline crate mirror only
@@ -50,6 +53,7 @@ pub mod figures;
 pub mod io;
 pub mod macrosim;
 pub mod nn;
+pub mod obs;
 pub mod osa;
 pub mod ptest;
 pub mod quant;

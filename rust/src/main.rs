@@ -122,6 +122,17 @@ fn main() -> Result<()> {
                         "modeled macro power budget in watts (governor)",
                         None,
                     ));
+                    o.push(Opt::value(
+                        "slow-ms",
+                        "log requests slower than this many milliseconds",
+                        None,
+                    ));
+                    o.push(Opt::value(
+                        "trace-capacity",
+                        "span ring capacity for /debug/trace (power of two)",
+                        None,
+                    ));
+                    o.push(Opt::flag("no-trace", "disable per-request span tracing"));
                     o
                 },
             },
@@ -207,6 +218,11 @@ fn main() -> Result<()> {
                 cfg.governor = false;
             }
             cfg.energy_budget_w = args.get_f64("energy-budget-w", cfg.energy_budget_w)?;
+            cfg.obs_slow_ms = args.get_u64("slow-ms", cfg.obs_slow_ms)?;
+            cfg.obs_trace_capacity = args.get_usize("trace-capacity", cfg.obs_trace_capacity)?;
+            if args.flag("no-trace") {
+                cfg.obs_trace = false;
+            }
             if let Some(listen) = args.get("listen") {
                 // gateway mode: serve HTTP until the process is killed.
                 // Fall back to the synthetic graph when the AOT artifacts
@@ -231,7 +247,8 @@ fn main() -> Result<()> {
                 println!("gateway listening on http://{addr}");
                 println!("  GET  http://{addr}/healthz");
                 println!("  GET  http://{addr}/v1/version");
-                println!("  GET  http://{addr}/metrics");
+                println!("  GET  http://{addr}/metrics      (?format=prometheus for text)");
+                println!("  GET  http://{addr}/debug/trace  (?n=K — Chrome trace-event spans)");
                 println!(
                     "  curl -s -X POST http://{addr}/v2/infer -d \
                      '{{\"image\":[...3072 uint8...],\"options\":{{\"tier\":\"gold\",\

@@ -15,12 +15,14 @@ pub mod data;
 use crate::energy::EnergyAccount;
 use crate::io::json::JsonValue;
 use crate::io::rten;
+use crate::obs::LayerSample;
 use crate::quant::quantize_act;
 use crate::sched::im2col::{im2col, ConvShape};
 use crate::sched::{GemmEngine, GemmResult};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Instant;
 
 /// One quantized conv layer (weights in im2col `[cout, kh*kw*cin]` layout).
 #[derive(Debug, Clone)]
@@ -225,13 +227,17 @@ impl FTensor {
     }
 }
 
-/// Per-forward statistics: energy, boundary usage, per-layer B_D/A maps.
+/// Per-forward statistics: energy, boundary usage, per-layer B_D/A maps,
+/// and per-layer timing/energy attribution for the observability spans.
 #[derive(Debug, Clone, Default)]
 pub struct ForwardStats {
     pub account: EnergyAccount,
     pub b_hist: [u64; 16],
     /// (layer name, out_h, out_w, n_tiles, bda `[n*ho*wo, n_tiles]`).
     pub bda_maps: Vec<(String, usize, usize, usize, Vec<i32>)>,
+    /// One sample per executed layer; `offset_us` is relative to the
+    /// start of the forward pass (the caller anchors it in wall time).
+    pub layers: Vec<LayerSample>,
 }
 
 impl ForwardStats {
@@ -281,13 +287,17 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
     }
 
     /// Quantize a float buffer and run one conv through the engine.
+    /// `fwd_start` anchors the layer's timing sample to the forward pass.
     fn qconv(
         &mut self,
         conv: &QConv,
         x: &FTensor,
         layer_idx: u64,
         stats: &mut ForwardStats,
+        fwd_start: Instant,
     ) -> Result<FTensor> {
+        let t0 = Instant::now();
+        let offset_us = t0.duration_since(fwd_start).as_micros() as u64;
         let shape = ConvShape {
             n: x.n,
             h: x.h,
@@ -315,6 +325,13 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                 out.data[row * conv.cout + c] = acc as f32 * scale;
             }
         }
+        stats.layers.push(LayerSample {
+            name: conv.name.clone(),
+            offset_us,
+            dur_us: t0.elapsed().as_micros() as u64,
+            energy_fj: r.account.breakdown.total_fj(),
+            macro_ops: r.account.macro_ops,
+        });
         Ok(out)
     }
 
@@ -325,6 +342,7 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
         if images.len() != n * ih * iw * ic {
             bail!("expected {} image bytes, got {}", n * ih * iw * ic, images.len());
         }
+        let fwd_start = Instant::now();
         let mut stats = ForwardStats::default();
         let mut h = FTensor::new(n, ih, iw, ic);
         for (dst, &src) in h.data.iter_mut().zip(images) {
@@ -350,7 +368,7 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                     } else {
                         t.as_ref().context("conv2 before conv1")?
                     };
-                    let mut out = self.qconv(conv, input, layer_idx, &mut stats)?;
+                    let mut out = self.qconv(conv, input, layer_idx, &mut stats, fwd_start)?;
                     layer_idx += 1;
                     if *relu {
                         for v in &mut out.data {
@@ -366,7 +384,7 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                 Op::QConvShortcut { name } => {
                     let conv = self.graph.conv(name)?;
                     let input = block_input.as_ref().context("shortcut outside block")?;
-                    let out = self.qconv(conv, input, layer_idx, &mut stats)?;
+                    let out = self.qconv(conv, input, layer_idx, &mut stats, fwd_start)?;
                     layer_idx += 1;
                     shortcut = Some(out);
                 }
@@ -405,6 +423,8 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                     gap = Some(pooled);
                 }
                 Op::QFc => {
+                    let t0 = Instant::now();
+                    let fc_offset_us = t0.duration_since(fwd_start).as_micros() as u64;
                     let fc = &self.graph.fc;
                     let input = gap.take().context("fc before gap")?;
                     let scale = (fc.act_scale as f64 * fc.w_scale as f64) as f32;
@@ -420,6 +440,14 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                         }
                     }
                     logits = Some(out);
+                    // the FC head runs exact on the host — no macro energy
+                    stats.layers.push(LayerSample {
+                        name: "fc".to_string(),
+                        offset_us: fc_offset_us,
+                        dur_us: t0.elapsed().as_micros() as u64,
+                        energy_fj: 0.0,
+                        macro_ops: 0,
+                    });
                 }
             }
         }
@@ -526,6 +554,12 @@ mod tests {
         let (logits, stats) = exec.forward(&img, 1).unwrap();
         assert_eq!(logits.len(), graph.num_classes);
         assert!(stats.account.macro_ops > 0);
+        // per-layer attribution: one sample per conv plus the FC head
+        assert_eq!(stats.layers.len(), graph.convs.len() + 1);
+        assert_eq!(stats.layers[0].name, "stem");
+        assert_eq!(stats.layers.last().unwrap().name, "fc");
+        assert!(stats.layers[0].energy_fj > 0.0);
+        assert_eq!(stats.layers[0].macro_ops, stats.account.macro_ops);
         // forward reused the preplanned layers — no extra packing
         let s = plans.stats();
         assert_eq!(s.misses as usize, graph.convs.len(), "forward re-packed a layer");

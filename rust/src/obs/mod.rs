@@ -1,0 +1,1417 @@
+//! Observability substrate (DESIGN.md §13): request tracing, bounded
+//! atomic histograms and Prometheus text exposition — std-only, like
+//! the rest of the crate.
+//!
+//! Three layers, each independently testable:
+//!
+//! * **Histograms** — [`Histogram`] is a log-bucketed `AtomicU64` array
+//!   (4 sub-buckets per power of two, ≤25% relative bucket width).
+//!   Recording is one `fetch_add` per bucket — wait-free, no `Mutex`,
+//!   fixed memory forever.  [`HistSnapshot`] is the plain-data copy a
+//!   reporter walks for percentiles; snapshots merge across tiers and
+//!   stages.  This replaces the coordinator's `Vec<f64>` sample rings.
+//! * **Spans** — every request gets a [`RequestId`] minted at accept
+//!   (or adopted from an inbound `X-Request-Id`).  Stage spans
+//!   (`parse → admit → queue → coalesce → exec → write`, plus
+//!   per-layer `layer` sub-spans from the executor) land in a
+//!   fixed-capacity seqlock ring ([`SpanRing`]): writers never block —
+//!   a slot mid-write is simply skipped and counted as dropped.  The
+//!   tail exports as Chrome `trace_event` JSON (`GET /debug/trace`).
+//! * **Exposition** — [`PromWriter`] renders counters/gauges/histograms
+//!   in the Prometheus text format (families grouped, labels escaped,
+//!   non-finite values scrubbed to 0), and [`parse_exposition`] is the
+//!   promtool-free validator CI round-trips the output through.
+//!
+//! [`ServerObs`] is the registry instance the coordinator and gateway
+//! share: one `Arc`, all interior atomics, cloned freely onto the hot
+//! path.
+
+use crate::io::json::{arr, num, obj, s, JsonValue};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Monotonic process clock
+// ---------------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the first call in this process — the common time
+/// base every span uses, so trace events from different threads align.
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Map non-finite floats to 0.0 — the single scrub every emitted gauge
+/// goes through (JSON `/metrics` and Prometheus alike), so a NaN from a
+/// zero-cycle energy account can never poison a scrape.
+pub fn scrub(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request ids
+// ---------------------------------------------------------------------------
+
+/// Format a request id the way it appears in `X-Request-Id` and logs.
+pub fn format_rid(rid: u64) -> String {
+    format!("req-{rid:016x}")
+}
+
+/// Parse an id previously produced by [`format_rid`] (inbound
+/// correlation); anything else is treated as foreign and re-minted.
+pub fn parse_rid(text: &str) -> Option<u64> {
+    let hex = text.strip_prefix("req-")?;
+    if hex.len() != 16 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucketed atomic histogram
+// ---------------------------------------------------------------------------
+
+/// Sub-buckets per power of two: 4 → worst-case relative bucket width
+/// of 25%, and 252 buckets cover the full `u64` range.
+const SUBS: usize = 4;
+/// Values below this are their own exact bucket.
+const LINEAR: u64 = 8;
+/// Total bucket count: 8 linear + 4 per octave for exponents 3..=63.
+pub const HIST_BUCKETS: usize = LINEAR as usize + (64 - 3) * SUBS; // 252
+
+/// Bucket index for a value (monotone in `v`).
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros() as usize; // >= 3
+    let sub = ((v >> (exp - 2)) & (SUBS as u64 - 1)) as usize;
+    LINEAR as usize + (exp - 3) * SUBS + sub
+}
+
+/// Smallest value that lands in bucket `i` (saturates past `u64::MAX`).
+pub fn bucket_lower(i: usize) -> u64 {
+    if i < LINEAR as usize {
+        return i as u64;
+    }
+    let k = i - LINEAR as usize;
+    let exp = 3 + k / SUBS;
+    let sub = (k % SUBS) as u64;
+    if exp >= 64 {
+        return u64::MAX;
+    }
+    (1u64 << exp) + (sub << (exp - 2))
+}
+
+/// Largest value that lands in bucket `i` (inclusive upper bound — the
+/// Prometheus `le` of the bucket).
+pub fn bucket_upper(i: usize) -> u64 {
+    if i + 1 >= HIST_BUCKETS {
+        return u64::MAX;
+    }
+    bucket_lower(i + 1).saturating_sub(1)
+}
+
+/// Fixed-memory log-bucketed histogram; `record` is one relaxed
+/// `fetch_add` per field — wait-free and lock-free on every path.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // array-init idiom
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (wait-free; safe from any thread).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-data copy for reporting (and merging).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = vec![0u64; HIST_BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            counts[i] = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]; mergeable across tiers and
+/// stages (bucket-wise add), walkable for percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct HistSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Bucket-wise merge (`self += other`) — tiers into an aggregate,
+    /// stages into a total.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Percentile estimate (bucket midpoint), `q` in [0, 1].  Empty
+    /// snapshots report 0.0 — never NaN.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = bucket_lower(i);
+                let hi = bucket_upper(i);
+                return lo as f64 + (hi.saturating_sub(lo)) as f64 / 2.0;
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1) as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace spans
+// ---------------------------------------------------------------------------
+
+/// Request lifecycle stage a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Socket read + HTTP parse (includes read wait in threaded mode).
+    Parse = 0,
+    /// Validation + tier-queue admission in `submit_with_sink`.
+    Admit = 1,
+    /// Enqueue → dispatch wait in the tier queue.
+    Queue = 2,
+    /// First-enqueue → batch dispatch (the coalescing window actually
+    /// used; overlaps the member requests' queue spans by design).
+    Coalesce = 3,
+    /// Whole-batch forward pass through the engine.
+    Exec = 4,
+    /// One layer's GEMM inside an exec span (label = layer name).
+    Layer = 5,
+    /// Response serialization + socket write.
+    Write = 6,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::Parse,
+        Stage::Admit,
+        Stage::Queue,
+        Stage::Coalesce,
+        Stage::Exec,
+        Stage::Layer,
+        Stage::Write,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::Coalesce => "coalesce",
+            Stage::Exec => "exec",
+            Stage::Layer => "layer",
+            Stage::Write => "write",
+        }
+    }
+
+    fn from_u8(x: u8) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| *s as u8 == x)
+    }
+}
+
+/// One exported span (a decoded ring slot).
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub rid: u64,
+    pub stage: Stage,
+    /// Tier index (`Tier::index()`), 255 when not applicable.
+    pub tier: u8,
+    /// Digital↔analog boundary for exec spans, 255 when not applicable.
+    pub boundary: u8,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Backend name for exec spans, layer name for layer spans.
+    pub label: String,
+}
+
+const LABEL_BYTES: usize = 16;
+
+struct Slot {
+    /// Seqlock: even = stable, odd = mid-write.
+    seq: AtomicU64,
+    rid: AtomicU64,
+    /// stage (8) | tier (8) | boundary (8).
+    meta: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    label: [AtomicU64; 2],
+}
+
+/// Fixed-capacity lock-free span ring.  Writers claim a slot with one
+/// CAS; if another writer holds it (a full wrap-around race) the span
+/// is dropped and counted instead of blocking.  Readers validate the
+/// per-slot sequence and skip torn slots.
+pub struct SpanRing {
+    slots: Vec<Slot>,
+    cursor: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(16);
+        let slots = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                rid: AtomicU64::new(0),
+                meta: AtomicU64::new(0),
+                start_us: AtomicU64::new(0),
+                dur_us: AtomicU64::new(0),
+                label: [AtomicU64::new(0), AtomicU64::new(0)],
+            })
+            .collect();
+        SpanRing { slots, cursor: AtomicU64::new(0), dropped: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans recorded since start (monotone; `min(recorded, capacity)`
+    /// slots are retained).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Acquire)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Exact bytes this ring occupies — constant for its lifetime (the
+    /// flat-memory regression test asserts on this).
+    pub fn heap_bytes(&self) -> usize {
+        self.slots.len() * std::mem::size_of::<Slot>()
+    }
+
+    #[allow(clippy::too_many_arguments)] // mirrors the packed slot layout
+    pub fn record(
+        &self,
+        rid: u64,
+        stage: Stage,
+        tier: u8,
+        boundary: u8,
+        start_us: u64,
+        dur_us: u64,
+        label: &str,
+    ) {
+        let idx = (self.cursor.fetch_add(1, Ordering::AcqRel) as usize) % self.slots.len();
+        let slot = &self.slots[idx];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        if seq & 1 == 1
+            || slot
+                .seq
+                .compare_exchange(seq, seq + 1, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        slot.rid.store(rid, Ordering::Relaxed);
+        let meta = stage as u64 | (tier as u64) << 8 | (boundary as u64) << 16;
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur_us, Ordering::Relaxed);
+        let mut bytes = [0u8; LABEL_BYTES];
+        let lb = label.as_bytes();
+        let n = lb.len().min(LABEL_BYTES);
+        bytes[..n].copy_from_slice(&lb[..n]);
+        slot.label[0].store(u64::from_le_bytes(bytes[..8].try_into().unwrap()), Ordering::Relaxed);
+        slot.label[1].store(u64::from_le_bytes(bytes[8..].try_into().unwrap()), Ordering::Relaxed);
+        slot.seq.store(seq + 2, Ordering::Release);
+    }
+
+    fn read_slot(&self, idx: usize) -> Option<SpanRecord> {
+        let slot = &self.slots[idx];
+        for _ in 0..4 {
+            let s0 = slot.seq.load(Ordering::Acquire);
+            if s0 & 1 == 1 {
+                continue;
+            }
+            let rid = slot.rid.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let start_us = slot.start_us.load(Ordering::Relaxed);
+            let dur_us = slot.dur_us.load(Ordering::Relaxed);
+            let l0 = slot.label[0].load(Ordering::Relaxed);
+            let l1 = slot.label[1].load(Ordering::Relaxed);
+            if slot.seq.load(Ordering::Acquire) != s0 {
+                continue;
+            }
+            let stage = Stage::from_u8((meta & 0xff) as u8)?;
+            let mut bytes = [0u8; LABEL_BYTES];
+            bytes[..8].copy_from_slice(&l0.to_le_bytes());
+            bytes[8..].copy_from_slice(&l1.to_le_bytes());
+            let end = bytes.iter().position(|&b| b == 0).unwrap_or(LABEL_BYTES);
+            let label = String::from_utf8_lossy(&bytes[..end]).into_owned();
+            return Some(SpanRecord {
+                rid,
+                stage,
+                tier: ((meta >> 8) & 0xff) as u8,
+                boundary: ((meta >> 16) & 0xff) as u8,
+                start_us,
+                dur_us,
+                label,
+            });
+        }
+        None
+    }
+
+    /// The most recent `n` spans in insertion order (oldest first).
+    pub fn tail(&self, n: usize) -> Vec<SpanRecord> {
+        let cur = self.cursor.load(Ordering::Acquire);
+        let have = cur.min(self.slots.len() as u64);
+        let take = (n as u64).min(have);
+        let mut out = Vec::with_capacity(take as usize);
+        for i in (cur - take)..cur {
+            if let Some(rec) = self.read_slot((i % self.slots.len() as u64) as usize) {
+                out.push(rec);
+            }
+        }
+        out
+    }
+}
+
+/// One layer's contribution to a forward pass, reported by the
+/// executor: GEMM wall time (offset-relative so the coordinator can
+/// anchor it inside the exec span) plus energy attribution.
+#[derive(Debug, Clone)]
+pub struct LayerSample {
+    pub name: String,
+    /// Start offset from the beginning of the forward pass.
+    pub offset_us: u64,
+    pub dur_us: u64,
+    pub energy_fj: f64,
+    pub macro_ops: u64,
+}
+
+/// Accumulated per-layer attribution (all atomic; updated once per
+/// batch, read by both exposition formats).
+#[derive(Default)]
+pub struct LayerStat {
+    pub calls: AtomicU64,
+    pub exec_us: AtomicU64,
+    pub energy_fj: AtomicU64,
+    pub macro_ops: AtomicU64,
+}
+
+/// Plain-data copy of a [`LayerStat`].
+#[derive(Debug, Clone, Default)]
+pub struct LayerStatSnap {
+    pub calls: u64,
+    pub exec_us: u64,
+    pub energy_j: f64,
+    pub macro_ops: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The shared registry
+// ---------------------------------------------------------------------------
+
+/// Everything the serving stack records into, one `Arc` shared by the
+/// gateway, the coordinator workers and the executor: request-id mint,
+/// latency/stage histograms, the span ring and per-layer attribution.
+/// Every hot-path method is lock-free (the per-layer map takes a
+/// `Mutex` once per *batch*, never per request).
+pub struct ServerObs {
+    next_rid: AtomicU64,
+    trace_on: AtomicBool,
+    slow_us: AtomicU64,
+    /// Aggregate request latency (submit → response sent).
+    pub latency_us: Histogram,
+    pub tier_latency_us: [Histogram; 3],
+    pub tier_queue_us: [Histogram; 3],
+    pub tier_exec_us: [Histogram; 3],
+    pub tier_write_us: [Histogram; 3],
+    /// Socket read + parse time per HTTP request (all routes).
+    pub parse_us: Histogram,
+    ring: SpanRing,
+    layers: Mutex<BTreeMap<String, Arc<LayerStat>>>,
+}
+
+impl Default for ServerObs {
+    fn default() -> Self {
+        Self::new(4096, 250, true)
+    }
+}
+
+impl std::fmt::Debug for ServerObs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerObs")
+            .field("trace_on", &self.trace_enabled())
+            .field("trace_capacity", &self.ring.capacity())
+            .field("spans_recorded", &self.ring.recorded())
+            .field("latency_count", &self.latency_us.count())
+            .finish_non_exhaustive()
+    }
+}
+
+impl ServerObs {
+    pub fn new(trace_capacity: usize, slow_ms: u64, trace_on: bool) -> Self {
+        // Seed the id mint from wall time so ids from distinct processes
+        // do not collide in merged logs; low bits count sequentially.
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        ServerObs {
+            next_rid: AtomicU64::new((seed | 1) << 20),
+            trace_on: AtomicBool::new(trace_on),
+            slow_us: AtomicU64::new(slow_ms.saturating_mul(1000)),
+            latency_us: Histogram::new(),
+            tier_latency_us: std::array::from_fn(|_| Histogram::new()),
+            tier_queue_us: std::array::from_fn(|_| Histogram::new()),
+            tier_exec_us: std::array::from_fn(|_| Histogram::new()),
+            tier_write_us: std::array::from_fn(|_| Histogram::new()),
+            parse_us: Histogram::new(),
+            ring: SpanRing::new(trace_capacity),
+            layers: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Mint a fresh request id.
+    pub fn mint_rid(&self) -> u64 {
+        self.next_rid.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace_on.load(Ordering::Relaxed)
+    }
+
+    /// Toggle span collection at runtime (the overhead bench flips it).
+    pub fn set_trace_enabled(&self, on: bool) {
+        self.trace_on.store(on, Ordering::Relaxed);
+    }
+
+    /// Slow-request threshold in µs (0 disables the slow log line).
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us.load(Ordering::Relaxed)
+    }
+
+    /// Record one span (no-op unless tracing is enabled).
+    #[allow(clippy::too_many_arguments)] // mirrors the packed slot layout
+    pub fn span(
+        &self,
+        rid: u64,
+        stage: Stage,
+        tier: u8,
+        boundary: u8,
+        start_us: u64,
+        dur_us: u64,
+        label: &str,
+    ) {
+        if self.trace_enabled() {
+            self.ring.record(rid, stage, tier, boundary, start_us, dur_us, label);
+        }
+    }
+
+    pub fn spans_tail(&self, n: usize) -> Vec<SpanRecord> {
+        self.ring.tail(n)
+    }
+
+    pub fn trace_capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    pub fn spans_recorded(&self) -> u64 {
+        self.ring.recorded()
+    }
+
+    pub fn spans_dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    /// Total heap footprint of the telemetry stores — constant for the
+    /// registry's lifetime (histograms are inline arrays, the ring is
+    /// sized once); the flat-memory regression test pins this.
+    pub fn heap_bytes(&self) -> usize {
+        self.ring.heap_bytes()
+            + self
+                .layers
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, _)| k.len() + std::mem::size_of::<LayerStat>())
+                .sum::<usize>()
+    }
+
+    /// Fold a forward pass's per-layer samples into the attribution
+    /// table (one short `Mutex` hold per batch; the per-request record
+    /// path never sees it).
+    pub fn record_layers(&self, samples: &[LayerSample]) {
+        if samples.is_empty() {
+            return;
+        }
+        let stats: Vec<Arc<LayerStat>> = {
+            let mut map = self.layers.lock().unwrap();
+            samples
+                .iter()
+                .map(|smp| map.entry(smp.name.clone()).or_default().clone())
+                .collect()
+        };
+        for (smp, stat) in samples.iter().zip(stats) {
+            stat.calls.fetch_add(1, Ordering::Relaxed);
+            stat.exec_us.fetch_add(smp.dur_us, Ordering::Relaxed);
+            stat.energy_fj.fetch_add(smp.energy_fj.max(0.0) as u64, Ordering::Relaxed);
+            stat.macro_ops.fetch_add(smp.macro_ops, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-layer attribution snapshot, layer-name order.
+    pub fn layer_snapshot(&self) -> Vec<(String, LayerStatSnap)> {
+        self.layers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, st)| {
+                (
+                    name.clone(),
+                    LayerStatSnap {
+                        calls: st.calls.load(Ordering::Relaxed),
+                        exec_us: st.exec_us.load(Ordering::Relaxed),
+                        energy_j: st.energy_fj.load(Ordering::Relaxed) as f64 * 1e-15,
+                        macro_ops: st.macro_ops.load(Ordering::Relaxed),
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Render spans as a Chrome `trace_event` document (load it in
+/// `chrome://tracing` or Perfetto).  One timeline row per request id
+/// (`tid`), events sorted by start time.
+pub fn chrome_trace_doc(spans: &[SpanRecord]) -> JsonValue {
+    let mut sorted: Vec<&SpanRecord> = spans.iter().collect();
+    sorted.sort_by_key(|r| (r.start_us, r.stage as u8));
+    let events = sorted.into_iter().map(|r| {
+        let name = if r.label.is_empty() {
+            r.stage.name().to_string()
+        } else {
+            format!("{}:{}", r.stage.name(), r.label)
+        };
+        let mut args: Vec<(&str, JsonValue)> = vec![("request_id", s(&format_rid(r.rid)))];
+        if r.tier != u8::MAX {
+            args.push(("tier", num(r.tier as f64)));
+        }
+        if r.boundary != u8::MAX {
+            args.push(("boundary", num(r.boundary as f64)));
+        }
+        if !r.label.is_empty() {
+            args.push(("label", s(&r.label)));
+        }
+        obj(vec![
+            ("name", s(&name)),
+            ("cat", s(r.stage.name())),
+            ("ph", s("X")),
+            ("ts", num(r.start_us as f64)),
+            ("dur", num(r.dur_us as f64)),
+            ("pid", num(1.0)),
+            ("tid", num((r.rid & 0xffff_ffff) as f64)),
+            ("args", obj(args)),
+        ])
+    });
+    obj(vec![("traceEvents", arr(events)), ("displayTimeUnit", s("ms"))])
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition — writer
+// ---------------------------------------------------------------------------
+
+/// The exposition content type (`text/plain; version=0.0.4`).
+pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FamilyType {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl FamilyType {
+    fn name(&self) -> &'static str {
+        match self {
+            FamilyType::Counter => "counter",
+            FamilyType::Gauge => "gauge",
+            FamilyType::Histogram => "histogram",
+        }
+    }
+}
+
+struct Family {
+    name: String,
+    help: String,
+    ty: FamilyType,
+    lines: Vec<String>,
+}
+
+/// Prometheus text-format writer.  Samples may be appended in any
+/// order; `finish()` groups each family under one `# HELP`/`# TYPE`
+/// header (the format requires family lines to be contiguous).  All
+/// values pass through [`scrub`].
+#[derive(Default)]
+pub struct PromWriter {
+    families: Vec<Family>,
+    index: BTreeMap<String, usize>,
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn format_value(x: f64) -> String {
+    let x = scrub(x);
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn label_block(labels: &[(&str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut inner: Vec<String> = Vec::with_capacity(labels.len());
+    for (k, v) in labels {
+        inner.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    format!("{{{}}}", inner.join(","))
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn family(&mut self, name: &str, help: &str, ty: FamilyType) -> &mut Family {
+        let idx = *self.index.entry(name.to_string()).or_insert_with(|| {
+            self.families.push(Family {
+                name: name.to_string(),
+                help: help.to_string(),
+                ty,
+                lines: Vec::new(),
+            });
+            self.families.len() - 1
+        });
+        &mut self.families[idx]
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, String)], value: f64) {
+        let line = format!("{name}{} {}", label_block(labels), format_value(value));
+        self.family(name, help, FamilyType::Counter).lines.push(line);
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, String)], value: f64) {
+        let line = format!("{name}{} {}", label_block(labels), format_value(value));
+        self.family(name, help, FamilyType::Gauge).lines.push(line);
+    }
+
+    /// Emit a histogram family member: cumulative `_bucket{le=}` lines
+    /// over the non-empty buckets, then `+Inf`, `_sum` and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, String)],
+        h: &HistSnapshot,
+    ) {
+        let mut lines = Vec::new();
+        let mut cum = 0u64;
+        for (i, c) in h.counts.iter().enumerate() {
+            if *c == 0 {
+                continue;
+            }
+            cum += c;
+            let le = bucket_upper(i);
+            let le_text =
+                if le == u64::MAX { "+Inf".to_string() } else { format!("{le}") };
+            let mut ls: Vec<(&str, String)> = labels.to_vec();
+            ls.push(("le", le_text.clone()));
+            if le_text != "+Inf" {
+                lines.push(format!("{name}_bucket{} {cum}", label_block(&ls)));
+            }
+        }
+        let mut inf: Vec<(&str, String)> = labels.to_vec();
+        inf.push(("le", "+Inf".to_string()));
+        lines.push(format!("{name}_bucket{} {}", label_block(&inf), h.count));
+        lines.push(format!("{name}_sum{} {}", label_block(labels), format_value(h.sum as f64)));
+        lines.push(format!("{name}_count{} {}", label_block(labels), h.count));
+        self.family(name, help, FamilyType::Histogram).lines.extend(lines);
+    }
+
+    pub fn finish(self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} {}\n", f.name, f.ty.name()));
+            for line in &f.lines {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition — parser (the promtool-free lint)
+// ---------------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed exposition document.
+#[derive(Debug, Default)]
+pub struct Exposition {
+    pub samples: Vec<PromSample>,
+    /// `# TYPE` per family.
+    pub types: BTreeMap<String, String>,
+}
+
+impl Exposition {
+    /// All samples of one exact metric name.
+    pub fn metric(&self, name: &str) -> Vec<&PromSample> {
+        self.samples.iter().filter(|s| s.name == name).collect()
+    }
+
+    /// The value of the single sample matching `name` and all given
+    /// labels, if exactly one matches.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let hits: Vec<&PromSample> = self
+            .samples
+            .iter()
+            .filter(|s| {
+                s.name == name
+                    && labels.iter().all(|(k, v)| {
+                        s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                    })
+            })
+            .collect();
+        if hits.len() == 1 {
+            Some(hits[0].value)
+        } else {
+            None
+        }
+    }
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Base family name of a sample (strips histogram suffixes).
+fn family_of(name: &str) -> &str {
+    for suf in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suf) {
+            return base;
+        }
+    }
+    name
+}
+
+fn parse_label_pairs(text: &str, line_no: usize) -> Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let rest = &text[i..];
+        let eq = rest.find('=').ok_or(format!("line {line_no}: label without '='"))?;
+        let name = rest[..eq].trim();
+        if !valid_label_name(name) {
+            return Err(format!("line {line_no}: bad label name {name:?}"));
+        }
+        i += eq + 1;
+        if bytes.get(i) != Some(&b'"') {
+            return Err(format!("line {line_no}: label value must be quoted"));
+        }
+        i += 1;
+        let mut value = String::new();
+        loop {
+            match bytes.get(i) {
+                None => return Err(format!("line {line_no}: unterminated label value")),
+                Some(b'"') => {
+                    i += 1;
+                    break;
+                }
+                Some(b'\\') => {
+                    match bytes.get(i + 1) {
+                        Some(b'\\') => value.push('\\'),
+                        Some(b'"') => value.push('"'),
+                        Some(b'n') => value.push('\n'),
+                        other => {
+                            return Err(format!("line {line_no}: bad escape {other:?}"));
+                        }
+                    }
+                    i += 2;
+                }
+                Some(_) => {
+                    let c_start = i;
+                    while i < bytes.len() && bytes[i] != b'"' && bytes[i] != b'\\' {
+                        i += 1;
+                    }
+                    value.push_str(&text[c_start..i]);
+                }
+            }
+        }
+        labels.push((name.to_string(), value));
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            None => break,
+            Some(c) => {
+                return Err(format!("line {line_no}: unexpected {:?} after label", *c as char))
+            }
+        }
+    }
+    Ok(labels)
+}
+
+fn parse_prom_value(text: &str, line_no: usize) -> Result<f64, String> {
+    match text {
+        "+Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        other => other
+            .parse::<f64>()
+            .map_err(|_| format!("line {line_no}: bad sample value {other:?}")),
+    }
+}
+
+/// Parse + validate a Prometheus text exposition.  Checks: name and
+/// label syntax, numeric values, `# TYPE` known and unique, family
+/// lines contiguous, histogram `le` bucket counts cumulative and
+/// `_count` consistent with the `+Inf` bucket.  This is the CI lint —
+/// the gateway's output must round-trip through it.
+pub fn parse_exposition(text: &str) -> Result<Exposition, String> {
+    let mut out = Exposition::default();
+    let mut closed: Vec<String> = Vec::new(); // families whose block ended
+    let mut current: Option<String> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            match parts.next() {
+                Some("TYPE") => {
+                    let name = parts.next().ok_or(format!("line {line_no}: TYPE without name"))?;
+                    let ty = parts.next().ok_or(format!("line {line_no}: TYPE without kind"))?;
+                    if !valid_metric_name(name) {
+                        return Err(format!("line {line_no}: bad metric name {name:?}"));
+                    }
+                    if !["counter", "gauge", "histogram", "summary", "untyped"].contains(&ty) {
+                        return Err(format!("line {line_no}: unknown TYPE {ty:?}"));
+                    }
+                    if out.types.insert(name.to_string(), ty.to_string()).is_some() {
+                        return Err(format!("line {line_no}: duplicate TYPE for {name}"));
+                    }
+                    if let Some(cur) = current.take() {
+                        closed.push(cur);
+                    }
+                    if closed.iter().any(|c| c == name) {
+                        return Err(format!("line {line_no}: family {name} not contiguous"));
+                    }
+                    current = Some(name.to_string());
+                }
+                Some("HELP") => {
+                    let name = parts.next().ok_or(format!("line {line_no}: HELP without name"))?;
+                    if !valid_metric_name(name) {
+                        return Err(format!("line {line_no}: bad metric name {name:?}"));
+                    }
+                }
+                _ => {} // free-form comment
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // comment without space — tolerated
+        }
+        // sample: name[{labels}] value [timestamp]
+        let (name_part, rest) = match line.find(['{', ' ']) {
+            Some(pos) => (&line[..pos], &line[pos..]),
+            None => return Err(format!("line {line_no}: sample without value")),
+        };
+        if !valid_metric_name(name_part) {
+            return Err(format!("line {line_no}: bad metric name {name_part:?}"));
+        }
+        let (labels, value_text) = if let Some(inner) = rest.strip_prefix('{') {
+            let close = inner.rfind('}').ok_or(format!("line {line_no}: unterminated labels"))?;
+            (parse_label_pairs(&inner[..close], line_no)?, inner[close + 1..].trim())
+        } else {
+            (Vec::new(), rest.trim())
+        };
+        let mut fields = value_text.split_whitespace();
+        let value_field =
+            fields.next().ok_or(format!("line {line_no}: sample without value"))?;
+        let value = parse_prom_value(value_field, line_no)?;
+        if let Some(ts) = fields.next() {
+            ts.parse::<i64>().map_err(|_| format!("line {line_no}: bad timestamp {ts:?}"))?;
+        }
+        if fields.next().is_some() {
+            return Err(format!("line {line_no}: trailing garbage"));
+        }
+        let fam = family_of(name_part).to_string();
+        match &current {
+            Some(cur) if *cur == fam => {}
+            _ => {
+                let seen = closed.iter().any(|c| *c == fam)
+                    || out.types.contains_key(&fam) && current.as_deref() != Some(fam.as_str());
+                if seen {
+                    return Err(format!("line {line_no}: family {fam} not contiguous"));
+                }
+                if let Some(cur) = current.take() {
+                    closed.push(cur);
+                }
+                current = Some(fam.clone());
+            }
+        }
+        out.samples.push(PromSample {
+            name: name_part.to_string(),
+            labels,
+            value,
+        });
+    }
+    validate_histograms(&out)?;
+    Ok(out)
+}
+
+/// Histogram-specific checks: per-labelset `le` buckets must be
+/// strictly increasing with cumulative counts, and `_count` must equal
+/// the `+Inf` bucket.
+fn validate_histograms(doc: &Exposition) -> Result<(), String> {
+    let mut hist_families: Vec<&String> = Vec::new();
+    for (name, ty) in &doc.types {
+        if ty == "histogram" {
+            hist_families.push(name);
+        }
+    }
+    for fam in hist_families {
+        let bucket_name = format!("{fam}_bucket");
+        // group buckets by labels-minus-le
+        let mut groups: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+        for smp in doc.metric(&bucket_name) {
+            let mut le = None;
+            let mut key_labels: Vec<String> = Vec::new();
+            for (k, v) in &smp.labels {
+                if k == "le" {
+                    le = Some(parse_prom_value(v, 0).map_err(|_| format!("{fam}: bad le {v:?}"))?);
+                } else {
+                    key_labels.push(format!("{k}={v}"));
+                }
+            }
+            let le = le.ok_or(format!("{fam}: bucket without le"))?;
+            groups.entry(key_labels.join(",")).or_default().push((le, smp.value));
+        }
+        for (key, buckets) in &groups {
+            let mut prev_le = f64::NEG_INFINITY;
+            let mut prev_cum = -1.0f64;
+            for (le, cum) in buckets {
+                if *le <= prev_le {
+                    return Err(format!("{fam}{{{key}}}: le not increasing"));
+                }
+                if *cum < prev_cum {
+                    return Err(format!("{fam}{{{key}}}: bucket counts not cumulative"));
+                }
+                prev_le = *le;
+                prev_cum = *cum;
+            }
+            let last = buckets.last().unwrap();
+            if !last.0.is_infinite() {
+                return Err(format!("{fam}{{{key}}}: missing +Inf bucket"));
+            }
+            // _count for the same labelset must match the +Inf bucket
+            let count_name = format!("{fam}_count");
+            for smp in doc.metric(&count_name) {
+                let smp_key: Vec<String> =
+                    smp.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                if smp_key.join(",") == *key && smp.value != last.1 {
+                    return Err(format!(
+                        "{fam}{{{key}}}: _count {} != +Inf bucket {}",
+                        smp.value, last.1
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_monotone_and_invertible() {
+        let mut prev = 0usize;
+        for v in [0u64, 1, 7, 8, 9, 15, 16, 100, 1_000, 65_535, 1 << 20, 1 << 40, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(i >= prev, "bucket index not monotone at {v}");
+            prev = i;
+            assert!(bucket_lower(i) <= v, "lower({i}) > {v}");
+            assert!(v <= bucket_upper(i), "upper({i}) < {v}");
+            assert!(i < HIST_BUCKETS);
+        }
+        // every bucket boundary maps back to its own bucket
+        for i in 0..HIST_BUCKETS {
+            let lo = bucket_lower(i);
+            if lo == u64::MAX {
+                continue;
+            }
+            assert_eq!(bucket_index(lo), i, "lower({i}) not in bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentile_within_one_bucket_of_exact() {
+        use crate::util::prng::SplitMix64;
+        let h = Histogram::new();
+        let mut g = SplitMix64::new(42);
+        let mut exact: Vec<u64> = Vec::new();
+        for _ in 0..10_000 {
+            // log-uniform-ish latencies, 1us .. ~1s
+            let v = 1u64 << g.next_below(21);
+            let v = v + g.next_below(v.max(1) as usize) as u64;
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 10_000);
+        for q in [0.5, 0.95, 0.99] {
+            let rank = ((q * exact.len() as f64).ceil() as usize).clamp(1, exact.len());
+            let exact_v = exact[rank - 1];
+            let est = snap.percentile(q) as u64;
+            let delta = bucket_index(exact_v).abs_diff(bucket_index(est));
+            assert!(delta <= 1, "p{q}: exact {exact_v} vs est {est} off by {delta} buckets");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_stream() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let c = Histogram::new();
+        for v in 0..1000u64 {
+            if v % 2 == 0 {
+                a.record(v * 3);
+            } else {
+                b.record(v * 3);
+            }
+            c.record(v * 3);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        let combined = c.snapshot();
+        assert_eq!(merged.count, combined.count);
+        assert_eq!(merged.sum, combined.sum);
+        assert_eq!(merged.counts, combined.counts);
+        assert_eq!(merged.percentile(0.5), combined.percentile(0.5));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero_not_nan() {
+        let snap = Histogram::new().snapshot();
+        assert_eq!(snap.percentile(0.5), 0.0);
+        assert_eq!(snap.mean(), 0.0);
+    }
+
+    #[test]
+    fn span_ring_tail_and_wraparound() {
+        let ring = SpanRing::new(16);
+        for i in 0..40u64 {
+            ring.record(i, Stage::Exec, 1, 8, i * 10, 5, "osa");
+        }
+        let tail = ring.tail(8);
+        assert_eq!(tail.len(), 8);
+        // insertion order, newest last
+        let rids: Vec<u64> = tail.iter().map(|r| r.rid).collect();
+        assert_eq!(rids, (32..40).collect::<Vec<u64>>());
+        assert_eq!(tail[0].stage, Stage::Exec);
+        assert_eq!(tail[0].tier, 1);
+        assert_eq!(tail[0].boundary, 8);
+        assert_eq!(tail[0].label, "osa");
+        assert_eq!(ring.recorded(), 40);
+        // asking for more than capacity returns at most capacity
+        assert_eq!(ring.tail(1000).len(), 16);
+    }
+
+    #[test]
+    fn span_ring_concurrent_writers_never_block() {
+        let ring = Arc::new(SpanRing::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ring = ring.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5_000u64 {
+                    ring.record(t << 32 | i, Stage::Queue, 0, u8::MAX, i, 1, "");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ring.recorded(), 20_000);
+        // every retained slot decodes (drops are counted, not corrupted)
+        let tail = ring.tail(64);
+        assert!(tail.len() + ring.dropped() as usize >= 1);
+        for r in &tail {
+            assert_eq!(r.stage, Stage::Queue);
+        }
+    }
+
+    #[test]
+    fn rid_format_round_trips() {
+        for rid in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_rid(&format_rid(rid)), Some(rid));
+        }
+        assert_eq!(parse_rid("not-a-rid"), None);
+        assert_eq!(parse_rid("req-123"), None); // short hex
+        assert_eq!(parse_rid("req-zzzzzzzzzzzzzzzz"), None);
+    }
+
+    #[test]
+    fn server_obs_mints_distinct_rids() {
+        let obs = ServerObs::new(64, 250, true);
+        let a = obs.mint_rid();
+        let b = obs.mint_rid();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn chrome_trace_doc_shape() {
+        let spans = vec![
+            SpanRecord {
+                rid: 7,
+                stage: Stage::Exec,
+                tier: 0,
+                boundary: 8,
+                start_us: 100,
+                dur_us: 50,
+                label: "osa".into(),
+            },
+            SpanRecord {
+                rid: 7,
+                stage: Stage::Parse,
+                tier: u8::MAX,
+                boundary: u8::MAX,
+                start_us: 10,
+                dur_us: 5,
+                label: String::new(),
+            },
+        ];
+        let doc = chrome_trace_doc(&spans);
+        let events = doc.get("traceEvents").and_then(JsonValue::as_array).unwrap();
+        assert_eq!(events.len(), 2);
+        // sorted by start time: parse first
+        assert_eq!(events[0].get("name").and_then(JsonValue::as_str), Some("parse"));
+        assert_eq!(events[1].get("name").and_then(JsonValue::as_str), Some("exec:osa"));
+        assert_eq!(events[0].get("ph").and_then(JsonValue::as_str), Some("X"));
+        let args = events[1].get("args").unwrap();
+        assert_eq!(
+            args.get("request_id").and_then(JsonValue::as_str),
+            Some("req-0000000000000007")
+        );
+        assert_eq!(args.get("boundary").and_then(JsonValue::as_f64), Some(8.0));
+    }
+
+    #[test]
+    fn prom_writer_round_trips_through_parser() {
+        let mut w = PromWriter::new();
+        w.counter("osa_requests_total", "Requests served.", &[], 42.0);
+        let gold = [("tier", "gold".to_string())];
+        w.counter("osa_tier_requests_total", "Per-tier requests.", &gold, 10.0);
+        let silver = [("tier", "silver".to_string())];
+        w.counter("osa_tier_requests_total", "Per-tier requests.", &silver, 30.0);
+        w.gauge("osa_queue_depth", "Queue depth.", &[("tier", "gold".into())], 3.0);
+        w.gauge("osa_watts", "Mean power.", &[], f64::NAN); // scrubbed to 0
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 5000] {
+            h.record(v);
+        }
+        w.histogram("osa_request_latency_microseconds", "Latency.", &gold, &h.snapshot());
+        let text = w.finish();
+        let doc = parse_exposition(&text).expect("writer output must parse");
+        assert_eq!(doc.value("osa_requests_total", &[]), Some(42.0));
+        assert_eq!(doc.value("osa_tier_requests_total", &[("tier", "silver")]), Some(30.0));
+        assert_eq!(doc.value("osa_watts", &[]), Some(0.0));
+        assert_eq!(
+            doc.types.get("osa_request_latency_microseconds").map(String::as_str),
+            Some("histogram")
+        );
+        assert_eq!(
+            doc.value("osa_request_latency_microseconds_count", &[("tier", "gold")]),
+            Some(4.0)
+        );
+        // label escaping survives the round trip
+        let mut w2 = PromWriter::new();
+        w2.gauge("osa_g", "g", &[("k", "a\"b\\c\nd".into())], 1.0);
+        let doc2 = parse_exposition(&w2.finish()).unwrap();
+        assert_eq!(doc2.samples[0].labels[0].1, "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn parser_rejects_malformed_expositions() {
+        // bad metric name
+        assert!(parse_exposition("9bad_name 1\n").is_err());
+        // unquoted label value
+        assert!(parse_exposition("m{tier=gold} 1\n").is_err());
+        // non-numeric value
+        assert!(parse_exposition("m abc\n").is_err());
+        // unknown TYPE
+        assert!(parse_exposition("# TYPE m doughnut\nm 1\n").is_err());
+        // duplicate TYPE
+        assert!(parse_exposition("# TYPE m counter\nm 1\n# TYPE m counter\n").is_err());
+        // non-contiguous family
+        assert!(parse_exposition("# TYPE a counter\na 1\n# TYPE b counter\nb 1\na 2\n").is_err());
+        // histogram with non-cumulative buckets
+        let bad_hist = "# TYPE h histogram\n\
+                        h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\nh_bucket{le=\"+Inf\"} 5\n\
+                        h_sum 9\nh_count 5\n";
+        assert!(parse_exposition(bad_hist).is_err());
+        // histogram _count disagreeing with +Inf
+        let bad_count = "# TYPE h histogram\n\
+                         h_bucket{le=\"+Inf\"} 5\nh_sum 9\nh_count 7\n";
+        assert!(parse_exposition(bad_count).is_err());
+        // and a well-formed one passes
+        let ok = "# HELP h help\n# TYPE h histogram\n\
+                  h_bucket{le=\"1\"} 2\nh_bucket{le=\"+Inf\"} 4\nh_sum 10\nh_count 4\n";
+        assert!(parse_exposition(ok).is_ok());
+    }
+
+    #[test]
+    fn layer_attribution_accumulates() {
+        let obs = ServerObs::new(64, 0, true);
+        let samples = vec![
+            LayerSample {
+                name: "conv1".into(),
+                offset_us: 0,
+                dur_us: 100,
+                energy_fj: 2.0e6,
+                macro_ops: 50,
+            },
+            LayerSample {
+                name: "fc".into(),
+                offset_us: 100,
+                dur_us: 20,
+                energy_fj: 1.0e6,
+                macro_ops: 10,
+            },
+        ];
+        obs.record_layers(&samples);
+        obs.record_layers(&samples);
+        let snap = obs.layer_snapshot();
+        assert_eq!(snap.len(), 2);
+        let conv = &snap.iter().find(|(n, _)| n == "conv1").unwrap().1;
+        assert_eq!(conv.calls, 2);
+        assert_eq!(conv.exec_us, 200);
+        assert_eq!(conv.macro_ops, 100);
+        assert!((conv.energy_j - 4.0e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scrub_maps_non_finite_to_zero() {
+        assert_eq!(scrub(f64::NAN), 0.0);
+        assert_eq!(scrub(f64::INFINITY), 0.0);
+        assert_eq!(scrub(f64::NEG_INFINITY), 0.0);
+        assert_eq!(scrub(1.5), 1.5);
+    }
+}

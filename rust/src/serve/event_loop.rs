@@ -45,6 +45,7 @@ use super::http::{ReadError, RequestParser};
 use super::qos::SubmitError;
 use crate::coordinator::{Response, Server};
 use crate::io::json::{obj, s};
+use crate::obs::{self, Stage};
 use anyhow::{Context, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -219,6 +220,14 @@ struct Conn {
     /// Currently armed poller interest `(read, write)`.
     interest: (bool, bool),
     pending: Option<PendingWork>,
+    /// Trace id of the request currently owning this connection
+    /// (0 = none); adopted from `X-Request-Id` or minted at parse.
+    rid: u64,
+    /// Tier index of the in-flight single dispatch (`u8::MAX` = N/A,
+    /// e.g. a batch mixing tiers or a non-inference route).
+    cur_tier: u8,
+    /// obs-clock µs when the current response write began.
+    write_start_us: u64,
 }
 
 struct EventLoop {
@@ -360,6 +369,9 @@ impl EventLoop {
                 drain_after_write: false,
                 interest: (true, false),
                 pending: None,
+                rid: 0,
+                cur_tier: u8::MAX,
+                write_start_us: 0,
             },
         );
         self.shared
@@ -505,11 +517,37 @@ impl EventLoop {
                     return;
                 }
                 Ok(Some(req)) => {
-                    conn.req_start = None;
+                    // Parse span: from the request's first byte to now.
+                    // A request that arrived whole in one read has no
+                    // recorded first byte — its parse duration is ~0.
+                    let parse_dur_us = conn
+                        .req_start
+                        .take()
+                        .map(|t0| now.saturating_duration_since(t0).as_micros() as u64)
+                        .unwrap_or(0);
                     self.stats.requests.fetch_add(1, Ordering::Relaxed);
                     let keep = self.opts.keep_alive
                         && req.wants_keep_alive()
                         && !self.shared.stop.load(Ordering::SeqCst);
+                    let telem = self.server.obs().clone();
+                    let rid = req
+                        .header("x-request-id")
+                        .and_then(obs::parse_rid)
+                        .unwrap_or_else(|| telem.mint_rid());
+                    let now_us = obs::now_us();
+                    telem.parse_us.record(parse_dur_us);
+                    telem.span(
+                        rid,
+                        Stage::Parse,
+                        u8::MAX,
+                        u8::MAX,
+                        now_us.saturating_sub(parse_dur_us),
+                        parse_dur_us,
+                        &req.path,
+                    );
+                    if let Some(c) = self.conns.get_mut(&token) {
+                        c.rid = rid;
+                    }
                     self.handle_request(token, &req, keep, now);
                 }
                 Err(e) => {
@@ -539,6 +577,7 @@ impl EventLoop {
         keep: bool,
         now: Instant,
     ) {
+        let rid = self.conns.get(&token).map_or(0, |c| c.rid);
         let outcome = {
             let rctx = RouteCtx {
                 server: &self.server,
@@ -560,11 +599,13 @@ impl EventLoop {
                     tag,
                     self.comp_tx.clone(),
                     self.wake_fn.clone(),
+                    rid,
                 ) {
                     Ok(()) => {
                         self.tags.insert(tag, (token, 0));
                         if let Some(conn) = self.conns.get_mut(&token) {
                             conn.phase = Phase::Dispatched;
+                            conn.cur_tier = tier.index() as u8;
                             conn.pending = Some(PendingWork::Single { api, keep, tag });
                         }
                         self.set_interest(token, false, false);
@@ -585,6 +626,8 @@ impl EventLoop {
     /// the same pipelining-into-the-coalescing-window property as the
     /// threaded submit/collect phases, without parking a thread.
     fn dispatch_batch(&mut self, token: u64, lines: Vec<BatchLine>, keep: bool, now: Instant) {
+        // every line of one NDJSON batch shares the HTTP request's id
+        let rid = self.conns.get(&token).map_or(0, |c| c.rid);
         let mut slots: Vec<(usize, Option<String>)> = Vec::with_capacity(lines.len());
         let mut tags = Vec::new();
         let mut remaining = 0usize;
@@ -601,6 +644,7 @@ impl EventLoop {
                         tag,
                         self.comp_tx.clone(),
                         self.wake_fn.clone(),
+                        rid,
                     ) {
                         Ok(()) => {
                             self.tags.insert(tag, (token, slots.len()));
@@ -687,10 +731,11 @@ impl EventLoop {
         let Some(conn) = self.conns.get_mut(&token) else { return };
         conn.out.clear();
         conn.out_pos = 0;
-        r.to_bytes(&mut conn.out);
+        r.to_bytes_with_rid(&mut conn.out, conn.rid);
         conn.keep_after_write = r.keep;
         conn.drain_after_write = drain;
         conn.phase = Phase::Writing;
+        conn.write_start_us = obs::now_us();
         conn.write_deadline = Some(now + WRITE_TIMEOUT);
         self.arm_timer(token);
         self.try_flush(token, now);
@@ -741,6 +786,24 @@ impl EventLoop {
     fn post_write(&mut self, token: u64, now: Instant) {
         let stop = self.shared.stop.load(Ordering::SeqCst);
         let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.rid != 0 {
+            let dur_us = obs::now_us().saturating_sub(conn.write_start_us);
+            let telem = self.server.obs();
+            telem.span(
+                conn.rid,
+                Stage::Write,
+                conn.cur_tier,
+                u8::MAX,
+                conn.write_start_us,
+                dur_us,
+                "",
+            );
+            if (conn.cur_tier as usize) < telem.tier_write_us.len() {
+                telem.tier_write_us[conn.cur_tier as usize].record(dur_us);
+            }
+            conn.rid = 0;
+            conn.cur_tier = u8::MAX;
+        }
         conn.write_deadline = None;
         conn.out.clear();
         conn.out_pos = 0;

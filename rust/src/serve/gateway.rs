@@ -51,6 +51,7 @@ use crate::coordinator::{Metrics, Server};
 use crate::engine::{Engine, InferOptions, InferRequest};
 use crate::io::json::{self, arr, num, obj, s, JsonValue};
 use crate::nn::QGraph;
+use crate::obs::{self, ServerObs, Stage};
 use crate::spec::MacroSpec;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -430,6 +431,18 @@ impl Gateway {
         }
     }
 
+    /// The serving telemetry registry (trace spans, latency/stage
+    /// histograms, layer attribution) — shared with the coordinator.
+    /// The pipeline bench toggles span collection through it to measure
+    /// tracing overhead.
+    pub fn obs(&self) -> Arc<ServerObs> {
+        match &self.inner {
+            Inner::Threaded { ctx, .. } => ctx.server.obs().clone(),
+            #[cfg(unix)]
+            Inner::Event { server, .. } => server.obs().clone(),
+        }
+    }
+
     /// Block until the serving loop exits (i.e. until shutdown or
     /// process death) — the `osa-hcim serve --listen` foreground mode.
     pub fn wait(mut self) {
@@ -606,8 +619,19 @@ impl Rendered {
 
     /// Serialize onto `out` in the gateway's exact wire format.
     pub(crate) fn to_bytes(&self, out: &mut Vec<u8>) {
-        let extra: Vec<(&str, &str)> =
+        self.to_bytes_with_rid(out, 0);
+    }
+
+    /// [`Rendered::to_bytes`] plus an `X-Request-Id` echo when the
+    /// response answers a traced request (rid 0 = none, e.g. the
+    /// admission 429 written before any request was parsed).
+    pub(crate) fn to_bytes_with_rid(&self, out: &mut Vec<u8>, rid: u64) {
+        let rid_text = if rid != 0 { Some(obs::format_rid(rid)) } else { None };
+        let mut extra: Vec<(&str, &str)> =
             self.extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        if let Some(t) = &rid_text {
+            extra.push(("X-Request-Id", t.as_str()));
+        }
         http::format_response_into(
             out,
             self.status,
@@ -625,8 +649,13 @@ impl Rendered {
 /// response N+1 would be consumed as the tail of N's body — so the
 /// connection loop MUST close on `false`, never keep serving.
 fn write_rendered(stream: &mut TcpStream, r: &Rendered) -> bool {
+    write_rendered_rid(stream, r, 0)
+}
+
+/// [`write_rendered`] tagging the response with its trace id.
+fn write_rendered_rid(stream: &mut TcpStream, r: &Rendered, rid: u64) -> bool {
     let mut out = Vec::new();
-    r.to_bytes(&mut out);
+    r.to_bytes_with_rid(&mut out, rid);
     match stream.write_all(&out).and_then(|_| stream.flush()) {
         Ok(()) => true,
         Err(e) => {
@@ -642,7 +671,7 @@ fn write_rendered(stream: &mut TcpStream, r: &Rendered) -> bool {
 /// exists.
 fn allowed_methods(path: &str) -> Option<&'static [&'static str]> {
     match path {
-        "/healthz" | "/metrics" | "/v1/version" => Some(&["GET"]),
+        "/healthz" | "/metrics" | "/v1/version" | "/debug/trace" => Some(&["GET"]),
         "/v1/infer" | "/v1/infer_batch" | "/v2/infer" => Some(&["POST"]),
         _ => None,
     }
@@ -723,8 +752,38 @@ pub(crate) fn route(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteO
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
         }
         ("GET", "/metrics") => {
-            let body = metrics_json_ev(ctx.server, ctx.spec, Some(ctx.stats), ctx.ev)
-                .to_string_compact();
+            let query = req.path.split('?').nth(1).unwrap_or("");
+            if wants_prometheus(query, req.header("accept")) {
+                let body = metrics_prometheus(ctx.server, ctx.spec, Some(ctx.stats), ctx.ev);
+                let mut r = Rendered::json(200, "OK", body, keep);
+                r.content_type = obs::PROM_CONTENT_TYPE;
+                RouteOutcome::Respond(r)
+            } else {
+                let body = metrics_json_ev(ctx.server, ctx.spec, Some(ctx.stats), ctx.ev)
+                    .to_string_compact();
+                RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+            }
+        }
+        ("GET", "/debug/trace") => {
+            let telem = ctx.server.obs();
+            let mut n = 256usize;
+            for pair in req.path.split('?').nth(1).unwrap_or("").split('&') {
+                if let Some(v) = pair.strip_prefix("n=") {
+                    match v.parse::<usize>() {
+                        Ok(k) => n = k,
+                        Err(_) => {
+                            return RouteOutcome::Respond(Rendered::json(
+                                400,
+                                "Bad Request",
+                                err_body("\"n\" must be a non-negative integer"),
+                                keep,
+                            ))
+                        }
+                    }
+                }
+            }
+            let spans = telem.spans_tail(n.min(telem.trace_capacity()));
+            let body = obs::chrome_trace_doc(&spans).to_string_compact();
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
         }
         ("POST", "/v1/infer") => route_infer(req, ctx, Api::V1, keep),
@@ -967,6 +1026,7 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
         if ctx.stop.load(Ordering::SeqCst) {
             break;
         }
+        let t_read = std::time::Instant::now();
         let req = match http::read_request_from(&mut reader, ctx.opts.request_deadline) {
             Ok(r) => r,
             // normal end of a keep-alive session
@@ -1002,6 +1062,27 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
             }
         };
         ctx.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // Parse span.  The blocking read starts before the request's
+        // first byte exists, so in threaded mode this span includes the
+        // wait on an idle keep-alive connection (the event loop anchors
+        // at the true first byte instead).
+        let telem = ctx.server.obs().clone();
+        let rid = req
+            .header("x-request-id")
+            .and_then(obs::parse_rid)
+            .unwrap_or_else(|| telem.mint_rid());
+        let parse_dur_us = t_read.elapsed().as_micros() as u64;
+        let now_us = obs::now_us();
+        telem.parse_us.record(parse_dur_us);
+        telem.span(
+            rid,
+            Stage::Parse,
+            u8::MAX,
+            u8::MAX,
+            now_us.saturating_sub(parse_dur_us),
+            parse_dur_us,
+            &req.path,
+        );
         // persist only when the gateway allows it, the request allows
         // it, and we aren't draining for shutdown
         let keep =
@@ -1013,11 +1094,13 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
             stats: &ctx.stats,
             ev: None,
         };
+        let mut tier_idx = u8::MAX;
         let rendered = match route(&req, &rctx, keep) {
             RouteOutcome::Respond(r) => r,
             RouteOutcome::Dispatch { ireq, api, keep } => {
                 let tier = ireq.options.tier;
-                match dispatch(&ctx.server, ireq) {
+                tier_idx = tier.index() as u8;
+                match dispatch(&ctx.server, ireq, rid) {
                     Dispatch::Rejected(e) => render_submit_err(api, &e, tier, keep),
                     Dispatch::ChannelDropped => render_channel_dropped(api, keep),
                     Dispatch::Done(resp) => render_done(api, &resp, keep),
@@ -1036,7 +1119,9 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
                     pending.push(match l {
                         BatchLine::Err { line, msg } => Pending::Err(line, msg),
                         BatchLine::Submit { line, ireq } => {
-                            match ctx.server.submit_request(ireq) {
+                            // every line of one NDJSON batch shares the
+                            // HTTP request's trace id
+                            match ctx.server.submit_request_with_rid(ireq, rid) {
                                 Ok(rx) => Pending::Rx(line, rx),
                                 Err(e) => Pending::Err(line, e.to_string()),
                             }
@@ -1058,7 +1143,13 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
                 render_batch(body_lines, keep)
             }
         };
-        let wrote_ok = write_rendered(&mut stream, &rendered);
+        let write_start_us = obs::now_us();
+        let wrote_ok = write_rendered_rid(&mut stream, &rendered, rid);
+        let write_dur_us = obs::now_us().saturating_sub(write_start_us);
+        telem.span(rid, Stage::Write, tier_idx, u8::MAX, write_start_us, write_dur_us, "");
+        if (tier_idx as usize) < telem.tier_write_us.len() {
+            telem.tier_write_us[tier_idx as usize].record(write_dur_us);
+        }
         // a failed (possibly partial) write leaves the stream misframed:
         // the only safe continuation is no continuation
         if !wrote_ok || !rendered.keep {
@@ -1188,8 +1279,8 @@ enum Dispatch {
     ChannelDropped,
 }
 
-fn dispatch(server: &Server, req: InferRequest) -> Dispatch {
-    match server.submit_request(req) {
+fn dispatch(server: &Server, req: InferRequest, rid: u64) -> Dispatch {
+    match server.submit_request_with_rid(req, rid) {
         Err(e) => Dispatch::Rejected(e),
         Ok(rx) => match rx.recv() {
             Ok(resp) => Dispatch::Done(Box::new(resp)),
@@ -1225,23 +1316,38 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
     let m = server.metrics();
     let depths = server.queue_depths();
     let gov = server.governor();
+    let telem = server.obs();
     let mut tier_objs = Vec::new();
     for tier in Tier::ALL {
         let t = m.tier(tier);
+        let i = tier.index();
+        let queue = telem.tier_queue_us[i].snapshot();
+        let exec = telem.tier_exec_us[i].snapshot();
+        let write = telem.tier_write_us[i].snapshot();
         tier_objs.push((
             tier.name(),
             obj(vec![
                 ("requests", num(t.requests as f64)),
                 ("errors", num(t.errors as f64)),
                 ("rejected", num(t.rejected as f64)),
-                ("queue_depth", num(depths[tier.index()] as f64)),
+                ("queue_depth", num(depths[i] as f64)),
                 ("p50_latency_us", fnum(t.p50_latency_us())),
                 ("p99_latency_us", fnum(t.p99_latency_us())),
                 ("mean_boundary", fnum(t.mean_boundary())),
                 ("b_hist", hist_json(&t.b_hist)),
+                // stage breakdown: where this tier's time actually goes
+                ("p50_queue_us", fnum(queue.percentile(0.50))),
+                ("p99_queue_us", fnum(queue.percentile(0.99))),
+                ("p50_exec_us", fnum(exec.percentile(0.50))),
+                ("p99_exec_us", fnum(exec.percentile(0.99))),
+                ("p50_write_us", fnum(write.percentile(0.50))),
+                ("p99_write_us", fnum(write.percentile(0.99))),
             ]),
         ));
     }
+    // every emitted float goes through fnum — including the governor's
+    // integral-by-construction gauges, so the scrub holds even if a
+    // future contract carries derived floats
     let gov_tiers: Vec<(&str, JsonValue)> = gov
         .tiers
         .iter()
@@ -1250,8 +1356,23 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
                 c.tier.name(),
                 obj(vec![
                     ("profile", s(c.profile)),
-                    ("level", num(c.level as f64)),
-                    ("thresholds", arr(c.thresholds.iter().map(|&t| num(t as f64)))),
+                    ("level", fnum(c.level as f64)),
+                    ("thresholds", arr(c.thresholds.iter().map(|&t| fnum(t as f64)))),
+                ]),
+            )
+        })
+        .collect();
+    let layers = telem.layer_snapshot();
+    let layer_objs: Vec<(&str, JsonValue)> = layers
+        .iter()
+        .map(|(name, st)| {
+            (
+                name.as_str(),
+                obj(vec![
+                    ("calls", num(st.calls as f64)),
+                    ("exec_us", num(st.exec_us as f64)),
+                    ("energy_j", fnum(st.energy_j)),
+                    ("macro_ops", num(st.macro_ops as f64)),
                 ]),
             )
         })
@@ -1274,8 +1395,20 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
             "governor",
             obj(vec![
                 ("enabled", JsonValue::Bool(gov.enabled)),
-                ("transitions", num(gov.transitions as f64)),
+                ("transitions", fnum(gov.transitions as f64)),
                 ("tiers", obj(gov_tiers)),
+            ]),
+        ),
+        ("layers", obj(layer_objs)),
+        (
+            "obs",
+            obj(vec![
+                ("trace_enabled", JsonValue::Bool(telem.trace_enabled())),
+                ("trace_capacity", num(telem.trace_capacity() as f64)),
+                ("spans_recorded", num(telem.spans_recorded() as f64)),
+                ("spans_dropped", num(telem.spans_dropped() as f64)),
+                ("slow_ms", num((telem.slow_us() / 1000) as f64)),
+                ("heap_bytes", num(telem.heap_bytes() as f64)),
             ]),
         ),
     ];
@@ -1291,6 +1424,237 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
         ));
     }
     obj(fields)
+}
+
+/// `/metrics` content negotiation: an explicit `?format=` query wins,
+/// then the `Accept` header; the default stays JSON (the pre-existing
+/// contract, so old scrapers keep working unchanged).
+fn wants_prometheus(query: &str, accept: Option<&str>) -> bool {
+    for pair in query.split('&') {
+        if let Some(v) = pair.strip_prefix("format=") {
+            return v.eq_ignore_ascii_case("prometheus");
+        }
+    }
+    match accept {
+        Some(a) => {
+            let a = a.to_ascii_lowercase();
+            (a.contains("text/plain") || a.contains("openmetrics"))
+                && !a.contains("application/json")
+        }
+        None => false,
+    }
+}
+
+/// The `/metrics` document in Prometheus text exposition format
+/// (`?format=prometheus`, content type [`obs::PROM_CONTENT_TYPE`]).
+/// Metric names, labels and the bucket scheme are documented in
+/// DESIGN.md §13 and pinned by the exposition round-trip test; every
+/// value passes through the writer's non-finite scrub.
+pub fn metrics_prometheus(
+    server: &Server,
+    spec: &MacroSpec,
+    conns: Option<&ConnStats>,
+    ev: Option<&EventLoopStats>,
+) -> String {
+    let m = server.metrics();
+    let depths = server.queue_depths();
+    let gov = server.governor();
+    let telem = server.obs();
+    let mut w = obs::PromWriter::new();
+    w.counter("osa_requests_total", "Inference requests served.", &[], m.requests as f64);
+    w.counter("osa_batches_total", "Coalesced batches executed.", &[], m.batches as f64);
+    w.counter("osa_errors_total", "Requests that failed in a worker.", &[], m.errors as f64);
+    w.counter("osa_rejected_total", "Requests rejected at admission.", &[], m.rejected as f64);
+    w.gauge("osa_mean_batch", "Mean coalesced batch size.", &[], m.mean_batch());
+    w.gauge("osa_throughput_rps", "Requests per second of serving time.", &[], m.throughput_rps());
+    w.gauge(
+        "osa_tops_per_watt",
+        "Modeled efficiency at the macro spec.",
+        &[],
+        m.tops_per_watt(spec),
+    );
+    w.gauge("osa_watts", "Modeled macro power draw.", &[], m.account.watts());
+    for tier in Tier::ALL {
+        let t = m.tier(tier);
+        let i = tier.index();
+        let lbl = [("tier", tier.name().to_string())];
+        w.counter("osa_tier_requests_total", "Requests served per tier.", &lbl, t.requests as f64);
+        w.counter("osa_tier_errors_total", "Worker failures per tier.", &lbl, t.errors as f64);
+        w.counter(
+            "osa_tier_rejected_total",
+            "Admission rejections per tier.",
+            &lbl,
+            t.rejected as f64,
+        );
+        w.gauge("osa_queue_depth", "Requests waiting in the tier queue.", &lbl, depths[i] as f64);
+        w.histogram(
+            "osa_tier_latency_microseconds",
+            "End-to-end latency per tier.",
+            &lbl,
+            &telem.tier_latency_us[i].snapshot(),
+        );
+        for (stage, h) in [
+            ("queue", &telem.tier_queue_us[i]),
+            ("exec", &telem.tier_exec_us[i]),
+            ("write", &telem.tier_write_us[i]),
+        ] {
+            w.histogram(
+                "osa_stage_duration_microseconds",
+                "Per-stage request time (queue wait, execution, response write).",
+                &[("tier", tier.name().to_string()), ("stage", stage.to_string())],
+                &h.snapshot(),
+            );
+        }
+    }
+    w.histogram(
+        "osa_request_latency_microseconds",
+        "End-to-end request latency across all tiers.",
+        &[],
+        &telem.latency_us.snapshot(),
+    );
+    w.histogram(
+        "osa_parse_duration_microseconds",
+        "HTTP request parse span duration.",
+        &[],
+        &telem.parse_us.snapshot(),
+    );
+    for (b, &c) in m.b_hist.iter().enumerate() {
+        w.counter(
+            "osa_boundary_served_total",
+            "Requests served per saliency boundary.",
+            &[("b", b.to_string())],
+            c as f64,
+        );
+    }
+    w.gauge(
+        "osa_governor_enabled",
+        "Whether the precision governor is active.",
+        &[],
+        if gov.enabled { 1.0 } else { 0.0 },
+    );
+    w.counter(
+        "osa_governor_transitions_total",
+        "Governor level changes (escalations + recoveries).",
+        &[],
+        gov.transitions as f64,
+    );
+    for c in &gov.tiers {
+        w.gauge(
+            "osa_governor_level",
+            "Current degrade level per tier (0 = base contract).",
+            &[("tier", c.tier.name().to_string())],
+            c.level as f64,
+        );
+        for (i, &t) in c.thresholds.iter().enumerate() {
+            w.gauge(
+                "osa_governor_threshold",
+                "Effective OSE threshold per layer-group index.",
+                &[("tier", c.tier.name().to_string()), ("index", i.to_string())],
+                t as f64,
+            );
+        }
+    }
+    for (name, st) in telem.layer_snapshot() {
+        let lbl = [("layer", name.clone())];
+        w.counter("osa_layer_calls_total", "Layer executions.", &lbl, st.calls as f64);
+        w.counter(
+            "osa_layer_exec_microseconds_total",
+            "Cumulative layer execution time.",
+            &lbl,
+            st.exec_us as f64,
+        );
+        w.counter(
+            "osa_layer_energy_joules_total",
+            "Cumulative modeled layer energy.",
+            &lbl,
+            st.energy_j,
+        );
+        w.counter(
+            "osa_layer_macro_ops_total",
+            "Cumulative CIM macro operations per layer.",
+            &lbl,
+            st.macro_ops as f64,
+        );
+    }
+    if let Some(c) = conns {
+        w.counter(
+            "osa_connections_accepted_total",
+            "Connections claimed by the gateway.",
+            &[],
+            c.accepted.load(Ordering::Relaxed) as f64,
+        );
+        w.counter(
+            "osa_connections_rejected_total",
+            "Connections refused at admission.",
+            &[],
+            c.rejected.load(Ordering::Relaxed) as f64,
+        );
+        w.counter(
+            "osa_http_requests_total",
+            "HTTP requests across all connections.",
+            &[],
+            c.requests.load(Ordering::Relaxed) as f64,
+        );
+        w.gauge(
+            "osa_connection_reuse_rate",
+            "Fraction of requests on a reused connection.",
+            &[],
+            c.reuse_rate(),
+        );
+    }
+    if let Some(ev) = ev {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed) as f64;
+        w.gauge(
+            "osa_event_loop_open_connections",
+            "Admitted connections registered with the poller.",
+            &[],
+            g(&ev.open_connections),
+        );
+        w.gauge(
+            "osa_event_loop_parked_connections",
+            "Accepted connections awaiting a slot.",
+            &[],
+            g(&ev.parked_connections),
+        );
+        w.counter("osa_event_loop_wakeups_total", "Poller returns.", &[], g(&ev.wakeups));
+        w.counter(
+            "osa_event_loop_eagain_reads_total",
+            "Reads that hit EAGAIN.",
+            &[],
+            g(&ev.eagain_reads),
+        );
+        w.counter(
+            "osa_event_loop_eagain_writes_total",
+            "Writes that hit EAGAIN.",
+            &[],
+            g(&ev.eagain_writes),
+        );
+        w.counter(
+            "osa_event_loop_deadline_expirations_total",
+            "Connection deadlines that fired.",
+            &[],
+            g(&ev.deadline_expirations),
+        );
+        w.gauge(
+            "osa_event_loop_buffer_pool_hit_rate",
+            "Buffer acquisitions served by the pool.",
+            &[],
+            ev.pool_hit_rate(),
+        );
+    }
+    w.counter(
+        "osa_trace_spans_recorded_total",
+        "Trace spans written to the ring.",
+        &[],
+        telem.spans_recorded() as f64,
+    );
+    w.counter(
+        "osa_trace_spans_dropped_total",
+        "Trace spans dropped on slot contention.",
+        &[],
+        telem.spans_dropped() as f64,
+    );
+    w.finish()
 }
 
 /// [`metrics_json`] plus the event-loop gauges when the snapshot is
@@ -1321,4 +1685,61 @@ pub(crate) fn metrics_json_ev(
         }
     }
     doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnum_scrubs_non_finite() {
+        assert_eq!(fnum(f64::NAN).to_string_compact(), "0");
+        assert_eq!(fnum(f64::INFINITY).to_string_compact(), "0");
+        assert_eq!(fnum(f64::NEG_INFINITY).to_string_compact(), "0");
+        assert_eq!(fnum(2.5).to_string_compact(), "2.5");
+    }
+
+    #[test]
+    fn metrics_content_negotiation() {
+        // explicit query parameter wins over everything
+        assert!(wants_prometheus("format=prometheus", None));
+        assert!(wants_prometheus("format=Prometheus", Some("application/json")));
+        assert!(!wants_prometheus("format=json", Some("text/plain")));
+        // Accept header decides when no format= is given
+        assert!(wants_prometheus("", Some("text/plain")));
+        assert!(wants_prometheus("", Some("application/openmetrics-text")));
+        assert!(!wants_prometheus("", Some("application/json")));
+        assert!(!wants_prometheus("", Some("text/plain, application/json")));
+        // the default stays JSON: pre-PR-7 scrapers see no change
+        assert!(!wants_prometheus("", None));
+        assert!(!wants_prometheus("n=5", None));
+    }
+
+    /// NaN injection: a non-finite value handed to the exposition
+    /// writer must scrub to 0, not corrupt the scrape (the same
+    /// contract `fnum` enforces on the JSON side).
+    #[test]
+    fn prometheus_writer_scrubs_injected_nan() {
+        let mut w = obs::PromWriter::new();
+        w.gauge("osa_test_gauge", "injected", &[], f64::NAN);
+        w.counter("osa_test_total", "injected", &[], f64::INFINITY);
+        let text = w.finish();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let exp = obs::parse_exposition(&text).expect("valid exposition");
+        assert_eq!(exp.value("osa_test_gauge", &[]), Some(0.0));
+        assert_eq!(exp.value("osa_test_total", &[]), Some(0.0));
+    }
+
+    #[test]
+    fn rendered_echoes_request_id() {
+        let r = Rendered::json(200, "OK", "{}".into(), true);
+        let mut out = Vec::new();
+        r.to_bytes_with_rid(&mut out, 0x2a);
+        let head = String::from_utf8_lossy(&out);
+        assert!(head.contains("X-Request-Id: req-000000000000002a\r\n"), "{head}");
+        // rid 0 = untraced response: no header
+        let mut out = Vec::new();
+        r.to_bytes(&mut out);
+        assert!(!String::from_utf8_lossy(&out).contains("X-Request-Id"));
+    }
 }

@@ -156,7 +156,7 @@ impl Governor {
                     self.transitions.fetch_add(1, Ordering::Relaxed);
                     *last = now;
                     log::info!(
-                        "governor: pressure {p:.2} — {} degraded to level {}",
+                        "governor degrade tier={} level={} pressure={p:.2} watts={watts:.2}",
                         tier.name(),
                         l + 1
                     );
@@ -172,7 +172,7 @@ impl Governor {
                     self.transitions.fetch_add(1, Ordering::Relaxed);
                     *last = now;
                     log::info!(
-                        "governor: pressure {p:.2} — {} recovered to level {}",
+                        "governor recover tier={} level={} pressure={p:.2} watts={watts:.2}",
                         tier.name(),
                         l - 1
                     );

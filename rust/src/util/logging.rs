@@ -1,7 +1,14 @@
 //! Tiny `log`-facade backend (env_logger is not in the offline mirror).
 //!
-//! Level comes from `OSA_HCIM_LOG` (error|warn|info|debug|trace),
-//! defaulting to `info`.
+//! Level comes from `OSA_HCIM_LOG` (off|error|warn|info|debug|trace),
+//! defaulting to `info`.  An unrecognized value still defaults to
+//! `info`, but says so once on stderr instead of silently swallowing
+//! the typo.
+//!
+//! Serve-path log lines carry structured `key=value` fields
+//! (`rid=req-… tier=…`) appended by the call sites; this backend keeps
+//! the line format stable (`[LEVEL] target: message`) so those fields
+//! stay grep-able.
 
 use log::{Level, LevelFilter, Metadata, Record};
 
@@ -30,14 +37,40 @@ impl log::Log for StderrLogger {
 
 static LOGGER: StderrLogger = StderrLogger;
 
+/// Map an `OSA_HCIM_LOG` value to a level filter.  `Err` carries the
+/// fallback (`info`) for an unrecognized, non-empty value — the caller
+/// warns once.
+fn parse_level(text: &str) -> Result<LevelFilter, LevelFilter> {
+    match text {
+        "off" | "none" => Ok(LevelFilter::Off),
+        "error" => Ok(LevelFilter::Error),
+        "warn" => Ok(LevelFilter::Warn),
+        "info" | "" => Ok(LevelFilter::Info),
+        "debug" => Ok(LevelFilter::Debug),
+        "trace" => Ok(LevelFilter::Trace),
+        _ => Err(LevelFilter::Info),
+    }
+}
+
 /// Install the logger (idempotent).
 pub fn init() {
-    let level = match std::env::var("OSA_HCIM_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+    let level = match std::env::var("OSA_HCIM_LOG") {
+        Err(_) => LevelFilter::Info,
+        Ok(raw) => match parse_level(raw.trim()) {
+            Ok(level) => level,
+            Err(fallback) => {
+                // logger may not be installed yet — warn directly, and
+                // only from the install that wins the race below
+                if log::set_logger(&LOGGER).is_ok() {
+                    log::set_max_level(fallback);
+                    eprintln!(
+                        "[WARN ] osa_hcim::util::logging: unrecognized OSA_HCIM_LOG={raw:?} \
+                         (expected off|error|warn|info|debug|trace) — defaulting to info"
+                    );
+                }
+                return;
+            }
+        },
     };
     if log::set_logger(&LOGGER).is_ok() {
         log::set_max_level(level);
@@ -46,10 +79,27 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn level_strings_parse() {
+        assert_eq!(parse_level("off"), Ok(LevelFilter::Off));
+        assert_eq!(parse_level("none"), Ok(LevelFilter::Off));
+        assert_eq!(parse_level("error"), Ok(LevelFilter::Error));
+        assert_eq!(parse_level("warn"), Ok(LevelFilter::Warn));
+        assert_eq!(parse_level("info"), Ok(LevelFilter::Info));
+        assert_eq!(parse_level(""), Ok(LevelFilter::Info));
+        assert_eq!(parse_level("debug"), Ok(LevelFilter::Debug));
+        assert_eq!(parse_level("trace"), Ok(LevelFilter::Trace));
+        // typos fall back to info, reported (not silently swallowed)
+        assert_eq!(parse_level("verbose"), Err(LevelFilter::Info));
+        assert_eq!(parse_level("INFO"), Err(LevelFilter::Info));
     }
 }

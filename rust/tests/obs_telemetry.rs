@@ -1,0 +1,310 @@
+//! End-to-end observability tests over a real socket, in both serving
+//! modes (thread-per-connection and event loop): X-Request-Id echo and
+//! adoption, `/debug/trace` span coverage, Prometheus exposition
+//! round-trip through the in-crate parser (the CI exposition lint),
+//! and `/metrics` JSON back-compat + NaN-free guarantee.  Everything
+//! runs on `QGraph::synthetic()` — no artifacts needed.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::{CimMode, SystemConfig};
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::QGraph;
+use osa_hcim::obs;
+use osa_hcim::serve::http;
+use osa_hcim::serve::Gateway;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn synth_image(seed: u64) -> Vec<u8> {
+    let mut g = osa_hcim::util::prng::SplitMix64::new(seed);
+    (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+fn infer_body(tier: &str, seed: u64) -> String {
+    http::infer_body(tier, &synth_image(seed))
+}
+
+fn base_cfg(event_loop: bool) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.mode = CimMode::Dcim;
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 500;
+    cfg.event_loop = event_loop;
+    cfg
+}
+
+fn start_gateway(cfg: &SystemConfig) -> (Gateway, String) {
+    let gw = Gateway::start(cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    (gw, addr)
+}
+
+/// One-shot request with caller-controlled extra headers; returns
+/// (status, lower-cased response headers, body).  The stock clients in
+/// `serve::http` don't expose request headers, and the id-propagation
+/// tests need to *send* `X-Request-Id`, not just read it back.
+fn raw_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    extra_headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> (u16, BTreeMap<String, String>, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let payload = body.unwrap_or("");
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
+    for (k, v) in extra_headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str(&format!(
+        "Content-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    ));
+    req.push_str(payload);
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let raw = String::from_utf8_lossy(&raw).into_owned();
+    let header_end = raw.find("\r\n\r\n").expect("malformed response");
+    let mut lines = raw[..header_end].split("\r\n");
+    let status_line = lines.next().unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    (status, headers, raw[header_end + 4..].to_string())
+}
+
+#[test]
+fn request_id_echoed_and_adopted_in_both_modes() {
+    for event_loop in [false, true] {
+        let (gw, addr) = start_gateway(&base_cfg(event_loop));
+        // a well-formed inbound id is adopted and echoed verbatim
+        let rid = "req-00000000000000ab";
+        let (status, headers, body) = raw_request(
+            &addr,
+            "POST",
+            "/v1/infer",
+            &[("X-Request-Id", rid)],
+            Some(&infer_body("gold", 1)),
+        );
+        assert_eq!(status, 200, "event_loop={event_loop}: {body}");
+        assert_eq!(
+            headers.get("x-request-id").map(String::as_str),
+            Some(rid),
+            "event_loop={event_loop}"
+        );
+        // no inbound id: the gateway mints a well-formed one
+        let (status, headers, _) =
+            raw_request(&addr, "POST", "/v1/infer", &[], Some(&infer_body("gold", 2)));
+        assert_eq!(status, 200);
+        let minted = headers.get("x-request-id").expect("minted id");
+        assert!(obs::parse_rid(minted).is_some(), "{minted}");
+        assert_ne!(minted.as_str(), rid);
+        // a malformed inbound id is replaced, never parroted back
+        let (status, headers, _) = raw_request(
+            &addr,
+            "POST",
+            "/v1/infer",
+            &[("X-Request-Id", "not-a-rid")],
+            Some(&infer_body("gold", 3)),
+        );
+        assert_eq!(status, 200);
+        let replaced = headers.get("x-request-id").expect("replacement id");
+        assert!(obs::parse_rid(replaced).is_some(), "{replaced}");
+        gw.shutdown();
+    }
+}
+
+#[test]
+fn debug_trace_spans_cover_the_request_lifecycle() {
+    let (gw, addr) = start_gateway(&base_cfg(false));
+    let rid = "req-0000000000000042";
+    let (status, _, body) = raw_request(
+        &addr,
+        "POST",
+        "/v1/infer",
+        &[("X-Request-Id", rid)],
+        Some(&infer_body("gold", 7)),
+    );
+    assert_eq!(status, 200, "{body}");
+
+    // a bad count is a 400, not a panic or a hang
+    let (status, body) = http::request(&addr, "GET", "/debug/trace?n=banana", None).unwrap();
+    assert_eq!(status, 400, "{body}");
+
+    // spans for this request id, as (category, start_ts) pairs
+    let fetch = || -> Vec<(String, f64)> {
+        let (status, body) = http::request(&addr, "GET", "/debug/trace?n=1024", None).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let doc = parse(&body).unwrap();
+        let events = doc.get("traceEvents").and_then(JsonValue::as_array).unwrap();
+        events
+            .iter()
+            .filter(|e| {
+                let id = e.get("args").and_then(|a| a.get("request_id"));
+                id.and_then(JsonValue::as_str) == Some(rid)
+            })
+            .map(|e| {
+                let cat = e.get("cat").and_then(JsonValue::as_str).unwrap();
+                (cat.to_string(), e.get("ts").and_then(JsonValue::as_f64).unwrap())
+            })
+            .collect()
+    };
+    // the write span lands just after the response bytes reach the
+    // client, so poll briefly instead of racing it
+    let needed = ["parse", "admit", "queue", "exec", "write"];
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let got = loop {
+        let cur = fetch();
+        if needed.iter().all(|n| cur.iter().any(|(c, _)| c == n)) {
+            break cur;
+        }
+        assert!(Instant::now() < deadline, "stages still missing after 10s: {cur:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    // per-layer exec sub-spans ride on the same request id
+    assert!(got.iter().any(|(c, _)| c == "layer"), "no layer spans: {got:?}");
+    // lifecycle ordering by span start time
+    let ts_of = |name: &str| got.iter().find(|(c, _)| c == name).unwrap().1;
+    assert!(ts_of("parse") <= ts_of("admit"), "{got:?}");
+    assert!(ts_of("admit") <= ts_of("queue"), "{got:?}");
+    assert!(ts_of("queue") <= ts_of("exec"), "{got:?}");
+    assert!(ts_of("exec") <= ts_of("write"), "{got:?}");
+    gw.shutdown();
+}
+
+/// The CI exposition-syntax lint: scrape a live gateway and push the
+/// text back through the in-crate parser, which enforces name syntax,
+/// family contiguity, histogram cumulativity and value well-formedness.
+#[test]
+fn prometheus_exposition_round_trips_from_a_live_gateway() {
+    let (gw, addr) = start_gateway(&base_cfg(false));
+    for i in 0..2u64 {
+        let (status, body) =
+            http::request(&addr, "POST", "/v1/infer", Some(&infer_body("gold", 10 + i))).unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+    let (status, headers, text) =
+        raw_request(&addr, "GET", "/metrics?format=prometheus", &[], None);
+    assert_eq!(status, 200);
+    assert!(
+        headers.get("content-type").is_some_and(|c| c.starts_with("text/plain; version=0.0.4")),
+        "{headers:?}"
+    );
+    let doc = match obs::parse_exposition(&text) {
+        Ok(d) => d,
+        Err(e) => panic!("exposition must parse: {e}\n{text}"),
+    };
+    assert_eq!(doc.value("osa_requests_total", &[]), Some(2.0));
+    assert_eq!(doc.value("osa_tier_requests_total", &[("tier", "gold")]), Some(2.0));
+    let ty = doc.types.get("osa_request_latency_microseconds");
+    assert_eq!(ty.map(String::as_str), Some("histogram"));
+    assert_eq!(doc.value("osa_request_latency_microseconds_count", &[]), Some(2.0));
+    let stage_exec = [("tier", "gold"), ("stage", "exec")];
+    assert_eq!(doc.value("osa_stage_duration_microseconds_count", &stage_exec), Some(2.0));
+    assert_eq!(doc.value("osa_governor_level", &[("tier", "gold")]), Some(0.0));
+    // Accept negotiation picks the exposition; the bare default stays
+    // JSON so pre-existing scrapers see no change
+    let (_, _, via_accept) =
+        raw_request(&addr, "GET", "/metrics", &[("Accept", "text/plain")], None);
+    assert!(via_accept.starts_with("# HELP"), "{via_accept}");
+    let (_, plain) = http::request(&addr, "GET", "/metrics", None).unwrap();
+    assert!(plain.trim_start().starts_with('{'), "bare /metrics must stay JSON");
+    gw.shutdown();
+}
+
+/// Every number anywhere in the `/metrics` JSON document must be
+/// finite: `fnum` scrubs at the emit sites, and this walk catches any
+/// future field that bypasses it.
+fn assert_finite(v: &JsonValue, path: &str) {
+    match v {
+        JsonValue::Number(x) => assert!(x.is_finite(), "non-finite number at {path}"),
+        JsonValue::Array(items) => {
+            for (i, item) in items.iter().enumerate() {
+                assert_finite(item, &format!("{path}[{i}]"));
+            }
+        }
+        JsonValue::Object(map) => {
+            for (k, item) in map {
+                assert_finite(item, &format!("{path}.{k}"));
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn json_metrics_keeps_every_preexisting_key_in_both_modes() {
+    for event_loop in [false, true] {
+        let (gw, addr) = start_gateway(&base_cfg(event_loop));
+        let (status, body) =
+            http::request(&addr, "POST", "/v1/infer", Some(&infer_body("silver", 5))).unwrap();
+        assert_eq!(status, 200, "event_loop={event_loop}: {body}");
+        let (status, body) = http::request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200);
+        let m = parse(&body).unwrap();
+        // the pre-PR-7 top-level contract, key for key
+        for key in [
+            "requests",
+            "batches",
+            "errors",
+            "rejected",
+            "mean_batch",
+            "p50_latency_us",
+            "p95_latency_us",
+            "p99_latency_us",
+            "throughput_rps",
+            "tops_per_watt",
+            "watts",
+            "b_hist",
+            "tiers",
+            "governor",
+            "connections",
+        ] {
+            assert!(m.get(key).is_some(), "event_loop={event_loop}: missing key {key}");
+        }
+        for tier in ["gold", "silver", "batch"] {
+            let t = m.get("tiers").and_then(|t| t.get(tier)).expect("tier object");
+            for key in [
+                "requests",
+                "errors",
+                "rejected",
+                "queue_depth",
+                "p50_latency_us",
+                "p99_latency_us",
+                "mean_boundary",
+                "b_hist",
+            ] {
+                assert!(t.get(key).is_some(), "tier {tier} missing {key}");
+            }
+            // the PR-7 stage breakdown rides along
+            for key in ["p50_queue_us", "p99_exec_us", "p50_write_us"] {
+                assert!(t.get(key).is_some(), "tier {tier} missing {key}");
+            }
+        }
+        let gov = m.get("governor").expect("governor block");
+        assert!(gov.get("enabled").is_some() && gov.get("transitions").is_some());
+        assert!(gov.get("tiers").and_then(|t| t.get("gold")).is_some());
+        // PR-7 additions
+        assert!(m.get("layers").is_some(), "layer attribution missing");
+        let o = m.get("obs").expect("obs block");
+        for key in ["trace_enabled", "trace_capacity", "spans_recorded", "spans_dropped"] {
+            assert!(o.get(key).is_some(), "obs block missing {key}");
+        }
+        if event_loop {
+            assert!(m.get("event_loop").is_some(), "event-loop gauges missing");
+        }
+        assert_finite(&m, "$");
+        gw.shutdown();
+    }
+}

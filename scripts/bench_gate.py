@@ -15,6 +15,10 @@ Two kinds of checks:
   reported WARN without failing the gate — for metrics that shared
   runners can sink with no code change (connection-reuse rate under
   noisy-neighbor accept latency, NDJSON batch throughput).
+* ``--max-metric KEY=CEILING`` (repeatable): lower-is-better metrics
+  gated against an absolute ceiling rather than the committed baseline
+  (e.g. ``obs_overhead_pct=5``: tracing must cost < 5% of keep-alive
+  throughput).  FAIL when ``median(runs) > CEILING``.
 * ``--check-speedup KEY --speedup-floor X``: a machine-relative check
   (e.g. the engine thread-scaling curve, ``gemm_speedup_4t``), enforced
   only when the runner reports at least ``--min-cores`` cores in the
@@ -69,6 +73,13 @@ def main() -> int:
         help="higher-is-better metric key to report without failing (repeatable)",
     )
     p.add_argument(
+        "--max-metric",
+        action="append",
+        default=[],
+        metavar="KEY=CEILING",
+        help="lower-is-better metric gated against an absolute ceiling (repeatable)",
+    )
+    p.add_argument(
         "--tolerance",
         type=float,
         default=0.25,
@@ -116,6 +127,26 @@ def main() -> int:
         print(f"  {key}: median {med:.2f} vs baseline {base:.2f} (floor {floor:.2f}) {verdict}")
         if below and not warn_only:
             failures.append(f"{key}: median {med:.2f} < floor {floor:.2f} (baseline {base:.2f})")
+
+    for spec in args.max_metric:
+        key, sep, raw_ceiling = spec.partition("=")
+        if not sep:
+            print(f"bench-gate: --max-metric needs KEY=CEILING, got {spec!r}", file=sys.stderr)
+            return 2
+        try:
+            ceiling = float(raw_ceiling)
+        except ValueError:
+            print(f"bench-gate: bad ceiling in {spec!r}", file=sys.stderr)
+            return 2
+        med = median_of(runs, key)
+        if med is None:
+            failures.append(f"{key}: missing from every run")
+            continue
+        above = med > ceiling
+        verdict = "REGRESSION" if above else "OK"
+        print(f"  {key}: median {med:.2f} vs ceiling {ceiling:.2f} {verdict}")
+        if above:
+            failures.append(f"{key}: median {med:.2f} > ceiling {ceiling:.2f}")
 
     if args.check_speedup:
         cores = median_of(runs, "engine_cores") or 0
