@@ -137,6 +137,40 @@ fn main() {
         ws.hit_rate()
     );
 
+    // --- macro-fleet scaling: modeled K-macro wall-clock, same GEMM ------
+    // The fleet acceptance curve: modeled GEMM/s (1 / fleet_seconds, the
+    // busiest macro's critical path) at K = 1/2/4 with residency pinned
+    // to one tile so the K=288 contraction must shard, plus the share of
+    // energy the inter-macro partial-sum transfers cost.
+    println!("\n# pipeline — macro-fleet scaling (K = 1/2/4, residency-forced sharding)");
+    let mut fleet_points: Vec<(usize, f64, f64)> = Vec::new();
+    for kf in [1usize, 2, 4] {
+        let mut fcfg = cfg.clone();
+        fcfg.backend = "macro-fleet".to_string();
+        fcfg.fleet_macros = kf;
+        fcfg.fleet_residency_tiles = 1;
+        let fleet_engine =
+            Engine::builder().config(fcfg).graph(graph.clone()).build().unwrap();
+        let mut gemm = fleet_engine.backend().unwrap();
+        gemm.gemm(&a, m, k, &w, n, 0).unwrap(); // warm the plan + placement
+        let r = gemm.gemm(&a, m, k, &w, n, 0).unwrap();
+        let rate = 1.0 / r.account.fleet_seconds().max(1e-12);
+        let pct = r.account.transfer_fraction() * 100.0;
+        println!("fleet/k{kf}: modeled {rate:.1} gemm/s, transfer {pct:.2}% of energy");
+        fleet_points.push((kf, rate, pct));
+    }
+    let fleet_rate = |kf: usize| {
+        fleet_points.iter().find(|p| p.0 == kf).map(|p| p.1).unwrap_or(0.0)
+    };
+    let fleet_speedup_2 = fleet_rate(2) / fleet_rate(1).max(1e-9);
+    let fleet_speedup_4 = fleet_rate(4) / fleet_rate(1).max(1e-9);
+    let fleet_transfer_pct =
+        fleet_points.iter().find(|p| p.0 == 4).map(|p| p.2).unwrap_or(0.0);
+    println!(
+        "fleet scaling: 2 macros = {fleet_speedup_2:.2}x, 4 macros = {fleet_speedup_4:.2}x, \
+         transfer {fleet_transfer_pct:.2}% of energy at K=4"
+    );
+
     // --- full-network inference over a persistent executor ---------------
     println!("\n# pipeline — single-image inference (32x32x3), persistent executor");
     for mode in [CimMode::Dcim, CimMode::Hcim, CimMode::Osa] {
@@ -501,6 +535,12 @@ fn main() {
         ("conn_scale_10k_rps", num(r10k)),
         ("conn_scale_10k_rss_mb", num(m10k)),
         ("conn_scale_conns_max", num(conns_max)),
+        ("fleet_rps_1", num(fleet_rate(1))),
+        ("fleet_rps_2", num(fleet_rate(2))),
+        ("fleet_rps_4", num(fleet_rate(4))),
+        ("fleet_speedup_2", num(fleet_speedup_2)),
+        ("fleet_speedup_4", num(fleet_speedup_4)),
+        ("fleet_transfer_energy_pct", num(fleet_transfer_pct)),
     ]);
     let serve_out =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());

@@ -223,6 +223,23 @@ pub struct SystemConfig {
     /// `POST /v2/infer`).  Unknown names fail at engine build time with
     /// an error listing every registered backend.
     pub backend: String,
+    /// Simulated macro count K for the `macro-fleet` backend
+    /// (`[fleet] macros`, `--fleet`, `EngineBuilder::fleet`).
+    pub fleet_macros: usize,
+    /// Per-macro weight-stationary residency budget, in packed weight
+    /// tiles (`[fleet] residency_tiles`).
+    pub fleet_residency_tiles: usize,
+    /// Energy per partial sum per inter-macro hop, femtojoules
+    /// (`[fleet] hop_energy_fj`) — charged when a layer's K dimension
+    /// is split across macros and partial sums must hop to reduce.
+    pub fleet_hop_energy_fj: f64,
+    /// Latency per inter-macro hop, analog-clock cycles
+    /// (`[fleet] hop_latency_cycles`).
+    pub fleet_hop_latency_cycles: u64,
+    /// Fleet placement mode: `auto` (replicate, pool, then wrap),
+    /// `replicate` (never pool) or `resident` (strict capacity)
+    /// (`[fleet] placement`; per-request `options.placement` override).
+    pub fleet_placement: String,
     /// QoS tier assumed when a request names none
     /// (`[serve] default_tier`); unknown tier strings are rejected at
     /// load time.
@@ -292,6 +309,11 @@ impl Default for SystemConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             engine_threads: 0,
             backend: "macro-hybrid".to_string(),
+            fleet_macros: 1,
+            fleet_residency_tiles: 64,
+            fleet_hop_energy_fj: 120.0,
+            fleet_hop_latency_cycles: 2,
+            fleet_placement: "auto".to_string(),
             default_tier: Tier::Silver,
             queue_cap: 256,
             keep_alive: true,
@@ -356,6 +378,13 @@ impl SystemConfig {
             bail!("engine.threads must be >= 1 (omit the key for auto-sizing)");
         }
         cfg.backend = t.get_str("engine.backend", &cfg.backend)?;
+        cfg.fleet_macros = t.get_usize("fleet.macros", cfg.fleet_macros)?;
+        cfg.fleet_residency_tiles =
+            t.get_usize("fleet.residency_tiles", cfg.fleet_residency_tiles)?;
+        cfg.fleet_hop_energy_fj = t.get_f64("fleet.hop_energy_fj", cfg.fleet_hop_energy_fj)?;
+        cfg.fleet_hop_latency_cycles =
+            t.get_usize("fleet.hop_latency_cycles", cfg.fleet_hop_latency_cycles as usize)? as u64;
+        cfg.fleet_placement = t.get_str("fleet.placement", &cfg.fleet_placement)?;
         let tier_name = t.get_str("serve.default_tier", cfg.default_tier.name())?;
         cfg.default_tier = Tier::parse(&tier_name).ok_or_else(|| {
             anyhow::anyhow!("serve.default_tier: unknown tier {tier_name:?} (gold|silver|batch)")
@@ -395,6 +424,21 @@ impl SystemConfig {
         }
         if self.obs_trace && self.obs_trace_capacity == 0 {
             bail!("obs.trace_capacity must be >= 1 while obs.trace is enabled");
+        }
+        if self.fleet_macros == 0 {
+            bail!("fleet.macros must be >= 1");
+        }
+        if self.fleet_residency_tiles == 0 {
+            bail!("fleet.residency_tiles must be >= 1");
+        }
+        if self.fleet_hop_energy_fj < 0.0 {
+            bail!("fleet.hop_energy_fj must be >= 0, got {}", self.fleet_hop_energy_fj);
+        }
+        if crate::sched::plan::PlacementMode::parse(&self.fleet_placement).is_none() {
+            bail!(
+                "fleet.placement: unknown mode {:?} (auto|replicate|resident)",
+                self.fleet_placement
+            );
         }
         if self.thresholds.len() + 1 != crate::spec::B_CANDIDATES.len() {
             bail!(
@@ -519,6 +563,39 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
         // whitespace-only is just as empty
         let t = Toml::parse("[engine]\nbackend = \"  \"").unwrap();
         assert!(SystemConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn fleet_section_parsed_and_validated() {
+        let t = Toml::parse(
+            "[fleet]\nmacros = 4\nresidency_tiles = 8\nhop_energy_fj = 95.5\n\
+             hop_latency_cycles = 3\nplacement = \"resident\"",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.fleet_macros, 4);
+        assert_eq!(cfg.fleet_residency_tiles, 8);
+        assert_eq!(cfg.fleet_hop_energy_fj, 95.5);
+        assert_eq!(cfg.fleet_hop_latency_cycles, 3);
+        assert_eq!(cfg.fleet_placement, "resident");
+        // defaults when the section is absent: single macro, auto
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.fleet_macros, 1);
+        assert_eq!(cfg.fleet_residency_tiles, 64);
+        assert_eq!(cfg.fleet_placement, "auto");
+        // zero macros / residency and unknown placement are rejected
+        let t = Toml::parse("[fleet]\nmacros = 0").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("fleet.macros"), "{err}");
+        let t = Toml::parse("[fleet]\nresidency_tiles = 0").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("fleet.residency_tiles"), "{err}");
+        let t = Toml::parse("[fleet]\nplacement = \"everywhere\"").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("fleet.placement"), "{err}");
+        let t = Toml::parse("[fleet]\nhop_energy_fj = -1.0").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("fleet.hop_energy_fj"), "{err}");
     }
 
     #[test]

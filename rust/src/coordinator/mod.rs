@@ -35,6 +35,8 @@ use crate::energy::EnergyAccount;
 use crate::engine::{Backend, BackendKnobs, Engine, InferRequest};
 use crate::nn::{Executor, QGraph};
 use crate::obs::{self, ServerObs, Stage};
+use crate::sched::fleet;
+use crate::sched::plan::{FleetDims, PlacementMode};
 use crate::serve::governor::{Governor, GovernorSnapshot};
 use crate::serve::qos::{Pop, QosConfig, SubmitError, Tier, TierQueues};
 use crate::spec::MacroSpec;
@@ -480,6 +482,34 @@ impl Server {
                 });
             }
         }
+        if let Some(p) = &options.placement {
+            let Some(mode) = PlacementMode::parse(p) else {
+                return Err(SubmitError::InvalidPlacement { requested: p.clone() });
+            };
+            // resident placement is strict: reject up front when the
+            // model's raw tile demand exceeds the fleet's aggregate
+            // residency, instead of silently repacking mid-serve
+            let cfg = self.engine.config();
+            let backend = options.backend.as_deref().unwrap_or(&cfg.backend);
+            if mode == PlacementMode::Resident && backend == fleet::BACKEND_NAME {
+                let dims = FleetDims {
+                    macros: cfg.fleet_macros.max(1),
+                    residency_tiles: cfg.fleet_residency_tiles.max(1),
+                };
+                let pp = fleet::plan_for_dims(
+                    &self.engine.graph().gemm_dims(),
+                    &cfg.spec,
+                    dims,
+                    mode,
+                );
+                if pp.total_tiles > pp.capacity_tiles() {
+                    return Err(SubmitError::FleetCapacityExceeded {
+                        required_tiles: pp.total_tiles,
+                        capacity_tiles: pp.capacity_tiles(),
+                    });
+                }
+            }
+        }
         let tier = options.tier;
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let req =
@@ -596,13 +626,15 @@ fn batcher_loop(
 }
 
 /// Requests that can share one engine forward: same backend, same
-/// noise-seed override, same boundary override.  `None` = the
-/// engine-default value, so the hot path (no overrides) is one group.
+/// noise-seed override, same boundary override, same fleet placement.
+/// `None` = the engine-default value, so the hot path (no overrides) is
+/// one group.
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct GroupKey {
     backend: String,
     noise_seed: Option<u64>,
     boundary: Option<i32>,
+    placement: Option<String>,
 }
 
 /// A worker's persistent executors, one per backend name it has served.
@@ -660,6 +692,7 @@ fn worker_loop(
                 backend: r.opts.backend.clone().unwrap_or_else(|| base_name.clone()),
                 noise_seed: r.opts.noise_seed,
                 boundary: r.opts.boundary,
+                placement: r.opts.placement.clone(),
             };
             let mergeable = key.noise_seed.is_none();
             match groups.iter_mut().find(|(k, _)| mergeable && *k == key) {
@@ -728,6 +761,9 @@ fn run_group<'g>(
         thresholds: caps
             .programmable_thresholds
             .then(|| governor.thresholds_for(tier)),
+        placement: Some(
+            key.placement.clone().unwrap_or_else(|| cfg.fleet_placement.clone()),
+        ),
     };
     if let Err(e) = exec.engine.apply(&knobs) {
         let msg = format!("programming engine knobs: {e:#}");

@@ -129,6 +129,17 @@ pub struct EnergyAccount {
     pub breakdown: EnergyBreakdown,
     pub macro_ops: u64,
     pub cycles: u64,
+    /// Inter-macro partial-sum transfer energy (fleet split-K reduce),
+    /// femtojoules.  Kept outside [`EnergyBreakdown`] so the macro-level
+    /// component fractions (Fig 7 calibration) stay a property of the
+    /// macro alone; included in [`EnergyAccount::total_energy_j`].
+    pub transfer_fj: f64,
+    /// Partial sums that crossed a macro boundary (one hop each).
+    pub transfer_hops: u64,
+    /// Per-macro cycle attribution when executed on a macro fleet
+    /// (empty = single-macro execution; index = macro id).  The fleet's
+    /// modeled latency is the critical path, [`EnergyAccount::fleet_seconds`].
+    pub macro_cycles: Vec<u64>,
 }
 
 impl EnergyAccount {
@@ -142,10 +153,41 @@ impl EnergyAccount {
         self.breakdown.add(&other.breakdown);
         self.macro_ops += other.macro_ops;
         self.cycles += other.cycles;
+        self.transfer_fj += other.transfer_fj;
+        self.transfer_hops += other.transfer_hops;
+        if !other.macro_cycles.is_empty() {
+            if self.macro_cycles.len() < other.macro_cycles.len() {
+                self.macro_cycles.resize(other.macro_cycles.len(), 0);
+            }
+            for (acc, &c) in self.macro_cycles.iter_mut().zip(&other.macro_cycles) {
+                *acc += c;
+            }
+        }
     }
 
     pub fn total_energy_j(&self) -> f64 {
-        self.breakdown.total_fj() * 1e-15
+        (self.breakdown.total_fj() + self.transfer_fj) * 1e-15
+    }
+
+    /// Fraction of total modeled energy spent on inter-macro transfers
+    /// (0.0 on a single macro).
+    pub fn transfer_fraction(&self) -> f64 {
+        let total = self.breakdown.total_fj() + self.transfer_fj;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.transfer_fj / total
+        }
+    }
+
+    /// Modeled wall-clock of a fleet execution: the slowest macro's
+    /// cycle count (critical path).  Falls back to the aggregate
+    /// [`EnergyAccount::seconds`] when no per-macro attribution exists.
+    pub fn fleet_seconds(&self) -> f64 {
+        match self.macro_cycles.iter().max() {
+            Some(&c) if c > 0 => c as f64 / CLK_ANALOG_HZ,
+            _ => self.seconds(),
+        }
     }
 
     pub fn tops_per_watt(&self, sp: &MacroSpec) -> f64 {
@@ -334,6 +376,37 @@ mod tests {
         let mut acc2 = EnergyAccount::default();
         acc2.merge(&acc);
         assert_eq!(acc2.macro_ops, 2);
+    }
+
+    #[test]
+    fn transfer_energy_accumulates_outside_breakdown() {
+        let p = EnergyParams::default();
+        let s = sp();
+        let c = counts_for_boundary(8, true, &s);
+        let e = p.op_energy(&c, true, &s);
+        let mut acc = EnergyAccount::default();
+        acc.record(&e, &c);
+        let base_j = acc.total_energy_j();
+        acc.transfer_fj += 1_000.0;
+        acc.transfer_hops += 8;
+        acc.macro_cycles = vec![10, 30, 20];
+        assert!((acc.total_energy_j() - (base_j + 1_000.0e-15)).abs() < 1e-30);
+        assert!(acc.transfer_fraction() > 0.0 && acc.transfer_fraction() < 1.0);
+        // breakdown fractions stay macro-only: unaffected by transfer
+        let sum: f64 = acc.breakdown.fractions().iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // critical path = slowest macro
+        assert!((acc.fleet_seconds() - 30.0 / CLK_ANALOG_HZ).abs() < 1e-18);
+        // merge adds transfer + elementwise macro cycles (with resize)
+        let mut m = EnergyAccount::default();
+        m.macro_cycles = vec![5];
+        m.merge(&acc);
+        m.merge(&acc);
+        assert_eq!(m.transfer_hops, 16);
+        assert_eq!(m.macro_cycles, vec![25, 60, 40]);
+        // single-macro accounts fall back to the aggregate clock
+        let single = EnergyAccount { cycles: 40, ..Default::default() };
+        assert!((single.fleet_seconds() - single.seconds()).abs() < 1e-18);
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //! * [`BackendRegistry`] — string-selectable backend factories.  The
 //!   builtin registry carries `macro-hybrid` (the mode-configurable
 //!   native simulator), `macro-dcim` / `macro-acim` (the all-digital and
-//!   all-analog baselines pinned by name) and `pjrt` (the AOT artifact
-//!   runtime; stub-aware — registered but unavailable without the
-//!   `pjrt` feature).  Future backends (GPU, remote macro, weight-pool
-//!   sharing) land as registry entries, not refactors;
+//!   all-analog baselines pinned by name), `macro-fleet` (K simulated
+//!   macros with sharded placement, split-K transfer accounting and
+//!   CIMPool weight pooling — `sched::fleet`) and `pjrt` (the AOT
+//!   artifact runtime; stub-aware — registered but unavailable without
+//!   the `pjrt` feature).  Future backends (GPU, remote macro) land as
+//!   registry entries, not refactors;
 //! * [`Engine`] / [`EngineBuilder`] — owns the graph, the shared
 //!   weight-stationary [`PlanCache`] and the tile [`ExecPool`], and
 //!   hands out backend instances that all share both:
@@ -46,7 +48,8 @@ use crate::config::{CimMode, SystemConfig};
 use crate::macrosim::ose::Ose;
 use crate::nn::{Executor, QGraph};
 use crate::sched::exec::ExecPool;
-use crate::sched::plan::{PlanCache, PlanCacheStats};
+use crate::sched::fleet::{self, FleetGemm};
+use crate::sched::plan::{FleetDims, PlacementMode, PlanCache, PlanCacheStats};
 use crate::sched::{GemmEngine, GemmResult, MacroGemm};
 use crate::serve::qos::Tier;
 use anyhow::{Context, Result};
@@ -57,22 +60,62 @@ use std::time::Duration;
 
 /// What a backend can do — used for routing decisions (e.g. the
 /// coordinator only programs OSE thresholds into backends that report
-/// `programmable_thresholds`) and for `/v1/version` introspection.
+/// `programmable_thresholds`) and for `/v1/version` + `/healthz` +
+/// `GET /v2/topology` introspection.  Structured around the fleet
+/// topology (`macros` x `residency_bytes`) instead of the pre-fleet
+/// ad-hoc boolean bag ([`BackendCaps`], kept as a deprecated shim for
+/// one release).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct BackendCaps {
+pub struct Capabilities {
     /// The backend can actually execute in this build (the `pjrt` entry
     /// is registered but unavailable without the `pjrt` feature).
     pub available: bool,
     /// The CIM datapath mode this instance runs.
     pub mode: CimMode,
+    /// Simulated macros this backend executes on: 1 for the single-macro
+    /// backends, the fleet size K for `macro-fleet`.
+    pub macros: usize,
+    /// Weight-stationary SRAM residency budget *per macro*, in bytes
+    /// (`residency_tiles` x packed-tile bytes on the fleet; one packed
+    /// tile on single-macro backends).
+    pub residency_bytes: u64,
     /// OSE threshold registers exist and can be re-programmed per call
     /// (the OSA datapath).
     pub programmable_thresholds: bool,
     /// A fixed digital/analog boundary override (`fixed_b`) is
     /// meaningful (HCIM-style hybrid modes).
     pub hybrid_boundary: bool,
+    /// CIMPool-style weight-tile pooling is active as the spill strategy
+    /// when a model exceeds aggregate residency (fleet `auto` placement).
+    pub pooling: bool,
     /// One-line human description.
     pub description: &'static str,
+}
+
+/// The pre-fleet capability shape.  [`Backend::capabilities`] now
+/// returns the structured [`Capabilities`]; convert with `.into()`
+/// while migrating.
+#[deprecated(note = "use Capabilities — Backend::capabilities() returns the structured shape")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendCaps {
+    pub available: bool,
+    pub mode: CimMode,
+    pub programmable_thresholds: bool,
+    pub hybrid_boundary: bool,
+    pub description: &'static str,
+}
+
+#[allow(deprecated)]
+impl From<Capabilities> for BackendCaps {
+    fn from(c: Capabilities) -> Self {
+        BackendCaps {
+            available: c.available,
+            mode: c.mode,
+            programmable_thresholds: c.programmable_thresholds,
+            hybrid_boundary: c.hybrid_boundary,
+            description: c.description,
+        }
+    }
 }
 
 /// Per-call knob overrides — the dynamic D/A boundary of the paper as a
@@ -85,6 +128,9 @@ pub struct BackendKnobs {
     pub fixed_b: Option<i32>,
     /// OSE threshold registers (ascending; OSA mode).
     pub thresholds: Option<Vec<i32>>,
+    /// Fleet placement mode (`auto` / `replicate` / `resident`);
+    /// meaningful on `macro-fleet`, ignored by single-macro backends.
+    pub placement: Option<String>,
 }
 
 /// Object-safe execution backend: the `dyn`-friendly face of
@@ -112,7 +158,7 @@ pub trait Backend: Send {
     fn name(&self) -> &str;
 
     /// Capability surface for routing and introspection.
-    fn capabilities(&self) -> BackendCaps;
+    fn capabilities(&self) -> Capabilities;
 
     /// Re-program the backend's runtime knobs.  Implementations must be
     /// idempotent (applying the current values is a cheap no-op) because
@@ -222,7 +268,7 @@ impl BackendRegistry {
     }
 
     /// The builtin set: `macro-hybrid`, `macro-dcim`, `macro-acim`,
-    /// `pjrt`.
+    /// `macro-fleet`, `pjrt`.
     pub fn builtin() -> Self {
         let mut r = Self::new();
         r.register(BackendSpec {
@@ -243,6 +289,13 @@ impl BackendRegistry {
             description: "native simulator pinned to the full-analog baseline",
             available: true,
             factory: build_macro_acim,
+        });
+        r.register(BackendSpec {
+            name: "macro-fleet",
+            description: "K simulated macros: sharded placement, split-K transfer \
+                          accounting, CIMPool weight pooling ([fleet] / EngineBuilder::fleet)",
+            available: true,
+            factory: build_macro_fleet,
         });
         r.register(BackendSpec {
             name: "pjrt",
@@ -323,13 +376,16 @@ impl Backend for NativeBackend {
         self.reg_name
     }
 
-    fn capabilities(&self) -> BackendCaps {
+    fn capabilities(&self) -> Capabilities {
         let mode = self.inner.mode;
-        BackendCaps {
+        Capabilities {
             available: true,
             mode,
+            macros: 1,
+            residency_bytes: fleet::tile_bytes(&self.inner.spec),
             programmable_thresholds: mode == CimMode::Osa,
             hybrid_boundary: matches!(mode, CimMode::Hcim | CimMode::Osa),
+            pooling: false,
             description: "native cycle-level macro simulator",
         }
     }
@@ -388,6 +444,123 @@ fn build_macro_dcim(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
 
 fn build_macro_acim(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
     build_native(ctx, "macro-acim", CimMode::Acim)
+}
+
+/// The `macro-fleet` registry entry: [`FleetGemm`] over K simulated
+/// macros (geometry and hop costs from `[fleet]`), with the per-request
+/// `placement` knob re-planning placement on demand.
+#[derive(Clone)]
+struct FleetBackend {
+    inner: FleetGemm,
+}
+
+impl Backend for FleetBackend {
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        self.inner.gemm(a, m, k, w, n, layer_idx)
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        self.inner.prepare(w, n, k, layer_idx)
+    }
+
+    fn name(&self) -> &str {
+        fleet::BACKEND_NAME
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        let mode = self.inner.base().mode;
+        let dims = self.inner.fleet();
+        Capabilities {
+            available: true,
+            mode,
+            macros: dims.macros,
+            residency_bytes: dims.residency_tiles as u64
+                * fleet::tile_bytes(&self.inner.base().spec),
+            programmable_thresholds: mode == CimMode::Osa,
+            hybrid_boundary: matches!(mode, CimMode::Hcim | CimMode::Osa),
+            pooling: self.inner.placement_mode() == PlacementMode::Auto,
+            description: "K-macro fleet over the native simulator",
+        }
+    }
+
+    fn apply(&mut self, knobs: &BackendKnobs) -> Result<()> {
+        // placement first: a mode change rebuilds the fleet wrapper,
+        // which re-pins the plan-cache scope and drops the cached
+        // placements — the scalar knobs then land on the rebuilt base
+        if let Some(p) = &knobs.placement {
+            let mode = PlacementMode::parse(p).ok_or_else(|| {
+                anyhow::anyhow!("unknown placement {p:?} (one of: auto, replicate, resident)")
+            })?;
+            if mode != self.inner.placement_mode() {
+                self.inner = FleetGemm::new(
+                    self.inner.base().clone(),
+                    self.inner.fleet(),
+                    mode,
+                    self.inner.hop_energy_fj,
+                    self.inner.hop_latency_cycles,
+                );
+            }
+        }
+        let base = self.inner.base_mut();
+        if let Some(seed) = knobs.noise_seed {
+            base.noise_seed = seed;
+        }
+        if let Some(b) = knobs.fixed_b {
+            base.fixed_b = b;
+        }
+        if let Some(ts) = &knobs.thresholds {
+            if ts.as_slice() != base.ose.thresholds() {
+                base.ose = Ose::with_default_candidates(ts.clone())?;
+            }
+        }
+        Ok(())
+    }
+
+    fn thresholds(&self) -> Option<Vec<i32>> {
+        Some(self.inner.base().ose.thresholds().to_vec())
+    }
+
+    fn clone_backend(&self) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(self.clone()))
+    }
+}
+
+fn build_macro_fleet(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
+    let base = MacroGemm::new(
+        ctx.cfg.mode,
+        ctx.cfg.spec,
+        ctx.cfg.fixed_b,
+        ctx.cfg.thresholds.clone(),
+        ctx.cfg.noise_seed,
+    )?
+    .with_plan_cache(ctx.plans.clone())
+    .with_pool(ctx.pool.clone());
+    let mode = PlacementMode::parse(&ctx.cfg.fleet_placement).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown [fleet] placement {:?} (one of: auto, replicate, resident)",
+            ctx.cfg.fleet_placement
+        )
+    })?;
+    let dims = FleetDims {
+        macros: ctx.cfg.fleet_macros.max(1),
+        residency_tiles: ctx.cfg.fleet_residency_tiles.max(1),
+    };
+    let inner = FleetGemm::new(
+        base,
+        dims,
+        mode,
+        ctx.cfg.fleet_hop_energy_fj,
+        ctx.cfg.fleet_hop_latency_cycles,
+    );
+    Ok(Box::new(FleetBackend { inner }))
 }
 
 /// The PJRT artifact runtime as a registry entry.  Without the `pjrt`
@@ -465,12 +638,15 @@ impl Backend for PjrtBackend {
         "pjrt"
     }
 
-    fn capabilities(&self) -> BackendCaps {
-        BackendCaps {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
             available: true,
             mode: self.mode,
+            macros: 1,
+            residency_bytes: fleet::tile_bytes(&crate::spec::MacroSpec::default()),
             programmable_thresholds: self.mode == CimMode::Osa,
             hybrid_boundary: matches!(self.mode, CimMode::Hcim | CimMode::Osa),
+            pooling: false,
             description: "AOT PJRT artifact runtime",
         }
     }
@@ -519,11 +695,20 @@ pub struct InferOptions {
     /// Digital/analog boundary override in `0..=15` (HCIM-mode
     /// backends); finer (lower) = more digital = more precise.
     pub boundary: Option<i32>,
+    /// Fleet placement override (`auto` / `replicate` / `resident`);
+    /// meaningful on the `macro-fleet` backend, validated at submission.
+    pub placement: Option<String>,
 }
 
 impl Default for InferOptions {
     fn default() -> Self {
-        Self { tier: Tier::Silver, backend: None, noise_seed: None, boundary: None }
+        Self {
+            tier: Tier::Silver,
+            backend: None,
+            noise_seed: None,
+            boundary: None,
+            placement: None,
+        }
     }
 }
 
@@ -690,6 +875,7 @@ pub struct EngineBuilder {
     graph: Option<Arc<QGraph>>,
     backend: Option<String>,
     threads: Option<usize>,
+    fleet: Option<usize>,
     loss_profile: Option<String>,
     registry: Option<Arc<BackendRegistry>>,
     pool: Option<Arc<ExecPool>>,
@@ -719,6 +905,14 @@ impl EngineBuilder {
     /// to the core count — parity tests size pools explicitly).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads);
+        self
+    }
+
+    /// Fleet size K for the `macro-fleet` backend (overrides
+    /// `[fleet] macros`).  Pair with `.backend("macro-fleet")` to make
+    /// the fleet the active backend.
+    pub fn fleet(mut self, macros: usize) -> Self {
+        self.fleet = Some(macros);
         self
     }
 
@@ -760,6 +954,12 @@ impl EngineBuilder {
                 anyhow::bail!("EngineBuilder::threads must be >= 1");
             }
             cfg.engine_threads = t;
+        }
+        if let Some(kf) = self.fleet {
+            if kf == 0 {
+                anyhow::bail!("EngineBuilder::fleet must be >= 1");
+            }
+            cfg.fleet_macros = kf;
         }
         if let Some(b) = self.backend {
             cfg.backend = b;
@@ -814,10 +1014,72 @@ mod tests {
     #[test]
     fn builtin_registry_names_and_order() {
         let r = BackendRegistry::builtin();
-        assert_eq!(r.names(), vec!["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"]);
+        assert_eq!(
+            r.names(),
+            vec!["macro-hybrid", "macro-dcim", "macro-acim", "macro-fleet", "pjrt"]
+        );
         assert!(r.get("macro-hybrid").unwrap().available);
+        assert!(r.get("macro-fleet").unwrap().available);
         #[cfg(not(feature = "pjrt"))]
         assert!(!r.get("pjrt").unwrap().available);
+    }
+
+    #[test]
+    fn fleet_backend_reports_structured_capabilities() {
+        let engine = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .backend("macro-fleet")
+            .fleet(4)
+            .build()
+            .unwrap();
+        let mut b = engine.backend().unwrap();
+        assert_eq!(b.name(), "macro-fleet");
+        let caps = b.capabilities();
+        assert_eq!(caps.macros, 4);
+        assert!(caps.pooling, "auto placement pools by default");
+        // residency = residency_tiles x tile bytes on the paper geometry
+        let tile = fleet::tile_bytes(&engine.config().spec);
+        assert_eq!(
+            caps.residency_bytes,
+            engine.config().fleet_residency_tiles as u64 * tile
+        );
+        // the placement knob re-plans: resident mode never pools
+        b.apply(&BackendKnobs { placement: Some("resident".into()), ..Default::default() })
+            .unwrap();
+        assert!(!b.capabilities().pooling);
+        assert_eq!(b.capabilities().macros, 4);
+        let err = b
+            .apply(&BackendKnobs { placement: Some("bogus".into()), ..Default::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("placement"), "{err}");
+        // single-macro backends ignore the knob instead of failing
+        let mut h = engine.backend_named("macro-hybrid").unwrap();
+        h.apply(&BackendKnobs { placement: Some("resident".into()), ..Default::default() })
+            .unwrap();
+        assert_eq!(h.capabilities().macros, 1);
+        assert!(!h.capabilities().pooling);
+    }
+
+    #[test]
+    fn builder_rejects_zero_fleet() {
+        let err = Engine::builder()
+            .graph(Arc::new(QGraph::synthetic()))
+            .fleet(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_backend_caps_shim_converts() {
+        let engine = synth_engine();
+        let caps = engine.backend().unwrap().capabilities();
+        let old: BackendCaps = caps.into();
+        assert_eq!(old.available, caps.available);
+        assert_eq!(old.mode, caps.mode);
+        assert_eq!(old.programmable_thresholds, caps.programmable_thresholds);
+        assert_eq!(old.hybrid_boundary, caps.hybrid_boundary);
     }
 
     #[test]
@@ -909,6 +1171,7 @@ mod tests {
             noise_seed: Some(7),
             fixed_b: Some(6),
             thresholds: Some(ts.clone()),
+            ..Default::default()
         })
         .unwrap();
         assert_eq!(b.thresholds(), Some(ts));

@@ -20,7 +20,13 @@ fn common_opts() -> Vec<Opt> {
         Opt::value("config", "TOML config file", None),
         Opt::value("results", "directory for result text files", Some("results")),
         Opt::value("mode", "cim mode: dcim|hcim|osa|acim", Some("osa")),
-        Opt::value("backend", "execution backend: macro-hybrid|macro-dcim|macro-acim|pjrt", None),
+        Opt::value(
+            "backend",
+            "execution backend: macro-hybrid|macro-dcim|macro-acim|macro-fleet|pjrt",
+            None,
+        ),
+        Opt::value("fleet", "macro-fleet size K (>= 1; use with --backend macro-fleet)", None),
+        Opt::value("placement", "fleet placement policy: auto|replicate|resident", None),
         Opt::value("fixed-b", "boundary for hcim mode", Some("8")),
         Opt::value("images", "number of test images", Some("128")),
         Opt::value("calib-images", "images for threshold calibration", Some("48")),
@@ -46,6 +52,16 @@ fn build_config(args: &osa_hcim::cli::Args) -> Result<SystemConfig> {
     }
     if let Some(backend) = args.get("backend") {
         cfg.backend = backend.to_string();
+    }
+    if args.get("fleet").is_some() {
+        let k = args.get_usize("fleet", 0)?;
+        if k == 0 {
+            bail!("--fleet must be >= 1");
+        }
+        cfg.fleet_macros = k;
+    }
+    if let Some(p) = args.get("placement") {
+        cfg.fleet_placement = p.to_string();
     }
     cfg.fixed_b = args.get_i32("fixed-b", cfg.fixed_b)?;
     if let Some(sigma) = args.get("sigma") {
@@ -247,6 +263,7 @@ fn main() -> Result<()> {
                 println!("gateway listening on http://{addr}");
                 println!("  GET  http://{addr}/healthz");
                 println!("  GET  http://{addr}/v1/version");
+                println!("  GET  http://{addr}/v2/topology  (fleet placement + transfer cost)");
                 println!("  GET  http://{addr}/metrics      (?format=prometheus for text)");
                 println!("  GET  http://{addr}/debug/trace  (?n=K — Chrome trace-event spans)");
                 println!(

@@ -164,6 +164,26 @@ impl QGraph {
         self.convs.get(name).with_context(|| format!("no conv named {name}"))
     }
 
+    /// `(layer_idx, n, k)` of every GEMM the executor hands the engine,
+    /// with the same layer-index assignment as [`Executor::preplan`] /
+    /// forward (conv layers only — the FC head runs exact on the host).
+    /// The fleet placement planner and `GET /v2/topology` read this.
+    pub fn gemm_dims(&self) -> Vec<(u64, usize, usize)> {
+        let mut dims = Vec::new();
+        let mut layer_idx: u64 = 0;
+        for op in &self.ops {
+            let name = match op {
+                Op::QConv { name, .. } | Op::QConvShortcut { name } => name,
+                _ => continue,
+            };
+            if let Some(conv) = self.convs.get(name) {
+                dims.push((layer_idx, conv.cout, conv.kh * conv.kw * conv.cin));
+            }
+            layer_idx += 1;
+        }
+        dims
+    }
+
     /// A tiny self-contained graph (stem conv -> GAP -> FC) with
     /// deterministic pseudo-random weights — the stand-in used by benches
     /// and integration tests when the AOT artifacts are not built.  It

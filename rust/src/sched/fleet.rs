@@ -1,0 +1,583 @@
+//! Multi-macro fleet execution: shard a layer's `(row-chunk, N-tile)`
+//! plan tiles across K simulated HCIM macros (DESIGN.md §14).
+//!
+//! A single 64x144 macro holds at most one packed weight tile at a time;
+//! a *fleet* models K macros, each with a weight-stationary residency
+//! budget of `residency_tiles` packed tiles (`rows x cols` bit-planes,
+//! [`tile_bytes`] each).  The placement planner ([`super::plan`]) maps
+//! every layer tile to a macro, preferring whole output columns per
+//! macro (no reduce cost) and splitting the K dimension only when one
+//! column's K-tiles exceed a macro's residency.  Split-K is the case
+//! that costs extra: partial sums must hop between macros to reduce, and
+//! [`FleetGemm`] charges an explicit per-hop energy + latency for it on
+//! top of the unchanged per-macro op energy.
+//!
+//! **Determinism contract**: execution reuses the exact single-macro
+//! work units ([`super::cim_unit`]) with the exact per-`(seed, layer,
+//! row, N-tile)` noise streams — placement can never shift a logit.  The
+//! fleet only *reorders* unit execution into per-macro work queues
+//! (units sorted by owning macro, then unit index) and merges results in
+//! that fixed queue order.  At K=1 the queue order is the identity, so
+//! logits, `b_hist`, *and the f64 energy totals* are bit-identical to
+//! [`MacroGemm`].  For K>1 the merge order differs, so energy f64s may
+//! differ across K in the last ulps while logits stay bit-identical.
+//!
+//! [`WeightPool`] is the CIMPool-style spill strategy (arxiv
+//! 2503.22044): identical packed tiles are stored once in a shared pool
+//! with an index map, shrinking a layer's residency demand by its dedup
+//! ratio when a model exceeds aggregate fleet capacity.
+
+use super::plan::{
+    weight_fingerprint, FleetDims, LayerPlacement, LayerPlan, PlacementMode, PlacementPlan,
+    PlanScope,
+};
+use super::{cim_unit, pad_cols, GemmEngine, GemmResult, MacroGemm, UNIT_ROWS};
+use crate::config::CimMode;
+use crate::energy::EnergyAccount;
+use crate::quant::PackedBits;
+use crate::spec::MacroSpec;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Registry name of the fleet backend.
+pub const BACKEND_NAME: &str = "macro-fleet";
+
+/// Bytes of SRAM one packed weight tile occupies: `rows x cols` cells,
+/// one bit each, with rows = hmus * w_bits already encoding the
+/// bit-planes (64 x 144 / 8 = 1152 B on the paper geometry).
+pub fn tile_bytes(sp: &MacroSpec) -> u64 {
+    (sp.hmus * sp.w_bits * sp.cols) as u64 / 8
+}
+
+/// Tile geometry `(nt, kt)` of a `[n, k]` GEMM on this spec.
+pub fn layer_tiles(n: usize, k: usize, sp: &MacroSpec) -> (usize, usize) {
+    (n.div_ceil(sp.hmus).max(1), k.div_ceil(sp.cols).max(1))
+}
+
+/// Whole-model placement for a list of `(layer_idx, n, k)` GEMM dims —
+/// what `GET /v2/topology` reports.  Residency demand is the raw
+/// (un-pooled) tile count; execution-side placement additionally dedups
+/// via [`WeightPool`] in `auto` mode.
+pub fn plan_for_dims(
+    dims: &[(u64, usize, usize)],
+    sp: &MacroSpec,
+    fleet: FleetDims,
+    mode: PlacementMode,
+) -> PlacementPlan {
+    let layers: Vec<(u64, usize, usize, usize)> = dims
+        .iter()
+        .map(|&(idx, n, k)| {
+            let (nt, kt) = layer_tiles(n, k, sp);
+            (idx, nt, kt, nt * kt)
+        })
+        .collect();
+    PlacementPlan::plan(&layers, fleet, mode)
+}
+
+/// CIMPool-style weight pool: a layer's packed tiles deduplicated into
+/// shared storage plus an index map.  Lossless — [`WeightPool::reconstruct`]
+/// rebuilds the exact `[n, k]` weight matrix.
+#[derive(Debug, Clone)]
+pub struct WeightPool {
+    pub nt: usize,
+    pub kt: usize,
+    pub hmus: usize,
+    pub cols: usize,
+    /// Unique padded tiles, `hmus * cols` i32 each.
+    pub tiles: Vec<Vec<i32>>,
+    /// Logical tile `(ni, ki)` (index `ni*kt + ki`) -> pool slot.
+    pub index: Vec<u32>,
+}
+
+impl WeightPool {
+    /// Pool a built layer plan's packed tiles.  Dedup is by content
+    /// (fingerprint bucket + full compare, so a fingerprint collision
+    /// can never alias two different tiles).
+    pub fn from_plan(plan: &LayerPlan) -> Self {
+        let sp = plan.spec;
+        let mut tiles: Vec<Vec<i32>> = Vec::new();
+        let mut index = Vec::with_capacity(plan.nt * plan.kt);
+        let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+        for ni in 0..plan.nt {
+            for ki in 0..plan.kt {
+                let w = plan.unit(ni, ki).weights();
+                let bucket = buckets.entry(weight_fingerprint(w)).or_default();
+                let slot = match bucket.iter().copied().find(|&s| tiles[s as usize] == w) {
+                    Some(s) => s,
+                    None => {
+                        let s = tiles.len() as u32;
+                        tiles.push(w.to_vec());
+                        bucket.push(s);
+                        s
+                    }
+                };
+                index.push(slot);
+            }
+        }
+        Self { nt: plan.nt, kt: plan.kt, hmus: sp.hmus, cols: sp.cols, tiles, index }
+    }
+
+    /// Unique tiles actually stored (the pooled residency demand).
+    pub fn unique_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Logical tiles the layer addresses (`nt * kt`).
+    pub fn logical_tiles(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Dedup ratio, logical / unique (>= 1.0).
+    pub fn compression(&self) -> f64 {
+        self.logical_tiles() as f64 / self.unique_tiles().max(1) as f64
+    }
+
+    /// Rebuild the exact `[n, k]` weight matrix from the pool + index
+    /// map (padding columns/rows are dropped).
+    pub fn reconstruct(&self, n: usize, k: usize) -> Vec<i32> {
+        let mut out = vec![0i32; n * k];
+        for ni in 0..self.nt {
+            for ki in 0..self.kt {
+                let tile = &self.tiles[self.index[ni * self.kt + ki] as usize];
+                let c0 = ki * self.cols;
+                let width = self.cols.min(k.saturating_sub(c0));
+                for h in 0..self.hmus {
+                    let row = ni * self.hmus + h;
+                    if row >= n || width == 0 {
+                        continue;
+                    }
+                    out[row * k + c0..row * k + c0 + width]
+                        .copy_from_slice(&tile[h * self.cols..h * self.cols + width]);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Fleet GEMM engine: [`MacroGemm`] semantics sharded over K simulated
+/// macros with per-macro work queues, split-K transfer accounting, and
+/// per-macro cycle attribution (the modeled fleet-scaling curve).
+///
+/// Cloning shares the plan cache, the placement cache, and the exec
+/// pool with the source engine, like [`MacroGemm`].
+#[derive(Debug, Clone)]
+pub struct FleetGemm {
+    base: MacroGemm,
+    fleet: FleetDims,
+    placement_mode: PlacementMode,
+    /// Energy per partial sum per inter-macro hop, femtojoules.
+    pub hop_energy_fj: f64,
+    /// Latency per inter-macro hop, analog-clock cycles.
+    pub hop_latency_cycles: u64,
+    /// Per-layer placements, shared across clones (same lifetime rules
+    /// as the plan cache: stable `layer_idx` per weight matrix).
+    placements: Arc<Mutex<HashMap<u64, Arc<LayerPlacement>>>>,
+}
+
+impl FleetGemm {
+    /// Wrap a configured single-macro engine into a fleet.  The base
+    /// engine's plan-cache scope is re-pinned to the fleet's
+    /// `(backend, fleet_k, placement)` key so fleet plans never collide
+    /// with single-macro plans in a shared cache.
+    pub fn new(
+        base: MacroGemm,
+        fleet: FleetDims,
+        placement_mode: PlacementMode,
+        hop_energy_fj: f64,
+        hop_latency_cycles: u64,
+    ) -> Self {
+        let scope = PlanScope::for_backend(BACKEND_NAME, fleet.macros, placement_mode);
+        Self {
+            base: base.with_plan_scope(scope),
+            fleet,
+            placement_mode,
+            hop_energy_fj,
+            hop_latency_cycles,
+            placements: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    pub fn base(&self) -> &MacroGemm {
+        &self.base
+    }
+
+    /// Mutable access to the wrapped single-macro engine — the scalar
+    /// knob path (`noise_seed`, `fixed_b`, OSE registers).
+    pub fn base_mut(&mut self) -> &mut MacroGemm {
+        &mut self.base
+    }
+
+    pub fn fleet(&self) -> FleetDims {
+        self.fleet
+    }
+
+    pub fn placement_mode(&self) -> PlacementMode {
+        self.placement_mode
+    }
+
+    /// The placement chosen for `layer_idx` (planned on first use).
+    pub fn placement_of(&self, layer_idx: u64) -> Option<Arc<LayerPlacement>> {
+        self.placements.lock().unwrap().get(&layer_idx).cloned()
+    }
+
+    fn placement_for(&self, plan: &Arc<LayerPlan>) -> Arc<LayerPlacement> {
+        let mut map = self.placements.lock().unwrap();
+        map.entry(plan.layer_idx)
+            .or_insert_with(|| {
+                // pooling (auto only) shrinks the residency demand fed
+                // to the planner by the layer's dedup ratio
+                let unique = if self.placement_mode == PlacementMode::Auto {
+                    WeightPool::from_plan(plan).unique_tiles()
+                } else {
+                    plan.nt * plan.kt
+                };
+                Arc::new(LayerPlacement::plan(
+                    plan.layer_idx,
+                    plan.nt,
+                    plan.kt,
+                    unique,
+                    self.fleet,
+                    self.placement_mode,
+                ))
+            })
+            .clone()
+    }
+
+    /// Per-K-tile cycle count for a row that resolved boundary `b` —
+    /// the same op-count template [`EnergyAccount::record`] charged, so
+    /// per-macro attribution sums exactly to the aggregate `cycles`.
+    fn tile_cycles(&self, plan: &LayerPlan, b: i32) -> u64 {
+        let counts = match self.base.mode {
+            CimMode::Pg | CimMode::Drq => unreachable!("dual precision delegates to the base"),
+            CimMode::Dcim => plan.counts(0, false),
+            CimMode::Acim => plan.acim_counts(),
+            CimMode::Hcim => plan.counts(b, false),
+            CimMode::Osa => plan.counts(b, true),
+        };
+        counts.total_cycles() as u64
+    }
+
+    /// Fleet CIM executor: same prologue and work units as
+    /// [`MacroGemm`]'s CIM path, but units run in per-macro queue order
+    /// and the merge adds split-K transfer cost + per-macro cycles.
+    fn execute_cim_fleet(
+        &self,
+        plan: &Arc<LayerPlan>,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        let sp = self.base.spec;
+        let (kt, nt, k_pad, n_pad, n) = (plan.kt, plan.nt, plan.k_pad, plan.n_pad, plan.n);
+        let lp = self.placement_for(plan);
+        let a_p: Arc<Vec<i32>> = Arc::new(pad_cols(a, m, k, k_pad));
+
+        let mut packed = Vec::new();
+        if self.base.mode != CimMode::Dcim {
+            packed.reserve(m * kt);
+            for s in 0..m {
+                for ki in 0..kt {
+                    let tile = &a_p[s * k_pad + ki * sp.cols..s * k_pad + (ki + 1) * sp.cols];
+                    packed.push(PackedBits::pack(tile, sp.a_bits, false));
+                }
+            }
+        }
+        let a_packed: Arc<Vec<PackedBits>> = Arc::new(packed);
+
+        let n_slices = self.base.n_slices();
+        let chunks = m.div_ceil(UNIT_ROWS).max(1);
+        let nu = chunks * nt;
+
+        // Per-macro work queues: a unit is owned by the macro holding
+        // its replica's first K-tile; queues drain in unit-index order.
+        // At K=1 every owner is macro 0, so the order is the identity —
+        // the bit-parity guarantee with the single-macro path.
+        let owner = |u: usize| {
+            let (ci, ni) = (u / nt, u % nt);
+            lp.macro_of(ni, 0, ci % lp.replicas)
+        };
+        let mut order: Vec<usize> = (0..nu).collect();
+        order.sort_by_key(|&u| (owner(u), u));
+
+        let results = self.base.pool().run_indexed(nu, |slot| {
+            let u = order[slot];
+            let (ci, ni) = (u / nt, u % nt);
+            let (s0, s1) = (ci * UNIT_ROWS, ((ci + 1) * UNIT_ROWS).min(m));
+            let plan = plan.clone();
+            let a_p = a_p.clone();
+            let a_packed = a_packed.clone();
+            let mode = self.base.mode;
+            let ose = self.base.ose.clone();
+            let energy = self.base.energy;
+            let fixed_b = self.base.fixed_b;
+            let noise_seed = self.base.noise_seed;
+            move || {
+                cim_unit(
+                    &plan, &a_p, &a_packed, mode, &ose, energy, fixed_b, noise_seed, layer_idx,
+                    k, s0, s1, ni, n_slices,
+                )
+            }
+        });
+
+        let mut out = vec![0i32; m * n_pad];
+        let mut account = EnergyAccount::default();
+        let mut b_hist = [0u64; 16];
+        let mut bda = vec![0i32; m * nt];
+        let mut macro_cycles = vec![0u64; self.fleet.macros.max(1)];
+        for (slot, unit) in results.iter().enumerate() {
+            let u = order[slot];
+            let (ci, ni) = (u / nt, u % nt);
+            let s0 = ci * UNIT_ROWS;
+            let replica = ci % lp.replicas;
+            let span = lp.k_span(ni);
+            for (r, &b) in unit.boundaries.iter().enumerate() {
+                let s = s0 + r;
+                bda[s * nt + ni] = b;
+                if (0..16).contains(&b) {
+                    b_hist[b as usize] += kt as u64;
+                }
+                out[s * n_pad + ni * sp.hmus..s * n_pad + (ni + 1) * sp.hmus]
+                    .copy_from_slice(&unit.vals[r * sp.hmus..(r + 1) * sp.hmus]);
+                // per-macro cycle attribution: each K-tile's op runs on
+                // the macro that holds the tile
+                let per_tile = self.tile_cycles(plan, b);
+                for ki in 0..kt {
+                    macro_cycles[lp.macro_of(ni, ki, replica)] += per_tile;
+                }
+                // split-K reduce: (span-1) hops per row, each carrying
+                // the N-tile's hmus partial sums; latency lands on the
+                // macro that owns the reduce tail
+                if span > 1 {
+                    let hops = (span - 1) as u64 * sp.hmus as u64;
+                    account.transfer_hops += hops;
+                    account.transfer_fj += hops as f64 * self.hop_energy_fj;
+                    let lat = (span - 1) as u64 * self.hop_latency_cycles;
+                    account.cycles += lat;
+                    macro_cycles[lp.macro_of(ni, kt - 1, replica)] += lat;
+                }
+            }
+            account.merge(&unit.account);
+        }
+        account.macro_cycles = macro_cycles;
+
+        let mut final_out = vec![0i32; m * n];
+        for s in 0..m {
+            final_out[s * n..(s + 1) * n].copy_from_slice(&out[s * n_pad..s * n_pad + n]);
+        }
+        Ok(GemmResult { out: final_out, m, n, account, b_hist, bda, n_tiles: nt })
+    }
+}
+
+impl GemmEngine for FleetGemm {
+    fn name(&self) -> &str {
+        BACKEND_NAME
+    }
+
+    fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
+        self.base.prepare(w, n, k, layer_idx)
+    }
+
+    fn gemm(
+        &mut self,
+        a: &[i32],
+        m: usize,
+        k: usize,
+        w: &[i32],
+        n: usize,
+        layer_idx: u64,
+    ) -> Result<GemmResult> {
+        // PG/DRQ are all-digital dual-precision baselines with no macro
+        // residency story; they run the base executor unchanged.
+        if matches!(self.base.mode, CimMode::Pg | CimMode::Drq) {
+            return self.base.gemm(a, m, k, w, n, layer_idx);
+        }
+        let plan = self.base.plan_cache().get_or_build_scoped(
+            self.base.plan_scope(),
+            layer_idx,
+            w,
+            n,
+            k,
+            self.base.spec,
+        )?;
+        self.execute_cim_fleet(&plan, a, m, k, layer_idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_mat(g: &mut SplitMix64, rows: usize, cols: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..rows * cols).map(|_| g.next_range_i32(lo, hi)).collect()
+    }
+
+    fn fleet_of(mode: CimMode, macros: usize, residency_tiles: usize) -> FleetGemm {
+        FleetGemm::new(
+            MacroGemm::with_mode(mode),
+            FleetDims { macros, residency_tiles },
+            PlacementMode::Auto,
+            120.0,
+            2,
+        )
+    }
+
+    #[test]
+    fn tile_bytes_matches_paper_geometry() {
+        // 64 rows x 144 cols, one bit per cell = 1152 bytes
+        assert_eq!(tile_bytes(&MacroSpec::default()), 1152);
+    }
+
+    #[test]
+    fn k1_fleet_is_bit_identical_to_single_macro() {
+        let mut rng = SplitMix64::new(11);
+        let (m, k, n) = (20, 300, 20);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        for mode in [CimMode::Osa, CimMode::Hcim, CimMode::Dcim, CimMode::Acim] {
+            let base = MacroGemm::with_mode(mode).gemm(&a, m, k, &w, n, 7).unwrap();
+            let fleet = fleet_of(mode, 1, 1).gemm(&a, m, k, &w, n, 7).unwrap();
+            assert_eq!(fleet.out, base.out, "{mode:?} logits");
+            assert_eq!(fleet.bda, base.bda, "{mode:?} bda");
+            assert_eq!(fleet.b_hist, base.b_hist, "{mode:?} b_hist");
+            assert_eq!(
+                fleet.account.total_energy_j().to_bits(),
+                base.account.total_energy_j().to_bits(),
+                "{mode:?} energy must be f64-bit-identical at K=1"
+            );
+            assert_eq!(fleet.account.cycles, base.account.cycles, "{mode:?} cycles");
+            assert_eq!(fleet.account.transfer_fj, 0.0);
+            // per-macro attribution covers the whole execution exactly
+            assert_eq!(fleet.account.macro_cycles, vec![base.account.cycles]);
+        }
+    }
+
+    #[test]
+    fn split_k_charges_transfer_but_never_shifts_logits() {
+        let mut rng = SplitMix64::new(12);
+        // kt = 3 > residency 1 -> every column spans 3 macros
+        let (m, k, n) = (8, 3 * crate::spec::COLS, 16);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let base = MacroGemm::with_mode(CimMode::Osa).gemm(&a, m, k, &w, n, 3).unwrap();
+        let mut fleet = fleet_of(CimMode::Osa, 4, 1);
+        let r = fleet.gemm(&a, m, k, &w, n, 3).unwrap();
+        assert_eq!(r.out, base.out, "placement must never shift logits");
+        assert_eq!(r.bda, base.bda);
+        let lp = fleet.placement_of(3).unwrap();
+        assert!(lp.split_k());
+        assert!(r.account.transfer_fj > 0.0);
+        assert!(r.account.transfer_hops > 0);
+        assert!(r.account.transfer_fraction() > 0.0);
+        // reduce latency is on top of the base compute cycles
+        assert!(r.account.cycles > base.account.cycles);
+        // work landed on more than one macro
+        let busy = r.account.macro_cycles.iter().filter(|&&c| c > 0).count();
+        assert!(busy > 1, "macro_cycles = {:?}", r.account.macro_cycles);
+        // expected hop count: (span-1) * hmus partial sums per row per
+        // N-tile column
+        let spans: u64 = (0..lp.nt).map(|ni| (lp.k_span(ni) - 1) as u64).sum();
+        let hmus = MacroSpec::default().hmus as u64;
+        assert_eq!(r.account.transfer_hops, m as u64 * spans * hmus);
+        assert_eq!(
+            r.account.transfer_fj,
+            r.account.transfer_hops as f64 * fleet.hop_energy_fj
+        );
+    }
+
+    #[test]
+    fn fleet_runs_are_repeatable_per_k() {
+        let mut rng = SplitMix64::new(13);
+        let (m, k, n) = (10, 300, 12);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let k1 = fleet_of(CimMode::Osa, 1, 64).gemm(&a, m, k, &w, n, 0).unwrap();
+        for macros in [2, 4] {
+            let mut f = fleet_of(CimMode::Osa, macros, 1);
+            let r1 = f.gemm(&a, m, k, &w, n, 0).unwrap();
+            let r2 = f.gemm(&a, m, k, &w, n, 0).unwrap();
+            assert_eq!(r1.out, r2.out, "K={macros} repeatable");
+            assert_eq!(
+                r1.account.total_energy_j().to_bits(),
+                r2.account.total_energy_j().to_bits(),
+                "K={macros} energy repeatable"
+            );
+            assert_eq!(r1.out, k1.out, "K={macros} logits match K=1");
+        }
+    }
+
+    #[test]
+    fn replicated_layers_spread_work_across_the_fleet() {
+        let mut rng = SplitMix64::new(14);
+        // one tile per layer, fleet of 4 with room: replicas = 4, row
+        // chunks round-robin across them
+        let (m, k, n) = (64, 100, 8);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let mut f = fleet_of(CimMode::Hcim, 4, 4);
+        let r = f.gemm(&a, m, k, &w, n, 0).unwrap();
+        let lp = f.placement_of(0).unwrap();
+        assert_eq!(lp.replicas, 4);
+        assert!(!lp.split_k());
+        assert_eq!(r.account.transfer_fj, 0.0, "replication alone costs no transfer");
+        let busy = r.account.macro_cycles.iter().filter(|&&c| c > 0).count();
+        assert_eq!(busy, 4, "macro_cycles = {:?}", r.account.macro_cycles);
+        // attribution is exhaustive: per-macro cycles sum to the
+        // aggregate (no reduce latency here)
+        assert_eq!(r.account.macro_cycles.iter().sum::<u64>(), r.account.cycles);
+        assert!(r.account.fleet_seconds() < r.account.seconds());
+    }
+
+    #[test]
+    fn weight_pool_round_trips_exactly() {
+        let sp = MacroSpec::default();
+        let mut rng = SplitMix64::new(15);
+        let (n, k) = (20, 300);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let plan = LayerPlan::build(&w, n, k, 0, sp).unwrap();
+        let pool = WeightPool::from_plan(&Arc::new(plan));
+        assert_eq!(pool.logical_tiles(), pool.nt * pool.kt);
+        assert_eq!(pool.reconstruct(n, k), w, "pool + index map must rebuild exact weights");
+    }
+
+    #[test]
+    fn weight_pool_dedups_identical_tiles() {
+        let sp = MacroSpec::default();
+        // two K-tiles per row with identical contents: w = [t | t]
+        let (n, k) = (8, 2 * sp.cols);
+        let mut rng = SplitMix64::new(16);
+        let half = rand_mat(&mut rng, n, sp.cols, -128, 128);
+        let mut w = Vec::with_capacity(n * k);
+        for r in 0..n {
+            w.extend_from_slice(&half[r * sp.cols..(r + 1) * sp.cols]);
+            w.extend_from_slice(&half[r * sp.cols..(r + 1) * sp.cols]);
+        }
+        let plan = LayerPlan::build(&w, n, k, 0, sp).unwrap();
+        let pool = WeightPool::from_plan(&plan);
+        assert_eq!(pool.logical_tiles(), 2);
+        assert_eq!(pool.unique_tiles(), 1, "identical K-tiles must share one pool slot");
+        assert!((pool.compression() - 2.0).abs() < 1e-12);
+        assert_eq!(pool.reconstruct(n, k), w);
+    }
+
+    #[test]
+    fn plan_for_dims_reports_topology() {
+        let sp = MacroSpec::default();
+        let fleet = FleetDims { macros: 4, residency_tiles: 1 };
+        // layer 0: k = 2*cols -> kt=2 > residency -> split-K
+        let pp = plan_for_dims(
+            &[(0, 8, 2 * sp.cols), (1, 8, 100)],
+            &sp,
+            fleet,
+            PlacementMode::Auto,
+        );
+        assert_eq!(pp.layers.len(), 2);
+        assert!(pp.layers[0].split_k());
+        assert!(!pp.layers[1].split_k());
+        assert_eq!(pp.capacity_tiles(), 4);
+        assert_eq!(pp.macro_residency().len(), 4);
+    }
+}

@@ -29,6 +29,7 @@
 //! plans never shifts the noise either.
 
 pub mod exec;
+pub mod fleet;
 pub mod im2col;
 pub mod plan;
 
@@ -40,14 +41,14 @@ use crate::spec::MacroSpec;
 use crate::util::prng::{unit_noise_seed, SplitMix64};
 use anyhow::Result;
 use exec::ExecPool;
-use plan::{LayerPlan, PlanCache, PlanCacheStats};
+use plan::{LayerPlan, PlanCache, PlanCacheStats, PlanScope};
 use std::sync::Arc;
 
 /// Rows per work unit: small enough that concurrent requests interleave
 /// at fine granularity on a shared pool, large enough to amortize the
 /// per-unit queue hop.  Purely a scheduling knob — noise streams are
 /// per *row*, so the chunk size can never shift results.
-const UNIT_ROWS: usize = 16;
+pub(crate) const UNIT_ROWS: usize = 16;
 
 /// Pad a row-major `[m, k]` matrix to `[m, k_pad]` with zeros.
 pub fn pad_cols(a: &[i32], m: usize, k: usize, k_pad: usize) -> Vec<i32> {
@@ -133,6 +134,11 @@ pub struct MacroGemm {
     pub drq_thresh: i32,
     /// Weight-stationary layer plans, shared across clones.
     plans: Arc<PlanCache>,
+    /// Plan-cache scope this engine builds/fetches under.  Stays
+    /// [`PlanScope::SINGLE`] for the single-macro path; the fleet engine
+    /// sets its `(backend, fleet_k, placement)` scope so differently
+    /// sharded plans never collide in a shared cache.
+    plan_scope: PlanScope,
     /// Tile-execution pool, shared across clones.  `None` = fall back
     /// to [`ExecPool::global`] lazily at execution time, so merely
     /// constructing an engine never spawns threads.
@@ -157,6 +163,7 @@ impl MacroGemm {
             pg_delta: 1 << 13,
             drq_thresh: 48,
             plans: Arc::new(PlanCache::new()),
+            plan_scope: PlanScope::SINGLE,
             pool: None,
         })
     }
@@ -173,6 +180,7 @@ impl MacroGemm {
             pg_delta: 1 << 13,
             drq_thresh: 48,
             plans: Arc::new(PlanCache::new()),
+            plan_scope: PlanScope::SINGLE,
             pool: None,
         }
     }
@@ -181,6 +189,13 @@ impl MacroGemm {
     /// per server, so plans survive engine reconstruction).
     pub fn with_plan_cache(mut self, plans: Arc<PlanCache>) -> Self {
         self.plans = plans;
+        self
+    }
+
+    /// Scope plan-cache lookups to a `(backend, fleet_k, placement)`
+    /// key (see [`PlanScope::for_backend`]).
+    pub fn with_plan_scope(mut self, scope: PlanScope) -> Self {
+        self.plan_scope = scope;
         self
     }
 
@@ -208,12 +223,17 @@ impl MacroGemm {
         &self.plans
     }
 
+    /// The plan-cache scope this engine reads and writes.
+    pub fn plan_scope(&self) -> PlanScope {
+        self.plan_scope
+    }
+
     /// Cache activity snapshot (hit rate, packed layer count).
     pub fn plan_stats(&self) -> PlanCacheStats {
         self.plans.stats()
     }
 
-    fn n_slices(&self) -> usize {
+    pub(crate) fn n_slices(&self) -> usize {
         self.spec.a_bits.div_ceil(self.spec.analog_band as usize)
     }
 
@@ -382,12 +402,12 @@ impl MacroGemm {
 
 /// One work unit's result: one N-tile's output for a chunk of rows,
 /// already accumulated over every K-tile.
-struct UnitOut {
+pub(crate) struct UnitOut {
     /// `[rows, hmus]` accumulators.
-    vals: Vec<i32>,
+    pub(crate) vals: Vec<i32>,
     /// Per-row boundary (CIM modes) or full-precision flag (PG/DRQ).
-    boundaries: Vec<i32>,
-    account: EnergyAccount,
+    pub(crate) boundaries: Vec<i32>,
+    pub(crate) account: EnergyAccount,
 }
 
 /// Draw one K-tile's noise buffer from the unit's stream, or zeros
@@ -405,7 +425,7 @@ fn draw_noise(stream: &mut SplitMix64, n: usize, sigma: f64) -> Vec<f32> {
 /// computing pass fused per row; noise per `(layer, row, N-tile)` stream
 /// advanced K-tile-major (DESIGN.md §6).
 #[allow(clippy::too_many_arguments)]
-fn cim_unit(
+pub(crate) fn cim_unit(
     plan: &LayerPlan,
     a_p: &[i32],
     a_packed: &[PackedBits],
@@ -560,7 +580,9 @@ impl GemmEngine for MacroGemm {
     }
 
     fn prepare(&mut self, w: &[i32], n: usize, k: usize, layer_idx: u64) -> Result<()> {
-        self.plans.get_or_build(layer_idx, w, n, k, self.spec).map(|_| ())
+        self.plans
+            .get_or_build_scoped(self.plan_scope, layer_idx, w, n, k, self.spec)
+            .map(|_| ())
     }
 
     fn gemm(
@@ -572,7 +594,7 @@ impl GemmEngine for MacroGemm {
         n: usize,
         layer_idx: u64,
     ) -> Result<GemmResult> {
-        let plan = self.plans.get_or_build(layer_idx, w, n, k, self.spec)?;
+        let plan = self.plans.get_or_build_scoped(self.plan_scope, layer_idx, w, n, k, self.spec)?;
         if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
             self.execute_dual(&plan, a, m, k)
         } else {

@@ -173,6 +173,266 @@ impl LayerPlan {
     }
 }
 
+/// How the fleet placement planner trades replication against residency
+/// (`[fleet] placement`, overridable per request via
+/// `options.placement` on `POST /v2/infer`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementMode {
+    /// Replicate each layer to fill the fleet; fall back to CIMPool-style
+    /// weight pooling (tile dedup) and finally wrap-around assignment
+    /// when a layer alone exceeds the fleet's residency.
+    #[default]
+    Auto,
+    /// Maximize replicas for throughput and never pool — duplicate tiles
+    /// cost residency; oversized layers wrap around the fleet.
+    Replicate,
+    /// One replica, no pooling: every tile must be weight-stationary
+    /// resident.  A model over aggregate capacity is rejected
+    /// (`FleetCapacityExceeded`) instead of silently repacking.
+    Resident,
+}
+
+impl PlacementMode {
+    pub const ALL: [PlacementMode; 3] =
+        [PlacementMode::Auto, PlacementMode::Replicate, PlacementMode::Resident];
+
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "auto" => Some(Self::Auto),
+            "replicate" => Some(Self::Replicate),
+            "resident" => Some(Self::Resident),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Replicate => "replicate",
+            Self::Resident => "resident",
+        }
+    }
+}
+
+/// Fleet geometry the placement planner needs (resolved from `[fleet]`
+/// config by `sched::fleet`; decoupled from `SystemConfig` so the
+/// planner is testable standalone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetDims {
+    /// Simulated macro count K.
+    pub macros: usize,
+    /// Per-macro weight-stationary residency budget, in packed tiles.
+    pub residency_tiles: usize,
+}
+
+/// Where one layer's packed weight tiles live on the fleet.
+///
+/// `assign` maps tile `(ni, ki)` (index `ni*kt + ki`) to a macro id for
+/// replica 0; replica `r` lives at `assign[t] + r*stride`.  Work units
+/// pick their replica round-robin by row chunk, so replicas split the
+/// activation stream deterministically.
+#[derive(Debug, Clone)]
+pub struct LayerPlacement {
+    pub layer_idx: u64,
+    pub nt: usize,
+    pub kt: usize,
+    pub fleet_k: usize,
+    /// Tile -> macro id (replica 0), `[nt*kt]` row-major like the plan.
+    pub assign: Vec<u16>,
+    /// Whole-layer replicas packed onto the fleet (>= 1).
+    pub replicas: usize,
+    /// Macro-id offset between consecutive replicas.
+    pub stride: usize,
+    /// Distinct macros one replica occupies.
+    pub macros_needed: usize,
+    /// Assignment wrapped past the fleet: residency is overcommitted and
+    /// tiles stream in on demand (reported, not fatal).
+    pub wrapped: bool,
+}
+
+impl LayerPlacement {
+    /// Plan one layer's tiles onto the fleet.  `unique_tiles` is the
+    /// layer's deduplicated tile count (pooling input); pass `nt*kt`
+    /// when pooling is off or unknown.
+    ///
+    /// Sharding prefers the N dimension (whole output columns per macro,
+    /// no reduce cost) and splits K only when one column's K-tiles
+    /// exceed a single macro's residency — split-K is what incurs the
+    /// inter-macro partial-sum transfer charge.
+    pub fn plan(
+        layer_idx: u64,
+        nt: usize,
+        kt: usize,
+        unique_tiles: usize,
+        fleet: FleetDims,
+        mode: PlacementMode,
+    ) -> Self {
+        let fleet_k = fleet.macros.max(1);
+        let tiles = nt * kt;
+        // CIMPool-style spill: in auto mode a layer past the whole
+        // fleet's budget gets its residency demand scaled down by the
+        // dedup ratio (shared tiles are resident once, indexed many
+        // times).  Replicate never pools; resident rejects upstream.
+        let mut residency = fleet.residency_tiles.max(1);
+        if mode == PlacementMode::Auto
+            && tiles > fleet_k * residency
+            && unique_tiles > 0
+            && unique_tiles < tiles
+        {
+            residency = residency * tiles / unique_tiles;
+        }
+        let col_macros = kt.div_ceil(residency).max(1);
+        let mut assign = Vec::with_capacity(tiles);
+        let mut macros_needed;
+        if col_macros == 1 {
+            let cols_per_macro = (residency / kt.max(1)).max(1);
+            macros_needed = nt.div_ceil(cols_per_macro);
+            for ni in 0..nt {
+                for _ki in 0..kt {
+                    assign.push((ni / cols_per_macro) as u16);
+                }
+            }
+        } else {
+            macros_needed = nt * col_macros;
+            for ni in 0..nt {
+                for ki in 0..kt {
+                    assign.push((ni * col_macros + ki / residency) as u16);
+                }
+            }
+        }
+        let wrapped = macros_needed > fleet_k;
+        if wrapped {
+            for a in &mut assign {
+                *a = (*a as usize % fleet_k) as u16;
+            }
+            macros_needed = fleet_k;
+        }
+        let replicas = match mode {
+            PlacementMode::Resident => 1,
+            PlacementMode::Auto | PlacementMode::Replicate => (fleet_k / macros_needed).max(1),
+        };
+        Self {
+            layer_idx,
+            nt,
+            kt,
+            fleet_k,
+            assign,
+            replicas,
+            stride: macros_needed,
+            macros_needed,
+            wrapped,
+        }
+    }
+
+    /// Macro executing tile `(ni, ki)` for replica `r`.
+    #[inline]
+    pub fn macro_of(&self, ni: usize, ki: usize, replica: usize) -> usize {
+        self.assign[ni * self.kt + ki] as usize + (replica % self.replicas) * self.stride
+    }
+
+    /// Distinct macros across column `ni`'s K-tiles — a span > 1 means
+    /// split-K: partial sums must hop between macros to reduce.
+    pub fn k_span(&self, ni: usize) -> usize {
+        let col = &self.assign[ni * self.kt..(ni + 1) * self.kt];
+        let mut seen: Vec<u16> = col.to_vec();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    /// Whether any column is split across macros.
+    pub fn split_k(&self) -> bool {
+        (0..self.nt).any(|ni| self.k_span(ni) > 1)
+    }
+
+    /// Resident tiles on macro `m`, counting every replica.
+    pub fn tiles_on(&self, m: usize) -> usize {
+        (0..self.replicas)
+            .map(|r| {
+                self.assign
+                    .iter()
+                    .filter(|&&a| a as usize + r * self.stride == m)
+                    .count()
+            })
+            .sum()
+    }
+}
+
+/// Whole-model placement: every layer's [`LayerPlacement`] plus the
+/// aggregate residency picture — what `GET /v2/topology` reports and
+/// what the coordinator's resident-mode capacity check reads.
+#[derive(Debug, Clone)]
+pub struct PlacementPlan {
+    pub fleet: FleetDims,
+    pub mode: PlacementMode,
+    pub layers: Vec<LayerPlacement>,
+    /// Total packed tiles across all layers (one replica each).
+    pub total_tiles: usize,
+    /// Deduplicated tiles (pooled residency demand).
+    pub unique_tiles: usize,
+}
+
+impl PlacementPlan {
+    /// Plan a whole model.  `layers` carries `(layer_idx, nt, kt,
+    /// unique_tiles)` per GEMM layer in stable graph order.
+    pub fn plan(
+        layers: &[(u64, usize, usize, usize)],
+        fleet: FleetDims,
+        mode: PlacementMode,
+    ) -> Self {
+        let placed: Vec<LayerPlacement> = layers
+            .iter()
+            .map(|&(idx, nt, kt, uniq)| LayerPlacement::plan(idx, nt, kt, uniq, fleet, mode))
+            .collect();
+        let total_tiles = layers.iter().map(|&(_, nt, kt, _)| nt * kt).sum();
+        let unique_tiles = layers.iter().map(|&(_, _, _, u)| u).sum();
+        Self { fleet, mode, layers: placed, total_tiles, unique_tiles }
+    }
+
+    /// Aggregate fleet capacity in tiles.
+    pub fn capacity_tiles(&self) -> usize {
+        self.fleet.macros * self.fleet.residency_tiles
+    }
+
+    /// Resident tiles per macro (replicas included).
+    pub fn macro_residency(&self) -> Vec<usize> {
+        let mut per = vec![0usize; self.fleet.macros.max(1)];
+        for lp in &self.layers {
+            for (m, slot) in per.iter_mut().enumerate() {
+                *slot += lp.tiles_on(m);
+            }
+        }
+        per
+    }
+}
+
+/// Cache scope: `(backend, fleet_k, placement)` folded into one key so
+/// plans built for different fleet shapes can never shadow each other
+/// (switching fleet sizes at runtime used to serve the stale
+/// single-macro plan — the key ignored fleet geometry entirely).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct PlanScope(pub u64);
+
+impl PlanScope {
+    /// The legacy single-macro scope (every pre-fleet caller).
+    pub const SINGLE: PlanScope = PlanScope(0);
+
+    /// Fold a backend name + fleet geometry + placement mode into a
+    /// scope key (FNV-style mixing; never collides with `SINGLE`).
+    pub fn for_backend(backend: &str, fleet_k: usize, placement: PlacementMode) -> Self {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for &b in backend.as_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h ^= (fleet_k as u64).wrapping_add(1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 31;
+        h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= (placement as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= h >> 29;
+        PlanScope(h.max(1))
+    }
+}
+
 /// Snapshot of cache activity, for metrics / benches / tests.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PlanCacheStats {
@@ -205,9 +465,16 @@ impl PlanCacheStats {
 /// index are rejected loudly rather than silently recomputed (contents
 /// via [`weight_fingerprint`], an O(n*k) check that is negligible next
 /// to the O(m*n*k) GEMM it guards).
+///
+/// Plans are additionally keyed by a [`PlanScope`] — `(backend, fleet_k,
+/// placement)` folded to a `u64` — so a fleet-sharded build can never
+/// shadow (or be served) the single-macro plan for the same layer when
+/// the fleet size changes at runtime.  Legacy callers use
+/// [`PlanCache::get_or_build`], which pins [`PlanScope::SINGLE`].
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<u64, Arc<LayerPlan>>>,
+    plans: Mutex<HashMap<(u64, u64), Arc<LayerPlan>>>,
+    placements: Mutex<HashMap<u64, Arc<PlacementPlan>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -217,9 +484,7 @@ impl PlanCache {
         Self::default()
     }
 
-    /// Fetch the plan for `layer_idx`, packing the weights on the first
-    /// call only.  Concurrent callers serialize on the cache lock, so a
-    /// plan is never built twice.
+    /// Fetch the plan for `layer_idx` in the legacy single-macro scope.
     pub fn get_or_build(
         &self,
         layer_idx: u64,
@@ -228,8 +493,23 @@ impl PlanCache {
         k: usize,
         sp: MacroSpec,
     ) -> Result<Arc<LayerPlan>> {
+        self.get_or_build_scoped(PlanScope::SINGLE, layer_idx, w, n, k, sp)
+    }
+
+    /// Fetch the plan for `(scope, layer_idx)`, packing the weights on
+    /// the first call only.  Concurrent callers serialize on the cache
+    /// lock, so a plan is never built twice.
+    pub fn get_or_build_scoped(
+        &self,
+        scope: PlanScope,
+        layer_idx: u64,
+        w: &[i32],
+        n: usize,
+        k: usize,
+        sp: MacroSpec,
+    ) -> Result<Arc<LayerPlan>> {
         let mut plans = self.plans.lock().unwrap();
-        if let Some(plan) = plans.get(&layer_idx) {
+        if let Some(plan) = plans.get(&(scope.0, layer_idx)) {
             if plan.n != n || plan.k != k || plan.spec != sp {
                 bail!(
                     "plan cache: layer {layer_idx} was planned as [{}x{}] but called with \
@@ -249,9 +529,22 @@ impl PlanCache {
             return Ok(plan.clone());
         }
         let plan = Arc::new(LayerPlan::build(w, n, k, layer_idx, sp)?);
-        plans.insert(layer_idx, plan.clone());
+        plans.insert((scope.0, layer_idx), plan.clone());
         self.misses.fetch_add(1, Ordering::Relaxed);
         Ok(plan)
+    }
+
+    /// Fetch the cached [`PlacementPlan`] for `scope`, planning it with
+    /// `build` on first use.  Placement is a pure function of the graph
+    /// geometry + fleet shape, both folded into the scope key, so one
+    /// entry per scope is exact.
+    pub fn placement(
+        &self,
+        scope: PlanScope,
+        build: impl FnOnce() -> PlacementPlan,
+    ) -> Arc<PlacementPlan> {
+        let mut placements = self.placements.lock().unwrap();
+        placements.entry(scope.0).or_insert_with(|| Arc::new(build())).clone()
     }
 
     pub fn stats(&self) -> PlanCacheStats {
@@ -265,6 +558,7 @@ impl PlanCache {
     /// Drop every cached plan (weights will re-pack on next use).
     pub fn clear(&self) {
         self.plans.lock().unwrap().clear();
+        self.placements.lock().unwrap().clear();
     }
 }
 
@@ -381,5 +675,145 @@ mod tests {
     fn bad_weight_length_rejected() {
         let sp = MacroSpec::default();
         assert!(LayerPlan::build(&[0; 10], 8, 144, 0, sp).is_err());
+    }
+
+    #[test]
+    fn scoped_plans_do_not_shadow_each_other() {
+        // The PR-8 bugfix: the same layer_idx under two scopes (e.g.
+        // single-macro vs fleet) must build two independent plans, not
+        // serve one stale entry across fleet-size switches.
+        let sp = MacroSpec::default();
+        let cache = PlanCache::new();
+        let w = rand_w(7, 8, 144);
+        let fleet = PlanScope::for_backend("macro-fleet", 4, PlacementMode::Auto);
+        assert_ne!(fleet, PlanScope::SINGLE);
+        assert_ne!(fleet, PlanScope::for_backend("macro-fleet", 2, PlacementMode::Auto));
+        assert_ne!(fleet, PlanScope::for_backend("macro-fleet", 4, PlacementMode::Resident));
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        cache.get_or_build_scoped(fleet, 0, &w, 8, 144, sp).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.layers), (0, 2, 2));
+        // second lookup in each scope hits
+        cache.get_or_build(0, &w, 8, 144, sp).unwrap();
+        cache.get_or_build_scoped(fleet, 0, &w, 8, 144, sp).unwrap();
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn placement_mode_parses_round_trip() {
+        for m in PlacementMode::ALL {
+            assert_eq!(PlacementMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PlacementMode::parse("banana"), None);
+        assert_eq!(PlacementMode::default(), PlacementMode::Auto);
+    }
+
+    #[test]
+    fn placement_packs_whole_columns_when_they_fit() {
+        // kt=2 <= R=4: no K-split, two columns per macro, replicas fill
+        // the fleet.
+        let fleet = FleetDims { macros: 4, residency_tiles: 4 };
+        let lp = LayerPlacement::plan(0, 4, 2, 8, fleet, PlacementMode::Auto);
+        assert!(!lp.split_k());
+        assert_eq!(lp.macros_needed, 2);
+        assert_eq!(lp.replicas, 2);
+        assert_eq!(lp.stride, 2);
+        assert!(!lp.wrapped);
+        for ni in 0..4 {
+            assert_eq!(lp.k_span(ni), 1, "column {ni}");
+            assert_eq!(lp.macro_of(ni, 0, 0), ni / 2);
+            assert_eq!(lp.macro_of(ni, 0, 1), ni / 2 + 2);
+        }
+        // residency: each macro holds one replica's share = 4 tiles
+        let per: Vec<usize> = (0..4).map(|m| lp.tiles_on(m)).collect();
+        assert_eq!(per, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn placement_splits_k_when_column_exceeds_residency() {
+        // kt=4 > R=2: each column spans 2 macros -> split-K reduce.
+        let fleet = FleetDims { macros: 4, residency_tiles: 2 };
+        let lp = LayerPlacement::plan(0, 2, 4, 8, fleet, PlacementMode::Auto);
+        assert!(lp.split_k());
+        assert_eq!(lp.macros_needed, 4);
+        assert_eq!(lp.replicas, 1);
+        assert!(!lp.wrapped);
+        for ni in 0..2 {
+            assert_eq!(lp.k_span(ni), 2, "column {ni}");
+        }
+        // ki-blocks are contiguous: first R tiles of a column on one
+        // macro, the rest on the next.
+        assert_eq!(lp.macro_of(0, 0, 0), lp.macro_of(0, 1, 0));
+        assert_ne!(lp.macro_of(0, 1, 0), lp.macro_of(0, 2, 0));
+    }
+
+    #[test]
+    fn placement_wraps_instead_of_failing_when_oversubscribed() {
+        let fleet = FleetDims { macros: 2, residency_tiles: 1 };
+        let lp = LayerPlacement::plan(0, 4, 2, 8, fleet, PlacementMode::Replicate);
+        assert!(lp.wrapped);
+        assert_eq!(lp.macros_needed, 2);
+        assert_eq!(lp.replicas, 1);
+        assert!(lp.assign.iter().all(|&a| (a as usize) < 2));
+    }
+
+    #[test]
+    fn placement_k1_is_single_macro_identity() {
+        // K=1 must put everything on macro 0 with one replica — the
+        // fleet backend's bit-parity with the single-macro path depends
+        // on this being the identity placement.
+        let fleet = FleetDims { macros: 1, residency_tiles: 1 };
+        for mode in PlacementMode::ALL {
+            let lp = LayerPlacement::plan(3, 5, 7, 35, fleet, mode);
+            assert!(lp.assign.iter().all(|&a| a == 0), "{mode:?}");
+            assert_eq!(lp.replicas, 1);
+            assert!(!lp.split_k());
+        }
+    }
+
+    #[test]
+    fn resident_mode_never_replicates() {
+        let fleet = FleetDims { macros: 8, residency_tiles: 16 };
+        let lp = LayerPlacement::plan(0, 2, 2, 4, fleet, PlacementMode::Resident);
+        assert_eq!(lp.replicas, 1);
+        let replicate = LayerPlacement::plan(0, 2, 2, 4, fleet, PlacementMode::Replicate);
+        assert!(replicate.replicas > 1);
+    }
+
+    #[test]
+    fn auto_mode_pools_to_avoid_wrap() {
+        // 8 logical tiles, only 4 unique, fleet holds 4: replicate mode
+        // wraps (8 > 4), auto mode pools (dedup ratio 2x doubles the
+        // effective residency) and stays fully resident.
+        let fleet = FleetDims { macros: 4, residency_tiles: 1 };
+        let pooled = LayerPlacement::plan(0, 4, 2, 4, fleet, PlacementMode::Auto);
+        assert!(!pooled.wrapped);
+        let unpooled = LayerPlacement::plan(0, 4, 2, 4, fleet, PlacementMode::Replicate);
+        assert!(unpooled.wrapped);
+    }
+
+    #[test]
+    fn placement_plan_aggregates_and_caches() {
+        let fleet = FleetDims { macros: 2, residency_tiles: 8 };
+        let layers = [(0u64, 2usize, 2usize, 4usize), (1, 1, 3, 3)];
+        let pp = PlacementPlan::plan(&layers, fleet, PlacementMode::Auto);
+        assert_eq!(pp.total_tiles, 7);
+        assert_eq!(pp.unique_tiles, 7);
+        assert_eq!(pp.capacity_tiles(), 16);
+        assert_eq!(pp.layers.len(), 2);
+        let per = pp.macro_residency();
+        assert_eq!(per.len(), 2);
+        let placed: usize = pp.layers.iter().map(|l| l.replicas * l.nt * l.kt).sum();
+        assert_eq!(per.iter().sum::<usize>(), placed);
+
+        let cache = PlanCache::new();
+        let scope = PlanScope::for_backend("macro-fleet", 2, PlacementMode::Auto);
+        let build = || PlacementPlan::plan(&layers, fleet, PlacementMode::Auto);
+        let a = cache.placement(scope, build);
+        let b = cache.placement(scope, || panic!("must be cached"));
+        assert!(Arc::ptr_eq(&a, &b));
+        cache.clear();
+        let c = cache.placement(scope, build);
+        assert!(!Arc::ptr_eq(&a, &c));
     }
 }

@@ -17,6 +17,10 @@
 //!   percentiles, boundary histograms, queue depths, rejection counts,
 //!   connection/reuse counters and the governor's current per-tier
 //!   precision contracts.
+//! * `GET /v2/topology` — fleet topology: macro geometry, the per-layer
+//!   placement the active `[fleet]` policy produces, per-macro residency
+//!   occupancy, and inter-macro transfer-cost totals.  On a single-macro
+//!   backend the document degenerates to a one-macro fleet.
 //! * `GET /healthz` — liveness probe.
 //!
 //! Two serving modes share one routing/rendering core (so they emit
@@ -52,6 +56,8 @@ use crate::engine::{Engine, InferOptions, InferRequest};
 use crate::io::json::{self, arr, num, obj, s, JsonValue};
 use crate::nn::QGraph;
 use crate::obs::{self, ServerObs, Stage};
+use crate::sched::fleet;
+use crate::sched::plan::{FleetDims, PlacementMode};
 use crate::spec::MacroSpec;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -672,6 +678,7 @@ fn write_rendered_rid(stream: &mut TcpStream, r: &Rendered, rid: u64) -> bool {
 fn allowed_methods(path: &str) -> Option<&'static [&'static str]> {
     match path {
         "/healthz" | "/metrics" | "/v1/version" | "/debug/trace" => Some(&["GET"]),
+        "/v2/topology" => Some(&["GET"]),
         "/v1/infer" | "/v1/infer_batch" | "/v2/infer" => Some(&["POST"]),
         _ => None,
     }
@@ -681,11 +688,34 @@ fn allowed_methods(path: &str) -> Option<&'static [&'static str]> {
 /// engine thread count, and every registered backend with availability
 /// — what a fleet rollout checks before shifting traffic.
 fn version_json(engine: &Engine) -> JsonValue {
+    // the capability surface is additive: pre-fleet clients that only
+    // know version/backend/backends keep parsing unchanged
+    let caps = match engine.backend().ok().map(|b| b.capabilities()) {
+        Some(c) => obj(vec![
+            ("mode", s(c.mode.name())),
+            ("macros", num(c.macros as f64)),
+            ("residency_bytes", num(c.residency_bytes as f64)),
+            ("programmable_thresholds", JsonValue::Bool(c.programmable_thresholds)),
+            ("hybrid_boundary", JsonValue::Bool(c.hybrid_boundary)),
+            ("pooling", JsonValue::Bool(c.pooling)),
+        ]),
+        None => JsonValue::Null,
+    };
+    let cfg = engine.config();
     obj(vec![
         ("version", s(env!("CARGO_PKG_VERSION"))),
         ("backend", s(engine.backend_name())),
         ("engine_threads", num(engine.threads() as f64)),
         ("api", arr(["v1", "v2"].into_iter().map(s))),
+        ("capabilities", caps),
+        (
+            "fleet",
+            obj(vec![
+                ("macros", num(cfg.fleet_macros.max(1) as f64)),
+                ("residency_tiles", num(cfg.fleet_residency_tiles.max(1) as f64)),
+                ("placement", s(&cfg.fleet_placement)),
+            ]),
+        ),
         (
             "backends",
             arr(engine.registry().specs().iter().map(|sp| {
@@ -696,6 +726,72 @@ fn version_json(engine: &Engine) -> JsonValue {
                 ])
             })),
         ),
+    ])
+}
+
+/// The `GET /v2/topology` document: fleet geometry, the placement the
+/// active `[fleet]` policy produces for the loaded graph, per-macro
+/// residency occupancy, and the transfer cost charged so far.  Single-
+/// macro backends report a degenerate one-macro fleet with no split
+/// layers, so dashboards need no backend-specific casing.
+fn topology_json(server: &Server) -> JsonValue {
+    let engine = server.engine();
+    let cfg = engine.config();
+    let dims = FleetDims {
+        macros: cfg.fleet_macros.max(1),
+        residency_tiles: cfg.fleet_residency_tiles.max(1),
+    };
+    let mode = PlacementMode::parse(&cfg.fleet_placement).unwrap_or_default();
+    let pp = fleet::plan_for_dims(&engine.graph().gemm_dims(), &cfg.spec, dims, mode);
+    let m = server.metrics();
+    obj(vec![
+        ("backend", s(engine.backend_name())),
+        (
+            "fleet",
+            obj(vec![
+                ("macros", num(dims.macros as f64)),
+                ("residency_tiles", num(dims.residency_tiles as f64)),
+                (
+                    "residency_bytes",
+                    num((dims.residency_tiles as u64 * fleet::tile_bytes(&cfg.spec)) as f64),
+                ),
+                ("placement", s(mode.name())),
+                ("hop_energy_fj", fnum(cfg.fleet_hop_energy_fj)),
+                ("hop_latency_cycles", num(cfg.fleet_hop_latency_cycles as f64)),
+            ]),
+        ),
+        (
+            "tiles",
+            obj(vec![
+                ("total", num(pp.total_tiles as f64)),
+                ("unique", num(pp.unique_tiles as f64)),
+                ("capacity", num(pp.capacity_tiles() as f64)),
+            ]),
+        ),
+        (
+            "layers",
+            arr(pp.layers.iter().map(|l| {
+                obj(vec![
+                    ("layer", num(l.layer_idx as f64)),
+                    ("n_tiles", num(l.nt as f64)),
+                    ("k_tiles", num(l.kt as f64)),
+                    ("replicas", num(l.replicas as f64)),
+                    ("macros_needed", num(l.macros_needed as f64)),
+                    ("split_k", JsonValue::Bool(l.split_k())),
+                    ("wrapped", JsonValue::Bool(l.wrapped)),
+                ])
+            })),
+        ),
+        ("macro_residency", arr(pp.macro_residency().into_iter().map(|t| num(t as f64)))),
+        (
+            "transfer",
+            obj(vec![
+                ("energy_fj", fnum(m.account.transfer_fj)),
+                ("hops", num(m.account.transfer_hops as f64)),
+                ("fraction_of_total", fnum(m.account.transfer_fraction())),
+            ]),
+        ),
+        ("macro_cycles", arr(m.account.macro_cycles.iter().map(|&c| num(c as f64)))),
     ])
 }
 
@@ -743,12 +839,19 @@ pub(crate) fn route(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteO
                 ("backend", s(e.backend_name())),
                 ("engine_threads", num(e.threads() as f64)),
                 ("version", s(env!("CARGO_PKG_VERSION"))),
+                // additive: what a topology-aware rollout checks
+                ("fleet_macros", num(e.config().fleet_macros.max(1) as f64)),
+                ("placement", s(&e.config().fleet_placement)),
             ])
             .to_string_compact();
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
         }
         ("GET", "/v1/version") => {
             let body = version_json(ctx.server.engine()).to_string_compact();
+            RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+        }
+        ("GET", "/v2/topology") => {
+            let body = topology_json(ctx.server).to_string_compact();
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
         }
         ("GET", "/metrics") => {
@@ -891,9 +994,18 @@ pub(crate) fn render_submit_err(api: Api, e: &SubmitError, tier: Tier, keep: boo
                 err_body("server is shutting down"),
                 false,
             ),
-            // v1 never populates backend overrides, but the in-process
-            // option surface is shared — keep the arm total
-            e => Rendered::json(400, "Bad Request", err_body(&e.to_string()), keep),
+            // v1 never populates backend/placement overrides, but the
+            // in-process option surface is shared — every variant is
+            // named so a future rejection can't silently render as 400
+            e @ (SubmitError::UnknownBackend { .. }
+            | SubmitError::BackendUnavailable { .. }
+            | SubmitError::InvalidOption { .. }
+            | SubmitError::InvalidPlacement { .. }) => {
+                Rendered::json(400, "Bad Request", err_body(&e.to_string()), keep)
+            }
+            e @ SubmitError::FleetCapacityExceeded { .. } => {
+                Rendered::json(409, "Conflict", err_body(&e.to_string()), keep)
+            }
         },
         Api::V2 => match e {
             SubmitError::UnknownBackend { requested, registered } => {
@@ -918,6 +1030,26 @@ pub(crate) fn render_submit_err(api: Api, e: &SubmitError, tier: Tier, keep: boo
                 v2_err("invalid_option", &e.to_string(), vec![]),
                 keep,
             ),
+            e @ SubmitError::InvalidPlacement { .. } => Rendered::json(
+                400,
+                "Bad Request",
+                v2_err("invalid_placement", &e.to_string(), vec![]),
+                keep,
+            ),
+            SubmitError::FleetCapacityExceeded { required_tiles, capacity_tiles } => {
+                // 409, not 400: the request is well-formed — it conflicts
+                // with the fleet's current capacity, which is operator-
+                // changeable ([fleet] macros / residency_tiles)
+                let body = v2_err(
+                    "fleet_capacity_exceeded",
+                    &e.to_string(),
+                    vec![
+                        ("required_tiles", num(*required_tiles as f64)),
+                        ("capacity_tiles", num(*capacity_tiles as f64)),
+                    ],
+                );
+                Rendered::json(409, "Conflict", body, keep)
+            }
             e @ (SubmitError::Busy { .. } | SubmitError::Overloaded { .. }) => Rendered::json(
                 429,
                 "Too Many Requests",
@@ -1202,8 +1334,11 @@ fn parse_infer_doc(
 }
 
 /// Parse one **v2** infer document: `{"image": [u8; 3072], "options":
-/// {"tier": ..., "backend": ..., "seed": ..., "boundary": ...}}` — the
-/// wire twin of [`InferOptions`] (DESIGN.md §12).
+/// {"tier": ..., "backend": ..., "seed": ..., "boundary": ...,
+/// "placement": ...}}` — the wire twin of [`InferOptions`] (DESIGN.md
+/// §12).  Like `backend`, the `placement` *name* is carried verbatim:
+/// an unknown mode is rejected at admission with the typed
+/// `invalid_placement` envelope, not a parse-stage 400.
 fn parse_infer_doc_v2(
     doc: &JsonValue,
     default_tier: Tier,
@@ -1221,6 +1356,12 @@ fn parse_infer_doc_v2(
             match v.as_str() {
                 Some(name) => options.backend = Some(name.to_string()),
                 None => return Err("\"options.backend\" must be a string".into()),
+            }
+        }
+        if let Some(v) = o.get("placement") {
+            match v.as_str() {
+                Some(name) => options.placement = Some(name.to_string()),
+                None => return Err("\"options.placement\" must be a string".into()),
             }
         }
         if let Some(v) = o.get("seed") {
@@ -1389,6 +1530,15 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
         ("throughput_rps", fnum(m.throughput_rps())),
         ("tops_per_watt", fnum(m.tops_per_watt(spec))),
         ("watts", fnum(m.account.watts())),
+        (
+            "fleet",
+            obj(vec![
+                ("macros", num(server.engine().config().fleet_macros.max(1) as f64)),
+                ("transfer_energy_fj", fnum(m.account.transfer_fj)),
+                ("transfer_hops", num(m.account.transfer_hops as f64)),
+                ("transfer_fraction", fnum(m.account.transfer_fraction())),
+            ]),
+        ),
         ("b_hist", hist_json(&m.b_hist)),
         ("tiers", obj(tier_objs)),
         (
@@ -1474,6 +1624,24 @@ pub fn metrics_prometheus(
         m.tops_per_watt(spec),
     );
     w.gauge("osa_watts", "Modeled macro power draw.", &[], m.account.watts());
+    w.counter(
+        "osa_fleet_transfer_hops_total",
+        "Inter-macro partial-sum hops charged by split-K layers.",
+        &[],
+        m.account.transfer_hops as f64,
+    );
+    w.counter(
+        "osa_fleet_transfer_femtojoules_total",
+        "Modeled inter-macro partial-sum transfer energy.",
+        &[],
+        m.account.transfer_fj,
+    );
+    w.gauge(
+        "osa_fleet_transfer_fraction",
+        "Transfer share of total modeled energy.",
+        &[],
+        m.account.transfer_fraction(),
+    );
     for tier in Tier::ALL {
         let t = m.tier(tier);
         let i = tier.index();

@@ -107,6 +107,13 @@ pub enum SubmitError {
     BackendUnavailable { name: String, reason: String },
     /// A per-request option failed validation (HTTP 400).
     InvalidOption { field: &'static str, detail: String },
+    /// A per-request `placement` override is not a known fleet placement
+    /// mode (`auto` / `replicate` / `resident`) — HTTP 400.
+    InvalidPlacement { requested: String },
+    /// `resident` placement demands more packed weight tiles than the
+    /// fleet's aggregate residency holds — HTTP 409 (the request is
+    /// well-formed; this fleet cannot honor it).
+    FleetCapacityExceeded { required_tiles: usize, capacity_tiles: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -129,6 +136,14 @@ impl std::fmt::Display for SubmitError {
             SubmitError::InvalidOption { field, detail } => {
                 write!(f, "invalid option {field:?}: {detail}")
             }
+            SubmitError::InvalidPlacement { requested } => {
+                write!(f, "unknown placement {requested:?} (one of: auto, replicate, resident)")
+            }
+            SubmitError::FleetCapacityExceeded { required_tiles, capacity_tiles } => write!(
+                f,
+                "resident placement needs {required_tiles} weight tiles but the fleet holds \
+                 {capacity_tiles} — add macros, raise residency_tiles, or use auto placement"
+            ),
         }
     }
 }

@@ -9,7 +9,7 @@
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
 use osa_hcim::engine::{
-    Backend, BackendCaps, BackendCtx, BackendKnobs, BackendRegistry, BackendSpec, Engine,
+    Backend, BackendCtx, BackendKnobs, BackendRegistry, BackendSpec, Capabilities, Engine,
     InferOptions, InferRequest,
 };
 use osa_hcim::nn::data::Dataset;
@@ -176,12 +176,15 @@ impl Backend for FailingBackend {
         "failing"
     }
 
-    fn capabilities(&self) -> BackendCaps {
-        BackendCaps {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
             available: true,
             mode: CimMode::Dcim,
+            macros: 1,
+            residency_bytes: 0,
             programmable_thresholds: false,
             hybrid_boundary: false,
+            pooling: false,
             description: "test backend that always fails",
         }
     }

@@ -9,9 +9,12 @@
 //!   registered backend at builder, registry and coordinator level.
 
 // The smoke import IS the test: if any of these stops being exported,
-// this file no longer compiles.
+// this file no longer compiles.  BackendCaps is the deprecated pre-fleet
+// shim — it must stay importable for one release.
+#[allow(deprecated)]
+use osa_hcim::engine::BackendCaps;
 use osa_hcim::engine::{
-    Backend, BackendCaps, BackendKnobs, BackendRegistry, Engine, EngineBuilder, InferOptions,
+    Backend, BackendKnobs, BackendRegistry, Capabilities, Engine, EngineBuilder, InferOptions,
     InferRequest, InferResponse,
 };
 
@@ -35,14 +38,19 @@ fn synth_batch(n: usize) -> Vec<u8> {
 fn public_api_surface_stays_exported() {
     let _builder: EngineBuilder = Engine::builder();
     let registry: BackendRegistry = BackendRegistry::builtin();
-    assert_eq!(registry.names(), vec!["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"]);
+    assert_eq!(
+        registry.names(),
+        vec!["macro-hybrid", "macro-dcim", "macro-acim", "macro-fleet", "pjrt"]
+    );
     let req: InferRequest = InferRequest::new(vec![0u8; 4]).with_tier(Tier::Gold);
     let opts: InferOptions = req.options.clone();
     assert_eq!(opts.tier, Tier::Gold);
     // Backend stays object-safe: a trait object can be named and the
     // caps/knobs types are public
     fn _takes_dyn(_b: &mut dyn Backend) {}
-    let _caps: Option<BackendCaps> = None;
+    let _caps: Option<Capabilities> = None;
+    #[allow(deprecated)]
+    let _shim: Option<BackendCaps> = None;
     let _knobs = BackendKnobs::default();
     let _resp: Option<InferResponse> = None;
 }
@@ -136,7 +144,7 @@ fn builder_error_lists_registered_backends() {
         .build()
         .unwrap_err();
     let msg = format!("{err:#}");
-    for name in ["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"] {
+    for name in ["macro-hybrid", "macro-dcim", "macro-acim", "macro-fleet", "pjrt"] {
         assert!(msg.contains(name), "error must list {name}: {msg}");
     }
 }

@@ -1,0 +1,278 @@
+//! Multi-macro fleet guarantees (DESIGN.md §14):
+//!
+//! * **K=1 parity** — `macro-fleet` with one macro is bit-identical
+//!   (logits AND energy f64s AND boundary histograms) to `macro-hybrid`,
+//!   at 1 and 4 threads;
+//! * **deterministic reduce** — for a fixed K in {2, 4}, repeat runs and
+//!   different thread counts reproduce the same bits, and split-K layers
+//!   charge nonzero inter-macro transfer energy;
+//! * **pooled weights** — the CIMPool-style pool + index map rebuilds
+//!   the exact weight matrix through the public API;
+//! * **serve surface** — `GET /v2/topology` and `/metrics` expose the
+//!   placement and accounted transfer cost, and placement errors render
+//!   the typed `invalid_placement` / `fleet_capacity_exceeded` envelopes.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::SystemConfig;
+use osa_hcim::engine::Engine;
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::{Op, QConv, QFc, QGraph};
+use osa_hcim::sched::fleet::WeightPool;
+use osa_hcim::sched::plan::LayerPlan;
+use osa_hcim::serve::http;
+use osa_hcim::serve::Gateway;
+use osa_hcim::spec::MacroSpec;
+use osa_hcim::util::prng::SplitMix64;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn synth_batch(n: usize) -> Vec<u8> {
+    let mut g = SplitMix64::new(0xF1EE7);
+    (0..n * 32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+/// A `/v2/infer` body: the image plus a raw JSON options object.
+fn v2_body(seed: u64, options: &str) -> String {
+    let mut g = SplitMix64::new(seed);
+    let img: Vec<u8> = (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect();
+    let mut body = String::with_capacity(img.len() * 4 + 64);
+    body.push_str("{\"image\":[");
+    for (i, b) in img.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&b.to_string());
+    }
+    body.push_str("],\"options\":");
+    body.push_str(options);
+    body.push('}');
+    body
+}
+
+/// Synthetic-style two-conv graph whose second conv contracts over
+/// k = 3*3*32 = 288 > 144 macro columns — two K-tiles, one more than a
+/// `residency_tiles = 1` macro holds, so the fleet planner must split
+/// its columns across macros (the stem, k = 27, never splits).
+fn split_k_graph() -> QGraph {
+    let mut g = SplitMix64::new(0x5711F);
+    let mut conv = |name: &str, cin: usize, cout: usize| QConv {
+        name: name.into(),
+        kh: 3,
+        kw: 3,
+        cin,
+        cout,
+        stride: 1,
+        act_scale: 1.0 / 255.0,
+        w_scale: 0.05,
+        w_q: (0..cout * 9 * cin).map(|_| g.next_range_i32(-64, 64)).collect(),
+        bias_q: vec![0; cout],
+    };
+    let stem = conv("stem", 3, 32);
+    let deep = conv("deep", 32, 16);
+    let fc = QFc {
+        cin: 16,
+        cout: 10,
+        act_scale: 0.05,
+        w_scale: 0.05,
+        w_q: (0..10 * 16).map(|_| g.next_range_i32(-64, 64)).collect(),
+        bias_q: vec![0; 10],
+    };
+    let mut convs = BTreeMap::new();
+    convs.insert("stem".to_string(), stem);
+    convs.insert("deep".to_string(), deep);
+    QGraph {
+        convs,
+        fc,
+        ops: vec![
+            Op::QConv { name: "stem".into(), relu: true },
+            Op::QConv { name: "deep".into(), relu: true },
+            Op::Gap,
+            Op::QFc,
+        ],
+        num_classes: 10,
+    }
+}
+
+/// Forward a synthetic batch through the engine facade on `backend`
+/// with a one-macro fleet config; single-macro backends ignore the
+/// fleet knob, which is exactly what the parity test relies on.
+fn forward_bits(backend: &str, threads: usize) -> (Vec<u32>, u64, [u64; 16]) {
+    let graph = Arc::new(QGraph::synthetic());
+    let n = 4usize;
+    let images = synth_batch(n);
+    let engine = Engine::builder()
+        .config(SystemConfig::default()) // mode = osa: noise + OSE live
+        .graph(graph)
+        .backend(backend)
+        .fleet(1)
+        .threads(threads)
+        .build()
+        .unwrap();
+    let mut exec = engine.executor().unwrap();
+    exec.preplan().unwrap();
+    let (logits, stats) = exec.forward(&images, n).unwrap();
+    (
+        logits.iter().map(|x| x.to_bits()).collect(),
+        stats.account.total_energy_j().to_bits(),
+        stats.b_hist,
+    )
+}
+
+#[test]
+fn fleet_of_one_is_bit_identical_to_macro_hybrid() {
+    for threads in [1usize, 4] {
+        let (lh, eh, hh) = forward_bits("macro-hybrid", threads);
+        let (lf, ef, hf) = forward_bits("macro-fleet", threads);
+        assert_eq!(lh, lf, "K=1 fleet logits diverge at {threads} threads");
+        assert_eq!(eh, ef, "K=1 fleet energy f64 diverges at {threads} threads");
+        assert_eq!(hh, hf, "K=1 fleet boundary histogram diverges at {threads} threads");
+    }
+}
+
+#[test]
+fn sharded_reduce_is_deterministic_per_fleet_size() {
+    let graph = Arc::new(split_k_graph());
+    let images = synth_batch(2);
+    for k in [2usize, 4] {
+        let run = |threads: usize| -> (Vec<u32>, u64, f64, u64) {
+            let mut cfg = SystemConfig::default();
+            cfg.fleet_residency_tiles = 1; // force the deep conv to split
+            let engine = Engine::builder()
+                .config(cfg)
+                .graph(graph.clone())
+                .backend("macro-fleet")
+                .fleet(k)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let mut exec = engine.executor().unwrap();
+            exec.preplan().unwrap();
+            let (logits, stats) = exec.forward(&images, 2).unwrap();
+            (
+                logits.iter().map(|x| x.to_bits()).collect(),
+                stats.account.total_energy_j().to_bits(),
+                stats.account.transfer_fj,
+                stats.account.transfer_hops,
+            )
+        };
+        let (l_a, e_a, t_a, h_a) = run(1);
+        let (l_b, e_b, t_b, h_b) = run(1);
+        let (l_c, e_c, t_c, h_c) = run(4);
+        assert_eq!(l_a, l_b, "K={k}: repeat run shifts the logits");
+        assert_eq!(e_a, e_b, "K={k}: repeat run shifts the energy f64");
+        assert_eq!(l_a, l_c, "K={k}: thread count shifts the reduce order");
+        assert_eq!(e_a, e_c, "K={k}: thread count shifts the energy merge");
+        assert!(t_a > 0.0, "K={k}: split-K must charge transfer energy");
+        assert!(h_a > 0, "K={k}: split-K must charge transfer hops");
+        assert_eq!(t_a.to_bits(), t_b.to_bits(), "K={k}: transfer energy not repeatable");
+        assert_eq!(t_a.to_bits(), t_c.to_bits(), "K={k}: transfer energy thread-dependent");
+        assert_eq!(h_a, h_b, "K={k}: hop count not repeatable");
+        assert_eq!(h_a, h_c, "K={k}: hop count thread-dependent");
+    }
+}
+
+#[test]
+fn pooled_weights_round_trip_via_public_api() {
+    let sp = MacroSpec::default();
+    let mut g = SplitMix64::new(0xB00);
+    let (n, k) = (12usize, 200usize);
+    let w: Vec<i32> = (0..n * k).map(|_| g.next_range_i32(-128, 128)).collect();
+    let plan = LayerPlan::build(&w, n, k, 7, sp).unwrap();
+    let pool = WeightPool::from_plan(&plan);
+    assert_eq!(pool.logical_tiles(), pool.nt * pool.kt);
+    assert!(pool.compression() >= 1.0);
+    assert_eq!(pool.reconstruct(n, k), w, "pool + index map must rebuild exact weights");
+}
+
+#[test]
+fn topology_and_metrics_expose_split_k_transfer() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.backend = "macro-fleet".to_string();
+    cfg.fleet_macros = 4;
+    cfg.fleet_residency_tiles = 1;
+    let gw = Gateway::start(&cfg, Arc::new(split_k_graph()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+
+    // the placement is reportable before any traffic
+    let (status, body) = http::request(&addr, "GET", "/v2/topology", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-fleet"));
+    let fleet = doc.get("fleet").expect("fleet object");
+    assert_eq!(fleet.get("macros").and_then(JsonValue::as_i64), Some(4));
+    assert_eq!(fleet.get("residency_tiles").and_then(JsonValue::as_i64), Some(1));
+    let layers = doc.get("layers").and_then(JsonValue::as_array).unwrap();
+    let split: Vec<bool> = layers
+        .iter()
+        .map(|l| l.get("split_k").and_then(JsonValue::as_bool).unwrap())
+        .collect();
+    assert_eq!(split, vec![false, true], "deep conv (k=288 > 144 cols) must split: {body}");
+    let residency = doc.get("macro_residency").and_then(JsonValue::as_array).unwrap();
+    assert_eq!(residency.len(), 4);
+
+    // serve one image so transfer cost lands in the live account
+    let body = v2_body(1, "{}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+
+    let (_, body) = http::request(&addr, "GET", "/v2/topology", None).unwrap();
+    let doc = parse(&body).unwrap();
+    let transfer = doc.get("transfer").expect("transfer object");
+    assert!(
+        transfer.get("energy_fj").and_then(JsonValue::as_f64).unwrap() > 0.0,
+        "split-K serving must account transfer energy: {body}"
+    );
+    assert!(transfer.get("hops").and_then(JsonValue::as_f64).unwrap() > 0.0);
+
+    let (_, body) = http::request(&addr, "GET", "/metrics", None).unwrap();
+    let doc = parse(&body).unwrap();
+    let fleet = doc.get("fleet").expect("fleet object in /metrics");
+    assert!(fleet.get("transfer_energy_fj").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+    assert!(fleet.get("transfer_fraction").and_then(JsonValue::as_f64).unwrap() > 0.0);
+    gw.shutdown();
+}
+
+#[test]
+fn placement_errors_render_typed_envelopes() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.backend = "macro-fleet".to_string();
+    cfg.fleet_macros = 2;
+    cfg.fleet_residency_tiles = 1;
+    let gw = Gateway::start(&cfg, Arc::new(split_k_graph()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    let err_field = |doc: &JsonValue, f: &str| -> Option<String> {
+        doc.get("error").and_then(|e| e.get(f)).and_then(JsonValue::as_str).map(String::from)
+    };
+
+    // unknown placement mode: typed 400
+    let body = v2_body(1, "{\"placement\":\"everywhere\"}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 400, "{resp}");
+    let doc = parse(&resp).unwrap();
+    assert_eq!(err_field(&doc, "code").as_deref(), Some("invalid_placement"));
+    assert!(err_field(&doc, "message").unwrap().contains("everywhere"), "{resp}");
+
+    // resident placement cannot hold 8 raw tiles (stem 4x1 + deep 2x2)
+    // on a 2-macro x 1-tile fleet: 409 with the numbers a client needs
+    // to re-plan
+    let body = v2_body(1, "{\"placement\":\"resident\"}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 409, "{resp}");
+    let doc = parse(&resp).unwrap();
+    assert_eq!(err_field(&doc, "code").as_deref(), Some("fleet_capacity_exceeded"));
+    let int_field = |f: &str| {
+        doc.get("error").and_then(|e| e.get(f)).and_then(JsonValue::as_i64).unwrap()
+    };
+    assert_eq!(int_field("required_tiles"), 8, "{resp}");
+    assert_eq!(int_field("capacity_tiles"), 2, "{resp}");
+
+    // auto placement pools/wraps the same model and still serves
+    let body = v2_body(2, "{\"placement\":\"auto\"}");
+    let (status, resp) = http::request(&addr, "POST", "/v2/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let metrics = gw.shutdown();
+    assert_eq!(metrics.requests, 1, "rejected placements must never reach a worker");
+}

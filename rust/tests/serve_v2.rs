@@ -94,7 +94,7 @@ fn v2_error_envelope_is_machine_readable() {
         .iter()
         .filter_map(|v| v.as_str().map(String::from))
         .collect();
-    for name in ["macro-hybrid", "macro-dcim", "macro-acim", "pjrt"] {
+    for name in ["macro-hybrid", "macro-dcim", "macro-acim", "macro-fleet", "pjrt"] {
         assert!(listed.iter().any(|n| n == name), "{listed:?} missing {name}");
     }
 
@@ -220,7 +220,14 @@ fn version_and_healthz_report_the_running_engine() {
     assert_eq!(doc.get("backend").and_then(JsonValue::as_str), Some("macro-dcim"));
     assert_eq!(doc.get("engine_threads").and_then(JsonValue::as_i64), Some(2));
     let backends = doc.get("backends").and_then(JsonValue::as_array).unwrap();
-    assert_eq!(backends.len(), 4);
+    assert_eq!(backends.len(), 5);
+    // additive fleet-era keys: structured capabilities + [fleet] geometry
+    let caps = doc.get("capabilities").expect("capabilities object");
+    assert_eq!(caps.get("mode").and_then(JsonValue::as_str), Some("dcim"));
+    assert_eq!(caps.get("macros").and_then(JsonValue::as_i64), Some(1));
+    let fleet = doc.get("fleet").expect("fleet object");
+    assert_eq!(fleet.get("macros").and_then(JsonValue::as_i64), Some(1));
+    assert_eq!(fleet.get("placement").and_then(JsonValue::as_str), Some("auto"));
     #[cfg(not(feature = "pjrt"))]
     {
         let pjrt = backends

@@ -23,6 +23,10 @@ Two kinds of checks:
   (e.g. the engine thread-scaling curve, ``gemm_speedup_4t``), enforced
   only when the runner reports at least ``--min-cores`` cores in the
   bench doc — a 2-core runner cannot show a 4-thread speedup.
+* ``--warn-speedup KEY=FLOOR`` (repeatable): a speedup checked against
+  an absolute floor, WARN-only — for *modeled* scaling curves (e.g.
+  ``fleet_speedup_2=1.3``) that should hold on any runner but must never
+  gate a merge.  A missing key is still a hard failure (code bug).
 
 ``--write-median PATH`` additionally writes the median document (the
 baseline refresh artifact: copy it into ``BENCH_baseline/`` to re-anchor
@@ -92,6 +96,15 @@ def main() -> int:
         action="store_true",
         help="report a speedup miss without failing the gate (for shared CI "
         "runners where noisy-neighbor contention can eat the scaling headroom)",
+    )
+    p.add_argument(
+        "--warn-speedup",
+        action="append",
+        default=[],
+        metavar="KEY=FLOOR",
+        help="speedup key checked against an absolute floor, WARN-only "
+        "(modeled scaling curves that should hold on any runner but must "
+        "never gate a merge, e.g. fleet_speedup_2=1.3)",
     )
     p.add_argument(
         "--min-cores",
@@ -169,6 +182,25 @@ def main() -> int:
                 failures.append(
                     f"{args.check_speedup}: median {med:.2f}x < {args.speedup_floor:.2f}x"
                 )
+
+    for spec in args.warn_speedup:
+        key, sep, raw_floor = spec.partition("=")
+        if not sep:
+            print(f"bench-gate: --warn-speedup needs KEY=FLOOR, got {spec!r}", file=sys.stderr)
+            return 2
+        try:
+            floor = float(raw_floor)
+        except ValueError:
+            print(f"bench-gate: bad floor in {spec!r}", file=sys.stderr)
+            return 2
+        med = median_of(runs, key)
+        if med is None:
+            # a warn-only speedup that is absent is still a hard failure:
+            # the bench stopped emitting it, which is a code bug
+            failures.append(f"{key}: missing from every run")
+            continue
+        verdict = "OK" if med >= floor else "WARN"
+        print(f"  {key}: median {med:.2f}x vs floor {floor:.2f}x {verdict}")
 
     if args.write_median:
         med_doc = dict(runs[0])
