@@ -184,6 +184,40 @@ fn main() {
             .run(|| exec.forward(&img, 1).unwrap());
     }
 
+    // --- cost model overhead: compact vs hierarchy pricing ---------------
+    // The PR-9 acceptance curve: the hierarchy model's dataflow pricing
+    // is a per-layer post-pass on the merged account, so full-network
+    // inference must stay within a few percent of the compact model.
+    // Also records the modeled energy per inference (millijoules) under
+    // the hierarchy stack — the joule figure the governor budgets.
+    println!("\n# pipeline — cost model overhead (compact vs hierarchy movement pricing)");
+    let run_model = |model: &str| -> (f64, f64) {
+        let mut mcfg = cfg.clone();
+        mcfg.hardware_model = model.to_string();
+        let model_engine =
+            Engine::builder().config(mcfg).graph(graph.clone()).build().unwrap();
+        let gemm = model_engine.backend().unwrap();
+        let mut exec = Executor::new(&graph, gemm);
+        exec.preplan().unwrap();
+        let (_, stats) = exec.forward(&img, 1).unwrap();
+        let energy_mj = stats.account.total_energy_j() * 1e3;
+        let bstats = Bench::new(&format!("infer/costmodel_{model}"))
+            .target(Duration::from_secs(3))
+            .max_iters(200)
+            .items(1.0)
+            .run(|| exec.forward(&img, 1).unwrap());
+        (bstats.throughput().unwrap_or(0.0), energy_mj)
+    };
+    let (costmodel_rate_compact, _) = run_model("compact");
+    let (costmodel_rate_hier, energy_per_inference_mj) = run_model("hierarchy");
+    let costmodel_delta = (costmodel_rate_compact - costmodel_rate_hier).max(0.0);
+    let costmodel_overhead_pct = costmodel_delta / costmodel_rate_compact.max(1e-9) * 100.0;
+    println!(
+        "costmodel: compact {costmodel_rate_compact:.1} inf/s vs hierarchy \
+         {costmodel_rate_hier:.1} inf/s -> overhead {costmodel_overhead_pct:.2}%, \
+         {energy_per_inference_mj:.4} mJ/inference modeled"
+    );
+
     // --- coordinator serve loop ------------------------------------------
     println!("\n# pipeline — coordinator round trip (submit -> batch -> respond)");
     let serve_engine =
@@ -541,6 +575,10 @@ fn main() {
         ("fleet_speedup_2", num(fleet_speedup_2)),
         ("fleet_speedup_4", num(fleet_speedup_4)),
         ("fleet_transfer_energy_pct", num(fleet_transfer_pct)),
+        ("energy_per_inference_mj", num(energy_per_inference_mj)),
+        ("costmodel_overhead_pct", num(costmodel_overhead_pct)),
+        ("costmodel_infer_per_s_compact", num(costmodel_rate_compact)),
+        ("costmodel_infer_per_s_hierarchy", num(costmodel_rate_hier)),
     ]);
     let serve_out =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());

@@ -5,6 +5,7 @@
 //! headers, `key = value` with string/int/float/bool/array-of-number
 //! values, and `#` comments.
 
+use crate::energy::hierarchy::{self, MemoryHierarchy};
 use crate::serve::qos::Tier;
 use crate::spec::MacroSpec;
 use anyhow::{bail, Context, Result};
@@ -93,6 +94,14 @@ impl Toml {
         match self.values.get(key) {
             None => Ok(None),
             Some(TomlValue::Array(v)) => Ok(Some(v.iter().map(|x| *x as i32).collect())),
+            Some(other) => bail!("{key}: expected array, found {other:?}"),
+        }
+    }
+
+    pub fn get_array_f64(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Array(v)) => Ok(Some(v.clone())),
             Some(other) => bail!("{key}: expected array, found {other:?}"),
         }
     }
@@ -293,6 +302,14 @@ pub struct SystemConfig {
     /// than this many milliseconds end to end (`[obs] slow_ms`,
     /// `--slow-ms`); 0 disables the slow-request log.
     pub obs_slow_ms: u64,
+    /// Energy cost model (`[hardware] model`): `"compact"` keeps the
+    /// calibrated per-op constants (bit-identical to pre-hierarchy
+    /// numbers); `"hierarchy"` additionally prices per-level data
+    /// movement from the declarative [`MemoryHierarchy`] stack.
+    pub hardware_model: String,
+    /// Declarative memory stack (`[hardware]` level arrays); only
+    /// priced when `hardware_model = "hierarchy"`.
+    pub hardware: MemoryHierarchy,
 }
 
 impl Default for SystemConfig {
@@ -329,6 +346,8 @@ impl Default for SystemConfig {
             obs_trace: true,
             obs_trace_capacity: 4096,
             obs_slow_ms: 250,
+            hardware_model: hierarchy::MODEL_COMPACT.to_string(),
+            hardware: MemoryHierarchy::default(),
         }
     }
 }
@@ -404,6 +423,13 @@ impl SystemConfig {
         cfg.obs_trace = t.get_bool("obs.trace", cfg.obs_trace)?;
         cfg.obs_trace_capacity = t.get_usize("obs.trace_capacity", cfg.obs_trace_capacity)?;
         cfg.obs_slow_ms = t.get_usize("obs.slow_ms", cfg.obs_slow_ms as usize)? as u64;
+        cfg.hardware_model = t.get_str("hardware.model", &cfg.hardware_model)?;
+        for (i, name) in hierarchy::LEVEL_NAMES.iter().enumerate() {
+            let key = format!("hardware.{name}");
+            if let Some(vals) = t.get_array_f64(&key)? {
+                cfg.hardware.levels[i] = hierarchy::MemoryLevel::from_array(&key, &vals)?;
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -448,7 +474,14 @@ impl SystemConfig {
                 self.thresholds.len()
             );
         }
+        hierarchy::validate_model(&self.hardware_model)?;
+        self.hardware.validate(crate::sched::fleet::tile_bytes(&self.spec))?;
         Ok(())
+    }
+
+    /// `true` when the hierarchy-and-dataflow cost model is selected.
+    pub fn hierarchy_model(&self) -> bool {
+        self.hardware_model == hierarchy::MODEL_HIERARCHY
     }
 }
 
@@ -658,6 +691,62 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
     fn hash_inside_string_kept() {
         let t = Toml::parse("s = \"a#b\" # real comment").unwrap();
         assert_eq!(t.get("s"), Some(&TomlValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn hardware_section_parsed() {
+        let t = Toml::parse(
+            "[hardware]\nmodel = \"hierarchy\"\nweight_sram = [8192, 4.5, 6.0, 32, 2]\n\
+             dram = [1200, 500, 500, 8, 1]",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert!(cfg.hierarchy_model());
+        let lv = cfg.hardware.level(hierarchy::WEIGHT_SRAM);
+        assert_eq!(lv.size_bytes, 8192);
+        assert_eq!(lv.read_fj, 4.5);
+        assert_eq!(lv.bandwidth_words, 32.0);
+        assert_eq!(lv.ports, 2);
+        assert_eq!(cfg.hardware.level(hierarchy::DRAM).size_bytes, 1200);
+        // untouched levels keep the anchor defaults
+        assert_eq!(cfg.hardware.level(hierarchy::CELL_GROUP).size_bytes, 1152);
+        // defaults when the section is absent: compact + anchor stack
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(!cfg.hierarchy_model());
+        assert_eq!(cfg.hardware, MemoryHierarchy::default());
+    }
+
+    #[test]
+    fn hardware_validation_rejects_bad_levels() {
+        // unknown model string
+        let t = Toml::parse("[hardware]\nmodel = \"zigzag\"").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("hardware.model"), "{err}");
+        // non-positive size
+        let t = Toml::parse("[hardware]\nact_sram = [0, 5.2, 6.4, 16, 1]").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("hardware.act_sram"), "{err}");
+        // negative per-access energy
+        let t = Toml::parse("[hardware]\nacc_rf = [256, -1.0, 1.3, 16, 2]").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("hardware.acc_rf"), "{err}");
+        // zero bandwidth
+        let t = Toml::parse("[hardware]\ndram = [67108864, 620, 640, 0, 1]").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("hardware.dram"), "{err}");
+        // a weight-holding level too small for one packed tile (1152 B)
+        let t = Toml::parse("[hardware]\nweight_sram = [1024, 5.8, 7.2, 16, 1]").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("hardware.weight_sram"), "{err}");
+        assert!(err.to_string().contains("packed weight tile"), "{err}");
+        // wrong arity
+        let t = Toml::parse("[hardware]\ncell_group = [1152, 0.0]").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("hardware.cell_group"), "{err}");
+        // validate() is re-runnable on mutated configs (builder path)
+        let mut cfg = SystemConfig::default();
+        cfg.hardware_model = "bogus".into();
+        assert!(cfg.validate().unwrap_err().to_string().contains("hardware.model"));
     }
 
     #[test]

@@ -873,6 +873,9 @@ fn run_group<'g>(
                     );
                 }
             }
+            // equal share of the batch forward's modeled joules (macro
+            // breakdown + movement + fleet transfer) per member request
+            let energy_j = stats.account.total_energy_j() / n as f64;
             for (i, r) in group.into_iter().enumerate() {
                 let row = logits[i * classes..(i + 1) * classes].to_vec();
                 r.respond.send(Response {
@@ -883,6 +886,7 @@ fn run_group<'g>(
                     backend: backend_name.clone(),
                     latency: done - r.submitted,
                     batch_size: n,
+                    energy_j,
                     error: preds[i].is_none().then(|| {
                         "non-finite logits (NaN) — the row cannot express a prediction"
                             .to_string()
@@ -923,6 +927,7 @@ fn answer_error(
             backend: backend.to_string(),
             latency: done - r.submitted,
             batch_size: n,
+            energy_j: 0.0,
             error: Some(msg.to_string()),
         });
     }

@@ -1,0 +1,286 @@
+//! Dataflow access-count model (DESIGN.md §15): walk one GEMM's
+//! `(row-chunk, N-tile)` plan tiles — and, on a fleet, its placement —
+//! and derive how many words move through every [`hierarchy`] level,
+//! priced into per-level femtojoule terms.
+//!
+//! The walk is a *pure function* of `(m, plan geometry, placement,
+//! hierarchy)`: no accumulation over execution order, so the resulting
+//! f64s are bit-identical for any thread count and any fleet merge
+//! order — the invariance the parity tests pin.
+//!
+//! Access-count derivation (one `gemm` call, `m` rows, weight
+//! stationary; a word is one 8-bit operand):
+//!
+//! * **Weight fill**: every logical tile streams DRAM → weight SRAM
+//!   once per call (`tiles x tile_words` reads and writes), then the
+//!   SRAM fills each replica's cell groups (`x replicas`).  Charging
+//!   the fill per call is conservative — a resident fleet amortizes it
+//!   across calls — and keeps the model call-local and deterministic.
+//! * **Weight-stationary reuse**: every row re-reads every resident
+//!   tile from the cell groups (`m x tiles x tile_words`).  These reads
+//!   are *counted* but priced at the `cell_group` read energy, which
+//!   defaults to 0 because the cell read is already inside
+//!   `e_dat_bitmac_fj` (no double pricing).
+//! * **Input broadcast**: activations stream DRAM → activation SRAM
+//!   (`m x k` in, staged padded as `m x k_pad`), then each row's
+//!   K-slice is read once and broadcast to all N-tiles (`m x k_pad`
+//!   reads).
+//! * **Partial-sum writeback**: each output lane accumulates across
+//!   `kt` K-tiles in the accumulation RF (`m x n_pad x kt` read-modify
+//!   -writes), then results retire through the activation SRAM
+//!   (`m x n_pad` writes) and out to DRAM (`m x n` unpadded).
+//! * **Inter-macro hops**: split-K columns move `(k_span - 1) x hmus`
+//!   partial-sum words per row between macros.  Reported as
+//!   [`DataflowTrace::hop_words`] but *not* priced here — the fleet
+//!   executor already charges them via `EnergyAccount::transfer_fj`
+//!   (`[fleet] hop_energy_fj`).
+
+use super::hierarchy::{
+    MemoryHierarchy, ACC_RF, ACT_SRAM, CELL_GROUP, DRAM, NUM_LEVELS, WEIGHT_SRAM,
+};
+use crate::sched::plan::{LayerPlacement, LayerPlan};
+use crate::spec::MacroSpec;
+
+/// Word traffic through one memory level.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelAccess {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// One layer call's movement trace: per-level access counts and their
+/// priced femtojoule terms.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataflowTrace {
+    /// Per-level word traffic, [`super::hierarchy::LEVEL_NAMES`] order.
+    pub access: [LevelAccess; NUM_LEVELS],
+    /// Priced movement per level, femtojoules.
+    pub movement_fj: [f64; NUM_LEVELS],
+    /// Partial-sum words that crossed a macro boundary (split-K reduce;
+    /// priced by the fleet's `transfer_fj`, not here).
+    pub hop_words: u64,
+}
+
+impl DataflowTrace {
+    /// Total priced movement, femtojoules.
+    pub fn total_fj(&self) -> f64 {
+        self.movement_fj.iter().sum()
+    }
+}
+
+/// Tile geometry of one GEMM — the subset of [`LayerPlan`] the walk
+/// needs, so the gateway can price a layer from graph shapes alone
+/// (no packed weights).
+struct Geom {
+    n: usize,
+    k: usize,
+    nt: usize,
+    kt: usize,
+    n_pad: usize,
+    k_pad: usize,
+}
+
+/// Walk one layer call: `m` activation rows through `plan`'s tiles,
+/// placed by `placement` when running on a fleet (`None` = single
+/// macro: one replica, no hops).
+pub fn trace_layer(
+    m: usize,
+    plan: &LayerPlan,
+    placement: Option<&LayerPlacement>,
+    hier: &MemoryHierarchy,
+) -> DataflowTrace {
+    let g = Geom {
+        n: plan.n,
+        k: plan.k,
+        nt: plan.nt,
+        kt: plan.kt,
+        n_pad: plan.n_pad,
+        k_pad: plan.k_pad,
+    };
+    trace_geom(m, &g, &plan.spec, placement, hier)
+}
+
+/// [`trace_layer`] from raw GEMM dimensions — derives the tile geometry
+/// with the same formulas as `sched::plan::LayerPlan::build`
+/// (`kt = ceil(k / cols)`, `nt = ceil(n / hmus)`, padded to whole
+/// tiles), so it prices exactly what the executor would without
+/// needing packed weights.  `GET /v2/energy` traces one inference from
+/// graph shapes through this entry point.
+pub fn trace_dims(
+    m: usize,
+    n: usize,
+    k: usize,
+    sp: &MacroSpec,
+    placement: Option<&LayerPlacement>,
+    hier: &MemoryHierarchy,
+) -> DataflowTrace {
+    let kt = k.div_ceil(sp.cols).max(1);
+    let nt = n.div_ceil(sp.hmus).max(1);
+    let g = Geom { n, k, nt, kt, n_pad: nt * sp.hmus, k_pad: kt * sp.cols };
+    trace_geom(m, &g, sp, placement, hier)
+}
+
+fn trace_geom(
+    m: usize,
+    geom: &Geom,
+    sp: &MacroSpec,
+    placement: Option<&LayerPlacement>,
+    hier: &MemoryHierarchy,
+) -> DataflowTrace {
+    let m = m as u64;
+    let (kt, nt) = (geom.kt as u64, geom.nt as u64);
+    let (k, n) = (geom.k as u64, geom.n as u64);
+    let (k_pad, n_pad) = (geom.k_pad as u64, geom.n_pad as u64);
+    let tile_words = (sp.hmus * sp.cols) as u64;
+    let tiles = nt * kt;
+    let replicas = placement.map(|p| p.replicas as u64).unwrap_or(1);
+
+    let mut access = [LevelAccess::default(); NUM_LEVELS];
+    // weight fill: DRAM -> weight SRAM once, SRAM -> each replica's cells
+    access[DRAM].reads += tiles * tile_words;
+    access[WEIGHT_SRAM].writes += tiles * tile_words;
+    access[WEIGHT_SRAM].reads += tiles * tile_words * replicas;
+    access[CELL_GROUP].writes += tiles * tile_words * replicas;
+    // weight-stationary reuse: every row re-reads every resident tile
+    access[CELL_GROUP].reads += m * tiles * tile_words;
+    // input broadcast: DRAM -> act SRAM, then one padded read per row
+    access[DRAM].reads += m * k;
+    access[ACT_SRAM].writes += m * k_pad;
+    access[ACT_SRAM].reads += m * k_pad;
+    // partial-sum accumulation + writeback
+    access[ACC_RF].writes += m * n_pad * kt;
+    access[ACC_RF].reads += m * n_pad * kt;
+    access[ACT_SRAM].writes += m * n_pad;
+    access[DRAM].writes += m * n;
+
+    let hop_words = placement
+        .map(|p| {
+            let spans: u64 = (0..p.nt).map(|ni| (p.k_span(ni) - 1) as u64).sum();
+            m * spans * sp.hmus as u64
+        })
+        .unwrap_or(0);
+
+    let mut movement_fj = [0.0; NUM_LEVELS];
+    for (i, fj) in movement_fj.iter_mut().enumerate() {
+        let lv = hier.level(i);
+        *fj = access[i].reads as f64 * lv.read_fj + access[i].writes as f64 * lv.write_fj;
+    }
+    DataflowTrace { access, movement_fj, hop_words }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::plan::{FleetDims, PlacementMode};
+    use crate::spec::MacroSpec;
+    use crate::util::prng::SplitMix64;
+
+    fn plan_of(n: usize, k: usize) -> LayerPlan {
+        let mut g = SplitMix64::new(21);
+        let w: Vec<i32> = (0..n * k).map(|_| g.next_range_i32(-128, 128)).collect();
+        LayerPlan::build(&w, n, k, 0, MacroSpec::default()).unwrap()
+    }
+
+    #[test]
+    fn counts_follow_the_derivation() {
+        let sp = MacroSpec::default();
+        let (m, n, k) = (10usize, 20usize, 300usize);
+        let plan = plan_of(n, k);
+        let h = MemoryHierarchy::default();
+        let t = trace_layer(m, &plan, None, &h);
+        let tile_words = (sp.hmus * sp.cols) as u64;
+        let tiles = (plan.nt * plan.kt) as u64;
+        assert_eq!(t.access[WEIGHT_SRAM].writes, tiles * tile_words);
+        assert_eq!(t.access[WEIGHT_SRAM].reads, tiles * tile_words, "one replica");
+        assert_eq!(t.access[CELL_GROUP].reads, m as u64 * tiles * tile_words);
+        assert_eq!(t.access[ACT_SRAM].reads, (m * plan.k_pad) as u64);
+        assert_eq!(t.access[ACC_RF].writes, (m * plan.n_pad * plan.kt) as u64);
+        assert_eq!(
+            t.access[DRAM].reads,
+            tiles * tile_words + (m * k) as u64
+        );
+        assert_eq!(t.access[DRAM].writes, (m * n) as u64);
+        assert_eq!(t.hop_words, 0, "no placement, no hops");
+        // cell reads are counted but priced at the default 0 fJ
+        assert_eq!(t.movement_fj[CELL_GROUP], t.access[CELL_GROUP].writes as f64 * 1.9);
+        assert!(t.total_fj() > 0.0);
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_pure() {
+        let plan = plan_of(16, 400);
+        let h = MemoryHierarchy::default();
+        let a = trace_layer(32, &plan, None, &h);
+        let b = trace_layer(32, &plan, None, &h);
+        assert_eq!(a, b);
+        for (x, y) in a.movement_fj.iter().zip(&b.movement_fj) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn split_k_placement_reports_hop_words_matching_fleet_accounting() {
+        // kt = 3 > residency 1 -> split-K; hop words must equal the
+        // fleet executor's transfer formula m * sum(span-1) * hmus
+        let sp = MacroSpec::default();
+        let (m, n, k) = (8usize, 16usize, 3 * sp.cols);
+        let plan = plan_of(n, k);
+        let lp = LayerPlacement::plan(
+            0,
+            plan.nt,
+            plan.kt,
+            plan.nt * plan.kt,
+            FleetDims { macros: 4, residency_tiles: 1 },
+            PlacementMode::Auto,
+        );
+        assert!(lp.split_k());
+        let h = MemoryHierarchy::default();
+        let t = trace_layer(m, &plan, Some(&lp), &h);
+        let spans: u64 = (0..lp.nt).map(|ni| (lp.k_span(ni) - 1) as u64).sum();
+        assert_eq!(t.hop_words, m as u64 * spans * sp.hmus as u64);
+        assert!(t.hop_words > 0);
+    }
+
+    #[test]
+    fn trace_dims_matches_trace_layer() {
+        // the weights-free entry point must price exactly what the
+        // packed plan does — GET /v2/energy depends on this identity
+        let sp = MacroSpec::default();
+        for (m, n, k) in [(1usize, 8usize, 27usize), (64, 20, 300), (16, 144, 3 * sp.cols)] {
+            let plan = plan_of(n, k);
+            let h = MemoryHierarchy::default();
+            let a = trace_layer(m, &plan, None, &h);
+            let b = trace_dims(m, n, k, &sp, None, &h);
+            assert_eq!(a, b);
+            for (x, y) in a.movement_fj.iter().zip(&b.movement_fj) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn replication_scales_fill_but_not_streaming() {
+        let plan = plan_of(8, 100); // 1 tile -> replicates across a fleet
+        let lp = LayerPlacement::plan(
+            0,
+            plan.nt,
+            plan.kt,
+            plan.nt * plan.kt,
+            FleetDims { macros: 4, residency_tiles: 4 },
+            PlacementMode::Replicate,
+        );
+        assert!(lp.replicas > 1);
+        let h = MemoryHierarchy::default();
+        let single = trace_layer(64, &plan, None, &h);
+        let fleet = trace_layer(64, &plan, Some(&lp), &h);
+        // each replica's cell array gets its own fill...
+        assert_eq!(
+            fleet.access[CELL_GROUP].writes,
+            single.access[CELL_GROUP].writes * lp.replicas as u64
+        );
+        // ...but the activation stream and DRAM traffic do not replicate
+        assert_eq!(fleet.access[ACT_SRAM], single.access[ACT_SRAM]);
+        assert_eq!(fleet.access[DRAM], single.access[DRAM]);
+        assert_eq!(fleet.hop_words, 0, "replication alone never hops");
+    }
+}

@@ -1,0 +1,298 @@
+//! Declarative memory-hierarchy description (`[hardware]`, DESIGN.md
+//! §15) — the zigzag-imc production shape: the stack is *data*, not
+//! code, so swapping the 65 nm / 0.6 V anchor numbers for another
+//! process corner is a config edit.
+//!
+//! Five levels model the paper's macro plus the system around it:
+//!
+//! | level         | holds                                  |
+//! |---------------|----------------------------------------|
+//! | `cell_group`  | split-port 6T array (one packed tile)  |
+//! | `acc_rf`      | per-HMU partial-sum accumulation RF    |
+//! | `weight_sram` | on-chip weight buffer feeding the array|
+//! | `act_sram`    | on-chip activation buffer              |
+//! | `dram`        | off-chip backing store                 |
+//!
+//! A *word* is one 8-bit operand (weight, activation, or partial-sum
+//! lane), so `size_bytes` and word counts share a unit.  Cell reads are
+//! already folded into `EnergyParams::e_dat_bitmac_fj`, so the default
+//! `cell_group` read energy is 0 — the dataflow walker still *counts*
+//! those reads (the weight-stationary reuse statistic) without
+//! double-pricing them.
+//!
+//! In TOML each level is one array, `[size_bytes, read_fj_per_word,
+//! write_fj_per_word, bandwidth_words_per_cycle, ports]`:
+//!
+//! ```toml
+//! [hardware]
+//! model = "hierarchy"
+//! weight_sram = [73728, 5.8, 7.2, 16, 1]
+//! ```
+
+use anyhow::{bail, Result};
+
+/// Memory levels in the stack, innermost first.
+pub const NUM_LEVELS: usize = 5;
+
+/// Index of the split-port 6T cell array level.
+pub const CELL_GROUP: usize = 0;
+/// Index of the partial-sum accumulation register file level.
+pub const ACC_RF: usize = 1;
+/// Index of the on-chip weight SRAM level.
+pub const WEIGHT_SRAM: usize = 2;
+/// Index of the on-chip activation SRAM level.
+pub const ACT_SRAM: usize = 3;
+/// Index of the off-chip DRAM level.
+pub const DRAM: usize = 4;
+
+/// Level names, in index order — also the `[hardware]` TOML keys and
+/// the `level` label values in Prometheus / `GET /v2/energy`.
+pub const LEVEL_NAMES: [&str; NUM_LEVELS] =
+    ["cell_group", "acc_rf", "weight_sram", "act_sram", "dram"];
+
+/// The compact (per-op constants) cost model name.
+pub const MODEL_COMPACT: &str = "compact";
+/// The hierarchy-and-dataflow cost model name.
+pub const MODEL_HIERARCHY: &str = "hierarchy";
+
+/// One level of the memory stack.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryLevel {
+    /// Capacity in bytes (= 8-bit words).
+    pub size_bytes: u64,
+    /// Energy per word read, femtojoules.
+    pub read_fj: f64,
+    /// Energy per word written, femtojoules.
+    pub write_fj: f64,
+    /// Sustained bandwidth in words per analog-clock cycle.
+    pub bandwidth_words: f64,
+    /// Concurrent access ports.
+    pub ports: u32,
+}
+
+impl MemoryLevel {
+    /// Parse one level from its TOML array form
+    /// `[size_bytes, read_fj, write_fj, bandwidth_words, ports]`.
+    /// `key` names the field in errors (e.g. `hardware.weight_sram`).
+    pub fn from_array(key: &str, vals: &[f64]) -> Result<Self> {
+        if vals.len() != 5 {
+            bail!(
+                "{key}: expected [size_bytes, read_fj, write_fj, bandwidth_words, ports] \
+                 (5 entries), got {}",
+                vals.len()
+            );
+        }
+        if vals[0] < 0.0 || vals[4] < 0.0 {
+            bail!("{key}: size_bytes and ports must be non-negative, got {vals:?}");
+        }
+        Ok(Self {
+            size_bytes: vals[0] as u64,
+            read_fj: vals[1],
+            write_fj: vals[2],
+            bandwidth_words: vals[3],
+            ports: vals[4] as u32,
+        })
+    }
+}
+
+/// The declarative memory stack (`[hardware]` in TOML).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryHierarchy {
+    /// Levels in [`LEVEL_NAMES`] order.
+    pub levels: [MemoryLevel; NUM_LEVELS],
+}
+
+impl Default for MemoryHierarchy {
+    /// 65 nm / 0.6 V anchor stack.  SRAM per-word energies sit between
+    /// the per-bit MAC constant (10.5 fJ) and the ADC conversion
+    /// (1320 fJ); DRAM is the usual two orders of magnitude above
+    /// on-chip SRAM.  `cell_group` reads are priced at 0 because they
+    /// are folded into `e_dat_bitmac_fj` (module docs).
+    fn default() -> Self {
+        Self {
+            levels: [
+                // cell_group: one packed 64x144 tile, split-port (2R/W)
+                MemoryLevel {
+                    size_bytes: 1_152,
+                    read_fj: 0.0,
+                    write_fj: 1.9,
+                    bandwidth_words: 144.0,
+                    ports: 2,
+                },
+                // acc_rf: 8 HMUs x 32 B partial-sum lanes
+                MemoryLevel {
+                    size_bytes: 256,
+                    read_fj: 1.1,
+                    write_fj: 1.3,
+                    bandwidth_words: 16.0,
+                    ports: 2,
+                },
+                // weight_sram: 72 KiB (64 resident tiles)
+                MemoryLevel {
+                    size_bytes: 73_728,
+                    read_fj: 5.8,
+                    write_fj: 7.2,
+                    bandwidth_words: 16.0,
+                    ports: 1,
+                },
+                // act_sram: 36 KiB double-buffered activation store
+                MemoryLevel {
+                    size_bytes: 36_864,
+                    read_fj: 5.2,
+                    write_fj: 6.4,
+                    bandwidth_words: 16.0,
+                    ports: 1,
+                },
+                // dram: 64 MiB off-chip
+                MemoryLevel {
+                    size_bytes: 64 * 1024 * 1024,
+                    read_fj: 620.0,
+                    write_fj: 640.0,
+                    bandwidth_words: 4.0,
+                    ports: 1,
+                },
+            ],
+        }
+    }
+}
+
+impl MemoryHierarchy {
+    /// The level at `idx` (see the index constants).
+    #[inline]
+    pub fn level(&self, idx: usize) -> &MemoryLevel {
+        &self.levels[idx]
+    }
+
+    /// Validate every level with field-named errors.  `tile_bytes` is
+    /// one packed weight tile (`sched::fleet::tile_bytes`): any level
+    /// that stages whole weight tiles (cell group, weight SRAM, DRAM)
+    /// must be able to hold at least one.
+    pub fn validate(&self, tile_bytes: u64) -> Result<()> {
+        for (i, lv) in self.levels.iter().enumerate() {
+            let key = LEVEL_NAMES[i];
+            if lv.size_bytes == 0 {
+                bail!("hardware.{key}: size_bytes must be >= 1");
+            }
+            for (field, v) in [("read_fj", lv.read_fj), ("write_fj", lv.write_fj)] {
+                if v.is_nan() || v < 0.0 {
+                    bail!("hardware.{key}: {field} must be finite and >= 0 fJ, got {v}");
+                }
+            }
+            if lv.bandwidth_words.is_nan() || lv.bandwidth_words <= 0.0 {
+                bail!(
+                    "hardware.{key}: bandwidth_words must be > 0, got {}",
+                    lv.bandwidth_words
+                );
+            }
+            if lv.ports == 0 {
+                bail!("hardware.{key}: ports must be >= 1");
+            }
+        }
+        for idx in [CELL_GROUP, WEIGHT_SRAM, DRAM] {
+            if self.levels[idx].size_bytes < tile_bytes {
+                bail!(
+                    "hardware.{}: size_bytes {} cannot hold one packed weight tile \
+                     ({tile_bytes} B)",
+                    LEVEL_NAMES[idx],
+                    self.levels[idx].size_bytes
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Validate a `[hardware] model` string.
+pub fn validate_model(name: &str) -> Result<()> {
+    if name != MODEL_COMPACT && name != MODEL_HIERARCHY {
+        bail!(
+            "hardware.model: unknown model {name:?} ({MODEL_COMPACT:?}|{MODEL_HIERARCHY:?})"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TILE: u64 = 1_152;
+
+    #[test]
+    fn default_stack_is_valid() {
+        let h = MemoryHierarchy::default();
+        h.validate(TILE).unwrap();
+        // ordering sanity: moving outward gets more capacious and more
+        // expensive per word
+        assert!(h.level(WEIGHT_SRAM).size_bytes > h.level(CELL_GROUP).size_bytes);
+        assert!(h.level(DRAM).read_fj > h.level(WEIGHT_SRAM).read_fj);
+        assert!(h.level(WEIGHT_SRAM).read_fj > h.level(ACC_RF).read_fj);
+    }
+
+    #[test]
+    fn from_array_round_trips() {
+        let lv = MemoryLevel::from_array("hardware.x", &[1024.0, 2.0, 3.0, 16.0, 2.0]).unwrap();
+        assert_eq!(lv.size_bytes, 1024);
+        assert_eq!(lv.read_fj, 2.0);
+        assert_eq!(lv.write_fj, 3.0);
+        assert_eq!(lv.bandwidth_words, 16.0);
+        assert_eq!(lv.ports, 2);
+        let err = MemoryLevel::from_array("hardware.x", &[1.0, 2.0]).unwrap_err();
+        assert!(err.to_string().contains("hardware.x"), "{err}");
+        assert!(MemoryLevel::from_array("hardware.x", &[-1.0, 2.0, 3.0, 16.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_levels_with_field_names() {
+        let mut h = MemoryHierarchy::default();
+        h.levels[ACT_SRAM].size_bytes = 0;
+        let err = h.validate(TILE).unwrap_err();
+        assert!(err.to_string().contains("hardware.act_sram"), "{err}");
+
+        let mut h = MemoryHierarchy::default();
+        h.levels[ACC_RF].read_fj = -1.0;
+        let err = h.validate(TILE).unwrap_err();
+        assert!(err.to_string().contains("hardware.acc_rf"), "{err}");
+
+        let mut h = MemoryHierarchy::default();
+        h.levels[DRAM].bandwidth_words = 0.0;
+        let err = h.validate(TILE).unwrap_err();
+        assert!(err.to_string().contains("hardware.dram"), "{err}");
+
+        let mut h = MemoryHierarchy::default();
+        h.levels[CELL_GROUP].ports = 0;
+        let err = h.validate(TILE).unwrap_err();
+        assert!(err.to_string().contains("hardware.cell_group"), "{err}");
+
+        // a NaN energy must not sneak past the >= 0 check
+        let mut h = MemoryHierarchy::default();
+        h.levels[WEIGHT_SRAM].write_fj = f64::NAN;
+        assert!(h.validate(TILE).is_err());
+    }
+
+    #[test]
+    fn tile_holding_levels_must_fit_one_tile() {
+        for idx in [CELL_GROUP, WEIGHT_SRAM, DRAM] {
+            let mut h = MemoryHierarchy::default();
+            h.levels[idx].size_bytes = TILE - 1;
+            let err = h.validate(TILE).unwrap_err();
+            assert!(
+                err.to_string().contains(LEVEL_NAMES[idx])
+                    && err.to_string().contains("packed weight tile"),
+                "{err}"
+            );
+        }
+        // act_sram / acc_rf hold words, not tiles: small is fine
+        let mut h = MemoryHierarchy::default();
+        h.levels[ACC_RF].size_bytes = 16;
+        h.validate(TILE).unwrap();
+    }
+
+    #[test]
+    fn model_names_validate() {
+        validate_model(MODEL_COMPACT).unwrap();
+        validate_model(MODEL_HIERARCHY).unwrap();
+        let err = validate_model("zigzag").unwrap_err();
+        assert!(err.to_string().contains("hardware.model"), "{err}");
+    }
+}

@@ -10,9 +10,21 @@
 //!
 //! The `calibration` test in this module asserts the anchors; the
 //! `fig7`/`fig9` harnesses print the full breakdowns.
+//!
+//! PR 9 layers a second cost model on top of these per-op constants:
+//! [`hierarchy`] declares the memory stack (`[hardware]` in TOML) and
+//! [`dataflow`] walks a layer plan's tiles to price every word of data
+//! movement into [`EnergyBreakdown::movement_fj`].  The per-op path
+//! stays the default (`model = "compact"`) and is bit-identical to the
+//! pre-PR numbers — `movement_fj` is all-zero there, and `x + 0.0`
+//! preserves every f64 bit for the non-negative sums involved.
+
+pub mod dataflow;
+pub mod hierarchy;
 
 use crate::macrosim::OpCounts;
 use crate::spec::MacroSpec;
+use hierarchy::NUM_LEVELS;
 
 /// Analog-domain clock (SAR ADC cadence); the DAT runs at 2x this.
 pub const CLK_ANALOG_HZ: f64 = 100.0e6;
@@ -59,11 +71,27 @@ pub struct EnergyBreakdown {
     pub nq_fj: f64,
     pub ose_fj: f64,
     pub ctrl_fj: f64,
+    /// Data-movement energy per memory level ([`hierarchy`] order:
+    /// cell group, accumulation RF, weight SRAM, activation SRAM,
+    /// DRAM), femtojoules.  All-zero under the `compact` model; filled
+    /// by [`dataflow::trace_layer`] under `model = "hierarchy"`.
+    pub movement_fj: [f64; NUM_LEVELS],
 }
 
 impl EnergyBreakdown {
     pub fn total_fj(&self) -> f64 {
-        self.digital_fj + self.adc_fj + self.dac_fj + self.nq_fj + self.ose_fj + self.ctrl_fj
+        self.digital_fj
+            + self.adc_fj
+            + self.dac_fj
+            + self.nq_fj
+            + self.ose_fj
+            + self.ctrl_fj
+            + self.movement_total_fj()
+    }
+
+    /// Total data-movement energy across every memory level, femtojoules.
+    pub fn movement_total_fj(&self) -> f64 {
+        self.movement_fj.iter().sum()
     }
 
     pub fn add(&mut self, other: &EnergyBreakdown) {
@@ -73,11 +101,19 @@ impl EnergyBreakdown {
         self.nq_fj += other.nq_fj;
         self.ose_fj += other.ose_fj;
         self.ctrl_fj += other.ctrl_fj;
+        for (acc, v) in self.movement_fj.iter_mut().zip(&other.movement_fj) {
+            *acc += v;
+        }
     }
 
-    /// Fractions per component (sums to 1 when total > 0).
+    /// Fractions per *macro* component (sums to 1 when total > 0).
+    /// Movement stays out so the Fig 7 component shares remain a
+    /// property of the macro alone; read it via
+    /// [`EnergyBreakdown::movement_fj`] / [`hierarchy::LEVEL_NAMES`].
     pub fn fractions(&self) -> [(&'static str, f64); 6] {
-        let t = self.total_fj().max(1e-12);
+        let t = (self.digital_fj + self.adc_fj + self.dac_fj + self.nq_fj + self.ose_fj
+            + self.ctrl_fj)
+            .max(1e-12);
         [
             ("DAT+array (digital)", self.digital_fj / t),
             ("SAR ADC", self.adc_fj / t),

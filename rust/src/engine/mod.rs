@@ -45,6 +45,7 @@
 //! and the library surface can never drift apart.
 
 use crate::config::{CimMode, SystemConfig};
+use crate::energy::hierarchy::{MemoryHierarchy, MODEL_HIERARCHY, NUM_LEVELS};
 use crate::macrosim::ose::Ose;
 use crate::nn::{Executor, QGraph};
 use crate::sched::exec::ExecPool;
@@ -88,6 +89,14 @@ pub struct Capabilities {
     /// CIMPool-style weight-tile pooling is active as the spill strategy
     /// when a model exceeds aggregate residency (fleet `auto` placement).
     pub pooling: bool,
+    /// The energy cost model this backend prices with: `"compact"`
+    /// (per-op constants) or `"hierarchy"` (dataflow-priced memory
+    /// levels, `[hardware] model`) — DESIGN.md §15.
+    pub cost_model: &'static str,
+    /// Memory levels the cost model resolves movement against
+    /// (`energy::hierarchy::NUM_LEVELS` under `"hierarchy"`, 0 under
+    /// `"compact"` where movement is folded into the op constants).
+    pub memory_levels: usize,
     /// One-line human description.
     pub description: &'static str,
 }
@@ -378,6 +387,7 @@ impl Backend for NativeBackend {
 
     fn capabilities(&self) -> Capabilities {
         let mode = self.inner.mode;
+        let cost_model = self.inner.cost_model();
         Capabilities {
             available: true,
             mode,
@@ -386,6 +396,8 @@ impl Backend for NativeBackend {
             programmable_thresholds: mode == CimMode::Osa,
             hybrid_boundary: matches!(mode, CimMode::Hcim | CimMode::Osa),
             pooling: false,
+            cost_model,
+            memory_levels: if cost_model == MODEL_HIERARCHY { NUM_LEVELS } else { 0 },
             description: "native cycle-level macro simulator",
         }
     }
@@ -417,6 +429,12 @@ impl Backend for NativeBackend {
     }
 }
 
+/// The `[hardware]` stack to price movement against, or `None` under
+/// the (default, bit-compatible) compact model.
+fn hierarchy_of(cfg: &SystemConfig) -> Option<Arc<MemoryHierarchy>> {
+    cfg.hierarchy_model().then(|| Arc::new(cfg.hardware.clone()))
+}
+
 fn build_native(
     ctx: &BackendCtx,
     reg_name: &'static str,
@@ -430,7 +448,8 @@ fn build_native(
         ctx.cfg.noise_seed,
     )?
     .with_plan_cache(ctx.plans.clone())
-    .with_pool(ctx.pool.clone());
+    .with_pool(ctx.pool.clone())
+    .with_hierarchy(hierarchy_of(ctx.cfg));
     Ok(Box::new(NativeBackend { reg_name, inner: gemm }))
 }
 
@@ -478,6 +497,7 @@ impl Backend for FleetBackend {
     fn capabilities(&self) -> Capabilities {
         let mode = self.inner.base().mode;
         let dims = self.inner.fleet();
+        let cost_model = self.inner.base().cost_model();
         Capabilities {
             available: true,
             mode,
@@ -487,6 +507,8 @@ impl Backend for FleetBackend {
             programmable_thresholds: mode == CimMode::Osa,
             hybrid_boundary: matches!(mode, CimMode::Hcim | CimMode::Osa),
             pooling: self.inner.placement_mode() == PlacementMode::Auto,
+            cost_model,
+            memory_levels: if cost_model == MODEL_HIERARCHY { NUM_LEVELS } else { 0 },
             description: "K-macro fleet over the native simulator",
         }
     }
@@ -542,7 +564,8 @@ fn build_macro_fleet(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
         ctx.cfg.noise_seed,
     )?
     .with_plan_cache(ctx.plans.clone())
-    .with_pool(ctx.pool.clone());
+    .with_pool(ctx.pool.clone())
+    .with_hierarchy(hierarchy_of(ctx.cfg));
     let mode = PlacementMode::parse(&ctx.cfg.fleet_placement).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown [fleet] placement {:?} (one of: auto, replicate, resident)",
@@ -647,6 +670,9 @@ impl Backend for PjrtBackend {
             programmable_thresholds: self.mode == CimMode::Osa,
             hybrid_boundary: matches!(self.mode, CimMode::Hcim | CimMode::Osa),
             pooling: false,
+            // the artifact runtime prices through the compact model only
+            cost_model: crate::energy::hierarchy::MODEL_COMPACT,
+            memory_levels: 0,
             description: "AOT PJRT artifact runtime",
         }
     }
@@ -742,6 +768,11 @@ pub struct InferResponse {
     pub latency: Duration,
     /// Size of the engine batch this request rode in.
     pub batch_size: usize,
+    /// Modeled energy of this request's equal share of its batch
+    /// forward, joules (macro breakdown + movement + fleet transfer).
+    /// `0.0` when the request was answered with an error before a
+    /// forward completed.
+    pub energy_j: f64,
     /// Set when the request was *answered*, not served (`logits` is
     /// empty or poisoned, `pred` is meaningless).
     pub error: Option<String>,

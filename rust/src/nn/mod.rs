@@ -65,6 +65,21 @@ pub enum Op {
     QFc,
 }
 
+/// GEMM geometry of one conv layer for a single input image — see
+/// [`QGraph::layer_shapes`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerShape {
+    /// Engine layer index (same assignment as [`QGraph::gemm_dims`]).
+    pub layer_idx: u64,
+    pub name: String,
+    /// im2col rows for one image: `out_h * out_w`.
+    pub m: usize,
+    /// Output channels.
+    pub n: usize,
+    /// Reduction depth: `kh * kw * cin`.
+    pub k: usize,
+}
+
 /// Loaded quantized model.
 #[derive(Debug, Clone)]
 pub struct QGraph {
@@ -182,6 +197,73 @@ impl QGraph {
             layer_idx += 1;
         }
         dims
+    }
+
+    /// GEMM geometry of every conv layer for a single input image
+    /// (`batch = 1`): mirrors the spatial bookkeeping of
+    /// [`Executor::forward`] without touching weights or activations.
+    /// `m` is the im2col row count (`out_h * out_w`), `(n, k)` match
+    /// [`QGraph::gemm_dims`].  The energy dataflow tracer
+    /// (`GET /v2/energy`) prices one inference from these shapes.
+    pub fn layer_shapes(&self) -> Vec<LayerShape> {
+        let out_dims = |conv: &QConv, h: usize, w: usize| {
+            let pad = (conv.kh - 1) / 2;
+            let oh = (h + 2 * pad - conv.kh) / conv.stride + 1;
+            let ow = (w + 2 * pad - conv.kw) / conv.stride + 1;
+            (oh, ow)
+        };
+        let mut shapes = Vec::new();
+        let mut cur = (32usize, 32usize); // running buffer `h`
+        let mut t_dims = cur; // conv1 output `t`
+        let mut block_dims = cur; // block input (shortcut source)
+        let mut layer_idx: u64 = 0;
+        for op in &self.ops {
+            match op {
+                Op::QConv { name, .. } => {
+                    if let Some(conv) = self.convs.get(name) {
+                        let is_conv1 = name.ends_with(".conv1");
+                        let input = if name == "stem" || is_conv1 {
+                            if is_conv1 {
+                                block_dims = cur;
+                            }
+                            cur
+                        } else {
+                            t_dims
+                        };
+                        let (oh, ow) = out_dims(conv, input.0, input.1);
+                        shapes.push(LayerShape {
+                            layer_idx,
+                            name: conv.name.clone(),
+                            m: oh * ow,
+                            n: conv.cout,
+                            k: conv.kh * conv.kw * conv.cin,
+                        });
+                        if name == "stem" {
+                            cur = (oh, ow);
+                        } else {
+                            t_dims = (oh, ow);
+                        }
+                    }
+                    layer_idx += 1;
+                }
+                Op::QConvShortcut { name } => {
+                    if let Some(conv) = self.convs.get(name) {
+                        let (oh, ow) = out_dims(conv, block_dims.0, block_dims.1);
+                        shapes.push(LayerShape {
+                            layer_idx,
+                            name: conv.name.clone(),
+                            m: oh * ow,
+                            n: conv.cout,
+                            k: conv.kh * conv.kw * conv.cin,
+                        });
+                    }
+                    layer_idx += 1;
+                }
+                Op::ResidualRelu => cur = t_dims,
+                Op::Gap | Op::QFc => {}
+            }
+        }
+        shapes
     }
 
     /// A tiny self-contained graph (stem conv -> GAP -> FC) with
@@ -350,6 +432,7 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
             offset_us,
             dur_us: t0.elapsed().as_micros() as u64,
             energy_fj: r.account.breakdown.total_fj(),
+            movement_fj: r.account.breakdown.movement_fj,
             macro_ops: r.account.macro_ops,
         });
         Ok(out)
@@ -466,6 +549,7 @@ impl<'a, E: GemmEngine> Executor<'a, E> {
                         offset_us: fc_offset_us,
                         dur_us: t0.elapsed().as_micros() as u64,
                         energy_fj: 0.0,
+                        movement_fj: [0.0; crate::energy::hierarchy::NUM_LEVELS],
                         macro_ops: 0,
                     });
                 }
@@ -584,6 +668,22 @@ mod tests {
         let s = plans.stats();
         assert_eq!(s.misses as usize, graph.convs.len(), "forward re-packed a layer");
         assert!(s.hits >= 1);
+    }
+
+    #[test]
+    fn layer_shapes_match_gemm_dims() {
+        let graph = QGraph::synthetic();
+        let shapes = graph.layer_shapes();
+        let dims = graph.gemm_dims();
+        assert_eq!(shapes.len(), dims.len());
+        for (s, (idx, n, k)) in shapes.iter().zip(&dims) {
+            assert_eq!(s.layer_idx, *idx);
+            assert_eq!(s.n, *n);
+            assert_eq!(s.k, *k);
+        }
+        // stem: 3x3 stride 1 pad 1 on 32x32 -> 32x32 = 1024 rows
+        assert_eq!(shapes[0].name, "stem");
+        assert_eq!(shapes[0].m, 1024);
     }
 
     // Full graph execution is covered by rust/tests/nn_end_to_end.rs

@@ -26,6 +26,7 @@
 //! share: one `Arc`, all interior atomics, cloned freely onto the hot
 //! path.
 
+use crate::energy::hierarchy::NUM_LEVELS;
 use crate::io::json::{arr, num, obj, s, JsonValue};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -443,6 +444,10 @@ pub struct LayerSample {
     pub offset_us: u64,
     pub dur_us: u64,
     pub energy_fj: f64,
+    /// Data-movement share of `energy_fj` per memory level
+    /// (`energy::hierarchy::LEVEL_NAMES` order); all-zero under the
+    /// `compact` cost model.
+    pub movement_fj: [f64; NUM_LEVELS],
     pub macro_ops: u64,
 }
 
@@ -453,6 +458,7 @@ pub struct LayerStat {
     pub calls: AtomicU64,
     pub exec_us: AtomicU64,
     pub energy_fj: AtomicU64,
+    pub movement_fj: [AtomicU64; NUM_LEVELS],
     pub macro_ops: AtomicU64,
 }
 
@@ -462,6 +468,8 @@ pub struct LayerStatSnap {
     pub calls: u64,
     pub exec_us: u64,
     pub energy_j: f64,
+    /// Cumulative modeled data movement per memory level, joules.
+    pub movement_j: [f64; NUM_LEVELS],
     pub macro_ops: u64,
 }
 
@@ -614,6 +622,9 @@ impl ServerObs {
             stat.calls.fetch_add(1, Ordering::Relaxed);
             stat.exec_us.fetch_add(smp.dur_us, Ordering::Relaxed);
             stat.energy_fj.fetch_add(smp.energy_fj.max(0.0) as u64, Ordering::Relaxed);
+            for (acc, &fj) in stat.movement_fj.iter().zip(&smp.movement_fj) {
+                acc.fetch_add(fj.max(0.0) as u64, Ordering::Relaxed);
+            }
             stat.macro_ops.fetch_add(smp.macro_ops, Ordering::Relaxed);
         }
     }
@@ -631,6 +642,9 @@ impl ServerObs {
                         calls: st.calls.load(Ordering::Relaxed),
                         exec_us: st.exec_us.load(Ordering::Relaxed),
                         energy_j: st.energy_fj.load(Ordering::Relaxed) as f64 * 1e-15,
+                        movement_j: std::array::from_fn(|i| {
+                            st.movement_fj[i].load(Ordering::Relaxed) as f64 * 1e-15
+                        }),
                         macro_ops: st.macro_ops.load(Ordering::Relaxed),
                     },
                 )
@@ -1380,12 +1394,16 @@ mod tests {
     #[test]
     fn layer_attribution_accumulates() {
         let obs = ServerObs::new(64, 0, true);
+        let mut movement = [0.0; NUM_LEVELS];
+        movement[0] = 5.0e5;
+        movement[4] = 1.0e5;
         let samples = vec![
             LayerSample {
                 name: "conv1".into(),
                 offset_us: 0,
                 dur_us: 100,
                 energy_fj: 2.0e6,
+                movement_fj: movement,
                 macro_ops: 50,
             },
             LayerSample {
@@ -1393,6 +1411,7 @@ mod tests {
                 offset_us: 100,
                 dur_us: 20,
                 energy_fj: 1.0e6,
+                movement_fj: [0.0; NUM_LEVELS],
                 macro_ops: 10,
             },
         ];
@@ -1405,6 +1424,9 @@ mod tests {
         assert_eq!(conv.exec_us, 200);
         assert_eq!(conv.macro_ops, 100);
         assert!((conv.energy_j - 4.0e-9).abs() < 1e-15);
+        assert!((conv.movement_j[0] - 1.0e-9).abs() < 1e-15);
+        assert!((conv.movement_j[4] - 2.0e-10).abs() < 1e-15);
+        assert_eq!(conv.movement_j[1], 0.0);
     }
 
     #[test]

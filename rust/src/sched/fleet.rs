@@ -367,7 +367,26 @@ impl FleetGemm {
         for s in 0..m {
             final_out[s * n..(s + 1) * n].copy_from_slice(&out[s * n_pad..s * n_pad + n]);
         }
+        // hierarchy cost model: price this call's data movement from
+        // the plan + placement geometry — a deterministic post-pass, so
+        // fleet merge order can never shift the f64s (hops themselves
+        // stay priced via transfer_fj above, never double-counted)
+        self.base.price_movement(&mut account, m, plan, Some(&lp));
         Ok(GemmResult { out: final_out, m, n, account, b_hist, bda, n_tiles: nt })
+    }
+
+    /// The placement's dataflow trace for a hypothetical `m`-row call of
+    /// `layer_idx` (for `GET /v2/energy`); `None` until the layer has
+    /// been planned or when running the compact model.
+    pub fn movement_trace(
+        &self,
+        layer_idx: u64,
+        m: usize,
+        plan: &LayerPlan,
+    ) -> Option<crate::energy::dataflow::DataflowTrace> {
+        let hier = self.base.hierarchy()?;
+        let lp = self.placement_of(layer_idx)?;
+        Some(crate::energy::dataflow::trace_layer(m, plan, Some(&lp), hier))
     }
 }
 

@@ -34,7 +34,8 @@ pub mod im2col;
 pub mod plan;
 
 use crate::config::CimMode;
-use crate::energy::{EnergyAccount, EnergyParams};
+use crate::energy::hierarchy::{MemoryHierarchy, MODEL_COMPACT, MODEL_HIERARCHY};
+use crate::energy::{dataflow, EnergyAccount, EnergyParams};
 use crate::macrosim::ose::{Ose, SaliencyAccumulator};
 use crate::quant::PackedBits;
 use crate::spec::MacroSpec;
@@ -143,6 +144,10 @@ pub struct MacroGemm {
     /// to [`ExecPool::global`] lazily at execution time, so merely
     /// constructing an engine never spawns threads.
     pool: Option<Arc<ExecPool>>,
+    /// Memory hierarchy for the dataflow cost model (`[hardware]
+    /// model = "hierarchy"`).  `None` = compact model: per-op constants
+    /// only, `movement_fj` stays all-zero — the bit-compatible default.
+    hier: Option<Arc<MemoryHierarchy>>,
 }
 
 impl MacroGemm {
@@ -165,6 +170,7 @@ impl MacroGemm {
             plans: Arc::new(PlanCache::new()),
             plan_scope: PlanScope::SINGLE,
             pool: None,
+            hier: None,
         })
     }
 
@@ -182,6 +188,7 @@ impl MacroGemm {
             plans: Arc::new(PlanCache::new()),
             plan_scope: PlanScope::SINGLE,
             pool: None,
+            hier: None,
         }
     }
 
@@ -205,6 +212,47 @@ impl MacroGemm {
     pub fn with_pool(mut self, pool: Arc<ExecPool>) -> Self {
         self.pool = Some(pool);
         self
+    }
+
+    /// Switch to the hierarchy cost model: price each call's data
+    /// movement ([`dataflow::trace_layer`]) into
+    /// `EnergyBreakdown::movement_fj`.  `None` restores the compact
+    /// model (the bit-compatible default).
+    pub fn with_hierarchy(mut self, hier: Option<Arc<MemoryHierarchy>>) -> Self {
+        self.hier = hier;
+        self
+    }
+
+    /// The attached memory hierarchy (`None` = compact model).
+    pub fn hierarchy(&self) -> Option<&Arc<MemoryHierarchy>> {
+        self.hier.as_ref()
+    }
+
+    /// Active cost-model name (`"compact"` or `"hierarchy"`).
+    pub fn cost_model(&self) -> &'static str {
+        if self.hier.is_some() {
+            MODEL_HIERARCHY
+        } else {
+            MODEL_COMPACT
+        }
+    }
+
+    /// Price one call's data movement into the merged account — a
+    /// deterministic post-pass over the plan geometry, so the f64s are
+    /// identical for any thread count or unit merge order.
+    pub(crate) fn price_movement(
+        &self,
+        account: &mut EnergyAccount,
+        m: usize,
+        plan: &LayerPlan,
+        placement: Option<&plan::LayerPlacement>,
+    ) {
+        if let Some(h) = &self.hier {
+            let t = dataflow::trace_layer(m, plan, placement, h);
+            for (acc, v) in account.breakdown.movement_fj.iter_mut().zip(t.movement_fj) {
+                *acc += v;
+            }
+        }
     }
 
     /// The engine's tile-execution pool: the attached one, else the
@@ -595,11 +643,13 @@ impl GemmEngine for MacroGemm {
         layer_idx: u64,
     ) -> Result<GemmResult> {
         let plan = self.plans.get_or_build_scoped(self.plan_scope, layer_idx, w, n, k, self.spec)?;
-        if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
-            self.execute_dual(&plan, a, m, k)
+        let mut r = if matches!(self.mode, CimMode::Pg | CimMode::Drq) {
+            self.execute_dual(&plan, a, m, k)?
         } else {
-            self.execute_cim(&plan, a, m, k, layer_idx)
-        }
+            self.execute_cim(&plan, a, m, k, layer_idx)?
+        };
+        self.price_movement(&mut r.account, m, &plan, None);
+        Ok(r)
     }
 }
 

@@ -21,6 +21,10 @@
 //!   placement the active `[fleet]` policy produces, per-macro residency
 //!   occupancy, and inter-macro transfer-cost totals.  On a single-macro
 //!   backend the document degenerates to a one-macro fleet.
+//! * `GET /v2/energy` — the declarative `[hardware]` memory hierarchy
+//!   plus a per-layer per-memory-level dataflow trace for one inference
+//!   (access counts and priced femtojoules, DESIGN.md §15), and the
+//!   measured energy account so far.
 //! * `GET /healthz` — liveness probe.
 //!
 //! Two serving modes share one routing/rendering core (so they emit
@@ -52,6 +56,8 @@ use super::http::{self, HttpRequest, ReadError};
 use super::qos::{SubmitError, Tier};
 use crate::config::SystemConfig;
 use crate::coordinator::{Metrics, Server};
+use crate::energy::dataflow;
+use crate::energy::hierarchy::{LEVEL_NAMES, NUM_LEVELS};
 use crate::engine::{Engine, InferOptions, InferRequest};
 use crate::io::json::{self, arr, num, obj, s, JsonValue};
 use crate::nn::QGraph;
@@ -678,7 +684,7 @@ fn write_rendered_rid(stream: &mut TcpStream, r: &Rendered, rid: u64) -> bool {
 fn allowed_methods(path: &str) -> Option<&'static [&'static str]> {
     match path {
         "/healthz" | "/metrics" | "/v1/version" | "/debug/trace" => Some(&["GET"]),
-        "/v2/topology" => Some(&["GET"]),
+        "/v2/topology" | "/v2/energy" => Some(&["GET"]),
         "/v1/infer" | "/v1/infer_batch" | "/v2/infer" => Some(&["POST"]),
         _ => None,
     }
@@ -698,6 +704,8 @@ fn version_json(engine: &Engine) -> JsonValue {
             ("programmable_thresholds", JsonValue::Bool(c.programmable_thresholds)),
             ("hybrid_boundary", JsonValue::Bool(c.hybrid_boundary)),
             ("pooling", JsonValue::Bool(c.pooling)),
+            ("cost_model", s(c.cost_model)),
+            ("memory_levels", num(c.memory_levels as f64)),
         ]),
         None => JsonValue::Null,
     };
@@ -795,6 +803,108 @@ fn topology_json(server: &Server) -> JsonValue {
     ])
 }
 
+/// The `GET /v2/energy` document (DESIGN.md §15): the declarative
+/// `[hardware]` memory hierarchy, a per-layer per-memory-level dataflow
+/// trace for one inference (access counts + priced femtojoules, derived
+/// from graph shapes and the active `[fleet]` placement — no request
+/// needs to have been served), and the measured energy account so far.
+/// Always answers; under `model = "compact"` the trace is advisory
+/// (movement is not folded into served energy), which the `model` field
+/// makes explicit.
+fn energy_json(server: &Server) -> JsonValue {
+    let engine = server.engine();
+    let cfg = engine.config();
+    let hier = &cfg.hardware;
+    let dims = FleetDims {
+        macros: cfg.fleet_macros.max(1),
+        residency_tiles: cfg.fleet_residency_tiles.max(1),
+    };
+    let mode = PlacementMode::parse(&cfg.fleet_placement).unwrap_or_default();
+    let pp = fleet::plan_for_dims(&engine.graph().gemm_dims(), &cfg.spec, dims, mode);
+    let mut level_totals = [0.0f64; NUM_LEVELS];
+    let mut hop_words_total = 0u64;
+    let mut layer_objs = Vec::new();
+    for shp in engine.graph().layer_shapes() {
+        let placement = pp.layers.iter().find(|l| l.layer_idx == shp.layer_idx);
+        let t = dataflow::trace_dims(shp.m, shp.n, shp.k, &cfg.spec, placement, hier);
+        for (acc, fj) in level_totals.iter_mut().zip(&t.movement_fj) {
+            *acc += fj;
+        }
+        hop_words_total += t.hop_words;
+        let levels: Vec<(&str, JsonValue)> = LEVEL_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                (
+                    *name,
+                    obj(vec![
+                        ("reads", num(t.access[i].reads as f64)),
+                        ("writes", num(t.access[i].writes as f64)),
+                        ("movement_fj", fnum(t.movement_fj[i])),
+                    ]),
+                )
+            })
+            .collect();
+        layer_objs.push(obj(vec![
+            ("layer", num(shp.layer_idx as f64)),
+            ("name", s(&shp.name)),
+            ("m", num(shp.m as f64)),
+            ("n", num(shp.n as f64)),
+            ("k", num(shp.k as f64)),
+            ("levels", obj(levels)),
+            ("movement_fj", fnum(t.total_fj())),
+            ("hop_words", num(t.hop_words as f64)),
+        ]));
+    }
+    let hardware: Vec<(&str, JsonValue)> = LEVEL_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let lv = hier.level(i);
+            (
+                *name,
+                obj(vec![
+                    ("size_bytes", num(lv.size_bytes as f64)),
+                    ("read_fj", fnum(lv.read_fj)),
+                    ("write_fj", fnum(lv.write_fj)),
+                    ("bandwidth_words", fnum(lv.bandwidth_words)),
+                    ("ports", num(lv.ports as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let m = server.metrics();
+    let trace_levels: Vec<(&str, JsonValue)> =
+        LEVEL_NAMES.iter().zip(&level_totals).map(|(n, &fj)| (*n, fnum(fj))).collect();
+    obj(vec![
+        ("model", s(&cfg.hardware_model)),
+        ("backend", s(engine.backend_name())),
+        ("hardware", obj(hardware)),
+        ("layers", arr(layer_objs)),
+        (
+            "trace",
+            obj(vec![
+                ("movement_fj", fnum(level_totals.iter().sum())),
+                ("levels_fj", obj(trace_levels)),
+                ("hop_words", num(hop_words_total as f64)),
+            ]),
+        ),
+        (
+            "account",
+            obj(vec![
+                ("energy_j", fnum(m.account.total_energy_j())),
+                ("movement_fj", fnum(m.account.breakdown.movement_total_fj())),
+                ("transfer_fj", fnum(m.account.transfer_fj)),
+                ("requests", num(m.requests as f64)),
+                (
+                    "energy_per_request_j",
+                    fnum(m.account.total_energy_j() / m.requests as f64),
+                ),
+            ]),
+        ),
+    ])
+}
+
 /// Everything the router needs to answer a request (borrowed — both
 /// serving modes assemble one per request from their own state).
 pub(crate) struct RouteCtx<'a> {
@@ -852,6 +962,10 @@ pub(crate) fn route(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteO
         }
         ("GET", "/v2/topology") => {
             let body = topology_json(ctx.server).to_string_compact();
+            RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+        }
+        ("GET", "/v2/energy") => {
+            let body = energy_json(ctx.server).to_string_compact();
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
         }
         ("GET", "/metrics") => {
@@ -1405,6 +1519,9 @@ fn response_json(resp: &crate::coordinator::Response) -> JsonValue {
         ("logits", arr(resp.logits.iter().map(|&x| fnum(x as f64)))),
         ("latency_us", num(resp.latency.as_micros() as f64)),
         ("batch_size", num(resp.batch_size as f64)),
+        // modeled joules attributed to this request (its equal share of
+        // the coalesced batch's forward energy)
+        ("energy_j", fnum(resp.energy_j)),
     ])
 }
 
@@ -1513,6 +1630,9 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
                     ("calls", num(st.calls as f64)),
                     ("exec_us", num(st.exec_us as f64)),
                     ("energy_j", fnum(st.energy_j)),
+                    // per-memory-level movement share of energy_j
+                    // (LEVEL_NAMES order; all-zero under "compact")
+                    ("movement_j", arr(st.movement_j.iter().map(|&j| fnum(j)))),
                     ("macro_ops", num(st.macro_ops as f64)),
                 ]),
             )
@@ -1530,6 +1650,29 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
         ("throughput_rps", fnum(m.throughput_rps())),
         ("tops_per_watt", fnum(m.tops_per_watt(spec))),
         ("watts", fnum(m.account.watts())),
+        (
+            "energy",
+            obj(vec![
+                // which cost model priced the account ("compact" keeps
+                // the pre-PR-9 per-op pricing bit-for-bit)
+                ("model", s(&server.engine().config().hardware_model)),
+                ("total_j", fnum(m.account.total_energy_j())),
+                ("movement_fj", fnum(m.account.breakdown.movement_total_fj())),
+                (
+                    "movement_levels_fj",
+                    obj(LEVEL_NAMES
+                        .iter()
+                        .zip(&m.account.breakdown.movement_fj)
+                        .map(|(n, &fj)| (*n, fnum(fj)))
+                        .collect()),
+                ),
+                ("transfer_fj", fnum(m.account.transfer_fj)),
+                (
+                    "per_inference_j",
+                    fnum(m.account.total_energy_j() / m.requests as f64),
+                ),
+            ]),
+        ),
         (
             "fleet",
             obj(vec![
@@ -1624,6 +1767,47 @@ pub fn metrics_prometheus(
         m.tops_per_watt(spec),
     );
     w.gauge("osa_watts", "Modeled macro power draw.", &[], m.account.watts());
+    // energy by (component, level): the six macro components price at
+    // the macro itself; movement prices per memory-hierarchy level
+    // (all-zero under the "compact" cost model); split-K transfer
+    // prices on the inter-macro interconnect
+    const ENERGY_HELP: &str = "Modeled energy by component and memory level.";
+    let b = &m.account.breakdown;
+    for (component, fj) in [
+        ("digital", b.digital_fj),
+        ("adc", b.adc_fj),
+        ("dac", b.dac_fj),
+        ("nq", b.nq_fj),
+        ("ose", b.ose_fj),
+        ("ctrl", b.ctrl_fj),
+    ] {
+        w.counter(
+            "osa_energy_joules_total",
+            ENERGY_HELP,
+            &[("component", component.to_string()), ("level", "macro".to_string())],
+            fj * 1e-15,
+        );
+    }
+    for (name, &fj) in LEVEL_NAMES.iter().zip(&b.movement_fj) {
+        w.counter(
+            "osa_energy_joules_total",
+            ENERGY_HELP,
+            &[("component", "movement".to_string()), ("level", name.to_string())],
+            fj * 1e-15,
+        );
+    }
+    w.counter(
+        "osa_energy_joules_total",
+        ENERGY_HELP,
+        &[("component", "transfer".to_string()), ("level", "interconnect".to_string())],
+        m.account.transfer_fj * 1e-15,
+    );
+    w.gauge(
+        "osa_energy_per_inference_joules",
+        "Mean modeled energy per served request.",
+        &[],
+        m.account.total_energy_j() / m.requests as f64,
+    );
     w.counter(
         "osa_fleet_transfer_hops_total",
         "Inter-macro partial-sum hops charged by split-K layers.",

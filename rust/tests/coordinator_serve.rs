@@ -185,6 +185,8 @@ impl Backend for FailingBackend {
             programmable_thresholds: false,
             hybrid_boundary: false,
             pooling: false,
+            cost_model: "compact",
+            memory_levels: 0,
             description: "test backend that always fails",
         }
     }

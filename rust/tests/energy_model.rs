@@ -1,0 +1,433 @@
+//! PR-9 energy-model guarantees (DESIGN.md §15):
+//!
+//! * **compact is the default and is inert** — the stock config reports
+//!   `cost_model = "compact"`, prices zero movement (bit-zero f64s) and
+//!   produces logits bit-identical to the hierarchy model, which only
+//!   adds movement terms on top;
+//! * **hierarchy totals are deterministic** — per-level movement energy
+//!   and the joule total reproduce the same f64 bits across repeat
+//!   runs, thread counts and fleet sizes K in {1, 2, 4};
+//! * **joule-grounded governor** — the watts signal includes fleet
+//!   transfer energy: a budget that a K=1 run clears is tripped by the
+//!   same model sharded K=4, purely because of inter-macro transfer;
+//! * **serve surface** — `GET /v2/energy` renders the per-layer
+//!   per-level trace, `/metrics` keeps every pre-existing energy key
+//!   while adding the `energy` block, the Prometheus exposition gains
+//!   `osa_energy_joules_total{component,level}`, and an
+//!   `energy_budget_w` breach degrades (then restores) tiers
+//!   end-to-end over HTTP.
+
+#![allow(clippy::field_reassign_with_default)] // repo config idiom
+
+use osa_hcim::config::SystemConfig;
+use osa_hcim::energy::hierarchy::NUM_LEVELS;
+use osa_hcim::engine::Engine;
+use osa_hcim::io::json::{parse, JsonValue};
+use osa_hcim::nn::{Op, QConv, QFc, QGraph};
+use osa_hcim::obs;
+use osa_hcim::serve::http;
+use osa_hcim::serve::{Gateway, Governor, GovernorConfig, Tier};
+use osa_hcim::util::prng::SplitMix64;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn synth_batch(n: usize) -> Vec<u8> {
+    let mut g = SplitMix64::new(0xF1EE7);
+    (0..n * 32 * 32 * 3).map(|_| g.next_below(256) as u8).collect()
+}
+
+/// A `/v2/infer` body: the image plus a raw JSON options object.
+fn v2_body(seed: u64, options: &str) -> String {
+    let mut g = SplitMix64::new(seed);
+    let img: Vec<u8> = (0..32 * 32 * 3).map(|_| g.next_below(256) as u8).collect();
+    let mut body = String::with_capacity(img.len() * 4 + 64);
+    body.push_str("{\"image\":[");
+    for (i, b) in img.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&b.to_string());
+    }
+    body.push_str("],\"options\":");
+    body.push_str(options);
+    body.push('}');
+    body
+}
+
+/// Two-conv graph whose second conv contracts over k = 288 > 144 macro
+/// columns — two K-tiles, so a `residency_tiles = 1` fleet must split
+/// its columns across macros and charge inter-macro transfer.
+fn split_k_graph() -> QGraph {
+    let mut g = SplitMix64::new(0x5711F);
+    let mut conv = |name: &str, cin: usize, cout: usize| QConv {
+        name: name.into(),
+        kh: 3,
+        kw: 3,
+        cin,
+        cout,
+        stride: 1,
+        act_scale: 1.0 / 255.0,
+        w_scale: 0.05,
+        w_q: (0..cout * 9 * cin).map(|_| g.next_range_i32(-64, 64)).collect(),
+        bias_q: vec![0; cout],
+    };
+    let stem = conv("stem", 3, 32);
+    let deep = conv("deep", 32, 16);
+    let fc = QFc {
+        cin: 16,
+        cout: 10,
+        act_scale: 0.05,
+        w_scale: 0.05,
+        w_q: (0..10 * 16).map(|_| g.next_range_i32(-64, 64)).collect(),
+        bias_q: vec![0; 10],
+    };
+    let mut convs = BTreeMap::new();
+    convs.insert("stem".to_string(), stem);
+    convs.insert("deep".to_string(), deep);
+    QGraph {
+        convs,
+        fc,
+        ops: vec![
+            Op::QConv { name: "stem".into(), relu: true },
+            Op::QConv { name: "deep".into(), relu: true },
+            Op::Gap,
+            Op::QFc,
+        ],
+        num_classes: 10,
+    }
+}
+
+/// Forward the synthetic graph under `hardware_model = model` and
+/// return (logit bits, boundary hist, per-level movement bits, total
+/// joules).
+fn forward_model(model: &str, threads: usize) -> (Vec<u32>, [u64; 16], [u64; NUM_LEVELS], f64) {
+    let mut cfg = SystemConfig::default();
+    cfg.hardware_model = model.to_string();
+    let n = 2usize;
+    let images = synth_batch(n);
+    let engine = Engine::builder()
+        .config(cfg)
+        .graph(Arc::new(QGraph::synthetic()))
+        .backend("macro-hybrid")
+        .fleet(1)
+        .threads(threads)
+        .build()
+        .unwrap();
+    let mut exec = engine.executor().unwrap();
+    exec.preplan().unwrap();
+    let (logits, stats) = exec.forward(&images, n).unwrap();
+    let movement_bits: [u64; NUM_LEVELS] =
+        std::array::from_fn(|i| stats.account.breakdown.movement_fj[i].to_bits());
+    (
+        logits.iter().map(|x| x.to_bits()).collect(),
+        stats.b_hist,
+        movement_bits,
+        stats.account.total_energy_j(),
+    )
+}
+
+#[test]
+fn compact_default_is_movement_free_and_logit_identical_to_hierarchy() {
+    assert_eq!(SystemConfig::default().hardware_model, "compact", "compact must stay the default");
+    for threads in [1usize, 4] {
+        let (lc, hc, mc, ec) = forward_model("compact", threads);
+        let (lh, hh, mh, eh) = forward_model("hierarchy", threads);
+        // compact prices no movement, down to the bit pattern
+        assert_eq!(mc, [0u64; NUM_LEVELS], "compact model must not price movement");
+        // the hierarchy model is purely additive on top of the same
+        // numerics: identical logits and boundary choices, extra joules
+        assert_eq!(lc, lh, "hierarchy model must not perturb logits ({threads} threads)");
+        assert_eq!(hc, hh, "hierarchy model must not perturb boundaries ({threads} threads)");
+        assert!(mh.iter().any(|&b| f64::from_bits(b) > 0.0), "hierarchy must price movement");
+        assert!(eh > ec, "movement terms must increase the joule total");
+    }
+}
+
+#[test]
+fn hierarchy_totals_are_thread_and_fleet_merge_invariant() {
+    let graph = Arc::new(split_k_graph());
+    let images = synth_batch(2);
+    for k in [1usize, 2, 4] {
+        let run = |threads: usize| -> (u64, [u64; NUM_LEVELS]) {
+            let mut cfg = SystemConfig::default();
+            cfg.fleet_residency_tiles = 1; // force the deep conv to split
+            cfg.hardware_model = "hierarchy".to_string();
+            let engine = Engine::builder()
+                .config(cfg)
+                .graph(graph.clone())
+                .backend("macro-fleet")
+                .fleet(k)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let mut exec = engine.executor().unwrap();
+            exec.preplan().unwrap();
+            let (_, stats) = exec.forward(&images, 2).unwrap();
+            let mv: [u64; NUM_LEVELS] =
+                std::array::from_fn(|i| stats.account.breakdown.movement_fj[i].to_bits());
+            (stats.account.total_energy_j().to_bits(), mv)
+        };
+        let (e_a, m_a) = run(1);
+        let (e_b, m_b) = run(1);
+        let (e_c, m_c) = run(4);
+        assert_eq!(e_a, e_b, "K={k}: repeat run shifts the hierarchy joule bits");
+        assert_eq!(e_a, e_c, "K={k}: thread count shifts the hierarchy joule bits");
+        assert_eq!(m_a, m_b, "K={k}: repeat run shifts per-level movement bits");
+        assert_eq!(m_a, m_c, "K={k}: thread count shifts per-level movement bits");
+        assert!(m_a.iter().any(|&b| f64::from_bits(b) > 0.0), "K={k}: movement must be priced");
+    }
+}
+
+/// Satellite 1: the governor's watts signal is grounded in the full
+/// account — fleet transfer included.  The same model on the same
+/// budget clears at K=1 and trips at K=4, where split-K transfer is
+/// the only extra energy.
+#[test]
+fn governor_budget_trips_on_transfer_heavy_fleet() {
+    let graph = Arc::new(split_k_graph());
+    let images = synth_batch(2);
+    let run = |k: usize| -> (f64, f64) {
+        let mut cfg = SystemConfig::default();
+        cfg.fleet_residency_tiles = 1;
+        let engine = Engine::builder()
+            .config(cfg)
+            .graph(graph.clone())
+            .backend("macro-fleet")
+            .fleet(k)
+            .threads(1)
+            .build()
+            .unwrap();
+        let mut exec = engine.executor().unwrap();
+        exec.preplan().unwrap();
+        let (_, stats) = exec.forward(&images, 2).unwrap();
+        (stats.account.total_energy_j(), stats.account.transfer_fj)
+    };
+    let (e1, t1) = run(1);
+    let (e4, t4) = run(4);
+    assert_eq!(t1, 0.0, "K=1 has no inter-macro hops");
+    assert!(t4 > 0.0, "K=4 split-K must charge transfer");
+    assert!(e4 > e1, "transfer must be part of the joule total");
+
+    // the same work over the same wall window: watts differ only by
+    // the transfer term, and a budget between the two separates them
+    let (w1, w4) = (e1 / 0.1, e4 / 0.1);
+    let gcfg = |budget: f64| GovernorConfig {
+        enabled: true,
+        high_watermark: 0.75,
+        low_watermark: 0.25,
+        max_level: 3,
+        hold: Duration::ZERO,
+        energy_budget_w: budget,
+    };
+    const CAL: [i32; 5] = [0, 0, 32, 94, 1024];
+    let budget = 0.5 * (w1 + w4);
+
+    let g = Governor::new(&CAL, gcfg(budget));
+    for _ in 0..3 {
+        g.observe(0.0, w1);
+    }
+    assert_eq!(g.level(Tier::Batch), 0, "K=1 watts must clear the budget");
+    g.observe(0.0, w4);
+    assert!(g.level(Tier::Batch) >= 1, "K=4 transfer watts must trip the budget");
+    assert_eq!(g.level(Tier::Gold), 0, "gold never degrades");
+    // watts back under budget: the breach drains
+    for _ in 0..16 {
+        g.observe(0.0, w1);
+    }
+    assert_eq!(g.level(Tier::Batch), 0, "levels restore once watts drop");
+
+    // a budget above the K=4 draw never trips at all
+    let g = Governor::new(&CAL, gcfg(w4 * 2.0));
+    for _ in 0..3 {
+        g.observe(0.0, w4);
+    }
+    assert_eq!(g.level(Tier::Batch), 0, "a generous budget must not trip");
+}
+
+fn get_metrics(addr: &str) -> JsonValue {
+    let (status, body) = http::request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200, "metrics endpoint failed: {body}");
+    parse(&body).unwrap()
+}
+
+fn gov_level(metrics: &JsonValue, tier: &str) -> i64 {
+    metrics
+        .get("governor")
+        .and_then(|g| g.get("tiers"))
+        .and_then(|t| t.get(tier))
+        .and_then(|t| t.get("level"))
+        .and_then(JsonValue::as_i64)
+        .expect("governor level in /metrics")
+}
+
+/// End-to-end acceptance: a hierarchy-model fleet serves `/v2/energy`
+/// whose per-layer per-level trace is reportable before any traffic,
+/// and a tiny `energy_budget_w` degrades tiers while requests flow,
+/// then restores once the watts estimate decays.
+#[test]
+fn v2_energy_trace_and_budget_degrade_end_to_end() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.max_batch = 4;
+    cfg.batch_timeout_us = 500;
+    cfg.backend = "macro-fleet".to_string();
+    cfg.fleet_macros = 4;
+    cfg.fleet_residency_tiles = 1;
+    cfg.hardware_model = "hierarchy".to_string();
+    cfg.energy_budget_w = 1e-9; // any modeled flow breaches
+    cfg.gov_hold_ms = 10;
+    let gw = Gateway::start(&cfg, Arc::new(split_k_graph()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+
+    // capability surface flips with the model
+    let (status, body) = http::request(&addr, "GET", "/v1/version", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    let caps = doc.get("capabilities").expect("capabilities");
+    assert_eq!(caps.get("cost_model").and_then(JsonValue::as_str), Some("hierarchy"));
+    assert_eq!(caps.get("memory_levels").and_then(JsonValue::as_i64), Some(5));
+
+    // the trace is reportable before any traffic
+    let (status, body) = http::request(&addr, "GET", "/v2/energy", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    assert_eq!(doc.get("model").and_then(JsonValue::as_str), Some("hierarchy"));
+    let hw = doc.get("hardware").expect("hardware stack");
+    for level in ["cell_group", "acc_rf", "weight_sram", "act_sram", "dram"] {
+        let lv = hw.get(level).unwrap_or_else(|| panic!("level {level} missing: {body}"));
+        // cell_group reads are folded into the bit-MAC constant and
+        // priced at 0, so the always-positive anchor is the write cost
+        assert!(lv.get("write_fj").and_then(JsonValue::as_f64).unwrap() > 0.0);
+    }
+    let layers = doc.get("layers").and_then(JsonValue::as_array).expect("layers");
+    assert_eq!(layers.len(), 2, "stem + deep conv: {body}");
+    for l in layers {
+        let levels = l.get("levels").expect("per-level counts");
+        for level in ["cell_group", "acc_rf", "weight_sram", "act_sram", "dram"] {
+            let lv = levels.get(level).expect("level entry");
+            assert!(lv.get("reads").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+        }
+        assert!(l.get("movement_fj").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+    }
+    // the deep conv (k = 288) splits across macros -> inter-macro hops
+    let deep = layers
+        .iter()
+        .find(|l| l.get("name").and_then(JsonValue::as_str) == Some("deep"))
+        .expect("deep layer");
+    assert!(deep.get("hop_words").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+    let trace = doc.get("trace").expect("trace totals");
+    assert!(trace.get("movement_fj").and_then(JsonValue::as_f64).unwrap() > 0.0);
+
+    // flow requests until the budget breach degrades the batch tier
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut seed = 0u64;
+    loop {
+        seed += 1;
+        let (status, resp) =
+            http::request(&addr, "POST", "/v2/infer", Some(&v2_body(seed, "{}"))).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let rdoc = parse(&resp).unwrap();
+        assert!(
+            rdoc.get("energy_j").and_then(JsonValue::as_f64).unwrap() > 0.0,
+            "per-request energy missing: {resp}"
+        );
+        let m = get_metrics(&addr);
+        assert_eq!(gov_level(&m, "gold"), 0, "gold must never degrade");
+        if gov_level(&m, "batch") >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "budget breach never degraded batch tier");
+        std::thread::sleep(Duration::from_millis(30));
+    }
+
+    // live account now backs the trace endpoint
+    let (_, body) = http::request(&addr, "GET", "/v2/energy", None).unwrap();
+    let doc = parse(&body).unwrap();
+    let account = doc.get("account").expect("account block");
+    assert!(account.get("energy_j").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+    assert!(account.get("requests").and_then(JsonValue::as_f64).unwrap() >= 1.0, "{body}");
+    assert!(account.get("energy_per_request_j").and_then(JsonValue::as_f64).unwrap() > 0.0);
+    assert!(account.get("movement_fj").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+    assert!(account.get("transfer_fj").and_then(JsonValue::as_f64).unwrap() > 0.0, "{body}");
+
+    // traffic stops -> the windowed watts estimate decays below the
+    // budget -> levels restore
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = get_metrics(&addr);
+        if gov_level(&m, "batch") == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "governor never restored after idle decay");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    gw.shutdown();
+}
+
+/// Satellite 6: `/metrics` keeps every pre-existing energy key, adds
+/// the `energy` block and per-layer `movement_j`, and the Prometheus
+/// exposition carries the per-component/per-level joule counters.
+#[test]
+fn metrics_keeps_energy_keys_and_adds_energy_block() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.max_batch = 2;
+    cfg.batch_timeout_us = 500;
+    let gw = Gateway::start(&cfg, Arc::new(QGraph::synthetic()), "127.0.0.1:0").unwrap();
+    let addr = gw.addr().to_string();
+    let (status, resp) =
+        http::request(&addr, "POST", "/v2/infer", Some(&v2_body(9, "{}"))).unwrap();
+    assert_eq!(status, 200, "{resp}");
+
+    let m = get_metrics(&addr);
+    // every pre-existing energy key, key for key
+    for key in ["watts", "tops_per_watt", "requests", "layers", "fleet"] {
+        assert!(m.get(key).is_some(), "pre-existing key {key} must survive");
+    }
+    let layers = m.get("layers").expect("layers block");
+    if let JsonValue::Object(map) = layers {
+        assert!(!map.is_empty(), "layer attribution must be populated");
+        for (name, st) in map {
+            assert!(st.get("energy_j").is_some(), "layer {name} lost energy_j");
+            let mv = st.get("movement_j").and_then(JsonValue::as_array);
+            assert_eq!(mv.map(Vec::len), Some(NUM_LEVELS), "layer {name} movement_j");
+        }
+    } else {
+        panic!("layers must be an object");
+    }
+    // the new block: compact default -> movement and transfer are zero
+    let e = m.get("energy").expect("energy block");
+    assert_eq!(e.get("model").and_then(JsonValue::as_str), Some("compact"));
+    assert!(e.get("total_j").and_then(JsonValue::as_f64).unwrap() > 0.0);
+    assert_eq!(e.get("movement_fj").and_then(JsonValue::as_f64), Some(0.0));
+    assert!(e.get("per_inference_j").and_then(JsonValue::as_f64).unwrap() > 0.0);
+    let by_level = e.get("movement_levels_fj").expect("per-level movement");
+    for level in ["cell_group", "acc_rf", "weight_sram", "act_sram", "dram"] {
+        assert_eq!(by_level.get(level).and_then(JsonValue::as_f64), Some(0.0));
+    }
+
+    // Prometheus: the joule counters ride the same scrubbed writer
+    let (status, text) = http::request(&addr, "GET", "/metrics?format=prometheus", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = obs::parse_exposition(&text).unwrap_or_else(|e| panic!("must parse: {e}\n{text}"));
+    for comp in ["digital", "adc", "dac", "nq", "ose", "ctrl"] {
+        let v = doc.value("osa_energy_joules_total", &[("component", comp), ("level", "macro")]);
+        assert!(v.is_some(), "missing component {comp}:\n{text}");
+    }
+    let adc = doc
+        .value("osa_energy_joules_total", &[("component", "adc"), ("level", "macro")])
+        .unwrap();
+    assert!(adc > 0.0, "ADC joules must be live");
+    for level in ["cell_group", "acc_rf", "weight_sram", "act_sram", "dram"] {
+        let v =
+            doc.value("osa_energy_joules_total", &[("component", "movement"), ("level", level)]);
+        assert_eq!(v, Some(0.0), "compact movement must export as zero at {level}");
+    }
+    let t = doc
+        .value("osa_energy_joules_total", &[("component", "transfer"), ("level", "interconnect")]);
+    assert_eq!(t, Some(0.0), "single-macro transfer is zero");
+    let per = doc.value("osa_energy_per_inference_joules", &[]).unwrap();
+    assert!(per > 0.0, "per-inference gauge must be live:\n{text}");
+    gw.shutdown();
+}
