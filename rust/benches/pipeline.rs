@@ -19,7 +19,9 @@ use osa_hcim::benchkit::Bench;
 use osa_hcim::benchkit::{raise_nofile, vm_rss_mb};
 use osa_hcim::config::{CimMode, SystemConfig};
 use osa_hcim::coordinator::Server;
+use osa_hcim::device::sweep::{self, EvalSet, SweepGrid};
 use osa_hcim::engine::{Backend, Engine};
+use osa_hcim::obs::SweepProgress;
 use osa_hcim::io::json::{arr, num, obj, s, JsonValue};
 use osa_hcim::nn::data::Dataset;
 use osa_hcim::nn::{Executor, QGraph};
@@ -217,6 +219,37 @@ fn main() {
          {costmodel_rate_hier:.1} inf/s -> overhead {costmodel_overhead_pct:.2}%, \
          {energy_per_inference_mj:.4} mJ/inference modeled"
     );
+
+    // --- device sweep driver: Monte Carlo grid points per second ---------
+    // The PR-10 acceptance curve: `osa-hcim sweep` cell-evaluation rate.
+    // One point = one (boundary, sigma, seed) engine run over the eval
+    // batch (plus the governor-ladder corner cells), all fanned onto the
+    // shared pool — the figure that sizes real design-space sweeps.
+    println!("\n# pipeline — device sweep driver (boundary x sigma x seeds grid)");
+    let sweep_points_per_s = {
+        let mut wcfg = cfg.clone();
+        wcfg.gov_max_level = 1;
+        let eval = EvalSet::synthetic(&wcfg, &graph, 4).unwrap();
+        let grid = SweepGrid {
+            boundaries: vec![10, 6],
+            sigmas: vec![0.0, 0.3],
+            mc_seeds: 2,
+            images: eval.len(),
+            corner_sigma: 0.45,
+        };
+        let progress = SweepProgress::new();
+        let t0 = Instant::now();
+        let report = sweep::run(&wcfg, &graph, &eval, &grid, &progress).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let (done, total, _) = progress.snapshot();
+        assert_eq!(done, total, "sweep left cells unevaluated");
+        let rate = done as f64 / wall.max(1e-9);
+        println!(
+            "sweep/grid: {done} cells ({} surface) in {wall:.3}s -> {rate:.2} points/s",
+            report.surface.len()
+        );
+        rate
+    };
 
     // --- coordinator serve loop ------------------------------------------
     println!("\n# pipeline — coordinator round trip (submit -> batch -> respond)");
@@ -575,6 +608,7 @@ fn main() {
         ("fleet_speedup_2", num(fleet_speedup_2)),
         ("fleet_speedup_4", num(fleet_speedup_4)),
         ("fleet_transfer_energy_pct", num(fleet_transfer_pct)),
+        ("sweep_points_per_s", num(sweep_points_per_s)),
         ("energy_per_inference_mj", num(energy_per_inference_mj)),
         ("costmodel_overhead_pct", num(costmodel_overhead_pct)),
         ("costmodel_infer_per_s_compact", num(costmodel_rate_compact)),

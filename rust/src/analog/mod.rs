@@ -32,6 +32,38 @@ pub fn adc_transfer(amac: i32, nbits: i32, noise: f32, sp: &MacroSpec) -> i32 {
     // +step/2 offset to every conversion — amplified by 2^(i+j_lo) and
     // accumulated over 8 groups that wrecks the BN-folded biases of the
     // network (measured: ResNet-mini drops to ~50% at B=8).
+    // Scrub non-finite noise: a NaN would flow through floor/clamp (both
+    // NaN-preserving) into the `as i32` cast and silently saturate the
+    // reconstruction — a poisoned logit, not a degraded one.  ±inf is
+    // clamped safely but gets the same treatment for symmetry.  Finite
+    // noise takes the branch untouched, so this is bit-free on the
+    // legacy path (normals_f32 can never produce non-finite values).
+    let noise = if noise.is_finite() { noise } else { 0.0 };
+    let code = (v + 0.5f32 + noise).floor().clamp(0.0, levels - 1.0);
+    (code * (fs / levels) + 0.5f32).floor() as i32
+}
+
+/// Device-aware ADC transfer: like [`adc_transfer`] but with an f32
+/// accumulation input (per-column static gains make `amac` fractional),
+/// an additive code-unit `offset`, and a multiplicative conversion
+/// `gain` (DESIGN.md §16).  With `offset == 0.0`, `gain == 1.0` and an
+/// integer-valued `amac` this reduces operation-for-operation to
+/// [`adc_transfer`]: `amac as f32` is exact up to 2^24 and the largest
+/// physical accumulation is `cols * 255` ≈ 2^15.2.
+#[inline]
+pub fn adc_transfer_dev(
+    amac: f32,
+    nbits: i32,
+    noise: f32,
+    offset: f32,
+    gain: f32,
+    sp: &MacroSpec,
+) -> i32 {
+    let levels = sp.adc_levels() as f32;
+    let fs = full_scale(nbits, sp);
+    let scale = levels / fs;
+    let v = amac * gain * scale + offset;
+    let noise = if noise.is_finite() { noise } else { 0.0 };
     let code = (v + 0.5f32 + noise).floor().clamp(0.0, levels - 1.0);
     (code * (fs / levels) + 0.5f32).floor() as i32
 }
@@ -127,6 +159,58 @@ mod tests {
         let base = adc_transfer(mid, 4, 0.0, &s);
         let up = adc_transfer(mid, 4, 1.0, &s);
         assert!(up > base);
+    }
+
+    #[test]
+    fn adc_nan_noise_degrades_not_poisons() {
+        // regression: NaN noise used to flow through floor/clamp into
+        // the i32 cast (saturating to 0 silently); it must now behave
+        // as a zero-noise conversion at every input level
+        let s = sp();
+        for amac in [0, 36, 270, 540, 2160] {
+            let clean = adc_transfer(amac, 4, 0.0, &s);
+            assert_eq!(adc_transfer(amac, 4, f32::NAN, &s), clean, "amac={amac}");
+            assert_eq!(adc_transfer(amac, 4, f32::INFINITY, &s), clean, "amac={amac}");
+            assert_eq!(adc_transfer(amac, 4, f32::NEG_INFINITY, &s), clean, "amac={amac}");
+            assert_eq!(
+                adc_transfer_dev(amac as f32, 4, f32::NAN, 0.0, 1.0, &s),
+                clean,
+                "amac={amac}"
+            );
+        }
+    }
+
+    #[test]
+    fn adc_dev_reduces_to_legacy_when_trivial() {
+        let s = sp();
+        for nbits in 1..=4 {
+            let fs = full_scale(nbits, &s) as i32;
+            for amac in (0..=fs + 50).step_by(7) {
+                for noise in [-1.5f32, -0.3, 0.0, 0.3, 1.5] {
+                    assert_eq!(
+                        adc_transfer_dev(amac as f32, nbits, noise, 0.0, 1.0, &s),
+                        adc_transfer(amac, nbits, noise, &s),
+                        "nbits={nbits} amac={amac} noise={noise}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adc_dev_offset_and_gain_shift_codes() {
+        let s = sp();
+        let mid = 270.0; // half of 4-bit FS
+        let base = adc_transfer_dev(mid, 4, 0.0, 0.0, 1.0, &s);
+        assert!(adc_transfer_dev(mid, 4, 0.0, 1.0, 1.0, &s) > base);
+        assert!(adc_transfer_dev(mid, 4, 0.0, 0.0, 1.5, &s) > base);
+        assert!(adc_transfer_dev(mid, 4, 0.0, 0.0, 0.5, &s) < base);
+        // saturation still holds under extreme gain
+        let levels = s.adc_levels() as f32;
+        let fs = full_scale(4, &s);
+        let top = ((levels - 1.0) * (fs / levels) + 0.5).floor() as i32;
+        assert_eq!(adc_transfer_dev(mid, 4, 0.0, 0.0, 100.0, &s), top);
+        assert_eq!(adc_transfer_dev(mid, 4, 0.0, -100.0, 1.0, &s), 0);
     }
 
     #[test]

@@ -302,6 +302,35 @@ pub struct SystemConfig {
     /// than this many milliseconds end to end (`[obs] slow_ms`,
     /// `--slow-ms`); 0 disables the slow-request log.
     pub obs_slow_ms: u64,
+    /// Analog device-variation model (`[device] model`, `--device`), by
+    /// `device::build` name: `gaussian-thermal` (the baseline, bit-
+    /// preserving path), `ideal`, `capacitor-mismatch` or
+    /// `lognormal-conductance` (DESIGN.md §16).
+    pub device_model: String,
+    /// Device noise sigma override in ADC code units (`[device] sigma`,
+    /// `--device-sigma`); `None` inherits `cim.sigma_code`.
+    pub device_sigma: Option<f64>,
+    /// Operation-unit group size: columns per sub-conversion
+    /// (`[device] s_ou`); 0 = whole-row charge share (the baseline).
+    pub device_s_ou: usize,
+    /// Static ADC offset error in code units (`[device] adc_offset`).
+    pub device_adc_offset: f64,
+    /// Static ADC gain error, multiplicative (`[device] adc_gain`).
+    pub device_adc_gain: f64,
+    /// Path to a `SWEEP_*.json` report whose per-level corner
+    /// accuracies feed the governor's degrade-ladder floors
+    /// (`[device] sweep_report`); empty disables the feedback.
+    pub device_sweep_report: String,
+    /// Device corner sigma for the sweep's governor-ladder evaluation
+    /// (`[device] corner_sigma`, `sweep --corner-sigma`).
+    pub device_corner_sigma: f64,
+    /// Per-tier accuracy floors (fraction in [0, 1]) under the device
+    /// corner; a governor degrade level whose swept corner accuracy
+    /// falls below the tier's floor is refused (`[device] sla_gold`
+    /// etc.; 0 disables the floor for that tier).
+    pub device_sla_gold: f64,
+    pub device_sla_silver: f64,
+    pub device_sla_batch: f64,
     /// Energy cost model (`[hardware] model`): `"compact"` keeps the
     /// calibrated per-op constants (bit-identical to pre-hierarchy
     /// numbers); `"hierarchy"` additionally prices per-level data
@@ -346,6 +375,16 @@ impl Default for SystemConfig {
             obs_trace: true,
             obs_trace_capacity: 4096,
             obs_slow_ms: 250,
+            device_model: "gaussian-thermal".to_string(),
+            device_sigma: None,
+            device_s_ou: 0,
+            device_adc_offset: 0.0,
+            device_adc_gain: 1.0,
+            device_sweep_report: String::new(),
+            device_corner_sigma: 1.5 * crate::spec::SIGMA_CODE,
+            device_sla_gold: 0.0,
+            device_sla_silver: 0.0,
+            device_sla_batch: 0.0,
             hardware_model: hierarchy::MODEL_COMPACT.to_string(),
             hardware: MemoryHierarchy::default(),
         }
@@ -423,6 +462,18 @@ impl SystemConfig {
         cfg.obs_trace = t.get_bool("obs.trace", cfg.obs_trace)?;
         cfg.obs_trace_capacity = t.get_usize("obs.trace_capacity", cfg.obs_trace_capacity)?;
         cfg.obs_slow_ms = t.get_usize("obs.slow_ms", cfg.obs_slow_ms as usize)? as u64;
+        cfg.device_model = t.get_str("device.model", &cfg.device_model)?;
+        if t.get("device.sigma").is_some() {
+            cfg.device_sigma = Some(t.get_f64("device.sigma", 0.0)?);
+        }
+        cfg.device_s_ou = t.get_usize("device.s_ou", cfg.device_s_ou)?;
+        cfg.device_adc_offset = t.get_f64("device.adc_offset", cfg.device_adc_offset)?;
+        cfg.device_adc_gain = t.get_f64("device.adc_gain", cfg.device_adc_gain)?;
+        cfg.device_sweep_report = t.get_str("device.sweep_report", &cfg.device_sweep_report)?;
+        cfg.device_corner_sigma = t.get_f64("device.corner_sigma", cfg.device_corner_sigma)?;
+        cfg.device_sla_gold = t.get_f64("device.sla_gold", cfg.device_sla_gold)?;
+        cfg.device_sla_silver = t.get_f64("device.sla_silver", cfg.device_sla_silver)?;
+        cfg.device_sla_batch = t.get_f64("device.sla_batch", cfg.device_sla_batch)?;
         cfg.hardware_model = t.get_str("hardware.model", &cfg.hardware_model)?;
         for (i, name) in hierarchy::LEVEL_NAMES.iter().enumerate() {
             let key = format!("hardware.{name}");
@@ -473,6 +524,36 @@ impl SystemConfig {
                 crate::spec::B_CANDIDATES.len(),
                 self.thresholds.len()
             );
+        }
+        if !crate::device::MODEL_NAMES.contains(&self.device_model.as_str()) {
+            bail!(
+                "device.model: unknown model {:?} (one of: {})",
+                self.device_model,
+                crate::device::MODEL_NAMES.join(", ")
+            );
+        }
+        if let Some(s) = self.device_sigma {
+            if s.is_nan() || s < 0.0 {
+                bail!("device.sigma must be >= 0, got {s}");
+            }
+        }
+        if self.device_adc_gain.is_nan() || self.device_adc_gain <= 0.0 {
+            bail!("device.adc_gain must be > 0, got {}", self.device_adc_gain);
+        }
+        if !self.device_adc_offset.is_finite() {
+            bail!("device.adc_offset must be finite, got {}", self.device_adc_offset);
+        }
+        if self.device_corner_sigma.is_nan() || self.device_corner_sigma < 0.0 {
+            bail!("device.corner_sigma must be >= 0, got {}", self.device_corner_sigma);
+        }
+        for (key, sla) in [
+            ("device.sla_gold", self.device_sla_gold),
+            ("device.sla_silver", self.device_sla_silver),
+            ("device.sla_batch", self.device_sla_batch),
+        ] {
+            if !(0.0..=1.0).contains(&sla) {
+                bail!("{key} must be an accuracy fraction in [0, 1], got {sla}");
+            }
         }
         hierarchy::validate_model(&self.hardware_model)?;
         self.hardware.validate(crate::sched::fleet::tile_bytes(&self.spec))?;
@@ -747,6 +828,45 @@ use_pjrt = true   # retired knob: ignored (backend selection replaced it)
         let mut cfg = SystemConfig::default();
         cfg.hardware_model = "bogus".into();
         assert!(cfg.validate().unwrap_err().to_string().contains("hardware.model"));
+    }
+
+    #[test]
+    fn device_section_parsed_and_validated() {
+        let t = Toml::parse(
+            "[device]\nmodel = \"capacitor-mismatch\"\nsigma = 0.1\ns_ou = 16\n\
+             adc_offset = 0.05\nadc_gain = 1.02\nsweep_report = \"SWEEP_corner.json\"\n\
+             corner_sigma = 0.6\nsla_gold = 0.85\nsla_silver = 0.8\nsla_batch = 0.7",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.device_model, "capacitor-mismatch");
+        assert_eq!(cfg.device_sigma, Some(0.1));
+        assert_eq!(cfg.device_s_ou, 16);
+        assert_eq!(cfg.device_adc_offset, 0.05);
+        assert_eq!(cfg.device_adc_gain, 1.02);
+        assert_eq!(cfg.device_sweep_report, "SWEEP_corner.json");
+        assert_eq!(cfg.device_corner_sigma, 0.6);
+        assert_eq!(cfg.device_sla_gold, 0.85);
+        // defaults when the section is absent: the bit-preserving baseline
+        let cfg = SystemConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.device_model, "gaussian-thermal");
+        assert_eq!(cfg.device_sigma, None);
+        assert_eq!(cfg.device_s_ou, 0);
+        assert_eq!(cfg.device_adc_offset, 0.0);
+        assert_eq!(cfg.device_adc_gain, 1.0);
+        assert!(cfg.device_sweep_report.is_empty());
+        // unknown model names fail with the registry listed
+        let t = Toml::parse("[device]\nmodel = \"quantum-foam\"").unwrap();
+        let err = SystemConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("device.model"), "{err}");
+        assert!(err.to_string().contains("lognormal-conductance"), "{err}");
+        // out-of-range knobs are field-named errors
+        let t = Toml::parse("[device]\nsigma = -0.1").unwrap();
+        assert!(SystemConfig::from_toml(&t).unwrap_err().to_string().contains("device.sigma"));
+        let t = Toml::parse("[device]\nadc_gain = 0.0").unwrap();
+        assert!(SystemConfig::from_toml(&t).unwrap_err().to_string().contains("device.adc_gain"));
+        let t = Toml::parse("[device]\nsla_gold = 1.5").unwrap();
+        assert!(SystemConfig::from_toml(&t).unwrap_err().to_string().contains("device.sla_gold"));
     }
 
     #[test]

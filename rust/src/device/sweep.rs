@@ -1,0 +1,635 @@
+//! `osa-hcim sweep` — Monte-Carlo design-space explorer (DESIGN.md §16).
+//!
+//! Fans a (hybrid boundary × device sigma × Monte-Carlo seed) grid over
+//! the engine: every cell is one independent inference run of a held-out
+//! eval set, all cells sharing one [`ExecPool`] and one [`PlanCache`]
+//! (weights are packed once, whatever the grid size).  On top of the
+//! accuracy surface the sweep evaluates the serving governor's degrade
+//! ladder — per QoS tier, per level, at a configured device *corner*
+//! sigma — so the report can feed accuracy floors back into
+//! [`crate::serve::governor::Governor`]: a tier refuses any degrade
+//! level whose swept corner accuracy falls below the tier's SLA.
+//!
+//! Reports are **byte-reproducible**: no timestamps, `BTreeMap`-ordered
+//! JSON objects, deterministic per-cell seeds derived with
+//! [`mc_seed`] — the acceptance gate reruns a sweep and `cmp`s the
+//! files.
+
+use crate::config::{CimMode, SystemConfig};
+use crate::engine::Engine;
+use crate::io::json::{arr, num, obj, s, JsonValue};
+use crate::nn::{accuracy, argmax, Executor, QGraph};
+use crate::obs::SweepProgress;
+use crate::sched::exec::ExecPool;
+use crate::sched::plan::PlanCache;
+use crate::serve::qos::Tier;
+use crate::util::prng::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Bytes per input image (CIFAR-shaped 32×32×3, like the dataset).
+pub const IMG_BYTES: usize = 32 * 32 * 3;
+
+/// The grid a sweep explores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepGrid {
+    /// Hybrid boundaries to pin (`cim.mode = hcim` per cell).
+    pub boundaries: Vec<i32>,
+    /// Device variation sigmas.
+    pub sigmas: Vec<f64>,
+    /// Monte-Carlo seeds per (boundary, sigma) cell.
+    pub mc_seeds: usize,
+    /// Eval-set size (images per cell).
+    pub images: usize,
+    /// Device corner for the governor-ladder evaluation.
+    pub corner_sigma: f64,
+}
+
+impl SweepGrid {
+    pub fn validate(&self) -> Result<()> {
+        if self.boundaries.is_empty() {
+            bail!("sweep: --boundaries must name at least one boundary");
+        }
+        if self.sigmas.is_empty() {
+            bail!("sweep: --sigmas must name at least one sigma");
+        }
+        if self.sigmas.iter().any(|s| s.is_nan() || *s < 0.0) {
+            bail!("sweep: sigmas must be >= 0, got {:?}", self.sigmas);
+        }
+        if self.corner_sigma.is_nan() || self.corner_sigma < 0.0 {
+            bail!("sweep: --corner-sigma must be >= 0, got {}", self.corner_sigma);
+        }
+        if self.mc_seeds == 0 {
+            bail!("sweep: --mc-seeds must be >= 1");
+        }
+        if self.images == 0 {
+            bail!("sweep: --images must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Surface cells (without the ladder): boundaries × sigmas × seeds.
+    pub fn surface_cells(&self) -> usize {
+        self.boundaries.len() * self.sigmas.len() * self.mc_seeds
+    }
+}
+
+/// The held-out eval set a sweep scores against.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub images: Vec<u8>,
+    pub labels: Vec<i32>,
+}
+
+impl EvalSet {
+    pub fn from_parts(images: Vec<u8>, labels: Vec<i32>) -> Result<Self> {
+        if images.len() != labels.len() * IMG_BYTES {
+            bail!(
+                "eval set: {} image bytes do not match {} labels ({} expected)",
+                images.len(),
+                labels.len(),
+                labels.len() * IMG_BYTES
+            );
+        }
+        Ok(Self { images, labels })
+    }
+
+    /// A deterministic synthetic eval set for artifact-free runs: random
+    /// images labeled by the loss-free DCIM datapath's own argmax, so
+    /// "accuracy" measures agreement with the digital reference — the
+    /// same quantity the paper's loss constraint bounds.
+    pub fn synthetic(cfg: &SystemConfig, graph: &Arc<QGraph>, n: usize) -> Result<Self> {
+        let mut g = SplitMix64::new(0xDA7A_5E70);
+        let images: Vec<u8> = (0..n * IMG_BYTES).map(|_| g.next_below(256) as u8).collect();
+        let engine = Engine::builder().config(cfg.clone()).graph(graph.clone()).build()?;
+        let mut exec = Executor::new(graph, engine.backend_for_mode(CimMode::Dcim)?);
+        exec.preplan()?;
+        let (logits, _) = exec.forward(&images, n)?;
+        let classes = logits.len() / n;
+        let labels = (0..n)
+            .map(|i| argmax(&logits[i * classes..(i + 1) * classes]).unwrap_or(0) as i32)
+            .collect();
+        Self::from_parts(images, labels)
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// Per-cell Monte-Carlo seed: one SplitMix64 scramble of the base seed
+/// and the MC index, so cells are decorrelated but every rerun of the
+/// same grid draws the same noise (byte-identical reports).
+pub fn mc_seed(base: u64, k: usize) -> u64 {
+    SplitMix64::new(base.wrapping_add((k as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+        .next_u64()
+}
+
+/// One (boundary, sigma) point of the accuracy surface, aggregated over
+/// the grid's Monte-Carlo seeds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub boundary: i32,
+    pub sigma: f64,
+    pub acc_mean: f64,
+    pub acc_min: f64,
+    pub acc_max: f64,
+    /// Modeled energy per image, nanojoules (mean over seeds).
+    pub energy_nj: f64,
+}
+
+/// One governor-ladder point: tier × degrade level at the corner sigma.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LadderPoint {
+    pub tier: &'static str,
+    pub level: u32,
+    pub accuracy: f64,
+}
+
+/// The full sweep result — everything `SWEEP_device.json` holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    /// Device model name the grid was swept under.
+    pub model: String,
+    pub s_ou: usize,
+    pub grid: SweepGrid,
+    pub surface: Vec<CellResult>,
+    pub ladder: Vec<LadderPoint>,
+}
+
+impl SweepReport {
+    /// Serialize to the canonical JSON document.  Deliberately carries
+    /// no timestamps or host identifiers: the same grid on the same
+    /// tree must reproduce the same bytes.
+    pub fn to_json(&self) -> JsonValue {
+        obj(vec![
+            ("schema", num(1.0)),
+            ("model", s(&self.model)),
+            ("s_ou", num(self.s_ou as f64)),
+            (
+                "grid",
+                obj(vec![
+                    (
+                        "boundaries",
+                        arr(self.grid.boundaries.iter().map(|&b| num(b as f64))),
+                    ),
+                    ("sigmas", arr(self.grid.sigmas.iter().map(|&x| num(x)))),
+                    ("mc_seeds", num(self.grid.mc_seeds as f64)),
+                    ("images", num(self.grid.images as f64)),
+                    ("corner_sigma", num(self.grid.corner_sigma)),
+                ]),
+            ),
+            (
+                "surface",
+                arr(self.surface.iter().map(|c| {
+                    obj(vec![
+                        ("boundary", num(c.boundary as f64)),
+                        ("sigma", num(c.sigma)),
+                        ("acc_mean", num(c.acc_mean)),
+                        ("acc_min", num(c.acc_min)),
+                        ("acc_max", num(c.acc_max)),
+                        ("energy_nj", num(c.energy_nj)),
+                    ])
+                })),
+            ),
+            (
+                "ladder",
+                arr(self.ladder.iter().map(|p| {
+                    obj(vec![
+                        ("tier", s(p.tier)),
+                        ("level", num(p.level as f64)),
+                        ("accuracy", num(p.accuracy)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Parse a document produced by [`Self::to_json`].
+    pub fn from_json(doc: &JsonValue) -> Result<Self> {
+        let schema = doc.get("schema").and_then(JsonValue::as_i64).unwrap_or(0);
+        if schema != 1 {
+            bail!("sweep report: unsupported schema {schema} (expected 1)");
+        }
+        let grid_doc = doc.get("grid").context("sweep report: missing grid")?;
+        let nums = |key: &str| -> Result<Vec<f64>> {
+            grid_doc
+                .get(key)
+                .and_then(JsonValue::as_array)
+                .with_context(|| format!("sweep report: missing grid.{key}"))?
+                .iter()
+                .map(|v| v.as_f64().with_context(|| format!("grid.{key}: non-number")))
+                .collect()
+        };
+        let grid = SweepGrid {
+            boundaries: nums("boundaries")?.iter().map(|&x| x as i32).collect(),
+            sigmas: nums("sigmas")?,
+            mc_seeds: grid_doc
+                .get("mc_seeds")
+                .and_then(JsonValue::as_usize)
+                .context("sweep report: missing grid.mc_seeds")?,
+            images: grid_doc
+                .get("images")
+                .and_then(JsonValue::as_usize)
+                .context("sweep report: missing grid.images")?,
+            corner_sigma: grid_doc
+                .get("corner_sigma")
+                .and_then(|v| v.as_f64())
+                .context("sweep report: missing grid.corner_sigma")?,
+        };
+        let field = |cell: &JsonValue, key: &str| -> Result<f64> {
+            cell.get(key)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("sweep report: cell missing {key}"))
+        };
+        let mut surface = Vec::new();
+        for cell in doc.get("surface").and_then(JsonValue::as_array).unwrap_or(&[]) {
+            surface.push(CellResult {
+                boundary: field(cell, "boundary")? as i32,
+                sigma: field(cell, "sigma")?,
+                acc_mean: field(cell, "acc_mean")?,
+                acc_min: field(cell, "acc_min")?,
+                acc_max: field(cell, "acc_max")?,
+                energy_nj: field(cell, "energy_nj")?,
+            });
+        }
+        let mut ladder = Vec::new();
+        for p in doc.get("ladder").and_then(JsonValue::as_array).unwrap_or(&[]) {
+            let tier_name = p
+                .get("tier")
+                .and_then(JsonValue::as_str)
+                .context("sweep report: ladder point missing tier")?;
+            let tier = Tier::parse(tier_name)
+                .with_context(|| format!("sweep report: unknown tier {tier_name:?}"))?;
+            ladder.push(LadderPoint {
+                tier: tier.name(),
+                level: field(p, "level")? as u32,
+                accuracy: field(p, "accuracy")?,
+            });
+        }
+        Ok(Self {
+            model: doc
+                .get("model")
+                .and_then(JsonValue::as_str)
+                .context("sweep report: missing model")?
+                .to_string(),
+            s_ou: doc.get("s_ou").and_then(JsonValue::as_usize).unwrap_or(0),
+            grid,
+            surface,
+            ladder,
+        })
+    }
+
+    /// The accuracy surface as a comma-separated table (gnuplot: `set
+    /// datafile separator ','`), one row per (boundary, sigma) cell.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("boundary,sigma,acc_mean,acc_min,acc_max,energy_nj\n");
+        for c in &self.surface {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                c.boundary, c.sigma, c.acc_mean, c.acc_min, c.acc_max, c.energy_nj
+            ));
+        }
+        out
+    }
+}
+
+/// Per-tier governor degrade-level caps derived from a sweep report:
+/// `caps[tier]` is the highest level whose swept corner accuracy still
+/// clears the tier's SLA floor (`u32::MAX` = no floor configured).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceFloors {
+    pub corner_sigma: f64,
+    pub caps: [u32; 3],
+}
+
+impl DeviceFloors {
+    /// No report / no SLAs: every level the governor config allows.
+    pub fn unbounded() -> Self {
+        Self { corner_sigma: 0.0, caps: [u32::MAX; 3] }
+    }
+
+    /// The `[gold, silver, batch]` SLA vector a config carries.
+    pub fn slas(cfg: &SystemConfig) -> [f64; 3] {
+        [cfg.device_sla_gold, cfg.device_sla_silver, cfg.device_sla_batch]
+    }
+
+    /// Walk each tier's ladder from level 0 upward and stop at the
+    /// first level below the SLA — levels past a failure are refused
+    /// even if a later one happens to clear the floor again.
+    pub fn from_report(report: &SweepReport, slas: [f64; 3]) -> Self {
+        let mut caps = [u32::MAX; 3];
+        for tier in Tier::ALL {
+            let sla = slas[tier.index()];
+            if sla <= 0.0 {
+                continue;
+            }
+            let mut points: Vec<(u32, f64)> = report
+                .ladder
+                .iter()
+                .filter(|p| p.tier == tier.name())
+                .map(|p| (p.level, p.accuracy))
+                .collect();
+            points.sort_by_key(|&(level, _)| level);
+            let mut cap = 0u32;
+            for (level, acc) in points {
+                if acc >= sla {
+                    cap = cap.max(level);
+                } else {
+                    break;
+                }
+            }
+            caps[tier.index()] = cap;
+        }
+        Self { corner_sigma: report.grid.corner_sigma, caps }
+    }
+
+    /// Load floors from a `SWEEP_*.json` file on disk.
+    pub fn load(path: &std::path::Path, slas: [f64; 3]) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep report {}", path.display()))?;
+        let report = SweepReport::from_json(&crate::io::json::parse(&text)?)?;
+        Ok(Self::from_report(&report, slas))
+    }
+
+    /// The cap for one tier.
+    pub fn cap(&self, tier: Tier) -> u32 {
+        self.caps[tier.index()]
+    }
+}
+
+/// Effective OSE thresholds of one tier at one governor degrade level
+/// (profile-scaled, then doubled per level) — the exact contract
+/// [`crate::serve::governor::Governor::thresholds_for`] serves.
+pub fn degraded_thresholds(calibrated: &[i32], tier: Tier, level: u32) -> Vec<i32> {
+    let base = crate::osa::profile_thresholds(calibrated, tier.profile())
+        .expect("tier profile exists");
+    let level = level.min(31);
+    base.iter()
+        .map(|&t| ((t as i64) << level).clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+        .collect()
+}
+
+fn with_device_sigma(cfg: &SystemConfig, sigma: f64) -> SystemConfig {
+    let mut c = cfg.clone();
+    c.device_sigma = Some(sigma);
+    // keep the spec's sigma coherent for anything that reads it directly
+    c.spec.sigma_code = sigma;
+    c
+}
+
+fn eval_cell(
+    cfg: &SystemConfig,
+    graph: &Arc<QGraph>,
+    eval: &EvalSet,
+    pool: &Arc<ExecPool>,
+    plans: &Arc<PlanCache>,
+) -> Result<(f64, f64)> {
+    let engine = Engine::builder()
+        .config(cfg.clone())
+        .graph(graph.clone())
+        .pool(pool.clone())
+        .plan_cache(plans.clone())
+        .build()?;
+    let mut exec = engine.executor()?;
+    exec.preplan()?;
+    let n = eval.len();
+    let (logits, stats) = exec.forward(&eval.images, n)?;
+    let classes = logits.len() / n;
+    let acc = accuracy(&logits, &eval.labels, classes);
+    let energy_nj = stats.account.total_energy_j() / n as f64 * 1e9;
+    Ok((acc, energy_nj))
+}
+
+/// Run the full sweep: the (boundary × sigma × seed) accuracy surface,
+/// then the governor ladder at the corner sigma.  Cells run
+/// sequentially in the driver; each cell's GEMM tiles fan out across
+/// the shared pool, so the machine stays saturated without nested
+/// parallelism.
+pub fn run(
+    cfg: &SystemConfig,
+    graph: &Arc<QGraph>,
+    eval: &EvalSet,
+    grid: &SweepGrid,
+    progress: &SweepProgress,
+) -> Result<SweepReport> {
+    grid.validate()?;
+    if eval.len() != grid.images {
+        bail!("sweep: eval set has {} images, grid expects {}", eval.len(), grid.images);
+    }
+    let pool = ExecPool::new(cfg.resolved_engine_threads());
+    let plans = Arc::new(PlanCache::new());
+    let ladder_cells = Tier::ALL.len() * (cfg.gov_max_level as usize + 1);
+    progress.begin((grid.surface_cells() + ladder_cells) as u64);
+
+    let mut surface = Vec::new();
+    for &boundary in &grid.boundaries {
+        for &sigma in &grid.sigmas {
+            let mut acc_sum = 0.0f64;
+            let mut acc_min = f64::INFINITY;
+            let mut acc_max = f64::NEG_INFINITY;
+            let mut energy_sum = 0.0f64;
+            for k in 0..grid.mc_seeds {
+                let mut c = with_device_sigma(cfg, sigma);
+                c.mode = CimMode::Hcim;
+                c.fixed_b = boundary;
+                c.noise_seed = mc_seed(cfg.noise_seed, k);
+                let (acc, energy_nj) = eval_cell(&c, graph, eval, &pool, &plans)?;
+                acc_sum += acc;
+                acc_min = acc_min.min(acc);
+                acc_max = acc_max.max(acc);
+                energy_sum += energy_nj;
+                progress.cell_done(
+                    &format!("b={boundary} sigma={sigma} seed={k} acc={acc:.4}"),
+                    grid.images as u64,
+                );
+            }
+            let seeds = grid.mc_seeds as f64;
+            surface.push(CellResult {
+                boundary,
+                sigma,
+                acc_mean: acc_sum / seeds,
+                acc_min,
+                acc_max,
+                energy_nj: energy_sum / seeds,
+            });
+        }
+    }
+
+    let mut ladder = Vec::new();
+    for tier in Tier::ALL {
+        for level in 0..=cfg.gov_max_level {
+            let mut c = with_device_sigma(cfg, grid.corner_sigma);
+            c.mode = CimMode::Osa;
+            c.thresholds = degraded_thresholds(&cfg.thresholds, tier, level);
+            c.noise_seed = mc_seed(cfg.noise_seed, 0);
+            let (acc, _) = eval_cell(&c, graph, eval, &pool, &plans)?;
+            ladder.push(LadderPoint { tier: tier.name(), level, accuracy: acc });
+            progress.cell_done(
+                &format!("ladder tier={} level={level} acc={acc:.4}", tier.name()),
+                grid.images as u64,
+            );
+        }
+    }
+
+    Ok(SweepReport {
+        model: cfg.device_model.clone(),
+        s_ou: cfg.device_s_ou,
+        grid: grid.clone(),
+        surface,
+        ladder,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> SweepReport {
+        SweepReport {
+            model: "gaussian-thermal".into(),
+            s_ou: 0,
+            grid: SweepGrid {
+                boundaries: vec![10, 8],
+                sigmas: vec![0.0, 0.3],
+                mc_seeds: 2,
+                images: 4,
+                corner_sigma: 0.45,
+            },
+            surface: vec![CellResult {
+                boundary: 10,
+                sigma: 0.3,
+                acc_mean: 0.875,
+                acc_min: 0.75,
+                acc_max: 1.0,
+                energy_nj: 123.5,
+            }],
+            ladder: vec![
+                LadderPoint { tier: "gold", level: 0, accuracy: 1.0 },
+                LadderPoint { tier: "silver", level: 0, accuracy: 0.95 },
+                LadderPoint { tier: "silver", level: 1, accuracy: 0.9 },
+                LadderPoint { tier: "silver", level: 2, accuracy: 0.6 },
+                LadderPoint { tier: "batch", level: 0, accuracy: 0.9 },
+                LadderPoint { tier: "batch", level: 1, accuracy: 0.4 },
+                LadderPoint { tier: "batch", level: 2, accuracy: 0.85 },
+            ],
+        }
+    }
+
+    #[test]
+    fn grid_validation_names_the_flag() {
+        let good = tiny_report().grid;
+        assert!(good.validate().is_ok());
+        let bad = SweepGrid { boundaries: vec![], ..good.clone() };
+        assert!(bad.validate().unwrap_err().to_string().contains("--boundaries"));
+        let bad = SweepGrid { sigmas: vec![-0.1], ..good.clone() };
+        assert!(bad.validate().unwrap_err().to_string().contains("sigmas"));
+        let bad = SweepGrid { mc_seeds: 0, ..good.clone() };
+        assert!(bad.validate().unwrap_err().to_string().contains("--mc-seeds"));
+        let bad = SweepGrid { images: 0, ..good };
+        assert!(bad.validate().unwrap_err().to_string().contains("--images"));
+    }
+
+    #[test]
+    fn mc_seeds_are_distinct_and_stable() {
+        let a: Vec<u64> = (0..8).map(|k| mc_seed(0xC1A0_2024, k)).collect();
+        let b: Vec<u64> = (0..8).map(|k| mc_seed(0xC1A0_2024, k)).collect();
+        assert_eq!(a, b);
+        let uniq: std::collections::HashSet<u64> = a.iter().copied().collect();
+        assert_eq!(uniq.len(), 8);
+        assert_ne!(mc_seed(1, 0), mc_seed(2, 0));
+    }
+
+    #[test]
+    fn report_json_roundtrips_byte_identically() {
+        let report = tiny_report();
+        let text = report.to_json().to_string_compact();
+        let parsed = SweepReport::from_json(&crate::io::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, report);
+        // serialization is canonical: parse -> serialize is a fixpoint
+        assert_eq!(parsed.to_json().to_string_compact(), text);
+    }
+
+    #[test]
+    fn csv_has_one_row_per_cell() {
+        let csv = tiny_report().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "boundary,sigma,acc_mean,acc_min,acc_max,energy_nj");
+        assert!(lines[1].starts_with("10,0.3,"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn floors_walk_the_ladder_prefix() {
+        let report = tiny_report();
+        // no SLAs -> unbounded
+        let f = DeviceFloors::from_report(&report, [0.0; 3]);
+        assert_eq!(f.caps, [u32::MAX; 3]);
+        assert_eq!(f.corner_sigma, 0.45);
+        // silver fails at level 2 -> cap 1; batch fails at level 1 ->
+        // cap 0 even though its level 2 clears the floor again
+        let f = DeviceFloors::from_report(&report, [0.99, 0.8, 0.8]);
+        assert_eq!(f.cap(Tier::Gold), 0);
+        assert_eq!(f.cap(Tier::Silver), 1);
+        assert_eq!(f.cap(Tier::Batch), 0);
+        // a tier with no ladder points keeps cap 0 when an SLA is set
+        let empty = SweepReport { ladder: vec![], ..report };
+        let f = DeviceFloors::from_report(&empty, [0.5, 0.5, 0.5]);
+        assert_eq!(f.caps, [0, 0, 0]);
+    }
+
+    #[test]
+    fn degraded_thresholds_match_governor_scaling() {
+        let cal = [0, 0, 32, 94, 1024];
+        let l0 = degraded_thresholds(&cal, Tier::Silver, 0);
+        assert_eq!(l0, cal.to_vec(), "silver level 0 IS the calibrated point");
+        let l2 = degraded_thresholds(&cal, Tier::Silver, 2);
+        for (a, b) in l0.iter().zip(&l2) {
+            assert_eq!(*b, a << 2);
+        }
+        // contracts stay ascending (Ose::new requirement)
+        for tier in Tier::ALL {
+            for level in 0..4 {
+                let ts = degraded_thresholds(&cal, tier, level);
+                assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{tier:?} l{level}: {ts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_runs_are_byte_identical_on_synthetic() {
+        // the full driver on a minimal grid: repeatability is the
+        // acceptance gate for SWEEP_*.json
+        let mut cfg = SystemConfig::default();
+        cfg.gov_max_level = 0; // 1 surface cell + 3 ladder cells
+        let graph = Arc::new(QGraph::synthetic());
+        let eval = EvalSet::synthetic(&cfg, &graph, 2).unwrap();
+        let grid = SweepGrid {
+            boundaries: vec![8],
+            sigmas: vec![0.3],
+            mc_seeds: 1,
+            images: 2,
+            corner_sigma: 0.45,
+        };
+        let progress = SweepProgress::new();
+        let a = run(&cfg, &graph, &eval, &grid, &progress).unwrap();
+        assert_eq!(progress.snapshot(), (4, 4, 8));
+        let b = run(&cfg, &graph, &eval, &grid, &progress).unwrap();
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact(),
+            "sweep reports must be byte-reproducible"
+        );
+        assert_eq!(a.surface.len(), 1);
+        assert_eq!(a.ladder.len(), 3);
+        // accuracy is a fraction of the eval set
+        for c in &a.surface {
+            assert!((0.0..=1.0).contains(&c.acc_mean), "{c:?}");
+            assert!(c.acc_min <= c.acc_mean && c.acc_mean <= c.acc_max);
+        }
+    }
+}

@@ -45,6 +45,7 @@
 //! and the library surface can never drift apart.
 
 use crate::config::{CimMode, SystemConfig};
+use crate::device::{DeviceModel, DeviceParams};
 use crate::energy::hierarchy::{MemoryHierarchy, MODEL_HIERARCHY, NUM_LEVELS};
 use crate::macrosim::ose::Ose;
 use crate::nn::{Executor, QGraph};
@@ -59,14 +60,26 @@ use std::time::Duration;
 
 // ------------------------------------------------------------------ Backend
 
+/// The analog device statistics a backend executes under — part of
+/// [`Capabilities`] so routing and introspection (`/v1/version`,
+/// `/healthz`, `GET /v2/device`) can see which silicon corner is live
+/// (DESIGN.md §16).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceCaps {
+    /// Device model registry name (`device::MODEL_NAMES`).
+    pub model: &'static str,
+    /// Model strength (conversion-noise or column-variation sigma).
+    pub sigma: f64,
+    /// Operation-unit group size (0 = full-width conversions).
+    pub s_ou: usize,
+}
+
 /// What a backend can do — used for routing decisions (e.g. the
 /// coordinator only programs OSE thresholds into backends that report
 /// `programmable_thresholds`) and for `/v1/version` + `/healthz` +
 /// `GET /v2/topology` introspection.  Structured around the fleet
-/// topology (`macros` x `residency_bytes`) instead of the pre-fleet
-/// ad-hoc boolean bag ([`BackendCaps`], kept as a deprecated shim for
-/// one release).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// topology (`macros` x `residency_bytes`).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Capabilities {
     /// The backend can actually execute in this build (the `pjrt` entry
     /// is registered but unavailable without the `pjrt` feature).
@@ -97,34 +110,10 @@ pub struct Capabilities {
     /// (`energy::hierarchy::NUM_LEVELS` under `"hierarchy"`, 0 under
     /// `"compact"` where movement is folded into the op constants).
     pub memory_levels: usize,
+    /// The analog device model this backend's conversions run through.
+    pub device: DeviceCaps,
     /// One-line human description.
     pub description: &'static str,
-}
-
-/// The pre-fleet capability shape.  [`Backend::capabilities`] now
-/// returns the structured [`Capabilities`]; convert with `.into()`
-/// while migrating.
-#[deprecated(note = "use Capabilities — Backend::capabilities() returns the structured shape")]
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct BackendCaps {
-    pub available: bool,
-    pub mode: CimMode,
-    pub programmable_thresholds: bool,
-    pub hybrid_boundary: bool,
-    pub description: &'static str,
-}
-
-#[allow(deprecated)]
-impl From<Capabilities> for BackendCaps {
-    fn from(c: Capabilities) -> Self {
-        BackendCaps {
-            available: c.available,
-            mode: c.mode,
-            programmable_thresholds: c.programmable_thresholds,
-            hybrid_boundary: c.hybrid_boundary,
-            description: c.description,
-        }
-    }
 }
 
 /// Per-call knob overrides — the dynamic D/A boundary of the paper as a
@@ -398,6 +387,7 @@ impl Backend for NativeBackend {
             pooling: false,
             cost_model,
             memory_levels: if cost_model == MODEL_HIERARCHY { NUM_LEVELS } else { 0 },
+            device: device_caps(self.inner.device()),
             description: "native cycle-level macro simulator",
         }
     }
@@ -435,6 +425,25 @@ fn hierarchy_of(cfg: &SystemConfig) -> Option<Arc<MemoryHierarchy>> {
     cfg.hierarchy_model().then(|| Arc::new(cfg.hardware.clone()))
 }
 
+/// The `[device]` model the config asks for.  The default
+/// (`gaussian-thermal`, sigma inherited from `cim.sigma_code`, no ADC
+/// error, no grouping) is the bit-preserved legacy convention.
+pub fn device_of(cfg: &SystemConfig) -> Result<Arc<dyn DeviceModel>> {
+    let params = DeviceParams {
+        sigma: cfg.device_sigma.unwrap_or(cfg.spec.sigma_code),
+        s_ou: cfg.device_s_ou,
+        adc_offset: cfg.device_adc_offset as f32,
+        adc_gain: cfg.device_adc_gain as f32,
+    };
+    crate::device::build(&cfg.device_model, params)
+}
+
+/// The device block of a backend's capability surface.
+fn device_caps(device: &Arc<dyn DeviceModel>) -> DeviceCaps {
+    let p = device.params();
+    DeviceCaps { model: device.name(), sigma: p.sigma, s_ou: p.s_ou }
+}
+
 fn build_native(
     ctx: &BackendCtx,
     reg_name: &'static str,
@@ -449,7 +458,8 @@ fn build_native(
     )?
     .with_plan_cache(ctx.plans.clone())
     .with_pool(ctx.pool.clone())
-    .with_hierarchy(hierarchy_of(ctx.cfg));
+    .with_hierarchy(hierarchy_of(ctx.cfg))
+    .with_device(device_of(ctx.cfg)?);
     Ok(Box::new(NativeBackend { reg_name, inner: gemm }))
 }
 
@@ -509,6 +519,7 @@ impl Backend for FleetBackend {
             pooling: self.inner.placement_mode() == PlacementMode::Auto,
             cost_model,
             memory_levels: if cost_model == MODEL_HIERARCHY { NUM_LEVELS } else { 0 },
+            device: device_caps(self.inner.base().device()),
             description: "K-macro fleet over the native simulator",
         }
     }
@@ -565,7 +576,8 @@ fn build_macro_fleet(ctx: &BackendCtx) -> Result<Box<dyn Backend>> {
     )?
     .with_plan_cache(ctx.plans.clone())
     .with_pool(ctx.pool.clone())
-    .with_hierarchy(hierarchy_of(ctx.cfg));
+    .with_hierarchy(hierarchy_of(ctx.cfg))
+    .with_device(device_of(ctx.cfg)?);
     let mode = PlacementMode::parse(&ctx.cfg.fleet_placement).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown [fleet] placement {:?} (one of: auto, replicate, resident)",
@@ -673,6 +685,12 @@ impl Backend for PjrtBackend {
             // the artifact runtime prices through the compact model only
             cost_model: crate::energy::hierarchy::MODEL_COMPACT,
             memory_levels: 0,
+            // the artifact bakes the baseline thermal-noise model in
+            device: DeviceCaps {
+                model: "gaussian-thermal",
+                sigma: crate::spec::SIGMA_CODE,
+                s_ou: 0,
+            },
             description: "AOT PJRT artifact runtime",
         }
     }
@@ -1102,15 +1120,14 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_backend_caps_shim_converts() {
+    fn capabilities_expose_device_block() {
         let engine = synth_engine();
         let caps = engine.backend().unwrap().capabilities();
-        let old: BackendCaps = caps.into();
-        assert_eq!(old.available, caps.available);
-        assert_eq!(old.mode, caps.mode);
-        assert_eq!(old.programmable_thresholds, caps.programmable_thresholds);
-        assert_eq!(old.hybrid_boundary, caps.hybrid_boundary);
+        assert_eq!(caps.device.model, "gaussian-thermal");
+        assert_eq!(caps.device.sigma, crate::spec::SIGMA_CODE);
+        assert_eq!(caps.device.s_ou, 0);
+        let fleet = engine.backend_named("macro-fleet").unwrap().capabilities();
+        assert_eq!(fleet.device, caps.device);
     }
 
     #[test]

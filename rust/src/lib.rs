@@ -47,6 +47,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod device;
 pub mod energy;
 pub mod engine;
 pub mod figures;

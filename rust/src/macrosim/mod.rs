@@ -26,10 +26,75 @@
 
 pub mod ose;
 
-use crate::analog::{adc_transfer, analog_group_bounds};
+use crate::analog::{adc_transfer, adc_transfer_dev, analog_group_bounds};
 use crate::quant::{and_popcount_words, plane_sign, PackedBits};
 use crate::spec::MacroSpec;
 use anyhow::{ensure, Result};
+
+/// Device context for the variation-aware compute paths (DESIGN.md §16):
+/// per-column static gains (None = unity), the operation-unit group size
+/// `s_ou` (0 = one full-width conversion per analog group), and the ADC
+/// offset/gain error forwarded to [`adc_transfer_dev`].
+#[derive(Debug, Clone, Copy)]
+pub struct DevCtx<'a> {
+    pub col_gains: Option<&'a [f32]>,
+    pub s_ou: usize,
+    pub adc_offset: f32,
+    pub adc_gain: f32,
+}
+
+impl DevCtx<'_> {
+    /// Sub-conversions per analog group for this macro geometry.
+    pub fn n_sub(&self, cols: usize) -> usize {
+        if self.s_ou == 0 {
+            1
+        } else {
+            cols.div_ceil(self.s_ou)
+        }
+    }
+}
+
+/// Gain-weighted AND of a weight plane and an activation plane over the
+/// column range `[c_lo, c_hi)`.  With `gains == None` this is the plain
+/// popcount (as f32); otherwise each set column contributes its static
+/// gain.  Sums of <= 144 unit-scale f32 terms stay exact for the unity
+/// case, which is what keeps the trivial device bit-equal to the
+/// popcount path.
+#[inline]
+fn gain_weighted_and(
+    wrow: &[u64],
+    aw: &[u64],
+    gains: Option<&[f32]>,
+    c_lo: usize,
+    c_hi: usize,
+) -> f32 {
+    let mut sum = 0.0f32;
+    let w_lo = c_lo / 64;
+    let w_hi = (c_hi - 1) / 64;
+    for wi in w_lo..=w_hi {
+        let mut word = wrow[wi] & aw[wi];
+        if wi == w_lo {
+            word &= !0u64 << (c_lo % 64);
+        }
+        if wi == w_hi && c_hi % 64 != 0 {
+            word &= (1u64 << (c_hi % 64)) - 1;
+        }
+        if word == 0 {
+            continue;
+        }
+        match gains {
+            None => sum += word.count_ones() as f32,
+            Some(g) => {
+                while word != 0 {
+                    let bit = word.trailing_zeros() as usize;
+                    sum += g[wi * 64 + bit];
+                    word &= word - 1;
+                }
+            }
+        }
+    }
+    sum
+}
 
 /// Resolve the activation planes once per call: `None` for an all-zero
 /// plane (its 1-bit MACs are 0 — the sparsity fast path), else the
@@ -246,6 +311,122 @@ impl MacroUnit {
         out
     }
 
+    /// Computing mode with boundary `b` through a device model: static
+    /// per-column gains, `s_ou` operation-unit grouping (each sub-sum
+    /// converts separately) and ADC offset/gain error.  `noise` is
+    /// `[hmus, w_bits, n_sub]` row-major, one sample per sub-conversion;
+    /// the draw count is independent of `b` so the unit noise stream
+    /// stays aligned whatever boundary the OSE picks.  With a trivial
+    /// `ctx` (unity gains, `s_ou == 0`, no ADC error) this reproduces
+    /// [`MacroUnit::compute_hybrid`] bit-exactly on the same noise.
+    pub fn compute_hybrid_dev(
+        &self,
+        a_packed: &PackedBits,
+        b: i32,
+        noise: &[f32],
+        ctx: &DevCtx,
+    ) -> Vec<i32> {
+        let sp = &self.sp;
+        let n_sub = ctx.n_sub(sp.cols);
+        let group = if ctx.s_ou == 0 { sp.cols } else { ctx.s_ou };
+        debug_assert_eq!(noise.len(), sp.hmus * sp.w_bits * n_sub);
+        let a_planes = resolve_planes(a_packed);
+        let mut out = vec![0i32; sp.hmus];
+        for h in 0..sp.hmus {
+            let wp = &self.packed[h];
+            let mut acc = 0i32;
+            for i in 0..sp.w_bits {
+                let sign = plane_sign(i, sp.w_bits);
+                let wrow = wp.plane(i);
+                // digital domain is unchanged: exact split-port readout
+                let j_start = ((b - i as i32).max(0) as usize).min(sp.a_bits);
+                for (j, aw) in a_planes.iter().enumerate().skip(j_start) {
+                    if let Some(aw) = aw {
+                        let d = and_popcount_words(wrow, aw);
+                        acc += sign * (d << (i + j));
+                    }
+                }
+                // analog domain: s_ou-column sub-sums, one ADC conversion
+                // each, summed post-reconstruction
+                if let Some((j_lo, j_hi)) = analog_group_bounds(i as i32, b, sp) {
+                    let nbits = j_hi - j_lo + 1;
+                    for sub in 0..n_sub {
+                        let c_lo = sub * group;
+                        let c_hi = ((sub + 1) * group).min(sp.cols);
+                        let mut amac = 0.0f32;
+                        for j in j_lo..=j_hi {
+                            if let Some(aw) = a_planes[j as usize] {
+                                let d = gain_weighted_and(wrow, aw, ctx.col_gains, c_lo, c_hi);
+                                amac += d * (1i32 << (j - j_lo)) as f32;
+                            }
+                        }
+                        let idx = (h * sp.w_bits + i) * n_sub + sub;
+                        let rec = adc_transfer_dev(
+                            amac,
+                            nbits,
+                            noise[idx],
+                            ctx.adc_offset,
+                            ctx.adc_gain,
+                            sp,
+                        );
+                        acc += sign * (rec << (i as i32 + j_lo));
+                    }
+                }
+            }
+            out[h] = acc;
+        }
+        out
+    }
+
+    /// Full-analog baseline through a device model; `noise` is
+    /// `[hmus, w_bits, n_slices, n_sub]` row-major.  Trivial `ctx` ==
+    /// [`MacroUnit::compute_acim`] bit-exactly on the same noise.
+    pub fn compute_acim_dev(&self, a_packed: &PackedBits, noise: &[f32], ctx: &DevCtx) -> Vec<i32> {
+        let sp = &self.sp;
+        let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
+        let n_sub = ctx.n_sub(sp.cols);
+        let group = if ctx.s_ou == 0 { sp.cols } else { ctx.s_ou };
+        debug_assert_eq!(noise.len(), sp.hmus * sp.w_bits * n_slices * n_sub);
+        let a_planes = resolve_planes(a_packed);
+        let mut out = vec![0i32; sp.hmus];
+        for h in 0..sp.hmus {
+            let wp = &self.packed[h];
+            let mut acc = 0i32;
+            for i in 0..sp.w_bits {
+                let sign = plane_sign(i, sp.w_bits);
+                let wrow = wp.plane(i);
+                for sl in 0..n_slices {
+                    let j_lo = (sl * sp.analog_band as usize) as i32;
+                    let j_hi = (j_lo + sp.analog_band - 1).min(sp.a_bits as i32 - 1);
+                    let nbits = j_hi - j_lo + 1;
+                    for sub in 0..n_sub {
+                        let c_lo = sub * group;
+                        let c_hi = ((sub + 1) * group).min(sp.cols);
+                        let mut amac = 0.0f32;
+                        for j in j_lo..=j_hi {
+                            if let Some(aw) = a_planes[j as usize] {
+                                let d = gain_weighted_and(wrow, aw, ctx.col_gains, c_lo, c_hi);
+                                amac += d * (1i32 << (j - j_lo)) as f32;
+                            }
+                        }
+                        let idx = ((h * sp.w_bits + i) * n_slices + sl) * n_sub + sub;
+                        let rec = adc_transfer_dev(
+                            amac,
+                            nbits,
+                            noise[idx],
+                            ctx.adc_offset,
+                            ctx.adc_gain,
+                            sp,
+                        );
+                        acc += sign * (rec << (i as i32 + j_lo));
+                    }
+                }
+            }
+            out[h] = acc;
+        }
+        out
+    }
+
     /// Full-analog baseline (conventional ACIM): every weight plane times
     /// bit-parallel activation slices of ANALOG_BAND bits.
     /// `noise` is `[hmus, w_bits, n_slices]` row-major.
@@ -452,6 +633,107 @@ mod tests {
             let noise = vec![0.0f32; sp.hmus * sp.w_bits];
             assert_eq!(u.compute_hybrid(&p, 0, &noise), u.exact(&a));
         });
+    }
+
+    fn trivial_ctx() -> DevCtx<'static> {
+        DevCtx { col_gains: None, s_ou: 0, adc_offset: 0.0, adc_gain: 1.0 }
+    }
+
+    #[test]
+    fn dev_path_trivial_ctx_is_bit_equal() {
+        // the device-aware path with a trivial context must reproduce
+        // the legacy popcount path exactly, on the same noise buffer
+        let (u, mut g) = unit(21);
+        let sp = *u.spec();
+        let ctx = trivial_ctx();
+        let n_slices = sp.a_bits.div_ceil(sp.analog_band as usize);
+        let mut ng = SplitMix64::new(77);
+        for b in [0, 5, 7, 8, 10] {
+            let a = acts(&mut g, sp.cols);
+            let p = u.pack_acts(&a);
+            let noise = ng.normals_f32(sp.hmus * sp.w_bits, sp.sigma_code);
+            assert_eq!(u.compute_hybrid_dev(&p, b, &noise, &ctx), u.compute_hybrid(&p, b, &noise));
+            let noise = ng.normals_f32(sp.hmus * sp.w_bits * n_slices, sp.sigma_code);
+            assert_eq!(u.compute_acim_dev(&p, &noise, &ctx), u.compute_acim(&p, &noise));
+        }
+    }
+
+    #[test]
+    fn dev_path_unity_gain_vector_is_bit_equal() {
+        // explicit all-ones gains walk the per-bit path yet must agree
+        // bit-for-bit with the popcount path (sums of <= 144 ones are
+        // exact in f32)
+        let (u, mut g) = unit(22);
+        let sp = *u.spec();
+        let ones = vec![1.0f32; sp.cols];
+        let ctx = DevCtx { col_gains: Some(&ones), ..trivial_ctx() };
+        let mut ng = SplitMix64::new(78);
+        for b in [5, 8, 10] {
+            let a = acts(&mut g, sp.cols);
+            let p = u.pack_acts(&a);
+            let noise = ng.normals_f32(sp.hmus * sp.w_bits, sp.sigma_code);
+            assert_eq!(u.compute_hybrid_dev(&p, b, &noise, &ctx), u.compute_hybrid(&p, b, &noise));
+        }
+    }
+
+    #[test]
+    fn dev_grouping_changes_quantization_not_digital() {
+        let (u, mut g) = unit(23);
+        let sp = *u.spec();
+        let ctx = DevCtx { s_ou: 16, ..trivial_ctx() };
+        let n_sub = ctx.n_sub(sp.cols);
+        assert_eq!(n_sub, 9);
+        let a = acts(&mut g, sp.cols);
+        let p = u.pack_acts(&a);
+        // b = 0: no analog groups, so grouping is irrelevant and exact
+        let noise = vec![0.0f32; sp.hmus * sp.w_bits * n_sub];
+        assert_eq!(u.compute_hybrid_dev(&p, 0, &noise, &ctx), u.exact(&a));
+        // b = 8: sub-converted groups quantize differently from one
+        // full-width conversion, but stay correlated with exact
+        let b = 8;
+        let grouped = u.compute_hybrid_dev(&p, b, &noise, &ctx);
+        let full = u.compute_hybrid(&p, b, &vec![0.0f32; sp.hmus * sp.w_bits]);
+        assert_ne!(grouped, full, "s_ou grouping must alter quantization");
+        let exact = u.exact(&a);
+        let corr: f64 =
+            grouped.iter().zip(&exact).map(|(&o, &e)| o as f64 * e as f64).sum::<f64>();
+        assert!(corr > 0.0);
+    }
+
+    #[test]
+    fn dev_column_gains_perturb_analog_only() {
+        let (u, mut g) = unit(24);
+        let sp = *u.spec();
+        let mut gg = SplitMix64::new(9);
+        let gains: Vec<f32> = gg.normals_f32(sp.cols, 0.05).iter().map(|z| 1.0 + z).collect();
+        let ctx = DevCtx { col_gains: Some(&gains), ..trivial_ctx() };
+        let a = acts(&mut g, sp.cols);
+        let p = u.pack_acts(&a);
+        let noise = vec![0.0f32; sp.hmus * sp.w_bits];
+        // b = 0 is all-digital: gains cannot touch it
+        assert_eq!(u.compute_hybrid_dev(&p, 0, &noise, &ctx), u.exact(&a));
+        // a large boundary routes low orders through the gained columns
+        let perturbed = u.compute_hybrid_dev(&p, 10, &noise, &ctx);
+        let clean = u.compute_hybrid(&p, 10, &noise);
+        assert_ne!(perturbed, clean, "5% column mismatch must move codes");
+    }
+
+    #[test]
+    fn gain_weighted_and_masks_column_ranges() {
+        // one set bit per word boundary region to exercise the masks
+        let wrow = [!0u64, !0u64, !0u64];
+        let aw = [1u64 | (1 << 63), 1u64, 1u64 << 15];
+        // full range counts all 4 set columns
+        assert_eq!(gain_weighted_and(&wrow, &aw, None, 0, 144), 4.0);
+        // [1, 64) drops column 0, keeps 63
+        assert_eq!(gain_weighted_and(&wrow, &aw, None, 1, 64), 1.0);
+        // [64, 128) sees only column 64
+        assert_eq!(gain_weighted_and(&wrow, &aw, None, 64, 128), 1.0);
+        // weighted: column 143 carries gain 2.5
+        let mut gains = vec![1.0f32; 144];
+        gains[143] = 2.5;
+        let aw2 = [0u64, 0u64, 1u64 << 15];
+        assert_eq!(gain_weighted_and(&wrow, &aw2, Some(&gains), 128, 144), 2.5);
     }
 
     #[test]

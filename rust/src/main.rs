@@ -31,6 +31,12 @@ fn common_opts() -> Vec<Opt> {
         Opt::value("images", "number of test images", Some("128")),
         Opt::value("calib-images", "images for threshold calibration", Some("48")),
         Opt::value("sigma", "ADC noise sigma in code units", None),
+        Opt::value(
+            "device",
+            "analog device model: gaussian-thermal|ideal|capacitor-mismatch|lognormal-conductance",
+            None,
+        ),
+        Opt::value("device-sigma", "device variation sigma (defaults to --sigma)", None),
         Opt::value("fs-frac", "ADC full-scale fraction (ablation override)", None),
         Opt::value("nq-shift", "OSE N/Q shift (ablation override)", None),
         Opt::value("seed", "noise seed", None),
@@ -66,6 +72,12 @@ fn build_config(args: &osa_hcim::cli::Args) -> Result<SystemConfig> {
     cfg.fixed_b = args.get_i32("fixed-b", cfg.fixed_b)?;
     if let Some(sigma) = args.get("sigma") {
         cfg.spec.sigma_code = sigma.parse()?;
+    }
+    if let Some(model) = args.get("device") {
+        cfg.device_model = model.to_string();
+    }
+    if let Some(sigma) = args.get("device-sigma") {
+        cfg.device_sigma = Some(sigma.parse()?);
     }
     cfg.noise_seed = args.get_u64("seed", cfg.noise_seed)?;
     if args.get("threads").is_some() {
@@ -175,6 +187,30 @@ fn main() -> Result<()> {
                 name: "table1",
                 about: "regenerate Table I (\"This Work\" column)",
                 opts: common_opts(),
+            },
+            Command {
+                name: "sweep",
+                about: "Monte Carlo design-space sweep: boundary x device sigma x seeds",
+                opts: {
+                    let mut o = common_opts();
+                    o.push(Opt::value(
+                        "boundaries",
+                        "comma-separated hybrid boundaries to sweep",
+                        Some("10,8,6"),
+                    ));
+                    o.push(Opt::value(
+                        "sigmas",
+                        "comma-separated device sigmas to sweep",
+                        Some("0.0,0.3,0.6"),
+                    ));
+                    o.push(Opt::value("mc-seeds", "Monte Carlo seeds per grid cell", Some("3")));
+                    o.push(Opt::value(
+                        "corner-sigma",
+                        "device corner for the governor-ladder eval",
+                        None,
+                    ));
+                    o
+                },
             },
             Command {
                 name: "validate",
@@ -378,6 +414,83 @@ fn main() -> Result<()> {
             let calib = args.get_usize("calib-images", 48)?;
             let text = figures::table1(&ctx, images, calib)?;
             figures::emit("table1", &text, &results_dir)?;
+        }
+        "sweep" => {
+            use osa_hcim::device::sweep;
+            let parse_csv = |text: &str, what: &str| -> Result<Vec<f64>> {
+                text.split(',')
+                    .map(|p| p.trim().parse::<f64>().with_context(|| format!("bad {what} {p:?}")))
+                    .collect()
+            };
+            let images = args.get_usize("images", 128)?;
+            let grid = sweep::SweepGrid {
+                boundaries: parse_csv(args.get_or("boundaries", "10,8,6"), "boundary")?
+                    .iter()
+                    .map(|&b| b as i32)
+                    .collect(),
+                sigmas: parse_csv(args.get_or("sigmas", "0.0,0.3,0.6"), "sigma")?,
+                mc_seeds: args.get_usize("mc-seeds", 3)?,
+                images,
+                corner_sigma: args.get_f64("corner-sigma", cfg.device_corner_sigma)?,
+            };
+            // eval against the real test set when artifacts are built,
+            // else against the DCIM-labeled synthetic set — the sweep
+            // surface is meaningful (and reproducible) either way
+            let (graph, eval) = match FigCtx::load(cfg.clone()) {
+                Ok(ctx) => {
+                    let graph = ctx.engine.graph().clone();
+                    let n = images.min(ctx.ds.test_n());
+                    let (imgs, labels) = ctx.ds.test_batch(0, n);
+                    (graph, sweep::EvalSet::from_parts(imgs.to_vec(), labels.to_vec())?)
+                }
+                Err(e) => {
+                    eprintln!("artifacts not available ({e:#}); sweeping the synthetic graph");
+                    let graph = std::sync::Arc::new(QGraph::synthetic());
+                    let eval = sweep::EvalSet::synthetic(&cfg, &graph, images)?;
+                    (graph, eval)
+                }
+            };
+            let mut grid = grid;
+            grid.images = eval.labels.len();
+            let progress = osa_hcim::obs::SweepProgress::new();
+            let report = sweep::run(&cfg, &graph, &eval, &grid, &progress)?;
+            std::fs::create_dir_all(&results_dir)?;
+            let json_path = results_dir.join("SWEEP_device.json");
+            let csv_path = results_dir.join("SWEEP_device.csv");
+            std::fs::write(&json_path, report.to_json().to_string_compact())?;
+            std::fs::write(&csv_path, report.to_csv())?;
+            println!(
+                "sweep: {} surface cells x {} seeds + {} ladder points over {} images",
+                grid.boundaries.len() * grid.sigmas.len(),
+                grid.mc_seeds,
+                report.ladder.len(),
+                grid.images
+            );
+            for c in &report.surface {
+                println!(
+                    "  b={:<3} sigma={:<5} acc={:.2}% [{:.2}%, {:.2}%] energy={:.1}nJ/img",
+                    c.boundary,
+                    c.sigma,
+                    c.acc_mean * 100.0,
+                    c.acc_min * 100.0,
+                    c.acc_max * 100.0,
+                    c.energy_nj
+                );
+            }
+            for p in &report.ladder {
+                println!(
+                    "  ladder tier={:<6} level={} acc={:.2}%  (corner sigma {})",
+                    p.tier,
+                    p.level,
+                    p.accuracy * 100.0,
+                    grid.corner_sigma
+                );
+            }
+            println!("wrote {} and {}", json_path.display(), csv_path.display());
+            println!(
+                "feed it back into serving: [device] sweep_report = {json_path:?} \
+                 + sla_gold/sla_silver/sla_batch floors"
+            );
         }
         "validate" => {
             cfg.spec.validate_against_artifacts(&cfg.artifacts_dir)?;

@@ -1146,12 +1146,71 @@ fn validate_histograms(doc: &Exposition) -> Result<(), String> {
 }
 
 // ---------------------------------------------------------------------------
+// Sweep progress
+// ---------------------------------------------------------------------------
+
+/// Progress counters for the `osa-hcim sweep` design-space explorer
+/// (DESIGN.md §16).  Same shape as the rest of the registry: interior
+/// atomics, wait-free updates, snapshot reads — the sweep driver bumps
+/// these per grid cell and emits one structured log line each, so a
+/// long Monte-Carlo run streams its position without any extra wiring.
+#[derive(Debug, Default)]
+pub struct SweepProgress {
+    cells_total: AtomicU64,
+    cells_done: AtomicU64,
+    images_done: AtomicU64,
+}
+
+impl SweepProgress {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare the grid size before the first cell runs.
+    pub fn begin(&self, cells: u64) {
+        self.cells_total.store(cells, Ordering::Relaxed);
+        self.cells_done.store(0, Ordering::Relaxed);
+        self.images_done.store(0, Ordering::Relaxed);
+    }
+
+    /// Record one finished grid cell (`images` forwards evaluated).
+    pub fn cell_done(&self, label: &str, images: u64) {
+        let done = self.cells_done.fetch_add(1, Ordering::Relaxed) + 1;
+        self.images_done.fetch_add(images, Ordering::Relaxed);
+        let total = self.cells_total.load(Ordering::Relaxed);
+        log::info!("sweep cell {done}/{total} done: {label}");
+    }
+
+    /// `(cells_done, cells_total, images_done)` at this instant.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.cells_done.load(Ordering::Relaxed),
+            self.cells_total.load(Ordering::Relaxed),
+            self.images_done.load(Ordering::Relaxed),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tests
 // ---------------------------------------------------------------------------
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sweep_progress_counts_cells_and_images() {
+        let p = SweepProgress::new();
+        p.begin(4);
+        assert_eq!(p.snapshot(), (0, 4, 0));
+        p.cell_done("b=8 sigma=0.3 seed=0", 16);
+        p.cell_done("b=8 sigma=0.3 seed=1", 16);
+        assert_eq!(p.snapshot(), (2, 4, 32));
+        // begin() resets for the next grid
+        p.begin(2);
+        assert_eq!(p.snapshot(), (0, 2, 0));
+    }
 
     #[test]
     fn bucket_index_monotone_and_invertible() {

@@ -314,10 +314,11 @@ impl FleetGemm {
             let energy = self.base.energy;
             let fixed_b = self.base.fixed_b;
             let noise_seed = self.base.noise_seed;
+            let device = self.base.device().clone();
             move || {
                 cim_unit(
                     &plan, &a_p, &a_packed, mode, &ose, energy, fixed_b, noise_seed, layer_idx,
-                    k, s0, s1, ni, n_slices,
+                    k, s0, s1, ni, n_slices, &device,
                 )
             }
         });

@@ -34,9 +34,11 @@ pub mod im2col;
 pub mod plan;
 
 use crate::config::CimMode;
+use crate::device::DeviceModel;
 use crate::energy::hierarchy::{MemoryHierarchy, MODEL_COMPACT, MODEL_HIERARCHY};
 use crate::energy::{dataflow, EnergyAccount, EnergyParams};
 use crate::macrosim::ose::{Ose, SaliencyAccumulator};
+use crate::macrosim::DevCtx;
 use crate::quant::PackedBits;
 use crate::spec::MacroSpec;
 use crate::util::prng::{unit_noise_seed, SplitMix64};
@@ -148,6 +150,13 @@ pub struct MacroGemm {
     /// model = "hierarchy"`).  `None` = compact model: per-op constants
     /// only, `movement_fj` stays all-zero — the bit-compatible default.
     hier: Option<Arc<MemoryHierarchy>>,
+    /// Analog device model (DESIGN.md §16).  The default
+    /// (`gaussian-thermal` at the spec's `sigma_code`) reports
+    /// `is_baseline()` and keeps the bit-preserved legacy compute path;
+    /// any other model/knob routes conversions through the
+    /// device-aware `compute_*_dev` paths — same unit streams, so still
+    /// bit-reproducible at every thread count and fleet K.
+    device: Arc<dyn DeviceModel>,
 }
 
 impl MacroGemm {
@@ -171,6 +180,7 @@ impl MacroGemm {
             plan_scope: PlanScope::SINGLE,
             pool: None,
             hier: None,
+            device: crate::device::default_model(spec.sigma_code),
         })
     }
 
@@ -189,6 +199,7 @@ impl MacroGemm {
             plan_scope: PlanScope::SINGLE,
             pool: None,
             hier: None,
+            device: crate::device::default_model(crate::spec::SIGMA_CODE),
         }
     }
 
@@ -226,6 +237,19 @@ impl MacroGemm {
     /// The attached memory hierarchy (`None` = compact model).
     pub fn hierarchy(&self) -> Option<&Arc<MemoryHierarchy>> {
         self.hier.as_ref()
+    }
+
+    /// Attach an analog device model.  The default is
+    /// `device::default_model(spec.sigma_code)` — the bit-preserved
+    /// legacy convention.
+    pub fn with_device(mut self, device: Arc<dyn DeviceModel>) -> Self {
+        self.device = device;
+        self
+    }
+
+    /// The engine's analog device model.
+    pub fn device(&self) -> &Arc<dyn DeviceModel> {
+        &self.device
     }
 
     /// Active cost-model name (`"compact"` or `"hierarchy"`).
@@ -400,6 +424,7 @@ impl MacroGemm {
             let energy = self.energy;
             let fixed_b = self.fixed_b;
             let noise_seed = self.noise_seed;
+            let device = self.device.clone();
             move || {
                 cim_unit(
                     &plan,
@@ -416,6 +441,7 @@ impl MacroGemm {
                     s1,
                     ni,
                     n_slices,
+                    &device,
                 )
             }
         });
@@ -458,20 +484,15 @@ pub(crate) struct UnitOut {
     pub(crate) account: EnergyAccount,
 }
 
-/// Draw one K-tile's noise buffer from the unit's stream, or zeros
-/// *without advancing the stream* when noise is disabled (the
-/// cross-language noiseless convention).
-fn draw_noise(stream: &mut SplitMix64, n: usize, sigma: f64) -> Vec<f32> {
-    if sigma == 0.0 {
-        vec![0.0f32; n]
-    } else {
-        stream.normals_f32(n, sigma)
-    }
-}
-
 /// CIM-mode work unit: rows `s0..s1` of N-tile `ni`.  SE pass (OSA) and
 /// computing pass fused per row; noise per `(layer, row, N-tile)` stream
-/// advanced K-tile-major (DESIGN.md §6).
+/// advanced K-tile-major (DESIGN.md §6), with the per-conversion draws
+/// delegated to the device model (the zero-sigma "zeros without
+/// advancing" convention lives in `DeviceModel::conversion_noise` now).
+/// A baseline device takes the legacy popcount compute path; any other
+/// device routes through `compute_*_dev` with per-(layer, macro) static
+/// column gains — the draw count per K-tile is fixed by (mode, device),
+/// never by the resolved boundary, so streams stay aligned.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn cim_unit(
     plan: &LayerPlan,
@@ -488,6 +509,7 @@ pub(crate) fn cim_unit(
     s1: usize,
     ni: usize,
     n_slices: usize,
+    device: &Arc<dyn DeviceModel>,
 ) -> UnitOut {
     let sp = plan.spec;
     let (kt, k_pad) = (plan.kt, plan.k_pad);
@@ -495,10 +517,23 @@ pub(crate) fn cim_unit(
     let mut vals = vec![0i32; rows * sp.hmus];
     let mut boundaries = vec![0i32; rows];
     let mut account = EnergyAccount::default();
+    let dev_p = device.params();
+    let baseline = device.is_baseline();
+    let n_sub = if baseline { 1 } else { dev_p.sub_conversions(sp.cols) };
     let per_tile = if mode == CimMode::Acim {
-        sp.hmus * sp.w_bits * n_slices
+        sp.hmus * sp.w_bits * n_slices * n_sub
     } else {
-        sp.hmus * sp.w_bits
+        sp.hmus * sp.w_bits * n_sub
+    };
+    // Static column gains per K-tile of this N-tile, fixed per
+    // (seed, layer, macro) — macro index = plan unit index ni*kt + ki.
+    // Computed once per work unit; rows share the same silicon.
+    let col_gains: Vec<Option<Vec<f32>>> = if baseline || mode == CimMode::Dcim {
+        Vec::new()
+    } else {
+        (0..kt)
+            .map(|ki| device.column_gains(noise_seed, layer_idx, (ni * kt + ki) as u64, sp.cols))
+            .collect()
     };
     for (r, s) in (s0..s1).enumerate() {
         // ---- Saliency-Evaluation mode (OSA only): resolve B_D/A ------
@@ -531,21 +566,35 @@ pub(crate) fn cim_unit(
                     (unit.exact(tile), plan.counts(0, false), false)
                 }
                 CimMode::Acim => {
-                    let noise = draw_noise(&mut stream, per_tile, sp.sigma_code);
-                    (
-                        unit.compute_acim(&a_packed[s * kt + ki], &noise),
-                        plan.acim_counts(),
-                        false,
-                    )
+                    let noise = device.conversion_noise(&mut stream, per_tile);
+                    let vals = if baseline {
+                        unit.compute_acim(&a_packed[s * kt + ki], &noise)
+                    } else {
+                        let ctx = DevCtx {
+                            col_gains: col_gains[ki].as_deref(),
+                            s_ou: dev_p.s_ou,
+                            adc_offset: dev_p.adc_offset,
+                            adc_gain: dev_p.adc_gain,
+                        };
+                        unit.compute_acim_dev(&a_packed[s * kt + ki], &noise, &ctx)
+                    };
+                    (vals, plan.acim_counts(), false)
                 }
                 CimMode::Osa | CimMode::Hcim => {
-                    let noise = draw_noise(&mut stream, per_tile, sp.sigma_code);
+                    let noise = device.conversion_noise(&mut stream, per_tile);
                     let with_se = mode == CimMode::Osa;
-                    (
-                        unit.compute_hybrid(&a_packed[s * kt + ki], b, &noise),
-                        plan.counts(b, with_se),
-                        with_se,
-                    )
+                    let vals = if baseline {
+                        unit.compute_hybrid(&a_packed[s * kt + ki], b, &noise)
+                    } else {
+                        let ctx = DevCtx {
+                            col_gains: col_gains[ki].as_deref(),
+                            s_ou: dev_p.s_ou,
+                            adc_offset: dev_p.adc_offset,
+                            adc_gain: dev_p.adc_gain,
+                        };
+                        unit.compute_hybrid_dev(&a_packed[s * kt + ki], b, &noise, &ctx)
+                    };
+                    (vals, plan.counts(b, with_se), with_se)
                 }
             };
             for (acc, v) in vals[r * sp.hmus..(r + 1) * sp.hmus].iter_mut().zip(&tile_vals) {
@@ -798,6 +847,45 @@ mod tests {
         assert_eq!(r1.out, r2.out);
         let r3 = MacroGemm::with_mode(CimMode::Hcim).gemm(&a, m, k, &w, n, 4).unwrap();
         assert_ne!(r1.out, r3.out, "different layer index must shift the noise stream");
+    }
+
+    #[test]
+    fn device_models_stay_thread_deterministic() {
+        use crate::device::{build, DeviceParams};
+        let mut rng = SplitMix64::new(20);
+        let (m, k, n) = (8, 300, 10);
+        let a = rand_mat(&mut rng, m, k, 0, 256);
+        let w = rand_mat(&mut rng, n, k, -128, 128);
+        let base = MacroGemm::with_mode(CimMode::Osa)
+            .with_pool(ExecPool::new(1))
+            .gemm(&a, m, k, &w, n, 5)
+            .unwrap();
+        for model in ["capacitor-mismatch", "lognormal-conductance"] {
+            let dev = build(
+                model,
+                DeviceParams { sigma: 0.05, s_ou: 16, ..DeviceParams::default() },
+            )
+            .unwrap();
+            let run = |threads: usize| {
+                MacroGemm::with_mode(CimMode::Osa)
+                    .with_device(dev.clone())
+                    .with_pool(ExecPool::new(threads))
+                    .gemm(&a, m, k, &w, n, 5)
+                    .unwrap()
+            };
+            let (r1, r4) = (run(1), run(4));
+            assert_eq!(r1.out, r4.out, "{model} logits must not depend on thread count");
+            assert_eq!(r1.bda, r4.bda, "{model} boundaries");
+            assert_eq!(
+                r1.account.total_energy_j().to_bits(),
+                r4.account.total_energy_j().to_bits(),
+                "{model} energy f64s"
+            );
+            assert_ne!(r1.out, base.out, "{model} variation must move outputs");
+            // boundary selection is pre-analog: the OSE never sees the
+            // device, so degrade maps match the baseline exactly
+            assert_eq!(r1.bda, base.bda, "{model} OSE boundaries are device-independent");
+        }
     }
 
     #[test]

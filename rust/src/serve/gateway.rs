@@ -25,6 +25,10 @@
 //!   plus a per-layer per-memory-level dataflow trace for one inference
 //!   (access counts and priced femtojoules, DESIGN.md §15), and the
 //!   measured energy account so far.
+//! * `GET /v2/device` — the active analog device model (name, sigma,
+//!   operation-unit group size) and the swept accuracy floors the
+//!   governor enforces: per-tier degrade-level caps under the
+//!   configured device corner (DESIGN.md §16).
 //! * `GET /healthz` — liveness probe.
 //!
 //! Two serving modes share one routing/rendering core (so they emit
@@ -684,7 +688,7 @@ fn write_rendered_rid(stream: &mut TcpStream, r: &Rendered, rid: u64) -> bool {
 fn allowed_methods(path: &str) -> Option<&'static [&'static str]> {
     match path {
         "/healthz" | "/metrics" | "/v1/version" | "/debug/trace" => Some(&["GET"]),
-        "/v2/topology" | "/v2/energy" => Some(&["GET"]),
+        "/v2/topology" | "/v2/energy" | "/v2/device" => Some(&["GET"]),
         "/v1/infer" | "/v1/infer_batch" | "/v2/infer" => Some(&["POST"]),
         _ => None,
     }
@@ -706,6 +710,16 @@ fn version_json(engine: &Engine) -> JsonValue {
             ("pooling", JsonValue::Bool(c.pooling)),
             ("cost_model", s(c.cost_model)),
             ("memory_levels", num(c.memory_levels as f64)),
+            // additive (PR 10): which analog device model the backend
+            // routes conversion noise through (DESIGN.md §16)
+            (
+                "device",
+                obj(vec![
+                    ("model", s(c.device.model)),
+                    ("sigma", fnum(c.device.sigma)),
+                    ("s_ou", num(c.device.s_ou as f64)),
+                ]),
+            ),
         ]),
         None => JsonValue::Null,
     };
@@ -905,6 +919,73 @@ fn energy_json(server: &Server) -> JsonValue {
     ])
 }
 
+/// The `GET /v2/device` document (DESIGN.md §16): the analog device
+/// model the active backend routes conversion noise through, the
+/// `[device]` sweep-report feedback configuration, and — when a sweep
+/// report is loaded — the per-tier degrade-level caps the governor
+/// enforces at the swept corner sigma.  Without a report every cap is
+/// unbounded and `floors_loaded` is `false`, so dashboards can tell
+/// "no data" apart from "corner is clean".
+fn device_json(server: &Server) -> JsonValue {
+    let engine = server.engine();
+    let cfg = engine.config();
+    let gov = server.governor();
+    let floors = gov.floors;
+    let caps = match engine.backend().ok().map(|b| b.capabilities().device) {
+        Some(d) => obj(vec![
+            ("model", s(d.model)),
+            ("sigma", fnum(d.sigma)),
+            ("s_ou", num(d.s_ou as f64)),
+        ]),
+        None => JsonValue::Null,
+    };
+    let floors_loaded = floors.caps.iter().any(|&c| c != u32::MAX);
+    let tier_objs: Vec<(&str, JsonValue)> = Tier::ALL
+        .iter()
+        .map(|&tier| {
+            let contract = gov.tiers.iter().find(|c| c.tier == tier);
+            let cap = floors.cap(tier);
+            (
+                tier.name(),
+                obj(vec![
+                    // u32::MAX means "no floor": render as null, not a
+                    // 4-billion gauge that would wreck dashboard axes
+                    (
+                        "floor_cap",
+                        if cap == u32::MAX { JsonValue::Null } else { num(cap as f64) },
+                    ),
+                    (
+                        "level_cap",
+                        num(contract.map(|c| c.level_cap).unwrap_or(0) as f64),
+                    ),
+                    ("level", num(contract.map(|c| c.level).unwrap_or(0) as f64)),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("device", caps),
+        (
+            "sweep",
+            obj(vec![
+                ("report", s(&cfg.device_sweep_report)),
+                ("corner_sigma", fnum(cfg.device_corner_sigma)),
+                ("floors_loaded", JsonValue::Bool(floors_loaded)),
+                ("floor_corner_sigma", fnum(floors.corner_sigma)),
+            ]),
+        ),
+        (
+            "sla",
+            obj(vec![
+                ("gold", fnum(cfg.device_sla_gold)),
+                ("silver", fnum(cfg.device_sla_silver)),
+                ("batch", fnum(cfg.device_sla_batch)),
+            ]),
+        ),
+        ("tiers", obj(tier_objs)),
+    ])
+}
+
 /// Everything the router needs to answer a request (borrowed — both
 /// serving modes assemble one per request from their own state).
 pub(crate) struct RouteCtx<'a> {
@@ -952,6 +1033,20 @@ pub(crate) fn route(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteO
                 // additive: what a topology-aware rollout checks
                 ("fleet_macros", num(e.config().fleet_macros.max(1) as f64)),
                 ("placement", s(&e.config().fleet_placement)),
+                // additive (PR 10): the active analog device model —
+                // a variation-aware rollout refuses to shift traffic
+                // onto a corner it has no sweep data for
+                (
+                    "device",
+                    match e.backend().ok().map(|b| b.capabilities().device) {
+                        Some(d) => obj(vec![
+                            ("model", s(d.model)),
+                            ("sigma", fnum(d.sigma)),
+                            ("s_ou", num(d.s_ou as f64)),
+                        ]),
+                        None => JsonValue::Null,
+                    },
+                ),
             ])
             .to_string_compact();
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
@@ -966,6 +1061,10 @@ pub(crate) fn route(req: &HttpRequest, ctx: &RouteCtx<'_>, keep: bool) -> RouteO
         }
         ("GET", "/v2/energy") => {
             let body = energy_json(ctx.server).to_string_compact();
+            RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
+        }
+        ("GET", "/v2/device") => {
+            let body = device_json(ctx.server).to_string_compact();
             RouteOutcome::Respond(Rendered::json(200, "OK", body, keep))
         }
         ("GET", "/metrics") => {
@@ -1615,6 +1714,9 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
                 obj(vec![
                     ("profile", s(c.profile)),
                     ("level", fnum(c.level as f64)),
+                    // configured max_level, further capped by the
+                    // swept device floors (DESIGN.md §16)
+                    ("level_cap", fnum(c.level_cap as f64)),
                     ("thresholds", arr(c.thresholds.iter().map(|&t| fnum(t as f64)))),
                 ]),
             )
@@ -1689,6 +1791,17 @@ pub fn metrics_json(server: &Server, spec: &MacroSpec, conns: Option<&ConnStats>
             obj(vec![
                 ("enabled", JsonValue::Bool(gov.enabled)),
                 ("transitions", fnum(gov.transitions as f64)),
+                // device-corner floors feeding the level caps above
+                (
+                    "floors",
+                    obj(vec![
+                        (
+                            "loaded",
+                            JsonValue::Bool(gov.floors.caps.iter().any(|&c| c != u32::MAX)),
+                        ),
+                        ("corner_sigma", fnum(gov.floors.corner_sigma)),
+                    ]),
+                ),
                 ("tiers", obj(gov_tiers)),
             ]),
         ),
@@ -1896,6 +2009,12 @@ pub fn metrics_prometheus(
             "Current degrade level per tier (0 = base contract).",
             &[("tier", c.tier.name().to_string())],
             c.level as f64,
+        );
+        w.gauge(
+            "osa_governor_level_cap",
+            "Highest degrade level allowed per tier (max_level capped by device floors).",
+            &[("tier", c.tier.name().to_string())],
+            c.level_cap as f64,
         );
         for (i, &t) in c.thresholds.iter().enumerate() {
             w.gauge(

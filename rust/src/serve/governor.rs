@@ -23,6 +23,7 @@
 
 use super::qos::Tier;
 use crate::config::SystemConfig;
+use crate::device::sweep::DeviceFloors;
 use crate::osa;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -66,6 +67,10 @@ pub struct TierContract {
     pub tier: Tier,
     pub profile: &'static str,
     pub level: u32,
+    /// Highest degrade level this tier may reach: the configured
+    /// `max_level`, further capped by the device sweep's accuracy
+    /// floors when a report is wired in (DESIGN.md §16).
+    pub level_cap: u32,
     /// Effective OSE thresholds at the current degrade level.
     pub thresholds: Vec<i32>,
 }
@@ -77,6 +82,9 @@ pub struct GovernorSnapshot {
     pub tiers: Vec<TierContract>,
     /// Total level changes since start (escalations + recoveries).
     pub transitions: u64,
+    /// Device-corner accuracy floors in force (unbounded when no sweep
+    /// report is configured).
+    pub floors: DeviceFloors,
 }
 
 /// The per-tier dynamic precision controller.  Cheap to share: workers
@@ -87,6 +95,9 @@ pub struct Governor {
     base: [Vec<i32>; 3],
     /// Per-tier degrade level, 0 = base contract.
     levels: [AtomicU32; 3],
+    /// Device-corner accuracy floors: per-tier caps on the degrade
+    /// ladder, from a `SWEEP_*.json` report (unbounded by default).
+    floors: DeviceFloors,
     transitions: AtomicU64,
     last_change: Mutex<Instant>,
 }
@@ -105,13 +116,54 @@ impl Governor {
             cfg,
             base,
             levels: [AtomicU32::new(0), AtomicU32::new(0), AtomicU32::new(0)],
+            floors: DeviceFloors::unbounded(),
             transitions: AtomicU64::new(0),
             last_change: Mutex::new(Instant::now()),
         }
     }
 
+    /// Cap the degrade ladder with device-corner accuracy floors from a
+    /// sweep report: a tier never escalates past its swept floor.
+    pub fn with_floors(mut self, floors: DeviceFloors) -> Self {
+        self.floors = floors;
+        self
+    }
+
     pub fn from_system(cfg: &SystemConfig) -> Self {
-        Self::new(&cfg.thresholds, GovernorConfig::from_system(cfg))
+        let g = Self::new(&cfg.thresholds, GovernorConfig::from_system(cfg));
+        if cfg.device_sweep_report.is_empty() {
+            return g;
+        }
+        let path = std::path::Path::new(&cfg.device_sweep_report);
+        match DeviceFloors::load(path, DeviceFloors::slas(cfg)) {
+            Ok(floors) => {
+                log::info!(
+                    "governor device floors from {}: caps={:?} corner_sigma={}",
+                    cfg.device_sweep_report,
+                    floors.caps,
+                    floors.corner_sigma
+                );
+                g.with_floors(floors)
+            }
+            Err(e) => {
+                log::warn!(
+                    "ignoring device sweep report {}: {e:#}",
+                    cfg.device_sweep_report
+                );
+                g
+            }
+        }
+    }
+
+    /// Highest level a tier may be degraded to: the configured
+    /// `max_level`, further capped by the device floors.
+    pub fn level_cap(&self, tier: Tier) -> u32 {
+        self.cfg.max_level.min(self.floors.cap(tier))
+    }
+
+    /// The device floors in force.
+    pub fn floors(&self) -> DeviceFloors {
+        self.floors
     }
 
     /// Current degrade level of a tier.
@@ -148,10 +200,11 @@ impl Governor {
             return;
         }
         if p >= self.cfg.high_watermark {
-            // degrade the lowest tier that still has headroom; gold never
+            // degrade the lowest tier that still has headroom; gold
+            // never, and no tier past its device-floor cap
             for tier in [Tier::Batch, Tier::Silver] {
                 let l = self.levels[tier.index()].load(Ordering::Relaxed);
-                if l < self.cfg.max_level {
+                if l < self.level_cap(tier) {
                     self.levels[tier.index()].store(l + 1, Ordering::Relaxed);
                     self.transitions.fetch_add(1, Ordering::Relaxed);
                     *last = now;
@@ -191,10 +244,12 @@ impl Governor {
                     tier: t,
                     profile: t.profile(),
                     level: self.level(t),
+                    level_cap: self.level_cap(t),
                     thresholds: self.thresholds_for(t),
                 })
                 .collect(),
             transitions: self.transitions.load(Ordering::Relaxed),
+            floors: self.floors,
         }
     }
 }
@@ -301,6 +356,32 @@ mod tests {
         let g = Governor::new(&CAL, cfg);
         g.observe(0.0, 1.0); // over budget, empty queues
         assert_eq!(g.level(Tier::Batch), 1);
+    }
+
+    #[test]
+    fn device_floors_cap_the_degrade_ladder() {
+        // sweep said: batch accuracy collapses past level 1, silver
+        // past level 2 — the governor must refuse those levels even
+        // under sustained full pressure
+        let floors = DeviceFloors { corner_sigma: 0.45, caps: [0, 2, 1] };
+        let g = Governor::new(&CAL, gcfg()).with_floors(floors);
+        for _ in 0..20 {
+            g.observe(1.0, 0.0);
+        }
+        assert_eq!(g.level(Tier::Batch), 1, "batch stops at its swept floor");
+        assert_eq!(g.level(Tier::Silver), 2, "silver stops at its swept floor");
+        assert_eq!(g.level(Tier::Gold), 0);
+        let snap = g.snapshot();
+        assert_eq!(snap.tiers[Tier::Batch.index()].level_cap, 1);
+        assert_eq!(snap.tiers[Tier::Silver.index()].level_cap, 2);
+        assert_eq!(snap.floors, floors);
+        // without floors the same pressure reaches max_level
+        let g = Governor::new(&CAL, gcfg());
+        for _ in 0..20 {
+            g.observe(1.0, 0.0);
+        }
+        assert_eq!(g.level(Tier::Batch), 3);
+        assert_eq!(g.snapshot().tiers[Tier::Batch.index()].level_cap, 3);
     }
 
     #[test]

@@ -9,13 +9,10 @@
 //!   registered backend at builder, registry and coordinator level.
 
 // The smoke import IS the test: if any of these stops being exported,
-// this file no longer compiles.  BackendCaps is the deprecated pre-fleet
-// shim — it must stay importable for one release.
-#[allow(deprecated)]
-use osa_hcim::engine::BackendCaps;
+// this file no longer compiles.
 use osa_hcim::engine::{
-    Backend, BackendKnobs, BackendRegistry, Capabilities, Engine, EngineBuilder, InferOptions,
-    InferRequest, InferResponse,
+    Backend, BackendKnobs, BackendRegistry, Capabilities, DeviceCaps, Engine, EngineBuilder,
+    InferOptions, InferRequest, InferResponse,
 };
 
 use osa_hcim::config::{CimMode, SystemConfig};
@@ -49,8 +46,7 @@ fn public_api_surface_stays_exported() {
     // caps/knobs types are public
     fn _takes_dyn(_b: &mut dyn Backend) {}
     let _caps: Option<Capabilities> = None;
-    #[allow(deprecated)]
-    let _shim: Option<BackendCaps> = None;
+    let _dev: Option<DeviceCaps> = None;
     let _knobs = BackendKnobs::default();
     let _resp: Option<InferResponse> = None;
 }

@@ -1,7 +1,9 @@
 //! End-to-end tests of the versioned HTTP surface over a real socket:
 //! `POST /v2/infer` (typed options, machine-readable error envelope),
-//! `GET /v1/version`, the enriched `/healthz`, and the 405 + `Allow`
-//! contract on known paths.  Everything runs on `QGraph::synthetic()`.
+//! `GET /v1/version`, the enriched `/healthz`, `GET /v2/device` (the
+//! analog device model and swept governor floors), and the 405 +
+//! `Allow` contract on known paths.  Everything runs on
+//! `QGraph::synthetic()`.
 
 #![allow(clippy::field_reassign_with_default)] // repo config idiom
 
@@ -225,6 +227,11 @@ fn version_and_healthz_report_the_running_engine() {
     let caps = doc.get("capabilities").expect("capabilities object");
     assert_eq!(caps.get("mode").and_then(JsonValue::as_str), Some("dcim"));
     assert_eq!(caps.get("macros").and_then(JsonValue::as_i64), Some(1));
+    // additive device-era key: the analog device model in force
+    let dev = caps.get("device").expect("device block in capabilities");
+    assert_eq!(dev.get("model").and_then(JsonValue::as_str), Some("gaussian-thermal"));
+    assert_eq!(dev.get("sigma").and_then(JsonValue::as_f64), Some(osa_hcim::spec::SIGMA_CODE));
+    assert_eq!(dev.get("s_ou").and_then(JsonValue::as_i64), Some(0));
     let fleet = doc.get("fleet").expect("fleet object");
     assert_eq!(fleet.get("macros").and_then(JsonValue::as_i64), Some(1));
     assert_eq!(fleet.get("placement").and_then(JsonValue::as_str), Some("auto"));
@@ -247,8 +254,106 @@ fn version_and_healthz_report_the_running_engine() {
         doc.get("version").and_then(JsonValue::as_str),
         Some(env!("CARGO_PKG_VERSION"))
     );
+    // additive device-era key on the liveness probe too
+    let dev = doc.get("device").expect("device block in healthz");
+    assert_eq!(dev.get("model").and_then(JsonValue::as_str), Some("gaussian-thermal"));
+    assert_eq!(dev.get("s_ou").and_then(JsonValue::as_i64), Some(0));
 
     gw.shutdown();
+}
+
+#[test]
+fn v2_device_reports_model_and_unbounded_floors() {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.device_model = "capacitor-mismatch".to_string();
+    cfg.device_sigma = Some(0.12);
+    let (gw, addr) = start_gateway(&cfg);
+
+    let (status, body) = http::request(&addr, "GET", "/v2/device", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    let dev = doc.get("device").expect("device object");
+    assert_eq!(dev.get("model").and_then(JsonValue::as_str), Some("capacitor-mismatch"));
+    assert_eq!(dev.get("sigma").and_then(JsonValue::as_f64), Some(0.12));
+    let sweep = doc.get("sweep").expect("sweep object");
+    assert_eq!(sweep.get("floors_loaded").and_then(JsonValue::as_bool), Some(false));
+    assert_eq!(sweep.get("report").and_then(JsonValue::as_str), Some(""));
+    // no sweep report: every tier's floor cap renders as null and the
+    // effective level cap is the configured governor max_level
+    let tiers = doc.get("tiers").expect("tiers object");
+    for tier in ["gold", "silver", "batch"] {
+        let t = tiers.get(tier).expect("tier entry");
+        assert!(matches!(t.get("floor_cap"), Some(JsonValue::Null)), "{body}");
+        assert_eq!(
+            t.get("level_cap").and_then(JsonValue::as_i64),
+            Some(cfg.gov_max_level as i64),
+            "{body}"
+        );
+    }
+    // the governor's metrics view agrees: floors present, not loaded
+    let (_, body) = http::request(&addr, "GET", "/metrics", None).unwrap();
+    let doc = parse(&body).unwrap();
+    let gov = doc.get("governor").expect("governor object");
+    let floors = gov.get("floors").expect("floors object");
+    assert_eq!(floors.get("loaded").and_then(JsonValue::as_bool), Some(false));
+    // wrong method: 405 naming GET
+    let mut client = http::Client::connect(&addr).unwrap();
+    let (status, headers, _) =
+        client.request_with_headers("POST", "/v2/device", Some("{}")).unwrap();
+    assert_eq!(status, 405);
+    assert_eq!(headers.get("allow").map(String::as_str), Some("GET"));
+
+    gw.shutdown();
+}
+
+#[test]
+fn swept_floors_load_into_the_serving_governor() {
+    use osa_hcim::device::sweep::{LadderPoint, SweepGrid, SweepReport};
+
+    // a sweep report whose corner says: batch collapses past level 1
+    let report = SweepReport {
+        model: "gaussian-thermal".to_string(),
+        s_ou: 0,
+        grid: SweepGrid {
+            boundaries: vec![10],
+            sigmas: vec![0.45],
+            mc_seeds: 1,
+            images: 2,
+            corner_sigma: 0.45,
+        },
+        surface: Vec::new(),
+        ladder: vec![
+            LadderPoint { tier: "batch", level: 0, accuracy: 0.99 },
+            LadderPoint { tier: "batch", level: 1, accuracy: 0.95 },
+            LadderPoint { tier: "batch", level: 2, accuracy: 0.40 },
+        ],
+    };
+    let path = std::env::temp_dir().join("osa_hcim_serve_v2_sweep_floors.json");
+    std::fs::write(&path, report.to_json().to_string_compact()).unwrap();
+
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 1;
+    cfg.device_sweep_report = path.to_string_lossy().into_owned();
+    cfg.device_sla_batch = 0.9;
+    let (gw, addr) = start_gateway(&cfg);
+
+    let (status, body) = http::request(&addr, "GET", "/v2/device", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = parse(&body).unwrap();
+    let sweep = doc.get("sweep").expect("sweep object");
+    assert_eq!(sweep.get("floors_loaded").and_then(JsonValue::as_bool), Some(true), "{body}");
+    assert_eq!(sweep.get("floor_corner_sigma").and_then(JsonValue::as_f64), Some(0.45));
+    let tiers = doc.get("tiers").expect("tiers object");
+    let batch = tiers.get("batch").expect("batch tier");
+    assert_eq!(batch.get("floor_cap").and_then(JsonValue::as_i64), Some(1), "{body}");
+    assert_eq!(batch.get("level_cap").and_then(JsonValue::as_i64), Some(1), "{body}");
+    // tiers without an SLA stay unbounded by the report
+    let gold = tiers.get("gold").expect("gold tier");
+    assert!(matches!(gold.get("floor_cap"), Some(JsonValue::Null)), "{body}");
+
+    gw.shutdown();
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
